@@ -1,0 +1,159 @@
+//! Bench: L3 hot path — the coordinator overhead per k-visit and the
+//! PJRT execute cost per model evaluation (the §Perf deliverable).
+//!
+//! Targets (EXPERIMENTS.md §Perf): scheduler overhead per visit < 1% of
+//! the cheapest real evaluator call; state ops in the tens of ns; rank
+//! broadcast in the µs range; HLO execute dominated by XLA compute.
+
+use std::time::Duration;
+
+use binary_bleed::bench::Bench;
+use binary_bleed::coordinator::{
+    binary_bleed_parallel, binary_bleed_serial, Broadcast, Mode, ParallelConfig,
+    RankComm, SearchPolicy, SharedState, Thresholds,
+};
+use binary_bleed::data::ScoreProfile;
+use binary_bleed::linalg::Matrix;
+use binary_bleed::model::SharedStore;
+use binary_bleed::runtime::{literal_f32, literal_from_matrix, rank_mask};
+use binary_bleed::util::Pcg32;
+
+fn pol() -> SearchPolicy {
+    SearchPolicy::maximize(
+        Mode::Vanilla,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    )
+}
+
+fn main() {
+    let bench = Bench::default();
+
+    println!("== L3 state ops ==");
+    {
+        let policy = pol();
+        bench.run("state/admit+publish", || {
+            let st = SharedState::new();
+            st.admit(10, &policy);
+            st.publish(10, 0.9, &policy)
+        });
+        let st = SharedState::new();
+        st.admit(20, &policy);
+        st.publish(20, 0.9, &policy);
+        bench.run("state/admit-pruned", || st.admit(5, &policy));
+    }
+
+    println!("\n== rank network ==");
+    {
+        let net = RankComm::network(4);
+        bench.run("rank/broadcast+drain(4 ranks)", || {
+            net[0].broadcast(Broadcast {
+                from: 0,
+                floor: Some(7),
+                ceil: None,
+                best: None,
+            });
+            (net[1].drain().len(), net[2].drain().len(), net[3].drain().len())
+        });
+    }
+
+    println!("\n== whole-search overhead (zero-cost scorer) ==");
+    {
+        let ks: Vec<u32> = (2..=30).collect();
+        let profile = ScoreProfile::SquareWave {
+            k_true: 15,
+            high: 0.9,
+            low: 0.1,
+        };
+        let s = bench.run("serial-search/29-k", || {
+            binary_bleed_serial(&ks, &profile, pol()).k_optimal
+        });
+        println!(
+            "    -> {:.0} visits/s scheduler throughput",
+            s.per_second(18.0) // 18 visits for k_true=15 (measured)
+        );
+        let cfg = ParallelConfig {
+            ranks: 4,
+            threads_per_rank: 2,
+            ..Default::default()
+        };
+        bench.run("parallel-search/29-k/4x2-threads", || {
+            binary_bleed_parallel(&ks, &profile, pol(), cfg).k_optimal
+        });
+        // Inline fast path (threads_per_rank == 1 spawns no nested scope).
+        let cfg41 = ParallelConfig {
+            ranks: 4,
+            threads_per_rank: 1,
+            ..Default::default()
+        };
+        bench.run("parallel-search/29-k/4x1-threads", || {
+            binary_bleed_parallel(&ks, &profile, pol(), cfg41).k_optimal
+        });
+        // Marginal per-visit cost: amortize thread spawn over a big K.
+        let big_ks: Vec<u32> = (2..=4097).collect();
+        let big_profile = ScoreProfile::SquareWave {
+            k_true: 4000,
+            high: 0.9,
+            low: 0.1,
+        };
+        let s = bench.run("parallel-search/4096-k/4x1-threads", || {
+            binary_bleed_parallel(&big_ks, &big_profile, pol(), cfg41).k_optimal
+        });
+        println!(
+            "    -> marginal per-decision cost ~{:.0}ns",
+            s.median.as_nanos() as f64 / 4096.0
+        );
+    }
+
+    println!("\n== PJRT execute (requires artifacts) ==");
+    match SharedStore::open_default() {
+        Err(e) => println!("  skipped: {e:#}"),
+        Ok(store) => {
+            let exec_bench = Bench {
+                target: Duration::from_secs(3),
+                ..Bench::default()
+            };
+            store.warm(&["nmf_run", "kmeans_run", "silhouette"]).unwrap();
+            let m = store.param("nmf_m").unwrap();
+            let n = store.param("nmf_n").unwrap();
+            let kmax = store.param("nmf_kmax").unwrap();
+            let mut rng = Pcg32::new(5);
+            let x = literal_from_matrix(&Matrix::rand_uniform(m, n, &mut rng)).unwrap();
+            let w = literal_from_matrix(&Matrix::rand_uniform(m, kmax, &mut rng)).unwrap();
+            let h = literal_from_matrix(&Matrix::rand_uniform(kmax, n, &mut rng)).unwrap();
+            let mask = literal_f32(&[kmax], &rank_mask(8, kmax)).unwrap();
+            let s = exec_bench.run("pjrt/nmf_run(25 iters fused)", || {
+                store
+                    .execute("nmf_run", &[x.clone(), w.clone(), h.clone(), mask.clone()])
+                    .unwrap()
+                    .len()
+            });
+            println!(
+                "    -> {:.1} NMF iterations/s through PJRT",
+                s.per_second(25.0)
+            );
+
+            let kn = store.param("km_n").unwrap();
+            let kd = store.param("km_d").unwrap();
+            let kk = store.param("km_kmax").unwrap();
+            let xk = literal_from_matrix(&Matrix::rand_uniform(kn, kd, &mut rng)).unwrap();
+            let c = literal_from_matrix(&Matrix::rand_uniform(kk, kd, &mut rng)).unwrap();
+            let maskk = literal_f32(&[kk], &rank_mask(8, kk)).unwrap();
+            exec_bench.run("pjrt/kmeans_run(15 iters fused)", || {
+                store
+                    .execute("kmeans_run", &[xk.clone(), c.clone(), maskk.clone()])
+                    .unwrap()
+                    .len()
+            });
+            let labels = literal_f32(&[kn], &vec![0.0f32; kn]).unwrap();
+            exec_bench.run("pjrt/silhouette(n^2 distances)", || {
+                store
+                    .execute("silhouette", &[xk.clone(), labels.clone(), maskk.clone()])
+                    .unwrap()
+                    .len()
+            });
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Bench: Fig 8 — single-node NMFk / K-means selection end-to-end.
+//!
+//! Times one full Binary Bleed selection per (method, order) on the
+//! native evaluators (HLO timings live in coordinator_hotpath) and prints
+//! the visit-% series the figure plots.
+
+use binary_bleed::bench::Bench;
+use binary_bleed::coordinator::{
+    binary_bleed_lockstep, binary_bleed_serial, Mode, ParallelConfig,
+    SearchPolicy, Thresholds, Traversal,
+};
+use binary_bleed::data::{gaussian_blobs, planted_nmf};
+use binary_bleed::model::{KMeansEvaluator, KMeansScoring, NmfkEvaluator};
+use binary_bleed::util::Pcg32;
+
+fn main() {
+    let bench = Bench {
+        target: std::time::Duration::from_secs(3),
+        ..Bench::default()
+    };
+    let ks: Vec<u32> = (2..=20).collect();
+
+    println!("== fig8: NMFk (native evaluator, 80x88 planted rank 7) ==");
+    let mut rng = Pcg32::new(1);
+    let nmf_ds = planted_nmf(&mut rng, 80, 88, 7, 0.01);
+    let nmf_policy = SearchPolicy::maximize(
+        Mode::Vanilla,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    );
+    for (label, mode) in [
+        ("standard", Mode::Standard),
+        ("vanilla", Mode::Vanilla),
+        ("early-stop", Mode::EarlyStop),
+    ] {
+        let ev = NmfkEvaluator::native(nmf_ds.x.clone(), 24, 1)
+            .with_perturbations(2)
+            .with_bursts(2);
+        let policy = SearchPolicy { mode, ..nmf_policy };
+        let stats = bench.run(&format!("nmfk-select/{label}"), || {
+            binary_bleed_serial(&ks, &ev, policy).k_optimal
+        });
+        let r = binary_bleed_serial(&ks, &ev, policy);
+        println!(
+            "    -> k*={:?}, visited {:.0}%  ({:.2} selections/s)",
+            r.k_optimal,
+            r.percent_visited(),
+            stats.per_second(1.0)
+        );
+    }
+
+    println!("\n== fig8: K-means + Davies-Bouldin (native, 120 pts, k_true 6) ==");
+    let km_ds = gaussian_blobs(&mut rng, 20, 6, 8, 9.0, 0.5);
+    let km_policy = SearchPolicy::minimize(
+        Mode::Vanilla,
+        Thresholds {
+            select: 0.45,
+            stop: 0.9,
+        },
+    );
+    for (label, mode) in [
+        ("standard", Mode::Standard),
+        ("vanilla", Mode::Vanilla),
+        ("early-stop", Mode::EarlyStop),
+    ] {
+        let ev = KMeansEvaluator::native(
+            km_ds.x.clone(),
+            24,
+            KMeansScoring::DaviesBouldin,
+            1,
+        )
+        .with_restarts(2);
+        let policy = SearchPolicy { mode, ..km_policy };
+        let stats = bench.run(&format!("kmeans-select/{label}"), || {
+            binary_bleed_serial(&ks, &ev, policy).k_optimal
+        });
+        let r = binary_bleed_serial(&ks, &ev, policy);
+        println!(
+            "    -> k*={:?}, visited {:.0}%  ({:.2} selections/s)",
+            r.k_optimal,
+            r.percent_visited(),
+            stats.per_second(1.0)
+        );
+    }
+
+    println!("\n== fig8: traversal-order visit series (lockstep, square wave) ==");
+    println!("{:<14} {:>12} {:>12}", "k_true", "pre-order", "post-order");
+    let ks: Vec<u32> = (2..=30).collect();
+    for k_true in (2..=30u32).step_by(4) {
+        let mut row = Vec::new();
+        for tr in [Traversal::PreOrder, Traversal::PostOrder] {
+            let profile = binary_bleed::data::ScoreProfile::SquareWave {
+                k_true,
+                high: 0.9,
+                low: 0.1,
+            };
+            let cfg = ParallelConfig {
+                ranks: 2,
+                threads_per_rank: 1,
+                traversal: tr,
+                ..Default::default()
+            };
+            let r = binary_bleed_lockstep(
+                &ks,
+                &profile,
+                SearchPolicy::maximize(
+                    Mode::Vanilla,
+                    Thresholds {
+                        select: 0.75,
+                        stop: 0.2,
+                    },
+                ),
+                cfg,
+            );
+            row.push(r.log.evaluated_count());
+        }
+        println!("{:<14} {:>12} {:>12}", k_true, row[0], row[1]);
+    }
+}

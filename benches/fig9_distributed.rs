@@ -1,0 +1,80 @@
+//! Bench: Fig 9 — distributed cost-model simulations, plus the §III-A
+//! complexity scaling series (visits vs |K|, Table I / E6).
+
+use binary_bleed::bench::Bench;
+use binary_bleed::coordinator::{binary_bleed_serial, Mode, SearchPolicy, Thresholds};
+use binary_bleed::data::ScoreProfile;
+use binary_bleed::simulate::{simulate_distributed, CostModel};
+
+fn pol(mode: Mode) -> SearchPolicy {
+    SearchPolicy::maximize(
+        mode,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    )
+}
+
+fn main() {
+    let bench = Bench::default();
+
+    println!("== fig9: simulated distributed runs (paper cost calibration) ==");
+    for (name, ks, cost, std_min) in [
+        ("dNMF", (2u32..=8).collect::<Vec<_>>(), CostModel::paper_dnmf(), 120.0),
+        (
+            "dRESCAL",
+            (2u32..=11).collect::<Vec<_>>(),
+            CostModel::paper_drescal(),
+            180.0,
+        ),
+    ] {
+        let profile = ScoreProfile::SquareWave {
+            k_true: *ks.last().unwrap(),
+            high: 0.9,
+            low: 0.1,
+        };
+        let out = simulate_distributed(&ks, &profile, pol(Mode::Vanilla), &cost);
+        println!(
+            "{name}: bleed {:.1}% visited, {:.2} min vs standard {std_min:.0} min \
+             (speedup {:.2}x)",
+            out.percent_visited(),
+            out.runtime_minutes,
+            std_min / out.runtime_minutes
+        );
+        bench.run(&format!("fig9-sim/{name}"), || {
+            simulate_distributed(&ks, &profile, pol(Mode::Vanilla), &cost).evaluated
+        });
+    }
+
+    println!("\n== complexity scaling: visits vs |K| (Theta(n^log2(p+1))) ==");
+    println!("{:>8} {:>10} {:>10} {:>12}", "|K|", "vanilla", "early-stop", "linear");
+    for n in [16u32, 32, 64, 128, 256, 512, 1024] {
+        let ks: Vec<u32> = (2..=n + 1).collect();
+        let k_true = n / 2;
+        let profile = ScoreProfile::SquareWave {
+            k_true,
+            high: 0.9,
+            low: 0.1,
+        };
+        let rv = binary_bleed_serial(&ks, &profile, pol(Mode::Vanilla));
+        let re = binary_bleed_serial(&ks, &profile, pol(Mode::EarlyStop));
+        println!(
+            "{:>8} {:>10} {:>10} {:>12}",
+            n,
+            rv.log.evaluated_count(),
+            re.log.evaluated_count(),
+            ks.len()
+        );
+    }
+    // Search-engine throughput at scale.
+    let ks: Vec<u32> = (2..=4097).collect();
+    let profile = ScoreProfile::SquareWave {
+        k_true: 2048,
+        high: 0.9,
+        low: 0.1,
+    };
+    bench.run("serial-bleed/4096-k-space", || {
+        binary_bleed_serial(&ks, &profile, pol(Mode::EarlyStop)).k_optimal
+    });
+}

@@ -1,0 +1,71 @@
+//! Bench: Table II — chunk/sort pipeline throughput plus the *search
+//! cost* ablation over T1–T4 (which composition prunes best, the paper's
+//! argument for Alg 2 + pre-order).
+//!
+//! Run with `cargo bench --bench table2_orderings` (in-tree harness).
+
+use binary_bleed::bench::Bench;
+use binary_bleed::coordinator::{
+    binary_bleed_lockstep, CountingScorer, Mode, ParallelConfig, Pipeline,
+    SearchPolicy, Thresholds, Traversal,
+};
+use binary_bleed::data::ScoreProfile;
+
+fn main() {
+    let bench = Bench::default();
+    println!("== table2: pipeline mechanics ==");
+    let ks: Vec<u32> = (2..=1024).collect();
+    for t in [Traversal::PreOrder, Traversal::PostOrder, Traversal::InOrder] {
+        bench.run(&format!("traversal-sort/{}/1023", t.label()), || {
+            t.sort(&ks)
+        });
+    }
+    for p in Pipeline::ALL {
+        bench.run(&format!("pipeline-split/{}/1023x8", p.label()), || {
+            p.split(&ks, 8, Traversal::PreOrder)
+        });
+    }
+
+    println!("\n== table2: search-cost ablation (visits on square wave) ==");
+    let ks: Vec<u32> = (2..=30).collect();
+    let policy = SearchPolicy::maximize(
+        Mode::Vanilla,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    );
+    println!(
+        "{:<40} {:>10} {:>12}",
+        "pipeline(order)", "visits", "pct-visited"
+    );
+    for p in Pipeline::ALL {
+        for t in [Traversal::PreOrder, Traversal::PostOrder] {
+            // Mean over all k_true positions — the Fig 8 aggregate.
+            let mut total_visits = 0usize;
+            for k_true in 2..=30u32 {
+                let profile = ScoreProfile::SquareWave {
+                    k_true,
+                    high: 0.9,
+                    low: 0.1,
+                };
+                let counting = CountingScorer::new(profile);
+                let cfg = ParallelConfig {
+                    ranks: 2,
+                    threads_per_rank: 1,
+                    traversal: t,
+                    pipeline: p,
+                };
+                binary_bleed_lockstep(&ks, &counting, policy, cfg);
+                total_visits += counting.evaluations() as usize;
+            }
+            let mean = total_visits as f64 / 29.0;
+            println!(
+                "{:<40} {:>10.1} {:>11.1}%",
+                format!("{}({})", p.label(), t.label()),
+                mean,
+                100.0 * mean / 29.0
+            );
+        }
+    }
+}

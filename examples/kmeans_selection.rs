@@ -1,0 +1,65 @@
+//! K-means cluster-count selection with Davies-Bouldin scoring
+//! (minimization task, §IV-A) over the HLO `kmeans_run` +
+//! `davies_bouldin` artifacts, searched by parallel Binary Bleed.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example kmeans_selection
+//! ```
+
+use std::sync::Arc;
+
+use binary_bleed::coordinator::{
+    binary_bleed_parallel, Mode, ParallelConfig, SearchPolicy, Thresholds,
+};
+use binary_bleed::data::gaussian_blobs;
+use binary_bleed::model::{KMeansEvaluator, KMeansScoring, SharedStore};
+use binary_bleed::util::{Pcg32, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let store = Arc::new(SharedStore::open_default()?);
+    let (n, d) = (store.param("km_n")?, store.param("km_d")?);
+
+    // §IV-A: Gaussian clusters with sigma 0.5.
+    let k_true = 8usize; // divides km_n in both presets
+    let mut rng = Pcg32::new(7);
+    let ds = gaussian_blobs(&mut rng, n / k_true, k_true, d, 9.0, 0.5);
+    println!("dataset: {n} points, {d} dims, planted k = {k_true}");
+
+    store.warm(&["kmeans_run", "davies_bouldin"])?;
+    let evaluator =
+        KMeansEvaluator::hlo(ds.x, KMeansScoring::DaviesBouldin, store, 7)?
+            .with_restarts(2);
+
+    // Davies-Bouldin is minimized: select below 0.45, stop above 0.9.
+    let policy = SearchPolicy::minimize(
+        Mode::Vanilla,
+        Thresholds {
+            select: 0.45,
+            stop: 0.9,
+        },
+    );
+
+    let ks: Vec<u32> = (2..=30).collect();
+    // 2 ranks x 1 thread: few enough workers that pruning broadcasts
+    // land while later k are still queued.
+    let cfg = ParallelConfig {
+        ranks: 2,
+        threads_per_rank: 1,
+        ..Default::default()
+    };
+    let sw = Stopwatch::new();
+    let result = binary_bleed_parallel(&ks, &evaluator, policy, cfg);
+    println!(
+        "\n2 ranks x 1 thread, Vanilla, K={{2..30}} in {:.1}s",
+        sw.elapsed_secs()
+    );
+    println!("  k* = {:?} (DB {:?})", result.k_optimal, result.score);
+    println!(
+        "  visited {}/{} ({:.0}%), pruned {:?}",
+        result.log.evaluated_count(),
+        ks.len(),
+        result.percent_visited(),
+        result.log.pruned()
+    );
+    Ok(())
+}

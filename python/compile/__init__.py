@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at runtime; ``aot.py`` emits HLO text
+artifacts once and the Rust coordinator is self-contained afterwards.
+"""

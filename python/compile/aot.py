@@ -1,0 +1,147 @@
+"""AOT lowering: L2 entry points -> artifacts/*.hlo.txt + manifest.json.
+
+HLO *text* (NOT ``lowered.compile().serialize()`` / serialized protos) is
+the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's pinned xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The text parser on the Rust side reassigns
+ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--preset quick|paper]
+
+Python runs ONCE here; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+# --------------------------------------------------------------------------
+# Shape presets (DESIGN.md §6: paper workloads scaled to CPU-PJRT budgets).
+# --------------------------------------------------------------------------
+
+PRESETS = {
+    # CI / laptop preset: minutes, not hours.
+    "quick": dict(
+        nmf_m=256, nmf_n=288, nmf_kmax=32,
+        km_n=512, km_d=16, km_kmax=32,
+        rescal_s=4, rescal_n=64, rescal_kmax=16,
+    ),
+    # Paper-scale preset: NMFk matrices 1000x1100 as in §IV-A.
+    "paper": dict(
+        nmf_m=1000, nmf_n=1100, nmf_kmax=32,
+        km_n=2000, km_d=16, km_kmax=32,
+        rescal_s=8, rescal_n=128, rescal_kmax=16,
+    ),
+}
+
+
+def spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(fn, *specs) -> str:
+    """Lower a jax function to XLA HLO text via stablehlo."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_points(p: dict):
+    """(name, fn, input specs, output names, static consts) per artifact."""
+    m, n, kx = p["nmf_m"], p["nmf_n"], p["nmf_kmax"]
+    kn, kd, kk = p["km_n"], p["km_d"], p["km_kmax"]
+    rs, rn, rk = p["rescal_s"], p["rescal_n"], p["rescal_kmax"]
+    return [
+        ("nmf_step", model.nmf_step,
+         [("x", spec(m, n)), ("w", spec(m, kx)), ("h", spec(kx, n)),
+          ("mask", spec(kx))],
+         ["w", "h"], {}),
+        ("nmf_run", model.nmf_run,
+         [("x", spec(m, n)), ("w", spec(m, kx)), ("h", spec(kx, n)),
+          ("mask", spec(kx))],
+         ["w", "h", "relerr"], {"iters": model.NMF_ITERS}),
+        ("kmeans_step", model.kmeans_step,
+         [("x", spec(kn, kd)), ("c", spec(kk, kd)), ("mask", spec(kk))],
+         ["c", "labels", "inertia"], {}),
+        ("kmeans_run", model.kmeans_run,
+         [("x", spec(kn, kd)), ("c", spec(kk, kd)), ("mask", spec(kk))],
+         ["c", "labels", "inertia"], {"iters": model.KMEANS_ITERS}),
+        ("silhouette", model.silhouette,
+         [("x", spec(kn, kd)), ("labels", spec(kn)), ("mask", spec(kk))],
+         ["score"], {}),
+        ("davies_bouldin", model.davies_bouldin,
+         [("x", spec(kn, kd)), ("c", spec(kk, kd)), ("labels", spec(kn)),
+          ("mask", spec(kk))],
+         ["score"], {}),
+        ("rescal_step", model.rescal_step,
+         [("t", spec(rs, rn, rn)), ("a", spec(rn, rk)),
+          ("r", spec(rs, rk, rk)), ("mask", spec(rk))],
+         ["a", "r", "relerr"], {"iters": model.RESCAL_ITERS}),
+    ]
+
+
+def write_if_changed(path: str, text: str) -> bool:
+    """Avoid touching mtimes (and Rust-side executable caches) needlessly."""
+    if os.path.exists(path):
+        with open(path) as f:
+            if f.read() == text:
+                return False
+    with open(path, "w") as f:
+        f.write(text)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="quick", choices=sorted(PRESETS))
+    ap.add_argument("--only", default=None,
+                    help="comma-separated entry names to (re)build")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {"preset": args.preset, "params": p, "entries": {}}
+    for name, fn, in_specs, out_names, consts in entry_points(p):
+        if only and name not in only:
+            continue
+        text = to_hlo_text(fn, *[s for _, s in in_specs])
+        fname = f"{name}.hlo.txt"
+        changed = write_if_changed(os.path.join(args.out_dir, fname), text)
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": nm, "shape": list(s.shape), "dtype": "f32"}
+                for nm, s in in_specs
+            ],
+            "outputs": out_names,
+            "consts": consts,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        status = "wrote" if changed else "unchanged"
+        print(f"[aot] {status} {fname} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    write_if_changed(mpath, json.dumps(manifest, indent=2) + "\n")
+    print(f"[aot] manifest -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+All kernels lower with ``interpret=True`` (CPU-PJRT constraint; see
+pairwise.py module docstring) and are checked against ``ref.py`` oracles
+by pytest + hypothesis.
+"""
+
+from .pairwise import pairwise_sq_dists, masked_argmin  # noqa: F401
+from .nmf_update import nmf_w_update, nmf_h_update  # noqa: F401

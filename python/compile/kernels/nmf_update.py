@@ -1,0 +1,128 @@
+"""L1 Pallas kernels: masked NMF multiplicative-update steps.
+
+One Lee–Seung multiplicative update for the Frobenius objective
+``||X - W H||_F^2`` with the *masked-rank* convention (see DESIGN.md §2.1):
+W:(m, K_MAX), H:(K_MAX, n) are allocated at the maximum rank and a 0/1
+mask of shape (K_MAX,) selects the active components. Masked components
+are forced to zero every step, so the update at mask cardinality k is
+exactly the rank-k update.
+
+    W <- W * (X H^T) / (W (H H^T) + eps)
+    H <- H * (W^T X) / ((W^T W) H + eps)
+
+The big matmul in each update (X H^T: m x n x K and W^T X: K x m x n)
+lives in the kernel and is tiled over the long data axis; the small K x K
+Gram matrices are computed once per step at L2 and broadcast into every
+tile (they are K_MAX^2 floats — VMEM-trivial).
+
+GPU->TPU adaptation: the CUDA NMF updates the paper's substrates use
+(threadblock-tiled GEMMs with shared-memory staging) become BlockSpec
+row/column tiles feeding ``dot_general`` on the MXU; the elementwise
+multiply/divide epilogue is fused into the same kernel so the W/H tile is
+written exactly once per step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+EPS = 1e-9
+
+
+def _w_update_kernel(x_ref, h_ref, hht_ref, w_ref, mask_ref, o_ref):
+    """Update one row-tile of W: (bm, K)."""
+    x = x_ref[...]        # (bm, n)
+    h = h_ref[...]        # (K, n)
+    hht = hht_ref[...]    # (K, K) Gram, precomputed at L2
+    w = w_ref[...]        # (bm, K)
+    mask = mask_ref[...]  # (K,)
+    # numerator: X @ H^T — the hot matmul (contraction over n).
+    num = jax.lax.dot_general(
+        x, h, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    den = jnp.dot(w, hht, preferred_element_type=jnp.float32) + EPS
+    o_ref[...] = w * (num / den) * mask[None, :]
+
+
+def _h_update_kernel(x_ref, w_ref, wtw_ref, h_ref, mask_ref, o_ref):
+    """Update one column-tile of H: (K, bn)."""
+    x = x_ref[...]        # (m, bn)
+    w = w_ref[...]        # (m, K)
+    wtw = wtw_ref[...]    # (K, K)
+    h = h_ref[...]        # (K, bn)
+    mask = mask_ref[...]  # (K,)
+    # numerator: W^T @ X (contraction over m).
+    num = jax.lax.dot_general(
+        w, x, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    den = jnp.dot(wtw, h, preferred_element_type=jnp.float32) + EPS
+    o_ref[...] = h * (num / den) * mask[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def nmf_w_update(x: jax.Array, w: jax.Array, h: jax.Array,
+                 mask: jax.Array, block_rows: int = DEFAULT_BLOCK) -> jax.Array:
+    """Masked multiplicative W update; x:(m,n), w:(m,K), h:(K,n)."""
+    m, n = x.shape
+    k = w.shape[1]
+    hm = h * mask[:, None]
+    hht = jnp.dot(hm, hm.T, preferred_element_type=jnp.float32)
+    bm = min(block_rows, m)
+    m_pad = (-m) % bm
+    x_p = jnp.pad(x, ((0, m_pad), (0, 0))) if m_pad else x
+    w_p = jnp.pad(w, ((0, m_pad), (0, 0))) if m_pad else w
+    grid = ((m + m_pad) // bm,)
+    out = pl.pallas_call(
+        _w_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + m_pad, k), jnp.float32),
+        interpret=True,
+    )(x_p.astype(jnp.float32), hm.astype(jnp.float32), hht,
+      w_p.astype(jnp.float32), mask.astype(jnp.float32))
+    return out[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols",))
+def nmf_h_update(x: jax.Array, w: jax.Array, h: jax.Array,
+                 mask: jax.Array, block_cols: int = DEFAULT_BLOCK) -> jax.Array:
+    """Masked multiplicative H update; x:(m,n), w:(m,K), h:(K,n)."""
+    m, n = x.shape
+    k = w.shape[1]
+    wm = w * mask[None, :]
+    wtw = jnp.dot(wm.T, wm, preferred_element_type=jnp.float32)
+    bn = min(block_cols, n)
+    n_pad = (-n) % bn
+    x_p = jnp.pad(x, ((0, 0), (0, n_pad))) if n_pad else x
+    h_p = jnp.pad(h, ((0, 0), (0, n_pad))) if n_pad else h
+    grid = ((n + n_pad) // bn,)
+    out = pl.pallas_call(
+        _h_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, bn), lambda i: (0, i)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, bn), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((k, n + n_pad), jnp.float32),
+        interpret=True,
+    )(x_p.astype(jnp.float32), wm.astype(jnp.float32), wtw,
+      h_p.astype(jnp.float32), mask.astype(jnp.float32))
+    return out[:, :n]

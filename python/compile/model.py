@@ -1,0 +1,227 @@
+"""L2: the JAX compute graphs Binary Bleed evaluates at each visited k.
+
+Every entry point here follows the masked-rank convention (DESIGN.md
+§2.1): factor/centroid arrays are allocated at K_MAX and a 0/1 ``mask``
+vector of shape (K_MAX,) carries the *actual* k as data, so a single AOT
+artifact serves the whole k sweep. The hot matmuls route through the L1
+Pallas kernels in ``kernels/``; everything else (Gram matrices, per-cluster
+aggregation, score reductions) is plain jnp that XLA fuses around them.
+
+Entry points (all return tuples — the Rust side unwraps with to_tupleN):
+
+  nmf_step       one multiplicative update             (W', H')
+  nmf_run        NMF_ITERS fused updates + rel. error  (W', H', relerr)
+  kmeans_step    one Lloyd iteration                   (C', labels, inertia)
+  kmeans_run     KMEANS_ITERS fused Lloyd iterations   (C', labels, inertia)
+  silhouette     mean silhouette over active clusters  (score,)
+  davies_bouldin DB index over active clusters         (score,)
+  rescal_step    one multiplicative RESCAL ALS sweep   (A', R', relerr)
+
+Iteration counts are static (baked into the HLO); the Rust coordinator
+calls ``*_run`` repeatedly, carrying state, for longer optimizations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    masked_argmin,
+    nmf_h_update,
+    nmf_w_update,
+    pairwise_sq_dists,
+)
+
+EPS = 1e-9
+BIG = 3.4e38
+
+# Static burst lengths for the fused-loop artifacts.
+NMF_ITERS = 25
+KMEANS_ITERS = 15
+RESCAL_ITERS = 10
+
+
+# --------------------------------------------------------------------------
+# NMF (substrate for NMFk — paper refs [1-3])
+# --------------------------------------------------------------------------
+
+def nmf_step(x, w, h, mask):
+    """One masked Lee–Seung multiplicative update."""
+    w = nmf_w_update(x, w, h, mask)
+    h = nmf_h_update(x, w, h, mask)
+    return w, h
+
+
+def nmf_relative_error(x, w, h, mask):
+    """||X - W_k H_k||_F / ||X||_F with masked components zeroed."""
+    wm = w * mask[None, :]
+    recon = wm @ (h * mask[:, None])
+    return jnp.linalg.norm(x - recon) / (jnp.linalg.norm(x) + EPS)
+
+
+def nmf_run(x, w, h, mask):
+    """NMF_ITERS fused multiplicative updates + relative error."""
+
+    def body(_, carry):
+        w, h = carry
+        return nmf_step(x, w, h, mask)
+
+    w, h = jax.lax.fori_loop(0, NMF_ITERS, body, (w, h))
+    return w, h, nmf_relative_error(x, w, h, mask)
+
+
+# --------------------------------------------------------------------------
+# K-means (substrate for the paper's K-means + Davies-Bouldin experiments)
+# --------------------------------------------------------------------------
+
+def _lloyd_iteration(x, c, mask):
+    """Assignment (L1 kernels) + masked centroid update."""
+    d2 = pairwise_sq_dists(x, c)
+    labels, mind2 = masked_argmin(d2, mask)
+    k = c.shape[0]
+    # One-hot memberships as a matmul-friendly (n,k) matrix.
+    onehot = (labels[:, None] == jnp.arange(k, dtype=jnp.float32)[None, :])
+    onehot = onehot.astype(jnp.float32) * mask[None, :]
+    counts = jnp.sum(onehot, axis=0)  # (k,)
+    sums = jax.lax.dot_general(  # onehot^T @ x on the MXU
+        onehot, x, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # Empty/inactive clusters keep their previous centroid.
+    c_new = jnp.where(counts[:, None] > 0.5, sums / (counts[:, None] + EPS), c)
+    c_new = c_new * mask[:, None] + c * (1.0 - mask[:, None])
+    inertia = jnp.sum(mind2)
+    return c_new, labels, inertia
+
+
+def kmeans_step(x, c, mask):
+    return _lloyd_iteration(x, c, mask)
+
+
+def kmeans_run(x, c, mask):
+    def body(_, carry):
+        c, _, _ = carry
+        return _lloyd_iteration(x, c, mask)
+
+    n = x.shape[0]
+    init = (c, jnp.zeros((n,), jnp.float32), jnp.float32(0.0))
+    c, labels, inertia = jax.lax.fori_loop(0, KMEANS_ITERS, body, init)
+    return c, labels, inertia
+
+
+# --------------------------------------------------------------------------
+# Scorers (paper: silhouette for maximization, Davies-Bouldin for
+# minimization)
+# --------------------------------------------------------------------------
+
+def _cluster_stats(x, labels, k):
+    """One-hot memberships and counts for the active-cluster reductions."""
+    onehot = (labels[:, None] == jnp.arange(k, dtype=jnp.float32)[None, :])
+    onehot = onehot.astype(jnp.float32)
+    counts = jnp.sum(onehot, axis=0)
+    return onehot, counts
+
+
+def silhouette(x, labels, mask):
+    """Mean silhouette coefficient over samples, masked clusters excluded.
+
+    The O(n^2) pairwise-distance block routes through the L1 kernel (x vs
+    x); per-cluster mean distances are then one (n,n)@(n,k) matmul.
+    Distances use the Euclidean metric (sqrt of the kernel's squared
+    distances), matching sklearn.metrics.silhouette_score.
+    """
+    n = x.shape[0]
+    k = mask.shape[0]
+    d = jnp.sqrt(pairwise_sq_dists(x, x))  # (n, n)
+    onehot, counts = _cluster_stats(x, labels, k)  # (n,k), (k,)
+    sums = jnp.dot(d, onehot, preferred_element_type=jnp.float32)  # (n,k)
+
+    own = jnp.sum(onehot * sums, axis=1)  # Σ d(i, j∈C(i))
+    own_count = jnp.sum(onehot * counts[None, :], axis=1)  # |C(i)|
+    a = own / jnp.maximum(own_count - 1.0, 1.0)  # excludes d(i,i)=0
+
+    # b_i: min over *other* active, non-empty clusters of mean distance.
+    mean_to = sums / jnp.maximum(counts[None, :], 1.0)  # (n,k)
+    invalid = (
+        (onehot > 0.5)  # own cluster
+        | (mask[None, :] < 0.5)  # masked-off component
+        | (counts[None, :] < 0.5)  # empty cluster
+    )
+    b = jnp.min(jnp.where(invalid, BIG, mean_to), axis=1)
+
+    s = (b - a) / jnp.maximum(jnp.maximum(a, b), EPS)
+    # Singleton clusters score 0 by convention.
+    s = jnp.where(own_count <= 1.0, 0.0, s)
+    return (jnp.sum(s) / n,)
+
+
+def davies_bouldin(x, c, labels, mask):
+    """Davies-Bouldin index over active, non-empty clusters (minimize).
+
+    DB = (1/k) Σ_i max_{j≠i} (S_i + S_j) / M_ij with S the mean
+    intra-cluster distance to the centroid and M the centroid separation.
+    """
+    k = mask.shape[0]
+    d2 = pairwise_sq_dists(x, c)  # (n, k) sample-to-centroid
+    onehot, counts = _cluster_stats(x, labels, k)
+    active = (mask > 0.5) & (counts > 0.5)
+
+    s = jnp.sum(jnp.sqrt(d2) * onehot, axis=0) / jnp.maximum(counts, 1.0)
+    m = jnp.sqrt(pairwise_sq_dists(c, c))  # (k, k)
+    r = (s[:, None] + s[None, :]) / jnp.maximum(m, EPS)
+
+    pair_ok = active[:, None] & active[None, :] & ~jnp.eye(k, dtype=bool)
+    worst = jnp.max(jnp.where(pair_ok, r, -BIG), axis=1)
+    n_active = jnp.maximum(jnp.sum(active.astype(jnp.float32)), 1.0)
+    db = jnp.sum(jnp.where(active, worst, 0.0)) / n_active
+    return (jnp.maximum(db, 0.0),)
+
+
+# --------------------------------------------------------------------------
+# RESCAL (substrate for pyDRESCALk — paper ref [8]): non-negative
+# multiplicative ALS on a stack of relational slices T_s ≈ A R_s A^T.
+# --------------------------------------------------------------------------
+
+def _rescal_a_update(t, a, r, mask):
+    """A <- A * Σ_s(T_s A R_s^T + T_s^T A R_s) / Σ_s(A[R_s G R_s^T + R_s^T G R_s])."""
+    am = a * mask[None, :]
+    rm = r * mask[None, :, None] * mask[None, None, :]
+    g = am.T @ am  # (k,k) Gram
+
+    ar = jnp.einsum("nk,skl->snl", am, rm)  # A R_s
+    art = jnp.einsum("nk,slk->snl", am, rm)  # A R_s^T
+    num = jnp.einsum("snm,sml->nl", t, art) + jnp.einsum("smn,sml->nl", t, ar)
+    inner = jnp.einsum("skl,lm,sjm->skj", rm, g, rm) \
+        + jnp.einsum("slk,lm,smj->skj", rm, g, rm)
+    den = jnp.einsum("nk,skj->nj", am, inner) + EPS
+    return (a * (num / den)) * mask[None, :]
+
+
+def _rescal_r_update(t, a, r, mask):
+    """R_s <- R_s * (A^T T_s A) / (G R_s G)."""
+    am = a * mask[None, :]
+    g = am.T @ am
+    num = jnp.einsum("kn,snm,ml->skl", am.T, t, am)
+    den = jnp.einsum("kl,slm,mj->skj", g, r, g) + EPS
+    out = r * (num / den)
+    return out * mask[None, :, None] * mask[None, None, :]
+
+
+def rescal_relative_error(t, a, r, mask):
+    am = a * mask[None, :]
+    recon = jnp.einsum("nk,skl,ml->snm", am, r, am)
+    return jnp.linalg.norm(t - recon) / (jnp.linalg.norm(t) + EPS)
+
+
+def rescal_step(t, a, r, mask):
+    """RESCAL_ITERS fused multiplicative sweeps + relative error."""
+
+    def body(_, carry):
+        a, r = carry
+        a = _rescal_a_update(t, a, r, mask)
+        r = _rescal_r_update(t, a, r, mask)
+        return a, r
+
+    a, r = jax.lax.fori_loop(0, RESCAL_ITERS, body, (a, r))
+    return a, r, rescal_relative_error(t, a, r, mask)

@@ -1,0 +1,34 @@
+"""Shared fixtures/helpers for the compile-path test suite."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import settings
+
+# Interpret-mode Pallas is numpy-speed; keep hypothesis budgets sane.
+settings.register_profile("compile-path", max_examples=20, deadline=None)
+settings.load_profile("compile-path")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xB1EED)
+
+
+def blobs(rng, n_per, k, d, spread=8.0, sigma=0.5):
+    """Gaussian blobs à la the paper's K-means workload (§IV-A)."""
+    centers = rng.normal(size=(k, d)) * spread
+    pts = np.concatenate(
+        [centers[i] + rng.normal(size=(n_per, d)) * sigma for i in range(k)]
+    )
+    labels = np.repeat(np.arange(k), n_per)
+    return pts.astype(np.float32), labels.astype(np.float32), centers
+
+
+def planted_nmf(rng, m, n, k, noise=0.01):
+    """Non-negative X = W H + noise with planted rank k (§IV-A NMFk data)."""
+    w = rng.random((m, k)).astype(np.float32)
+    h = rng.random((k, n)).astype(np.float32)
+    x = w @ h + noise * rng.random((m, n)).astype(np.float32)
+    return x.astype(np.float32), w, h

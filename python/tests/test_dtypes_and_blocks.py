@@ -1,0 +1,55 @@
+"""Dtype robustness (f32/bf16 inputs) + block-shape sweeps for L1 kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import nmf_w_update, pairwise_sq_dists
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_accepts_dtype(dtype):
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(33, 6)), dtype=dtype)
+    y = jnp.asarray(rng.normal(size=(4, 6)), dtype=dtype)
+    got = pairwise_sq_dists(x, y)
+    assert got.dtype == jnp.float32, "kernel computes in f32"
+    want = ref.pairwise_sq_dists_ref(
+        jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)
+    )
+    tol = 1e-3 if dtype == jnp.float32 else 0.35  # bf16 inputs quantize
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@given(block=st.sampled_from([1, 2, 7, 33, 128, 512]))
+def test_pairwise_block_shape_invariance(block):
+    """The BlockSpec tile size must never change the numbers."""
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.normal(size=(65, 5)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(3, 5)), jnp.float32)
+    a = pairwise_sq_dists(x, y, block_rows=block)
+    b = pairwise_sq_dists(x, y, block_rows=128)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+@given(block=st.sampled_from([1, 3, 16, 64, 256]))
+def test_nmf_w_update_block_shape_invariance(block):
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.random((37, 29)) + 0.05, jnp.float32)
+    w = jnp.asarray(rng.random((37, 6)) + 0.05, jnp.float32)
+    h = jnp.asarray(rng.random((6, 29)) + 0.05, jnp.float32)
+    mask = jnp.asarray([1, 1, 1, 1, 0, 0], jnp.float32)
+    a = nmf_w_update(x, w, h, mask, block_rows=block)
+    b = nmf_w_update(x, w, h, mask, block_rows=128)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-6)
+
+
+def test_degenerate_single_row_and_column():
+    x = jnp.ones((1, 1), jnp.float32)
+    y = jnp.zeros((1, 1), jnp.float32)
+    d = pairwise_sq_dists(x, y)
+    np.testing.assert_allclose(d, [[1.0]])

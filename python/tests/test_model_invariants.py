@@ -1,0 +1,156 @@
+"""L2 model-level invariants: monotone objectives, score ranges, masks."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from tests.conftest import blobs, planted_nmf
+
+
+def test_nmf_run_monotone_decreasing_error(rng):
+    x, _, _ = planted_nmf(rng, 80, 90, 5)
+    w = rng.random((80, 12)).astype(np.float32)
+    h = rng.random((12, 90)).astype(np.float32)
+    mask = jnp.array([1.0] * 5 + [0.0] * 7, jnp.float32)
+    errs = []
+    wj, hj = jnp.array(w), jnp.array(h)
+    for _ in range(4):
+        wj, hj, e = model.nmf_run(jnp.array(x), wj, hj, mask)
+        errs.append(float(e))
+    assert all(b <= a + 1e-6 for a, b in zip(errs, errs[1:])), errs
+    # Planted rank-5 data should be nearly exactly recovered at k=5.
+    assert errs[-1] < 0.05, errs
+
+
+def test_nmf_run_masked_stay_zero(rng):
+    x, _, _ = planted_nmf(rng, 40, 50, 3)
+    w = rng.random((40, 8)).astype(np.float32)
+    h = rng.random((8, 50)).astype(np.float32)
+    mask = jnp.array([1, 1, 1, 0, 0, 0, 0, 0], jnp.float32)
+    wj, hj, _ = model.nmf_run(jnp.array(x), jnp.array(w), jnp.array(h), mask)
+    assert np.all(np.array(wj)[:, 3:] == 0)
+    assert np.all(np.array(hj)[3:, :] == 0)
+
+
+def test_kmeans_run_monotone_inertia(rng):
+    x, _, _ = blobs(rng, 40, 4, 6)
+    c = rng.normal(size=(8, 6)).astype(np.float32)
+    mask = jnp.array([1.0] * 4 + [0.0] * 4, jnp.float32)
+    cj = jnp.array(c)
+    prev = np.inf
+    for _ in range(3):
+        cj, lbl, inertia = model.kmeans_run(jnp.array(x), cj, mask)
+        assert float(inertia) <= prev + 1e-3
+        prev = float(inertia)
+
+
+def test_kmeans_labels_only_active(rng):
+    x, _, _ = blobs(rng, 30, 3, 4)
+    c = rng.normal(size=(10, 4)).astype(np.float32) * 8
+    mask = jnp.array([1.0] * 3 + [0.0] * 7, jnp.float32)
+    _, lbl, _ = model.kmeans_run(jnp.array(x), jnp.array(c), mask)
+    assert set(np.array(lbl).astype(int)) <= {0, 1, 2}
+
+
+def test_silhouette_range_and_quality(rng):
+    x, lbl, _ = blobs(rng, 50, 4, 8, spread=10, sigma=0.3)
+    mask = jnp.array([1.0] * 4 + [0.0] * 4, jnp.float32)
+    s, = model.silhouette(jnp.array(x), jnp.array(lbl), mask)
+    assert -1.0 <= float(s) <= 1.0
+    assert float(s) > 0.8, "tight well-separated blobs -> high silhouette"
+    # Random labels destroy the structure.
+    bad = rng.integers(0, 4, size=len(lbl)).astype(np.float32)
+    s_bad, = model.silhouette(jnp.array(x), jnp.array(bad), mask)
+    assert float(s_bad) < float(s) - 0.5
+
+
+def test_davies_bouldin_lower_is_better(rng):
+    x, lbl, centers = blobs(rng, 50, 4, 8, spread=10, sigma=0.3)
+    mask = jnp.array([1.0] * 4 + [0.0] * 4, jnp.float32)
+    c = np.zeros((8, 8), np.float32)
+    c[:4] = centers
+    db_good, = model.davies_bouldin(jnp.array(x), jnp.array(c),
+                                    jnp.array(lbl), mask)
+    bad = rng.integers(0, 4, size=len(lbl)).astype(np.float32)
+    db_bad, = model.davies_bouldin(jnp.array(x), jnp.array(c),
+                                   jnp.array(bad), mask)
+    assert float(db_good) >= 0
+    assert float(db_good) < float(db_bad)
+
+
+def test_silhouette_matches_naive_numpy(rng):
+    """Cross-check the matmul formulation against the textbook O(n^2) loop."""
+    x, lbl, _ = blobs(rng, 15, 3, 4, spread=6, sigma=0.8)
+    n = len(x)
+    d = np.sqrt(((x[:, None, :] - x[None, :, :]) ** 2).sum(-1))
+    svals = []
+    for i in range(n):
+        own = lbl == lbl[i]
+        a = d[i][own].sum() / max(own.sum() - 1, 1)
+        b = min(
+            d[i][lbl == c].mean()
+            for c in np.unique(lbl) if c != lbl[i]
+        )
+        svals.append(0.0 if own.sum() <= 1 else (b - a) / max(a, b))
+    want = np.mean(svals)
+    mask = jnp.array([1.0] * 3 + [0.0] * 0, jnp.float32)
+    got, = model.silhouette(jnp.array(x), jnp.array(lbl), mask)
+    np.testing.assert_allclose(float(got), want, rtol=1e-3, atol=1e-4)
+
+
+def test_davies_bouldin_matches_naive_numpy(rng):
+    x, lbl, centers = blobs(rng, 20, 3, 5, spread=7, sigma=0.6)
+    c = centers.astype(np.float32)
+    ks = np.unique(lbl).astype(int)
+    s = np.array([
+        np.sqrt(((x[lbl == k] - c[k]) ** 2).sum(-1)).mean() for k in ks
+    ])
+    m = np.sqrt(((c[:, None, :] - c[None, :, :]) ** 2).sum(-1))
+    r = np.zeros(len(ks))
+    for i in ks:
+        r[i] = max((s[i] + s[j]) / m[i, j] for j in ks if j != i)
+    want = r.mean()
+    mask = jnp.array([1.0] * 3, jnp.float32)
+    got, = model.davies_bouldin(jnp.array(x), jnp.array(c),
+                                jnp.array(lbl), mask)
+    np.testing.assert_allclose(float(got), want, rtol=1e-3, atol=1e-4)
+
+
+def test_rescal_monotone_and_masked(rng):
+    a0 = rng.random((24, 3)).astype(np.float32)
+    r0 = rng.random((4, 3, 3)).astype(np.float32)
+    t = np.einsum("nk,skl,ml->snm", a0, r0, a0).astype(np.float32)
+    a = rng.random((24, 8)).astype(np.float32)
+    r = rng.random((4, 8, 8)).astype(np.float32)
+    mask = jnp.array([1.0] * 3 + [0.0] * 5, jnp.float32)
+    aj, rj = jnp.array(a), jnp.array(r)
+    errs = []
+    for _ in range(4):
+        aj, rj, e = model.rescal_step(jnp.array(t), aj, rj, mask)
+        errs.append(float(e))
+    assert all(b <= a_ + 1e-6 for a_, b in zip(errs, errs[1:])), errs
+    assert errs[-1] < 0.1
+    assert np.all(np.array(aj)[:, 3:] == 0)
+
+
+@pytest.mark.parametrize("k", [2, 5, 9])
+def test_nmf_planted_rank_recovery_error_profile(rng, k):
+    """Relative error flattens at the planted rank — the NMFk premise."""
+    x, _, _ = planted_nmf(rng, 60, 70, 5, noise=0.005)
+    errs = {}
+    for kk in [k]:
+        w = rng.random((60, 12)).astype(np.float32)
+        h = rng.random((12, 70)).astype(np.float32)
+        mask = np.zeros(12, np.float32)
+        mask[:kk] = 1
+        wj, hj = jnp.array(w), jnp.array(h)
+        for _ in range(10):
+            wj, hj, e = model.nmf_run(jnp.array(x), wj, hj, jnp.array(mask))
+        errs[kk] = float(e)
+    if k < 5:
+        assert errs[k] > 0.08, f"rank {k} underfits: {errs}"
+    else:
+        assert errs[k] < 0.08, f"rank {k} should fit: {errs}"

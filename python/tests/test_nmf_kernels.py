@@ -1,0 +1,86 @@
+"""L1 NMF multiplicative-update Pallas kernels vs oracles (hypothesis)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import nmf_h_update, nmf_w_update
+from compile.kernels import ref
+
+
+def _case(seed, m, n, kmax, k):
+    rng = np.random.default_rng(seed)
+    x = rng.random((m, n)).astype(np.float32) + 0.05
+    w = rng.random((m, kmax)).astype(np.float32) + 0.05
+    h = rng.random((kmax, n)).astype(np.float32) + 0.05
+    mask = np.zeros(kmax, np.float32)
+    mask[:k] = 1.0
+    return x, w, h, mask
+
+
+@given(
+    m=st.integers(2, 160),
+    n=st.integers(2, 160),
+    kmax=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([16, 128]),
+)
+def test_w_update_matches_ref(m, n, kmax, seed, block):
+    k = max(1, kmax // 2)
+    x, w, h, mask = _case(seed, m, n, kmax, k)
+    got = nmf_w_update(jnp.array(x), jnp.array(w), jnp.array(h),
+                       jnp.array(mask), block_rows=block)
+    want = ref.nmf_w_update_ref(jnp.array(x), jnp.array(w), jnp.array(h),
+                                jnp.array(mask))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-4)
+
+
+@given(
+    m=st.integers(2, 160),
+    n=st.integers(2, 160),
+    kmax=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([16, 128]),
+)
+def test_h_update_matches_ref(m, n, kmax, seed, block):
+    k = max(1, kmax // 2)
+    x, w, h, mask = _case(seed, m, n, kmax, k)
+    got = nmf_h_update(jnp.array(x), jnp.array(w), jnp.array(h),
+                       jnp.array(mask), block_cols=block)
+    want = ref.nmf_h_update_ref(jnp.array(x), jnp.array(w), jnp.array(h),
+                                jnp.array(mask))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-4)
+
+
+def test_masked_components_stay_zero():
+    x, w, h, mask = _case(3, 50, 60, 8, 3)
+    w2 = np.array(nmf_w_update(jnp.array(x), jnp.array(w), jnp.array(h),
+                               jnp.array(mask)))
+    h2 = np.array(nmf_h_update(jnp.array(x), jnp.array(w), jnp.array(h),
+                               jnp.array(mask)))
+    assert np.all(w2[:, 3:] == 0.0)
+    assert np.all(h2[3:, :] == 0.0)
+
+
+def test_update_preserves_nonnegativity():
+    x, w, h, mask = _case(4, 40, 45, 6, 6)
+    w2 = np.array(nmf_w_update(jnp.array(x), jnp.array(w), jnp.array(h),
+                               jnp.array(mask)))
+    h2 = np.array(nmf_h_update(jnp.array(x), jnp.array(w), jnp.array(h),
+                               jnp.array(mask)))
+    assert (w2 >= 0).all() and (h2 >= 0).all()
+
+
+def test_masked_rank_equals_unpadded_rank():
+    """mask(k) on K_MAX arrays == exact rank-k update on k arrays."""
+    x, w, h, mask = _case(5, 30, 35, 10, 4)
+    w2 = np.array(nmf_w_update(jnp.array(x), jnp.array(w), jnp.array(h),
+                               jnp.array(mask)))
+    w_small = w[:, :4].copy()
+    h_small = h[:4, :].copy()
+    w2_small = np.array(ref.nmf_w_update_ref(
+        jnp.array(x), jnp.array(w_small), jnp.array(h_small),
+        jnp.ones(4, jnp.float32)))
+    np.testing.assert_allclose(w2[:, :4], w2_small, rtol=5e-4, atol=1e-4)

@@ -1,0 +1,69 @@
+"""L1 pairwise/argmin Pallas kernels vs pure-jnp oracles (hypothesis)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import masked_argmin, pairwise_sq_dists
+from compile.kernels import ref
+
+
+@given(
+    n=st.integers(1, 300),
+    k=st.integers(1, 40),
+    d=st.integers(1, 48),
+    block=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_matches_ref(n, k, d, block, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32) * 3
+    y = rng.normal(size=(k, d)).astype(np.float32) * 3
+    got = pairwise_sq_dists(jnp.array(x), jnp.array(y), block_rows=block)
+    want = ref.pairwise_sq_dists_ref(jnp.array(x), jnp.array(y))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=1e-3)
+
+
+@given(
+    n=st.integers(1, 200),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_argmin_matches_ref(n, k, seed):
+    rng = np.random.default_rng(seed)
+    d2 = rng.random((n, k)).astype(np.float32) * 10
+    # Always at least one active column.
+    mask = (rng.random(k) < 0.6).astype(np.float32)
+    mask[rng.integers(k)] = 1.0
+    got_l, got_m = masked_argmin(jnp.array(d2), jnp.array(mask))
+    want_l, want_m = ref.masked_argmin_ref(jnp.array(d2), jnp.array(mask))
+    np.testing.assert_array_equal(np.array(got_l), np.array(want_l))
+    np.testing.assert_allclose(got_m, want_m, rtol=1e-5, atol=1e-6)
+
+
+def test_pairwise_self_distance_zero_diagonal():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(64, 9)).astype(np.float32)
+    d = np.array(pairwise_sq_dists(jnp.array(x), jnp.array(x)))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+    assert (d >= 0).all(), "clamped non-negative"
+
+
+def test_pairwise_non_divisible_block_edge():
+    """Row counts that do not divide the block exercise the pad path."""
+    rng = np.random.default_rng(8)
+    x = rng.normal(size=(129, 5)).astype(np.float32)
+    y = rng.normal(size=(3, 5)).astype(np.float32)
+    got = pairwise_sq_dists(jnp.array(x), jnp.array(y), block_rows=128)
+    want = ref.pairwise_sq_dists_ref(jnp.array(x), jnp.array(y))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=1e-3)
+
+
+def test_masked_argmin_all_active_equals_plain_argmin():
+    rng = np.random.default_rng(9)
+    d2 = rng.random((50, 8)).astype(np.float32)
+    mask = np.ones(8, np.float32)
+    lbl, _ = masked_argmin(jnp.array(d2), jnp.array(mask))
+    np.testing.assert_array_equal(np.array(lbl), d2.argmin(1).astype(np.float32))

@@ -1,0 +1,149 @@
+//! In-tree micro-benchmark harness (criterion stand-in, DESIGN.md §2.3).
+//!
+//! `benches/*.rs` are `harness = false` binaries built on this module:
+//! warm-up, auto-calibrated iteration counts, median/p95 reporting, and a
+//! simple `name: median ± spread` line protocol that `cargo bench` output
+//! collectors (EXPERIMENTS.md §Perf) consume.
+
+use std::time::{Duration, Instant};
+
+use crate::util::{median, percentile};
+
+/// Statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+    pub total: Duration,
+}
+
+impl BenchStats {
+    /// Throughput given a per-iteration item count.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} median {:>12} p95   ({} iters)",
+            self.name,
+            crate::util::timer::human_duration(self.median),
+            crate::util::timer::human_duration(self.p95),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    /// Target wall-clock per benchmark (iterations auto-calibrate to it).
+    pub target: Duration,
+    pub warmup: Duration,
+    /// Hard cap on iterations (slow end-to-end cases).
+    pub max_iters: usize,
+    pub min_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            target: Duration::from_secs(2),
+            warmup: Duration::from_millis(300),
+            max_iters: 10_000_000,
+            min_iters: 10,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick profile for CI runs.
+    pub fn quick() -> Self {
+        Self {
+            target: Duration::from_millis(500),
+            warmup: Duration::from_millis(100),
+            max_iters: 1_000_000,
+            min_iters: 5,
+        }
+    }
+
+    /// Run `f` repeatedly; `f` returns a value which is black-boxed to
+    /// keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warm-up + calibration.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.target.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        // Measured runs, batched so timer overhead stays negligible for
+        // nanosecond-scale bodies.
+        let batch = (iters / 100).max(1);
+        let mut samples: Vec<f64> = Vec::with_capacity(iters / batch + 1);
+        let total_start = Instant::now();
+        let mut done = 0usize;
+        while done < iters {
+            let n = batch.min(iters - done);
+            let t0 = Instant::now();
+            for _ in 0..n {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / n as f64);
+            done += n;
+        }
+        let total = total_start.elapsed();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters,
+            median: Duration::from_secs_f64(median(&samples)),
+            p95: Duration::from_secs_f64(percentile(&samples, 95.0)),
+            mean: Duration::from_secs_f64(
+                samples.iter().sum::<f64>() / samples.len() as f64,
+            ),
+            total,
+        };
+        println!("{stats}");
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let b = Bench {
+            target: Duration::from_millis(50),
+            warmup: Duration::from_millis(10),
+            max_iters: 100_000,
+            min_iters: 5,
+        };
+        let stats = b.run("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(stats.iters >= 5);
+        assert!(stats.median > Duration::ZERO);
+        assert!(stats.p95 >= stats.median);
+        assert!(stats.per_second(100.0) > 0.0);
+    }
+
+    #[test]
+    fn display_contains_name() {
+        let b = Bench::quick();
+        let stats = b.run("display-check", || 1 + 1);
+        assert!(format!("{stats}").contains("display-check"));
+    }
+}

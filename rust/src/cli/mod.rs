@@ -1,0 +1,345 @@
+//! Hand-rolled CLI (offline clap stand-in, DESIGN.md §2.3).
+//!
+//! ```text
+//! bleed search     --model nmfk|kmeans|profile --k-min 2 --k-max 30
+//!                  [--mode vanilla|early-stop|standard] [--order pre|post|in]
+//!                  [--ranks N] [--threads T] [--backend hlo|native]
+//!                  [--k-true K] [--seed S] [--config FILE]
+//! bleed experiment fig7|fig8|fig9|table2|arxiv|fig4|dynamics|all
+//!                  [--preset quick|paper] [--config FILE]
+//! bleed artifacts-check [--dir artifacts]
+//! ```
+
+pub mod experiments;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{parse_mode, parse_traversal, ExperimentConfig};
+use crate::coordinator::{
+    binary_bleed_parallel, binary_bleed_serial, KScorer, Mode, SearchPolicy,
+    Thresholds,
+};
+use crate::data::{gaussian_blobs, planted_nmf, ScoreProfile};
+use crate::model::{Backend, KMeansEvaluator, KMeansScoring, NmfkEvaluator, SharedStore};
+
+/// Parsed command line: positional words + `--flag value` pairs.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw args (everything after the binary name). `--flag` with
+    /// no following value (or followed by another flag) is stored as "true".
+    pub fn parse(raw: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let has_value = i + 1 < raw.len() && !raw[i + 1].starts_with("--");
+                if has_value {
+                    out.flags.insert(name.to_string(), raw[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.insert(name.to_string(), "true".into());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("bad value for --{name}: '{v}'")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+bleed — Binary Bleed automatic model selection (paper reproduction)
+
+USAGE:
+  bleed search --model nmfk|kmeans|profile [flags]
+  bleed experiment fig7|fig8|fig9|table2|arxiv|fig4|dynamics|all [flags]
+  bleed artifacts-check [--dir artifacts]
+  bleed help
+
+SEARCH FLAGS:
+  --k-min N --k-max N      search space (default 2..30)
+  --mode M                 standard|vanilla|early-stop (default vanilla)
+  --order O                pre|post|in (default pre)
+  --ranks N --threads T    parallel shape (default 1x1 = serial)
+  --backend B              hlo|native (default native; hlo needs artifacts)
+  --k-true K               planted k for the synthetic dataset (default 15)
+  --select X --stop X      thresholds (default 0.75 / 0.2)
+  --seed S                 rng seed
+EXPERIMENT FLAGS:
+  --preset P               quick|paper (default quick)
+  --config FILE            TOML overrides (configs/*.toml)
+";
+
+/// Entry point for the `bleed` binary.
+pub fn run(raw_args: &[String]) -> Result<()> {
+    let args = Args::parse(raw_args)?;
+    match args.positional.first().map(String::as_str) {
+        Some("search") => cmd_search(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("artifacts-check") => cmd_artifacts_check(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.flag("config") {
+        ExperimentConfig::from_file(path)?
+    } else {
+        ExperimentConfig::by_name(&args.flag_or("preset", "quick"))?
+    };
+    if let Some(seed) = args.flag_parse::<u64>("seed")? {
+        cfg.seed = seed;
+    }
+    Ok(cfg)
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    match which {
+        "fig7" => experiments::fig7(&cfg),
+        "fig8" => {
+            experiments::fig8(&cfg, experiments::Family::Nmfk)?;
+            experiments::fig8(&cfg, experiments::Family::Kmeans)?;
+            Ok(())
+        }
+        "fig9" => experiments::fig9(&cfg),
+        "table2" => experiments::table2(&cfg),
+        "arxiv" => experiments::arxiv(&cfg),
+        "fig4" => experiments::fig4(&cfg),
+        "dynamics" => experiments::dynamics(&cfg),
+        "all" => experiments::all(&cfg),
+        other => bail!("unknown experiment '{other}'"),
+    }
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let k_min: u32 = args.flag_parse("k-min")?.unwrap_or(2);
+    let k_max: u32 = args.flag_parse("k-max")?.unwrap_or(30);
+    let k_true: u32 = args.flag_parse("k-true")?.unwrap_or(15);
+    let seed: u64 = args.flag_parse("seed")?.unwrap_or(0xB1EED);
+    let ranks: usize = args.flag_parse("ranks")?.unwrap_or(1);
+    let threads: usize = args.flag_parse("threads")?.unwrap_or(1);
+    let mode = parse_mode(&args.flag_or("mode", "vanilla"))?;
+    let order = parse_traversal(&args.flag_or("order", "pre"))?;
+    let select: f64 = args.flag_parse("select")?.unwrap_or(0.75);
+    let stop: f64 = args.flag_parse("stop")?.unwrap_or(0.2);
+    let backend = match args.flag_or("backend", "native").as_str() {
+        "hlo" => Backend::Hlo,
+        "native" => Backend::Native,
+        other => bail!("unknown backend '{other}'"),
+    };
+    anyhow::ensure!(k_min >= 2 && k_min <= k_max, "need 2 <= k-min <= k-max");
+
+    let ks: Vec<u32> = (k_min..=k_max).collect();
+    let model = args.flag_or("model", "profile");
+    let (scorer, mut policy) = build_scorer(&model, k_true, k_max, seed, backend, select, stop)?;
+    policy.mode = mode;
+
+    println!(
+        "searching K={{{k_min}..{k_max}}} model={model} mode={} order={} \
+         ranks={ranks}x{threads} backend={}",
+        mode.label(),
+        order.label(),
+        backend.label()
+    );
+    let result = if ranks * threads <= 1 {
+        binary_bleed_serial(&ks, scorer.as_ref(), policy)
+    } else {
+        let pcfg = crate::coordinator::ParallelConfig {
+            ranks,
+            threads_per_rank: threads,
+            traversal: order,
+            ..Default::default()
+        };
+        binary_bleed_parallel(&ks, scorer.as_ref(), policy, pcfg)
+    };
+    println!(
+        "k* = {:?} (score {:?}) — visited {}/{} ({:.0}%) in {:.2}s",
+        result.k_optimal,
+        result.score,
+        result.log.evaluated_count(),
+        ks.len(),
+        result.percent_visited(),
+        result.elapsed.as_secs_f64()
+    );
+    println!("visit order: {:?}", result.log.evaluated());
+    println!("pruned     : {:?}", result.log.pruned());
+    Ok(())
+}
+
+/// Build a scorer for `bleed search`.
+#[allow(clippy::too_many_arguments)]
+fn build_scorer(
+    model: &str,
+    k_true: u32,
+    k_max: u32,
+    seed: u64,
+    backend: Backend,
+    select: f64,
+    stop: f64,
+) -> Result<(Box<dyn KScorer>, SearchPolicy)> {
+    let thresholds = Thresholds { select, stop };
+    let mut rng = crate::util::Pcg32::new(seed);
+    match model {
+        "profile" => Ok((
+            Box::new(ScoreProfile::SquareWave {
+                k_true,
+                high: 0.9,
+                low: 0.1,
+            }),
+            SearchPolicy::maximize(Mode::Vanilla, thresholds),
+        )),
+        "nmfk" => {
+            let ev: NmfkEvaluator = match backend {
+                Backend::Hlo => {
+                    let store = std::sync::Arc::new(SharedStore::open_default()?);
+                    let m = store.param("nmf_m")?;
+                    let n = store.param("nmf_n")?;
+                    let ds = planted_nmf(&mut rng, m, n, k_true as usize, 0.01);
+                    NmfkEvaluator::hlo(ds.x, store, seed)?
+                }
+                Backend::Native => {
+                    let ds = planted_nmf(&mut rng, 80, 88, k_true as usize, 0.01);
+                    NmfkEvaluator::native(ds.x, k_max as usize + 2, seed)
+                }
+            };
+            Ok((
+                Box::new(ev),
+                SearchPolicy::maximize(Mode::Vanilla, thresholds),
+            ))
+        }
+        "kmeans" => {
+            let ev: KMeansEvaluator = match backend {
+                Backend::Hlo => {
+                    let store = std::sync::Arc::new(SharedStore::open_default()?);
+                    let n = store.param("km_n")?;
+                    let d = store.param("km_d")?;
+                    let ds =
+                        gaussian_blobs(&mut rng, n / k_true as usize, k_true as usize, d, 9.0, 0.5);
+                    // Pad to exact n rows if k_true does not divide n.
+                    let mut x = ds.x;
+                    while x.rows < n {
+                        let row: Vec<f32> = x.row(x.rows - 1).to_vec();
+                        x.data.extend_from_slice(&row);
+                        x.rows += 1;
+                    }
+                    KMeansEvaluator::hlo(x, KMeansScoring::DaviesBouldin, store, seed)?
+                }
+                Backend::Native => {
+                    let ds =
+                        gaussian_blobs(&mut rng, 25, k_true as usize, 8, 9.0, 0.5);
+                    KMeansEvaluator::native(
+                        ds.x,
+                        k_max as usize + 2,
+                        KMeansScoring::DaviesBouldin,
+                        seed,
+                    )
+                }
+            };
+            Ok((
+                Box::new(ev),
+                SearchPolicy::minimize(
+                    Mode::Vanilla,
+                    Thresholds {
+                        select: 0.45,
+                        stop: 0.9,
+                    },
+                ),
+            ))
+        }
+        other => bail!("unknown model '{other}' (profile|nmfk|kmeans)"),
+    }
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let dir = args.flag_or("dir", "artifacts");
+    let store = crate::runtime::ArtifactStore::open(&dir)
+        .with_context(|| format!("opening artifact store at {dir}"))?;
+    println!("platform: {}", store.platform());
+    let names: Vec<String> = store.manifest().entries.keys().cloned().collect();
+    for name in &names {
+        let t = std::time::Instant::now();
+        store.warm(name)?;
+        println!("  {name:<16} compiled in {:.0}ms", t.elapsed().as_secs_f64() * 1e3);
+    }
+    println!("{} entries OK (preset={})", names.len(), store.manifest().preset);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_positional_and_flags() {
+        let a = args(&["search", "--k-max", "40", "--verbose", "--mode", "vanilla"]);
+        assert_eq!(a.positional, vec!["search"]);
+        assert_eq!(a.flag("k-max"), Some("40"));
+        assert_eq!(a.flag("verbose"), Some("true"));
+        assert_eq!(a.flag_parse::<u32>("k-max").unwrap(), Some(40));
+    }
+
+    #[test]
+    fn bad_flag_value_errors() {
+        let a = args(&["search", "--k-max", "forty"]);
+        assert!(a.flag_parse::<u32>("k-max").is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run(&["frobnicate".to_string()]).is_err());
+    }
+
+    #[test]
+    fn profile_search_end_to_end() {
+        run(&[
+            "search".into(),
+            "--model".into(),
+            "profile".into(),
+            "--k-true".into(),
+            "17".into(),
+        ])
+        .unwrap();
+    }
+}

@@ -1,0 +1,262 @@
+//! Typed experiment configuration (DESIGN.md S14): presets + TOML files.
+//!
+//! Every experiment runner takes an [`ExperimentConfig`]; `quick` (CI
+//! budget) and `paper` (full §IV scale) presets are built in and any field
+//! can be overridden from a `configs/*.toml` file or CLI flags.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{
+    Mode, ParallelConfig, Pipeline, SearchPolicy, Thresholds, Traversal,
+};
+
+pub use toml::{parse_toml, TomlValue};
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// RNG seed for data generation + model inits.
+    pub seed: u64,
+    /// Search space: K = {k_min .. k_max} inclusive.
+    pub k_min: u32,
+    pub k_max: u32,
+    /// Thresholds for the select/stop heuristics.
+    pub thresholds: Thresholds,
+    /// Parallel shape.
+    pub ranks: usize,
+    pub threads_per_rank: usize,
+    pub traversal: Traversal,
+    pub pipeline: Pipeline,
+    /// Sweep density for figure experiments: evaluate every `stride`-th
+    /// k_true (quick preset thins the §IV sweeps).
+    pub sweep_stride: usize,
+    /// NMFk trials: perturbations per k.
+    pub perturbations: usize,
+    /// K-means restarts per k.
+    pub restarts: usize,
+    /// Where results (csv/md) land.
+    pub results_dir: String,
+    /// Human label.
+    pub preset: String,
+}
+
+impl ExperimentConfig {
+    /// CI/laptop preset — minutes, not hours.
+    pub fn quick() -> Self {
+        Self {
+            seed: 0xB1EED,
+            k_min: 2,
+            k_max: 30,
+            thresholds: Thresholds {
+                select: 0.75,
+                stop: 0.2,
+            },
+            ranks: 2,
+            threads_per_rank: 2,
+            traversal: Traversal::PreOrder,
+            pipeline: Pipeline::SkipModThenSort,
+            sweep_stride: 4,
+            perturbations: 3,
+            restarts: 2,
+            results_dir: "results".into(),
+            preset: "quick".into(),
+        }
+    }
+
+    /// Paper-scale preset (§IV-A sweeps every k_true).
+    pub fn paper() -> Self {
+        Self {
+            sweep_stride: 1,
+            perturbations: 6,
+            restarts: 5,
+            preset: "paper".into(),
+            ..Self::quick()
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<Self> {
+        match name {
+            "quick" => Ok(Self::quick()),
+            "paper" => Ok(Self::paper()),
+            other => bail!("unknown preset '{other}' (quick|paper)"),
+        }
+    }
+
+    /// The searched k list.
+    pub fn ks(&self) -> Vec<u32> {
+        (self.k_min..=self.k_max).collect()
+    }
+
+    /// Policy for a given mode, inheriting the config thresholds.
+    pub fn policy(&self, mode: Mode) -> SearchPolicy {
+        SearchPolicy::maximize(mode, self.thresholds)
+    }
+
+    /// Parallel config for the scheduler.
+    pub fn parallel(&self) -> ParallelConfig {
+        ParallelConfig {
+            ranks: self.ranks,
+            threads_per_rank: self.threads_per_rank,
+            traversal: self.traversal,
+            pipeline: self.pipeline,
+        }
+    }
+
+    /// Load overrides from a TOML file on top of a preset base.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let t = parse_toml(&text).with_context(|| format!("parsing {path}"))?;
+        let base = t
+            .get("preset")
+            .and_then(TomlValue::as_str)
+            .unwrap_or("quick");
+        let mut cfg = Self::by_name(base)?;
+        cfg.apply_toml(&t)?;
+        Ok(cfg)
+    }
+
+    /// Apply overrides from a parsed TOML table.
+    pub fn apply_toml(&mut self, t: &TomlValue) -> Result<()> {
+        if let Some(v) = t.get("seed").and_then(TomlValue::as_int) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = t.get_path("search.k_min").and_then(TomlValue::as_int) {
+            self.k_min = v as u32;
+        }
+        if let Some(v) = t.get_path("search.k_max").and_then(TomlValue::as_int) {
+            self.k_max = v as u32;
+        }
+        if let Some(v) = t
+            .get_path("search.select_threshold")
+            .and_then(TomlValue::as_float)
+        {
+            self.thresholds.select = v;
+        }
+        if let Some(v) = t
+            .get_path("search.stop_threshold")
+            .and_then(TomlValue::as_float)
+        {
+            self.thresholds.stop = v;
+        }
+        if let Some(v) = t.get_path("search.order").and_then(TomlValue::as_str) {
+            self.traversal = parse_traversal(v)?;
+        }
+        if let Some(v) = t.get_path("parallel.ranks").and_then(TomlValue::as_int) {
+            self.ranks = v as usize;
+        }
+        if let Some(v) = t
+            .get_path("parallel.threads_per_rank")
+            .and_then(TomlValue::as_int)
+        {
+            self.threads_per_rank = v as usize;
+        }
+        if let Some(v) = t.get_path("parallel.pipeline").and_then(TomlValue::as_str) {
+            self.pipeline = parse_pipeline(v)?;
+        }
+        if let Some(v) = t.get_path("sweep.stride").and_then(TomlValue::as_int) {
+            self.sweep_stride = (v as usize).max(1);
+        }
+        if let Some(v) = t
+            .get_path("model.perturbations")
+            .and_then(TomlValue::as_int)
+        {
+            self.perturbations = v as usize;
+        }
+        if let Some(v) = t.get_path("model.restarts").and_then(TomlValue::as_int) {
+            self.restarts = v as usize;
+        }
+        if let Some(v) = t.get("results_dir").and_then(TomlValue::as_str) {
+            self.results_dir = v.to_string();
+        }
+        anyhow::ensure!(self.k_min >= 1 && self.k_min <= self.k_max, "bad k range");
+        Ok(())
+    }
+}
+
+/// Parse a traversal label ("pre" | "post" | "in").
+pub fn parse_traversal(s: &str) -> Result<Traversal> {
+    Ok(match s {
+        "pre" | "pre-order" => Traversal::PreOrder,
+        "post" | "post-order" => Traversal::PostOrder,
+        "in" | "in-order" => Traversal::InOrder,
+        other => bail!("unknown traversal '{other}' (pre|post|in)"),
+    })
+}
+
+/// Parse a mode label.
+pub fn parse_mode(s: &str) -> Result<Mode> {
+    Ok(match s {
+        "standard" => Mode::Standard,
+        "vanilla" => Mode::Vanilla,
+        "early-stop" | "earlystop" | "es" => Mode::EarlyStop,
+        other => bail!("unknown mode '{other}' (standard|vanilla|early-stop)"),
+    })
+}
+
+/// Parse a Table II pipeline label.
+pub fn parse_pipeline(s: &str) -> Result<Pipeline> {
+    Ok(match s {
+        "t1" | "sort-contiguous" => Pipeline::SortThenContiguous,
+        "t2" | "sort-skipmod" => Pipeline::SortThenSkipMod,
+        "t3" | "contiguous-sort" => Pipeline::ContiguousThenSort,
+        "t4" | "skipmod-sort" => Pipeline::SkipModThenSort,
+        other => bail!("unknown pipeline '{other}' (t1|t2|t3|t4)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_differ_in_scale() {
+        let q = ExperimentConfig::quick();
+        let p = ExperimentConfig::paper();
+        assert!(q.sweep_stride > p.sweep_stride);
+        assert!(q.perturbations < p.perturbations);
+        assert_eq!(q.ks().len(), 29);
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let doc = r#"
+preset = "quick"
+seed = 7
+[search]
+k_max = 50
+select_threshold = 0.8
+order = "post"
+[parallel]
+ranks = 8
+pipeline = "t2"
+[sweep]
+stride = 2
+"#;
+        let mut cfg = ExperimentConfig::quick();
+        cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.k_max, 50);
+        assert_eq!(cfg.thresholds.select, 0.8);
+        assert_eq!(cfg.traversal, Traversal::PostOrder);
+        assert_eq!(cfg.ranks, 8);
+        assert_eq!(cfg.pipeline, Pipeline::SortThenSkipMod);
+        assert_eq!(cfg.sweep_stride, 2);
+    }
+
+    #[test]
+    fn bad_labels_rejected() {
+        assert!(parse_traversal("sideways").is_err());
+        assert!(parse_mode("chaotic").is_err());
+        assert!(parse_pipeline("t9").is_err());
+    }
+
+    #[test]
+    fn bad_k_range_rejected() {
+        let mut cfg = ExperimentConfig::quick();
+        let doc = "[search]\nk_min = 20\nk_max = 10\n";
+        assert!(cfg.apply_toml(&parse_toml(doc).unwrap()).is_err());
+    }
+}

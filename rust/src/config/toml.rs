@@ -1,0 +1,297 @@
+//! Minimal TOML-subset parser (offline `toml` crate stand-in,
+//! DESIGN.md §2.3).
+//!
+//! Supported grammar — everything the `configs/*.toml` experiment files
+//! use: `[table.subtable]` headers, `key = value` with string / integer /
+//! float / bool / homogeneous scalar arrays, `#` comments, blank lines.
+//! Dotted keys in headers create nested tables; duplicate keys are an
+//! error (catches config typos early).
+
+use std::collections::BTreeMap;
+
+/// A TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+    Table(BTreeMap<String, TomlValue>),
+}
+
+impl TomlValue {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        match self {
+            TomlValue::Table(t) => t.get(key),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get_path("search.k_max")`.
+    pub fn get_path(&self, path: &str) -> Option<&TomlValue> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse a TOML-subset document into a root table.
+pub fn parse_toml(text: &str) -> Result<TomlValue, TomlError> {
+    let mut root = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let lno = lineno + 1;
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(TomlError {
+                    line: lno,
+                    msg: "unterminated table header".into(),
+                });
+            }
+            let inner = &line[1..line.len() - 1];
+            if inner.is_empty() {
+                return Err(TomlError {
+                    line: lno,
+                    msg: "empty table header".into(),
+                });
+            }
+            current_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            // Materialize the table path.
+            ensure_table(&mut root, &current_path, lno)?;
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(TomlError {
+                line: lno,
+                msg: format!("expected key = value, got '{line}'"),
+            });
+        };
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim(), lno)?;
+        let table = table_at(&mut root, &current_path);
+        if table.contains_key(&key) {
+            return Err(TomlError {
+                line: lno,
+                msg: format!("duplicate key '{key}'"),
+            });
+        }
+        table.insert(key, val);
+    }
+    Ok(TomlValue::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table(
+    root: &mut BTreeMap<String, TomlValue>,
+    path: &[String],
+    line: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| TomlValue::Table(BTreeMap::new()));
+        match entry {
+            TomlValue::Table(t) => cur = t,
+            _ => {
+                return Err(TomlError {
+                    line,
+                    msg: format!("'{part}' is not a table"),
+                })
+            }
+        }
+    }
+    Ok(())
+}
+
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, TomlValue>,
+    path: &[String],
+) -> &'a mut BTreeMap<String, TomlValue> {
+    let mut cur = root;
+    for part in path {
+        match cur
+            .get_mut(part)
+            .expect("table path materialized by ensure_table")
+        {
+            TomlValue::Table(t) => cur = t,
+            _ => unreachable!("ensure_table checked"),
+        }
+    }
+    cur
+}
+
+fn parse_value(s: &str, line: usize) -> Result<TomlValue, TomlError> {
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(TomlError {
+                line,
+                msg: "unterminated string".into(),
+            });
+        }
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(TomlError {
+                line,
+                msg: "unterminated array".into(),
+            });
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|it| parse_value(it.trim(), line))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(TomlError {
+        line,
+        msg: format!("cannot parse value '{s}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_experiment_config_shape() {
+        let doc = r#"
+# experiment config
+seed = 42
+[search]
+k_min = 2
+k_max = 30        # inclusive
+mode = "vanilla"
+select_threshold = 0.75
+[parallel]
+ranks = 4
+threads_per_rank = 2
+orders = ["pre", "post"]
+enabled = true
+"#;
+        let t = parse_toml(doc).unwrap();
+        assert_eq!(t.get("seed").unwrap().as_int(), Some(42));
+        assert_eq!(t.get_path("search.k_max").unwrap().as_int(), Some(30));
+        assert_eq!(
+            t.get_path("search.mode").unwrap().as_str(),
+            Some("vanilla")
+        );
+        assert_eq!(
+            t.get_path("search.select_threshold").unwrap().as_float(),
+            Some(0.75)
+        );
+        assert_eq!(t.get_path("parallel.enabled").unwrap().as_bool(), Some(true));
+        let orders = match t.get_path("parallel.orders").unwrap() {
+            TomlValue::Array(a) => a.len(),
+            _ => 0,
+        };
+        assert_eq!(orders, 2);
+    }
+
+    #[test]
+    fn nested_table_headers() {
+        let t = parse_toml("[a.b.c]\nx = 1\n").unwrap();
+        assert_eq!(t.get_path("a.b.c.x").unwrap().as_int(), Some(1));
+    }
+
+    #[test]
+    fn duplicate_key_is_error() {
+        assert!(parse_toml("x = 1\nx = 2\n").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_is_error_with_line() {
+        let err = parse_toml("ok = 1\nnot a kv\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn int_float_distinction() {
+        let t = parse_toml("i = 3\nf = 3.5\n").unwrap();
+        assert_eq!(t.get("i").unwrap().as_int(), Some(3));
+        assert_eq!(t.get("f").unwrap().as_int(), None);
+        assert_eq!(t.get("f").unwrap().as_float(), Some(3.5));
+        // Ints coerce to float on demand.
+        assert_eq!(t.get("i").unwrap().as_float(), Some(3.0));
+    }
+
+    #[test]
+    fn comments_inside_strings_kept() {
+        let t = parse_toml("s = \"a#b\"\n").unwrap();
+        assert_eq!(t.get("s").unwrap().as_str(), Some("a#b"));
+    }
+}

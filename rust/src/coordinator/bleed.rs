@@ -1,0 +1,356 @@
+//! Binary Bleed, single rank & thread (Alg 1) plus the Standard baseline.
+//!
+//! The serial engine follows the recursion of Alg 1: probe the (ceiling)
+//! midpoint, publish the score to the pruning state, then recurse into the
+//! **higher-k half first** and the lower half second ("the search
+//! continues in the direction of optimization"), skipping any subtree that
+//! the bounds have already pruned. Unlike textbook binary search it does
+//! not terminate on a hit — it *bleeds* into the remaining range until
+//! every k is either visited or pruned.
+
+use std::time::Duration;
+
+use super::policy::{Mode, SearchPolicy};
+use super::scorer::KScorer;
+use super::state::{Admission, Candidate, SharedState};
+use super::visit_log::{Decision, Visit, VisitLog};
+use crate::util::Stopwatch;
+
+/// Outcome of a search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// The selected k (None when no score passed the selection threshold).
+    pub k_optimal: Option<u32>,
+    /// Score at `k_optimal`.
+    pub score: Option<f64>,
+    /// Full visit log (evaluations + pruned skips).
+    pub log: VisitLog,
+    /// Size of the searched k space.
+    pub total_k: usize,
+    /// Wall-clock duration of the whole search.
+    pub elapsed: Duration,
+}
+
+impl SearchResult {
+    pub fn percent_visited(&self) -> f64 {
+        self.log.percent_visited(self.total_k)
+    }
+}
+
+/// Serial Binary Bleed over `ks` (must be ascending).
+///
+/// `Mode::Standard` falls back to the exhaustive linear baseline the paper
+/// compares against; Vanilla/Early-Stop run the pruning recursion.
+pub fn binary_bleed_serial(
+    ks: &[u32],
+    scorer: &dyn KScorer,
+    policy: SearchPolicy,
+) -> SearchResult {
+    debug_assert!(ks.windows(2).all(|w| w[0] < w[1]), "ks must be ascending");
+    let sw = Stopwatch::new();
+    let state = SharedState::new();
+    let mut log = VisitLog::new();
+    let mut seq = 0u64;
+
+    match policy.mode {
+        Mode::Standard => {
+            for &k in ks {
+                evaluate_one(k, scorer, &policy, &state, &mut log, &mut seq, &sw);
+            }
+        }
+        Mode::Vanilla | Mode::EarlyStop => {
+            if !ks.is_empty() {
+                recurse(ks, 0, ks.len() - 1, scorer, &policy, &state, &mut log, &mut seq, &sw);
+            }
+            // Account the never-evaluated k as pruned skips so the log
+            // partitions the whole search space.
+            let evaluated: std::collections::HashSet<u32> =
+                log.evaluated().into_iter().collect();
+            for &k in ks {
+                if !evaluated.contains(&k) {
+                    log.push(Visit {
+                        seq,
+                        k,
+                        score: f64::NAN,
+                        decision: Decision::PrunedSkip,
+                        rank: 0,
+                        thread: 0,
+                        at: sw.elapsed(),
+                    });
+                    seq += 1;
+                }
+            }
+        }
+    }
+
+    let best = state.best();
+    SearchResult {
+        k_optimal: best.map(|c| c.k),
+        score: best.map(|c| c.score),
+        log,
+        total_k: ks.len(),
+        elapsed: sw.elapsed(),
+    }
+}
+
+/// Alg 1 recursion body. Indices are inclusive.
+#[allow(clippy::too_many_arguments)]
+fn recurse(
+    ks: &[u32],
+    lo: usize,
+    hi: usize,
+    scorer: &dyn KScorer,
+    policy: &SearchPolicy,
+    state: &SharedState,
+    log: &mut VisitLog,
+    seq: &mut u64,
+    sw: &Stopwatch,
+) {
+    if lo > hi {
+        return;
+    }
+    // Subtree prune: if every k in [lo, hi] is outside the live bounds,
+    // skip the whole subtree (Alg 1 lines 16/18 bound checks).
+    let (floor, ceil) = state.bounds();
+    if let Some(f) = floor {
+        if ks[hi] <= f {
+            return;
+        }
+    }
+    if let Some(c) = ceil {
+        if ks[lo] >= c {
+            return;
+        }
+    }
+
+    // Ceiling midpoint — matches the Fig 1 tree shape.
+    let m = lo + (hi - lo + 1) / 2;
+    evaluate_one(ks[m], scorer, policy, state, log, seq, sw);
+
+    // Higher-k half first: for maximization the optimal is the largest
+    // selected k, so upward exploration maximizes subsequent pruning.
+    if m < hi {
+        recurse(ks, m + 1, hi, scorer, policy, state, log, seq, sw);
+    }
+    if m > lo {
+        recurse(ks, lo, m - 1, scorer, policy, state, log, seq, sw);
+    }
+}
+
+/// Admission check + evaluation + publication for one k.
+#[allow(clippy::too_many_arguments)]
+fn evaluate_one(
+    k: u32,
+    scorer: &dyn KScorer,
+    policy: &SearchPolicy,
+    state: &SharedState,
+    log: &mut VisitLog,
+    seq: &mut u64,
+    sw: &Stopwatch,
+) {
+    match state.admit(k, policy) {
+        Admission::Admit => {
+            let score = scorer.score(k);
+            let selected = policy.selects(score);
+            state.publish(k, score, policy);
+            log.push(Visit {
+                seq: *seq,
+                k,
+                score,
+                decision: if selected {
+                    Decision::Selected
+                } else {
+                    Decision::Rejected
+                },
+                rank: 0,
+                thread: 0,
+                at: sw.elapsed(),
+            });
+        }
+        Admission::PrunedBySelect | Admission::PrunedByStop => {
+            log.push(Visit {
+                seq: *seq,
+                k,
+                score: f64::NAN,
+                decision: Decision::PrunedSkip,
+                rank: 0,
+                thread: 0,
+                at: sw.elapsed(),
+            });
+        }
+        Admission::AlreadyClaimed => {}
+    }
+    *seq += 1;
+}
+
+/// Standard linear baseline — convenience wrapper.
+pub fn standard_search(
+    ks: &[u32],
+    scorer: &dyn KScorer,
+    mut policy: SearchPolicy,
+) -> SearchResult {
+    policy.mode = Mode::Standard;
+    binary_bleed_serial(ks, scorer, policy)
+}
+
+/// Re-derive the optimal from a finished log (used by the multi-rank path
+/// and tests): largest selected k under the policy.
+pub fn optimal_from_log(log: &VisitLog, policy: &SearchPolicy) -> Option<Candidate> {
+    log.visits
+        .iter()
+        .filter(|v| v.decision == Decision::Selected && policy.selects(v.score))
+        .max_by_key(|v| v.k)
+        .map(|v| Candidate {
+            k: v.k,
+            score: v.score,
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{Direction, Thresholds};
+    use crate::coordinator::scorer::CountingScorer;
+
+    fn ks() -> Vec<u32> {
+        (2..=30).collect()
+    }
+
+    fn square_wave(k_true: u32) -> impl Fn(u32) -> f64 {
+        move |k| if k <= k_true { 0.95 } else { 0.05 }
+    }
+
+    fn pol(mode: Mode) -> SearchPolicy {
+        SearchPolicy::maximize(
+            mode,
+            Thresholds {
+                select: 0.75,
+                stop: 0.2,
+            },
+        )
+    }
+
+    #[test]
+    fn standard_visits_everything() {
+        let s = CountingScorer::new(square_wave(15));
+        let r = standard_search(&ks(), &s, pol(Mode::Standard));
+        assert_eq!(s.evaluations(), 29);
+        assert_eq!(r.k_optimal, Some(15));
+        assert!((r.percent_visited() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vanilla_finds_ktrue_with_fewer_visits() {
+        for k_true in 2..=30 {
+            let s = CountingScorer::new(square_wave(k_true));
+            let r = binary_bleed_serial(&ks(), &s, pol(Mode::Vanilla));
+            assert_eq!(r.k_optimal, Some(k_true), "k_true={k_true}");
+            assert!(
+                s.evaluations() <= 29,
+                "never more than linear (k_true={k_true})"
+            );
+        }
+    }
+
+    #[test]
+    fn early_stop_visits_at_most_vanilla() {
+        for k_true in 2..=30 {
+            let sv = CountingScorer::new(square_wave(k_true));
+            let se = CountingScorer::new(square_wave(k_true));
+            let rv = binary_bleed_serial(&ks(), &sv, pol(Mode::Vanilla));
+            let re = binary_bleed_serial(&ks(), &se, pol(Mode::EarlyStop));
+            assert_eq!(rv.k_optimal, re.k_optimal, "k_true={k_true}");
+            assert!(
+                se.evaluations() <= sv.evaluations(),
+                "k_true={k_true}: ES {} > V {}",
+                se.evaluations(),
+                sv.evaluations()
+            );
+        }
+    }
+
+    #[test]
+    fn fig4_multiple_threshold_crossings_selects_24() {
+        // Fig 4: K = {2..30}, scores cross the selection threshold at
+        // {7, 8, 10, 24}; the search must settle on 24.
+        let passing = [7u32, 8, 10, 24];
+        let scorer = move |k: u32| {
+            if passing.contains(&k) {
+                0.9
+            } else {
+                0.3
+            }
+        };
+        let r = binary_bleed_serial(&ks(), &scorer, pol(Mode::Vanilla));
+        assert_eq!(r.k_optimal, Some(24));
+        assert_eq!(r.score, Some(0.9));
+    }
+
+    #[test]
+    fn minimization_davies_bouldin_profile() {
+        // DB is minimized: low score is good. Square wave inverted.
+        let k_true = 12u32;
+        let scorer = move |k: u32| if k <= k_true { 0.3 } else { 2.0 };
+        let p = SearchPolicy::minimize(
+            Mode::Vanilla,
+            Thresholds {
+                select: 0.5,
+                stop: 3.0,
+            },
+        );
+        let r = binary_bleed_serial(&ks(), &scorer, p);
+        assert_eq!(r.k_optimal, Some(12));
+    }
+
+    #[test]
+    fn minimization_early_stop() {
+        let k_true = 9u32;
+        // After k_true, score explodes above the stop bound.
+        let scorer = move |k: u32| if k <= k_true { 0.3 } else { 4.0 };
+        let p = SearchPolicy::new(
+            Mode::EarlyStop,
+            Direction::Minimize,
+            Thresholds {
+                select: 0.5,
+                stop: 3.5,
+            },
+        );
+        let s = CountingScorer::new(scorer);
+        let r = binary_bleed_serial(&ks(), &s, p);
+        assert_eq!(r.k_optimal, Some(9));
+        assert!(s.evaluations() < 29);
+    }
+
+    #[test]
+    fn no_k_passes_threshold_returns_none() {
+        let scorer = |_k: u32| 0.1;
+        let r = binary_bleed_serial(&ks(), &scorer, pol(Mode::Vanilla));
+        assert_eq!(r.k_optimal, None);
+        assert_eq!(r.score, None);
+    }
+
+    #[test]
+    fn log_partitions_search_space() {
+        let r = binary_bleed_serial(&ks(), &square_wave(20), pol(Mode::EarlyStop));
+        let mut all = r.log.evaluated();
+        all.extend(r.log.pruned());
+        all.sort_unstable();
+        assert_eq!(all, ks());
+    }
+
+    #[test]
+    fn empty_and_singleton_k_spaces() {
+        let scorer = |_k: u32| 0.9;
+        let r = binary_bleed_serial(&[], &scorer, pol(Mode::Vanilla));
+        assert_eq!(r.k_optimal, None);
+        let r = binary_bleed_serial(&[5], &scorer, pol(Mode::Vanilla));
+        assert_eq!(r.k_optimal, Some(5));
+    }
+
+    #[test]
+    fn optimal_from_log_matches_result() {
+        let r = binary_bleed_serial(&ks(), &square_wave(17), pol(Mode::Vanilla));
+        let c = optimal_from_log(&r.log, &pol(Mode::Vanilla)).unwrap();
+        assert_eq!(Some(c.k), r.k_optimal);
+    }
+}

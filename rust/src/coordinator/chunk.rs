@@ -1,0 +1,208 @@
+//! Chunking k values across resources (Alg 2, Table II).
+//!
+//! Two strategies:
+//! * `Contiguous` — split the list into `R` consecutive runs (the naive
+//!   baseline of Table II's T1/T3, shown by the paper to idle resources);
+//! * `SkipMod` — Alg 2: element `i` goes to resource `i mod R`, preserving
+//!   sequence order inside each chunk. On a sorted list this deals every
+//!   resource a spread of small and large k, so a single selection prunes
+//!   work from *every* resource.
+//!
+//! `Pipeline` composes chunking and traversal-sort in the four orders the
+//! paper enumerates (T1–T4) for the Table II ablation.
+
+use super::traversal::Traversal;
+
+/// How to split the k list across resources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkStrategy {
+    /// T1/T3: consecutive runs, sizes differing by at most one.
+    Contiguous,
+    /// T2/T4 (Alg 2): position-mod-R dealing.
+    SkipMod,
+}
+
+impl ChunkStrategy {
+    pub fn label(self) -> &'static str {
+        match self {
+            ChunkStrategy::Contiguous => "contiguous",
+            ChunkStrategy::SkipMod => "skip-mod",
+        }
+    }
+
+    /// Partition `ks` into `resources` chunks.
+    pub fn chunk(self, ks: &[u32], resources: usize) -> Vec<Vec<u32>> {
+        assert!(resources > 0, "need at least one resource");
+        let mut chunks = vec![Vec::new(); resources];
+        match self {
+            ChunkStrategy::SkipMod => {
+                for (i, &k) in ks.iter().enumerate() {
+                    chunks[i % resources].push(k);
+                }
+            }
+            ChunkStrategy::Contiguous => {
+                let n = ks.len();
+                let base = n / resources;
+                let extra = n % resources;
+                let mut at = 0;
+                for (r, chunk) in chunks.iter_mut().enumerate() {
+                    let len = base + usize::from(r < extra);
+                    chunk.extend_from_slice(&ks[at..at + len]);
+                    at += len;
+                }
+            }
+        }
+        chunks
+    }
+}
+
+/// The four chunk/sort composition orders of Table II.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pipeline {
+    /// T1: traversal-sort the full list, then contiguous-chunk.
+    SortThenContiguous,
+    /// T2: traversal-sort the full list, then Alg 2 skip-mod chunk.
+    SortThenSkipMod,
+    /// T3: contiguous-chunk, then traversal-sort each chunk.
+    ContiguousThenSort,
+    /// T4: Alg 2 skip-mod chunk, then traversal-sort each chunk
+    /// (the paper's recommended composition).
+    SkipModThenSort,
+}
+
+impl Pipeline {
+    pub const ALL: [Pipeline; 4] = [
+        Pipeline::SortThenContiguous,
+        Pipeline::SortThenSkipMod,
+        Pipeline::ContiguousThenSort,
+        Pipeline::SkipModThenSort,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Pipeline::SortThenContiguous => "T1 sort->contiguous",
+            Pipeline::SortThenSkipMod => "T2 sort->skip-mod",
+            Pipeline::ContiguousThenSort => "T3 contiguous->sort",
+            Pipeline::SkipModThenSort => "T4 skip-mod->sort",
+        }
+    }
+
+    /// Produce the per-resource work lists for `ks` (ascending).
+    pub fn split(self, ks: &[u32], resources: usize, order: Traversal) -> Vec<Vec<u32>> {
+        match self {
+            Pipeline::SortThenContiguous => {
+                ChunkStrategy::Contiguous.chunk(&order.sort(ks), resources)
+            }
+            Pipeline::SortThenSkipMod => {
+                ChunkStrategy::SkipMod.chunk(&order.sort(ks), resources)
+            }
+            Pipeline::ContiguousThenSort => ChunkStrategy::Contiguous
+                .chunk(ks, resources)
+                .into_iter()
+                .map(|c| order.sort(&c))
+                .collect(),
+            Pipeline::SkipModThenSort => ChunkStrategy::SkipMod
+                .chunk(ks, resources)
+                .into_iter()
+                .map(|c| order.sort(&c))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k11() -> Vec<u32> {
+        (1..=11).collect()
+    }
+
+    #[test]
+    fn skip_mod_matches_alg2_example() {
+        // Table II T2/T4 input row: [1,3,5,7,9,11] [2,4,6,8,10].
+        let chunks = ChunkStrategy::SkipMod.chunk(&k11(), 2);
+        assert_eq!(chunks[0], vec![1, 3, 5, 7, 9, 11]);
+        assert_eq!(chunks[1], vec![2, 4, 6, 8, 10]);
+    }
+
+    #[test]
+    fn contiguous_matches_table2_example() {
+        let chunks = ChunkStrategy::Contiguous.chunk(&k11(), 2);
+        assert_eq!(chunks[0], vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(chunks[1], vec![7, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn t1_rows() {
+        // Paper Table II T1 Pre: [6,3,2,1,5,4] [9,8,7,11,10].
+        let got = Pipeline::SortThenContiguous.split(&k11(), 2, Traversal::PreOrder);
+        assert_eq!(got[0], vec![6, 3, 2, 1, 5, 4]);
+        assert_eq!(got[1], vec![9, 8, 7, 11, 10]);
+    }
+
+    #[test]
+    fn t2_rows() {
+        // Paper Table II T2 prints value-parity chunks ([3,1,5,9,7,11]
+        // [6,2,4,8,10]) which contradicts Alg 2's own position loop
+        // (`for k = 0 to Ks-1: resource_id <- k mod R`). We implement
+        // Alg 2 as written — deal by *position* in the input sequence,
+        // which stays balanced for arbitrary (sparse) K lists. Pinned
+        // canonical rows below; discrepancy documented in DESIGN.md §2.4.
+        // pre-order full list: [6,3,2,1,5,4,9,8,7,11,10]
+        let got = Pipeline::SortThenSkipMod.split(&k11(), 2, Traversal::PreOrder);
+        assert_eq!(got[0], vec![6, 2, 5, 9, 7, 10]);
+        assert_eq!(got[1], vec![3, 1, 4, 8, 11]);
+        // post-order full list: [1,2,4,5,3,7,8,10,11,9,6]
+        let post = Pipeline::SortThenSkipMod.split(&k11(), 2, Traversal::PostOrder);
+        assert_eq!(post[0], vec![1, 4, 3, 8, 11, 6]);
+        assert_eq!(post[1], vec![2, 5, 7, 10, 9]);
+    }
+
+    #[test]
+    fn t3_rows() {
+        // Paper Table II T3 Pre: [4,2,1,3,6,5] [9,8,7,11,10].
+        let got = Pipeline::ContiguousThenSort.split(&k11(), 2, Traversal::PreOrder);
+        assert_eq!(got[0], vec![4, 2, 1, 3, 6, 5]);
+        assert_eq!(got[1], vec![9, 8, 7, 11, 10]);
+    }
+
+    #[test]
+    fn t4_rows() {
+        // Paper Table II T4 Pre: [7,3,1,5,11,9] [6,4,2,10,8].
+        let got = Pipeline::SkipModThenSort.split(&k11(), 2, Traversal::PreOrder);
+        assert_eq!(got[0], vec![7, 3, 1, 5, 11, 9]);
+        assert_eq!(got[1], vec![6, 4, 2, 10, 8]);
+        // T4 Post: [1,5,3,9,11,7] [2,4,8,10,6] (paper prints "9" in the
+        // second chunk — a typo, 9 lives in chunk 0; see DESIGN.md §2.4).
+        let post = Pipeline::SkipModThenSort.split(&k11(), 2, Traversal::PostOrder);
+        assert_eq!(post[0], vec![1, 5, 3, 9, 11, 7]);
+        assert_eq!(post[1], vec![2, 4, 8, 10, 6]);
+    }
+
+    #[test]
+    fn chunks_partition_input() {
+        for strat in [ChunkStrategy::Contiguous, ChunkStrategy::SkipMod] {
+            for r in 1..=7 {
+                let ks: Vec<u32> = (2..=30).collect();
+                let chunks = strat.chunk(&ks, r);
+                assert_eq!(chunks.len(), r);
+                let mut all: Vec<u32> = chunks.concat();
+                all.sort_unstable();
+                assert_eq!(all, ks, "{strat:?} r={r}");
+                // Balanced within one element.
+                let sizes: Vec<usize> = chunks.iter().map(Vec::len).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "{strat:?} r={r} sizes {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_resources_than_ks_leaves_empty_chunks() {
+        let chunks = ChunkStrategy::SkipMod.chunk(&[5, 6], 4);
+        assert_eq!(chunks[0], vec![5]);
+        assert_eq!(chunks[1], vec![6]);
+        assert!(chunks[2].is_empty() && chunks[3].is_empty());
+    }
+}

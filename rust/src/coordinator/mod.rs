@@ -1,0 +1,32 @@
+//! L3 coordinator — the paper's contribution (§III).
+//!
+//! * [`bleed`] — Alg 1: serial Binary Bleed (Vanilla / Early-Stop) plus
+//!   the exhaustive Standard baseline.
+//! * [`traversal`] — Fig 1: pre/in/post-order BST serialization of K.
+//! * [`chunk`] — Alg 2 + Table II: dealing K across resources.
+//! * [`state`] — the shared pruning cache (k_min/k_max/optimal).
+//! * [`rank`] — BroadcastK / ReceiveKCheck over channel mailboxes.
+//! * [`scheduler`] — Alg 3+4: multi-rank multi-thread executors
+//!   (real threads and the deterministic lockstep simulation).
+//! * [`visit_log`] — the per-k decision record every figure derives from.
+//! * [`scorer`] — the `S(f(k, D))` abstraction the engines drive.
+
+pub mod bleed;
+pub mod chunk;
+pub mod policy;
+pub mod rank;
+pub mod scheduler;
+pub mod scorer;
+pub mod state;
+pub mod traversal;
+pub mod visit_log;
+
+pub use bleed::{binary_bleed_serial, optimal_from_log, standard_search, SearchResult};
+pub use chunk::{ChunkStrategy, Pipeline};
+pub use policy::{Direction, Mode, SearchPolicy, Thresholds};
+pub use rank::{Broadcast, RankComm};
+pub use scheduler::{binary_bleed_lockstep, binary_bleed_parallel, ParallelConfig};
+pub use scorer::{CountingScorer, KScorer};
+pub use state::{Admission, Candidate, SharedState};
+pub use traversal::Traversal;
+pub use visit_log::{Decision, Visit, VisitLog};

@@ -1,0 +1,163 @@
+//! Search policy: optimization direction, mode and thresholds (§III).
+//!
+//! The paper's selection rule (maximization):
+//!   k_optimal = max { k ∈ K : S(f(k)) > T_select }
+//! with the Vanilla prune "all k < k' once S(k') ≥ T_select" and the
+//! Early-Stop prune "all k > k' once S(k') ≤ T_stop" (§III-C). For
+//! minimization tasks (Davies-Bouldin) every comparison flips.
+
+/// Whether the scoring metric is maximized (silhouette) or minimized
+/// (Davies-Bouldin).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Maximize,
+    Minimize,
+}
+
+/// Search mode (§III: "Binary Bleed Vanilla", "Binary Bleed Early Stop",
+/// "Standard" = exhaustive linear grid search).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Exhaustive linear visit of every k (the paper's baseline).
+    Standard,
+    /// Binary-search traversal + lower-side pruning.
+    Vanilla,
+    /// Vanilla + upper-side pruning on the stop threshold.
+    EarlyStop,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 3] = [Mode::Standard, Mode::Vanilla, Mode::EarlyStop];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Mode::Standard => "standard",
+            Mode::Vanilla => "vanilla",
+            Mode::EarlyStop => "early-stop",
+        }
+    }
+}
+
+/// Select / stop thresholds (`T_select_k`, `k_stop_threshold` in Alg 1).
+#[derive(Debug, Clone, Copy)]
+pub struct Thresholds {
+    /// Score passing this selects k (and prunes the "worse-k" side).
+    pub select: f64,
+    /// Early-Stop only: score crossing this prunes the "better-k" side.
+    pub stop: f64,
+}
+
+impl Thresholds {
+    /// The paper's NMFk defaults: high silhouette selects, collapse stops.
+    pub fn silhouette_defaults() -> Self {
+        Self {
+            select: 0.75,
+            stop: 0.2,
+        }
+    }
+}
+
+/// Full policy driving the pruning decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchPolicy {
+    pub mode: Mode,
+    pub direction: Direction,
+    pub thresholds: Thresholds,
+}
+
+impl SearchPolicy {
+    pub fn new(mode: Mode, direction: Direction, thresholds: Thresholds) -> Self {
+        Self {
+            mode,
+            direction,
+            thresholds,
+        }
+    }
+
+    pub fn maximize(mode: Mode, thresholds: Thresholds) -> Self {
+        Self::new(mode, Direction::Maximize, thresholds)
+    }
+
+    pub fn minimize(mode: Mode, thresholds: Thresholds) -> Self {
+        Self::new(mode, Direction::Minimize, thresholds)
+    }
+
+    /// Does this score select its k (pass the selection threshold)?
+    pub fn selects(&self, score: f64) -> bool {
+        match self.direction {
+            Direction::Maximize => score >= self.thresholds.select,
+            Direction::Minimize => score <= self.thresholds.select,
+        }
+    }
+
+    /// Does this score trip the Early-Stop bound? Never in other modes.
+    pub fn stops(&self, score: f64) -> bool {
+        if self.mode != Mode::EarlyStop {
+            return false;
+        }
+        match self.direction {
+            Direction::Maximize => score <= self.thresholds.stop,
+            Direction::Minimize => score >= self.thresholds.stop,
+        }
+    }
+
+    /// Vanilla/Early-Stop prune on selection; Standard never prunes.
+    pub fn prunes_on_select(&self) -> bool {
+        !matches!(self.mode, Mode::Standard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pol(mode: Mode, dir: Direction) -> SearchPolicy {
+        SearchPolicy::new(
+            mode,
+            dir,
+            Thresholds {
+                select: 0.7,
+                stop: 0.2,
+            },
+        )
+    }
+
+    #[test]
+    fn maximize_selects_above_threshold() {
+        let p = pol(Mode::Vanilla, Direction::Maximize);
+        assert!(p.selects(0.7));
+        assert!(p.selects(0.9));
+        assert!(!p.selects(0.69));
+    }
+
+    #[test]
+    fn minimize_selects_below_threshold() {
+        let p = pol(Mode::Vanilla, Direction::Minimize);
+        assert!(p.selects(0.7));
+        assert!(p.selects(0.1));
+        assert!(!p.selects(0.71));
+    }
+
+    #[test]
+    fn stop_only_in_early_stop_mode() {
+        let v = pol(Mode::Vanilla, Direction::Maximize);
+        let e = pol(Mode::EarlyStop, Direction::Maximize);
+        assert!(!v.stops(0.05));
+        assert!(e.stops(0.05));
+        assert!(!e.stops(0.5));
+    }
+
+    #[test]
+    fn minimize_stop_flips() {
+        let mut e = pol(Mode::EarlyStop, Direction::Minimize);
+        e.thresholds.stop = 3.0;
+        assert!(e.stops(3.5));
+        assert!(!e.stops(2.0));
+    }
+
+    #[test]
+    fn standard_never_prunes() {
+        assert!(!pol(Mode::Standard, Direction::Maximize).prunes_on_select());
+        assert!(pol(Mode::Vanilla, Direction::Maximize).prunes_on_select());
+    }
+}

@@ -1,0 +1,118 @@
+//! Rank network emulation: the message types and mailboxes with which
+//! simulated MPI ranks propagate pruning decisions (Alg 3's BroadcastK /
+//! ReceiveKCheck, Alg 4's report flag).
+//!
+//! DESIGN.md §2.3: ranks are OS threads and the interconnect is a set of
+//! mpsc channels — the paper's claims concern *which k are pruned when
+//! decisions arrive asynchronously*, which channels exercise faithfully.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Mutex;
+
+use super::state::Candidate;
+
+/// A BroadcastK payload: whatever bounds/optimal the sender moved.
+#[derive(Debug, Clone, Copy)]
+pub struct Broadcast {
+    pub from: usize,
+    pub floor: Option<u32>,
+    pub ceil: Option<u32>,
+    pub best: Option<Candidate>,
+}
+
+/// One rank's mailbox plus handles to every peer.
+pub struct RankComm {
+    pub rank_id: usize,
+    inbox: Mutex<Receiver<Broadcast>>,
+    peers: Vec<Sender<Broadcast>>,
+}
+
+impl RankComm {
+    /// Build a fully-connected network of `n` ranks.
+    pub fn network(n: usize) -> Vec<RankComm> {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank_id, rx)| RankComm {
+                rank_id,
+                inbox: Mutex::new(rx),
+                // Clone a sender for every peer (including self; self-sends
+                // are filtered in `broadcast`).
+                peers: senders.clone(),
+            })
+            .collect()
+    }
+
+    /// BroadcastK (Alg 3 lines 17–22): send to every rank but self.
+    pub fn broadcast(&self, msg: Broadcast) {
+        for (i, peer) in self.peers.iter().enumerate() {
+            if i != self.rank_id {
+                // A disconnected peer (finished rank) is not an error.
+                let _ = peer.send(msg);
+            }
+        }
+    }
+
+    /// ReceiveKCheck (Alg 3 lines 23–30): drain pending messages without
+    /// blocking; returns everything that arrived since the last check.
+    pub fn drain(&self) -> Vec<Broadcast> {
+        let rx = self.inbox.lock().unwrap();
+        let mut out = Vec::new();
+        loop {
+            match rx.try_recv() {
+                Ok(m) => out.push(m),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_reaches_all_other_ranks() {
+        let net = RankComm::network(3);
+        net[0].broadcast(Broadcast {
+            from: 0,
+            floor: Some(7),
+            ceil: None,
+            best: Some(Candidate { k: 7, score: 0.9 }),
+        });
+        assert!(net[0].drain().is_empty(), "no self-delivery");
+        for r in 1..3 {
+            let got = net[r].drain();
+            assert_eq!(got.len(), 1);
+            assert_eq!(got[0].floor, Some(7));
+            assert_eq!(got[0].from, 0);
+        }
+    }
+
+    #[test]
+    fn drain_is_nonblocking_and_fifo() {
+        let net = RankComm::network(2);
+        assert!(net[1].drain().is_empty());
+        for k in [3u32, 5, 9] {
+            net[0].broadcast(Broadcast {
+                from: 0,
+                floor: Some(k),
+                ceil: None,
+                best: None,
+            });
+        }
+        let got = net[1].drain();
+        assert_eq!(
+            got.iter().map(|b| b.floor.unwrap()).collect::<Vec<_>>(),
+            vec![3, 5, 9]
+        );
+    }
+}

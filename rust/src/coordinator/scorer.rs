@@ -1,0 +1,78 @@
+//! The scorer abstraction: `S(f(k, D))` — one model computation plus its
+//! scoring metric, evaluated at a single k.
+//!
+//! Implementations: the HLO-backed evaluators in [`crate::model`] (NMFk,
+//! K-means, RESCALk), the pure-Rust references, and the synthetic score
+//! profiles used by the coordinator tests and the distributed simulator.
+
+/// One `model(data, k) -> scorer -> f64` evaluation. `Sync` because the
+/// multi-rank scheduler shares one scorer across worker threads.
+pub trait KScorer: Sync {
+    /// Evaluate the model at `k` and return the score.
+    fn score(&self, k: u32) -> f64;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &str {
+        "scorer"
+    }
+}
+
+impl<F> KScorer for F
+where
+    F: Fn(u32) -> f64 + Sync,
+{
+    fn score(&self, k: u32) -> f64 {
+        self(k)
+    }
+}
+
+/// Wraps a scorer and counts evaluations (used by tests and benches to
+/// assert visit counts independently of the VisitLog).
+pub struct CountingScorer<S> {
+    inner: S,
+    count: std::sync::atomic::AtomicU64,
+}
+
+impl<S: KScorer> CountingScorer<S> {
+    pub fn new(inner: S) -> Self {
+        Self {
+            inner,
+            count: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn evaluations(&self) -> u64 {
+        self.count.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+impl<S: KScorer> KScorer for CountingScorer<S> {
+    fn score(&self, k: u32) -> f64 {
+        self.count
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.inner.score(k)
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closures_are_scorers() {
+        let s = |k: u32| k as f64 * 0.1;
+        assert!((s.score(5) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counting_wrapper_counts() {
+        let c = CountingScorer::new(|k: u32| k as f64);
+        c.score(1);
+        c.score(2);
+        assert_eq!(c.evaluations(), 2);
+    }
+}

@@ -1,0 +1,256 @@
+//! Shared pruning state — the paper's "distributed cache such as redis"
+//! (§III-B) holding `k_min`, `k_max`, the candidate optimal and the list
+//! of visited k, shared by every thread of every rank.
+//!
+//! A single mutex-guarded record gives the same consistency model as the
+//! paper's central cache: one authoritative copy, atomic read-modify-write
+//! per decision. Workers take the lock twice per k — once to claim the
+//! visit, once to publish the score — exactly the Lock/Unlock pairs of
+//! Alg 4.
+
+use std::sync::Mutex;
+
+use super::policy::{Direction, SearchPolicy};
+
+/// The candidate optimal: k and its score.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub k: u32,
+    pub score: f64,
+}
+
+#[derive(Debug, Default, Clone)]
+struct Inner {
+    /// Exclusive lower prune bound: k <= floor are pruned (Maximize).
+    floor: Option<u32>,
+    /// Exclusive upper prune bound: k >= ceil are pruned (Early-Stop, Maximize).
+    ceil: Option<u32>,
+    best: Option<Candidate>,
+    /// k values already claimed (visited or in flight) — dedup across
+    /// threads/ranks so no k is evaluated twice.
+    claimed: Vec<u32>,
+}
+
+/// Why a k was (not) admitted for evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Evaluate it.
+    Admit,
+    /// Pruned by the selection bound (a better k already selected).
+    PrunedBySelect,
+    /// Pruned by the Early-Stop bound.
+    PrunedByStop,
+    /// Another worker already claimed this k.
+    AlreadyClaimed,
+}
+
+/// Process-wide shared search state.
+#[derive(Debug, Default)]
+pub struct SharedState {
+    inner: Mutex<Inner>,
+}
+
+impl SharedState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Alg 4 lines 4–17: read the global bounds, decide whether `k` still
+    /// needs computing, and claim it if so.
+    pub fn admit(&self, k: u32, policy: &SearchPolicy) -> Admission {
+        let mut st = self.inner.lock().unwrap();
+        if let Some(f) = st.floor {
+            let pruned = match policy.direction {
+                Direction::Maximize => k <= f,
+                Direction::Minimize => k <= f, // floor is always the "small-k" bound
+            };
+            if pruned {
+                return Admission::PrunedBySelect;
+            }
+        }
+        if let Some(c) = st.ceil {
+            if k >= c {
+                return Admission::PrunedByStop;
+            }
+        }
+        if st.claimed.contains(&k) {
+            return Admission::AlreadyClaimed;
+        }
+        st.claimed.push(k);
+        Admission::Admit
+    }
+
+    /// Alg 4 lines 18–25: publish a score, update the candidate optimal
+    /// and move the prune bounds. Returns the bound movement so the caller
+    /// can broadcast it (BroadcastK).
+    pub fn publish(&self, k: u32, score: f64, policy: &SearchPolicy) -> Publication {
+        let mut st = self.inner.lock().unwrap();
+        let mut publication = Publication::default();
+        if policy.selects(score) {
+            let better = match st.best {
+                // The paper's rule: among selected k, the *largest* wins
+                // (k_optimal = max{k : S(k) > T}).
+                Some(b) => k > b.k,
+                None => true,
+            };
+            if better {
+                st.best = Some(Candidate { k, score });
+                publication.new_best = st.best;
+            }
+            if policy.prunes_on_select() {
+                let moved = match st.floor {
+                    Some(f) => k > f,
+                    None => true,
+                };
+                if moved {
+                    st.floor = Some(k);
+                    publication.new_floor = Some(k);
+                }
+            }
+        }
+        if policy.stops(score) {
+            let moved = match st.ceil {
+                Some(c) => k < c,
+                None => true,
+            };
+            if moved {
+                st.ceil = Some(k);
+                publication.new_ceil = Some(k);
+            }
+        }
+        publication
+    }
+
+    /// Merge a bound update received from another rank (ReceiveKCheck).
+    pub fn merge_remote(&self, floor: Option<u32>, ceil: Option<u32>, best: Option<Candidate>) {
+        let mut st = self.inner.lock().unwrap();
+        if let Some(f) = floor {
+            if st.floor.map_or(true, |cur| f > cur) {
+                st.floor = Some(f);
+            }
+        }
+        if let Some(c) = ceil {
+            if st.ceil.map_or(true, |cur| c < cur) {
+                st.ceil = Some(c);
+            }
+        }
+        if let Some(b) = best {
+            if st.best.map_or(true, |cur| b.k > cur.k) {
+                st.best = Some(b);
+            }
+        }
+    }
+
+    pub fn best(&self) -> Option<Candidate> {
+        self.inner.lock().unwrap().best
+    }
+
+    pub fn bounds(&self) -> (Option<u32>, Option<u32>) {
+        let st = self.inner.lock().unwrap();
+        (st.floor, st.ceil)
+    }
+}
+
+/// What `publish` changed — the content of a BroadcastK message.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Publication {
+    pub new_floor: Option<u32>,
+    pub new_ceil: Option<u32>,
+    pub new_best: Option<Candidate>,
+}
+
+impl Publication {
+    pub fn is_empty(&self) -> bool {
+        self.new_floor.is_none() && self.new_ceil.is_none() && self.new_best.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{Mode, Thresholds};
+
+    fn policy(mode: Mode) -> SearchPolicy {
+        SearchPolicy::maximize(
+            mode,
+            Thresholds {
+                select: 0.7,
+                stop: 0.2,
+            },
+        )
+    }
+
+    #[test]
+    fn select_prunes_lower_k() {
+        let st = SharedState::new();
+        let p = policy(Mode::Vanilla);
+        assert_eq!(st.admit(8, &p), Admission::Admit);
+        let pb = st.publish(8, 0.9, &p);
+        assert_eq!(pb.new_floor, Some(8));
+        assert_eq!(st.admit(5, &p), Admission::PrunedBySelect);
+        assert_eq!(st.admit(8, &p), Admission::PrunedBySelect); // k == floor
+        assert_eq!(st.admit(9, &p), Admission::Admit);
+    }
+
+    #[test]
+    fn early_stop_prunes_upper_k() {
+        let st = SharedState::new();
+        let p = policy(Mode::EarlyStop);
+        assert_eq!(st.admit(20, &p), Admission::Admit);
+        let pb = st.publish(20, 0.05, &p);
+        assert_eq!(pb.new_ceil, Some(20));
+        assert_eq!(st.admit(25, &p), Admission::PrunedByStop);
+        assert_eq!(st.admit(19, &p), Admission::Admit);
+    }
+
+    #[test]
+    fn vanilla_never_sets_ceiling() {
+        let st = SharedState::new();
+        let p = policy(Mode::Vanilla);
+        st.admit(20, &p);
+        let pb = st.publish(20, 0.01, &p);
+        assert!(pb.new_ceil.is_none());
+        assert_eq!(st.admit(25, &p), Admission::Admit);
+    }
+
+    #[test]
+    fn best_is_largest_selected_k() {
+        let st = SharedState::new();
+        let p = policy(Mode::Vanilla);
+        for (k, s) in [(10u32, 0.8), (24, 0.75), (12, 0.95)] {
+            st.admit(k, &p);
+            st.publish(k, s, &p);
+        }
+        // k=12 scores higher than k=24 but 24 is the larger selected k.
+        assert_eq!(st.best().unwrap().k, 24);
+    }
+
+    #[test]
+    fn duplicate_claims_rejected() {
+        let st = SharedState::new();
+        let p = policy(Mode::Vanilla);
+        assert_eq!(st.admit(9, &p), Admission::Admit);
+        assert_eq!(st.admit(9, &p), Admission::AlreadyClaimed);
+    }
+
+    #[test]
+    fn merge_remote_tightens_only() {
+        let st = SharedState::new();
+        st.merge_remote(Some(5), Some(20), Some(Candidate { k: 5, score: 0.8 }));
+        st.merge_remote(Some(3), Some(25), Some(Candidate { k: 4, score: 0.9 }));
+        let (f, c) = st.bounds();
+        assert_eq!(f, Some(5));
+        assert_eq!(c, Some(20));
+        assert_eq!(st.best().unwrap().k, 5);
+    }
+
+    #[test]
+    fn rejected_scores_do_not_move_bounds() {
+        let st = SharedState::new();
+        let p = policy(Mode::Vanilla);
+        st.admit(14, &p);
+        let pb = st.publish(14, 0.3, &p);
+        assert!(pb.is_empty());
+        assert_eq!(st.bounds(), (None, None));
+    }
+}

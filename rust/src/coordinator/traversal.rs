@@ -1,0 +1,154 @@
+//! Traversal-order sorting of the k list (Fig 1, §III-B).
+//!
+//! The parallel Binary Bleed replaces Alg 1's recursion with a *k-sort*:
+//! the sorted k values are arranged as the implicit balanced BST the
+//! binary search would build, then serialized in pre-, in- or post-order.
+//! Workers consume the serialized list front-to-back, so pre-order visits
+//! the would-be binary-search midpoints first — maximizing early pruning.
+//!
+//! The midpoint convention is `mid = lo + (hi - lo + 1) / 2` (ceiling);
+//! this exactly reproduces the paper's Fig 1 orderings:
+//!   pre  [1..11] -> 6 3 2 1 5 4 9 8 7 11 10
+//!   post [1..11] -> 1 2 4 5 3 7 8 10 11 9 6
+
+/// Binary-tree serialization order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Traversal {
+    /// Monotone ascending — kept for the Table II ablation; useless for
+    /// pruning (every smaller k is visited before any selection).
+    InOrder,
+    /// Midpoints first (the paper's recommended order).
+    PreOrder,
+    /// Leaves first, root last.
+    PostOrder,
+}
+
+impl Traversal {
+    pub const ALL: [Traversal; 3] =
+        [Traversal::InOrder, Traversal::PreOrder, Traversal::PostOrder];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Traversal::InOrder => "in-order",
+            Traversal::PreOrder => "pre-order",
+            Traversal::PostOrder => "post-order",
+        }
+    }
+
+    /// Serialize `ks` (assumed ascending) in this traversal order.
+    pub fn sort(self, ks: &[u32]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(ks.len());
+        if ks.is_empty() {
+            return out;
+        }
+        match self {
+            Traversal::InOrder => out.extend_from_slice(ks),
+            Traversal::PreOrder => pre_order(ks, 0, ks.len() - 1, &mut out),
+            Traversal::PostOrder => post_order(ks, 0, ks.len() - 1, &mut out),
+        }
+        out
+    }
+}
+
+/// Ceiling midpoint — the tree-shape convention of Fig 1 / Table II.
+#[inline]
+fn mid(lo: usize, hi: usize) -> usize {
+    lo + (hi - lo + 1) / 2
+}
+
+fn pre_order(ks: &[u32], lo: usize, hi: usize, out: &mut Vec<u32>) {
+    if lo > hi {
+        return;
+    }
+    let m = mid(lo, hi);
+    out.push(ks[m]);
+    if m > lo {
+        pre_order(ks, lo, m - 1, out);
+    }
+    if m < hi {
+        pre_order(ks, m + 1, hi, out);
+    }
+}
+
+fn post_order(ks: &[u32], lo: usize, hi: usize, out: &mut Vec<u32>) {
+    if lo > hi {
+        return;
+    }
+    let m = mid(lo, hi);
+    if m > lo {
+        post_order(ks, lo, m - 1, out);
+    }
+    if m < hi {
+        post_order(ks, m + 1, hi, out);
+    }
+    out.push(ks[m]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(range: std::ops::RangeInclusive<u32>) -> Vec<u32> {
+        range.collect()
+    }
+
+    #[test]
+    fn fig1_pre_order_exact() {
+        assert_eq!(
+            Traversal::PreOrder.sort(&k(1..=11)),
+            vec![6, 3, 2, 1, 5, 4, 9, 8, 7, 11, 10]
+        );
+    }
+
+    #[test]
+    fn fig1_post_order_exact() {
+        assert_eq!(
+            Traversal::PostOrder.sort(&k(1..=11)),
+            vec![1, 2, 4, 5, 3, 7, 8, 10, 11, 9, 6]
+        );
+    }
+
+    #[test]
+    fn in_order_is_identity_on_sorted() {
+        assert_eq!(Traversal::InOrder.sort(&k(1..=11)), k(1..=11));
+    }
+
+    #[test]
+    fn all_orders_are_permutations() {
+        let ks = k(2..=30);
+        for t in Traversal::ALL {
+            let mut v = t.sort(&ks);
+            v.sort_unstable();
+            assert_eq!(v, ks, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn singleton_and_empty() {
+        for t in Traversal::ALL {
+            assert_eq!(t.sort(&[]), Vec::<u32>::new());
+            assert_eq!(t.sort(&[7]), vec![7]);
+        }
+    }
+
+    #[test]
+    fn pre_order_first_element_is_binary_search_root() {
+        // The first pre-order element is the first k a binary search
+        // would probe — the ceiling median.
+        assert_eq!(Traversal::PreOrder.sort(&k(2..=30))[0], 16);
+        assert_eq!(Traversal::PreOrder.sort(&k(1..=10))[0], 6);
+    }
+
+    #[test]
+    fn table2_t3_pre_order_chunked_values() {
+        // Paper Table II T3: contiguous chunks then pre-order sort.
+        assert_eq!(
+            Traversal::PreOrder.sort(&k(1..=6)),
+            vec![4, 2, 1, 3, 6, 5]
+        );
+        assert_eq!(
+            Traversal::PreOrder.sort(&k(7..=11)),
+            vec![9, 8, 7, 11, 10]
+        );
+    }
+}

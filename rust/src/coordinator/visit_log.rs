@@ -1,0 +1,144 @@
+//! Visit accounting: which k were evaluated, skipped or pruned, by whom,
+//! when. Every figure/table in §IV is a function of this log.
+
+use std::time::Duration;
+
+/// What happened when a worker looked at one k.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Evaluated; score passed the selection threshold.
+    Selected,
+    /// Evaluated; score failed the selection threshold.
+    Rejected,
+    /// Never evaluated — discarded by a pruning bound before execution.
+    PrunedSkip,
+}
+
+/// One entry in the visit log.
+#[derive(Debug, Clone)]
+pub struct Visit {
+    /// Global visit sequence number (order the decisions were made).
+    pub seq: u64,
+    pub k: u32,
+    /// Score if evaluated; NaN for pruned skips.
+    pub score: f64,
+    pub decision: Decision,
+    /// Simulated-MPI rank id of the worker.
+    pub rank: usize,
+    /// Thread index within the rank.
+    pub thread: usize,
+    /// Wall-clock offset from search start.
+    pub at: Duration,
+}
+
+/// Append-only record of a whole search.
+#[derive(Debug, Clone, Default)]
+pub struct VisitLog {
+    pub visits: Vec<Visit>,
+}
+
+impl VisitLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: Visit) {
+        self.visits.push(v);
+    }
+
+    /// k values that were actually evaluated (model+scorer executed),
+    /// in evaluation order.
+    pub fn evaluated(&self) -> Vec<u32> {
+        let mut v: Vec<&Visit> = self
+            .visits
+            .iter()
+            .filter(|v| v.decision != Decision::PrunedSkip)
+            .collect();
+        v.sort_by_key(|v| v.seq);
+        v.iter().map(|v| v.k).collect()
+    }
+
+    /// k values skipped by pruning.
+    pub fn pruned(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .visits
+            .iter()
+            .filter(|v| v.decision == Decision::PrunedSkip)
+            .map(|v| v.k)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn evaluated_count(&self) -> usize {
+        self.visits
+            .iter()
+            .filter(|v| v.decision != Decision::PrunedSkip)
+            .count()
+    }
+
+    /// Fraction of the search space that was evaluated — the paper's
+    /// headline "percent of K visited" metric (Fig 8, Fig 9).
+    pub fn percent_visited(&self, total_k: usize) -> f64 {
+        if total_k == 0 {
+            return 0.0;
+        }
+        100.0 * self.evaluated_count() as f64 / total_k as f64
+    }
+
+    /// Score recorded for a given k, if evaluated.
+    pub fn score_of(&self, k: u32) -> Option<f64> {
+        self.visits
+            .iter()
+            .find(|v| v.k == k && v.decision != Decision::PrunedSkip)
+            .map(|v| v.score)
+    }
+
+    pub fn merge(&mut self, other: VisitLog) {
+        self.visits.extend(other.visits);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn visit(seq: u64, k: u32, d: Decision) -> Visit {
+        Visit {
+            seq,
+            k,
+            score: if d == Decision::PrunedSkip { f64::NAN } else { 0.5 },
+            decision: d,
+            rank: 0,
+            thread: 0,
+            at: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn percent_visited_counts_only_evaluations() {
+        let mut log = VisitLog::new();
+        log.push(visit(0, 5, Decision::Selected));
+        log.push(visit(1, 3, Decision::PrunedSkip));
+        log.push(visit(2, 7, Decision::Rejected));
+        assert_eq!(log.evaluated_count(), 2);
+        assert!((log.percent_visited(10) - 20.0).abs() < 1e-12);
+        assert_eq!(log.evaluated(), vec![5, 7]);
+        assert_eq!(log.pruned(), vec![3]);
+    }
+
+    #[test]
+    fn evaluated_respects_sequence_order() {
+        let mut log = VisitLog::new();
+        log.push(visit(2, 9, Decision::Rejected));
+        log.push(visit(0, 5, Decision::Selected));
+        log.push(visit(1, 7, Decision::Selected));
+        assert_eq!(log.evaluated(), vec![5, 7, 9]);
+    }
+
+    #[test]
+    fn empty_log_is_zero_percent() {
+        assert_eq!(VisitLog::new().percent_visited(29), 0.0);
+        assert_eq!(VisitLog::new().percent_visited(0), 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! arXiv-like synthetic corpus (§IV-B substitution, DESIGN.md §2.3).
+//!
+//! The paper's multi-node experiment topic-models 2.1M arXiv abstracts
+//! (vocab 10,280) with k* = 71 over K = {2..100}. We cannot redistribute
+//! that corpus; instead we generate a Zipf-vocabulary topic–document
+//! count matrix with a planted topic count, which exercises the identical
+//! code path (NMFk over a sparse-ish non-negative matrix) and yields the
+//! same square-wave silhouette profile the experiment depends on.
+
+use crate::linalg::Matrix;
+use crate::util::Pcg32;
+
+/// A synthetic topic-modeling corpus: term-document matrix + truth.
+#[derive(Debug, Clone)]
+pub struct ArxivLikeCorpus {
+    /// vocab × docs term-count matrix (f32 counts).
+    pub x: Matrix,
+    pub k_topics: usize,
+    pub vocab: usize,
+    pub docs: usize,
+}
+
+/// Generate a corpus with `k_topics` planted topics over `vocab` terms and
+/// `docs` documents; term frequencies are Zipf-distributed within each
+/// topic's vocabulary band (rank-1 bands ⇒ recoverable topics).
+pub fn arxiv_like(
+    rng: &mut Pcg32,
+    vocab: usize,
+    docs: usize,
+    k_topics: usize,
+    terms_per_doc: usize,
+) -> ArxivLikeCorpus {
+    let mut x = Matrix::zeros(vocab, docs);
+    let band = vocab.div_ceil(k_topics);
+    for d in 0..docs {
+        // Each doc draws a dominant topic + a secondary topic (realistic
+        // mixing keeps the matrix full-rank-ish but clusterable).
+        let main = rng.gen_range(0, k_topics as u64) as usize;
+        let side = rng.gen_range(0, k_topics as u64) as usize;
+        for _ in 0..terms_per_doc {
+            let topic = if rng.next_f64() < 0.85 { main } else { side };
+            // Zipf-ish rank within the topic band: p(rank) ∝ 1/(rank+1).
+            let r = zipf_rank(rng, band);
+            let term = (topic * band + r).min(vocab - 1);
+            *x.at_mut(term, d) += 1.0;
+        }
+    }
+    ArxivLikeCorpus {
+        x,
+        k_topics,
+        vocab,
+        docs,
+    }
+}
+
+/// Sample a Zipf(1)-distributed rank in [0, n) by inverse-CDF over the
+/// harmonic weights.
+fn zipf_rank(rng: &mut Pcg32, n: usize) -> usize {
+    let hn: f64 = (1..=n).map(|i| 1.0 / i as f64).sum();
+    let target = rng.next_f64() * hn;
+    let mut acc = 0.0;
+    for i in 1..=n {
+        acc += 1.0 / i as f64;
+        if acc >= target {
+            return i - 1;
+        }
+    }
+    n - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_counts() {
+        let mut rng = Pcg32::new(91);
+        let c = arxiv_like(&mut rng, 200, 50, 7, 40);
+        assert_eq!((c.x.rows, c.x.cols), (200, 50));
+        let total: f32 = c.x.data.iter().sum();
+        assert_eq!(total as usize, 50 * 40, "every term draw lands");
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let mut rng = Pcg32::new(92);
+        let mut counts = vec![0usize; 20];
+        for _ in 0..5000 {
+            counts[zipf_rank(&mut rng, 20)] += 1;
+        }
+        assert!(counts[0] > counts[5] && counts[5] > counts[15]);
+    }
+
+    #[test]
+    fn topic_bands_dominate() {
+        let mut rng = Pcg32::new(93);
+        let c = arxiv_like(&mut rng, 100, 40, 4, 60);
+        // Most mass of every doc should sit inside one 25-term band.
+        let band = 25;
+        let mut banded = 0usize;
+        for d in 0..40 {
+            let mut best = 0.0f32;
+            let total: f32 = (0..100).map(|t| c.x.at(t, d)).sum();
+            for b in 0..4 {
+                let m: f32 = (b * band..(b + 1) * band).map(|t| c.x.at(t, d)).sum();
+                best = best.max(m);
+            }
+            if best / total > 0.5 {
+                banded += 1;
+            }
+        }
+        assert!(banded >= 30, "only {banded}/40 docs band-dominated");
+    }
+}

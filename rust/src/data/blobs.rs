@@ -1,0 +1,120 @@
+//! Gaussian-blob generator — the paper's K-means workload (§IV-A:
+//! "Gaussian-distributed clusters with a standard deviation of .5 ...
+//! overlaid random noise").
+
+use crate::linalg::Matrix;
+use crate::util::Pcg32;
+
+/// A labeled clustering dataset.
+#[derive(Debug, Clone)]
+pub struct BlobDataset {
+    pub x: Matrix,
+    pub labels: Vec<usize>,
+    pub centers: Matrix,
+    pub k_true: usize,
+}
+
+/// `k` Gaussian clusters of `n_per` points in `d` dims; centers drawn from
+/// N(0, spread²), points from N(center, sigma²).
+pub fn gaussian_blobs(
+    rng: &mut Pcg32,
+    n_per: usize,
+    k: usize,
+    d: usize,
+    spread: f64,
+    sigma: f64,
+) -> BlobDataset {
+    let mut centers = Matrix::zeros(k, d);
+    for v in &mut centers.data {
+        *v = (rng.next_gaussian() * spread) as f32;
+    }
+    let n = n_per * k;
+    let mut x = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for c in 0..k {
+        for i in 0..n_per {
+            let row = c * n_per + i;
+            for j in 0..d {
+                *x.at_mut(row, j) =
+                    centers.at(c, j) + (rng.next_gaussian() * sigma) as f32;
+            }
+            labels.push(c);
+        }
+    }
+    BlobDataset {
+        x,
+        labels,
+        centers,
+        k_true: k,
+    }
+}
+
+/// Paper §IV-A K-means workload: sigma .5, plus uniform background noise
+/// points ("overlaid random noise ... ensures robustness").
+pub fn paper_kmeans_workload(rng: &mut Pcg32, k_true: usize, n_per: usize, d: usize) -> BlobDataset {
+    let mut ds = gaussian_blobs(rng, n_per, k_true, d, 8.0, 0.5);
+    // 2% uniform noise points appended, labeled by nearest center.
+    let n_noise = (ds.x.rows / 50).max(1);
+    let lo = -16.0f32;
+    let hi = 16.0f32;
+    let mut data = std::mem::take(&mut ds.x.data);
+    for _ in 0..n_noise {
+        let mut best = (0usize, f64::INFINITY);
+        let mut point = Vec::with_capacity(d);
+        for _ in 0..d {
+            point.push(lo + (hi - lo) * rng.next_f32());
+        }
+        for c in 0..k_true {
+            let dist: f64 = point
+                .iter()
+                .zip(ds.centers.row(c))
+                .map(|(&p, &q)| ((p - q) as f64).powi(2))
+                .sum();
+            if dist < best.1 {
+                best = (c, dist);
+            }
+        }
+        data.extend_from_slice(&point);
+        ds.labels.push(best.0);
+    }
+    ds.x = Matrix::from_vec(ds.labels.len(), d, data);
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::silhouette;
+
+    #[test]
+    fn shapes_and_labels_consistent() {
+        let mut rng = Pcg32::new(61);
+        let ds = gaussian_blobs(&mut rng, 20, 5, 3, 8.0, 0.5);
+        assert_eq!(ds.x.rows, 100);
+        assert_eq!(ds.labels.len(), 100);
+        assert_eq!(ds.centers.rows, 5);
+        assert!(ds.labels.iter().all(|&l| l < 5));
+    }
+
+    #[test]
+    fn separated_blobs_have_high_silhouette() {
+        let mut rng = Pcg32::new(62);
+        let ds = gaussian_blobs(&mut rng, 30, 4, 6, 10.0, 0.4);
+        assert!(silhouette(&ds.x, &ds.labels) > 0.8);
+    }
+
+    #[test]
+    fn paper_workload_adds_noise_points() {
+        let mut rng = Pcg32::new(63);
+        let ds = paper_kmeans_workload(&mut rng, 6, 40, 4);
+        assert!(ds.x.rows > 240);
+        assert_eq!(ds.x.rows, ds.labels.len());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = gaussian_blobs(&mut Pcg32::new(7), 10, 3, 2, 5.0, 0.5);
+        let b = gaussian_blobs(&mut Pcg32::new(7), 10, 3, 2, 5.0, 0.5);
+        assert_eq!(a.x.data, b.x.data);
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic workload generators (DESIGN.md S12) — the datasets behind
+//! every experiment: Gaussian blobs (K-means), planted-rank matrices
+//! (NMFk), relational tensors (RESCALk), an arXiv-like corpus (§IV-B) and
+//! closed-form score profiles (§III-D / simulator inputs).
+
+pub mod arxiv_like;
+pub mod blobs;
+pub mod planted;
+pub mod profiles;
+pub mod rescal_synth;
+
+pub use arxiv_like::{arxiv_like, ArxivLikeCorpus};
+pub use blobs::{gaussian_blobs, paper_kmeans_workload, BlobDataset};
+pub use planted::{planted_nmf, PlantedNmf};
+pub use profiles::ScoreProfile;
+pub use rescal_synth::{planted_rescal, PlantedRescal};

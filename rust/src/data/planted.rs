@@ -1,0 +1,87 @@
+//! Planted-rank non-negative matrices — the paper's NMFk workload
+//! (§IV-A: "synthetic data generator with random Gaussian features for a
+//! predetermined k", 1000×1100 matrices with k_true ∈ {2..30}).
+
+use crate::linalg::Matrix;
+use crate::util::Pcg32;
+
+/// A matrix with known latent rank.
+#[derive(Debug, Clone)]
+pub struct PlantedNmf {
+    pub x: Matrix,
+    pub w_true: Matrix,
+    pub h_true: Matrix,
+    pub k_true: usize,
+}
+
+/// X = W·H + noise with W:(m,k), H:(k,n) non-negative. Columns of W are
+/// sparse-ish Gaussian bumps so the latent factors are well separated —
+/// which is what makes the NMFk silhouette square-wave-shaped.
+pub fn planted_nmf(rng: &mut Pcg32, m: usize, n: usize, k: usize, noise: f32) -> PlantedNmf {
+    let mut w = Matrix::zeros(m, k);
+    // Each component owns a contiguous band of rows (distinct supports ->
+    // recoverable factors), plus a small dense floor.
+    let band = m.div_ceil(k);
+    for c in 0..k {
+        for r in 0..m {
+            let in_band = r >= c * band && r < (c + 1) * band;
+            let v = if in_band {
+                0.5 + 0.5 * rng.next_f32()
+            } else {
+                0.02 * rng.next_f32()
+            };
+            *w.at_mut(r, c) = v;
+        }
+    }
+    let mut h = Matrix::zeros(k, n);
+    let hband = n.div_ceil(k);
+    for c in 0..k {
+        for j in 0..n {
+            let in_band = j >= c * hband && j < (c + 1) * hband;
+            let v = if in_band {
+                0.5 + 0.5 * rng.next_f32()
+            } else {
+                0.05 * rng.next_f32()
+            };
+            *h.at_mut(c, j) = v;
+        }
+    }
+    let mut x = w.matmul(&h);
+    for v in &mut x.data {
+        *v += noise * rng.next_f32();
+    }
+    PlantedNmf {
+        x,
+        w_true: w,
+        h_true: h,
+        k_true: k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let mut rng = Pcg32::new(71);
+        let ds = planted_nmf(&mut rng, 40, 50, 6, 0.01);
+        assert_eq!((ds.x.rows, ds.x.cols), (40, 50));
+        assert_eq!(ds.w_true.cols, 6);
+    }
+
+    #[test]
+    fn nonnegative() {
+        let mut rng = Pcg32::new(72);
+        let ds = planted_nmf(&mut rng, 30, 30, 4, 0.02);
+        assert!(ds.x.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn rank_k_reconstruction_is_near_exact() {
+        let mut rng = Pcg32::new(73);
+        let ds = planted_nmf(&mut rng, 40, 45, 5, 0.001);
+        let err = ds.x.relative_error_to(&ds.w_true.matmul(&ds.h_true));
+        assert!(err < 0.01, "true factors must reconstruct X: {err}");
+    }
+}

@@ -1,0 +1,86 @@
+//! Planted-rank RESCAL tensors: T_s = A R_s Aᵀ + noise (the pyDRESCALk
+//! synthetic workload of §IV-C, scaled to this testbed).
+
+use crate::linalg::Matrix;
+use crate::util::Pcg32;
+
+/// A relational tensor with known latent rank.
+#[derive(Debug, Clone)]
+pub struct PlantedRescal {
+    pub slices: Vec<Matrix>,
+    pub a_true: Matrix,
+    pub r_true: Vec<Matrix>,
+    pub k_true: usize,
+}
+
+/// `s` slices of an n×n relational tensor with planted rank `k`.
+pub fn planted_rescal(
+    rng: &mut Pcg32,
+    s: usize,
+    n: usize,
+    k: usize,
+    noise: f32,
+) -> PlantedRescal {
+    // Banded A as in planted_nmf: separable latent communities.
+    let mut a = Matrix::zeros(n, k);
+    let band = n.div_ceil(k);
+    for c in 0..k {
+        for r in 0..n {
+            let in_band = r >= c * band && r < (c + 1) * band;
+            *a.at_mut(r, c) = if in_band {
+                0.5 + 0.5 * rng.next_f32()
+            } else {
+                0.02 * rng.next_f32()
+            };
+        }
+    }
+    let r_true: Vec<Matrix> = (0..s)
+        .map(|_| Matrix::rand_uniform(k, k, rng))
+        .collect();
+    let at = a.transpose();
+    let slices = r_true
+        .iter()
+        .map(|rs| {
+            let mut t = a.matmul(rs).matmul(&at);
+            for v in &mut t.data {
+                *v += noise * rng.next_f32();
+            }
+            t
+        })
+        .collect();
+    PlantedRescal {
+        slices,
+        a_true: a,
+        r_true,
+        k_true: k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rescal_relative_error;
+
+    #[test]
+    fn shapes() {
+        let mut rng = Pcg32::new(81);
+        let t = planted_rescal(&mut rng, 4, 16, 3, 0.01);
+        assert_eq!(t.slices.len(), 4);
+        assert_eq!((t.slices[0].rows, t.slices[0].cols), (16, 16));
+    }
+
+    #[test]
+    fn true_factors_reconstruct() {
+        let mut rng = Pcg32::new(82);
+        let t = planted_rescal(&mut rng, 3, 20, 4, 0.001);
+        let err = rescal_relative_error(&t.slices, &t.a_true, &t.r_true);
+        assert!(err < 0.01, "err {err}");
+    }
+
+    #[test]
+    fn nonnegative_entries() {
+        let mut rng = Pcg32::new(83);
+        let t = planted_rescal(&mut rng, 2, 12, 2, 0.02);
+        assert!(t.slices.iter().all(|m| m.data.iter().all(|&v| v >= 0.0)));
+    }
+}

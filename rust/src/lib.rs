@@ -1,0 +1,46 @@
+//! # binary-bleed
+//!
+//! Production-oriented reproduction of **"Binary Bleed: Fast Distributed
+//! and Parallel Method for Automatic Model Selection"** (Barron et al.,
+//! LANL, 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Binary Bleed coordinator: pruning binary
+//!   search over the model-selection hyper-parameter `k`, traversal-order
+//!   scheduling, resource chunking, multi-rank pruning propagation.
+//! * **L2/L1 (python/, build-time only)** — the model computations the
+//!   search evaluates (NMF, K-means, RESCAL) and their Pallas hot-spot
+//!   kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **runtime** — PJRT CPU client that loads and executes the artifacts
+//!   from the Rust hot path; python never runs at search time.
+//!
+//! Quickstart:
+//! ```no_run
+//! use binary_bleed::coordinator::{
+//!     binary_bleed_serial, Mode, SearchPolicy, Thresholds,
+//! };
+//! let ks: Vec<u32> = (2..=30).collect();
+//! // Any Fn(u32) -> f64 is a scorer; here a square wave with k*=15.
+//! let scorer = |k: u32| if k <= 15 { 0.9 } else { 0.1 };
+//! let policy = SearchPolicy::maximize(
+//!     Mode::Vanilla,
+//!     Thresholds { select: 0.75, stop: 0.2 },
+//! );
+//! let result = binary_bleed_serial(&ks, &scorer, policy);
+//! assert_eq!(result.k_optimal, Some(15));
+//! ```
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod simulate;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,155 @@
+//! NMFk's custom cluster-stability silhouette (paper refs [1]–[3]).
+//!
+//! NMFk runs NMF `p` times on perturbed/resampled copies of X, then
+//! clusters the `p·k` W-columns into k clusters by matching each run's
+//! columns to a reference run. If the rank is right, columns re-appear
+//! (stable patterns) and the cluster silhouette is high; past the true
+//! rank the factors wander and the silhouette collapses — the square-wave
+//! premise Binary Bleed exploits.
+//!
+//! Data volume is tiny (m × k × p floats), so this stays host-side; the
+//! per-run NMF itself is the HLO-artifact hot path.
+
+use super::matrix::{cosine_similarity, Matrix};
+
+/// Greedy max-cosine assignment of `w`'s columns onto `reference`'s
+/// columns (both m×k). Returns `perm[j] = reference column for w col j`.
+pub fn match_columns(reference: &Matrix, w: &Matrix) -> Vec<usize> {
+    let k = reference.cols;
+    assert_eq!(w.cols, k);
+    let ref_cols: Vec<Vec<f32>> = (0..k).map(|c| reference.col(c)).collect();
+    let w_cols: Vec<Vec<f32>> = (0..k).map(|c| w.col(c)).collect();
+    // All pair similarities, pick greedily best-first (k is small).
+    let mut pairs: Vec<(f64, usize, usize)> = Vec::with_capacity(k * k);
+    for (j, wc) in w_cols.iter().enumerate() {
+        for (r, rc) in ref_cols.iter().enumerate() {
+            pairs.push((cosine_similarity(wc, rc), j, r));
+        }
+    }
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut perm = vec![usize::MAX; k];
+    let mut used_w = vec![false; k];
+    let mut used_r = vec![false; k];
+    for (_, j, r) in pairs {
+        if !used_w[j] && !used_r[r] {
+            perm[j] = r;
+            used_w[j] = true;
+            used_r[r] = true;
+        }
+    }
+    perm
+}
+
+/// Cosine-distance silhouette of the aligned W-column clusters across
+/// perturbation runs. `ws` holds one m×k W per run. Returns the *minimum*
+/// per-cluster silhouette — NMFk's conservative stability statistic.
+pub fn perturbation_silhouette(ws: &[Matrix]) -> f64 {
+    let p = ws.len();
+    assert!(p >= 2, "need at least two perturbation runs");
+    let k = ws[0].cols;
+    // Collect aligned columns: cluster c holds one column per run.
+    let mut samples: Vec<Vec<f32>> = Vec::with_capacity(p * k);
+    let mut labels: Vec<usize> = Vec::with_capacity(p * k);
+    for w in ws {
+        let perm = match_columns(&ws[0], w);
+        for j in 0..k {
+            samples.push(w.col(j));
+            labels.push(perm[j]);
+        }
+    }
+    let n = samples.len();
+    // Cosine distance.
+    let dist = |i: usize, j: usize| 1.0 - cosine_similarity(&samples[i], &samples[j]);
+    let mut cluster_sil = vec![0.0f64; k];
+    let mut cluster_n = vec![0usize; k];
+    for i in 0..n {
+        let own = labels[i];
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0usize; k];
+        for j in 0..n {
+            if i != j {
+                sums[labels[j]] += dist(i, j);
+                counts[labels[j]] += 1;
+            }
+        }
+        if counts[own] == 0 {
+            continue;
+        }
+        let a = sums[own] / counts[own] as f64;
+        let b = (0..k)
+            .filter(|&c| c != own && counts[c] > 0)
+            .map(|c| sums[c] / counts[c] as f64)
+            .fold(f64::INFINITY, f64::min);
+        if !b.is_finite() {
+            continue; // k == 1: stability undefined, treat as perfect
+        }
+        let s = (b - a) / a.max(b).max(1e-12);
+        cluster_sil[own] += s;
+        cluster_n[own] += 1;
+    }
+    (0..k)
+        .filter(|&c| cluster_n[c] > 0)
+        .map(|c| cluster_sil[c] / cluster_n[c] as f64)
+        .fold(f64::INFINITY, f64::min)
+        .min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn noisy_copy(w: &Matrix, rng: &mut Pcg32, noise: f32, shuffle: bool) -> Matrix {
+        let mut cols: Vec<usize> = (0..w.cols).collect();
+        if shuffle {
+            rng.shuffle(&mut cols);
+        }
+        let mut out = Matrix::zeros(w.rows, w.cols);
+        for (j, &src) in cols.iter().enumerate() {
+            for r in 0..w.rows {
+                *out.at_mut(r, j) = w.at(r, src) + noise * rng.next_f32();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn stable_columns_score_high_even_permuted() {
+        let mut rng = Pcg32::new(51);
+        let base = Matrix::rand_uniform(30, 4, &mut rng);
+        let ws: Vec<Matrix> =
+            (0..5).map(|_| noisy_copy(&base, &mut rng, 0.01, true)).collect();
+        let s = perturbation_silhouette(&ws);
+        assert!(s > 0.8, "stable factors should score high: {s}");
+    }
+
+    #[test]
+    fn unstable_columns_score_low() {
+        let mut rng = Pcg32::new(52);
+        let ws: Vec<Matrix> =
+            (0..5).map(|_| Matrix::rand_uniform(30, 4, &mut rng)).collect();
+        let s = perturbation_silhouette(&ws);
+        assert!(s < 0.5, "random factors should score low: {s}");
+    }
+
+    #[test]
+    fn match_columns_identity_for_same_matrix() {
+        let mut rng = Pcg32::new(53);
+        let w = Matrix::rand_uniform(20, 5, &mut rng);
+        assert_eq!(match_columns(&w, &w), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn match_columns_recovers_permutation() {
+        let mut rng = Pcg32::new(54);
+        let w = Matrix::rand_uniform(25, 4, &mut rng);
+        // Build w2 = w with columns rotated by one.
+        let mut w2 = Matrix::zeros(25, 4);
+        for j in 0..4 {
+            for r in 0..25 {
+                *w2.at_mut(r, j) = w.at(r, (j + 1) % 4);
+            }
+        }
+        assert_eq!(match_columns(&w, &w2), vec![1, 2, 3, 0]);
+    }
+}

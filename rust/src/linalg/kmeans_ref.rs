@@ -1,0 +1,142 @@
+//! Pure-Rust Lloyd K-means — the reference implementation / test oracle
+//! for the `kmeans_run` HLO artifact, and the fallback backend of the
+//! K-means evaluator when artifacts are unavailable.
+
+use super::matrix::Matrix;
+use crate::util::Pcg32;
+
+/// Result of a K-means fit.
+#[derive(Debug, Clone)]
+pub struct KMeansFit {
+    pub centroids: Matrix,
+    pub labels: Vec<usize>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Lloyd's algorithm with k-means++-style farthest-first seeding.
+pub fn kmeans(x: &Matrix, k: usize, max_iter: usize, rng: &mut Pcg32) -> KMeansFit {
+    assert!(k >= 1 && k <= x.rows, "k out of range");
+    let n = x.rows;
+    // Seeding: first centroid random, others farthest-first.
+    let mut centers: Vec<usize> = vec![rng.gen_range(0, n as u64) as usize];
+    while centers.len() < k {
+        let (mut best_i, mut best_d) = (0usize, -1.0f64);
+        for i in 0..n {
+            let d = centers
+                .iter()
+                .map(|&c| Matrix::row_sq_dist(x, i, x, c))
+                .fold(f64::INFINITY, f64::min);
+            if d > best_d {
+                best_d = d;
+                best_i = i;
+            }
+        }
+        centers.push(best_i);
+    }
+    let mut centroids = Matrix::zeros(k, x.cols);
+    for (ci, &i) in centers.iter().enumerate() {
+        centroids.data[ci * x.cols..(ci + 1) * x.cols].copy_from_slice(x.row(i));
+    }
+
+    let mut labels = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // Assignment.
+        let mut new_inertia = 0.0;
+        for i in 0..n {
+            let (mut best_c, mut best_d) = (0usize, f64::INFINITY);
+            for c in 0..k {
+                let d = Matrix::row_sq_dist(x, i, &centroids, c);
+                if d < best_d {
+                    best_d = d;
+                    best_c = c;
+                }
+            }
+            labels[i] = best_c;
+            new_inertia += best_d;
+        }
+        // Update.
+        let mut sums = Matrix::zeros(k, x.cols);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = labels[i];
+            counts[c] += 1;
+            for (s, &v) in sums.data[c * x.cols..(c + 1) * x.cols]
+                .iter_mut()
+                .zip(x.row(i))
+            {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for v in &mut sums.data[c * x.cols..(c + 1) * x.cols] {
+                    *v /= counts[c] as f32;
+                }
+            } else {
+                // Keep empty centroids in place.
+                sums.data[c * x.cols..(c + 1) * x.cols]
+                    .copy_from_slice(centroids.row(c));
+            }
+        }
+        centroids = sums;
+        let converged = (inertia - new_inertia).abs() < 1e-7 * inertia.max(1.0);
+        inertia = new_inertia;
+        if converged {
+            break;
+        }
+    }
+    KMeansFit {
+        centroids,
+        labels,
+        inertia,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::gaussian_blobs;
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Pcg32::new(21);
+        let ds = gaussian_blobs(&mut rng, 30, 4, 5, 10.0, 0.4);
+        let fit = kmeans(&ds.x, 4, 50, &mut rng);
+        // Every true cluster maps to exactly one fitted label.
+        let mut seen = std::collections::HashMap::new();
+        let mut pure = 0usize;
+        for (i, &t) in ds.labels.iter().enumerate() {
+            let entry = seen.entry(t).or_insert(fit.labels[i]);
+            if *entry == fit.labels[i] {
+                pure += 1;
+            }
+        }
+        assert!(pure as f64 / ds.x.rows as f64 > 0.95, "purity {pure}/120");
+        assert!(fit.inertia < 200.0, "inertia {}", fit.inertia);
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Pcg32::new(22);
+        let ds = gaussian_blobs(&mut rng, 25, 4, 6, 8.0, 0.6);
+        let mut prev = f64::INFINITY;
+        for k in [1usize, 2, 4, 8] {
+            let fit = kmeans(&ds.x, k, 40, &mut rng);
+            assert!(fit.inertia <= prev * 1.05, "k={k}: {} > {prev}", fit.inertia);
+            prev = fit.inertia;
+        }
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero_inertia() {
+        let mut rng = Pcg32::new(23);
+        let x = Matrix::rand_normal(6, 3, &mut rng);
+        let fit = kmeans(&x, 6, 20, &mut rng);
+        assert!(fit.inertia < 1e-6);
+    }
+}

@@ -1,0 +1,219 @@
+//! Dense row-major f32 matrix — the crate's host-side numeric workhorse.
+//!
+//! Kept intentionally small: the heavy lifting happens inside the HLO
+//! artifacts; this type backs the pure-Rust reference models (test
+//! oracles), the NMFk perturbation-clustering step (tiny data) and the
+//! literal marshaling into PJRT.
+
+use std::fmt;
+
+use crate::util::Pcg32;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Uniform [0,1) random fill — NMF-style non-negative init.
+    pub fn rand_uniform(rows: usize, cols: usize, rng: &mut Pcg32) -> Self {
+        let data = (0..rows * cols).map(|_| rng.next_f32()).collect();
+        Self { rows, cols, data }
+    }
+
+    /// Standard-normal random fill.
+    pub fn rand_normal(rows: usize, cols: usize, rng: &mut Pcg32) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| rng.next_gaussian() as f32)
+            .collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// C = A @ B, blocked i-k-j loop (cache-friendly, good enough for the
+    /// oracle-scale matrices this type serves).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, mut f: impl FnMut(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise zip.
+    pub fn zip(&self, other: &Matrix, mut f: impl FnMut(f32, f32) -> f32) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// ||self - other||_F / ||self||_F.
+    pub fn relative_error_to(&self, recon: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (recon.rows, recon.cols));
+        let diff: f64 = self
+            .data
+            .iter()
+            .zip(&recon.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        diff.sqrt() / (self.frobenius_norm() + 1e-12)
+    }
+
+    /// Squared Euclidean distance between two rows of (possibly different)
+    /// matrices with equal column counts.
+    pub fn row_sq_dist(a: &Matrix, ra: usize, b: &Matrix, rb: usize) -> f64 {
+        debug_assert_eq!(a.cols, b.cols);
+        a.row(ra)
+            .iter()
+            .zip(b.row(rb))
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum()
+    }
+
+    /// Extract column c as a Vec.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+}
+
+/// Cosine similarity between two equal-length vectors.
+pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    dot / (na.sqrt() * nb.sqrt() + 1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let mut eye = Matrix::zeros(3, 3);
+        for i in 0..3 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        assert_eq!(a.matmul(&eye).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        assert_eq!(a.matmul(&b).data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::new(1);
+        let a = Matrix::rand_normal(5, 7, &mut rng);
+        assert_eq!(a.transpose().transpose().data, a.data);
+    }
+
+    #[test]
+    fn relative_error_zero_for_self() {
+        let mut rng = Pcg32::new(2);
+        let a = Matrix::rand_uniform(4, 4, &mut rng);
+        assert!(a.relative_error_to(&a) < 1e-9);
+    }
+
+    #[test]
+    fn cosine_similarity_bounds() {
+        let a = [1.0f32, 0.0, 0.0];
+        let b = [0.0f32, 1.0, 0.0];
+        assert!((cosine_similarity(&a, &a) - 1.0).abs() < 1e-9);
+        assert!(cosine_similarity(&a, &b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_sq_dist_matches_manual() {
+        let a = Matrix::from_vec(2, 2, vec![0., 0., 3., 4.]);
+        assert!((Matrix::row_sq_dist(&a, 0, &a, 1) - 25.0).abs() < 1e-9);
+    }
+}

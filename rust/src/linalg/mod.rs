@@ -1,0 +1,19 @@
+//! Pure-Rust linear algebra + reference models (DESIGN.md S11/S18).
+//!
+//! Two jobs: (a) numeric oracles that the integration tests hold the HLO
+//! artifacts against, (b) the "native" evaluator backend used when
+//! artifacts are absent and for the HLO-vs-native ablation bench.
+
+pub mod cluster_stability;
+pub mod kmeans_ref;
+pub mod matrix;
+pub mod nmf_ref;
+pub mod rescal_ref;
+pub mod scores;
+
+pub use cluster_stability::{match_columns, perturbation_silhouette};
+pub use kmeans_ref::{kmeans, KMeansFit};
+pub use matrix::{cosine_similarity, Matrix};
+pub use nmf_ref::{nmf, nmf_from, NmfFit};
+pub use rescal_ref::{rescal, rescal_relative_error, RescalFit};
+pub use scores::{davies_bouldin, silhouette};

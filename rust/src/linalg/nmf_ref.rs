@@ -1,0 +1,94 @@
+//! Pure-Rust multiplicative-update NMF — reference implementation / test
+//! oracle for the `nmf_run` HLO artifact and the native backend of the
+//! NMFk evaluator.
+
+use super::matrix::Matrix;
+use crate::util::Pcg32;
+
+const EPS: f32 = 1e-9;
+
+/// Result of an NMF fit.
+#[derive(Debug, Clone)]
+pub struct NmfFit {
+    pub w: Matrix,
+    pub h: Matrix,
+    pub relative_error: f64,
+}
+
+/// Lee–Seung multiplicative updates for ||X - WH||_F, rank `k`.
+pub fn nmf(x: &Matrix, k: usize, iters: usize, rng: &mut Pcg32) -> NmfFit {
+    let w0 = Matrix::rand_uniform(x.rows, k, rng).map(|v| v + 0.01);
+    let h0 = Matrix::rand_uniform(k, x.cols, rng).map(|v| v + 0.01);
+    nmf_from(x, w0, h0, iters)
+}
+
+/// Multiplicative updates from given initial factors.
+pub fn nmf_from(x: &Matrix, mut w: Matrix, mut h: Matrix, iters: usize) -> NmfFit {
+    assert_eq!(w.rows, x.rows);
+    assert_eq!(h.cols, x.cols);
+    assert_eq!(w.cols, h.rows);
+    for _ in 0..iters {
+        // W <- W * (X H^T) / (W (H H^T))
+        let ht = h.transpose();
+        let num = x.matmul(&ht);
+        let den = w.matmul(&h.matmul(&ht));
+        w = w
+            .zip(&num, |wv, nv| wv * nv)
+            .zip(&den, |wn, dv| wn / (dv + EPS));
+        // H <- H * (W^T X) / ((W^T W) H)
+        let wt = w.transpose();
+        let num = wt.matmul(x);
+        let den = wt.matmul(&w).matmul(&h);
+        h = h
+            .zip(&num, |hv, nv| hv * nv)
+            .zip(&den, |hn, dv| hn / (dv + EPS));
+    }
+    let relative_error = x.relative_error_to(&w.matmul(&h));
+    NmfFit {
+        w,
+        h,
+        relative_error,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::planted::planted_nmf;
+
+    #[test]
+    fn error_monotone_under_more_iterations() {
+        let mut rng = Pcg32::new(31);
+        let ds = planted_nmf(&mut rng, 40, 50, 4, 0.01);
+        let w0 = Matrix::rand_uniform(40, 4, &mut rng).map(|v| v + 0.01);
+        let h0 = Matrix::rand_uniform(4, 50, &mut rng).map(|v| v + 0.01);
+        let e1 = nmf_from(&ds.x, w0.clone(), h0.clone(), 10).relative_error;
+        let e2 = nmf_from(&ds.x, w0, h0, 60).relative_error;
+        assert!(e2 <= e1 + 1e-9, "{e2} > {e1}");
+    }
+
+    #[test]
+    fn planted_rank_fits_well() {
+        let mut rng = Pcg32::new(32);
+        let ds = planted_nmf(&mut rng, 50, 60, 5, 0.005);
+        let fit = nmf(&ds.x, 5, 300, &mut rng);
+        assert!(fit.relative_error < 0.08, "err {}", fit.relative_error);
+    }
+
+    #[test]
+    fn underfit_rank_has_high_error() {
+        let mut rng = Pcg32::new(33);
+        let ds = planted_nmf(&mut rng, 50, 60, 8, 0.005);
+        let fit = nmf(&ds.x, 2, 200, &mut rng);
+        assert!(fit.relative_error > 0.1, "err {}", fit.relative_error);
+    }
+
+    #[test]
+    fn factors_stay_nonnegative() {
+        let mut rng = Pcg32::new(34);
+        let ds = planted_nmf(&mut rng, 30, 35, 3, 0.01);
+        let fit = nmf(&ds.x, 3, 50, &mut rng);
+        assert!(fit.w.data.iter().all(|&v| v >= 0.0));
+        assert!(fit.h.data.iter().all(|&v| v >= 0.0));
+    }
+}

@@ -1,0 +1,162 @@
+//! Pure-Rust silhouette and Davies-Bouldin scorers.
+//!
+//! These are (a) the numeric oracles the integration tests hold the HLO
+//! artifacts against, and (b) the scorers for the host-side NMFk
+//! perturbation-clustering step (tiny data, not worth a PJRT round trip).
+
+use super::matrix::Matrix;
+
+/// Mean silhouette coefficient of a labeled sample set (maximize).
+///
+/// Textbook O(n²) formulation — matches `model.silhouette` in the L2
+/// graph and sklearn's `silhouette_score` (Euclidean, singleton ⇒ 0).
+pub fn silhouette(x: &Matrix, labels: &[usize]) -> f64 {
+    let n = x.rows;
+    assert_eq!(labels.len(), n);
+    if n == 0 {
+        return 0.0;
+    }
+    let clusters: Vec<usize> = {
+        let mut c = labels.to_vec();
+        c.sort_unstable();
+        c.dedup();
+        c
+    };
+    if clusters.len() < 2 {
+        return 0.0;
+    }
+    let counts: std::collections::HashMap<usize, usize> =
+        clusters
+            .iter()
+            .map(|&c| (c, labels.iter().filter(|&&l| l == c).count()))
+            .collect();
+
+    let mut total = 0.0;
+    for i in 0..n {
+        let own = labels[i];
+        let own_count = counts[&own];
+        if own_count <= 1 {
+            continue; // silhouette of a singleton is 0
+        }
+        let mut sums: std::collections::HashMap<usize, f64> =
+            clusters.iter().map(|&c| (c, 0.0)).collect();
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d = Matrix::row_sq_dist(x, i, x, j).sqrt();
+            *sums.get_mut(&labels[j]).unwrap() += d;
+        }
+        let a = sums[&own] / (own_count - 1) as f64;
+        let b = clusters
+            .iter()
+            .filter(|&&c| c != own)
+            .map(|&c| sums[&c] / counts[&c] as f64)
+            .fold(f64::INFINITY, f64::min);
+        let s = (b - a) / a.max(b).max(1e-12);
+        total += s;
+    }
+    total / n as f64
+}
+
+/// Davies-Bouldin index (minimize): mean over clusters of the worst
+/// (S_i + S_j) / M_ij ratio.
+pub fn davies_bouldin(x: &Matrix, centroids: &Matrix, labels: &[usize]) -> f64 {
+    let k = centroids.rows;
+    let mut s = vec![0.0f64; k];
+    let mut counts = vec![0usize; k];
+    for (i, &l) in labels.iter().enumerate() {
+        s[l] += Matrix::row_sq_dist(x, i, centroids, l).sqrt();
+        counts[l] += 1;
+    }
+    let active: Vec<usize> = (0..k).filter(|&c| counts[c] > 0).collect();
+    if active.len() < 2 {
+        return 0.0;
+    }
+    for &c in &active {
+        s[c] /= counts[c] as f64;
+    }
+    let mut db = 0.0;
+    for &i in &active {
+        let mut worst: f64 = 0.0;
+        for &j in &active {
+            if i == j {
+                continue;
+            }
+            let m = Matrix::row_sq_dist(centroids, i, centroids, j).sqrt();
+            worst = worst.max((s[i] + s[j]) / m.max(1e-12));
+        }
+        db += worst;
+    }
+    db / active.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    /// Two tight, well-separated blobs.
+    fn two_blobs() -> (Matrix, Vec<usize>, Matrix) {
+        let mut rng = Pcg32::new(5);
+        let mut data = Vec::new();
+        let mut labels = Vec::new();
+        for (ci, center) in [(-5.0f32, -5.0f32), (5.0, 5.0)].iter().enumerate() {
+            for _ in 0..20 {
+                data.push(center.0 + 0.2 * rng.next_gaussian() as f32);
+                data.push(center.1 + 0.2 * rng.next_gaussian() as f32);
+                labels.push(ci);
+            }
+        }
+        let x = Matrix::from_vec(40, 2, data);
+        let c = Matrix::from_vec(2, 2, vec![-5.0, -5.0, 5.0, 5.0]);
+        (x, labels, c)
+    }
+
+    #[test]
+    fn silhouette_high_for_separated_blobs() {
+        let (x, labels, _) = two_blobs();
+        let s = silhouette(&x, &labels);
+        assert!(s > 0.9, "expected near-1 silhouette, got {s}");
+    }
+
+    #[test]
+    fn silhouette_low_for_random_labels() {
+        let (x, _, _) = two_blobs();
+        let mut rng = Pcg32::new(6);
+        let labels: Vec<usize> = (0..40).map(|_| rng.gen_range(0, 2) as usize).collect();
+        let s = silhouette(&x, &labels);
+        assert!(s < 0.2, "random labels should score low, got {s}");
+    }
+
+    #[test]
+    fn silhouette_single_cluster_is_zero() {
+        let (x, _, _) = two_blobs();
+        assert_eq!(silhouette(&x, &vec![0; 40]), 0.0);
+    }
+
+    #[test]
+    fn silhouette_in_range() {
+        let (x, labels, _) = two_blobs();
+        let s = silhouette(&x, &labels);
+        assert!((-1.0..=1.0).contains(&s));
+    }
+
+    #[test]
+    fn davies_bouldin_better_for_true_labels() {
+        let (x, labels, c) = two_blobs();
+        let good = davies_bouldin(&x, &c, &labels);
+        let mut rng = Pcg32::new(7);
+        let bad_labels: Vec<usize> =
+            (0..40).map(|_| rng.gen_range(0, 2) as usize).collect();
+        let bad = davies_bouldin(&x, &c, &bad_labels);
+        assert!(good < bad, "good {good} >= bad {bad}");
+        assert!(good >= 0.0);
+    }
+
+    #[test]
+    fn davies_bouldin_single_active_cluster_zero() {
+        let (x, _, c) = two_blobs();
+        assert_eq!(davies_bouldin(&x, &c, &vec![0; 40]), 0.0);
+    }
+}

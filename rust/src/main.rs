@@ -1,0 +1,11 @@
+//! `bleed` — launcher for Binary Bleed searches and paper experiments.
+//!
+//! See `bleed help` (or rust/src/cli/mod.rs) for the command surface.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = binary_bleed::cli::run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

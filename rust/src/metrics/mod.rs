@@ -1,0 +1,211 @@
+//! Reporting: turning [`SearchResult`]s into the rows/series the paper's
+//! tables and figures print (visit-%, speedups, RMSE of recovered k),
+//! plus markdown/CSV writers for `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::coordinator::SearchResult;
+use crate::util::rmse;
+
+/// One row of a method-comparison table (Fig 8 / Fig 9 style).
+#[derive(Debug, Clone)]
+pub struct MethodRow {
+    pub method: String,
+    pub order: String,
+    pub k_true: Option<u32>,
+    pub k_found: Option<u32>,
+    pub visited: usize,
+    pub total_k: usize,
+    pub runtime_label: String,
+}
+
+impl MethodRow {
+    pub fn from_result(
+        method: &str,
+        order: &str,
+        k_true: Option<u32>,
+        r: &SearchResult,
+    ) -> Self {
+        Self {
+            method: method.to_string(),
+            order: order.to_string(),
+            k_true,
+            k_found: r.k_optimal,
+            visited: r.log.evaluated_count(),
+            total_k: r.total_k,
+            runtime_label: format!("{:.2}s", r.elapsed.as_secs_f64()),
+        }
+    }
+
+    pub fn percent_visited(&self) -> f64 {
+        if self.total_k == 0 {
+            0.0
+        } else {
+            100.0 * self.visited as f64 / self.total_k as f64
+        }
+    }
+
+    pub fn correct(&self) -> bool {
+        match (self.k_true, self.k_found) {
+            (Some(t), Some(f)) => t == f,
+            _ => false,
+        }
+    }
+}
+
+/// Aggregate over a sweep of k_true values (the Fig 8 overview).
+#[derive(Debug, Clone, Default)]
+pub struct SweepSummary {
+    pub rows: Vec<MethodRow>,
+}
+
+impl SweepSummary {
+    pub fn push(&mut self, row: MethodRow) {
+        self.rows.push(row);
+    }
+
+    /// Mean percent-of-K-visited across the sweep (the paper's headline
+    /// "algorithms visit the following percentages of K" numbers).
+    pub fn mean_percent_visited(&self, method: &str, order: &str) -> f64 {
+        let sel: Vec<f64> = self
+            .rows
+            .iter()
+            .filter(|r| r.method == method && r.order == order)
+            .map(MethodRow::percent_visited)
+            .collect();
+        crate::util::mean(&sel)
+    }
+
+    /// RMSE of recovered k vs k_true (paper §IV-A K-means accuracy).
+    pub fn k_rmse(&self, method: &str, order: &str) -> f64 {
+        let (mut pred, mut truth) = (Vec::new(), Vec::new());
+        for r in &self.rows {
+            if r.method == method && r.order == order {
+                if let (Some(t), Some(f)) = (r.k_true, r.k_found) {
+                    pred.push(f as f64);
+                    truth.push(t as f64);
+                }
+            }
+        }
+        rmse(&pred, &truth)
+    }
+
+    /// Fraction of sweep points where k_found == k_true.
+    pub fn accuracy(&self, method: &str, order: &str) -> f64 {
+        let sel: Vec<&MethodRow> = self
+            .rows
+            .iter()
+            .filter(|r| r.method == method && r.order == order)
+            .collect();
+        if sel.is_empty() {
+            return 0.0;
+        }
+        sel.iter().filter(|r| r.correct()).count() as f64 / sel.len() as f64
+    }
+}
+
+/// Render rows as a GitHub-style markdown table.
+pub fn render_markdown(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "| {} |", headers.join(" | "));
+    let _ = writeln!(
+        s,
+        "|{}|",
+        headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        let _ = writeln!(s, "| {} |", row.join(" | "));
+    }
+    s
+}
+
+/// Write rows as CSV (no quoting needed for our numeric tables).
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "{}", headers.join(","));
+    for row in rows {
+        let _ = writeln!(out, "{}", row.join(","));
+    }
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{binary_bleed_serial, Mode, SearchPolicy, Thresholds};
+
+    fn result(k_true: u32, mode: Mode) -> SearchResult {
+        let ks: Vec<u32> = (2..=20).collect();
+        let scorer = move |k: u32| if k <= k_true { 0.9 } else { 0.1 };
+        binary_bleed_serial(
+            &ks,
+            &scorer,
+            SearchPolicy::maximize(
+                mode,
+                Thresholds {
+                    select: 0.7,
+                    stop: 0.2,
+                },
+            ),
+        )
+    }
+
+    #[test]
+    fn row_captures_result() {
+        let r = result(10, Mode::Vanilla);
+        let row = MethodRow::from_result("vanilla", "pre", Some(10), &r);
+        assert!(row.correct());
+        assert!(row.percent_visited() <= 100.0);
+        assert_eq!(row.total_k, 19);
+    }
+
+    #[test]
+    fn sweep_summary_statistics() {
+        let mut sweep = SweepSummary::default();
+        for k_true in [5u32, 10, 15] {
+            sweep.push(MethodRow::from_result(
+                "vanilla",
+                "pre",
+                Some(k_true),
+                &result(k_true, Mode::Vanilla),
+            ));
+            sweep.push(MethodRow::from_result(
+                "standard",
+                "in",
+                Some(k_true),
+                &result(k_true, Mode::Standard),
+            ));
+        }
+        assert!((sweep.mean_percent_visited("standard", "in") - 100.0).abs() < 1e-9);
+        assert!(sweep.mean_percent_visited("vanilla", "pre") < 100.0);
+        assert_eq!(sweep.k_rmse("vanilla", "pre"), 0.0);
+        assert_eq!(sweep.accuracy("vanilla", "pre"), 1.0);
+    }
+
+    #[test]
+    fn markdown_render_shape() {
+        let md = render_markdown(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        );
+        assert_eq!(md.lines().count(), 4);
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = std::env::temp_dir().join("bb_metrics_test.csv");
+        write_csv(&p, &["x", "y"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let got = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(got, "x,y\n1,2\n");
+    }
+}

@@ -1,0 +1,219 @@
+//! K-means evaluator (§IV-A): Lloyd restarts + silhouette (maximize) or
+//! Davies-Bouldin (minimize) scoring.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::KScorer;
+use crate::linalg::{self, Matrix};
+use crate::runtime::{literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar, rank_mask};
+use crate::util::Pcg32;
+
+use super::store::SharedStore;
+use super::Backend;
+
+/// Which score the evaluator reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KMeansScoring {
+    /// Mean silhouette (maximize).
+    Silhouette,
+    /// Davies-Bouldin index (minimize) — the paper's K-means metric.
+    DaviesBouldin,
+}
+
+/// K-means over a fixed dataset.
+pub struct KMeansEvaluator {
+    x: Matrix,
+    k_max: usize,
+    /// Independent restarts per k; the best (lowest-inertia) fit is scored.
+    n_init: usize,
+    /// `kmeans_run` invocations per restart (each fuses KMEANS_ITERS
+    /// Lloyd iterations).
+    bursts: usize,
+    pub scoring: KMeansScoring,
+    backend: Backend,
+    store: Option<Arc<SharedStore>>,
+    seed: u64,
+}
+
+impl KMeansEvaluator {
+    /// HLO-backed evaluator; `x` must match the manifest's (km_n, km_d).
+    pub fn hlo(
+        x: Matrix,
+        scoring: KMeansScoring,
+        store: Arc<SharedStore>,
+        seed: u64,
+    ) -> Result<Self> {
+        let n = store.param("km_n")?;
+        let d = store.param("km_d")?;
+        let k_max = store.param("km_kmax")?;
+        anyhow::ensure!(
+            (x.rows, x.cols) == (n, d),
+            "dataset {}x{} does not match artifact preset {n}x{d}",
+            x.rows,
+            x.cols
+        );
+        Ok(Self {
+            x,
+            k_max,
+            n_init: 3,
+            bursts: 2,
+            scoring,
+            backend: Backend::Hlo,
+            store: Some(store),
+            seed,
+        })
+    }
+
+    /// Pure-Rust evaluator (any dataset shape).
+    pub fn native(x: Matrix, k_max: usize, scoring: KMeansScoring, seed: u64) -> Self {
+        Self {
+            x,
+            k_max,
+            n_init: 3,
+            bursts: 2,
+            scoring,
+            backend: Backend::Native,
+            store: None,
+            seed,
+        }
+    }
+
+    pub fn with_restarts(mut self, n: usize) -> Self {
+        self.n_init = n.max(1);
+        self
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// One restart: fit and score.
+    fn fit_once(&self, k: usize, init: usize) -> (f64, f64) {
+        let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | init as u64);
+        match self.backend {
+            Backend::Native => {
+                let fit = linalg::kmeans(&self.x, k, self.bursts * 15, &mut rng);
+                let score = match self.scoring {
+                    KMeansScoring::Silhouette => linalg::silhouette(&self.x, &fit.labels),
+                    KMeansScoring::DaviesBouldin => {
+                        linalg::davies_bouldin(&self.x, &fit.centroids, &fit.labels)
+                    }
+                };
+                (fit.inertia, score)
+            }
+            Backend::Hlo => self.fit_once_hlo(k, &mut rng).expect("HLO kmeans failed"),
+        }
+    }
+
+    fn fit_once_hlo(&self, k: usize, rng: &mut Pcg32) -> Result<(f64, f64)> {
+        let store = self.store.as_ref().expect("HLO backend without store");
+        let d = self.x.cols;
+        // Farthest-first seeding on the host (cheap), padded to K_MAX.
+        let seeded = linalg::kmeans(&self.x, k, 1, rng);
+        let mut c = Matrix::zeros(self.k_max, d);
+        c.data[..k * d].copy_from_slice(&seeded.centroids.data);
+
+        let mask = rank_mask(k, self.k_max);
+        let x_lit = literal_from_matrix(&self.x)?;
+        let mask_lit = literal_f32(&[self.k_max], &mask)?;
+        let mut labels = vec![0.0f32; self.x.rows];
+        let mut inertia = f64::INFINITY;
+        for _ in 0..self.bursts {
+            let outs = store.execute(
+                "kmeans_run",
+                &[x_lit.clone(), literal_from_matrix(&c)?, mask_lit.clone()],
+            )?;
+            c = literal_to_matrix(&outs[0], self.k_max, d)?;
+            labels = outs[1].to_vec::<f32>()?;
+            inertia = literal_to_scalar(&outs[2])?;
+        }
+        let score = match self.scoring {
+            KMeansScoring::Silhouette => {
+                let outs = store.execute(
+                    "silhouette",
+                    &[
+                        x_lit,
+                        literal_f32(&[self.x.rows], &labels)?,
+                        mask_lit,
+                    ],
+                )?;
+                literal_to_scalar(&outs[0])?
+            }
+            KMeansScoring::DaviesBouldin => {
+                let outs = store.execute(
+                    "davies_bouldin",
+                    &[
+                        x_lit,
+                        literal_from_matrix(&c)?,
+                        literal_f32(&[self.x.rows], &labels)?,
+                        mask_lit,
+                    ],
+                )?;
+                literal_to_scalar(&outs[0])?
+            }
+        };
+        Ok((inertia, score))
+    }
+
+    /// Best-restart score at k.
+    pub fn evaluate(&self, k: u32) -> f64 {
+        let k = k as usize;
+        assert!(k >= 2 && k <= self.k_max, "k={k} outside [2, {}]", self.k_max);
+        (0..self.n_init)
+            .map(|i| self.fit_once(k, i))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .map(|(_, s)| s)
+            .unwrap()
+    }
+}
+
+impl KScorer for KMeansEvaluator {
+    fn score(&self, k: u32) -> f64 {
+        self.evaluate(k)
+    }
+
+    fn name(&self) -> &str {
+        match self.scoring {
+            KMeansScoring::Silhouette => "kmeans-silhouette",
+            KMeansScoring::DaviesBouldin => "kmeans-davies-bouldin",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_blobs;
+
+    #[test]
+    fn db_low_at_true_k_high_when_overfit() {
+        let mut rng = Pcg32::new(211);
+        let ds = gaussian_blobs(&mut rng, 40, 4, 6, 10.0, 0.4);
+        let ev = KMeansEvaluator::native(ds.x, 12, KMeansScoring::DaviesBouldin, 3);
+        let db_true = ev.evaluate(4);
+        let db_under = ev.evaluate(2);
+        assert!(db_true < db_under, "DB at k_true {db_true} !< under {db_under}");
+        assert!(db_true < 0.5, "tight blobs: {db_true}");
+    }
+
+    #[test]
+    fn silhouette_peaks_at_true_k() {
+        let mut rng = Pcg32::new(212);
+        let ds = gaussian_blobs(&mut rng, 40, 5, 4, 10.0, 0.4);
+        let ev = KMeansEvaluator::native(ds.x, 10, KMeansScoring::Silhouette, 4);
+        let s_true = ev.evaluate(5);
+        let s_over = ev.evaluate(9);
+        assert!(s_true > 0.75, "{s_true}");
+        assert!(s_over < s_true, "{s_over} !< {s_true}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_k_below_2() {
+        let mut rng = Pcg32::new(213);
+        let ds = gaussian_blobs(&mut rng, 10, 2, 2, 5.0, 0.5);
+        KMeansEvaluator::native(ds.x, 4, KMeansScoring::Silhouette, 1).evaluate(1);
+    }
+}

@@ -1,0 +1,37 @@
+//! Model evaluators (DESIGN.md S8–S10): the `f(k, D)` + `S(·)` pairs the
+//! coordinator searches over.
+//!
+//! Every evaluator has two backends:
+//! * [`Backend::Hlo`] — the production path: the AOT artifacts executed on
+//!   the PJRT CPU client (python never runs);
+//! * [`Backend::Native`] — the pure-Rust reference models from
+//!   [`crate::linalg`]; used when artifacts are absent, as the numeric
+//!   oracle, and for the HLO-vs-native ablation bench.
+
+pub mod kmeans;
+pub mod nmfk;
+pub mod rescal;
+pub mod store;
+
+pub use kmeans::{KMeansEvaluator, KMeansScoring};
+pub use nmfk::NmfkEvaluator;
+pub use rescal::RescalEvaluator;
+pub use store::SharedStore;
+
+/// Which compute backend an evaluator drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO artifacts on PJRT (requires `make artifacts`).
+    Hlo,
+    /// Pure-Rust reference implementations.
+    Native,
+}
+
+impl Backend {
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Hlo => "hlo",
+            Backend::Native => "native",
+        }
+    }
+}

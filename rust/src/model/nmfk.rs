@@ -1,0 +1,212 @@
+//! NMFk evaluator (paper refs [1]–[3]): NMF with automatic model
+//! selection via perturbation cluster stability.
+//!
+//! `score(k)` = minimum per-cluster cosine silhouette of the W-columns
+//! across `perturbations` NMF runs on resampled copies of X (see
+//! [`crate::linalg::cluster_stability`]). Stable rank ⇒ high score;
+//! past the true rank the factors wander and the score collapses — the
+//! square-wave profile Binary Bleed's pruning heuristic assumes.
+//!
+//! The per-run NMF is the hot path: `bursts × NMF_ITERS` fused
+//! multiplicative updates through the `nmf_run` HLO artifact (or the
+//! pure-Rust reference with `Backend::Native`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::KScorer;
+use crate::linalg::{nmf_from, perturbation_silhouette, Matrix};
+use crate::runtime::{literal_f32, literal_from_matrix, literal_to_matrix, rank_mask};
+use crate::util::Pcg32;
+
+use super::store::SharedStore;
+use super::Backend;
+
+/// NMFk over a fixed dataset.
+pub struct NmfkEvaluator {
+    x: Matrix,
+    k_max: usize,
+    /// NMF restarts on resampled data per k (paper's perturbations).
+    perturbations: usize,
+    /// HLO `nmf_run` invocations per restart (each fuses NMF_ITERS
+    /// updates); Native backend runs `bursts * 25` plain updates.
+    bursts: usize,
+    /// Multiplicative resampling amplitude: X' = X ⊙ U(1-a, 1+a).
+    resample_amplitude: f32,
+    backend: Backend,
+    store: Option<Arc<SharedStore>>,
+    seed: u64,
+}
+
+impl NmfkEvaluator {
+    /// HLO-backed evaluator. `x` must match the manifest's (nmf_m, nmf_n).
+    pub fn hlo(x: Matrix, store: Arc<SharedStore>, seed: u64) -> Result<Self> {
+        let m = store.param("nmf_m")?;
+        let n = store.param("nmf_n")?;
+        let k_max = store.param("nmf_kmax")?;
+        anyhow::ensure!(
+            (x.rows, x.cols) == (m, n),
+            "dataset {}x{} does not match artifact preset {m}x{n}",
+            x.rows,
+            x.cols
+        );
+        Ok(Self {
+            x,
+            k_max,
+            perturbations: 4,
+            bursts: 4,
+            resample_amplitude: 0.02,
+            backend: Backend::Hlo,
+            store: Some(store),
+            seed,
+        })
+    }
+
+    /// Pure-Rust evaluator (any dataset shape).
+    pub fn native(x: Matrix, k_max: usize, seed: u64) -> Self {
+        Self {
+            x,
+            k_max,
+            perturbations: 4,
+            bursts: 4,
+            resample_amplitude: 0.02,
+            backend: Backend::Native,
+            store: None,
+            seed,
+        }
+    }
+
+    pub fn with_perturbations(mut self, p: usize) -> Self {
+        assert!(p >= 2, "cluster stability needs >= 2 runs");
+        self.perturbations = p;
+        self
+    }
+
+    pub fn with_bursts(mut self, b: usize) -> Self {
+        self.bursts = b.max(1);
+        self
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Resampled copy of X for perturbation `i` at rank `k`.
+    fn resample(&self, rng: &mut Pcg32) -> Matrix {
+        let a = self.resample_amplitude;
+        self.x
+            .map(|v| v) // clone via map to keep shape metadata
+            .zip(&self.x, |_, orig| {
+                orig * (1.0 - a + 2.0 * a * rng.next_f32())
+            })
+    }
+
+    /// One NMF fit at rank k; returns the active W columns (m × k).
+    fn fit_w(&self, k: usize, pert: usize) -> Matrix {
+        let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | pert as u64);
+        let xp = self.resample(&mut rng);
+        match self.backend {
+            Backend::Native => {
+                let w0 = Matrix::rand_uniform(self.x.rows, k, &mut rng).map(|v| v + 0.01);
+                let h0 = Matrix::rand_uniform(k, self.x.cols, &mut rng).map(|v| v + 0.01);
+                let fit = nmf_from(&xp, w0, h0, self.bursts * 25);
+                fit.w
+            }
+            Backend::Hlo => self.fit_w_hlo(&xp, k, &mut rng).expect("HLO nmf_run failed"),
+        }
+    }
+
+    fn fit_w_hlo(&self, xp: &Matrix, k: usize, rng: &mut Pcg32) -> Result<Matrix> {
+        let store = self.store.as_ref().expect("HLO backend without store");
+        let (m, n) = (self.x.rows, self.x.cols);
+        let mask = rank_mask(k, self.k_max);
+        let mut w = Matrix::rand_uniform(m, self.k_max, rng).map(|v| v + 0.01);
+        let mut h = Matrix::rand_uniform(self.k_max, n, rng).map(|v| v + 0.01);
+        let x_lit = literal_from_matrix(xp)?;
+        let mask_lit = literal_f32(&[self.k_max], &mask)?;
+        for _ in 0..self.bursts {
+            let outs = store.execute(
+                "nmf_run",
+                &[
+                    // Literals are consumed per call; rebuild cheap handles.
+                    x_lit.clone(),
+                    literal_from_matrix(&w)?,
+                    literal_from_matrix(&h)?,
+                    mask_lit.clone(),
+                ],
+            )?;
+            w = literal_to_matrix(&outs[0], m, self.k_max)?;
+            h = literal_to_matrix(&outs[1], self.k_max, n)?;
+        }
+        // Slice the k active columns.
+        let mut wk = Matrix::zeros(m, k);
+        for r in 0..m {
+            for c in 0..k {
+                *wk.at_mut(r, c) = w.at(r, c);
+            }
+        }
+        Ok(wk)
+    }
+
+    /// The NMFk stability score at rank k.
+    pub fn evaluate(&self, k: u32) -> f64 {
+        let k = k as usize;
+        assert!(k >= 1 && k <= self.k_max, "k={k} outside [1, {}]", self.k_max);
+        if k == 1 {
+            // Rank-1 is always "stable"; NMFk convention scores it 1.0
+            // but it is excluded from search spaces (K starts at 2).
+            return 1.0;
+        }
+        let ws: Vec<Matrix> =
+            (0..self.perturbations).map(|p| self.fit_w(k, p)).collect();
+        perturbation_silhouette(&ws)
+    }
+}
+
+impl KScorer for NmfkEvaluator {
+    fn score(&self, k: u32) -> f64 {
+        self.evaluate(k)
+    }
+
+    fn name(&self) -> &str {
+        "nmfk-silhouette"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::planted_nmf;
+
+    #[test]
+    fn native_scores_planted_rank_high_and_overfit_low() {
+        let mut rng = Pcg32::new(201);
+        let ds = planted_nmf(&mut rng, 60, 66, 4, 0.01);
+        let ev = NmfkEvaluator::native(ds.x, 12, 7).with_bursts(4);
+        let s_true = ev.evaluate(4);
+        let s_over = ev.evaluate(11);
+        assert!(s_true > 0.7, "true rank should be stable: {s_true}");
+        assert!(
+            s_over < s_true,
+            "overfit rank must score below true: {s_over} vs {s_true}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Pcg32::new(202);
+        let ds = planted_nmf(&mut rng, 40, 44, 3, 0.01);
+        let ev = NmfkEvaluator::native(ds.x.clone(), 8, 9);
+        let ev2 = NmfkEvaluator::native(ds.x, 8, 9);
+        assert_eq!(ev.evaluate(3), ev2.evaluate(3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_k_above_kmax() {
+        let mut rng = Pcg32::new(203);
+        let ds = planted_nmf(&mut rng, 20, 22, 2, 0.01);
+        NmfkEvaluator::native(ds.x, 4, 1).evaluate(5);
+    }
+}

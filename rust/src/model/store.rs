@@ -1,0 +1,85 @@
+//! Thread-shareable wrapper around the PJRT [`ArtifactStore`].
+//!
+//! The `xla` crate's `PjRtClient` holds an `Rc` internally, so it is
+//! neither `Send` nor `Sync`. The multi-rank scheduler shares one store
+//! across worker threads, so we serialize **every** PJRT interaction
+//! (compile, execute, drop-order) behind a single mutex and assert
+//! `Send + Sync` on that basis: the `Rc` reference count is only ever
+//! touched while the lock is held, and the store is dropped by the last
+//! `Arc` owner after all workers joined.
+//!
+//! Serializing executes does not cost wall-clock in practice: XLA CPU
+//! parallelizes a single execute across cores, so concurrent executes
+//! would contend for the same cores anyway. (Measured in EXPERIMENTS.md
+//! §Perf.)
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::runtime::ArtifactStore;
+
+/// `Send + Sync` facade over the PJRT artifact store.
+pub struct SharedStore {
+    inner: Mutex<ArtifactStore>,
+}
+
+// SAFETY: all access to the inner store (and thus to every Rc-carrying
+// xla wrapper object) is serialized by the mutex; literals passed in/out
+// are plain host buffers. See module docs.
+unsafe impl Send for SharedStore {}
+unsafe impl Sync for SharedStore {}
+
+impl SharedStore {
+    pub fn new(store: ArtifactStore) -> Self {
+        Self {
+            inner: Mutex::new(store),
+        }
+    }
+
+    /// Open from a directory (see [`ArtifactStore::open`]).
+    pub fn open(dir: &str) -> Result<Self> {
+        Ok(Self::new(ArtifactStore::open(dir)?))
+    }
+
+    /// Open from `$BB_ARTIFACTS` / `./artifacts`, walking up one level if
+    /// needed (tests run from the target dir).
+    pub fn open_default() -> Result<Self> {
+        let candidates = ["artifacts", "../artifacts"];
+        for c in candidates {
+            if std::path::Path::new(c).join("manifest.json").exists() {
+                return Self::open(c);
+            }
+        }
+        Ok(Self::new(ArtifactStore::open_default()?))
+    }
+
+    /// Serialized execute — see [`ArtifactStore::execute`].
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.inner.lock().unwrap().execute(name, inputs)
+    }
+
+    /// Serialized manifest access.
+    pub fn with_manifest<T>(&self, f: impl FnOnce(&crate::runtime::Manifest) -> T) -> T {
+        f(self.inner.lock().unwrap().manifest())
+    }
+
+    pub fn param(&self, name: &str) -> Result<usize> {
+        self.with_manifest(|m| m.param(name))
+    }
+
+    /// Pre-compile entries so search timing excludes compilation.
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        let store = self.inner.lock().unwrap();
+        for n in names {
+            store.warm(n)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for SharedStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SharedStore({:?})", self.inner.lock().unwrap())
+    }
+}

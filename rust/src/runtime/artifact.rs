@@ -1,0 +1,145 @@
+//! The artifact store: load HLO text, compile once on the PJRT CPU
+//! client, cache the executable, execute from the L3 hot path.
+//!
+//! HLO *text* is the interchange format (see python/compile/aot.py and
+//! /opt/xla-example/README.md): jax ≥ 0.5 protos carry 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::{Entry, Manifest};
+
+/// A PJRT client plus compiled-executable cache keyed by entry name.
+///
+/// `execute` takes `&self`: the compile cache is interior-mutable so one
+/// store can be shared behind an `Arc` by every evaluator thread.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    /// Open the store over an artifacts directory (must hold
+    /// manifest.json + *.hlo.txt; produced by `make artifacts`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default location: `$BB_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        let dir =
+            std::env::var("BB_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached executable for) an entry point.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.entry(name)?;
+        let path = self.manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Force-compile an entry (warm-up; keeps compile latency out of the
+    /// search hot path).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute an entry point. Inputs must match the manifest specs
+    /// (checked); returns the flattened output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let entry = self.manifest.entry(name)?;
+        self.validate_inputs(entry, inputs)?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        ensure!(
+            !result.is_empty() && !result[0].is_empty(),
+            "{name}: empty execution result"
+        );
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} output"))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let outs = lit.to_tuple()?;
+        ensure!(
+            entry.outputs.is_empty() || outs.len() == entry.outputs.len(),
+            "{name}: got {} outputs, manifest says {}",
+            outs.len(),
+            entry.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    fn validate_inputs(&self, entry: &Entry, inputs: &[xla::Literal]) -> Result<()> {
+        ensure!(
+            inputs.len() == entry.inputs.len(),
+            "{}: got {} inputs, manifest says {}",
+            entry.name,
+            inputs.len(),
+            entry.inputs.len()
+        );
+        for (lit, spec) in inputs.iter().zip(&entry.inputs) {
+            ensure!(
+                lit.element_count() == spec.element_count(),
+                "{}: input '{}' has {} elements, spec {:?} wants {}",
+                entry.name,
+                spec.name,
+                lit.element_count(),
+                spec.shape,
+                spec.element_count()
+            );
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ArtifactStore(preset={}, {} entries, compiled={})",
+            self.manifest.preset,
+            self.manifest.entries.len(),
+            self.cache.lock().unwrap().len()
+        )
+    }
+}

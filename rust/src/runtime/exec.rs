@@ -1,0 +1,92 @@
+//! Literal marshaling helpers: host `Vec<f32>`/[`Matrix`] ⇄ PJRT literals.
+
+use anyhow::{ensure, Result};
+
+use crate::linalg::Matrix;
+
+/// Build an f32 literal of the given shape from a flat row-major slice.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    ensure!(
+        n == data.len(),
+        "literal shape {:?} wants {n} elements, got {}",
+        shape,
+        data.len()
+    );
+    let flat = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(flat);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+/// Matrix -> 2-D literal.
+pub fn literal_from_matrix(m: &Matrix) -> Result<xla::Literal> {
+    literal_f32(&[m.rows, m.cols], &m.data)
+}
+
+/// Literal -> flat f32 vec.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Literal -> Matrix with the given shape.
+pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v = literal_to_vec(lit)?;
+    ensure!(
+        v.len() == rows * cols,
+        "literal has {} elements, wanted {rows}x{cols}",
+        v.len()
+    );
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+/// Literal -> f64 scalar (f32 storage).
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f64> {
+    let v = literal_to_vec(lit)?;
+    ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0] as f64)
+}
+
+/// The active-rank mask vector of the masked-rank convention
+/// (DESIGN.md §2.1): ones for components < k, zeros above.
+pub fn rank_mask(k: usize, k_max: usize) -> Vec<f32> {
+    assert!(k <= k_max, "k={k} exceeds K_MAX={k_max}");
+    let mut m = vec![0.0f32; k_max];
+    m[..k].fill(1.0);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_mask_shape() {
+        assert_eq!(rank_mask(3, 5), vec![1.0, 1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(rank_mask(5, 5), vec![1.0; 5]);
+        assert_eq!(rank_mask(0, 3), vec![0.0; 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rank_mask_rejects_oversize() {
+        rank_mask(6, 5);
+    }
+
+    #[test]
+    fn literal_roundtrip_vec_and_matrix() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let lit = literal_from_matrix(&m).unwrap();
+        let back = literal_to_matrix(&lit, 2, 3).unwrap();
+        assert_eq!(back.data, m.data);
+        let s = literal_f32(&[1], &[7.5]).unwrap();
+        assert_eq!(literal_to_scalar(&s).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! `artifacts/manifest.json` — the contract between the AOT compile path
+//! (python/compile/aot.py) and the Rust runtime: which HLO files exist,
+//! their input shapes and output arity.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// One input tensor spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT entry point.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+    /// Static constants baked into the HLO (e.g. fused iteration counts).
+    pub consts: BTreeMap<String, f64>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    /// Shape-preset parameters (nmf_m, km_n, ...).
+    pub params: BTreeMap<String, usize>,
+    pub entries: BTreeMap<String, Entry>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let preset = j
+            .get("preset")
+            .and_then(Json::as_str)
+            .context("manifest: missing preset")?
+            .to_string();
+        let mut params = BTreeMap::new();
+        if let Some(p) = j.get("params").and_then(Json::as_obj) {
+            for (k, v) in p {
+                if let Some(x) = v.as_usize() {
+                    params.insert(k.clone(), x);
+                }
+            }
+        }
+        let mut entries = BTreeMap::new();
+        let raw = j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .context("manifest: missing entries")?;
+        for (name, e) in raw {
+            entries.insert(name.clone(), parse_entry(name, e)?);
+        }
+        Ok(Manifest {
+            preset,
+            params,
+            entries,
+            dir,
+        })
+    }
+
+    /// Entry lookup with a helpful error.
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries.get(name).with_context(|| {
+            format!(
+                "entry '{name}' not in manifest (have: {:?}) — run `make artifacts`",
+                self.entries.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Shape-preset parameter lookup.
+    pub fn param(&self, name: &str) -> Result<usize> {
+        self.params
+            .get(name)
+            .copied()
+            .with_context(|| format!("param '{name}' not in manifest"))
+    }
+}
+
+fn parse_entry(name: &str, e: &Json) -> Result<Entry> {
+    let file = e
+        .get("file")
+        .and_then(Json::as_str)
+        .with_context(|| format!("entry {name}: missing file"))?
+        .to_string();
+    let mut inputs = Vec::new();
+    for inp in e
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("entry {name}: missing inputs"))?
+    {
+        let iname = inp
+            .get("name")
+            .and_then(Json::as_str)
+            .context("input: missing name")?
+            .to_string();
+        let dtype = inp.get("dtype").and_then(Json::as_str).unwrap_or("f32");
+        if dtype != "f32" {
+            bail!("entry {name}: input {iname} has unsupported dtype {dtype}");
+        }
+        let shape = inp
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("input: missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        inputs.push(TensorSpec { name: iname, shape });
+    }
+    let outputs = e
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|o| o.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default();
+    let mut consts = BTreeMap::new();
+    if let Some(c) = e.get("consts").and_then(Json::as_obj) {
+        for (k, v) in c {
+            if let Some(x) = v.as_f64() {
+                consts.insert(k.clone(), x);
+            }
+        }
+    }
+    Ok(Entry {
+        name: name.to_string(),
+        file,
+        inputs,
+        outputs,
+        consts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("bb_manifest_test1");
+        write_manifest(
+            &dir,
+            r#"{"preset":"quick","params":{"nmf_m":256},
+                "entries":{"nmf_run":{"file":"nmf_run.hlo.txt",
+                  "inputs":[{"name":"x","shape":[256,288],"dtype":"f32"}],
+                  "outputs":["w","h","relerr"],
+                  "consts":{"iters":25}}}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.preset, "quick");
+        assert_eq!(m.param("nmf_m").unwrap(), 256);
+        let e = m.entry("nmf_run").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![256, 288]);
+        assert_eq!(e.inputs[0].element_count(), 256 * 288);
+        assert_eq!(e.outputs.len(), 3);
+        assert_eq!(e.consts["iters"], 25.0);
+        assert!(m.hlo_path(e).ends_with("nmf_run.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_entry_is_helpful_error() {
+        let dir = std::env::temp_dir().join("bb_manifest_test2");
+        write_manifest(&dir, r#"{"preset":"quick","entries":{}}"#);
+        let m = Manifest::load(&dir).unwrap();
+        let err = format!("{:#}", m.entry("nope").unwrap_err());
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let dir = std::env::temp_dir().join("bb_manifest_test3");
+        write_manifest(
+            &dir,
+            r#"{"preset":"q","entries":{"e":{"file":"f",
+                "inputs":[{"name":"x","shape":[2],"dtype":"s32"}],
+                "outputs":[]}}}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

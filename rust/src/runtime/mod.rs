@@ -1,0 +1,18 @@
+//! PJRT runtime (DESIGN.md S7): loads the AOT HLO-text artifacts and
+//! executes them from the coordinator hot path. Python never runs here.
+//!
+//! Flow: `ArtifactStore::open("artifacts")` → parses `manifest.json` →
+//! `execute("nmf_run", &[x, w, h, mask])` compiles on first use (cached)
+//! and returns the output tuple as literals. See rust/tests/ for the
+//! numeric round-trip checks against the pure-Rust oracles.
+
+pub mod artifact;
+pub mod exec;
+pub mod manifest;
+
+pub use artifact::ArtifactStore;
+pub use exec::{
+    literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar,
+    literal_to_vec, rank_mask,
+};
+pub use manifest::{Entry, Manifest, TensorSpec};

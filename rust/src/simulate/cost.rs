@@ -1,0 +1,87 @@
+//! Per-k evaluation cost models for the distributed simulator.
+//!
+//! §IV-C gives the calibration constants: pyDNMFk on the 50 TB dataset
+//! averaged 17.14 min per k on 52,000 cores; pyDRESCALk on 11.5 TB
+//! averaged 18 min per k on 4,096 cores. In the *distributed* regime a
+//! single k evaluation occupies the whole cluster (data larger than
+//! memory), so k values execute sequentially and total runtime is
+//! `visited_k × cost(k)` — which is exactly what Fig 9 plots.
+
+/// Cost (in minutes) of evaluating the model at k.
+#[derive(Debug, Clone)]
+pub enum CostModel {
+    /// Flat per-k cost (the paper's reported averages).
+    Constant { minutes_per_k: f64 },
+    /// Cost grows with k (NMF update cost is linear in k): base + slope·k.
+    LinearInK { base: f64, slope: f64 },
+    /// Explicit per-k table with fallback.
+    Table {
+        entries: Vec<(u32, f64)>,
+        default: f64,
+    },
+}
+
+impl CostModel {
+    pub fn minutes(&self, k: u32) -> f64 {
+        match self {
+            CostModel::Constant { minutes_per_k } => *minutes_per_k,
+            CostModel::LinearInK { base, slope } => base + slope * k as f64,
+            CostModel::Table { entries, default } => entries
+                .iter()
+                .find(|(kk, _)| *kk == k)
+                .map(|(_, c)| *c)
+                .unwrap_or(*default),
+        }
+    }
+
+    /// pyDNMFk 50 TB calibration (§IV-C): 17.14 min/k, 120 min for K={2..8}.
+    pub fn paper_dnmf() -> Self {
+        CostModel::Constant {
+            minutes_per_k: 120.0 / 7.0,
+        }
+    }
+
+    /// pyDRESCALk 11.5 TB calibration (§IV-C): 18 min/k, 180 min for K={2..11}.
+    pub fn paper_drescal() -> Self {
+        CostModel::Constant {
+            minutes_per_k: 18.0,
+        }
+    }
+
+    /// Chicoma arXiv run (§IV-B): normalized to 1 unit per k (the paper
+    /// reports only the visited-% for this experiment).
+    pub fn unit() -> Self {
+        CostModel::Constant { minutes_per_k: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_calibrations() {
+        assert!((CostModel::paper_dnmf().minutes(5) - 17.142857).abs() < 1e-4);
+        assert_eq!(CostModel::paper_drescal().minutes(3), 18.0);
+    }
+
+    #[test]
+    fn linear_grows() {
+        let m = CostModel::LinearInK {
+            base: 2.0,
+            slope: 0.5,
+        };
+        assert_eq!(m.minutes(4), 4.0);
+        assert!(m.minutes(10) > m.minutes(4));
+    }
+
+    #[test]
+    fn table_with_default() {
+        let m = CostModel::Table {
+            entries: vec![(2, 5.0)],
+            default: 1.0,
+        };
+        assert_eq!(m.minutes(2), 5.0);
+        assert_eq!(m.minutes(9), 1.0);
+    }
+}

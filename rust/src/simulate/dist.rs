@@ -1,0 +1,375 @@
+//! Distributed / multi-node execution simulators (DESIGN.md S13).
+//!
+//! Two regimes, matching §II's parallel-vs-distributed distinction:
+//!
+//! * [`simulate_distributed`] — the *distributed* regime of §IV-C /
+//!   Fig 9: one k evaluation occupies the entire cluster, so k values run
+//!   **sequentially** in the Binary Bleed visit order and the total
+//!   runtime is `Σ cost(k visited)`. The search engine is the real serial
+//!   coordinator; only the clock is simulated.
+//! * [`simulate_parallel_cluster`] — the *parallel* regime of §IV-B
+//!   (Chicoma multi-node NMFk): R resources each evaluate different k
+//!   concurrently; an event-driven clock replays pruning propagation with
+//!   publication timestamps (a k already executing is never killed —
+//!   Fig 4's "does not prune k values after the model begins execution").
+
+use std::collections::BinaryHeap;
+
+use crate::coordinator::{
+    binary_bleed_serial, ParallelConfig, SearchPolicy, SearchResult,
+};
+use crate::data::ScoreProfile;
+
+use super::cost::CostModel;
+
+/// Outcome of a simulated cluster run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// The coordinator's search result (visits, pruned, optimum).
+    pub k_optimal: Option<u32>,
+    /// Number of k actually evaluated.
+    pub evaluated: usize,
+    /// |K|.
+    pub total_k: usize,
+    /// Simulated minutes: distributed = serial sum, parallel = makespan.
+    pub runtime_minutes: f64,
+    /// Per-visit trace: (k, resource, start_min, end_min).
+    pub trace: Vec<SimVisit>,
+}
+
+/// One simulated evaluation.
+#[derive(Debug, Clone)]
+pub struct SimVisit {
+    pub k: u32,
+    pub resource: usize,
+    pub start: f64,
+    pub end: f64,
+    pub score: f64,
+    pub selected: bool,
+}
+
+impl SimOutcome {
+    pub fn percent_visited(&self) -> f64 {
+        if self.total_k == 0 {
+            return 0.0;
+        }
+        100.0 * self.evaluated as f64 / self.total_k as f64
+    }
+}
+
+/// §IV-C regime: whole-cluster-per-k, sequential visits, simulated clock.
+pub fn simulate_distributed(
+    ks: &[u32],
+    profile: &ScoreProfile,
+    policy: SearchPolicy,
+    cost: &CostModel,
+) -> SimOutcome {
+    let result: SearchResult = binary_bleed_serial(ks, profile, policy);
+    let mut t = 0.0;
+    let mut trace = Vec::new();
+    for k in result.log.evaluated() {
+        let start = t;
+        t += cost.minutes(k);
+        trace.push(SimVisit {
+            k,
+            resource: 0,
+            start,
+            end: t,
+            score: result.log.score_of(k).unwrap_or(f64::NAN),
+            selected: result.k_optimal == Some(k),
+        });
+    }
+    SimOutcome {
+        k_optimal: result.k_optimal,
+        evaluated: result.log.evaluated_count(),
+        total_k: ks.len(),
+        runtime_minutes: t,
+        trace,
+    }
+}
+
+/// Min-heap entry: (time, resource).
+#[derive(PartialEq)]
+struct Ready(f64, usize);
+
+impl Eq for Ready {}
+
+impl PartialOrd for Ready {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ready {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed for min-heap; tie-break on resource id for determinism.
+        other
+            .0
+            .partial_cmp(&self.0)
+            .unwrap()
+            .then(other.1.cmp(&self.1))
+    }
+}
+
+/// §IV-B regime: R resources evaluate k concurrently; publications take
+/// effect at the publisher's *finish* time.
+pub fn simulate_parallel_cluster(
+    ks: &[u32],
+    profile: &ScoreProfile,
+    policy: SearchPolicy,
+    cost: &CostModel,
+    cfg: ParallelConfig,
+) -> SimOutcome {
+    let resources = cfg.resources();
+    let work = cfg.pipeline.split(ks, resources, cfg.traversal);
+    let mut cursors = vec![0usize; resources];
+    // Pruning bounds as (value, effective_time) event lists.
+    let mut floor_events: Vec<(u32, f64)> = Vec::new();
+    let mut ceil_events: Vec<(u32, f64)> = Vec::new();
+    let mut best: Option<(u32, f64)> = None;
+    let mut trace = Vec::new();
+    let mut heap: BinaryHeap<Ready> = (0..resources).map(|r| Ready(0.0, r)).collect();
+    let mut makespan = 0.0f64;
+    let mut evaluated = 0usize;
+
+    let floor_at = |events: &[(u32, f64)], t: f64| -> Option<u32> {
+        events
+            .iter()
+            .filter(|(_, at)| *at <= t)
+            .map(|(v, _)| *v)
+            .max()
+    };
+    let ceil_at = |events: &[(u32, f64)], t: f64| -> Option<u32> {
+        events
+            .iter()
+            .filter(|(_, at)| *at <= t)
+            .map(|(v, _)| *v)
+            .min()
+    };
+
+    while let Some(Ready(t, r)) = heap.pop() {
+        // Pull the next admissible k for resource r at time t.
+        let mut launched = false;
+        while cursors[r] < work[r].len() {
+            let k = work[r][cursors[r]];
+            cursors[r] += 1;
+            let f = floor_at(&floor_events, t);
+            let c = ceil_at(&ceil_events, t);
+            if f.is_some_and(|f| k <= f) || c.is_some_and(|c| k >= c) {
+                continue; // pruned skip, zero cost
+            }
+            let score = ScoreProfile::score(profile, k);
+            let end = t + cost.minutes(k);
+            evaluated += 1;
+            let selected = policy.selects(score);
+            if selected {
+                if policy.prunes_on_select() {
+                    floor_events.push((k, end));
+                }
+                if best.is_none_or(|(bk, _)| k > bk) {
+                    best = Some((k, score));
+                }
+            }
+            if policy.stops(score) {
+                ceil_events.push((k, end));
+            }
+            trace.push(SimVisit {
+                k,
+                resource: r,
+                start: t,
+                end,
+                score,
+                selected,
+            });
+            makespan = makespan.max(end);
+            heap.push(Ready(end, r));
+            launched = true;
+            break;
+        }
+        let _ = launched; // resource drained when no launch happened
+    }
+
+    SimOutcome {
+        k_optimal: best.map(|(k, _)| k),
+        evaluated,
+        total_k: ks.len(),
+        runtime_minutes: makespan,
+        trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Mode, Thresholds, Traversal};
+
+    fn pol(mode: Mode) -> SearchPolicy {
+        SearchPolicy::maximize(
+            mode,
+            Thresholds {
+                select: 0.75,
+                stop: 0.2,
+            },
+        )
+    }
+
+    #[test]
+    fn fig9_drescal_pre_order_30_percent() {
+        // §IV-C RESCAL: K={2..11}, pre-order visited 30% => 54 min vs 180.
+        let ks: Vec<u32> = (2..=11).collect();
+        let profile = ScoreProfile::SquareWave {
+            k_true: 11,
+            high: 0.9,
+            low: 0.1,
+        };
+        let out = simulate_distributed(
+            &ks,
+            &profile,
+            pol(Mode::Vanilla),
+            &CostModel::paper_drescal(),
+        );
+        assert_eq!(out.evaluated, 3, "paper: 30% of 10 k");
+        assert!((out.percent_visited() - 30.0).abs() < 1e-9);
+        assert!((out.runtime_minutes - 54.0).abs() < 1e-9);
+        assert_eq!(out.k_optimal, Some(11));
+    }
+
+    #[test]
+    fn fig9_dnmf_pre_order_43_percent() {
+        // §IV-C NMF: K={2..8}, pre-order visited 43% => 51.43 min vs 120.
+        let ks: Vec<u32> = (2..=8).collect();
+        let profile = ScoreProfile::SquareWave {
+            k_true: 8,
+            high: 0.9,
+            low: 0.1,
+        };
+        let out = simulate_distributed(
+            &ks,
+            &profile,
+            pol(Mode::Vanilla),
+            &CostModel::paper_dnmf(),
+        );
+        assert_eq!(out.evaluated, 3);
+        assert!((out.percent_visited() - 42.857).abs() < 0.01);
+        assert!((out.runtime_minutes - 51.4285).abs() < 0.01);
+    }
+
+    #[test]
+    fn distributed_standard_costs_full_grid() {
+        let ks: Vec<u32> = (2..=11).collect();
+        let profile = ScoreProfile::SquareWave {
+            k_true: 11,
+            high: 0.9,
+            low: 0.1,
+        };
+        let out = simulate_distributed(
+            &ks,
+            &profile,
+            pol(Mode::Standard),
+            &CostModel::paper_drescal(),
+        );
+        assert_eq!(out.evaluated, 10);
+        assert!((out.runtime_minutes - 180.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_cluster_basic_invariants() {
+        let ks: Vec<u32> = (2..=30).collect();
+        let profile = ScoreProfile::SquareWave {
+            k_true: 20,
+            high: 0.9,
+            low: 0.1,
+        };
+        let cfg = ParallelConfig {
+            ranks: 4,
+            threads_per_rank: 1,
+            traversal: Traversal::PreOrder,
+            ..Default::default()
+        };
+        let out = simulate_parallel_cluster(
+            &ks,
+            &profile,
+            pol(Mode::Vanilla),
+            &CostModel::unit(),
+            cfg,
+        );
+        assert_eq!(out.k_optimal, Some(20));
+        assert!(out.evaluated <= 29);
+        // Makespan of 4 parallel resources beats the serial sum.
+        assert!(out.runtime_minutes <= out.evaluated as f64);
+        // No two evaluations overlap on one resource.
+        for r in 0..4 {
+            let mut spans: Vec<(f64, f64)> = out
+                .trace
+                .iter()
+                .filter(|v| v.resource == r)
+                .map(|v| (v.start, v.end))
+                .collect();
+            spans.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in spans.windows(2) {
+                assert!(w[0].1 <= w[1].0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_cluster_in_flight_k_not_killed() {
+        // A long-running k that started before a prune lands must finish
+        // (it appears in the trace even though floor passes it).
+        let ks: Vec<u32> = (2..=10).collect();
+        let profile = ScoreProfile::SquareWave {
+            k_true: 10,
+            high: 0.9,
+            low: 0.1,
+        };
+        let cfg = ParallelConfig {
+            ranks: 3,
+            threads_per_rank: 1,
+            traversal: Traversal::InOrder,
+            ..Default::default()
+        };
+        let out = simulate_parallel_cluster(
+            &ks,
+            &profile,
+            pol(Mode::Vanilla),
+            &CostModel::Constant { minutes_per_k: 5.0 },
+            cfg,
+        );
+        // In-order on 3 resources: resources start 2, 3, 4 simultaneously;
+        // all complete despite later selections pruning below them.
+        assert!(out.trace.iter().any(|v| v.k == 2));
+        assert_eq!(out.k_optimal, Some(10));
+    }
+
+    #[test]
+    fn more_resources_never_slower() {
+        let ks: Vec<u32> = (2..=40).collect();
+        let profile = ScoreProfile::SquareWave {
+            k_true: 35,
+            high: 0.9,
+            low: 0.1,
+        };
+        let mk = |r| ParallelConfig {
+            ranks: r,
+            threads_per_rank: 1,
+            ..Default::default()
+        };
+        let t1 = simulate_parallel_cluster(
+            &ks,
+            &profile,
+            pol(Mode::Vanilla),
+            &CostModel::unit(),
+            mk(1),
+        )
+        .runtime_minutes;
+        let t4 = simulate_parallel_cluster(
+            &ks,
+            &profile,
+            pol(Mode::Vanilla),
+            &CostModel::unit(),
+            mk(4),
+        )
+        .runtime_minutes;
+        assert!(t4 <= t1 + 1e-9, "4 resources {t4} slower than 1 {t1}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Distributed-cluster simulation (DESIGN.md S13): reproduces the Fig 9 /
+//! §IV-B experiments whose 50 TB testbeds are out of reach, by replaying
+//! the real coordinator's visit schedules against calibrated per-k cost
+//! models (§2.3 substitution table).
+
+pub mod cost;
+pub mod dist;
+
+pub use cost::CostModel;
+pub use dist::{simulate_distributed, simulate_parallel_cluster, SimOutcome, SimVisit};

@@ -1,0 +1,123 @@
+//! Mini property-testing framework (offline proptest stand-in,
+//! DESIGN.md §2.3).
+//!
+//! `check(n, gen, prop)` draws `n` random cases from `gen` (a function of
+//! a seeded [`Pcg32`]) and asserts `prop` on each; failures report the
+//! offending case Debug plus the exact seed, so a regression test can be
+//! pinned with [`check_seed`]. The coordinator-invariant suites in
+//! rust/tests/props_coordinator.rs are built on this.
+
+use crate::util::Pcg32;
+
+/// Environment knob: `BB_PROP_CASES` scales case counts (CI vs soak).
+pub fn cases(default: usize) -> usize {
+    std::env::var("BB_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `prop` on `n` generated cases; panics with the seed on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    n: usize,
+    gen: impl Fn(&mut Pcg32) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let base_seed = 0xB1EED_5EEDu64;
+    for i in 0..n {
+        let seed = base_seed.wrapping_add(i as u64);
+        let mut rng = Pcg32::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}):\n  \
+                 case: {case:?}\n  reason: {msg}\n  \
+                 pin with: check_seed({seed:#x}, gen, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (regression pinning).
+pub fn check_seed<T: std::fmt::Debug>(
+    seed: u64,
+    gen: impl Fn(&mut Pcg32) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg32::new(seed);
+    let case = gen(&mut rng);
+    if let Err(msg) = prop(&case) {
+        panic!("pinned case (seed {seed:#x}) failed: {case:?}\n  {msg}");
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use crate::util::Pcg32;
+
+    /// Ascending k list of random size within [min_len, max_len], values
+    /// starting anywhere in [1, 64] with random gaps (sparse K spaces).
+    pub fn k_list(rng: &mut Pcg32, min_len: usize, max_len: usize) -> Vec<u32> {
+        let len = rng.gen_range(min_len as u64, max_len as u64 + 1) as usize;
+        let mut k = rng.gen_range(1, 64) as u32;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(k);
+            k += rng.gen_range(1, 4) as u32;
+        }
+        out
+    }
+
+    /// A k_true drawn from the list.
+    pub fn k_true_from(rng: &mut Pcg32, ks: &[u32]) -> u32 {
+        *rng.choose(ks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-commutes",
+            50,
+            |rng| (rng.gen_range(0, 100), rng.gen_range(0, 100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check(
+            "always-fails",
+            5,
+            |rng| rng.gen_range(0, 10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn k_list_is_ascending_and_sized() {
+        let mut rng = Pcg32::new(1);
+        for _ in 0..100 {
+            let ks = gens::k_list(&mut rng, 1, 40);
+            assert!(!ks.is_empty() && ks.len() <= 40);
+            assert!(ks.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn cases_env_default() {
+        assert_eq!(cases(64), 64);
+    }
+}

@@ -1,0 +1,77 @@
+//! Wall-clock stopwatch used by the visit log and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn reset(&mut self) {
+        self.start = Instant::now();
+    }
+}
+
+/// Format a duration in engineer-friendly units.
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_duration(Duration::from_nanos(50)).ends_with("ns"));
+        assert!(human_duration(Duration::from_micros(50)).ends_with("µs"));
+        assert!(human_duration(Duration::from_millis(50)).ends_with("ms"));
+        assert!(human_duration(Duration::from_secs(5)).ends_with('s'));
+        assert!(human_duration(Duration::from_secs(500)).ends_with("min"));
+    }
+}

@@ -1,0 +1,256 @@
+//! Integration: HLO artifacts executed via PJRT vs the pure-Rust oracles.
+//!
+//! Requires `make artifacts` (quick preset). These tests are the numeric
+//! seam between the python compile path and the Rust runtime.
+
+use binary_bleed::linalg::{self, Matrix};
+use binary_bleed::runtime::{
+    literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar,
+    rank_mask, ArtifactStore,
+};
+use binary_bleed::util::Pcg32;
+
+fn store() -> ArtifactStore {
+    let dir = if std::path::Path::new("artifacts/manifest.json").exists() {
+        "artifacts"
+    } else {
+        "../artifacts"
+    };
+    ArtifactStore::open(dir).expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn nmf_run_reduces_error_and_respects_mask() {
+    let store = store();
+    let m = store.manifest().param("nmf_m").unwrap();
+    let n = store.manifest().param("nmf_n").unwrap();
+    let kmax = store.manifest().param("nmf_kmax").unwrap();
+    let k = 5usize;
+
+    let mut rng = Pcg32::new(101);
+    let x = Matrix::rand_uniform(m, n, &mut rng);
+    let w0 = Matrix::rand_uniform(m, kmax, &mut rng).map(|v| v + 0.01);
+    let h0 = Matrix::rand_uniform(kmax, n, &mut rng).map(|v| v + 0.01);
+    let mask = rank_mask(k, kmax);
+
+    let run = |w: &Matrix, h: &Matrix| -> (Matrix, Matrix, f64) {
+        let outs = store
+            .execute(
+                "nmf_run",
+                &[
+                    literal_from_matrix(&x).unwrap(),
+                    literal_from_matrix(w).unwrap(),
+                    literal_from_matrix(h).unwrap(),
+                    literal_f32(&[kmax], &mask).unwrap(),
+                ],
+            )
+            .unwrap();
+        (
+            literal_to_matrix(&outs[0], m, kmax).unwrap(),
+            literal_to_matrix(&outs[1], kmax, n).unwrap(),
+            literal_to_scalar(&outs[2]).unwrap(),
+        )
+    };
+
+    let (w1, h1, e1) = run(&w0, &h0);
+    let (_w2, _h2, e2) = run(&w1, &h1);
+    assert!(e2 <= e1 + 1e-6, "error must not increase: {e1} -> {e2}");
+    // Masked components must be exactly zero.
+    for r in 0..m {
+        for c in k..kmax {
+            assert_eq!(w1.at(r, c), 0.0, "W[{r},{c}] not masked");
+        }
+    }
+    for r in k..kmax {
+        for c in 0..n {
+            assert_eq!(h1.at(r, c), 0.0, "H[{r},{c}] not masked");
+        }
+    }
+}
+
+#[test]
+fn nmf_step_matches_pure_rust_reference() {
+    let store = store();
+    let m = store.manifest().param("nmf_m").unwrap();
+    let n = store.manifest().param("nmf_n").unwrap();
+    let kmax = store.manifest().param("nmf_kmax").unwrap();
+    let k = kmax; // full rank: HLO step == unmasked reference step
+
+    let mut rng = Pcg32::new(102);
+    let x = Matrix::rand_uniform(m, n, &mut rng).map(|v| v + 0.05);
+    let w0 = Matrix::rand_uniform(m, kmax, &mut rng).map(|v| v + 0.05);
+    let h0 = Matrix::rand_uniform(kmax, n, &mut rng).map(|v| v + 0.05);
+
+    let outs = store
+        .execute(
+            "nmf_step",
+            &[
+                literal_from_matrix(&x).unwrap(),
+                literal_from_matrix(&w0).unwrap(),
+                literal_from_matrix(&h0).unwrap(),
+                literal_f32(&[kmax], &rank_mask(k, kmax)).unwrap(),
+            ],
+        )
+        .unwrap();
+    let w_hlo = literal_to_matrix(&outs[0], m, kmax).unwrap();
+    let h_hlo = literal_to_matrix(&outs[1], kmax, n).unwrap();
+
+    // One reference multiplicative step (W first, then H with updated W —
+    // same order as model.nmf_step).
+    let fit = linalg::nmf_from(&x, w0, h0, 1);
+    let w_ref = fit.w;
+    let h_ref = fit.h;
+
+    let mut max_rel = 0.0f64;
+    for (a, b) in w_hlo.data.iter().zip(&w_ref.data) {
+        let rel = ((a - b).abs() / (b.abs() + 1e-3)) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    for (a, b) in h_hlo.data.iter().zip(&h_ref.data) {
+        let rel = ((a - b).abs() / (b.abs() + 1e-3)) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    assert!(max_rel < 5e-3, "HLO vs reference max rel err {max_rel}");
+}
+
+#[test]
+fn kmeans_run_recovers_blob_centroids() {
+    let store = store();
+    let n = store.manifest().param("km_n").unwrap();
+    let d = store.manifest().param("km_d").unwrap();
+    let kmax = store.manifest().param("km_kmax").unwrap();
+    let k = 4usize;
+
+    let mut rng = Pcg32::new(103);
+    let ds = binary_bleed::data::gaussian_blobs(&mut rng, n / k, k, d, 8.0, 0.4);
+    // Seed centroids near distinct data points (farthest-first on host).
+    let fit0 = linalg::kmeans(&ds.x, k, 1, &mut rng);
+    let mut c0 = Matrix::zeros(kmax, d);
+    c0.data[..k * d].copy_from_slice(&fit0.centroids.data);
+
+    let outs = store
+        .execute(
+            "kmeans_run",
+            &[
+                literal_from_matrix(&ds.x).unwrap(),
+                literal_from_matrix(&c0).unwrap(),
+                literal_f32(&[kmax], &rank_mask(k, kmax)).unwrap(),
+            ],
+        )
+        .unwrap();
+    let labels = outs[1].to_vec::<f32>().unwrap();
+    let inertia = literal_to_scalar(&outs[2]).unwrap();
+
+    // Labels only among active clusters.
+    assert!(labels.iter().all(|&l| (l as usize) < k));
+    // Tight blobs: inertia per point ~ d * sigma^2.
+    let per_point = inertia / n as f64;
+    assert!(per_point < 3.0 * d as f64 * 0.16 + 1.0, "inertia/pt {per_point}");
+}
+
+#[test]
+fn silhouette_hlo_matches_rust_oracle() {
+    let store = store();
+    let n = store.manifest().param("km_n").unwrap();
+    let d = store.manifest().param("km_d").unwrap();
+    let kmax = store.manifest().param("km_kmax").unwrap();
+    let k = 8usize; // must divide km_n so the blob count matches exactly
+
+    let mut rng = Pcg32::new(104);
+    let ds = binary_bleed::data::gaussian_blobs(&mut rng, n / k, k, d, 9.0, 0.6);
+    let labels_f32: Vec<f32> = ds.labels.iter().map(|&l| l as f32).collect();
+
+    let outs = store
+        .execute(
+            "silhouette",
+            &[
+                literal_from_matrix(&ds.x).unwrap(),
+                literal_f32(&[n], &labels_f32).unwrap(),
+                literal_f32(&[kmax], &rank_mask(k, kmax)).unwrap(),
+            ],
+        )
+        .unwrap();
+    let s_hlo = literal_to_scalar(&outs[0]).unwrap();
+    let s_ref = linalg::silhouette(&ds.x, &ds.labels);
+    assert!(
+        (s_hlo - s_ref).abs() < 5e-3,
+        "silhouette HLO {s_hlo} vs rust {s_ref}"
+    );
+}
+
+#[test]
+fn davies_bouldin_hlo_matches_rust_oracle() {
+    let store = store();
+    let n = store.manifest().param("km_n").unwrap();
+    let d = store.manifest().param("km_d").unwrap();
+    let kmax = store.manifest().param("km_kmax").unwrap();
+    let k = 4usize;
+
+    let mut rng = Pcg32::new(105);
+    let ds = binary_bleed::data::gaussian_blobs(&mut rng, n / k, k, d, 8.0, 0.7);
+    let labels_f32: Vec<f32> = ds.labels.iter().map(|&l| l as f32).collect();
+    let mut c = Matrix::zeros(kmax, d);
+    c.data[..k * d].copy_from_slice(&ds.centers.data);
+
+    let outs = store
+        .execute(
+            "davies_bouldin",
+            &[
+                literal_from_matrix(&ds.x).unwrap(),
+                literal_from_matrix(&c).unwrap(),
+                literal_f32(&[n], &labels_f32).unwrap(),
+                literal_f32(&[kmax], &rank_mask(k, kmax)).unwrap(),
+            ],
+        )
+        .unwrap();
+    let db_hlo = literal_to_scalar(&outs[0]).unwrap();
+    let db_ref = linalg::davies_bouldin(&ds.x, &ds.centers, &ds.labels);
+    assert!(
+        (db_hlo - db_ref).abs() < 5e-3,
+        "DB HLO {db_hlo} vs rust {db_ref}"
+    );
+}
+
+#[test]
+fn rescal_step_reduces_error() {
+    let store = store();
+    let s = store.manifest().param("rescal_s").unwrap();
+    let n = store.manifest().param("rescal_n").unwrap();
+    let kmax = store.manifest().param("rescal_kmax").unwrap();
+    let k = 3usize;
+
+    let mut rng = Pcg32::new(106);
+    let t = binary_bleed::data::planted_rescal(&mut rng, s, n, k, 0.01);
+    let mut t_flat = Vec::with_capacity(s * n * n);
+    for sl in &t.slices {
+        t_flat.extend_from_slice(&sl.data);
+    }
+    let a0 = Matrix::rand_uniform(n, kmax, &mut rng).map(|v| v + 0.01);
+    let mut r_flat = vec![0.0f32; s * kmax * kmax];
+    for v in &mut r_flat {
+        *v = rng.next_f32() + 0.01;
+    }
+
+    let run = |a: &[f32], r: &[f32]| -> (Vec<f32>, Vec<f32>, f64) {
+        let outs = store
+            .execute(
+                "rescal_step",
+                &[
+                    literal_f32(&[s, n, n], &t_flat).unwrap(),
+                    literal_f32(&[n, kmax], a).unwrap(),
+                    literal_f32(&[s, kmax, kmax], r).unwrap(),
+                    literal_f32(&[kmax], &rank_mask(k, kmax)).unwrap(),
+                ],
+            )
+            .unwrap();
+        (
+            outs[0].to_vec::<f32>().unwrap(),
+            outs[1].to_vec::<f32>().unwrap(),
+            literal_to_scalar(&outs[2]).unwrap(),
+        )
+    };
+    let (a1, r1, e1) = run(&a0.data, &r_flat);
+    let (_a2, _r2, e2) = run(&a1, &r1);
+    assert!(e2 <= e1 + 1e-6, "rescal error {e1} -> {e2}");
+    assert!(e2 < 0.8, "error should be dropping: {e2}");
+}

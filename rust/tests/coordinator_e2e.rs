@@ -1,0 +1,148 @@
+//! End-to-end coordinator scenarios pinned to the paper's walkthroughs.
+
+use binary_bleed::coordinator::{
+    binary_bleed_lockstep, binary_bleed_serial, Decision, Mode, ParallelConfig,
+    Pipeline, SearchPolicy, Thresholds, Traversal,
+};
+use binary_bleed::data::ScoreProfile;
+use binary_bleed::simulate::{simulate_distributed, CostModel};
+
+fn pol(mode: Mode) -> SearchPolicy {
+    SearchPolicy::maximize(
+        mode,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    )
+}
+
+#[test]
+fn fig2_fig3_vanilla_dynamics() {
+    // Figs 2/3: k=[1..11], 3 resources, T4 pre-order; k=7 crosses the
+    // threshold, 6 and 8 score below it; 1..5 get pruned, 9..11 continue.
+    let ks: Vec<u32> = (1..=11).collect();
+    let profile = ScoreProfile::Table {
+        scores: vec![(7, 0.9)],
+        default: 0.3,
+    };
+    let cfg = ParallelConfig {
+        ranks: 3,
+        threads_per_rank: 1,
+        traversal: Traversal::PreOrder,
+        pipeline: Pipeline::SkipModThenSort,
+    };
+    let r = binary_bleed_lockstep(&ks, &profile, pol(Mode::Vanilla), cfg);
+    assert_eq!(r.k_optimal, Some(7));
+    // The upper range must all be evaluated (no stop threshold).
+    for k in [9u32, 10, 11] {
+        assert!(
+            r.log.score_of(k).is_some(),
+            "k={k} should be visited in Vanilla"
+        );
+    }
+    // Everything below 7 that was not evaluated before the selection
+    // must be pruned, and nothing above 7 may be pruned.
+    for v in &r.log.visits {
+        if v.decision == Decision::PrunedSkip {
+            assert!(v.k < 7, "pruned k={} must be < 7", v.k);
+        }
+    }
+}
+
+#[test]
+fn fig5_fig6_early_stop_dynamics() {
+    // Figs 5/6: k=[1..11], 4 resources; k=5 selects (prunes 1..4), k=8
+    // crosses the stop threshold (prunes 9..11); optimal stays 5.
+    let ks: Vec<u32> = (1..=11).collect();
+    let profile = ScoreProfile::Table {
+        scores: vec![(5, 0.9), (8, 0.1), (9, 0.1), (10, 0.1), (11, 0.1)],
+        default: 0.4,
+    };
+    let cfg = ParallelConfig {
+        ranks: 4,
+        threads_per_rank: 1,
+        traversal: Traversal::PreOrder,
+        pipeline: Pipeline::SkipModThenSort,
+    };
+    let r = binary_bleed_lockstep(&ks, &profile, pol(Mode::EarlyStop), cfg);
+    assert_eq!(r.k_optimal, Some(5), "Fig 6: optimal remains 5");
+    // Some of the upper range must be pruned by the stop bound (exact set
+    // depends on the round the stop fires; 11 is last in every chunk).
+    let pruned = r.log.pruned();
+    assert!(
+        pruned.iter().any(|&k| k > 8) || r.log.score_of(11).map(|s| s < 0.2).unwrap_or(false),
+        "upper k should be stopped: pruned={pruned:?}"
+    );
+}
+
+#[test]
+fn fig4_pre_order_selects_24_and_prunes_lower_bands() {
+    let ks: Vec<u32> = (2..=30).collect();
+    let r = binary_bleed_serial(&ks, &ScoreProfile::fig4(), pol(Mode::Vanilla));
+    assert_eq!(r.k_optimal, Some(24));
+    // 18..22 ("lower priority" after 24 is selected) must be pruned.
+    for k in 18..=22 {
+        assert!(
+            r.log.score_of(k).is_none(),
+            "k={k} should be pruned after 24 selected"
+        );
+    }
+}
+
+#[test]
+fn complexity_scaling_follows_sublinear_trend() {
+    // §III-A: Θ(n^log2(p+1)) — for a square wave the visit count must
+    // grow far slower than n.
+    let mut visits = Vec::new();
+    for n in [32u32, 64, 128, 256, 512] {
+        let ks: Vec<u32> = (2..=n + 1).collect();
+        let k_true = n / 2 + 1;
+        let profile = ScoreProfile::SquareWave {
+            k_true,
+            high: 0.9,
+            low: 0.1,
+        };
+        let r = binary_bleed_serial(&ks, &profile, pol(Mode::EarlyStop));
+        assert_eq!(r.k_optimal, Some(k_true));
+        visits.push(r.log.evaluated_count() as f64);
+    }
+    // Doubling n must not double visits (clearly sublinear).
+    for w in visits.windows(2) {
+        assert!(
+            w[1] < w[0] * 1.8,
+            "visit growth not sublinear: {visits:?}"
+        );
+    }
+}
+
+#[test]
+fn distributed_sim_standard_equals_grid_cost() {
+    let ks: Vec<u32> = (2..=8).collect();
+    let profile = ScoreProfile::SquareWave {
+        k_true: 8,
+        high: 0.9,
+        low: 0.1,
+    };
+    let out = simulate_distributed(
+        &ks,
+        &profile,
+        pol(Mode::Standard),
+        &CostModel::paper_dnmf(),
+    );
+    assert!((out.runtime_minutes - 120.0).abs() < 1e-6);
+    assert_eq!(out.evaluated, 7);
+}
+
+#[test]
+fn sparse_k_space_supported() {
+    // K need not be contiguous (paper's K is a user-provided list).
+    let ks = vec![2u32, 5, 9, 17, 33, 65, 129];
+    let profile = ScoreProfile::SquareWave {
+        k_true: 33,
+        high: 0.9,
+        low: 0.1,
+    };
+    let r = binary_bleed_serial(&ks, &profile, pol(Mode::Vanilla));
+    assert_eq!(r.k_optimal, Some(33));
+}

@@ -1,0 +1,70 @@
+//! Smoke: every experiment runner executes end-to-end on a reduced
+//! configuration and produces its result files.
+
+use binary_bleed::cli::experiments::{self, Family};
+use binary_bleed::config::ExperimentConfig;
+
+fn tiny_cfg(tag: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quick();
+    cfg.k_max = 14;
+    cfg.sweep_stride = 6;
+    cfg.perturbations = 2;
+    cfg.restarts = 1;
+    cfg.results_dir = std::env::temp_dir()
+        .join(format!("bb_results_{tag}"))
+        .to_string_lossy()
+        .into_owned();
+    cfg
+}
+
+#[test]
+fn table2_runs_and_writes_csv() {
+    let cfg = tiny_cfg("t2");
+    experiments::table2(&cfg).unwrap();
+    assert!(std::path::Path::new(&cfg.results_dir).join("table2.csv").exists());
+}
+
+#[test]
+fn fig4_selects_24() {
+    experiments::fig4(&tiny_cfg("f4")).unwrap();
+}
+
+#[test]
+fn fig9_rows_match_paper_pre_order() {
+    let cfg = tiny_cfg("f9");
+    experiments::fig9(&cfg).unwrap();
+    let csv = std::fs::read_to_string(
+        std::path::Path::new(&cfg.results_dir).join("fig9.csv"),
+    )
+    .unwrap();
+    // Pre-order rows must carry the paper-exact numbers.
+    assert!(csv.contains("dNMF,vanilla,pre-order,42.9,51.43"), "{csv}");
+    assert!(csv.contains("dRESCAL,vanilla,pre-order,30.0,54.00"), "{csv}");
+}
+
+#[test]
+fn arxiv_multinode_runs() {
+    let cfg = tiny_cfg("ax");
+    experiments::arxiv(&cfg).unwrap();
+    assert!(std::path::Path::new(&cfg.results_dir)
+        .join("arxiv_multinode.csv")
+        .exists());
+}
+
+#[test]
+fn dynamics_runs() {
+    experiments::dynamics(&tiny_cfg("dy")).unwrap();
+}
+
+#[test]
+fn fig8_nmfk_summary_sane() {
+    let cfg = tiny_cfg("f8");
+    let sweep = experiments::fig8(&cfg, Family::Nmfk).unwrap();
+    // Standard visits 100%; pruning methods strictly less on average.
+    let std_pct = sweep.mean_percent_visited("standard", "in-order");
+    assert!((std_pct - 100.0).abs() < 1e-9);
+    for (m, o) in [("vanilla", "pre-order"), ("early-stop", "pre-order")] {
+        let pct = sweep.mean_percent_visited(m, o);
+        assert!(pct < 100.0, "{m}/{o} should prune: {pct}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Multi-rank/multi-thread integration: real OS threads, channel
+//! broadcasts, adversarial shapes — all interleavings must converge on
+//! the serial answer.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use binary_bleed::coordinator::{
+    binary_bleed_parallel, binary_bleed_serial, CountingScorer, Mode,
+    ParallelConfig, Pipeline, SearchPolicy, Thresholds, Traversal,
+};
+use binary_bleed::data::ScoreProfile;
+
+fn pol(mode: Mode) -> SearchPolicy {
+    SearchPolicy::maximize(
+        mode,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    )
+}
+
+fn square(k_true: u32) -> ScoreProfile {
+    ScoreProfile::SquareWave {
+        k_true,
+        high: 0.9,
+        low: 0.1,
+    }
+}
+
+#[test]
+fn all_shapes_converge_to_serial_answer() {
+    let ks: Vec<u32> = (2..=40).collect();
+    for k_true in [2u32, 17, 40] {
+        let serial = binary_bleed_serial(&ks, &square(k_true), pol(Mode::Vanilla));
+        for ranks in [1usize, 2, 5] {
+            for threads in [1usize, 3] {
+                for tr in [Traversal::PreOrder, Traversal::PostOrder, Traversal::InOrder] {
+                    let cfg = ParallelConfig {
+                        ranks,
+                        threads_per_rank: threads,
+                        traversal: tr,
+                        pipeline: Pipeline::SkipModThenSort,
+                    };
+                    let r = binary_bleed_parallel(&ks, &square(k_true), pol(Mode::Vanilla), cfg);
+                    assert_eq!(
+                        r.k_optimal, serial.k_optimal,
+                        "ranks={ranks} threads={threads} {tr:?} k_true={k_true}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn slow_scorer_exercises_racing_broadcasts() {
+    // Make evaluations take measurably long so pruning messages land
+    // while peers are mid-evaluation.
+    let ks: Vec<u32> = (2..=30).collect();
+    let evals = AtomicU64::new(0);
+    let scorer = |k: u32| {
+        evals.fetch_add(1, Ordering::SeqCst);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        if k <= 25 {
+            0.9
+        } else {
+            0.1
+        }
+    };
+    let cfg = ParallelConfig {
+        ranks: 4,
+        threads_per_rank: 2,
+        ..Default::default()
+    };
+    let r = binary_bleed_parallel(&ks, &scorer, pol(Mode::EarlyStop), cfg);
+    assert_eq!(r.k_optimal, Some(25));
+    assert!(evals.load(Ordering::SeqCst) <= 29);
+}
+
+#[test]
+fn every_k_accounted_exactly_once() {
+    let ks: Vec<u32> = (2..=50).collect();
+    let cfg = ParallelConfig {
+        ranks: 3,
+        threads_per_rank: 2,
+        ..Default::default()
+    };
+    let r = binary_bleed_parallel(&ks, &square(33), pol(Mode::Vanilla), cfg);
+    let mut all = r.log.evaluated();
+    all.extend(r.log.pruned());
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all, ks, "each k decided exactly once");
+}
+
+#[test]
+fn more_resources_do_not_hurt_correctness_on_noisy_profile() {
+    let ks: Vec<u32> = (2..=60).collect();
+    let profile = ScoreProfile::NoisySquare {
+        k_true: 44,
+        high: 0.9,
+        low: 0.1,
+        amp: 0.05,
+        seed: 3,
+    };
+    for ranks in [1usize, 2, 6] {
+        let cfg = ParallelConfig {
+            ranks,
+            threads_per_rank: 2,
+            ..Default::default()
+        };
+        let r = binary_bleed_parallel(&ks, &profile, pol(Mode::Vanilla), cfg);
+        assert_eq!(r.k_optimal, Some(44), "ranks={ranks}");
+    }
+}
+
+#[test]
+fn counting_scorer_wrapper_consistent_with_log() {
+    let ks: Vec<u32> = (2..=35).collect();
+    let counting = CountingScorer::new(square(20));
+    let cfg = ParallelConfig {
+        ranks: 2,
+        threads_per_rank: 2,
+        ..Default::default()
+    };
+    let r = binary_bleed_parallel(&ks, &counting, pol(Mode::Vanilla), cfg);
+    assert_eq!(
+        counting.evaluations() as usize,
+        r.log.evaluated_count(),
+        "scorer-call count equals log"
+    );
+}
+
+#[test]
+fn degenerate_shapes() {
+    // More ranks than k values; zero threads clamps to one.
+    let ks: Vec<u32> = (2..=5).collect();
+    let cfg = ParallelConfig {
+        ranks: 9,
+        threads_per_rank: 0,
+        ..Default::default()
+    };
+    let r = binary_bleed_parallel(&ks, &square(4), pol(Mode::Vanilla), cfg);
+    assert_eq!(r.k_optimal, Some(4));
+}

@@ -1,0 +1,327 @@
+//! Property tests over the coordinator invariants (DESIGN.md §7), built
+//! on the in-tree mini framework (`binary_bleed::testing`).
+//!
+//! Case counts scale with `BB_PROP_CASES` (default sized for CI).
+
+use binary_bleed::coordinator::{
+    binary_bleed_lockstep, binary_bleed_serial, ChunkStrategy, CountingScorer,
+    Mode, ParallelConfig, Pipeline, SearchPolicy, Thresholds, Traversal,
+};
+use binary_bleed::data::ScoreProfile;
+use binary_bleed::testing::{cases, check, gens};
+use binary_bleed::util::Pcg32;
+
+fn policy(mode: Mode) -> SearchPolicy {
+    SearchPolicy::maximize(
+        mode,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    )
+}
+
+/// A random search scenario.
+#[derive(Debug)]
+struct Scenario {
+    ks: Vec<u32>,
+    k_true: u32,
+    resources: usize,
+    traversal: Traversal,
+    pipeline: Pipeline,
+    mode: Mode,
+}
+
+fn gen_scenario(rng: &mut Pcg32) -> Scenario {
+    let ks = gens::k_list(rng, 1, 48);
+    let k_true = gens::k_true_from(rng, &ks);
+    Scenario {
+        k_true,
+        resources: rng.gen_range(1, 7) as usize,
+        traversal: *rng.choose(&Traversal::ALL),
+        pipeline: *rng.choose(&Pipeline::ALL),
+        mode: *rng.choose(&[Mode::Vanilla, Mode::EarlyStop]),
+        ks,
+    }
+}
+
+fn square(k_true: u32) -> ScoreProfile {
+    ScoreProfile::SquareWave {
+        k_true,
+        high: 0.9,
+        low: 0.1,
+    }
+}
+
+#[test]
+fn traversal_is_permutation() {
+    check(
+        "traversal-permutation",
+        cases(200),
+        |rng| (gens::k_list(rng, 0, 64), *rng.choose(&Traversal::ALL)),
+        |(ks, t)| {
+            let mut sorted = t.sort(ks);
+            sorted.sort_unstable();
+            if sorted == *ks {
+                Ok(())
+            } else {
+                Err(format!("{t:?} dropped/duplicated elements"))
+            }
+        },
+    );
+}
+
+#[test]
+fn chunking_is_balanced_partition() {
+    check(
+        "chunking-partition",
+        cases(200),
+        |rng| {
+            (
+                gens::k_list(rng, 0, 64),
+                rng.gen_range(1, 9) as usize,
+                if rng.next_f64() < 0.5 {
+                    ChunkStrategy::SkipMod
+                } else {
+                    ChunkStrategy::Contiguous
+                },
+            )
+        },
+        |(ks, r, strat)| {
+            let chunks = strat.chunk(ks, *r);
+            let mut all: Vec<u32> = chunks.concat();
+            all.sort_unstable();
+            let mut want = ks.clone();
+            want.sort_unstable();
+            if all != want {
+                return Err("not a partition".into());
+            }
+            let sizes: Vec<usize> = chunks.iter().map(Vec::len).collect();
+            let (mn, mx) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            if mx - mn > 1 {
+                return Err(format!("unbalanced: {sizes:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn serial_bleed_finds_ktrue_and_never_exceeds_linear() {
+    check(
+        "serial-square-wave-correct",
+        cases(150),
+        gen_scenario,
+        |sc| {
+            let counting = CountingScorer::new(square(sc.k_true));
+            let r = binary_bleed_serial(&sc.ks, &counting, policy(sc.mode));
+            if r.k_optimal != Some(sc.k_true) {
+                return Err(format!("found {:?}, wanted {}", r.k_optimal, sc.k_true));
+            }
+            if counting.evaluations() as usize > sc.ks.len() {
+                return Err(format!(
+                    "visited {} > |K| = {}",
+                    counting.evaluations(),
+                    sc.ks.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lockstep_finds_ktrue_under_any_shape() {
+    check(
+        "lockstep-square-wave-correct",
+        cases(150),
+        gen_scenario,
+        |sc| {
+            let cfg = ParallelConfig {
+                ranks: sc.resources,
+                threads_per_rank: 1,
+                traversal: sc.traversal,
+                pipeline: sc.pipeline,
+            };
+            let counting = CountingScorer::new(square(sc.k_true));
+            let r = binary_bleed_lockstep(&sc.ks, &counting, policy(sc.mode), cfg);
+            if r.k_optimal != Some(sc.k_true) {
+                return Err(format!("found {:?}, wanted {}", r.k_optimal, sc.k_true));
+            }
+            if counting.evaluations() as usize > sc.ks.len() {
+                return Err("visited more than linear".into());
+            }
+            // Log partitions the space.
+            let mut all = r.log.evaluated();
+            all.extend(r.log.pruned());
+            all.sort_unstable();
+            let mut want = sc.ks.clone();
+            want.sort_unstable();
+            if all != want {
+                return Err("visit log does not partition K".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pruning_never_discards_k_above_found_optimum() {
+    // For maximization, every pruned k must be strictly below the
+    // reported optimum (Vanilla) — no better k can be discarded —
+    // unless Early-Stop's upper bound fired.
+    check(
+        "prune-safety-vanilla",
+        cases(150),
+        |rng| {
+            let mut sc = gen_scenario(rng);
+            sc.mode = Mode::Vanilla;
+            sc
+        },
+        |sc| {
+            let cfg = ParallelConfig {
+                ranks: sc.resources,
+                threads_per_rank: 1,
+                traversal: sc.traversal,
+                pipeline: sc.pipeline,
+            };
+            let r = binary_bleed_lockstep(&sc.ks, &square(sc.k_true), policy(sc.mode), cfg);
+            let Some(opt) = r.k_optimal else {
+                return Err("square wave must select something".into());
+            };
+            for pk in r.log.pruned() {
+                if pk > opt {
+                    return Err(format!("pruned k={pk} above optimum {opt}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn early_stop_never_changes_result_on_consistent_profiles() {
+    // When the profile is a clean square wave (stop threshold consistent
+    // with the collapse), Early-Stop returns the same k as Vanilla with
+    // no more evaluations.
+    check(
+        "early-stop-consistency",
+        cases(120),
+        gen_scenario,
+        |sc| {
+            let cfg = ParallelConfig {
+                ranks: sc.resources,
+                threads_per_rank: 1,
+                traversal: sc.traversal,
+                pipeline: sc.pipeline,
+            };
+            let cv = CountingScorer::new(square(sc.k_true));
+            let ce = CountingScorer::new(square(sc.k_true));
+            let rv = binary_bleed_lockstep(&sc.ks, &cv, policy(Mode::Vanilla), cfg);
+            let re = binary_bleed_lockstep(&sc.ks, &ce, policy(Mode::EarlyStop), cfg);
+            if rv.k_optimal != re.k_optimal {
+                return Err(format!("{:?} != {:?}", rv.k_optimal, re.k_optimal));
+            }
+            if ce.evaluations() > cv.evaluations() {
+                return Err(format!(
+                    "ES evaluated {} > vanilla {}",
+                    ce.evaluations(),
+                    cv.evaluations()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn standard_always_visits_everything_and_matches() {
+    check(
+        "standard-exhaustive",
+        cases(100),
+        gen_scenario,
+        |sc| {
+            let counting = CountingScorer::new(square(sc.k_true));
+            let r = binary_bleed_serial(&sc.ks, &counting, policy(Mode::Standard));
+            if counting.evaluations() as usize != sc.ks.len() {
+                return Err("standard must visit all".into());
+            }
+            if r.k_optimal != Some(sc.k_true) {
+                return Err("standard must find k_true".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn laplacian_worst_case_still_no_worse_than_linear() {
+    // §III-D: "Despite the score distribution, Binary Bleed will not
+    // visit more k values than a linear search."
+    check(
+        "laplacian-bounded-by-linear",
+        cases(120),
+        gen_scenario,
+        |sc| {
+            let profile = ScoreProfile::Laplacian {
+                k_true: sc.k_true,
+                peak: 1.0,
+                floor: 0.1,
+                b: 1.5,
+            };
+            let counting = CountingScorer::new(profile);
+            let cfg = ParallelConfig {
+                ranks: sc.resources,
+                threads_per_rank: 1,
+                traversal: sc.traversal,
+                pipeline: sc.pipeline,
+            };
+            binary_bleed_lockstep(&sc.ks, &counting, policy(sc.mode), cfg);
+            if counting.evaluations() as usize > sc.ks.len() {
+                return Err("exceeded linear".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn minimization_mirror_property() {
+    // Minimizing the negated profile with mirrored thresholds must give
+    // the same k as maximization.
+    check(
+        "min-max-mirror",
+        cases(100),
+        gen_scenario,
+        |sc| {
+            let max_r = binary_bleed_serial(&sc.ks, &square(sc.k_true), policy(Mode::Vanilla));
+            let neg = move |k: u32| -ScoreProfile::score(&square_profile(sc.k_true), k);
+            let min_policy = SearchPolicy::minimize(
+                Mode::Vanilla,
+                Thresholds {
+                    select: -0.75,
+                    stop: -0.2,
+                },
+            );
+            let min_r = binary_bleed_serial(&sc.ks, &neg, min_policy);
+            if max_r.k_optimal != min_r.k_optimal {
+                return Err(format!(
+                    "max {:?} != min {:?}",
+                    max_r.k_optimal, min_r.k_optimal
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn square_profile(k_true: u32) -> ScoreProfile {
+    ScoreProfile::SquareWave {
+        k_true,
+        high: 0.9,
+        low: 0.1,
+    }
+}
