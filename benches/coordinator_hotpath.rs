@@ -1,11 +1,13 @@
-//! Bench: L3 hot path — the coordinator overhead per k-visit and the
-//! PJRT execute cost per model evaluation (the §Perf deliverable).
+//! Bench: L3 hot path — the coordinator overhead per k-visit, the
+//! lock-free admission path under contention, and (with `--features
+//! pjrt`) the PJRT execute cost per model evaluation (§Perf).
 //!
 //! Targets (EXPERIMENTS.md §Perf): scheduler overhead per visit < 1% of
 //! the cheapest real evaluator call; state ops in the tens of ns; rank
 //! broadcast in the µs range; HLO execute dominated by XLA compute.
-
-use std::time::Duration;
+//! The admission path is lock-free (atomic bounds + claim bitmap), so
+//! the contended bench at 4 ranks × 4 threads measures scaling where the
+//! seed's single coarse mutex used to serialize every worker.
 
 use binary_bleed::bench::Bench;
 use binary_bleed::coordinator::{
@@ -13,10 +15,6 @@ use binary_bleed::coordinator::{
     RankComm, SearchPolicy, SharedState, Thresholds,
 };
 use binary_bleed::data::ScoreProfile;
-use binary_bleed::linalg::Matrix;
-use binary_bleed::model::SharedStore;
-use binary_bleed::runtime::{literal_f32, literal_from_matrix, rank_mask};
-use binary_bleed::util::Pcg32;
 
 fn pol() -> SearchPolicy {
     SearchPolicy::maximize(
@@ -31,18 +29,56 @@ fn pol() -> SearchPolicy {
 fn main() {
     let bench = Bench::default();
 
-    println!("== L3 state ops ==");
+    println!("== L3 state ops (lock-free) ==");
     {
         let policy = pol();
-        bench.run("state/admit+publish", || {
-            let st = SharedState::new();
-            st.admit(10, &policy);
-            st.publish(10, 0.9, &policy)
-        });
-        let st = SharedState::new();
+        let domain: Vec<u32> = (2..=4097).collect();
+        // Construction cost measured separately so the hot-path numbers
+        // below are pure atomic ops, not allocation.
+        bench.run("state/construct/4096-k", || SharedState::new(&domain));
+        let st = SharedState::new(&domain);
         st.admit(20, &policy);
         st.publish(20, 0.9, &policy);
+        // Hot paths on a live state: a pruned admission (two atomic
+        // loads), a re-publication (monotone fetch_max no-ops), and the
+        // bounds read every subtree check performs.
         bench.run("state/admit-pruned", || st.admit(5, &policy));
+        bench.run("state/publish-republish", || st.publish(20, 0.9, &policy));
+        bench.run("state/bounds-read", || st.bounds());
+    }
+
+    println!("\n== contended admission (4 ranks x 4 threads hammering one state) ==");
+    {
+        // The acceptance bench for the lock-free refactor: 16 workers
+        // race the admission path over a large domain. Under the seed's
+        // Mutex<Inner> with an O(n) claimed scan, this serialized; with
+        // the atomic bitmap every worker proceeds in parallel.
+        let policy = pol();
+        let domain: Vec<u32> = (2..=65_537).collect();
+        let s = bench.run("state/contended-admit/16-threads/64k-k", || {
+            let st = SharedState::new(&domain);
+            std::thread::scope(|scope| {
+                for t in 0..16usize {
+                    let st = &st;
+                    let domain = &domain;
+                    let policy = &policy;
+                    scope.spawn(move || {
+                        let mut admitted = 0u64;
+                        for &k in domain.iter().skip(t).step_by(16) {
+                            if st.admit(k, policy) == binary_bleed::coordinator::Admission::Admit
+                            {
+                                admitted += 1;
+                            }
+                        }
+                        admitted
+                    });
+                }
+            });
+        });
+        println!(
+            "    -> {:.1}M admissions/s across 16 threads",
+            s.per_second(65_536.0) / 1e6
+        );
     }
 
     println!("\n== rank network ==");
@@ -82,7 +118,7 @@ fn main() {
         bench.run("parallel-search/29-k/4x2-threads", || {
             binary_bleed_parallel(&ks, &profile, pol(), cfg).k_optimal
         });
-        // Inline fast path (threads_per_rank == 1 spawns no nested scope).
+        // Single-worker plans run inline (no thread spawn at all).
         let cfg41 = ParallelConfig {
             ranks: 4,
             threads_per_rank: 1,
@@ -91,13 +127,26 @@ fn main() {
         bench.run("parallel-search/29-k/4x1-threads", || {
             binary_bleed_parallel(&ks, &profile, pol(), cfg41).k_optimal
         });
-        // Marginal per-visit cost: amortize thread spawn over a big K.
+        // The acceptance shape: >= 4 ranks x 4 threads on a big K, where
+        // admission contention dominates scheduler overhead.
         let big_ks: Vec<u32> = (2..=4097).collect();
         let big_profile = ScoreProfile::SquareWave {
             k_true: 4000,
             high: 0.9,
             low: 0.1,
         };
+        let cfg44 = ParallelConfig {
+            ranks: 4,
+            threads_per_rank: 4,
+            ..Default::default()
+        };
+        let s = bench.run("parallel-search/4096-k/4x4-threads", || {
+            binary_bleed_parallel(&big_ks, &big_profile, pol(), cfg44).k_optimal
+        });
+        println!(
+            "    -> marginal per-decision cost ~{:.0}ns",
+            s.median.as_nanos() as f64 / 4096.0
+        );
         let s = bench.run("parallel-search/4096-k/4x1-threads", || {
             binary_bleed_parallel(&big_ks, &big_profile, pol(), cfg41).k_optimal
         });
@@ -106,6 +155,18 @@ fn main() {
             s.median.as_nanos() as f64 / 4096.0
         );
     }
+
+    pjrt_benches();
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches() {
+    use std::time::Duration;
+
+    use binary_bleed::linalg::Matrix;
+    use binary_bleed::model::SharedStore;
+    use binary_bleed::runtime::{literal_f32, literal_from_matrix, rank_mask};
+    use binary_bleed::util::Pcg32;
 
     println!("\n== PJRT execute (requires artifacts) ==");
     match SharedStore::open_default() {
@@ -156,4 +217,9 @@ fn main() {
             });
         }
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches() {
+    println!("\n== PJRT execute: skipped (build with --features pjrt) ==");
 }

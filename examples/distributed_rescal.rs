@@ -14,7 +14,7 @@ use binary_bleed::model::{RescalEvaluator, SharedStore};
 use binary_bleed::simulate::{simulate_distributed, CostModel};
 use binary_bleed::util::Pcg32;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> binary_bleed::util::error::Result<()> {
     let policy = SearchPolicy::maximize(
         Mode::Vanilla,
         Thresholds {

@@ -21,7 +21,7 @@ use binary_bleed::metrics::{render_markdown, write_csv};
 use binary_bleed::model::{NmfkEvaluator, SharedStore};
 use binary_bleed::util::{Pcg32, Stopwatch};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> binary_bleed::util::error::Result<()> {
     let store = Arc::new(SharedStore::open_default()?);
     let (m, n) = (store.param("nmf_m")?, store.param("nmf_n")?);
     store.warm(&["nmf_run"])?;
@@ -103,7 +103,7 @@ fn main() -> anyhow::Result<()> {
         .filter(|r| r[1] == "early-stop")
         .map(|r| r[3].parse::<usize>().unwrap())
         .sum();
-    anyhow::ensure!(
+    binary_bleed::ensure!(
         es_visits < std_visits,
         "early-stop must prune: {es_visits} !< {std_visits}"
     );

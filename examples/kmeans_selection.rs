@@ -15,7 +15,7 @@ use binary_bleed::data::gaussian_blobs;
 use binary_bleed::model::{KMeansEvaluator, KMeansScoring, SharedStore};
 use binary_bleed::util::{Pcg32, Stopwatch};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> binary_bleed::util::error::Result<()> {
     let store = Arc::new(SharedStore::open_default()?);
     let (n, d) = (store.param("km_n")?, store.param("km_d")?);
 

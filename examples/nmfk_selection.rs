@@ -15,7 +15,7 @@ use binary_bleed::data::planted_nmf;
 use binary_bleed::model::{NmfkEvaluator, SharedStore};
 use binary_bleed::util::{Pcg32, Stopwatch};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> binary_bleed::util::error::Result<()> {
     let store = Arc::new(SharedStore::open_default()?);
     let (m, n) = (store.param("nmf_m")?, store.param("nmf_n")?);
     println!("artifact preset: X is {m}x{n} (quick preset; see configs/)");

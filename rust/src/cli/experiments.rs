@@ -5,7 +5,7 @@
 //! *shape* (who wins, by what factor, where crossovers fall) is the
 //! reproduction target (EXPERIMENTS.md records paper-vs-measured).
 
-use anyhow::Result;
+use crate::util::error::{ensure, Result};
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{
@@ -452,7 +452,7 @@ pub fn fig4(cfg: &ExperimentConfig) -> Result<()> {
         r.k_optimal,
         r.percent_visited()
     );
-    anyhow::ensure!(r.k_optimal == Some(24), "Fig 4 must select 24");
+    ensure!(r.k_optimal == Some(24), "Fig 4 must select 24");
     Ok(())
 }
 

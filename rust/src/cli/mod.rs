@@ -14,7 +14,9 @@ pub mod experiments;
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use crate::util::error::Context;
+use crate::util::error::{anyhow, bail, ensure, Result};
 
 use crate::config::{parse_mode, parse_traversal, ExperimentConfig};
 use crate::coordinator::{
@@ -22,7 +24,7 @@ use crate::coordinator::{
     Thresholds,
 };
 use crate::data::{gaussian_blobs, planted_nmf, ScoreProfile};
-use crate::model::{Backend, KMeansEvaluator, KMeansScoring, NmfkEvaluator, SharedStore};
+use crate::model::{Backend, KMeansEvaluator, KMeansScoring, NmfkEvaluator};
 
 /// Parsed command line: positional words + `--flag value` pairs.
 #[derive(Debug, Default)]
@@ -70,7 +72,7 @@ impl Args {
             Some(v) => v
                 .parse::<T>()
                 .map(Some)
-                .map_err(|_| anyhow::anyhow!("bad value for --{name}: '{v}'")),
+                .map_err(|_| anyhow!("bad value for --{name}: '{v}'")),
         }
     }
 }
@@ -165,7 +167,7 @@ fn cmd_search(args: &Args) -> Result<()> {
         "native" => Backend::Native,
         other => bail!("unknown backend '{other}'"),
     };
-    anyhow::ensure!(k_min >= 2 && k_min <= k_max, "need 2 <= k-min <= k-max");
+    ensure!(k_min >= 2 && k_min <= k_max, "need 2 <= k-min <= k-max");
 
     let ks: Vec<u32> = (k_min..=k_max).collect();
     let model = args.flag_or("model", "profile");
@@ -228,13 +230,7 @@ fn build_scorer(
         )),
         "nmfk" => {
             let ev: NmfkEvaluator = match backend {
-                Backend::Hlo => {
-                    let store = std::sync::Arc::new(SharedStore::open_default()?);
-                    let m = store.param("nmf_m")?;
-                    let n = store.param("nmf_n")?;
-                    let ds = planted_nmf(&mut rng, m, n, k_true as usize, 0.01);
-                    NmfkEvaluator::hlo(ds.x, store, seed)?
-                }
+                Backend::Hlo => nmfk_hlo_evaluator(&mut rng, k_true, seed)?,
                 Backend::Native => {
                     let ds = planted_nmf(&mut rng, 80, 88, k_true as usize, 0.01);
                     NmfkEvaluator::native(ds.x, k_max as usize + 2, seed)
@@ -247,21 +243,7 @@ fn build_scorer(
         }
         "kmeans" => {
             let ev: KMeansEvaluator = match backend {
-                Backend::Hlo => {
-                    let store = std::sync::Arc::new(SharedStore::open_default()?);
-                    let n = store.param("km_n")?;
-                    let d = store.param("km_d")?;
-                    let ds =
-                        gaussian_blobs(&mut rng, n / k_true as usize, k_true as usize, d, 9.0, 0.5);
-                    // Pad to exact n rows if k_true does not divide n.
-                    let mut x = ds.x;
-                    while x.rows < n {
-                        let row: Vec<f32> = x.row(x.rows - 1).to_vec();
-                        x.data.extend_from_slice(&row);
-                        x.rows += 1;
-                    }
-                    KMeansEvaluator::hlo(x, KMeansScoring::DaviesBouldin, store, seed)?
-                }
+                Backend::Hlo => kmeans_hlo_evaluator(&mut rng, k_true, seed)?,
                 Backend::Native => {
                     let ds =
                         gaussian_blobs(&mut rng, 25, k_true as usize, 8, 9.0, 0.5);
@@ -288,6 +270,7 @@ fn build_scorer(
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts_check(args: &Args) -> Result<()> {
     let dir = args.flag_or("dir", "artifacts");
     let store = crate::runtime::ArtifactStore::open(&dir)
@@ -301,6 +284,64 @@ fn cmd_artifacts_check(args: &Args) -> Result<()> {
     }
     println!("{} entries OK (preset={})", names.len(), store.manifest().preset);
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts_check(_args: &Args) -> Result<()> {
+    bail!("artifacts-check requires a build with `--features pjrt`")
+}
+
+/// `bleed search --backend hlo` scorers — real under `pjrt`, an
+/// actionable error otherwise.
+#[cfg(feature = "pjrt")]
+fn nmfk_hlo_evaluator(
+    rng: &mut crate::util::Pcg32,
+    k_true: u32,
+    seed: u64,
+) -> Result<NmfkEvaluator> {
+    let store = std::sync::Arc::new(crate::model::SharedStore::open_default()?);
+    let m = store.param("nmf_m")?;
+    let n = store.param("nmf_n")?;
+    let ds = planted_nmf(rng, m, n, k_true as usize, 0.01);
+    NmfkEvaluator::hlo(ds.x, store, seed)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn nmfk_hlo_evaluator(
+    _rng: &mut crate::util::Pcg32,
+    _k_true: u32,
+    _seed: u64,
+) -> Result<NmfkEvaluator> {
+    bail!("--backend hlo requires a build with `--features pjrt`")
+}
+
+#[cfg(feature = "pjrt")]
+fn kmeans_hlo_evaluator(
+    rng: &mut crate::util::Pcg32,
+    k_true: u32,
+    seed: u64,
+) -> Result<KMeansEvaluator> {
+    let store = std::sync::Arc::new(crate::model::SharedStore::open_default()?);
+    let n = store.param("km_n")?;
+    let d = store.param("km_d")?;
+    let ds = gaussian_blobs(rng, n / k_true as usize, k_true as usize, d, 9.0, 0.5);
+    // Pad to exact n rows if k_true does not divide n.
+    let mut x = ds.x;
+    while x.rows < n {
+        let row: Vec<f32> = x.row(x.rows - 1).to_vec();
+        x.data.extend_from_slice(&row);
+        x.rows += 1;
+    }
+    KMeansEvaluator::hlo(x, KMeansScoring::DaviesBouldin, store, seed)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn kmeans_hlo_evaluator(
+    _rng: &mut crate::util::Pcg32,
+    _k_true: u32,
+    _seed: u64,
+) -> Result<KMeansEvaluator> {
+    bail!("--backend hlo requires a build with `--features pjrt`")
 }
 
 #[cfg(test)]

@@ -6,7 +6,7 @@
 
 pub mod toml;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, ensure, Context, Result};
 
 use crate::coordinator::{
     Mode, ParallelConfig, Pipeline, SearchPolicy, Thresholds, Traversal,
@@ -171,7 +171,7 @@ impl ExperimentConfig {
         if let Some(v) = t.get("results_dir").and_then(TomlValue::as_str) {
             self.results_dir = v.to_string();
         }
-        anyhow::ensure!(self.k_min >= 1 && self.k_min <= self.k_max, "bad k range");
+        ensure!(self.k_min >= 1 && self.k_min <= self.k_max, "bad k range");
         Ok(())
     }
 }

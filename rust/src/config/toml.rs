@@ -68,12 +68,19 @@ impl TomlValue {
 }
 
 /// Parse error with line number.
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 /// Parse a TOML-subset document into a root table.
 pub fn parse_toml(text: &str) -> Result<TomlValue, TomlError> {

@@ -1,20 +1,21 @@
 //! Binary Bleed, single rank & thread (Alg 1) plus the Standard baseline.
 //!
-//! The serial engine follows the recursion of Alg 1: probe the (ceiling)
-//! midpoint, publish the score to the pruning state, then recurse into the
-//! **higher-k half first** and the lower half second ("the search
-//! continues in the direction of optimization"), skipping any subtree that
-//! the bounds have already pruned. Unlike textbook binary search it does
-//! not terminate on a hit — it *bleeds* into the remaining range until
-//! every k is either visited or pruned.
+//! Since the engine refactor this file holds no search loop of its own:
+//! [`binary_bleed_serial`] is the threaded engine driver configured with
+//! one worker consuming the Alg 1 recursion order (midpoint first, then
+//! the **higher-k half** — "the search continues in the direction of
+//! optimization"), a [`Loopback`](super::engine::Loopback) transport and
+//! a single shared state. Unlike textbook binary search it does not
+//! terminate on a hit — it *bleeds* into the remaining range until every
+//! k is either visited or pruned.
 
 use std::time::Duration;
 
+use super::engine::{normalize_ks, run_threaded, Loopback, WorkPlan};
 use super::policy::{Mode, SearchPolicy};
 use super::scorer::KScorer;
-use super::state::{Admission, Candidate, SharedState};
-use super::visit_log::{Decision, Visit, VisitLog};
-use crate::util::Stopwatch;
+use super::state::{Candidate, SharedState};
+use super::visit_log::{Decision, VisitLog};
 
 /// Outcome of a search.
 #[derive(Debug, Clone)]
@@ -37,150 +38,29 @@ impl SearchResult {
     }
 }
 
-/// Serial Binary Bleed over `ks` (must be ascending).
+/// Serial Binary Bleed over `ks`.
 ///
-/// `Mode::Standard` falls back to the exhaustive linear baseline the paper
-/// compares against; Vanilla/Early-Stop run the pruning recursion.
+/// `ks` should be ascending and duplicate-free; anything else is sorted
+/// and deduplicated before the search (the bounds arithmetic requires
+/// it). `Mode::Standard` falls back to the exhaustive linear baseline
+/// the paper compares against; Vanilla/Early-Stop run the pruning
+/// schedule.
 pub fn binary_bleed_serial(
     ks: &[u32],
     scorer: &dyn KScorer,
     policy: SearchPolicy,
 ) -> SearchResult {
-    debug_assert!(ks.windows(2).all(|w| w[0] < w[1]), "ks must be ascending");
-    let sw = Stopwatch::new();
-    let state = SharedState::new();
-    let mut log = VisitLog::new();
-    let mut seq = 0u64;
-
-    match policy.mode {
-        Mode::Standard => {
-            for &k in ks {
-                evaluate_one(k, scorer, &policy, &state, &mut log, &mut seq, &sw);
-            }
-        }
-        Mode::Vanilla | Mode::EarlyStop => {
-            if !ks.is_empty() {
-                recurse(ks, 0, ks.len() - 1, scorer, &policy, &state, &mut log, &mut seq, &sw);
-            }
-            // Account the never-evaluated k as pruned skips so the log
-            // partitions the whole search space.
-            let evaluated: std::collections::HashSet<u32> =
-                log.evaluated().into_iter().collect();
-            for &k in ks {
-                if !evaluated.contains(&k) {
-                    log.push(Visit {
-                        seq,
-                        k,
-                        score: f64::NAN,
-                        decision: Decision::PrunedSkip,
-                        rank: 0,
-                        thread: 0,
-                        at: sw.elapsed(),
-                    });
-                    seq += 1;
-                }
-            }
-        }
-    }
-
-    let best = state.best();
-    SearchResult {
-        k_optimal: best.map(|c| c.k),
-        score: best.map(|c| c.score),
-        log,
-        total_k: ks.len(),
-        elapsed: sw.elapsed(),
-    }
-}
-
-/// Alg 1 recursion body. Indices are inclusive.
-#[allow(clippy::too_many_arguments)]
-fn recurse(
-    ks: &[u32],
-    lo: usize,
-    hi: usize,
-    scorer: &dyn KScorer,
-    policy: &SearchPolicy,
-    state: &SharedState,
-    log: &mut VisitLog,
-    seq: &mut u64,
-    sw: &Stopwatch,
-) {
-    if lo > hi {
-        return;
-    }
-    // Subtree prune: if every k in [lo, hi] is outside the live bounds,
-    // skip the whole subtree (Alg 1 lines 16/18 bound checks).
-    let (floor, ceil) = state.bounds();
-    if let Some(f) = floor {
-        if ks[hi] <= f {
-            return;
-        }
-    }
-    if let Some(c) = ceil {
-        if ks[lo] >= c {
-            return;
-        }
-    }
-
-    // Ceiling midpoint — matches the Fig 1 tree shape.
-    let m = lo + (hi - lo + 1) / 2;
-    evaluate_one(ks[m], scorer, policy, state, log, seq, sw);
-
-    // Higher-k half first: for maximization the optimal is the largest
-    // selected k, so upward exploration maximizes subsequent pruning.
-    if m < hi {
-        recurse(ks, m + 1, hi, scorer, policy, state, log, seq, sw);
-    }
-    if m > lo {
-        recurse(ks, lo, m - 1, scorer, policy, state, log, seq, sw);
-    }
-}
-
-/// Admission check + evaluation + publication for one k.
-#[allow(clippy::too_many_arguments)]
-fn evaluate_one(
-    k: u32,
-    scorer: &dyn KScorer,
-    policy: &SearchPolicy,
-    state: &SharedState,
-    log: &mut VisitLog,
-    seq: &mut u64,
-    sw: &Stopwatch,
-) {
-    match state.admit(k, policy) {
-        Admission::Admit => {
-            let score = scorer.score(k);
-            let selected = policy.selects(score);
-            state.publish(k, score, policy);
-            log.push(Visit {
-                seq: *seq,
-                k,
-                score,
-                decision: if selected {
-                    Decision::Selected
-                } else {
-                    Decision::Rejected
-                },
-                rank: 0,
-                thread: 0,
-                at: sw.elapsed(),
-            });
-        }
-        Admission::PrunedBySelect | Admission::PrunedByStop => {
-            log.push(Visit {
-                seq: *seq,
-                k,
-                score: f64::NAN,
-                decision: Decision::PrunedSkip,
-                rank: 0,
-                thread: 0,
-                at: sw.elapsed(),
-            });
-        }
-        Admission::AlreadyClaimed => {}
-    }
-    *seq += 1;
+    let ks = normalize_ks(ks);
+    let plan = WorkPlan::serial(&ks, policy.mode);
+    let state = SharedState::new(&ks);
+    run_threaded(
+        &ks,
+        &plan,
+        std::slice::from_ref(&state),
+        &Loopback,
+        scorer,
+        policy,
+    )
 }
 
 /// Standard linear baseline — convenience wrapper.
@@ -352,5 +232,24 @@ mod tests {
         let r = binary_bleed_serial(&ks(), &square_wave(17), pol(Mode::Vanilla));
         let c = optimal_from_log(&r.log, &pol(Mode::Vanilla)).unwrap();
         assert_eq!(Some(c.k), r.k_optimal);
+    }
+
+    #[test]
+    fn unsorted_and_duplicated_input_is_normalized() {
+        // Release-mode validation (the seed only debug_assert!ed): the
+        // same search space shuffled with duplicates gives the same
+        // answer and a log over the deduplicated domain.
+        let mut shuffled: Vec<u32> = ks();
+        shuffled.reverse();
+        shuffled.push(17);
+        shuffled.push(2);
+        let r = binary_bleed_serial(&shuffled, &square_wave(17), pol(Mode::Vanilla));
+        let clean = binary_bleed_serial(&ks(), &square_wave(17), pol(Mode::Vanilla));
+        assert_eq!(r.k_optimal, clean.k_optimal);
+        assert_eq!(r.total_k, 29);
+        let mut all = r.log.evaluated();
+        all.extend(r.log.pruned());
+        all.sort_unstable();
+        assert_eq!(all, ks());
     }
 }

@@ -1,0 +1,100 @@
+//! Time sources for the engine: wall-clock for real execution, virtual
+//! for the deterministic / simulated regimes.
+//!
+//! The engine core stamps every visit with `clock.now()` and hands the
+//! same timestamps to the transport, so swapping [`WallClock`] for
+//! [`VirtualClock`] is all it takes to move a regime from "as fast as
+//! the host runs" to "replayed on a simulated timeline" (Fig 8 vs Fig 9).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::Stopwatch;
+
+/// A monotonically non-decreasing time source.
+pub trait Clock: Sync {
+    /// Elapsed time since the search began.
+    fn now(&self) -> Duration;
+}
+
+/// Real elapsed time (the production multi-rank/multi-thread regime).
+pub struct WallClock {
+    sw: Stopwatch,
+}
+
+impl WallClock {
+    pub fn start() -> Self {
+        Self {
+            sw: Stopwatch::new(),
+        }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Duration {
+        self.sw.elapsed()
+    }
+}
+
+/// Driver-advanced virtual time in nanoseconds (event-driven regimes).
+#[derive(Default)]
+pub struct VirtualClock {
+    nanos: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance to an absolute simulated time given in minutes (the cost
+    /// models' unit). Saturates instead of wrapping on absurd inputs.
+    pub fn set_minutes(&self, minutes: f64) {
+        let nanos = duration_from_minutes(minutes).as_nanos();
+        self.nanos
+            .store(u64::try_from(nanos).unwrap_or(u64::MAX), Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+    }
+}
+
+/// Simulated-minutes → `Duration`, clamped to non-negative finite values.
+pub fn duration_from_minutes(minutes: f64) -> Duration {
+    if minutes.is_finite() && minutes > 0.0 {
+        Duration::from_secs_f64(minutes * 60.0)
+    } else {
+        Duration::ZERO
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances_on_set() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.set_minutes(2.0);
+        assert_eq!(c.now(), Duration::from_secs(120));
+    }
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::start();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn minute_conversion_clamps_garbage() {
+        assert_eq!(duration_from_minutes(-3.0), Duration::ZERO);
+        assert_eq!(duration_from_minutes(f64::NAN), Duration::ZERO);
+        assert_eq!(duration_from_minutes(0.5), Duration::from_secs(30));
+    }
+}

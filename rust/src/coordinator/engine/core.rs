@@ -1,0 +1,487 @@
+//! The engine core: **one** implementation of Alg 4's
+//! claim → evaluate → publish → broadcast protocol, plus the two drivers
+//! that schedule it:
+//!
+//! * [`run_threaded`] — real OS threads, wall-clock time, any
+//!   [`Transport`]. One worker per [`WorkerSlot`]; workers of a rank
+//!   share that rank's [`SharedState`]; bound movements travel as
+//!   BroadcastK messages. This is the production path.
+//! * [`run_event`] — single-threaded event-driven replay on a virtual
+//!   clock with per-k costs and link latency. Publications take effect
+//!   at the publisher's *finish* time (+ latency for peers), which
+//!   reproduces the paper's "a k already executing is never killed"
+//!   semantics exactly and makes visit counts a deterministic function
+//!   of the schedule — what Fig 8/Fig 9 report. With [`UnitCost`] and
+//!   zero latency this *is* the lockstep executor: unit costs quantize
+//!   the timeline into rounds and round-r publications land at r+1.
+//!
+//! Every public search entry point (`binary_bleed_serial`,
+//! `binary_bleed_parallel`, `binary_bleed_lockstep`,
+//! `simulate_distributed`, `simulate_parallel_cluster`) is a thin
+//! configuration of these two drivers; none of them carries its own
+//! admit/evaluate/publish loop anymore.
+
+use std::collections::BinaryHeap;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::super::bleed::SearchResult;
+use super::super::policy::SearchPolicy;
+use super::super::rank::Broadcast;
+use super::super::scorer::KScorer;
+use super::super::state::{Admission, Candidate, SharedState};
+use super::super::visit_log::{Decision, Visit, VisitLog};
+use super::clock::{duration_from_minutes, Clock, VirtualClock, WallClock};
+use super::transport::{SimNet, Transport};
+use super::work::{WorkPlan, WorkerSlot};
+
+/// Build the visit record for one evaluation.
+fn eval_visit(
+    seq: &AtomicU64,
+    k: u32,
+    score: f64,
+    selected: bool,
+    rank: usize,
+    thread: usize,
+    at: Duration,
+) -> Visit {
+    Visit {
+        seq: seq.fetch_add(1, Ordering::SeqCst),
+        k,
+        score,
+        decision: if selected {
+            Decision::Selected
+        } else {
+            Decision::Rejected
+        },
+        rank,
+        thread,
+        at,
+    }
+}
+
+/// Build the visit record for one pruned skip.
+fn prune_visit(seq: &AtomicU64, k: u32, rank: usize, thread: usize, at: Duration) -> Visit {
+    Visit {
+        seq: seq.fetch_add(1, Ordering::SeqCst),
+        k,
+        score: f64::NAN,
+        decision: Decision::PrunedSkip,
+        rank,
+        thread,
+        at,
+    }
+}
+
+/// Alg 4 for one k on one worker: ReceiveKCheck, admission, evaluation,
+/// publication, BroadcastK. Returns the visit to record, or `None` when
+/// another worker already claimed the k.
+///
+/// This is the *immediate-publication* form the threaded driver runs.
+/// The event driver shares the same state protocol (admit /
+/// merge_remote) and visit builders but must defer publication to the
+/// evaluation's finish time — see the marked divergence in
+/// [`run_event`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn protocol_step(
+    rank: usize,
+    thread: usize,
+    k: u32,
+    state: &SharedState,
+    scorer: &dyn KScorer,
+    policy: &SearchPolicy,
+    transport: &dyn Transport,
+    clock: &dyn Clock,
+    seq: &AtomicU64,
+) -> Option<Visit> {
+    // ReceiveKCheck: merge every pending remote bound movement.
+    let now = clock.now();
+    for msg in transport.drain(rank, now) {
+        state.merge_remote(msg.floor, msg.ceil, msg.best);
+    }
+    match state.admit(k, policy) {
+        Admission::Admit => {
+            let score = scorer.score(k);
+            let publication = state.publish(k, score, policy);
+            if !publication.is_empty() {
+                // Alg 4 line 23: report the moved bound to every rank.
+                transport.broadcast(
+                    rank,
+                    clock.now(),
+                    Broadcast {
+                        from: rank,
+                        floor: publication.new_floor,
+                        ceil: publication.new_ceil,
+                        best: publication.new_best,
+                    },
+                );
+            }
+            Some(eval_visit(
+                seq,
+                k,
+                score,
+                policy.selects(score),
+                rank,
+                thread,
+                clock.now(),
+            ))
+        }
+        Admission::PrunedBySelect | Admission::PrunedByStop => {
+            Some(prune_visit(seq, k, rank, thread, now))
+        }
+        Admission::AlreadyClaimed => None,
+    }
+}
+
+/// Real-thread driver: one worker per plan slot, rank-shared states,
+/// wall-clock timestamps. Single-worker plans run inline on the calling
+/// thread (the serial regime spawns nothing).
+pub fn run_threaded(
+    ks: &[u32],
+    plan: &WorkPlan,
+    states: &[SharedState],
+    transport: &dyn Transport,
+    scorer: &dyn KScorer,
+    policy: SearchPolicy,
+) -> SearchResult {
+    assert!(
+        states.len() >= plan.ranks,
+        "need one SharedState per rank ({} < {})",
+        states.len(),
+        plan.ranks
+    );
+    let clock = WallClock::start();
+    let seq = AtomicU64::new(0);
+    let log = Mutex::new(VisitLog::new());
+
+    let run_worker = |slot: &WorkerSlot| {
+        let state = &states[slot.rank];
+        // Perf: visits buffer locally and merge under one lock at exit.
+        let mut local = VisitLog::new();
+        for &k in &slot.list {
+            if let Some(v) = protocol_step(
+                slot.rank,
+                slot.thread,
+                k,
+                state,
+                scorer,
+                &policy,
+                transport,
+                &clock,
+                &seq,
+            ) {
+                local.push(v);
+            }
+        }
+        if !local.visits.is_empty() {
+            log.lock().unwrap().merge(local);
+        }
+    };
+
+    if plan.workers.len() <= 1 {
+        if let Some(slot) = plan.workers.first() {
+            run_worker(slot);
+        }
+    } else {
+        let worker_ref = &run_worker;
+        std::thread::scope(|scope| {
+            for slot in &plan.workers {
+                scope.spawn(move || worker_ref(slot));
+            }
+        });
+    }
+
+    let mut log = log.into_inner().unwrap();
+    fill_pruned(&mut log, ks, &seq, clock.now());
+    // Fold rank-local optima (paper: ReceiveKCheck keeps the larger k);
+    // folding makes the result robust to in-flight messages at shutdown.
+    let best = states.iter().filter_map(|s| s.best()).max_by_key(|c| c.k);
+    SearchResult {
+        k_optimal: best.map(|c| c.k),
+        score: best.map(|c| c.score),
+        log,
+        total_k: ks.len(),
+        elapsed: clock.now(),
+    }
+}
+
+/// Per-k evaluation cost for the event-driven driver.
+pub trait EvalCost: Sync {
+    /// Simulated minutes to evaluate the model at k.
+    fn minutes(&self, k: u32) -> f64;
+}
+
+/// Every k costs one unit — quantizes the event timeline into lockstep
+/// rounds.
+pub struct UnitCost;
+
+impl EvalCost for UnitCost {
+    fn minutes(&self, _k: u32) -> f64 {
+        1.0
+    }
+}
+
+/// One completed evaluation on the simulated timeline.
+#[derive(Debug, Clone)]
+pub struct EvalSpan {
+    pub k: u32,
+    pub resource: usize,
+    /// Simulated minutes.
+    pub start: f64,
+    pub end: f64,
+    pub score: f64,
+    pub selected: bool,
+}
+
+/// Result of an event-driven run.
+#[derive(Debug, Clone)]
+pub struct EventOutcome {
+    /// Per-k decision log (visit `at` stamps carry simulated time).
+    pub log: VisitLog,
+    /// Folded candidate optimal across all resources.
+    pub best: Option<Candidate>,
+    /// Simulated makespan in minutes (serial regimes: the cost sum).
+    pub makespan_minutes: f64,
+    /// Evaluation trace, in launch order.
+    pub spans: Vec<EvalSpan>,
+}
+
+/// Min-heap entry: (time, resource); ties broken by resource id so the
+/// replay is deterministic.
+#[derive(PartialEq)]
+struct Ready(f64, usize);
+
+impl Eq for Ready {}
+
+impl PartialOrd for Ready {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ready {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed for min-heap behaviour of std's max-heap.
+        other
+            .0
+            .partial_cmp(&self.0)
+            .unwrap()
+            .then(other.1.cmp(&self.1))
+    }
+}
+
+/// Event-driven driver: replays the plan on a virtual clock. Each
+/// resource owns a rank-local [`SharedState`]; publications travel over
+/// a [`SimNet`] and become visible at the publisher's finish time (plus
+/// `link_latency_minutes` for peers).
+pub fn run_event(
+    ks: &[u32],
+    plan: &WorkPlan,
+    scorer: &dyn KScorer,
+    policy: SearchPolicy,
+    cost: &dyn EvalCost,
+    link_latency_minutes: f64,
+) -> EventOutcome {
+    let resources = plan.workers.len().max(1);
+    let states: Vec<SharedState> = (0..resources).map(|_| SharedState::new(ks)).collect();
+    let net = SimNet::new(resources, duration_from_minutes(link_latency_minutes));
+    let clock = VirtualClock::new();
+    let seq = AtomicU64::new(0);
+    let mut log = VisitLog::new();
+    let mut spans: Vec<EvalSpan> = Vec::new();
+    let mut cursors = vec![0usize; resources];
+    let mut heap: BinaryHeap<Ready> = (0..plan.workers.len()).map(|r| Ready(0.0, r)).collect();
+    let mut makespan = 0.0f64;
+
+    while let Some(Ready(t, r)) = heap.pop() {
+        clock.set_minutes(t);
+        let now = clock.now();
+        // ReceiveKCheck at the resource's current time.
+        for msg in net.drain(r, now) {
+            states[r].merge_remote(msg.floor, msg.ceil, msg.best);
+        }
+        let slot = &plan.workers[r];
+        // Pull the next admissible k; pruned skips cost zero time.
+        while cursors[r] < slot.list.len() {
+            let k = slot.list[cursors[r]];
+            cursors[r] += 1;
+            match states[r].admit(k, &policy) {
+                Admission::Admit => {
+                    let score = scorer.score(k);
+                    let end = t + cost.minutes(k);
+                    let selected = policy.selects(score);
+                    // INTENTIONAL DIVERGENCE from `protocol_step`: the
+                    // event driver must NOT publish into the local state
+                    // here — the result exists only at the finish time,
+                    // so the whole publication rides the transport
+                    // stamped `end` (the publisher itself sees it then,
+                    // peers one latency later). In-flight k are
+                    // therefore never killed (Fig 4) and lockstep
+                    // rounds emerge under UnitCost. Everything else
+                    // (admission, visit records, merge semantics) is
+                    // shared with the threaded step.
+                    let msg = Broadcast {
+                        from: r,
+                        floor: if selected && policy.prunes_on_select() {
+                            Some(k)
+                        } else {
+                            None
+                        },
+                        ceil: if policy.stops(score) { Some(k) } else { None },
+                        best: if selected {
+                            Some(Candidate { k, score })
+                        } else {
+                            None
+                        },
+                    };
+                    if msg.floor.is_some() || msg.ceil.is_some() || msg.best.is_some() {
+                        net.broadcast(r, duration_from_minutes(end), msg);
+                    }
+                    log.push(eval_visit(&seq, k, score, selected, r, slot.thread, now));
+                    spans.push(EvalSpan {
+                        k,
+                        resource: r,
+                        start: t,
+                        end,
+                        score,
+                        selected,
+                    });
+                    makespan = makespan.max(end);
+                    heap.push(Ready(end, r));
+                    break;
+                }
+                Admission::PrunedBySelect | Admission::PrunedByStop => {
+                    log.push(prune_visit(&seq, k, r, slot.thread, now));
+                }
+                Admission::AlreadyClaimed => {}
+            }
+        }
+    }
+
+    // Flush tail publications that no pop ever drained, so the folded
+    // optimum reflects the whole run.
+    for (r, state) in states.iter().enumerate() {
+        for msg in net.drain(r, Duration::MAX) {
+            state.merge_remote(msg.floor, msg.ceil, msg.best);
+        }
+    }
+    let best = states.iter().filter_map(|s| s.best()).max_by_key(|c| c.k);
+    EventOutcome {
+        log,
+        best,
+        makespan_minutes: makespan,
+        spans,
+    }
+}
+
+/// Append PrunedSkip entries for k never touched by any worker, so the
+/// log always partitions the search domain.
+pub(crate) fn fill_pruned(log: &mut VisitLog, ks: &[u32], seq: &AtomicU64, at: Duration) {
+    let seen: HashSet<u32> = log.visits.iter().map(|v| v.k).collect();
+    for &k in ks {
+        if !seen.contains(&k) {
+            log.push(prune_visit(seq, k, usize::MAX, 0, at));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::transport::Loopback;
+    use super::super::work::bleed_order;
+    use super::*;
+    use crate::coordinator::chunk::Pipeline;
+    use crate::coordinator::policy::{Mode, Thresholds};
+    use crate::coordinator::traversal::Traversal;
+
+    fn pol(mode: Mode) -> SearchPolicy {
+        SearchPolicy::maximize(
+            mode,
+            Thresholds {
+                select: 0.75,
+                stop: 0.2,
+            },
+        )
+    }
+
+    fn square(k_true: u32) -> impl Fn(u32) -> f64 + Sync {
+        move |k| if k <= k_true { 0.95 } else { 0.05 }
+    }
+
+    #[test]
+    fn threaded_serial_finds_ktrue() {
+        let ks: Vec<u32> = (2..=30).collect();
+        let plan = WorkPlan::serial(&ks, Mode::Vanilla);
+        assert_eq!(plan.workers[0].list, bleed_order(&ks));
+        let state = SharedState::new(&ks);
+        let r = run_threaded(
+            &ks,
+            &plan,
+            std::slice::from_ref(&state),
+            &Loopback,
+            &square(15),
+            pol(Mode::Vanilla),
+        );
+        assert_eq!(r.k_optimal, Some(15));
+    }
+
+    #[test]
+    fn event_unit_cost_forms_rounds() {
+        // 2 resources, unit cost: the first two evaluations start at 0,
+        // the next pair at 1 — lockstep rounds.
+        let ks: Vec<u32> = (2..=9).collect();
+        let plan = WorkPlan::flat(&ks, 2, Traversal::InOrder, Pipeline::SkipModThenSort);
+        let out = run_event(
+            &ks,
+            &plan,
+            &square(9),
+            pol(Mode::Standard),
+            &UnitCost,
+            0.0,
+        );
+        assert_eq!(out.spans.len(), 8);
+        let round0: Vec<&EvalSpan> = out.spans.iter().filter(|s| s.start == 0.0).collect();
+        assert_eq!(round0.len(), 2);
+        assert_eq!(out.makespan_minutes, 4.0);
+        assert_eq!(out.best.unwrap().k, 9);
+    }
+
+    #[test]
+    fn event_latency_delays_pruning() {
+        // In-order lists on 2 resources; with huge link latency the
+        // selection on one resource never reaches the other, so strictly
+        // more k are evaluated than with instant links.
+        let ks: Vec<u32> = (2..=40).collect();
+        let plan = WorkPlan::flat(&ks, 2, Traversal::PreOrder, Pipeline::SkipModThenSort);
+        let fast = run_event(&ks, &plan, &square(35), pol(Mode::Vanilla), &UnitCost, 0.0);
+        let slow = run_event(
+            &ks,
+            &plan,
+            &square(35),
+            pol(Mode::Vanilla),
+            &UnitCost,
+            1e6,
+        );
+        assert_eq!(fast.best.map(|c| c.k), Some(35));
+        assert_eq!(slow.best.map(|c| c.k), Some(35));
+        assert!(
+            slow.spans.len() >= fast.spans.len(),
+            "latency cannot improve pruning: {} < {}",
+            slow.spans.len(),
+            fast.spans.len()
+        );
+    }
+
+    #[test]
+    fn event_log_partitions_domain() {
+        let ks: Vec<u32> = (2..=30).collect();
+        let plan = WorkPlan::flat(&ks, 3, Traversal::PreOrder, Pipeline::SkipModThenSort);
+        let out = run_event(&ks, &plan, &square(11), pol(Mode::EarlyStop), &UnitCost, 0.0);
+        let mut all = out.log.evaluated();
+        all.extend(out.log.pruned());
+        all.sort_unstable();
+        assert_eq!(all, ks);
+    }
+}

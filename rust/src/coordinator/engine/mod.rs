@@ -1,0 +1,37 @@
+//! The pluggable Binary Bleed execution engine (DESIGN.md §3).
+//!
+//! The paper's central claim is that one pruning schedule (Alg 1/3/4)
+//! works identically across serial, multi-thread, multi-rank and
+//! distributed regimes. This layer makes that literal in code: a single
+//! work loop implements the claim → evaluate → publish → broadcast
+//! protocol over the lock-free [`SharedState`](super::state::SharedState),
+//! parameterized by three orthogonal axes:
+//!
+//! | axis        | trait / type          | implementations                          |
+//! |-------------|-----------------------|------------------------------------------|
+//! | time        | [`Clock`]             | [`WallClock`], [`VirtualClock`]          |
+//! | propagation | [`Transport`]         | [`Loopback`], [`MpscNet`], [`SimNet`]    |
+//! | work source | [`WorkPlan`]          | serial / ranked / flat chunkings         |
+//! | eval cost   | [`EvalCost`]          | [`UnitCost`], `simulate::CostModel`      |
+//!
+//! The four public entry points are thin configurations:
+//!
+//! * `binary_bleed_serial`   = threaded driver × 1 worker × [`Loopback`]
+//! * `binary_bleed_parallel` = threaded driver × ranks×threads × [`MpscNet`]
+//! * `binary_bleed_lockstep` = event driver × [`UnitCost`] × zero latency
+//! * `simulate_distributed` / `simulate_parallel_cluster`
+//!   = event driver × calibrated [`EvalCost`] × [`SimNet`] latency
+//!
+//! New regimes (async runtimes, real MPI, elastic resources) are new
+//! `Transport`/`Clock` implementations — not fifth and sixth copies of
+//! the loop.
+
+pub mod clock;
+pub mod core;
+pub mod transport;
+pub mod work;
+
+pub use self::clock::{duration_from_minutes, Clock, VirtualClock, WallClock};
+pub use self::core::{run_event, run_threaded, EvalCost, EvalSpan, EventOutcome, UnitCost};
+pub use self::transport::{Loopback, MpscNet, SimNet, Transport};
+pub use self::work::{bleed_order, normalize_ks, WorkPlan, WorkerSlot};

@@ -1,0 +1,163 @@
+//! Pruning-propagation transports: how BroadcastK / ReceiveKCheck move
+//! between ranks in each regime.
+//!
+//! * [`Loopback`] — single-rank regimes: every worker shares one
+//!   [`SharedState`](super::super::state::SharedState), so there is
+//!   nothing to send.
+//! * [`MpscNet`] — the production multi-rank regime: in-process mpsc
+//!   channel mailboxes (the seed's [`RankComm`] network) delivering
+//!   broadcasts as fast as the host schedules threads.
+//! * [`SimNet`] — simulated links with injectable latency for the Fig 9
+//!   distributed regime: a broadcast becomes visible to the publisher at
+//!   its own timestamp and to every peer `latency` later, which is what
+//!   lets the event-driven driver replay "a k already executing is never
+//!   killed" (Fig 4) and bandwidth-delayed pruning.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::super::rank::{Broadcast, RankComm};
+
+/// Rank-to-rank propagation of bound movements.
+pub trait Transport: Sync {
+    /// BroadcastK: publish `msg` from `from` at time `now`.
+    fn broadcast(&self, from: usize, now: Duration, msg: Broadcast);
+
+    /// ReceiveKCheck: drain every message visible to `rank` at `now`.
+    fn drain(&self, rank: usize, now: Duration) -> Vec<Broadcast>;
+}
+
+/// No-op transport for single-state regimes.
+pub struct Loopback;
+
+impl Transport for Loopback {
+    fn broadcast(&self, _from: usize, _now: Duration, _msg: Broadcast) {}
+
+    fn drain(&self, _rank: usize, _now: Duration) -> Vec<Broadcast> {
+        Vec::new()
+    }
+}
+
+/// Channel-mailbox network (wraps the seed's [`RankComm`] fabric).
+pub struct MpscNet {
+    comms: Vec<RankComm>,
+}
+
+impl MpscNet {
+    pub fn new(ranks: usize) -> Self {
+        Self {
+            comms: RankComm::network(ranks.max(1)),
+        }
+    }
+}
+
+impl Transport for MpscNet {
+    fn broadcast(&self, from: usize, _now: Duration, msg: Broadcast) {
+        self.comms[from].broadcast(msg);
+    }
+
+    fn drain(&self, rank: usize, _now: Duration) -> Vec<Broadcast> {
+        self.comms[rank].drain()
+    }
+}
+
+/// Latency-injecting simulated links: messages carry a visibility time.
+pub struct SimNet {
+    latency: Duration,
+    /// Per-destination pending messages: (visible_at, payload).
+    boxes: Mutex<Vec<Vec<(Duration, Broadcast)>>>,
+}
+
+impl SimNet {
+    pub fn new(ranks: usize, latency: Duration) -> Self {
+        Self {
+            latency,
+            boxes: Mutex::new(vec![Vec::new(); ranks.max(1)]),
+        }
+    }
+}
+
+impl Transport for SimNet {
+    fn broadcast(&self, from: usize, now: Duration, msg: Broadcast) {
+        let mut boxes = self.boxes.lock().unwrap();
+        for (dest, mailbox) in boxes.iter_mut().enumerate() {
+            // The publisher sees its own movement immediately; peers see
+            // it one link-latency later.
+            let visible_at = if dest == from { now } else { now + self.latency };
+            mailbox.push((visible_at, msg));
+        }
+    }
+
+    fn drain(&self, rank: usize, now: Duration) -> Vec<Broadcast> {
+        let mut boxes = self.boxes.lock().unwrap();
+        let mailbox = &mut boxes[rank];
+        let mut due = Vec::new();
+        let mut pending = Vec::new();
+        for (at, msg) in mailbox.drain(..) {
+            if at <= now {
+                due.push(msg);
+            } else {
+                pending.push((at, msg));
+            }
+        }
+        *mailbox = pending;
+        due
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::Candidate;
+
+    fn msg(floor: u32) -> Broadcast {
+        Broadcast {
+            from: 0,
+            floor: Some(floor),
+            ceil: None,
+            best: Some(Candidate {
+                k: floor,
+                score: 0.9,
+            }),
+        }
+    }
+
+    #[test]
+    fn loopback_swallows_everything() {
+        let t = Loopback;
+        t.broadcast(0, Duration::ZERO, msg(5));
+        assert!(t.drain(0, Duration::from_secs(100)).is_empty());
+    }
+
+    #[test]
+    fn mpsc_net_delivers_to_peers_only() {
+        let t = MpscNet::new(3);
+        t.broadcast(0, Duration::ZERO, msg(7));
+        assert!(t.drain(0, Duration::ZERO).is_empty());
+        assert_eq!(t.drain(1, Duration::ZERO).len(), 1);
+        assert_eq!(t.drain(2, Duration::ZERO).len(), 1);
+    }
+
+    #[test]
+    fn sim_net_delays_peers_by_latency() {
+        let t = SimNet::new(2, Duration::from_secs(60));
+        t.broadcast(0, Duration::from_secs(10), msg(4));
+        // Publisher sees it at t=10.
+        assert_eq!(t.drain(0, Duration::from_secs(10)).len(), 1);
+        // Peer sees nothing before t=70...
+        assert!(t.drain(1, Duration::from_secs(69)).is_empty());
+        // ...and the message exactly at t=70.
+        let got = t.drain(1, Duration::from_secs(70));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].floor, Some(4));
+        // Drained messages are gone.
+        assert!(t.drain(1, Duration::from_secs(700)).is_empty());
+    }
+
+    #[test]
+    fn sim_net_zero_latency_is_immediate() {
+        let t = SimNet::new(2, Duration::ZERO);
+        t.broadcast(1, Duration::from_secs(5), msg(9));
+        assert_eq!(t.drain(0, Duration::from_secs(5)).len(), 1);
+    }
+}

@@ -1,0 +1,229 @@
+//! Work sources for the engine: who evaluates which k, in what order.
+//!
+//! Every execution regime reduces to a [`WorkPlan`] — one ordered k list
+//! per worker slot — built from the same chunk/traversal front-end
+//! (Alg 2 / Table II / Fig 1):
+//!
+//! * [`WorkPlan::serial`] — one slot consuming the Alg 1 recursion order
+//!   (midpoint first, **higher-k half before lower**), or the plain
+//!   ascending list for the Standard baseline.
+//! * [`WorkPlan::ranked`] — Alg 3: `Pipeline::split` deals k across
+//!   ranks, then worker threads inside a rank take strided positions
+//!   `t, t+T, t+2T, ...` of the rank's list (Alg 3 line 13).
+//! * [`WorkPlan::flat`] — one slot per resource (lockstep rounds and the
+//!   event-driven cluster simulators).
+
+use super::super::chunk::Pipeline;
+use super::super::policy::Mode;
+use super::super::traversal::Traversal;
+
+/// One worker's assignment: identity plus its ordered k list.
+#[derive(Debug, Clone)]
+pub struct WorkerSlot {
+    /// Rank (node) this worker belongs to; indexes the per-rank state.
+    pub rank: usize,
+    /// Thread index within the rank (0 for single-threaded regimes).
+    pub thread: usize,
+    /// The k values this worker visits, in order.
+    pub list: Vec<u32>,
+}
+
+/// The full work assignment of a search: a partition of the k domain
+/// into per-worker ordered lists.
+#[derive(Debug, Clone)]
+pub struct WorkPlan {
+    pub workers: Vec<WorkerSlot>,
+    /// Number of ranks (distinct shared-state instances).
+    pub ranks: usize,
+}
+
+impl WorkPlan {
+    /// Single worker following Alg 1's serial order.
+    pub fn serial(ks: &[u32], mode: Mode) -> WorkPlan {
+        let list = match mode {
+            Mode::Standard => ks.to_vec(),
+            Mode::Vanilla | Mode::EarlyStop => bleed_order(ks),
+        };
+        WorkPlan {
+            workers: vec![WorkerSlot {
+                rank: 0,
+                thread: 0,
+                list,
+            }],
+            ranks: 1,
+        }
+    }
+
+    /// Alg 3 shape: `ranks` nodes × `threads_per_rank` workers, the k
+    /// domain dealt by `pipeline`/`traversal`, threads striding their
+    /// rank's list.
+    pub fn ranked(
+        ks: &[u32],
+        ranks: usize,
+        threads_per_rank: usize,
+        traversal: Traversal,
+        pipeline: Pipeline,
+    ) -> WorkPlan {
+        let ranks = ranks.max(1);
+        let threads = threads_per_rank.max(1);
+        let chunks = pipeline.split(ks, ranks, traversal);
+        let mut workers = Vec::with_capacity(ranks * threads);
+        for (rank, chunk) in chunks.into_iter().enumerate() {
+            for thread in 0..threads {
+                let list: Vec<u32> = chunk
+                    .iter()
+                    .skip(thread)
+                    .step_by(threads)
+                    .copied()
+                    .collect();
+                workers.push(WorkerSlot { rank, thread, list });
+            }
+        }
+        WorkPlan { workers, ranks }
+    }
+
+    /// One slot per resource (rank = resource id, thread 0) — the shape
+    /// of the lockstep executor and the cluster simulators.
+    pub fn flat(
+        ks: &[u32],
+        resources: usize,
+        traversal: Traversal,
+        pipeline: Pipeline,
+    ) -> WorkPlan {
+        let resources = resources.max(1);
+        let chunks = pipeline.split(ks, resources, traversal);
+        let workers = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(rank, list)| WorkerSlot {
+                rank,
+                thread: 0,
+                list,
+            })
+            .collect();
+        WorkPlan {
+            workers,
+            ranks: resources,
+        }
+    }
+}
+
+/// Alg 1's visit order: ceiling midpoint first, then the **higher-k
+/// half**, then the lower half ("the search continues in the direction
+/// of optimization" — upward exploration maximizes subsequent pruning).
+/// Note this differs from [`Traversal::PreOrder`], which serializes the
+/// lower half first.
+pub fn bleed_order(ks: &[u32]) -> Vec<u32> {
+    fn rec(ks: &[u32], lo: usize, hi: usize, out: &mut Vec<u32>) {
+        if lo > hi {
+            return;
+        }
+        let m = lo + (hi - lo + 1) / 2;
+        out.push(ks[m]);
+        if m < hi {
+            rec(ks, m + 1, hi, out);
+        }
+        if m > lo {
+            rec(ks, lo, m - 1, out);
+        }
+    }
+    let mut out = Vec::with_capacity(ks.len());
+    if !ks.is_empty() {
+        rec(ks, 0, ks.len() - 1, &mut out);
+    }
+    out
+}
+
+/// Release-mode input validation for every public search entry point:
+/// the bounds arithmetic (floor/ceil pruning, bitmap positions) requires
+/// a strictly ascending k list, so unsorted or duplicated input is
+/// sorted and deduplicated instead of silently corrupting the search
+/// (the seed only `debug_assert!`ed, which vanishes under `--release`).
+pub fn normalize_ks(ks: &[u32]) -> Vec<u32> {
+    let mut v = ks.to_vec();
+    if !v.windows(2).all(|w| w[0] < w[1]) {
+        v.sort_unstable();
+        v.dedup();
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bleed_order_visits_high_half_first() {
+        // [1..11]: mid 6, then the upper subtree, then the lower.
+        assert_eq!(
+            bleed_order(&(1..=11).collect::<Vec<u32>>()),
+            vec![6, 9, 11, 10, 8, 7, 3, 5, 4, 2, 1]
+        );
+    }
+
+    #[test]
+    fn bleed_order_is_permutation() {
+        let ks: Vec<u32> = (2..=30).collect();
+        let mut sorted = bleed_order(&ks);
+        sorted.sort_unstable();
+        assert_eq!(sorted, ks);
+        assert!(bleed_order(&[]).is_empty());
+        assert_eq!(bleed_order(&[7]), vec![7]);
+    }
+
+    #[test]
+    fn normalize_passes_sorted_through_and_fixes_bad_input() {
+        let ks: Vec<u32> = (2..=9).collect();
+        assert_eq!(normalize_ks(&ks), ks);
+        assert_eq!(normalize_ks(&[5, 2, 9, 2, 7]), vec![2, 5, 7, 9]);
+        assert_eq!(normalize_ks(&[]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn ranked_plan_partitions_and_strides() {
+        let ks: Vec<u32> = (1..=11).collect();
+        let plan = WorkPlan::ranked(
+            &ks,
+            2,
+            2,
+            Traversal::PreOrder,
+            Pipeline::SkipModThenSort,
+        );
+        assert_eq!(plan.ranks, 2);
+        assert_eq!(plan.workers.len(), 4);
+        // T4 pre rank 0 chunk is [7,3,1,5,11,9]; thread 0 takes even
+        // positions, thread 1 odd.
+        assert_eq!(plan.workers[0].list, vec![7, 1, 11]);
+        assert_eq!(plan.workers[1].list, vec![3, 5, 9]);
+        // Union of all lists is the whole domain.
+        let mut all: Vec<u32> = plan
+            .workers
+            .iter()
+            .flat_map(|w| w.list.iter().copied())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, ks);
+    }
+
+    #[test]
+    fn flat_plan_one_slot_per_resource() {
+        let ks: Vec<u32> = (1..=9).collect();
+        let plan = WorkPlan::flat(&ks, 3, Traversal::InOrder, Pipeline::SkipModThenSort);
+        assert_eq!(plan.workers.len(), 3);
+        assert!(plan.workers.iter().all(|w| w.thread == 0));
+        assert_eq!(plan.workers[1].rank, 1);
+    }
+
+    #[test]
+    fn degenerate_shapes_clamp_to_one() {
+        let plan = WorkPlan::ranked(
+            &[2, 3],
+            0,
+            0,
+            Traversal::PreOrder,
+            Pipeline::SkipModThenSort,
+        );
+        assert_eq!(plan.ranks, 1);
+        assert_eq!(plan.workers.len(), 1);
+    }
+}

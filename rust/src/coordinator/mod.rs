@@ -1,18 +1,26 @@
 //! L3 coordinator — the paper's contribution (§III).
 //!
+//! * [`engine`] — the pluggable execution core: ONE implementation of
+//!   Alg 4's claim → evaluate → publish → broadcast protocol,
+//!   parameterized by Clock (wall vs. virtual time), Transport (loopback,
+//!   in-proc channels, latency-injecting simulated links), WorkPlan
+//!   (chunk/traversal front-end) and EvalCost. Every public entry point
+//!   below is a thin configuration of it.
 //! * [`bleed`] — Alg 1: serial Binary Bleed (Vanilla / Early-Stop) plus
 //!   the exhaustive Standard baseline.
 //! * [`traversal`] — Fig 1: pre/in/post-order BST serialization of K.
 //! * [`chunk`] — Alg 2 + Table II: dealing K across resources.
-//! * [`state`] — the shared pruning cache (k_min/k_max/optimal).
+//! * [`state`] — the shared pruning cache (k_min/k_max/optimal), now
+//!   lock-free: atomic bounds + claim bitmap indexed by k-position.
 //! * [`rank`] — BroadcastK / ReceiveKCheck over channel mailboxes.
 //! * [`scheduler`] — Alg 3+4: multi-rank multi-thread executors
-//!   (real threads and the deterministic lockstep simulation).
+//!   (real threads and the deterministic lockstep replay).
 //! * [`visit_log`] — the per-k decision record every figure derives from.
-//! * [`scorer`] — the `S(f(k, D))` abstraction the engines drive.
+//! * [`scorer`] — the `S(f(k, D))` abstraction the engine drives.
 
 pub mod bleed;
 pub mod chunk;
+pub mod engine;
 pub mod policy;
 pub mod rank;
 pub mod scheduler;
@@ -23,6 +31,10 @@ pub mod visit_log;
 
 pub use bleed::{binary_bleed_serial, optimal_from_log, standard_search, SearchResult};
 pub use chunk::{ChunkStrategy, Pipeline};
+pub use engine::{
+    bleed_order, normalize_ks, Clock, EvalCost, EvalSpan, EventOutcome, Loopback, MpscNet,
+    SimNet, Transport, UnitCost, VirtualClock, WallClock, WorkPlan, WorkerSlot,
+};
 pub use policy::{Direction, Mode, SearchPolicy, Thresholds};
 pub use rank::{Broadcast, RankComm};
 pub use scheduler::{binary_bleed_lockstep, binary_bleed_parallel, ParallelConfig};

@@ -1,29 +1,27 @@
 //! Multi-rank, multi-thread Binary Bleed (Alg 3 + Alg 4).
 //!
-//! Two executors share the same chunk/sort front-end:
+//! Both executors are thin configurations of the engine core — the
+//! admit/evaluate/publish loop lives in [`super::engine`], not here:
 //!
-//! * [`binary_bleed_parallel`] — real OS threads: one thread per rank,
-//!   `threads_per_rank` workers inside each, channels for BroadcastK.
-//!   This is the production path driving the HLO evaluators.
-//! * [`binary_bleed_lockstep`] — deterministic round-based simulation of
-//!   the same schedule (every resource evaluates one k per round;
-//!   publications apply between rounds). The figures and the distributed
-//!   cost simulator use this: visit counts become exact functions of the
-//!   schedule, independent of host timing — which is what the paper
-//!   reports (Fig 8, Fig 9 percentages).
-
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
+//! * [`binary_bleed_parallel`] — the threaded driver: one OS thread per
+//!   (rank, worker) slot, rank-local lock-free states, an [`MpscNet`]
+//!   channel fabric for BroadcastK. This is the production path driving
+//!   the HLO evaluators.
+//! * [`binary_bleed_lockstep`] — the event driver under [`UnitCost`]:
+//!   unit per-k cost quantizes the virtual timeline into rounds (every
+//!   resource evaluates one k per round; publications land between
+//!   rounds — "k already executing cannot be pruned", Fig 4). The
+//!   figures and the distributed cost simulator use this: visit counts
+//!   become exact functions of the schedule, independent of host timing
+//!   — which is what the paper reports (Fig 8, Fig 9 percentages).
 
 use super::bleed::SearchResult;
 use super::chunk::Pipeline;
+use super::engine::{normalize_ks, run_event, run_threaded, MpscNet, UnitCost, WorkPlan};
 use super::policy::SearchPolicy;
-use super::rank::{Broadcast, RankComm};
 use super::scorer::KScorer;
-use super::state::{Admission, SharedState};
+use super::state::SharedState;
 use super::traversal::Traversal;
-use super::visit_log::{Decision, Visit, VisitLog};
 use crate::util::Stopwatch;
 
 /// Parallel-execution shape: how many ranks, threads, and how to deal k.
@@ -52,182 +50,38 @@ impl Default for ParallelConfig {
 
 impl ParallelConfig {
     pub fn resources(&self) -> usize {
-        self.ranks * self.threads_per_rank
+        self.ranks.max(1) * self.threads_per_rank.max(1)
     }
 }
 
 /// Multi-rank multi-thread search with real threads (Alg 3 + Alg 4).
 ///
-/// Every rank owns a local [`SharedState`] ("the rank's view"); bound
-/// movements are exchanged via [`RankComm`] broadcasts. Worker threads
-/// inside a rank take positions `t, t+T, t+2T, ...` of the rank's sorted
-/// list (Alg 3 line 13: `Ks_bst[i % num_threads]`).
+/// Every rank owns a local lock-free [`SharedState`] ("the rank's
+/// view"); bound movements are exchanged over the [`MpscNet`] transport.
+/// Worker threads inside a rank take positions `t, t+T, t+2T, ...` of
+/// the rank's sorted list (Alg 3 line 13: `Ks_bst[i % num_threads]`).
 pub fn binary_bleed_parallel(
     ks: &[u32],
     scorer: &dyn KScorer,
     policy: SearchPolicy,
     cfg: ParallelConfig,
 ) -> SearchResult {
-    debug_assert!(ks.windows(2).all(|w| w[0] < w[1]), "ks must be ascending");
-    let sw = Stopwatch::new();
-    let chunks = cfg.pipeline.split(ks, cfg.ranks, cfg.traversal);
-    let comms = RankComm::network(cfg.ranks);
-    let log = Mutex::new(VisitLog::new());
-    let seq = AtomicU64::new(0);
-    // One authoritative state per rank; the global candidate is folded
-    // from rank states at the end (every selection was broadcast, so all
-    // ranks converge, but folding makes the result robust to in-flight
-    // messages at shutdown).
-    let states: Vec<SharedState> = (0..cfg.ranks).map(|_| SharedState::new()).collect();
-
-    std::thread::scope(|scope| {
-        for (rank_id, (chunk, comm)) in chunks.iter().zip(&comms).enumerate() {
-            let state = &states[rank_id];
-            let log = &log;
-            let seq = &seq;
-            let sw = &sw;
-            let policy = &policy;
-            scope.spawn(move || {
-                rank_main(
-                    rank_id,
-                    chunk,
-                    comm,
-                    state,
-                    scorer,
-                    policy,
-                    log,
-                    seq,
-                    sw,
-                    cfg.threads_per_rank,
-                );
-            });
-        }
-    });
-
-    let log = log.into_inner().unwrap();
-    // Fold rank-local optima (paper: ReceiveKCheck keeps the larger k).
-    let best = states
-        .iter()
-        .filter_map(|s| s.best())
-        .max_by_key(|c| c.k);
-    // Account unevaluated k as pruned.
-    let mut log = log;
-    fill_pruned(&mut log, ks, &seq, sw.elapsed());
-    SearchResult {
-        k_optimal: best.map(|c| c.k),
-        score: best.map(|c| c.score),
-        log,
-        total_k: ks.len(),
-        elapsed: sw.elapsed(),
-    }
+    let ks = normalize_ks(ks);
+    let plan = WorkPlan::ranked(
+        &ks,
+        cfg.ranks,
+        cfg.threads_per_rank,
+        cfg.traversal,
+        cfg.pipeline,
+    );
+    let states: Vec<SharedState> = (0..plan.ranks).map(|_| SharedState::new(&ks)).collect();
+    let net = MpscNet::new(plan.ranks);
+    run_threaded(&ks, &plan, &states, &net, scorer, policy)
 }
 
-/// One rank: spawn workers over the rank's sorted list (Alg 3
-/// StartThreads) and run Alg 4 per k.
-///
-/// Perf (EXPERIMENTS.md §Perf): workers buffer their visits locally and
-/// merge under one lock at exit (vs a global-lock per visit), and the
-/// single-thread-per-rank case runs inline in the rank thread instead of
-/// spawning a nested scope — halving thread creation on the common shape.
-#[allow(clippy::too_many_arguments)]
-fn rank_main(
-    rank_id: usize,
-    chunk: &[u32],
-    comm: &RankComm,
-    state: &SharedState,
-    scorer: &dyn KScorer,
-    policy: &SearchPolicy,
-    log: &Mutex<VisitLog>,
-    seq: &AtomicU64,
-    sw: &Stopwatch,
-    threads: usize,
-) {
-    let threads = threads.max(1);
-    let worker = |t: usize| {
-        let mut local = VisitLog::new();
-        let mut pos = t;
-        while pos < chunk.len() {
-            let k = chunk[pos];
-            worker_step(
-                rank_id, t, k, comm, state, scorer, policy, &mut local, seq, sw,
-            );
-            pos += threads;
-        }
-        if !local.visits.is_empty() {
-            log.lock().unwrap().merge(local);
-        }
-    };
-    if threads == 1 {
-        // Inline fast path: no nested thread scope.
-        worker(0);
-    } else {
-        std::thread::scope(|scope| {
-            for t in 0..threads {
-                scope.spawn(move || worker(t));
-            }
-        });
-    }
-}
-
-/// Alg 4: receive-check, admission, evaluation, publication, broadcast.
-/// Visits land in the caller's thread-local log (merged at worker exit).
-#[allow(clippy::too_many_arguments)]
-fn worker_step(
-    rank_id: usize,
-    thread: usize,
-    k: u32,
-    comm: &RankComm,
-    state: &SharedState,
-    scorer: &dyn KScorer,
-    policy: &SearchPolicy,
-    log: &mut VisitLog,
-    seq: &AtomicU64,
-    sw: &Stopwatch,
-) {
-    // ReceiveKCheck: merge every pending remote bound movement.
-    for msg in comm.drain() {
-        state.merge_remote(msg.floor, msg.ceil, msg.best);
-    }
-    let decision = match state.admit(k, policy) {
-        Admission::Admit => {
-            let score = scorer.score(k);
-            let publication = state.publish(k, score, policy);
-            if !publication.is_empty() {
-                // Alg 4 line 23: report the moved bound to every rank.
-                comm.broadcast(Broadcast {
-                    from: rank_id,
-                    floor: publication.new_floor,
-                    ceil: publication.new_ceil,
-                    best: publication.new_best,
-                });
-            }
-            Some((
-                score,
-                if policy.selects(score) {
-                    Decision::Selected
-                } else {
-                    Decision::Rejected
-                },
-            ))
-        }
-        Admission::PrunedBySelect | Admission::PrunedByStop => None,
-        Admission::AlreadyClaimed => return,
-    };
-    let (score, dec) = decision.unwrap_or((f64::NAN, Decision::PrunedSkip));
-    log.push(Visit {
-        seq: seq.fetch_add(1, Ordering::SeqCst),
-        k,
-        score,
-        decision: dec,
-        rank: rank_id,
-        thread,
-        at: sw.elapsed(),
-    });
-}
-
-/// Deterministic lockstep executor: all resources advance in synchronized
-/// rounds against one global state; publications from round r are visible
-/// from round r+1 (models "k already executing cannot be pruned", Fig 4).
+/// Deterministic lockstep executor: the event driver under unit cost.
+/// All resources advance in synchronized rounds against rank-local
+/// states; publications from round r are visible from round r+1.
 pub fn binary_bleed_lockstep(
     ks: &[u32],
     scorer: &dyn KScorer,
@@ -235,93 +89,15 @@ pub fn binary_bleed_lockstep(
     cfg: ParallelConfig,
 ) -> SearchResult {
     let sw = Stopwatch::new();
-    let resources = cfg.resources();
-    let work = cfg.pipeline.split(ks, resources, cfg.traversal);
-    let state = SharedState::new();
-    let mut cursors = vec![0usize; resources];
-    let mut log = VisitLog::new();
-    let mut seq = 0u64;
-
-    loop {
-        let mut progressed = false;
-        // Phase 1: every resource picks its next admissible k this round.
-        let mut round: Vec<(usize, u32, f64)> = Vec::new();
-        for (r, cursor) in cursors.iter_mut().enumerate() {
-            while *cursor < work[r].len() {
-                let k = work[r][*cursor];
-                *cursor += 1;
-                match state.admit(k, &policy) {
-                    Admission::Admit => {
-                        let score = scorer.score(k);
-                        round.push((r, k, score));
-                        progressed = true;
-                        break;
-                    }
-                    Admission::PrunedBySelect | Admission::PrunedByStop => {
-                        log.push(Visit {
-                            seq,
-                            k,
-                            score: f64::NAN,
-                            decision: Decision::PrunedSkip,
-                            rank: r,
-                            thread: 0,
-                            at: sw.elapsed(),
-                        });
-                        seq += 1;
-                        progressed = true;
-                    }
-                    Admission::AlreadyClaimed => {}
-                }
-            }
-        }
-        // Phase 2: simultaneous publication (end of round).
-        for (r, k, score) in round {
-            state.publish(k, score, &policy);
-            log.push(Visit {
-                seq,
-                k,
-                score,
-                decision: if policy.selects(score) {
-                    Decision::Selected
-                } else {
-                    Decision::Rejected
-                },
-                rank: r,
-                thread: 0,
-                at: sw.elapsed(),
-            });
-            seq += 1;
-        }
-        if !progressed {
-            break;
-        }
-    }
-
-    let best = state.best();
+    let ks = normalize_ks(ks);
+    let plan = WorkPlan::flat(&ks, cfg.resources(), cfg.traversal, cfg.pipeline);
+    let out = run_event(&ks, &plan, scorer, policy, &UnitCost, 0.0);
     SearchResult {
-        k_optimal: best.map(|c| c.k),
-        score: best.map(|c| c.score),
-        log,
+        k_optimal: out.best.map(|c| c.k),
+        score: out.best.map(|c| c.score),
+        log: out.log,
         total_k: ks.len(),
         elapsed: sw.elapsed(),
-    }
-}
-
-/// Append PrunedSkip entries for k never touched by any worker.
-fn fill_pruned(log: &mut VisitLog, ks: &[u32], seq: &AtomicU64, at: Duration) {
-    let seen: std::collections::HashSet<u32> = log.visits.iter().map(|v| v.k).collect();
-    for &k in ks {
-        if !seen.contains(&k) {
-            log.push(Visit {
-                seq: seq.fetch_add(1, Ordering::SeqCst),
-                k,
-                score: f64::NAN,
-                decision: Decision::PrunedSkip,
-                rank: usize::MAX,
-                thread: 0,
-                at,
-            });
-        }
     }
 }
 
@@ -475,5 +251,20 @@ mod tests {
         let r = binary_bleed_lockstep(&ks(), &square(9), pol(Mode::Standard), cfg);
         assert_eq!(r.log.evaluated_count(), 29);
         assert_eq!(r.k_optimal, Some(9));
+    }
+
+    #[test]
+    fn parallel_normalizes_unsorted_input() {
+        let mut shuffled = ks();
+        shuffled.swap(0, 20);
+        shuffled.push(14); // duplicate
+        let cfg = ParallelConfig {
+            ranks: 2,
+            threads_per_rank: 2,
+            ..Default::default()
+        };
+        let r = binary_bleed_parallel(&shuffled, &square(21), pol(Mode::Vanilla), cfg);
+        assert_eq!(r.k_optimal, Some(21));
+        assert_eq!(r.total_k, 29);
     }
 }

@@ -1,34 +1,33 @@
 //! Shared pruning state — the paper's "distributed cache such as redis"
-//! (§III-B) holding `k_min`, `k_max`, the candidate optimal and the list
-//! of visited k, shared by every thread of every rank.
+//! (§III-B) holding `k_min`, `k_max`, the candidate optimal and the set
+//! of claimed k, shared by every thread of every rank.
 //!
-//! A single mutex-guarded record gives the same consistency model as the
-//! paper's central cache: one authoritative copy, atomic read-modify-write
-//! per decision. Workers take the lock twice per k — once to claim the
-//! visit, once to publish the score — exactly the Lock/Unlock pairs of
-//! Alg 4.
+//! Unlike the seed implementation (one coarse `Mutex<Inner>` whose
+//! `claimed: Vec<u32>` was scanned O(n) per admission), the state is now
+//! **lock-free**: the prune bounds and candidate optimal are atomics
+//! moved with `fetch_max`/`fetch_min`, and claim deduplication is a
+//! fixed-size bitmap indexed by k-*position* in the search domain, set
+//! with one `fetch_or`. The admission hot path — taken by every worker of
+//! every rank for every k — no longer serializes on a lock, and every
+//! bound merge is monotone (bounds only tighten, the best k only grows),
+//! which is what makes concurrent and out-of-order publication safe.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
-use super::policy::{Direction, SearchPolicy};
+use super::policy::SearchPolicy;
+
+/// Sentinel: no floor bound published yet (all k admitted from below).
+const NO_FLOOR: i64 = -1;
+/// Sentinel: no ceiling bound published yet (all k admitted from above).
+const NO_CEIL: i64 = i64::MAX;
+/// Sentinel: no candidate optimal yet.
+const NO_BEST: i64 = -1;
 
 /// The candidate optimal: k and its score.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Candidate {
     pub k: u32,
     pub score: f64,
-}
-
-#[derive(Debug, Default, Clone)]
-struct Inner {
-    /// Exclusive lower prune bound: k <= floor are pruned (Maximize).
-    floor: Option<u32>,
-    /// Exclusive upper prune bound: k >= ceil are pruned (Early-Stop, Maximize).
-    ceil: Option<u32>,
-    best: Option<Candidate>,
-    /// k values already claimed (visited or in flight) — dedup across
-    /// threads/ranks so no k is evaluated twice.
-    claimed: Vec<u32>,
 }
 
 /// Why a k was (not) admitted for evaluation.
@@ -40,81 +39,108 @@ pub enum Admission {
     PrunedBySelect,
     /// Pruned by the Early-Stop bound.
     PrunedByStop,
-    /// Another worker already claimed this k.
+    /// Another worker already claimed this k (or k is outside the domain).
     AlreadyClaimed,
 }
 
-/// Process-wide shared search state.
-#[derive(Debug, Default)]
+/// Process-wide shared search state over a fixed k domain.
+#[derive(Debug)]
 pub struct SharedState {
-    inner: Mutex<Inner>,
+    /// Ascending, deduplicated search domain; claim/score slots are
+    /// indexed by position in this list.
+    domain: Vec<u32>,
+    /// Exclusive lower prune bound: k <= floor are pruned. [`NO_FLOOR`]
+    /// when unset; only ever raised (`fetch_max`).
+    floor: AtomicI64,
+    /// Exclusive upper prune bound: k >= ceil are pruned (Early-Stop).
+    /// [`NO_CEIL`] when unset; only ever lowered (`fetch_min`).
+    ceil: AtomicI64,
+    /// Largest selected k so far ([`NO_BEST`] when none) — the paper's
+    /// `k_optimal = max{k : S(k) > T}` rule; only ever raised.
+    best_k: AtomicI64,
+    /// One claim bit per k-position: set once, never cleared.
+    claimed: Vec<AtomicU64>,
+    /// Published score bits per k-position (written before `best_k` is
+    /// raised to that k, so a reader that observes `best_k` also observes
+    /// its score).
+    scores: Vec<AtomicU64>,
 }
 
 impl SharedState {
-    pub fn new() -> Self {
-        Self::default()
+    /// Build the state over the (ascending, deduplicated) search domain.
+    pub fn new(domain: &[u32]) -> Self {
+        debug_assert!(
+            domain.windows(2).all(|w| w[0] < w[1]),
+            "domain must be ascending"
+        );
+        let words = domain.len().div_ceil(64);
+        Self {
+            domain: domain.to_vec(),
+            floor: AtomicI64::new(NO_FLOOR),
+            ceil: AtomicI64::new(NO_CEIL),
+            best_k: AtomicI64::new(NO_BEST),
+            claimed: (0..words).map(|_| AtomicU64::new(0)).collect(),
+            scores: (0..domain.len()).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Position of k in the domain.
+    #[inline]
+    fn pos(&self, k: u32) -> Option<usize> {
+        self.domain.binary_search(&k).ok()
     }
 
     /// Alg 4 lines 4–17: read the global bounds, decide whether `k` still
-    /// needs computing, and claim it if so.
-    pub fn admit(&self, k: u32, policy: &SearchPolicy) -> Admission {
-        let mut st = self.inner.lock().unwrap();
-        if let Some(f) = st.floor {
-            let pruned = match policy.direction {
-                Direction::Maximize => k <= f,
-                Direction::Minimize => k <= f, // floor is always the "small-k" bound
-            };
-            if pruned {
-                return Admission::PrunedBySelect;
-            }
+    /// needs computing, and claim it if so. Lock-free: two atomic loads
+    /// plus one `fetch_or` on the claim bitmap.
+    pub fn admit(&self, k: u32, _policy: &SearchPolicy) -> Admission {
+        let k64 = i64::from(k);
+        if k64 <= self.floor.load(Ordering::SeqCst) {
+            return Admission::PrunedBySelect;
         }
-        if let Some(c) = st.ceil {
-            if k >= c {
-                return Admission::PrunedByStop;
-            }
+        if k64 >= self.ceil.load(Ordering::SeqCst) {
+            return Admission::PrunedByStop;
         }
-        if st.claimed.contains(&k) {
+        let Some(pos) = self.pos(k) else {
+            // Outside the domain: nothing to evaluate.
             return Admission::AlreadyClaimed;
+        };
+        let bit = 1u64 << (pos % 64);
+        let prev = self.claimed[pos / 64].fetch_or(bit, Ordering::SeqCst);
+        if prev & bit != 0 {
+            Admission::AlreadyClaimed
+        } else {
+            Admission::Admit
         }
-        st.claimed.push(k);
-        Admission::Admit
     }
 
     /// Alg 4 lines 18–25: publish a score, update the candidate optimal
     /// and move the prune bounds. Returns the bound movement so the caller
-    /// can broadcast it (BroadcastK).
+    /// can broadcast it (BroadcastK). All updates are monotone atomics, so
+    /// concurrent publications from any rank interleave safely.
     pub fn publish(&self, k: u32, score: f64, policy: &SearchPolicy) -> Publication {
-        let mut st = self.inner.lock().unwrap();
+        let k64 = i64::from(k);
         let mut publication = Publication::default();
         if policy.selects(score) {
-            let better = match st.best {
-                // The paper's rule: among selected k, the *largest* wins
-                // (k_optimal = max{k : S(k) > T}).
-                Some(b) => k > b.k,
-                None => true,
-            };
-            if better {
-                st.best = Some(Candidate { k, score });
-                publication.new_best = st.best;
+            // Score slot is written before best_k is raised (release/
+            // acquire pairing via the SeqCst best_k update).
+            if let Some(pos) = self.pos(k) {
+                self.scores[pos].store(score.to_bits(), Ordering::SeqCst);
+            }
+            let prev = self.best_k.fetch_max(k64, Ordering::SeqCst);
+            if k64 > prev {
+                publication.new_best = Some(Candidate { k, score });
             }
             if policy.prunes_on_select() {
-                let moved = match st.floor {
-                    Some(f) => k > f,
-                    None => true,
-                };
-                if moved {
-                    st.floor = Some(k);
+                let prev = self.floor.fetch_max(k64, Ordering::SeqCst);
+                if k64 > prev {
                     publication.new_floor = Some(k);
                 }
             }
         }
         if policy.stops(score) {
-            let moved = match st.ceil {
-                Some(c) => k < c,
-                None => true,
-            };
-            if moved {
-                st.ceil = Some(k);
+            let prev = self.ceil.fetch_min(k64, Ordering::SeqCst);
+            if k64 < prev {
                 publication.new_ceil = Some(k);
             }
         }
@@ -122,32 +148,44 @@ impl SharedState {
     }
 
     /// Merge a bound update received from another rank (ReceiveKCheck).
+    /// Monotone merges: bounds only tighten, the best k only grows.
     pub fn merge_remote(&self, floor: Option<u32>, ceil: Option<u32>, best: Option<Candidate>) {
-        let mut st = self.inner.lock().unwrap();
         if let Some(f) = floor {
-            if st.floor.map_or(true, |cur| f > cur) {
-                st.floor = Some(f);
-            }
+            self.floor.fetch_max(i64::from(f), Ordering::SeqCst);
         }
         if let Some(c) = ceil {
-            if st.ceil.map_or(true, |cur| c < cur) {
-                st.ceil = Some(c);
-            }
+            self.ceil.fetch_min(i64::from(c), Ordering::SeqCst);
         }
         if let Some(b) = best {
-            if st.best.map_or(true, |cur| b.k > cur.k) {
-                st.best = Some(b);
+            if let Some(pos) = self.pos(b.k) {
+                self.scores[pos].store(b.score.to_bits(), Ordering::SeqCst);
             }
+            self.best_k.fetch_max(i64::from(b.k), Ordering::SeqCst);
         }
     }
 
+    /// The current candidate optimal.
     pub fn best(&self) -> Option<Candidate> {
-        self.inner.lock().unwrap().best
+        let bk = self.best_k.load(Ordering::SeqCst);
+        if bk == NO_BEST {
+            return None;
+        }
+        let k = bk as u32;
+        let score = self
+            .pos(k)
+            .map(|p| f64::from_bits(self.scores[p].load(Ordering::SeqCst)))
+            .unwrap_or(f64::NAN);
+        Some(Candidate { k, score })
     }
 
+    /// The current (floor, ceil) prune bounds.
     pub fn bounds(&self) -> (Option<u32>, Option<u32>) {
-        let st = self.inner.lock().unwrap();
-        (st.floor, st.ceil)
+        let f = self.floor.load(Ordering::SeqCst);
+        let c = self.ceil.load(Ordering::SeqCst);
+        (
+            (f != NO_FLOOR).then_some(f as u32),
+            (c != NO_CEIL).then_some(c as u32),
+        )
     }
 }
 
@@ -180,9 +218,13 @@ mod tests {
         )
     }
 
+    fn domain() -> Vec<u32> {
+        (1..=30).collect()
+    }
+
     #[test]
     fn select_prunes_lower_k() {
-        let st = SharedState::new();
+        let st = SharedState::new(&domain());
         let p = policy(Mode::Vanilla);
         assert_eq!(st.admit(8, &p), Admission::Admit);
         let pb = st.publish(8, 0.9, &p);
@@ -194,7 +236,7 @@ mod tests {
 
     #[test]
     fn early_stop_prunes_upper_k() {
-        let st = SharedState::new();
+        let st = SharedState::new(&domain());
         let p = policy(Mode::EarlyStop);
         assert_eq!(st.admit(20, &p), Admission::Admit);
         let pb = st.publish(20, 0.05, &p);
@@ -205,7 +247,7 @@ mod tests {
 
     #[test]
     fn vanilla_never_sets_ceiling() {
-        let st = SharedState::new();
+        let st = SharedState::new(&domain());
         let p = policy(Mode::Vanilla);
         st.admit(20, &p);
         let pb = st.publish(20, 0.01, &p);
@@ -215,27 +257,37 @@ mod tests {
 
     #[test]
     fn best_is_largest_selected_k() {
-        let st = SharedState::new();
+        let st = SharedState::new(&domain());
         let p = policy(Mode::Vanilla);
         for (k, s) in [(10u32, 0.8), (24, 0.75), (12, 0.95)] {
             st.admit(k, &p);
             st.publish(k, s, &p);
         }
         // k=12 scores higher than k=24 but 24 is the larger selected k.
-        assert_eq!(st.best().unwrap().k, 24);
+        let best = st.best().unwrap();
+        assert_eq!(best.k, 24);
+        assert_eq!(best.score, 0.75);
     }
 
     #[test]
     fn duplicate_claims_rejected() {
-        let st = SharedState::new();
+        let st = SharedState::new(&domain());
         let p = policy(Mode::Vanilla);
         assert_eq!(st.admit(9, &p), Admission::Admit);
         assert_eq!(st.admit(9, &p), Admission::AlreadyClaimed);
     }
 
     #[test]
+    fn out_of_domain_k_never_admitted() {
+        let st = SharedState::new(&[2, 4, 8]);
+        let p = policy(Mode::Vanilla);
+        assert_eq!(st.admit(3, &p), Admission::AlreadyClaimed);
+        assert_eq!(st.admit(4, &p), Admission::Admit);
+    }
+
+    #[test]
     fn merge_remote_tightens_only() {
-        let st = SharedState::new();
+        let st = SharedState::new(&domain());
         st.merge_remote(Some(5), Some(20), Some(Candidate { k: 5, score: 0.8 }));
         st.merge_remote(Some(3), Some(25), Some(Candidate { k: 4, score: 0.9 }));
         let (f, c) = st.bounds();
@@ -246,11 +298,46 @@ mod tests {
 
     #[test]
     fn rejected_scores_do_not_move_bounds() {
-        let st = SharedState::new();
+        let st = SharedState::new(&domain());
         let p = policy(Mode::Vanilla);
         st.admit(14, &p);
         let pb = st.publish(14, 0.3, &p);
         assert!(pb.is_empty());
         assert_eq!(st.bounds(), (None, None));
+    }
+
+    #[test]
+    fn claim_bitmap_spans_many_words() {
+        // Domains wider than 64 k exercise the multi-word bitmap.
+        let big: Vec<u32> = (2..=300).collect();
+        let st = SharedState::new(&big);
+        let p = policy(Mode::Vanilla);
+        for &k in &big {
+            assert_eq!(st.admit(k, &p), Admission::Admit, "k={k}");
+        }
+        for &k in &big {
+            assert_eq!(st.admit(k, &p), Admission::AlreadyClaimed, "k={k}");
+        }
+    }
+
+    #[test]
+    fn concurrent_claims_are_exclusive() {
+        // Hammer one domain from many threads: every k admitted exactly once.
+        let ks: Vec<u32> = (1..=512).collect();
+        let st = SharedState::new(&ks);
+        let p = policy(Mode::Vanilla);
+        let admitted = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for &k in &ks {
+                        if st.admit(k, &p) == Admission::Admit {
+                            admitted.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(admitted.load(Ordering::SeqCst), 512);
     }
 }

@@ -4,19 +4,26 @@
 //! and Parallel Method for Automatic Model Selection"** (Barron et al.,
 //! LANL, 2024) as a three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the Binary Bleed coordinator: pruning binary
-//!   search over the model-selection hyper-parameter `k`, traversal-order
-//!   scheduling, resource chunking, multi-rank pruning propagation.
+//! * **L3 (this crate)** — the Binary Bleed coordinator: ONE pluggable
+//!   execution engine ([`coordinator::engine`]) implementing the
+//!   claim → evaluate → publish → broadcast protocol over a lock-free
+//!   pruning state, configured into every regime the paper describes
+//!   (serial, multi-thread, multi-rank, simulated distributed clusters)
+//!   by swapping Clock / Transport / WorkPlan / EvalCost.
 //! * **L2/L1 (python/, build-time only)** — the model computations the
 //!   search evaluates (NMF, K-means, RESCAL) and their Pallas hot-spot
 //!   kernels, AOT-lowered to HLO text in `artifacts/`.
-//! * **runtime** — PJRT CPU client that loads and executes the artifacts
-//!   from the Rust hot path; python never runs at search time.
+//! * **runtime** (`--features pjrt`) — PJRT CPU client that loads and
+//!   executes the artifacts from the Rust hot path; python never runs at
+//!   search time. The default build is dependency-free and fully
+//!   offline; the feature gates the XLA bindings.
 //!
-//! Quickstart:
+//! Quickstart — every entry point is a thin engine configuration and
+//! they all agree on the optimum:
 //! ```no_run
 //! use binary_bleed::coordinator::{
-//!     binary_bleed_serial, Mode, SearchPolicy, Thresholds,
+//!     binary_bleed_parallel, binary_bleed_serial, Mode, ParallelConfig,
+//!     SearchPolicy, Thresholds,
 //! };
 //! let ks: Vec<u32> = (2..=30).collect();
 //! // Any Fn(u32) -> f64 is a scorer; here a square wave with k*=15.
@@ -25,12 +32,19 @@
 //!     Mode::Vanilla,
 //!     Thresholds { select: 0.75, stop: 0.2 },
 //! );
-//! let result = binary_bleed_serial(&ks, &scorer, policy);
-//! assert_eq!(result.k_optimal, Some(15));
+//! // Serial (Alg 1): one worker, loopback transport.
+//! let serial = binary_bleed_serial(&ks, &scorer, policy);
+//! assert_eq!(serial.k_optimal, Some(15));
+//! // Multi-rank multi-thread (Alg 3+4): 4 ranks x 2 threads, channel
+//! // broadcasts, lock-free rank-local states.
+//! let cfg = ParallelConfig { ranks: 4, threads_per_rank: 2, ..Default::default() };
+//! let parallel = binary_bleed_parallel(&ks, &scorer, policy, cfg);
+//! assert_eq!(parallel.k_optimal, Some(15));
 //! ```
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! See DESIGN.md for the system inventory (engine/Clock/Transport
+//! layering, feature flags) and EXPERIMENTS.md for the paper-vs-measured
+//! record.
 
 pub mod bench;
 pub mod cli;

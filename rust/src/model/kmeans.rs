@@ -1,15 +1,20 @@
 //! K-means evaluator (§IV-A): Lloyd restarts + silhouette (maximize) or
 //! Davies-Bouldin (minimize) scoring.
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
-
-use anyhow::Result;
 
 use crate::coordinator::KScorer;
 use crate::linalg::{self, Matrix};
-use crate::runtime::{literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar, rank_mask};
+#[cfg(feature = "pjrt")]
+use crate::runtime::{
+    literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar, rank_mask,
+};
+#[cfg(feature = "pjrt")]
+use crate::util::error::{ensure, Result};
 use crate::util::Pcg32;
 
+#[cfg(feature = "pjrt")]
 use super::store::SharedStore;
 use super::Backend;
 
@@ -33,12 +38,14 @@ pub struct KMeansEvaluator {
     bursts: usize,
     pub scoring: KMeansScoring,
     backend: Backend,
+    #[cfg(feature = "pjrt")]
     store: Option<Arc<SharedStore>>,
     seed: u64,
 }
 
 impl KMeansEvaluator {
     /// HLO-backed evaluator; `x` must match the manifest's (km_n, km_d).
+    #[cfg(feature = "pjrt")]
     pub fn hlo(
         x: Matrix,
         scoring: KMeansScoring,
@@ -48,7 +55,7 @@ impl KMeansEvaluator {
         let n = store.param("km_n")?;
         let d = store.param("km_d")?;
         let k_max = store.param("km_kmax")?;
-        anyhow::ensure!(
+        ensure!(
             (x.rows, x.cols) == (n, d),
             "dataset {}x{} does not match artifact preset {n}x{d}",
             x.rows,
@@ -75,6 +82,7 @@ impl KMeansEvaluator {
             bursts: 2,
             scoring,
             backend: Backend::Native,
+            #[cfg(feature = "pjrt")]
             store: None,
             seed,
         }
@@ -103,10 +111,14 @@ impl KMeansEvaluator {
                 };
                 (fit.inertia, score)
             }
+            #[cfg(feature = "pjrt")]
             Backend::Hlo => self.fit_once_hlo(k, &mut rng).expect("HLO kmeans failed"),
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Hlo => unreachable!("Backend::Hlo evaluators require the `pjrt` feature"),
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn fit_once_hlo(&self, k: usize, rng: &mut Pcg32) -> Result<(f64, f64)> {
         let store = self.store.as_ref().expect("HLO backend without store");
         let d = self.x.cols;

@@ -11,11 +11,13 @@
 pub mod kmeans;
 pub mod nmfk;
 pub mod rescal;
+#[cfg(feature = "pjrt")]
 pub mod store;
 
 pub use kmeans::{KMeansEvaluator, KMeansScoring};
 pub use nmfk::NmfkEvaluator;
 pub use rescal::RescalEvaluator;
+#[cfg(feature = "pjrt")]
 pub use store::SharedStore;
 
 /// Which compute backend an evaluator drives.

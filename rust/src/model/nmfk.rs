@@ -11,15 +11,18 @@
 //! multiplicative updates through the `nmf_run` HLO artifact (or the
 //! pure-Rust reference with `Backend::Native`).
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
-
-use anyhow::Result;
 
 use crate::coordinator::KScorer;
 use crate::linalg::{nmf_from, perturbation_silhouette, Matrix};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32, literal_from_matrix, literal_to_matrix, rank_mask};
+#[cfg(feature = "pjrt")]
+use crate::util::error::{ensure, Result};
 use crate::util::Pcg32;
 
+#[cfg(feature = "pjrt")]
 use super::store::SharedStore;
 use super::Backend;
 
@@ -35,17 +38,19 @@ pub struct NmfkEvaluator {
     /// Multiplicative resampling amplitude: X' = X ⊙ U(1-a, 1+a).
     resample_amplitude: f32,
     backend: Backend,
+    #[cfg(feature = "pjrt")]
     store: Option<Arc<SharedStore>>,
     seed: u64,
 }
 
 impl NmfkEvaluator {
     /// HLO-backed evaluator. `x` must match the manifest's (nmf_m, nmf_n).
+    #[cfg(feature = "pjrt")]
     pub fn hlo(x: Matrix, store: Arc<SharedStore>, seed: u64) -> Result<Self> {
         let m = store.param("nmf_m")?;
         let n = store.param("nmf_n")?;
         let k_max = store.param("nmf_kmax")?;
-        anyhow::ensure!(
+        ensure!(
             (x.rows, x.cols) == (m, n),
             "dataset {}x{} does not match artifact preset {m}x{n}",
             x.rows,
@@ -72,6 +77,7 @@ impl NmfkEvaluator {
             bursts: 4,
             resample_amplitude: 0.02,
             backend: Backend::Native,
+            #[cfg(feature = "pjrt")]
             store: None,
             seed,
         }
@@ -113,10 +119,14 @@ impl NmfkEvaluator {
                 let fit = nmf_from(&xp, w0, h0, self.bursts * 25);
                 fit.w
             }
+            #[cfg(feature = "pjrt")]
             Backend::Hlo => self.fit_w_hlo(&xp, k, &mut rng).expect("HLO nmf_run failed"),
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Hlo => unreachable!("Backend::Hlo evaluators require the `pjrt` feature"),
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn fit_w_hlo(&self, xp: &Matrix, k: usize, rng: &mut Pcg32) -> Result<Matrix> {
         let store = self.store.as_ref().expect("HLO backend without store");
         let (m, n) = (self.x.rows, self.x.cols);

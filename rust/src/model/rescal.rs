@@ -2,15 +2,18 @@
 //! automatic model selection via perturbation stability of the A factor,
 //! mirroring pyDRESCALk's silhouette-over-A procedure.
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
-
-use anyhow::Result;
 
 use crate::coordinator::KScorer;
 use crate::linalg::{perturbation_silhouette, rescal, Matrix};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32, rank_mask};
+#[cfg(feature = "pjrt")]
+use crate::util::error::{ensure, Result};
 use crate::util::Pcg32;
 
+#[cfg(feature = "pjrt")]
 use super::store::SharedStore;
 use super::Backend;
 
@@ -24,17 +27,19 @@ pub struct RescalEvaluator {
     bursts: usize,
     resample_amplitude: f32,
     backend: Backend,
+    #[cfg(feature = "pjrt")]
     store: Option<Arc<SharedStore>>,
     seed: u64,
 }
 
 impl RescalEvaluator {
     /// HLO-backed; slices must match the manifest's (rescal_s, rescal_n).
+    #[cfg(feature = "pjrt")]
     pub fn hlo(slices: Vec<Matrix>, store: Arc<SharedStore>, seed: u64) -> Result<Self> {
         let s = store.param("rescal_s")?;
         let n = store.param("rescal_n")?;
         let k_max = store.param("rescal_kmax")?;
-        anyhow::ensure!(
+        ensure!(
             slices.len() == s && slices.iter().all(|m| m.rows == n && m.cols == n),
             "slice stack does not match artifact preset {s}x{n}x{n}"
         );
@@ -59,6 +64,7 @@ impl RescalEvaluator {
             bursts: 5,
             resample_amplitude: 0.02,
             backend: Backend::Native,
+            #[cfg(feature = "pjrt")]
             store: None,
             seed,
         }
@@ -96,10 +102,14 @@ impl RescalEvaluator {
                 let fit = rescal(&tp, k, self.bursts * 10, &mut rng);
                 fit.a
             }
+            #[cfg(feature = "pjrt")]
             Backend::Hlo => self.fit_a_hlo(&tp, k, &mut rng).expect("HLO rescal failed"),
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Hlo => unreachable!("Backend::Hlo evaluators require the `pjrt` feature"),
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn fit_a_hlo(&self, tp: &[Matrix], k: usize, rng: &mut Pcg32) -> Result<Matrix> {
         let store = self.store.as_ref().expect("HLO backend without store");
         let s = self.slices.len();

@@ -15,7 +15,7 @@
 
 use std::sync::Mutex;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::runtime::ArtifactStore;
 

@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Mutex;
 
-use anyhow::{ensure, Context, Result};
+use crate::util::error::{ensure, Context, Result};
 
 use super::manifest::{Entry, Manifest};
 

@@ -1,6 +1,6 @@
 //! Literal marshaling helpers: host `Vec<f32>`/[`Matrix`] ⇄ PJRT literals.
 
-use anyhow::{ensure, Result};
+use crate::util::error::{ensure, Result};
 
 use crate::linalg::Matrix;
 

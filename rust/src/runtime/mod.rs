@@ -6,11 +6,15 @@
 //! and returns the output tuple as literals. See rust/tests/ for the
 //! numeric round-trip checks against the pure-Rust oracles.
 
+#[cfg(feature = "pjrt")]
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod exec;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use artifact::ArtifactStore;
+#[cfg(feature = "pjrt")]
 pub use exec::{
     literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar,
     literal_to_vec, rank_mask,

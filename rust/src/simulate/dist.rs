@@ -1,23 +1,26 @@
-//! Distributed / multi-node execution simulators (DESIGN.md S13).
+//! Distributed / multi-node execution simulators (DESIGN.md §4).
 //!
-//! Two regimes, matching §II's parallel-vs-distributed distinction:
+//! Both regimes, matching §II's parallel-vs-distributed distinction, are
+//! configurations of the engine's event-driven driver
+//! ([`run_event`](crate::coordinator::engine::run_event)) — the
+//! admit/evaluate/publish protocol is the same code the production
+//! threaded path runs, replayed on a virtual clock:
 //!
 //! * [`simulate_distributed`] — the *distributed* regime of §IV-C /
 //!   Fig 9: one k evaluation occupies the entire cluster, so k values run
-//!   **sequentially** in the Binary Bleed visit order and the total
-//!   runtime is `Σ cost(k visited)`. The search engine is the real serial
-//!   coordinator; only the clock is simulated.
+//!   **sequentially** in the Binary Bleed visit order (one resource) and
+//!   the total runtime is `Σ cost(k visited)`.
 //! * [`simulate_parallel_cluster`] — the *parallel* regime of §IV-B
 //!   (Chicoma multi-node NMFk): R resources each evaluate different k
-//!   concurrently; an event-driven clock replays pruning propagation with
-//!   publication timestamps (a k already executing is never killed —
-//!   Fig 4's "does not prune k values after the model begins execution").
+//!   concurrently; publications take effect at the publisher's *finish*
+//!   time (a k already executing is never killed — Fig 4's "does not
+//!   prune k values after the model begins execution"). The
+//!   [`_with_latency`](simulate_parallel_cluster_with_latency) variant
+//!   additionally injects link latency between resources, modelling
+//!   pruning broadcasts over a real interconnect.
 
-use std::collections::BinaryHeap;
-
-use crate::coordinator::{
-    binary_bleed_serial, ParallelConfig, SearchPolicy, SearchResult,
-};
+use crate::coordinator::engine::{normalize_ks, run_event, EvalCost, WorkPlan};
+use crate::coordinator::{EventOutcome, ParallelConfig, SearchPolicy};
 use crate::data::ScoreProfile;
 
 use super::cost::CostModel;
@@ -55,6 +58,27 @@ impl SimOutcome {
         }
         100.0 * self.evaluated as f64 / self.total_k as f64
     }
+
+    fn from_event(out: EventOutcome, total_k: usize) -> SimOutcome {
+        SimOutcome {
+            k_optimal: out.best.map(|c| c.k),
+            evaluated: out.spans.len(),
+            total_k,
+            runtime_minutes: out.makespan_minutes,
+            trace: out
+                .spans
+                .into_iter()
+                .map(|s| SimVisit {
+                    k: s.k,
+                    resource: s.resource,
+                    start: s.start,
+                    end: s.end,
+                    score: s.score,
+                    selected: s.selected,
+                })
+                .collect(),
+        }
+    }
 }
 
 /// §IV-C regime: whole-cluster-per-k, sequential visits, simulated clock.
@@ -64,51 +88,10 @@ pub fn simulate_distributed(
     policy: SearchPolicy,
     cost: &CostModel,
 ) -> SimOutcome {
-    let result: SearchResult = binary_bleed_serial(ks, profile, policy);
-    let mut t = 0.0;
-    let mut trace = Vec::new();
-    for k in result.log.evaluated() {
-        let start = t;
-        t += cost.minutes(k);
-        trace.push(SimVisit {
-            k,
-            resource: 0,
-            start,
-            end: t,
-            score: result.log.score_of(k).unwrap_or(f64::NAN),
-            selected: result.k_optimal == Some(k),
-        });
-    }
-    SimOutcome {
-        k_optimal: result.k_optimal,
-        evaluated: result.log.evaluated_count(),
-        total_k: ks.len(),
-        runtime_minutes: t,
-        trace,
-    }
-}
-
-/// Min-heap entry: (time, resource).
-#[derive(PartialEq)]
-struct Ready(f64, usize);
-
-impl Eq for Ready {}
-
-impl PartialOrd for Ready {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Ready {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Reversed for min-heap; tie-break on resource id for determinism.
-        other
-            .0
-            .partial_cmp(&self.0)
-            .unwrap()
-            .then(other.1.cmp(&self.1))
-    }
+    let ks = normalize_ks(ks);
+    let plan = WorkPlan::serial(&ks, policy.mode);
+    let out = run_event(&ks, &plan, profile, policy, cost, 0.0);
+    SimOutcome::from_event(out, ks.len())
 }
 
 /// §IV-B regime: R resources evaluate k concurrently; publications take
@@ -120,81 +103,29 @@ pub fn simulate_parallel_cluster(
     cost: &CostModel,
     cfg: ParallelConfig,
 ) -> SimOutcome {
-    let resources = cfg.resources();
-    let work = cfg.pipeline.split(ks, resources, cfg.traversal);
-    let mut cursors = vec![0usize; resources];
-    // Pruning bounds as (value, effective_time) event lists.
-    let mut floor_events: Vec<(u32, f64)> = Vec::new();
-    let mut ceil_events: Vec<(u32, f64)> = Vec::new();
-    let mut best: Option<(u32, f64)> = None;
-    let mut trace = Vec::new();
-    let mut heap: BinaryHeap<Ready> = (0..resources).map(|r| Ready(0.0, r)).collect();
-    let mut makespan = 0.0f64;
-    let mut evaluated = 0usize;
+    simulate_parallel_cluster_with_latency(ks, profile, policy, cost, cfg, 0.0)
+}
 
-    let floor_at = |events: &[(u32, f64)], t: f64| -> Option<u32> {
-        events
-            .iter()
-            .filter(|(_, at)| *at <= t)
-            .map(|(v, _)| *v)
-            .max()
-    };
-    let ceil_at = |events: &[(u32, f64)], t: f64| -> Option<u32> {
-        events
-            .iter()
-            .filter(|(_, at)| *at <= t)
-            .map(|(v, _)| *v)
-            .min()
-    };
+/// [`simulate_parallel_cluster`] with pruning broadcasts delayed by
+/// `link_latency_minutes` between resources (the publisher still sees
+/// its own bound movement at its finish time).
+pub fn simulate_parallel_cluster_with_latency(
+    ks: &[u32],
+    profile: &ScoreProfile,
+    policy: SearchPolicy,
+    cost: &CostModel,
+    cfg: ParallelConfig,
+    link_latency_minutes: f64,
+) -> SimOutcome {
+    let ks = normalize_ks(ks);
+    let plan = WorkPlan::flat(&ks, cfg.resources(), cfg.traversal, cfg.pipeline);
+    let out = run_event(&ks, &plan, profile, policy, cost, link_latency_minutes);
+    SimOutcome::from_event(out, ks.len())
+}
 
-    while let Some(Ready(t, r)) = heap.pop() {
-        // Pull the next admissible k for resource r at time t.
-        let mut launched = false;
-        while cursors[r] < work[r].len() {
-            let k = work[r][cursors[r]];
-            cursors[r] += 1;
-            let f = floor_at(&floor_events, t);
-            let c = ceil_at(&ceil_events, t);
-            if f.is_some_and(|f| k <= f) || c.is_some_and(|c| k >= c) {
-                continue; // pruned skip, zero cost
-            }
-            let score = ScoreProfile::score(profile, k);
-            let end = t + cost.minutes(k);
-            evaluated += 1;
-            let selected = policy.selects(score);
-            if selected {
-                if policy.prunes_on_select() {
-                    floor_events.push((k, end));
-                }
-                if best.is_none_or(|(bk, _)| k > bk) {
-                    best = Some((k, score));
-                }
-            }
-            if policy.stops(score) {
-                ceil_events.push((k, end));
-            }
-            trace.push(SimVisit {
-                k,
-                resource: r,
-                start: t,
-                end,
-                score,
-                selected,
-            });
-            makespan = makespan.max(end);
-            heap.push(Ready(end, r));
-            launched = true;
-            break;
-        }
-        let _ = launched; // resource drained when no launch happened
-    }
-
-    SimOutcome {
-        k_optimal: best.map(|(k, _)| k),
-        evaluated,
-        total_k: ks.len(),
-        runtime_minutes: makespan,
-        trace,
+impl EvalCost for CostModel {
+    fn minutes(&self, k: u32) -> f64 {
+        CostModel::minutes(self, k)
     }
 }
 
@@ -270,6 +201,25 @@ mod tests {
         );
         assert_eq!(out.evaluated, 10);
         assert!((out.runtime_minutes - 180.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn distributed_trace_is_sequential() {
+        let ks: Vec<u32> = (2..=11).collect();
+        let profile = ScoreProfile::SquareWave {
+            k_true: 11,
+            high: 0.9,
+            low: 0.1,
+        };
+        let out = simulate_distributed(
+            &ks,
+            &profile,
+            pol(Mode::Vanilla),
+            &CostModel::paper_drescal(),
+        );
+        for w in out.trace.windows(2) {
+            assert!((w[0].end - w[1].start).abs() < 1e-9, "gapless serial timeline");
+        }
     }
 
     #[test]
@@ -371,5 +321,42 @@ mod tests {
         )
         .runtime_minutes;
         assert!(t4 <= t1 + 1e-9, "4 resources {t4} slower than 1 {t1}");
+    }
+
+    #[test]
+    fn link_latency_never_improves_pruning() {
+        let ks: Vec<u32> = (2..=50).collect();
+        let profile = ScoreProfile::SquareWave {
+            k_true: 40,
+            high: 0.9,
+            low: 0.1,
+        };
+        let cfg = ParallelConfig {
+            ranks: 4,
+            threads_per_rank: 1,
+            ..Default::default()
+        };
+        let instant = simulate_parallel_cluster(
+            &ks,
+            &profile,
+            pol(Mode::Vanilla),
+            &CostModel::unit(),
+            cfg,
+        );
+        let delayed = simulate_parallel_cluster_with_latency(
+            &ks,
+            &profile,
+            pol(Mode::Vanilla),
+            &CostModel::unit(),
+            cfg,
+            3.0,
+        );
+        assert_eq!(instant.k_optimal, delayed.k_optimal);
+        assert!(
+            delayed.evaluated >= instant.evaluated,
+            "latency cannot sharpen pruning: {} < {}",
+            delayed.evaluated,
+            instant.evaluated
+        );
     }
 }

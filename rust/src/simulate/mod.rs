@@ -7,4 +7,7 @@ pub mod cost;
 pub mod dist;
 
 pub use cost::CostModel;
-pub use dist::{simulate_distributed, simulate_parallel_cluster, SimOutcome, SimVisit};
+pub use dist::{
+    simulate_distributed, simulate_parallel_cluster,
+    simulate_parallel_cluster_with_latency, SimOutcome, SimVisit,
+};

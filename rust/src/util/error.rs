@@ -1,0 +1,184 @@
+//! Minimal error-context substrate (offline `anyhow` stand-in,
+//! DESIGN.md §2.3 offline-crate substitutions).
+//!
+//! The sandbox that builds this repository has no access to crates.io, so
+//! the usual `anyhow` dependency is replaced by this deliberately tiny
+//! in-tree equivalent: a string-backed [`Error`], a [`Result`] alias, a
+//! [`Context`] extension trait for `Result`/`Option`, and the
+//! [`anyhow!`](crate::anyhow) / [`bail!`](crate::bail) /
+//! [`ensure!`](crate::ensure) macros. Context chains render as
+//! `outer: inner: root`, matching `anyhow`'s `{:#}` formatting, which is
+//! what every caller in this crate prints.
+
+use std::fmt;
+
+/// String-backed error with `outer: inner: root` context chaining.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{c}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Lift any concrete error through `?`. `Error` itself does not implement
+// `std::error::Error` (exactly like `anyhow::Error`), which keeps this
+// blanket impl coherent alongside core's reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg = format!("{msg}: {s}");
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, for `Result` and `Option` alike.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{c}: {e}"),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{}: {e}", f()),
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+// Re-export the macros under this module's path so call sites can write
+// `use crate::util::error::{bail, ensure};` like they would with anyhow.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root cause {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "root cause 7");
+        assert_eq!(format!("{e:#}"), "root cause 7");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = fails().context("opening config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening config: root cause 7");
+        let e2: Result<()> = Err(e).with_context(|| format!("pass {}", 2));
+        assert_eq!(format!("{:#}", e2.unwrap_err()), "pass 2: opening config: root cause 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("missing field").unwrap_err();
+        assert!(format!("{e}").contains("missing field"));
+        let some = Some(3u32).context("unused").unwrap();
+        assert_eq!(some, 3);
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(format!("{}", check(11).unwrap_err()).contains("x too big: 11"));
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn source_chain_flattens() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "inner");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("inner"));
+    }
+}

@@ -1,15 +1,18 @@
-//! Small shared substrates: deterministic RNG, statistics, timers, JSON.
+//! Small shared substrates: deterministic RNG, statistics, timers, JSON,
+//! error contexts.
 //!
 //! The sandbox has no network access to crates.io, so the usual `rand` /
-//! `serde_json` dependencies are replaced by minimal in-tree
+//! `serde_json` / `anyhow` dependencies are replaced by minimal in-tree
 //! implementations (DESIGN.md §2.3, offline-crate substitutions). They are
 //! deliberately tiny, deterministic and fully unit-tested.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use error::{Context, Error, Result};
 pub use rng::Pcg32;
 pub use stats::{mean, median, percentile, rmse, std_dev};
 pub use timer::Stopwatch;

@@ -1,0 +1,323 @@
+//! Engine-equivalence property suite (the contract behind the engine
+//! refactor): serial, threaded multi-rank, lockstep, and the
+//! event-driven cluster replay are configurations of ONE engine, so on
+//! the same score profile they must agree on `k_optimal`, their logs
+//! must partition the search domain, and every pruned k must be
+//! justified by an evaluation recorded in the same run.
+//!
+//! Random cases come from the in-tree mini property framework
+//! (`binary_bleed::testing`); counts scale with `BB_PROP_CASES`.
+
+use binary_bleed::coordinator::{
+    binary_bleed_lockstep, binary_bleed_parallel, binary_bleed_serial, Decision, Mode,
+    ParallelConfig, Pipeline, SearchPolicy, SearchResult, Thresholds, Traversal,
+};
+use binary_bleed::data::ScoreProfile;
+use binary_bleed::simulate::{simulate_parallel_cluster, CostModel};
+use binary_bleed::testing::{cases, check, gens};
+use binary_bleed::util::Pcg32;
+
+fn policy(mode: Mode) -> SearchPolicy {
+    SearchPolicy::maximize(
+        mode,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    )
+}
+
+fn square(k_true: u32) -> ScoreProfile {
+    ScoreProfile::SquareWave {
+        k_true,
+        high: 0.9,
+        low: 0.1,
+    }
+}
+
+/// A random search scenario over the full Traversal × Pipeline grid.
+#[derive(Debug)]
+struct Scenario {
+    ks: Vec<u32>,
+    k_true: u32,
+    ranks: usize,
+    threads: usize,
+    traversal: Traversal,
+    pipeline: Pipeline,
+    mode: Mode,
+}
+
+fn gen_scenario(rng: &mut Pcg32) -> Scenario {
+    let ks = gens::k_list(rng, 1, 48);
+    let k_true = gens::k_true_from(rng, &ks);
+    Scenario {
+        k_true,
+        ranks: rng.gen_range(1, 5) as usize,
+        threads: rng.gen_range(1, 4) as usize,
+        traversal: *rng.choose(&Traversal::ALL),
+        pipeline: *rng.choose(&Pipeline::ALL),
+        mode: *rng.choose(&[Mode::Vanilla, Mode::EarlyStop]),
+        ks,
+    }
+}
+
+fn cfg(sc: &Scenario) -> ParallelConfig {
+    ParallelConfig {
+        ranks: sc.ranks,
+        threads_per_rank: sc.threads,
+        traversal: sc.traversal,
+        pipeline: sc.pipeline,
+    }
+}
+
+/// The log must decide every k in the domain exactly once.
+fn assert_partition(r: &SearchResult, ks: &[u32]) -> Result<(), String> {
+    let mut all = r.log.evaluated();
+    all.extend(r.log.pruned());
+    all.sort_unstable();
+    let mut want = ks.to_vec();
+    want.sort_unstable();
+    want.dedup();
+    if all != want {
+        return Err(format!("log does not partition K: {all:?} vs {want:?}"));
+    }
+    Ok(())
+}
+
+/// Superset-consistency: every pruned k must be excluded by a bound that
+/// some evaluation *in the same log* justifies — a selected k' >= k
+/// (floor prune) or, under Early-Stop, an evaluated k'' <= k whose score
+/// tripped the stop threshold (ceiling prune). A pruned k with no such
+/// witness would mean a worker invented a bound.
+fn assert_prunes_justified(r: &SearchResult, policy: &SearchPolicy) -> Result<(), String> {
+    let selected_max = r
+        .log
+        .visits
+        .iter()
+        .filter(|v| v.decision == Decision::Selected)
+        .map(|v| v.k)
+        .max();
+    let stopped_min = r
+        .log
+        .visits
+        .iter()
+        .filter(|v| v.decision != Decision::PrunedSkip && policy.stops(v.score))
+        .map(|v| v.k)
+        .min();
+    for pk in r.log.pruned() {
+        let by_floor = selected_max.map_or(false, |f| pk <= f);
+        let by_ceil = stopped_min.map_or(false, |c| pk >= c);
+        if !by_floor && !by_ceil {
+            return Err(format!(
+                "pruned k={pk} has no witness (selected_max={selected_max:?}, \
+                 stopped_min={stopped_min:?})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn all_engines_agree_on_k_optimal() {
+    check(
+        "engine-equivalence/k-optimal",
+        cases(120),
+        gen_scenario,
+        |sc| {
+            let profile = square(sc.k_true);
+            let want = Some(sc.k_true);
+
+            let serial = binary_bleed_serial(&sc.ks, &profile, policy(sc.mode));
+            if serial.k_optimal != want {
+                return Err(format!("serial found {:?}", serial.k_optimal));
+            }
+            let lockstep = binary_bleed_lockstep(&sc.ks, &profile, policy(sc.mode), cfg(sc));
+            if lockstep.k_optimal != want {
+                return Err(format!("lockstep found {:?}", lockstep.k_optimal));
+            }
+            let parallel = binary_bleed_parallel(&sc.ks, &profile, policy(sc.mode), cfg(sc));
+            if parallel.k_optimal != want {
+                return Err(format!("parallel found {:?}", parallel.k_optimal));
+            }
+            let sim = simulate_parallel_cluster(
+                &sc.ks,
+                &profile,
+                policy(sc.mode),
+                &CostModel::unit(),
+                cfg(sc),
+            );
+            if sim.k_optimal != want {
+                return Err(format!("event cluster found {:?}", sim.k_optimal));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lockstep_is_the_event_engine_under_unit_cost() {
+    // Wrapper-configuration guard (not an independent engine oracle —
+    // both paths share run_event): binary_bleed_lockstep must stay
+    // exactly the unit-cost / zero-latency configuration of the event
+    // driver. If either wrapper ever changes its plan shape, cost model
+    // or latency, the evaluation *sequences* (not just the sets)
+    // diverge and this fails. Engine correctness itself is covered by
+    // the serial-agreement and partition/witness properties above.
+    check(
+        "engine-equivalence/lockstep-vs-event",
+        cases(120),
+        gen_scenario,
+        |sc| {
+            let profile = square(sc.k_true);
+            let lockstep = binary_bleed_lockstep(&sc.ks, &profile, policy(sc.mode), cfg(sc));
+            let sim = simulate_parallel_cluster(
+                &sc.ks,
+                &profile,
+                policy(sc.mode),
+                &CostModel::unit(),
+                cfg(sc),
+            );
+            let lock_seq = lockstep.log.evaluated();
+            let sim_seq: Vec<u32> = sim.trace.iter().map(|v| v.k).collect();
+            if lock_seq != sim_seq {
+                return Err(format!("schedules diverge: {lock_seq:?} vs {sim_seq:?}"));
+            }
+            if lockstep.k_optimal != sim.k_optimal {
+                return Err("optima diverge".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_engine_log_partitions_and_justifies_prunes() {
+    check(
+        "engine-equivalence/partition+witness",
+        cases(120),
+        gen_scenario,
+        |sc| {
+            let profile = square(sc.k_true);
+            let p = policy(sc.mode);
+            for (name, r) in [
+                ("serial", binary_bleed_serial(&sc.ks, &profile, p)),
+                (
+                    "lockstep",
+                    binary_bleed_lockstep(&sc.ks, &profile, p, cfg(sc)),
+                ),
+                (
+                    "parallel",
+                    binary_bleed_parallel(&sc.ks, &profile, p, cfg(sc)),
+                ),
+            ] {
+                assert_partition(&r, &sc.ks).map_err(|e| format!("{name}: {e}"))?;
+                assert_prunes_justified(&r, &p).map_err(|e| format!("{name}: {e}"))?;
+                // The optimum itself is always evaluated, never pruned.
+                if let Some(opt) = r.k_optimal {
+                    if r.log.score_of(opt).is_none() {
+                        return Err(format!("{name}: optimum {opt} was pruned"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fig4_multi_crossing_profile_agrees_across_all_grids() {
+    // The Fig 4 walkthrough (selection crossings at {7,8,10,24}) must
+    // settle on 24 under every Traversal × Pipeline × shape combination
+    // for every engine — 24 can only be pruned by its own selection.
+    let ks: Vec<u32> = (2..=30).collect();
+    let profile = ScoreProfile::fig4();
+    let p = policy(Mode::Vanilla);
+    let serial = binary_bleed_serial(&ks, &profile, p);
+    assert_eq!(serial.k_optimal, Some(24));
+    for traversal in Traversal::ALL {
+        for pipeline in Pipeline::ALL {
+            for (ranks, threads) in [(1usize, 1usize), (2, 2), (4, 1), (3, 2)] {
+                let cfg = ParallelConfig {
+                    ranks,
+                    threads_per_rank: threads,
+                    traversal,
+                    pipeline,
+                };
+                let lock = binary_bleed_lockstep(&ks, &profile, p, cfg);
+                assert_eq!(
+                    lock.k_optimal,
+                    Some(24),
+                    "lockstep {traversal:?} {pipeline:?} {ranks}x{threads}"
+                );
+                let par = binary_bleed_parallel(&ks, &profile, p, cfg);
+                assert_eq!(
+                    par.k_optimal,
+                    Some(24),
+                    "parallel {traversal:?} {pipeline:?} {ranks}x{threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_grid_matches_serial_on_square_waves() {
+    let ks: Vec<u32> = (2..=34).collect();
+    for k_true in [2u32, 18, 34] {
+        let profile = square(k_true);
+        for mode in [Mode::Vanilla, Mode::EarlyStop] {
+            let serial = binary_bleed_serial(&ks, &profile, policy(mode));
+            assert_eq!(serial.k_optimal, Some(k_true));
+            for traversal in Traversal::ALL {
+                for pipeline in Pipeline::ALL {
+                    for (ranks, threads) in [(2usize, 1usize), (4, 4)] {
+                        let cfg = ParallelConfig {
+                            ranks,
+                            threads_per_rank: threads,
+                            traversal,
+                            pipeline,
+                        };
+                        let r = binary_bleed_parallel(&ks, &profile, policy(mode), cfg);
+                        assert_eq!(
+                            r.k_optimal,
+                            serial.k_optimal,
+                            "{mode:?} {traversal:?} {pipeline:?} {ranks}x{threads} k_true={k_true}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn normalization_makes_engines_order_insensitive() {
+    // Satellite check for the release-mode input validation: shuffled,
+    // duplicated k lists produce the same optimum on every engine.
+    let clean: Vec<u32> = (2..=25).collect();
+    let mut dirty = clean.clone();
+    dirty.reverse();
+    dirty.extend_from_slice(&[9, 9, 17]);
+    let profile = square(17);
+    let p = policy(Mode::Vanilla);
+    let cfg = ParallelConfig {
+        ranks: 3,
+        threads_per_rank: 2,
+        ..Default::default()
+    };
+    assert_eq!(
+        binary_bleed_serial(&dirty, &profile, p).k_optimal,
+        Some(17)
+    );
+    assert_eq!(
+        binary_bleed_lockstep(&dirty, &profile, p, cfg).k_optimal,
+        Some(17)
+    );
+    assert_eq!(
+        binary_bleed_parallel(&dirty, &profile, p, cfg).k_optimal,
+        Some(17)
+    );
+    let sim = simulate_parallel_cluster(&dirty, &profile, p, &CostModel::unit(), cfg);
+    assert_eq!(sim.k_optimal, Some(17));
+    assert_eq!(sim.total_k, clean.len());
+}

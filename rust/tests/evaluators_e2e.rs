@@ -1,17 +1,16 @@
 //! Full-system selection: Binary Bleed driving the real model evaluators
 //! (native and HLO backends) recovers planted k.
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
-use binary_bleed::coordinator::{
-    binary_bleed_parallel, binary_bleed_serial, Mode, ParallelConfig,
-    SearchPolicy, Thresholds,
-};
+#[cfg(feature = "pjrt")]
+use binary_bleed::coordinator::{binary_bleed_parallel, ParallelConfig};
+use binary_bleed::coordinator::{binary_bleed_serial, Mode, SearchPolicy, Thresholds};
 use binary_bleed::data::{gaussian_blobs, planted_nmf, planted_rescal};
-use binary_bleed::linalg::Matrix;
-use binary_bleed::model::{
-    KMeansEvaluator, KMeansScoring, NmfkEvaluator, RescalEvaluator, SharedStore,
-};
+#[cfg(feature = "pjrt")]
+use binary_bleed::model::SharedStore;
+use binary_bleed::model::{KMeansEvaluator, KMeansScoring, NmfkEvaluator, RescalEvaluator};
 use binary_bleed::util::Pcg32;
 
 fn nmfk_policy(mode: Mode) -> SearchPolicy {
@@ -91,10 +90,12 @@ fn rescal_native_selection() {
 // HLO-backed end-to-end (requires `make artifacts`)
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 fn open_store() -> Arc<SharedStore> {
     Arc::new(SharedStore::open_default().expect("run `make artifacts` first"))
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn nmfk_hlo_selection_recovers_planted_rank() {
     let store = open_store();
@@ -118,6 +119,7 @@ fn nmfk_hlo_selection_recovers_planted_rank() {
     assert!(r.log.evaluated_count() < ks.len());
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn kmeans_hlo_selection_parallel_ranks() {
     let store = open_store();
@@ -152,6 +154,7 @@ fn kmeans_hlo_selection_parallel_ranks() {
     );
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn rescal_hlo_selection() {
     let store = open_store();
@@ -169,6 +172,7 @@ fn rescal_hlo_selection() {
 
 /// Ablation seam: HLO and native backends agree on the NMFk stability
 /// landscape (same high/low classification at planted vs overfit rank).
+#[cfg(feature = "pjrt")]
 #[test]
 fn hlo_and_native_backends_agree_on_stability_landscape() {
     let store = open_store();
