@@ -1,0 +1,184 @@
+//! Bench: the blocked/parallel evaluation kernels vs the seed's scalar
+//! paths (ISSUE 2 acceptance: ≥ 4× on silhouette at n=2000, d=16 with
+//! 8 threads vs the retained textbook oracle).
+//!
+//! `--quick` shrinks shapes and iteration budgets to CI-smoke scale;
+//! the equivalence asserts run in both modes so the kernel layer cannot
+//! silently drift from the oracles.
+
+use std::time::Duration;
+
+use binary_bleed::bench::Bench;
+use binary_bleed::data::gaussian_blobs;
+use binary_bleed::linalg::{
+    davies_bouldin_oracle, davies_bouldin_with, kmeans_with, nmf_from_with, silhouette_oracle,
+    silhouette_with, sq_dist_matrix, Matrix,
+};
+use binary_bleed::util::{Pcg32, ThreadPool};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick" || a == "quick");
+    let (n_per, kc, d) = if quick { (40, 5, 8) } else { (250, 8, 16) };
+    let bench = if quick {
+        Bench::quick()
+    } else {
+        Bench {
+            target: Duration::from_secs(2),
+            warmup: Duration::from_millis(200),
+            ..Bench::default()
+        }
+    };
+    let pool1 = ThreadPool::serial();
+    let pool8 = ThreadPool::new(8);
+
+    let mut rng = Pcg32::new(42);
+    let ds = gaussian_blobs(&mut rng, n_per, kc, d, 8.0, 1.0);
+    let (x, labels) = (ds.x, ds.labels);
+    let n = x.rows;
+    println!("== eval kernels: n={n} d={d} clusters={kc} (quick={quick}) ==");
+
+    // --- silhouette: the acceptance kernel -----------------------------
+    let so = bench.run("silhouette/oracle-scalar", || silhouette_oracle(&x, &labels));
+    let s1 = bench.run("silhouette/tiled/1-thread", || {
+        silhouette_with(&x, &labels, &pool1)
+    });
+    let s8 = bench.run("silhouette/tiled/8-threads", || {
+        silhouette_with(&x, &labels, &pool8)
+    });
+    let sp1 = so.median.as_secs_f64() / s1.median.as_secs_f64();
+    let sp8 = so.median.as_secs_f64() / s8.median.as_secs_f64();
+    println!("    -> speedup vs seed scalar path: {sp1:.1}x (1 thread), {sp8:.1}x (8 threads)");
+    let (want, got) = (silhouette_oracle(&x, &labels), silhouette_with(&x, &labels, &pool8));
+    assert!(
+        (want - got).abs() < 1e-9,
+        "tiled silhouette diverged: {want} vs {got}"
+    );
+
+    // --- Davies-Bouldin ------------------------------------------------
+    let centroids = label_means(&x, &labels, kc);
+    bench.run("davies-bouldin/oracle-scalar", || {
+        davies_bouldin_oracle(&x, &centroids, &labels)
+    });
+    bench.run("davies-bouldin/tiled/8-threads", || {
+        davies_bouldin_with(&x, &centroids, &labels, &pool8)
+    });
+    let (want, got) = (
+        davies_bouldin_oracle(&x, &centroids, &labels),
+        davies_bouldin_with(&x, &centroids, &labels, &pool8),
+    );
+    assert!(
+        (want - got).abs() < 1e-9,
+        "tiled davies-bouldin diverged: {want} vs {got}"
+    );
+
+    // --- pairwise distance matrix --------------------------------------
+    bench.run("pairwise/full-matrix/1-thread", || {
+        sq_dist_matrix(&x, &centroids, &pool1)
+    });
+    bench.run("pairwise/full-matrix/8-threads", || {
+        sq_dist_matrix(&x, &centroids, &pool8)
+    });
+
+    // --- k-means: blocked assignment vs scalar Lloyd inner loop --------
+    let iters = if quick { 5 } else { 20 };
+    bench.run("kmeans/assignment-scalar(seed-style)", || {
+        scalar_assignment(&x, &centroids)
+    });
+    bench.run("kmeans/fit/1-thread", || {
+        let mut r = Pcg32::new(7);
+        kmeans_with(&x, kc, iters, &mut r, &pool1).inertia
+    });
+    bench.run("kmeans/fit/8-threads", || {
+        let mut r = Pcg32::new(7);
+        kmeans_with(&x, kc, iters, &mut r, &pool8).inertia
+    });
+
+    // --- NMF: Gram-form updates vs seed transpose-per-update ----------
+    let (m_rows, n_cols, rank) = if quick { (80, 90, 6) } else { (400, 440, 12) };
+    let xm = Matrix::rand_uniform(m_rows, n_cols, &mut rng);
+    let w0 = Matrix::rand_uniform(m_rows, rank, &mut rng).map(|v| v + 0.01);
+    let h0 = Matrix::rand_uniform(rank, n_cols, &mut rng).map(|v| v + 0.01);
+    let nmf_iters = if quick { 3 } else { 10 };
+    bench.run("nmf/seed-transpose-updates", || {
+        nmf_textbook(&xm, w0.clone(), h0.clone(), nmf_iters)
+    });
+    bench.run("nmf/gram-form/1-thread", || {
+        nmf_from_with(&xm, w0.clone(), h0.clone(), nmf_iters, &pool1).relative_error
+    });
+    bench.run("nmf/gram-form/8-threads", || {
+        nmf_from_with(&xm, w0.clone(), h0.clone(), nmf_iters, &pool8).relative_error
+    });
+    let seed_err = nmf_textbook(&xm, w0.clone(), h0.clone(), nmf_iters);
+    let gram_err = nmf_from_with(&xm, w0.clone(), h0.clone(), nmf_iters, &pool8).relative_error;
+    assert_eq!(
+        seed_err.to_bits(),
+        gram_err.to_bits(),
+        "Gram-form NMF must match the seed transpose formulation bitwise"
+    );
+
+    if !quick {
+        println!(
+            "\nacceptance: silhouette n={n} d={d} 8-thread speedup = {sp8:.1}x (target >= 4x)"
+        );
+    }
+}
+
+/// Per-label mean rows (centroids for the DB / assignment benches).
+fn label_means(x: &Matrix, labels: &[usize], k: usize) -> Matrix {
+    let mut c = Matrix::zeros(k, x.cols);
+    let mut counts = vec![0usize; k];
+    for (i, &l) in labels.iter().enumerate() {
+        counts[l] += 1;
+        for (s, &v) in c.data[l * x.cols..(l + 1) * x.cols]
+            .iter_mut()
+            .zip(x.row(i))
+        {
+            *s += v;
+        }
+    }
+    for l in 0..k {
+        if counts[l] > 0 {
+            for v in &mut c.data[l * x.cols..(l + 1) * x.cols] {
+                *v /= counts[l] as f32;
+            }
+        }
+    }
+    c
+}
+
+/// The seed's scalar assignment loop: per point, per centroid,
+/// recompute the subtract-square distance.
+fn scalar_assignment(x: &Matrix, centroids: &Matrix) -> f64 {
+    let mut inertia = 0.0;
+    for i in 0..x.rows {
+        let mut best = f64::INFINITY;
+        for c in 0..centroids.rows {
+            let d = Matrix::row_sq_dist(x, i, centroids, c);
+            if d < best {
+                best = d;
+            }
+        }
+        inertia += best;
+    }
+    inertia
+}
+
+/// The seed's NMF update loop: materialize a transpose per update.
+fn nmf_textbook(x: &Matrix, mut w: Matrix, mut h: Matrix, iters: usize) -> f64 {
+    const EPS: f32 = 1e-9;
+    for _ in 0..iters {
+        let ht = h.transpose();
+        let num = x.matmul(&ht);
+        let den = w.matmul(&h.matmul(&ht));
+        w = w
+            .zip(&num, |wv, nv| wv * nv)
+            .zip(&den, |wn, dv| wn / (dv + EPS));
+        let wt = w.transpose();
+        let num = wt.matmul(x);
+        let den = wt.matmul(&w).matmul(&h);
+        h = h
+            .zip(&num, |hv, nv| hv * nv)
+            .zip(&den, |hn, dv| hn / (dv + EPS));
+    }
+    x.relative_error_to(&w.matmul(&h))
+}

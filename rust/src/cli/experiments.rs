@@ -93,7 +93,8 @@ fn build_family(
             let ds = planted_nmf(&mut rng, m, n, k_true as usize, 0.01);
             let ev = NmfkEvaluator::native(ds.x, cfg.k_max as usize + 2, cfg.seed)
                 .with_perturbations(cfg.perturbations)
-                .with_bursts(4);
+                .with_bursts(4)
+                .with_eval_threads(cfg.resolved_eval_threads());
             (
                 Box::new(ev),
                 // stop = 0.0: only true stability collapse (negative
@@ -116,7 +117,8 @@ fn build_family(
                 KMeansScoring::DaviesBouldin,
                 cfg.seed,
             )
-            .with_restarts(cfg.restarts);
+            .with_restarts(cfg.restarts)
+            .with_eval_threads(cfg.resolved_eval_threads());
             (
                 Box::new(ev),
                 // Davies-Bouldin minimizes; §IV-A thresholds.

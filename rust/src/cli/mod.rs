@@ -3,7 +3,8 @@
 //! ```text
 //! bleed search     --model nmfk|kmeans|profile --k-min 2 --k-max 30
 //!                  [--mode vanilla|early-stop|standard] [--order pre|post|in]
-//!                  [--ranks N] [--threads T] [--backend hlo|native]
+//!                  [--ranks N] [--threads T] [--eval-threads E]
+//!                  [--backend hlo|native]
 //!                  [--k-true K] [--seed S] [--config FILE]
 //! bleed experiment fig7|fig8|fig9|table2|arxiv|fig4|dynamics|all
 //!                  [--preset quick|paper] [--config FILE]
@@ -91,6 +92,8 @@ SEARCH FLAGS:
   --mode M                 standard|vanilla|early-stop (default vanilla)
   --order O                pre|post|in (default pre)
   --ranks N --threads T    parallel shape (default 1x1 = serial)
+  --eval-threads E         intra-evaluation kernel threads per model fit
+                           (default 0 = auto: hardware / (ranks*threads))
   --backend B              hlo|native (default native; hlo needs artifacts)
   --k-true K               planted k for the synthetic dataset (default 15)
   --select X --stop X      thresholds (default 0.75 / 0.2)
@@ -158,6 +161,15 @@ fn cmd_search(args: &Args) -> Result<()> {
     let seed: u64 = args.flag_parse("seed")?.unwrap_or(0xB1EED);
     let ranks: usize = args.flag_parse("ranks")?.unwrap_or(1);
     let threads: usize = args.flag_parse("threads")?.unwrap_or(1);
+    // Intra-evaluation thread budget (§3.2): explicit, or hardware
+    // threads divided by the engine worker count.
+    let eval_threads: usize = match args.flag_parse("eval-threads")?.unwrap_or(0) {
+        0 => crate::util::pool::eval_thread_budget(
+            crate::util::pool::available_threads(),
+            ranks.max(1) * threads.max(1),
+        ),
+        n => n,
+    };
     let mode = parse_mode(&args.flag_or("mode", "vanilla"))?;
     let order = parse_traversal(&args.flag_or("order", "pre"))?;
     let select: f64 = args.flag_parse("select")?.unwrap_or(0.75);
@@ -171,12 +183,13 @@ fn cmd_search(args: &Args) -> Result<()> {
 
     let ks: Vec<u32> = (k_min..=k_max).collect();
     let model = args.flag_or("model", "profile");
-    let (scorer, mut policy) = build_scorer(&model, k_true, k_max, seed, backend, select, stop)?;
+    let (scorer, mut policy) =
+        build_scorer(&model, k_true, k_max, seed, backend, select, stop, eval_threads)?;
     policy.mode = mode;
 
     println!(
         "searching K={{{k_min}..{k_max}}} model={model} mode={} order={} \
-         ranks={ranks}x{threads} backend={}",
+         ranks={ranks}x{threads} eval-threads={eval_threads} backend={}",
         mode.label(),
         order.label(),
         backend.label()
@@ -216,6 +229,7 @@ fn build_scorer(
     backend: Backend,
     select: f64,
     stop: f64,
+    eval_threads: usize,
 ) -> Result<(Box<dyn KScorer>, SearchPolicy)> {
     let thresholds = Thresholds { select, stop };
     let mut rng = crate::util::Pcg32::new(seed);
@@ -235,7 +249,8 @@ fn build_scorer(
                     let ds = planted_nmf(&mut rng, 80, 88, k_true as usize, 0.01);
                     NmfkEvaluator::native(ds.x, k_max as usize + 2, seed)
                 }
-            };
+            }
+            .with_eval_threads(eval_threads);
             Ok((
                 Box::new(ev),
                 SearchPolicy::maximize(Mode::Vanilla, thresholds),
@@ -254,7 +269,8 @@ fn build_scorer(
                         seed,
                     )
                 }
-            };
+            }
+            .with_eval_threads(eval_threads);
             Ok((
                 Box::new(ev),
                 SearchPolicy::minimize(

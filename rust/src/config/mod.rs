@@ -27,6 +27,10 @@ pub struct ExperimentConfig {
     /// Parallel shape.
     pub ranks: usize,
     pub threads_per_rank: usize,
+    /// Intra-evaluation thread budget per model fit (§3.2). `0` = auto:
+    /// divide the host's hardware threads by the engine worker count so
+    /// the product never oversubscribes the machine.
+    pub eval_threads: usize,
     pub traversal: Traversal,
     pub pipeline: Pipeline,
     /// Sweep density for figure experiments: evaluate every `stride`-th
@@ -55,6 +59,7 @@ impl ExperimentConfig {
             },
             ranks: 2,
             threads_per_rank: 2,
+            eval_threads: 0,
             traversal: Traversal::PreOrder,
             pipeline: Pipeline::SkipModThenSort,
             sweep_stride: 4,
@@ -92,6 +97,20 @@ impl ExperimentConfig {
     /// Policy for a given mode, inheriting the config thresholds.
     pub fn policy(&self, mode: Mode) -> SearchPolicy {
         SearchPolicy::maximize(mode, self.thresholds)
+    }
+
+    /// The effective intra-evaluation thread budget: the explicit
+    /// `eval_threads` when set, otherwise hardware threads divided by
+    /// the engine worker count (`ranks × threads_per_rank`) so the
+    /// product never oversubscribes the machine (§3.2).
+    pub fn resolved_eval_threads(&self) -> usize {
+        if self.eval_threads != 0 {
+            return self.eval_threads;
+        }
+        crate::util::pool::eval_thread_budget(
+            crate::util::pool::available_threads(),
+            self.ranks.max(1) * self.threads_per_rank.max(1),
+        )
     }
 
     /// Parallel config for the scheduler.
@@ -152,6 +171,14 @@ impl ExperimentConfig {
             .and_then(TomlValue::as_int)
         {
             self.threads_per_rank = v as usize;
+        }
+        if let Some(v) = t
+            .get_path("parallel.eval_threads")
+            .and_then(TomlValue::as_int)
+        {
+            // Clamp instead of `as usize`: a negative value would wrap
+            // to an astronomical thread budget. Negative ⇒ 0 ⇒ auto.
+            self.eval_threads = v.max(0) as usize;
         }
         if let Some(v) = t.get_path("parallel.pipeline").and_then(TomlValue::as_str) {
             self.pipeline = parse_pipeline(v)?;
@@ -231,6 +258,7 @@ select_threshold = 0.8
 order = "post"
 [parallel]
 ranks = 8
+eval_threads = 3
 pipeline = "t2"
 [sweep]
 stride = 2
@@ -242,8 +270,30 @@ stride = 2
         assert_eq!(cfg.thresholds.select, 0.8);
         assert_eq!(cfg.traversal, Traversal::PostOrder);
         assert_eq!(cfg.ranks, 8);
+        assert_eq!(cfg.eval_threads, 3);
+        assert_eq!(cfg.resolved_eval_threads(), 3);
         assert_eq!(cfg.pipeline, Pipeline::SortThenSkipMod);
         assert_eq!(cfg.sweep_stride, 2);
+    }
+
+    #[test]
+    fn negative_eval_threads_means_auto() {
+        let mut cfg = ExperimentConfig::quick();
+        let doc = "[parallel]\neval_threads = -1\n";
+        cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
+        assert_eq!(cfg.eval_threads, 0, "negative clamps to auto, not wrap");
+        assert!(cfg.resolved_eval_threads() >= 1);
+    }
+
+    #[test]
+    fn auto_eval_threads_respects_budget() {
+        let mut cfg = ExperimentConfig::quick();
+        cfg.eval_threads = 0;
+        let budget = cfg.resolved_eval_threads();
+        assert!(budget >= 1);
+        // workers × eval threads never exceeds the machine.
+        let workers = cfg.ranks * cfg.threads_per_rank;
+        assert!(workers * budget <= crate::util::pool::available_threads().max(workers));
     }
 
     #[test]

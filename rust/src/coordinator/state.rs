@@ -149,6 +149,14 @@ impl SharedState {
 
     /// Merge a bound update received from another rank (ReceiveKCheck).
     /// Monotone merges: bounds only tighten, the best k only grows.
+    ///
+    /// A remote best whose k is outside this state's domain is
+    /// *rejected*, not merged: raising `best_k` to a k with no score
+    /// slot would make [`SharedState::best`] report `score = NaN` from
+    /// then on. All engine configurations build every rank's state over
+    /// the same normalized domain, so a rejected best only ever comes
+    /// from a misconfigured or corrupt peer — its floor/ceil movements
+    /// (plain integers, domain-independent) still merge above.
     pub fn merge_remote(&self, floor: Option<u32>, ceil: Option<u32>, best: Option<Candidate>) {
         if let Some(f) = floor {
             self.floor.fetch_max(i64::from(f), Ordering::SeqCst);
@@ -159,8 +167,8 @@ impl SharedState {
         if let Some(b) = best {
             if let Some(pos) = self.pos(b.k) {
                 self.scores[pos].store(b.score.to_bits(), Ordering::SeqCst);
+                self.best_k.fetch_max(i64::from(b.k), Ordering::SeqCst);
             }
-            self.best_k.fetch_max(i64::from(b.k), Ordering::SeqCst);
         }
     }
 
@@ -294,6 +302,26 @@ mod tests {
         assert_eq!(f, Some(5));
         assert_eq!(c, Some(20));
         assert_eq!(st.best().unwrap().k, 5);
+    }
+
+    #[test]
+    fn merge_remote_rejects_out_of_domain_best() {
+        // Regression: an out-of-domain remote best used to raise best_k
+        // anyway, after which best() reported score = NaN forever.
+        let st = SharedState::new(&[2, 4, 8]);
+        st.merge_remote(None, None, Some(Candidate { k: 6, score: 0.9 }));
+        assert!(st.best().is_none(), "out-of-domain best must be rejected");
+        st.merge_remote(Some(3), None, Some(Candidate { k: 4, score: 0.8 }));
+        let b = st.best().unwrap();
+        assert_eq!((b.k, b.score), (4, 0.8));
+        // A later out-of-domain merge cannot poison the valid best...
+        st.merge_remote(None, None, Some(Candidate { k: 99, score: 0.99 }));
+        let b = st.best().unwrap();
+        assert_eq!(b.k, 4);
+        assert!(b.score.is_finite());
+        // ...while its (domain-independent) bounds still merge.
+        let (f, _) = st.bounds();
+        assert_eq!(f, Some(3));
     }
 
     #[test]

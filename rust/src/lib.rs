@@ -18,6 +18,13 @@
 //!   search time. The default build is dependency-free and fully
 //!   offline; the feature gates the XLA bindings.
 //!
+//! The native evaluation kernels (tiled pairwise distances, silhouette /
+//! Davies-Bouldin, k-means++ Lloyd, Gram-form NMF) are data-parallel
+//! over an intra-evaluation thread budget ([`util::pool`],
+//! [`linalg::pairwise`]); size it with `--eval-threads` /
+//! `config::ExperimentConfig::resolved_eval_threads` so engine workers ×
+//! eval threads never oversubscribe the machine.
+//!
 //! Quickstart — every entry point is a thin engine configuration and
 //! they all agree on the optimum:
 //! ```no_run

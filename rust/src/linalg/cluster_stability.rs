@@ -20,13 +20,15 @@ pub fn match_columns(reference: &Matrix, w: &Matrix) -> Vec<usize> {
     let ref_cols: Vec<Vec<f32>> = (0..k).map(|c| reference.col(c)).collect();
     let w_cols: Vec<Vec<f32>> = (0..k).map(|c| w.col(c)).collect();
     // All pair similarities, pick greedily best-first (k is small).
+    // `total_cmp` keeps the sort total even if a degenerate input ever
+    // produced a non-finite similarity.
     let mut pairs: Vec<(f64, usize, usize)> = Vec::with_capacity(k * k);
     for (j, wc) in w_cols.iter().enumerate() {
         for (r, rc) in ref_cols.iter().enumerate() {
             pairs.push((cosine_similarity(wc, rc), j, r));
         }
     }
-    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
     let mut perm = vec![usize::MAX; k];
     let mut used_w = vec![false; k];
     let mut used_r = vec![false; k];
@@ -58,8 +60,21 @@ pub fn perturbation_silhouette(ws: &[Matrix]) -> f64 {
         }
     }
     let n = samples.len();
-    // Cosine distance.
-    let dist = |i: usize, j: usize| 1.0 - cosine_similarity(&samples[i], &samples[j]);
+    // Cosine distance with the column norms hoisted out of the O(n²)
+    // pair loop (same accumulation order as `cosine_similarity`, so the
+    // statistic is unchanged bit-for-bit).
+    let norms: Vec<f64> = samples
+        .iter()
+        .map(|s| s.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt())
+        .collect();
+    let dist = |i: usize, j: usize| {
+        let dot: f64 = samples[i]
+            .iter()
+            .zip(&samples[j])
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum();
+        1.0 - dot / (norms[i] * norms[j] + 1e-12)
+    };
     let mut cluster_sil = vec![0.0f64; k];
     let mut cluster_n = vec![0usize; k];
     for i in 0..n {

@@ -1,8 +1,20 @@
 //! Pure-Rust Lloyd K-means — the reference implementation / test oracle
 //! for the `kmeans_run` HLO artifact, and the fallback backend of the
 //! K-means evaluator when artifacts are unavailable.
+//!
+//! Seeding is true D²-sampled k-means++ (Arthur & Vassilvitskii 2007)
+//! on the caller's [`Pcg32`]: the first centroid is uniform, every
+//! later one is drawn with probability proportional to its squared
+//! distance from the nearest chosen centroid. (The seed implementation
+//! claimed "k-means++-style" but ran deterministic farthest-first,
+//! which chases outliers; D² sampling keeps the spread without that
+//! failure mode.) Assignment and the seeding distance updates stream
+//! through the blocked Gram-form kernel in [`super::pairwise`],
+//! parallel over row blocks on a [`ThreadPool`].
 
 use super::matrix::Matrix;
+use super::pairwise::{row_sq_norms, sq_dist_tile};
+use crate::util::pool::ThreadPool;
 use crate::util::Pcg32;
 
 /// Result of a K-means fit.
@@ -14,72 +26,134 @@ pub struct KMeansFit {
     pub iterations: usize,
 }
 
-/// Lloyd's algorithm with k-means++-style farthest-first seeding.
+/// Lloyd's algorithm with k-means++ seeding, single-threaded.
 pub fn kmeans(x: &Matrix, k: usize, max_iter: usize, rng: &mut Pcg32) -> KMeansFit {
+    kmeans_with(x, k, max_iter, rng, &ThreadPool::serial())
+}
+
+/// Lloyd's algorithm with k-means++ seeding; distance work is parallel
+/// over row blocks on `pool`. At least one assignment pass always runs
+/// (the seed returned `inertia = ∞` with all-zero labels for
+/// `max_iter == 0`), so the fit always reflects the data.
+///
+/// Thread-budget invariance: per-point assignments are computed
+/// independently and the inertia folds serially in row order, so the
+/// fit is bitwise identical under every budget.
+pub fn kmeans_with(
+    x: &Matrix,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+) -> KMeansFit {
     assert!(k >= 1 && k <= x.rows, "k out of range");
     let n = x.rows;
-    // Seeding: first centroid random, others farthest-first.
-    let mut centers: Vec<usize> = vec![rng.gen_range(0, n as u64) as usize];
-    while centers.len() < k {
-        let (mut best_i, mut best_d) = (0usize, -1.0f64);
-        for i in 0..n {
-            let d = centers
-                .iter()
-                .map(|&c| Matrix::row_sq_dist(x, i, x, c))
-                .fold(f64::INFINITY, f64::min);
-            if d > best_d {
-                best_d = d;
-                best_i = i;
-            }
-        }
-        centers.push(best_i);
-    }
-    let mut centroids = Matrix::zeros(k, x.cols);
-    for (ci, &i) in centers.iter().enumerate() {
-        centroids.data[ci * x.cols..(ci + 1) * x.cols].copy_from_slice(x.row(i));
-    }
+    let d = x.cols;
+    let norms = row_sq_norms(x);
+    let pool = pool.capped(n / 64);
 
-    let mut labels = vec![0usize; n];
-    let mut inertia = f64::INFINITY;
-    let mut iterations = 0;
-    for it in 0..max_iter {
-        iterations = it + 1;
-        // Assignment.
-        let mut new_inertia = 0.0;
-        for i in 0..n {
-            let (mut best_c, mut best_d) = (0usize, f64::INFINITY);
-            for c in 0..k {
-                let d = Matrix::row_sq_dist(x, i, &centroids, c);
-                if d < best_d {
-                    best_d = d;
-                    best_c = c;
+    // --- k-means++ seeding ---------------------------------------------
+    let mut centers: Vec<usize> = vec![rng.gen_range(0, n as u64) as usize];
+    // min_d2[i] = squared distance of point i to its nearest chosen center.
+    let mut min_d2 = vec![0.0f64; n];
+    let seed_update = |min_d2: &mut [f64], c: usize| {
+        pool.for_slices_mut(min_d2, 1, |_, i0, piece| {
+            let mut t = [0.0f64; 1];
+            for (off, slot) in piece.iter_mut().enumerate() {
+                let i = i0 + off;
+                sq_dist_tile(x, i, i + 1, &norms, x, c, c + 1, &norms, &mut t);
+                if t[0] < *slot {
+                    *slot = t[0];
                 }
             }
-            labels[i] = best_c;
-            new_inertia += best_d;
+        });
+    };
+    min_d2.fill(f64::INFINITY);
+    seed_update(&mut min_d2, centers[0]);
+    while centers.len() < k {
+        let total: f64 = min_d2.iter().sum();
+        let next = if total > 0.0 {
+            // D² sampling: walk the prefix sums; `last_pos` guards the
+            // floating-point tail so a rounding remainder can never
+            // select a zero-weight (already chosen) point.
+            let mut r = rng.next_f64() * total;
+            let mut pick = None;
+            let mut last_pos = 0usize;
+            for (i, &w) in min_d2.iter().enumerate() {
+                if w > 0.0 {
+                    last_pos = i;
+                    if r < w {
+                        pick = Some(i);
+                        break;
+                    }
+                    r -= w;
+                }
+            }
+            pick.unwrap_or(last_pos)
+        } else {
+            // Degenerate data: every point coincides with a chosen
+            // center. Take the first unchosen index (duplicate centroids
+            // are harmless but wasteful).
+            (0..n).find(|i| !centers.contains(i)).unwrap_or(0)
+        };
+        centers.push(next);
+        seed_update(&mut min_d2, next);
+    }
+    let mut centroids = Matrix::zeros(k, d);
+    for (ci, &i) in centers.iter().enumerate() {
+        centroids.data[ci * d..(ci + 1) * d].copy_from_slice(x.row(i));
+    }
+
+    // --- Lloyd iterations ----------------------------------------------
+    let mut labels = vec![0usize; n];
+    // (label, squared distance) per point, folded serially in row order
+    // so the inertia is identical for every thread budget.
+    let mut assign: Vec<(u32, f64)> = vec![(0, 0.0); n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..max_iter.max(1) {
+        iterations = it + 1;
+        // Assignment: blocked distances to all k centroids, argmin.
+        let cnorms = row_sq_norms(&centroids);
+        let centroids_ref = &centroids;
+        pool.for_slices_mut(&mut assign, 1, |_, i0, piece| {
+            let mut dists = vec![0.0f64; k];
+            for (off, slot) in piece.iter_mut().enumerate() {
+                let i = i0 + off;
+                sq_dist_tile(x, i, i + 1, &norms, centroids_ref, 0, k, &cnorms, &mut dists);
+                let (mut best_c, mut best_d) = (0usize, f64::INFINITY);
+                for (c, &dv) in dists.iter().enumerate() {
+                    if dv < best_d {
+                        best_d = dv;
+                        best_c = c;
+                    }
+                }
+                *slot = (best_c as u32, best_d);
+            }
+        });
+        let mut new_inertia = 0.0;
+        for (i, &(c, dv)) in assign.iter().enumerate() {
+            labels[i] = c as usize;
+            new_inertia += dv;
         }
-        // Update.
-        let mut sums = Matrix::zeros(k, x.cols);
+        // Update (serial: O(n·d), cheap next to the O(n·k·d) assignment).
+        let mut sums = Matrix::zeros(k, d);
         let mut counts = vec![0usize; k];
         for i in 0..n {
             let c = labels[i];
             counts[c] += 1;
-            for (s, &v) in sums.data[c * x.cols..(c + 1) * x.cols]
-                .iter_mut()
-                .zip(x.row(i))
-            {
+            for (s, &v) in sums.data[c * d..(c + 1) * d].iter_mut().zip(x.row(i)) {
                 *s += v;
             }
         }
         for c in 0..k {
             if counts[c] > 0 {
-                for v in &mut sums.data[c * x.cols..(c + 1) * x.cols] {
+                for v in &mut sums.data[c * d..(c + 1) * d] {
                     *v /= counts[c] as f32;
                 }
             } else {
                 // Keep empty centroids in place.
-                sums.data[c * x.cols..(c + 1) * x.cols]
-                    .copy_from_slice(centroids.row(c));
+                sums.data[c * d..(c + 1) * d].copy_from_slice(centroids.row(c));
             }
         }
         centroids = sums;
@@ -138,5 +212,31 @@ mod tests {
         let x = Matrix::rand_normal(6, 3, &mut rng);
         let fit = kmeans(&x, 6, 20, &mut rng);
         assert!(fit.inertia < 1e-6);
+    }
+
+    #[test]
+    fn zero_max_iter_still_assigns() {
+        // Regression: the seed returned inertia = ∞ and all-zero labels.
+        let mut rng = Pcg32::new(24);
+        let ds = gaussian_blobs(&mut rng, 20, 3, 4, 9.0, 0.5);
+        let fit = kmeans(&ds.x, 3, 0, &mut rng);
+        assert!(fit.inertia.is_finite(), "inertia {}", fit.inertia);
+        assert_eq!(fit.iterations, 1);
+        let distinct: std::collections::HashSet<usize> =
+            fit.labels.iter().copied().collect();
+        assert!(distinct.len() > 1, "labels must reflect the data");
+    }
+
+    #[test]
+    fn fit_is_thread_budget_invariant() {
+        let mut rng = Pcg32::new(25);
+        let ds = gaussian_blobs(&mut rng, 80, 4, 6, 8.0, 0.7);
+        let mut fit_rng1 = Pcg32::with_stream(99, 1);
+        let mut fit_rng8 = Pcg32::with_stream(99, 1);
+        let f1 = kmeans_with(&ds.x, 5, 30, &mut fit_rng1, &ThreadPool::serial());
+        let f8 = kmeans_with(&ds.x, 5, 30, &mut fit_rng8, &ThreadPool::new(8));
+        assert_eq!(f1.labels, f8.labels);
+        assert_eq!(f1.inertia.to_bits(), f8.inertia.to_bits());
+        assert_eq!(f1.centroids.data, f8.centroids.data);
     }
 }

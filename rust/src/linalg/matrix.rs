@@ -7,6 +7,7 @@
 
 use std::fmt;
 
+use crate::util::pool::ThreadPool;
 use crate::util::Pcg32;
 
 /// Dense row-major matrix of f32.
@@ -89,6 +90,98 @@ impl Matrix {
         out
     }
 
+    /// C = A @ B with the multiply parallelized over output row blocks.
+    /// Per-element accumulation order (ascending p, zero-skip) is the
+    /// same as [`Matrix::matmul`], so results are bitwise identical to
+    /// the serial product under every thread budget.
+    pub fn matmul_with(&self, other: &Matrix, pool: &ThreadPool) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, kdim, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        let pool = pool.capped(m * kdim * n / 32_768);
+        pool.for_slices_mut(&mut out.data, n, |_, row0, piece| {
+            for (r, orow) in piece.chunks_mut(n).enumerate() {
+                let i = row0 + r;
+                for p in 0..kdim {
+                    let a = self.data[i * kdim + p];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[p * n..(p + 1) * n];
+                    for (o, &b) in orow.iter_mut().zip(brow) {
+                        *o += a * b;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// C = A @ Bᵀ without materializing the transpose: rows of `other`
+    /// are read directly (`out[i][j] = self.row(i) · other.row(j)`).
+    /// Accumulation order matches `self.matmul(&other.transpose())`
+    /// bitwise.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        self.matmul_nt_with(other, &ThreadPool::serial())
+    }
+
+    /// [`Matrix::matmul_nt`] parallel over output row blocks.
+    pub fn matmul_nt_with(&self, other: &Matrix, pool: &ThreadPool) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, d, n) = (self.rows, self.cols, other.rows);
+        let mut out = Matrix::zeros(m, n);
+        let pool = pool.capped(m * d * n / 32_768);
+        pool.for_slices_mut(&mut out.data, n, |_, row0, piece| {
+            for (r, orow) in piece.chunks_mut(n).enumerate() {
+                let arow = self.row(row0 + r);
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let brow = other.row(j);
+                    let mut acc = 0.0f32;
+                    for (&a, &b) in arow.iter().zip(brow) {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        acc += a * b;
+                    }
+                    *o = acc;
+                }
+            }
+        });
+        out
+    }
+
+    /// C = Aᵀ @ B without materializing the transpose
+    /// (`out[c][j] = Σᵢ self[i][c] · other[i][j]`). Accumulation order
+    /// matches `self.transpose().matmul(&other)` bitwise.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        self.matmul_tn_with(other, &ThreadPool::serial())
+    }
+
+    /// [`Matrix::matmul_tn`] parallel over output row blocks (each
+    /// worker owns a block of `c` rows and scans all of `self`/`other`,
+    /// so per-element i-order is preserved under every budget).
+    pub fn matmul_tn_with(&self, other: &Matrix, pool: &ThreadPool) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (m, kdim, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(kdim, n);
+        let pool = pool.capped(m * kdim * n / 32_768);
+        pool.for_slices_mut(&mut out.data, n, |_, c0, piece| {
+            for i in 0..m {
+                let xrow = other.row(i);
+                for (cr, orow) in piece.chunks_mut(n).enumerate() {
+                    let a = self.data[i * kdim + c0 + cr];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    for (o, &b) in orow.iter_mut().zip(xrow) {
+                        *o += a * b;
+                    }
+                }
+            }
+        });
+        out
+    }
+
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -140,13 +233,16 @@ impl Matrix {
     }
 
     /// Squared Euclidean distance between two rows of (possibly different)
-    /// matrices with equal column counts.
+    /// matrices with equal column counts. Coordinates are widened to f64
+    /// *before* subtracting (the difference of two f32 is exact in f64),
+    /// so this oracle and the Gram-form tiles in [`super::pairwise`]
+    /// agree to f64 rounding rather than f32 subtraction error.
     pub fn row_sq_dist(a: &Matrix, ra: usize, b: &Matrix, rb: usize) -> f64 {
         debug_assert_eq!(a.cols, b.cols);
         a.row(ra)
             .iter()
             .zip(b.row(rb))
-            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .map(|(&x, &y)| (x as f64 - y as f64).powi(2))
             .sum()
     }
 
@@ -187,6 +283,29 @@ mod tests {
         let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
         let b = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]);
         assert_eq!(a.matmul(&b).data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_nt_tn_match_transpose_forms_bitwise() {
+        let mut rng = Pcg32::new(8);
+        let a = Matrix::rand_normal(7, 5, &mut rng);
+        let b = Matrix::rand_normal(9, 5, &mut rng); // A·Bᵀ: (7,5)·(5,9)
+        assert_eq!(a.matmul_nt(&b).data, a.matmul(&b.transpose()).data);
+        let c = Matrix::rand_normal(7, 6, &mut rng); // Aᵀ·C: (5,7)·(7,6)
+        assert_eq!(a.matmul_tn(&c).data, a.transpose().matmul(&c).data);
+    }
+
+    #[test]
+    fn parallel_matmuls_are_bitwise_serial() {
+        let mut rng = Pcg32::new(9);
+        let pool = ThreadPool::new(8);
+        let a = Matrix::rand_normal(33, 17, &mut rng);
+        let b = Matrix::rand_normal(17, 21, &mut rng);
+        assert_eq!(a.matmul_with(&b, &pool).data, a.matmul(&b).data);
+        let c = Matrix::rand_normal(33, 21, &mut rng);
+        assert_eq!(a.matmul_tn_with(&c, &pool).data, a.matmul_tn(&c).data);
+        let d = Matrix::rand_normal(29, 17, &mut rng);
+        assert_eq!(a.matmul_nt_with(&d, &pool).data, a.matmul_nt(&d).data);
     }
 
     #[test]

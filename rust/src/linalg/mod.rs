@@ -1,19 +1,27 @@
-//! Pure-Rust linear algebra + reference models (DESIGN.md S11/S18).
+//! Pure-Rust linear algebra + reference models (DESIGN.md S11/S18/S20).
 //!
-//! Two jobs: (a) numeric oracles that the integration tests hold the HLO
-//! artifacts against, (b) the "native" evaluator backend used when
-//! artifacts are absent and for the HLO-vs-native ablation bench.
+//! Three jobs: (a) numeric oracles that the integration tests hold the
+//! HLO artifacts against, (b) the "native" evaluator backend used when
+//! artifacts are absent and for the HLO-vs-native ablation bench,
+//! (c) the blocked/parallel evaluation kernels ([`pairwise`], the tiled
+//! scorers, the transpose-free matmuls) that make the native hot path
+//! scale with the intra-evaluation thread budget (§3.2).
 
 pub mod cluster_stability;
 pub mod kmeans_ref;
 pub mod matrix;
 pub mod nmf_ref;
+pub mod pairwise;
 pub mod rescal_ref;
 pub mod scores;
 
 pub use cluster_stability::{match_columns, perturbation_silhouette};
-pub use kmeans_ref::{kmeans, KMeansFit};
+pub use kmeans_ref::{kmeans, kmeans_with, KMeansFit};
 pub use matrix::{cosine_similarity, Matrix};
-pub use nmf_ref::{nmf, nmf_from, NmfFit};
-pub use rescal_ref::{rescal, rescal_relative_error, RescalFit};
-pub use scores::{davies_bouldin, silhouette};
+pub use nmf_ref::{nmf, nmf_from, nmf_from_with, NmfFit};
+pub use pairwise::{row_sq_norms, sq_dist_matrix, sq_dist_tile};
+pub use rescal_ref::{rescal, rescal_relative_error, rescal_with, RescalFit};
+pub use scores::{
+    davies_bouldin, davies_bouldin_oracle, davies_bouldin_with, silhouette, silhouette_oracle,
+    silhouette_with,
+};

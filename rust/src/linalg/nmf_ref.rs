@@ -1,8 +1,17 @@
 //! Pure-Rust multiplicative-update NMF — reference implementation / test
 //! oracle for the `nmf_run` HLO artifact and the native backend of the
 //! NMFk evaluator.
+//!
+//! Updates run in Gram form: the k×k Gram matrices `H·Hᵀ` / `Wᵀ·W` are
+//! computed once per iteration through the transpose-free matmuls
+//! ([`Matrix::matmul_nt_with`] / [`Matrix::matmul_tn_with`]), so no
+//! per-iteration transpose copy is materialized and every product is
+//! parallel over row blocks. The accumulation order of each output
+//! element is identical to the seed's transpose-then-multiply
+//! formulation, so fits are bitwise unchanged — at any thread budget.
 
 use super::matrix::Matrix;
+use crate::util::pool::ThreadPool;
 use crate::util::Pcg32;
 
 const EPS: f32 = 1e-9;
@@ -22,28 +31,40 @@ pub fn nmf(x: &Matrix, k: usize, iters: usize, rng: &mut Pcg32) -> NmfFit {
     nmf_from(x, w0, h0, iters)
 }
 
-/// Multiplicative updates from given initial factors.
-pub fn nmf_from(x: &Matrix, mut w: Matrix, mut h: Matrix, iters: usize) -> NmfFit {
+/// Multiplicative updates from given initial factors, single-threaded.
+pub fn nmf_from(x: &Matrix, w: Matrix, h: Matrix, iters: usize) -> NmfFit {
+    nmf_from_with(x, w, h, iters, &ThreadPool::serial())
+}
+
+/// Multiplicative updates from given initial factors; matmuls are
+/// parallel over row blocks on `pool`.
+pub fn nmf_from_with(
+    x: &Matrix,
+    mut w: Matrix,
+    mut h: Matrix,
+    iters: usize,
+    pool: &ThreadPool,
+) -> NmfFit {
     assert_eq!(w.rows, x.rows);
     assert_eq!(h.cols, x.cols);
     assert_eq!(w.cols, h.rows);
     for _ in 0..iters {
-        // W <- W * (X H^T) / (W (H H^T))
-        let ht = h.transpose();
-        let num = x.matmul(&ht);
-        let den = w.matmul(&h.matmul(&ht));
+        // W <- W ⊙ (X Hᵀ) / (W (H Hᵀ)) — H Hᵀ is k×k, built once.
+        let hht = h.matmul_nt_with(&h, pool);
+        let num = x.matmul_nt_with(&h, pool);
+        let den = w.matmul_with(&hht, pool);
         w = w
             .zip(&num, |wv, nv| wv * nv)
             .zip(&den, |wn, dv| wn / (dv + EPS));
-        // H <- H * (W^T X) / ((W^T W) H)
-        let wt = w.transpose();
-        let num = wt.matmul(x);
-        let den = wt.matmul(&w).matmul(&h);
+        // H <- H ⊙ (Wᵀ X) / ((Wᵀ W) H) — Wᵀ W is k×k, built once.
+        let wtw = w.matmul_tn_with(&w, pool);
+        let num = w.matmul_tn_with(x, pool);
+        let den = wtw.matmul_with(&h, pool);
         h = h
             .zip(&num, |hv, nv| hv * nv)
             .zip(&den, |hn, dv| hn / (dv + EPS));
     }
-    let relative_error = x.relative_error_to(&w.matmul(&h));
+    let relative_error = x.relative_error_to(&w.matmul_with(&h, pool));
     NmfFit {
         w,
         h,
@@ -90,5 +111,18 @@ mod tests {
         let fit = nmf(&ds.x, 3, 50, &mut rng);
         assert!(fit.w.data.iter().all(|&v| v >= 0.0));
         assert!(fit.h.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn fit_is_thread_budget_invariant() {
+        let mut rng = Pcg32::new(35);
+        let ds = planted_nmf(&mut rng, 45, 52, 4, 0.01);
+        let w0 = Matrix::rand_uniform(45, 4, &mut rng).map(|v| v + 0.01);
+        let h0 = Matrix::rand_uniform(4, 52, &mut rng).map(|v| v + 0.01);
+        let f1 = nmf_from_with(&ds.x, w0.clone(), h0.clone(), 40, &ThreadPool::serial());
+        let f8 = nmf_from_with(&ds.x, w0, h0, 40, &ThreadPool::new(8));
+        assert_eq!(f1.w.data, f8.w.data, "W must be bitwise budget-invariant");
+        assert_eq!(f1.h.data, f8.h.data, "H must be bitwise budget-invariant");
+        assert_eq!(f1.relative_error.to_bits(), f8.relative_error.to_bits());
     }
 }

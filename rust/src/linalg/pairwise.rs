@@ -1,0 +1,148 @@
+//! Blocked pairwise squared-distance kernels (DESIGN.md S20).
+//!
+//! Every admitted k pays an evaluation whose hot loop is pairwise
+//! Euclidean distance — silhouette (all-pairs), Davies-Bouldin and the
+//! K-means assignment (rows × centroids). The seed computed each
+//! distance point-by-point with a fresh subtract-square pass; here the
+//! row norms are precomputed once so a distance tile reduces to a
+//! GEMM-shaped inner loop,
+//!
+//! ```text
+//! d²(aᵢ, bⱼ) = ‖aᵢ‖² + ‖bⱼ‖² − 2·aᵢ·bⱼ
+//! ```
+//!
+//! with f64 accumulation (f32 products are exact in f64, so the only
+//! error is f64 summation rounding — the property suite in
+//! `rust/tests/kernel_equivalence.rs` holds the tiles to the textbook
+//! oracle within 1e-9). Tiles of [`TILE`] columns keep the `b` rows hot
+//! in cache while a row block streams through; callers parallelize over
+//! row blocks with a [`ThreadPool`].
+
+use super::matrix::Matrix;
+use crate::util::pool::ThreadPool;
+
+/// Column-block width of a distance tile: [`TILE`] rows of `b` stay
+/// cache-resident while a block of `a` rows streams against them.
+pub const TILE: usize = 128;
+
+/// Squared L2 norm of every row, f64-accumulated.
+pub fn row_sq_norms(x: &Matrix) -> Vec<f64> {
+    (0..x.rows)
+        .map(|i| {
+            x.row(i)
+                .iter()
+                .map(|&v| v as f64 * v as f64)
+                .sum::<f64>()
+        })
+        .collect()
+}
+
+/// One distance tile: fills `out[(i - i0) * (j1 - j0) + (j - j0)]` with
+/// `d²(a_i, b_j)` for `i ∈ [i0, i1)`, `j ∈ [j0, j1)`. `na`/`nb` are the
+/// precomputed [`row_sq_norms`] of `a`/`b`. Results are clamped at 0 so
+/// cancellation never produces a tiny negative square.
+#[allow(clippy::too_many_arguments)]
+pub fn sq_dist_tile(
+    a: &Matrix,
+    i0: usize,
+    i1: usize,
+    na: &[f64],
+    b: &Matrix,
+    j0: usize,
+    j1: usize,
+    nb: &[f64],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(a.cols, b.cols, "pairwise: dimension mismatch");
+    let w = j1 - j0;
+    debug_assert!(out.len() >= (i1 - i0) * w, "tile buffer too small");
+    for i in i0..i1 {
+        let arow = a.row(i);
+        let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
+        for (o, j) in orow.iter_mut().zip(j0..j1) {
+            let brow = b.row(j);
+            let mut dot = 0.0f64;
+            for (&x, &y) in arow.iter().zip(brow) {
+                dot += x as f64 * y as f64;
+            }
+            *o = (na[i] + nb[j] - 2.0 * dot).max(0.0);
+        }
+    }
+}
+
+/// Full `a.rows × b.rows` squared-distance matrix (row-major),
+/// parallel over `a` row blocks.
+pub fn sq_dist_matrix(a: &Matrix, b: &Matrix, pool: &ThreadPool) -> Vec<f64> {
+    let (m, n) = (a.rows, b.rows);
+    let na = row_sq_norms(a);
+    let nb = row_sq_norms(b);
+    let mut out = vec![0.0f64; m * n];
+    // Work-size guard: don't spawn for matrices a single core chews
+    // through faster than a thread launch.
+    let pool = pool.capped(m / 32);
+    pool.for_slices_mut(&mut out, n, |_, row0, piece| {
+        let rows = piece.len() / n.max(1);
+        for jb in (0..n).step_by(TILE) {
+            let je = (jb + TILE).min(n);
+            for r in 0..rows {
+                let i = row0 + r;
+                // The tile writes its row contiguously: target the
+                // output slice directly, no staging copy.
+                sq_dist_tile(a, i, i + 1, &na, b, jb, je, &nb, &mut piece[r * n + jb..r * n + je]);
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn tile_matches_rowwise_oracle() {
+        let mut rng = Pcg32::new(91);
+        let a = Matrix::rand_normal(17, 5, &mut rng);
+        let b = Matrix::rand_normal(9, 5, &mut rng);
+        let na = row_sq_norms(&a);
+        let nb = row_sq_norms(&b);
+        let mut out = vec![0.0f64; 17 * 9];
+        sq_dist_tile(&a, 0, 17, &na, &b, 0, 9, &nb, &mut out);
+        for i in 0..17 {
+            for j in 0..9 {
+                let want = Matrix::row_sq_dist(&a, i, &b, j);
+                let got = out[i * 9 + j];
+                assert!(
+                    (want - got).abs() < 1e-9,
+                    "d²({i},{j}): oracle {want} vs tile {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn self_distance_is_exactly_zero() {
+        let mut rng = Pcg32::new(92);
+        let a = Matrix::rand_uniform(30, 7, &mut rng).map(|v| v * 100.0);
+        let na = row_sq_norms(&a);
+        let mut out = vec![0.0f64; 30 * 30];
+        sq_dist_tile(&a, 0, 30, &na, &a, 0, 30, &na, &mut out);
+        for i in 0..30 {
+            assert_eq!(out[i * 30 + i], 0.0, "d²({i},{i}) must be exactly 0");
+            for j in 0..30 {
+                assert!(out[i * 30 + j] >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_form_is_thread_invariant() {
+        let mut rng = Pcg32::new(93);
+        let a = Matrix::rand_normal(150, 6, &mut rng);
+        let b = Matrix::rand_normal(40, 6, &mut rng);
+        let d1 = sq_dist_matrix(&a, &b, &ThreadPool::serial());
+        let d8 = sq_dist_matrix(&a, &b, &ThreadPool::new(8));
+        assert_eq!(d1, d8, "per-element arithmetic is chunk-independent");
+    }
+}

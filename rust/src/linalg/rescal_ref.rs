@@ -3,9 +3,13 @@
 //!
 //! Factorizes a stack of relational slices T_s ≈ A R_s Aᵀ with
 //! non-negative A:(n,k) and R_s:(k,k) — the model behind pyDRESCALk
-//! (paper ref [8]).
+//! (paper ref [8]). Products run through the transpose-free matmuls of
+//! [`Matrix`] (same accumulation order as the seed's explicit
+//! transposes, so fits are bitwise unchanged), parallel over row blocks
+//! on a [`ThreadPool`].
 
 use super::matrix::Matrix;
+use crate::util::pool::ThreadPool;
 use crate::util::Pcg32;
 
 const EPS: f32 = 1e-9;
@@ -18,15 +22,32 @@ pub struct RescalFit {
     pub relative_error: f64,
 }
 
-/// Multiplicative non-negative RESCAL, rank `k`.
+/// Multiplicative non-negative RESCAL, rank `k`, single-threaded.
 pub fn rescal(t: &[Matrix], k: usize, iters: usize, rng: &mut Pcg32) -> RescalFit {
+    rescal_with(t, k, iters, rng, &ThreadPool::serial())
+}
+
+/// Multiplicative non-negative RESCAL, rank `k`, parallel on `pool`.
+pub fn rescal_with(
+    t: &[Matrix],
+    k: usize,
+    iters: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+) -> RescalFit {
     let n = t[0].rows;
     let mut a = Matrix::rand_uniform(n, k, rng).map(|v| v + 0.01);
     let mut r: Vec<Matrix> =
         (0..t.len()).map(|_| Matrix::rand_uniform(k, k, rng).map(|v| v + 0.01)).collect();
     for _ in 0..iters {
-        a = a_update(t, &a, &r);
-        r = r.iter().enumerate().map(|(s, rs)| r_update(&t[s], &a, rs)).collect();
+        a = a_update(t, &a, &r, pool);
+        // AᵀA is constant across the per-slice R updates: build it once.
+        let g = a.matmul_tn_with(&a, pool);
+        r = r
+            .iter()
+            .enumerate()
+            .map(|(s, rs)| r_update(&t[s], &a, &g, rs, pool))
+            .collect();
     }
     let relative_error = rescal_relative_error(t, &a, &r);
     RescalFit {
@@ -36,40 +57,38 @@ pub fn rescal(t: &[Matrix], k: usize, iters: usize, rng: &mut Pcg32) -> RescalFi
     }
 }
 
-fn a_update(t: &[Matrix], a: &Matrix, r: &[Matrix]) -> Matrix {
-    let g = a.transpose().matmul(a); // (k,k)
+fn a_update(t: &[Matrix], a: &Matrix, r: &[Matrix], pool: &ThreadPool) -> Matrix {
+    let g = a.matmul_tn_with(a, pool); // AᵀA (k,k)
     let mut num = Matrix::zeros(a.rows, a.cols);
     let mut den_inner = Matrix::zeros(a.cols, a.cols);
     for (s, rs) in r.iter().enumerate() {
-        let ar = a.matmul(rs); // A R_s
-        let art = a.matmul(&rs.transpose()); // A R_s^T
+        let ar = a.matmul_with(rs, pool); // A R_s
+        let art = a.matmul_nt_with(rs, pool); // A R_sᵀ
         num = num
-            .zip(&t[s].matmul(&art), |x, y| x + y)
-            .zip(&t[s].transpose().matmul(&ar), |x, y| x + y);
-        let rgr = rs.matmul(&g).matmul(&rs.transpose());
-        let rtgr = rs.transpose().matmul(&g).matmul(rs);
+            .zip(&t[s].matmul_with(&art, pool), |x, y| x + y)
+            .zip(&t[s].matmul_tn_with(&ar, pool), |x, y| x + y); // T_sᵀ (A R_s)
+        let rgr = rs.matmul_with(&g, pool).matmul_nt_with(rs, pool); // R_s G R_sᵀ
+        let rtgr = rs.matmul_tn_with(&g, pool).matmul_with(rs, pool); // R_sᵀ G R_s
         den_inner = den_inner.zip(&rgr, |x, y| x + y).zip(&rtgr, |x, y| x + y);
     }
-    let den = a.matmul(&den_inner);
+    let den = a.matmul_with(&den_inner, pool);
     a.zip(&num, |av, nv| av * nv)
         .zip(&den, |an, dv| an / (dv + EPS))
 }
 
-fn r_update(ts: &Matrix, a: &Matrix, rs: &Matrix) -> Matrix {
-    let at = a.transpose();
-    let g = at.matmul(a);
-    let num = at.matmul(ts).matmul(a);
-    let den = g.matmul(rs).matmul(&g);
+/// One multiplicative R_s update; `g` is the precomputed AᵀA Gram.
+fn r_update(ts: &Matrix, a: &Matrix, g: &Matrix, rs: &Matrix, pool: &ThreadPool) -> Matrix {
+    let num = a.matmul_tn_with(ts, pool).matmul_with(a, pool); // Aᵀ T_s A
+    let den = g.matmul_with(rs, pool).matmul_with(g, pool);
     rs.zip(&num, |rv, nv| rv * nv)
         .zip(&den, |rn, dv| rn / (dv + EPS))
 }
 
 /// ||T - A R Aᵀ||_F / ||T||_F over the slice stack.
 pub fn rescal_relative_error(t: &[Matrix], a: &Matrix, r: &[Matrix]) -> f64 {
-    let at = a.transpose();
     let (mut diff, mut norm) = (0.0f64, 0.0f64);
     for (s, rs) in r.iter().enumerate() {
-        let recon = a.matmul(rs).matmul(&at);
+        let recon = a.matmul(rs).matmul_nt(a); // (A R_s) Aᵀ
         for (x, y) in t[s].data.iter().zip(&recon.data) {
             diff += ((x - y) as f64).powi(2);
             norm += (*x as f64).powi(2);
@@ -106,5 +125,17 @@ mod tests {
         let fit = rescal(&t.slices, 2, 50, &mut rng);
         assert!(fit.a.data.iter().all(|&v| v >= 0.0));
         assert!(fit.r.iter().all(|m| m.data.iter().all(|&v| v >= 0.0)));
+    }
+
+    #[test]
+    fn fit_is_thread_budget_invariant() {
+        let mut rng1 = Pcg32::new(44);
+        let t = planted_rescal(&mut rng1, 2, 18, 3, 0.01);
+        let mut fit_rng1 = Pcg32::with_stream(7, 3);
+        let mut fit_rng8 = Pcg32::with_stream(7, 3);
+        let f1 = rescal_with(&t.slices, 3, 30, &mut fit_rng1, &ThreadPool::serial());
+        let f8 = rescal_with(&t.slices, 3, 30, &mut fit_rng8, &ThreadPool::new(8));
+        assert_eq!(f1.a.data, f8.a.data);
+        assert_eq!(f1.relative_error.to_bits(), f8.relative_error.to_bits());
     }
 }

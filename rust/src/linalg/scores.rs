@@ -1,16 +1,184 @@
-//! Pure-Rust silhouette and Davies-Bouldin scorers.
+//! Silhouette and Davies-Bouldin scorers.
 //!
-//! These are (a) the numeric oracles the integration tests hold the HLO
-//! artifacts against, and (b) the scorers for the host-side NMFk
-//! perturbation-clustering step (tiny data, not worth a PJRT round trip).
+//! Two implementations of each metric live here on purpose:
+//!
+//! * [`silhouette_with`] / [`davies_bouldin_with`] — the production
+//!   path: flat-indexed single-pass accumulation over the blocked
+//!   distance tiles of [`super::pairwise`], parallel over row blocks on
+//!   a [`ThreadPool`]. No per-sample maps, no re-derived distances.
+//! * [`silhouette_oracle`] / [`davies_bouldin_oracle`] — the retained
+//!   textbook O(n²) formulations (the seed implementation). They stay
+//!   as the numeric oracles: the property suite in
+//!   `rust/tests/kernel_equivalence.rs` holds the tiled path to them
+//!   within 1e-9 across shapes, label patterns and thread budgets.
+//!   (The HLO artifact tests compare against the production
+//!   [`silhouette`] / [`davies_bouldin`], which the property suite in
+//!   turn anchors to these oracles.)
+//!
+//! [`silhouette`] / [`davies_bouldin`] keep the original signatures and
+//! run the tiled path on a single thread.
 
 use super::matrix::Matrix;
+use super::pairwise::{row_sq_norms, sq_dist_tile, TILE};
+use crate::util::pool::ThreadPool;
 
 /// Mean silhouette coefficient of a labeled sample set (maximize).
-///
-/// Textbook O(n²) formulation — matches `model.silhouette` in the L2
-/// graph and sklearn's `silhouette_score` (Euclidean, singleton ⇒ 0).
+/// Single-threaded convenience wrapper over [`silhouette_with`].
 pub fn silhouette(x: &Matrix, labels: &[usize]) -> f64 {
+    silhouette_with(x, labels, &ThreadPool::serial())
+}
+
+/// Mean silhouette coefficient (maximize), tiled + parallel.
+///
+/// Matches sklearn's `silhouette_score` (Euclidean; singleton ⇒ 0) and
+/// [`silhouette_oracle`] to f64 rounding. One pass over the n×n
+/// distance tiles accumulates the n×C cluster-distance-sum matrix
+/// (`sums[i][c] = Σ_{j: label_j = c} d(i, j)`); per-sample a/b terms
+/// then read straight out of that matrix. The accumulation order over
+/// j is ascending for every i regardless of tiling or thread budget,
+/// so the score is thread-count invariant bit-for-bit.
+pub fn silhouette_with(x: &Matrix, labels: &[usize], pool: &ThreadPool) -> f64 {
+    let n = x.rows;
+    assert_eq!(labels.len(), n);
+    if n == 0 {
+        return 0.0;
+    }
+    let clusters: Vec<usize> = {
+        let mut c = labels.to_vec();
+        c.sort_unstable();
+        c.dedup();
+        c
+    };
+    let c = clusters.len();
+    if c < 2 {
+        return 0.0;
+    }
+    // Flat-index labels into 0..c (clusters is sorted).
+    let lab: Vec<usize> = labels
+        .iter()
+        .map(|l| clusters.binary_search(l).expect("label in cluster set"))
+        .collect();
+    let mut counts = vec![0usize; c];
+    for &l in &lab {
+        counts[l] += 1;
+    }
+
+    let norms = row_sq_norms(x);
+    let mut sums = vec![0.0f64; n * c];
+    let pool = pool.capped(n / 64);
+    pool.for_slices_mut(&mut sums, c, |_, row0, piece| {
+        let rows = piece.len() / c;
+        let mut tile = [0.0f64; TILE];
+        for jb in (0..n).step_by(TILE) {
+            let je = (jb + TILE).min(n);
+            let w = je - jb;
+            for r in 0..rows {
+                let i = row0 + r;
+                sq_dist_tile(x, i, i + 1, &norms, x, jb, je, &norms, &mut tile[..w]);
+                let srow = &mut piece[r * c..(r + 1) * c];
+                for (t, &l) in tile[..w].iter().zip(&lab[jb..je]) {
+                    // d(i,i) is exactly 0.0, so no self-skip is needed.
+                    srow[l] += t.sqrt();
+                }
+            }
+        }
+    });
+
+    let mut total = 0.0;
+    for i in 0..n {
+        let own = lab[i];
+        if counts[own] <= 1 {
+            continue; // silhouette of a singleton is 0
+        }
+        let srow = &sums[i * c..(i + 1) * c];
+        let a = srow[own] / (counts[own] - 1) as f64;
+        let mut b = f64::INFINITY;
+        for (cl, &s) in srow.iter().enumerate() {
+            if cl != own {
+                b = b.min(s / counts[cl] as f64);
+            }
+        }
+        total += (b - a) / a.max(b).max(1e-12);
+    }
+    total / n as f64
+}
+
+/// Davies-Bouldin index (minimize). Single-threaded wrapper over
+/// [`davies_bouldin_with`].
+pub fn davies_bouldin(x: &Matrix, centroids: &Matrix, labels: &[usize]) -> f64 {
+    davies_bouldin_with(x, centroids, labels, &ThreadPool::serial())
+}
+
+/// Davies-Bouldin index (minimize), tiled + parallel: the n×k
+/// point-to-centroid distances stream through the blocked kernel in
+/// fixed-size row chunks whose partial sums merge in chunk order, so
+/// the score is identical under every thread budget.
+pub fn davies_bouldin_with(
+    x: &Matrix,
+    centroids: &Matrix,
+    labels: &[usize],
+    pool: &ThreadPool,
+) -> f64 {
+    let n = x.rows;
+    let k = centroids.rows;
+    assert_eq!(labels.len(), n);
+    if k == 0 {
+        return 0.0;
+    }
+    let nx = row_sq_norms(x);
+    let nc = row_sq_norms(centroids);
+
+    // Per-cluster scatter: mean distance of members to their centroid.
+    const CHUNK: usize = 256;
+    let pool = pool.capped(n / 64);
+    let partials = pool.map_chunks(n, CHUNK, |s, e| {
+        let mut sums = vec![0.0f64; k];
+        let mut cnts = vec![0usize; k];
+        let mut d = [0.0f64; 1];
+        for i in s..e {
+            let l = labels[i];
+            sq_dist_tile(x, i, i + 1, &nx, centroids, l, l + 1, &nc, &mut d);
+            sums[l] += d[0].sqrt();
+            cnts[l] += 1;
+        }
+        (sums, cnts)
+    });
+    let mut s = vec![0.0f64; k];
+    let mut counts = vec![0usize; k];
+    for (ps, pc) in partials {
+        for c in 0..k {
+            s[c] += ps[c];
+            counts[c] += pc[c];
+        }
+    }
+
+    let active: Vec<usize> = (0..k).filter(|&c| counts[c] > 0).collect();
+    if active.len() < 2 {
+        return 0.0;
+    }
+    for &c in &active {
+        s[c] /= counts[c] as f64;
+    }
+    // Centroid-centroid separations: one k×k tile.
+    let mut m = vec![0.0f64; k * k];
+    sq_dist_tile(centroids, 0, k, &nc, centroids, 0, k, &nc, &mut m);
+    let mut db = 0.0;
+    for &i in &active {
+        let mut worst: f64 = 0.0;
+        for &j in &active {
+            if i == j {
+                continue;
+            }
+            worst = worst.max((s[i] + s[j]) / m[i * k + j].sqrt().max(1e-12));
+        }
+        db += worst;
+    }
+    db / active.len() as f64
+}
+
+/// Textbook O(n²) silhouette — the seed implementation, retained as the
+/// numeric oracle for the tiled kernel and the HLO artifacts.
+pub fn silhouette_oracle(x: &Matrix, labels: &[usize]) -> f64 {
     let n = x.rows;
     assert_eq!(labels.len(), n);
     if n == 0 {
@@ -59,9 +227,9 @@ pub fn silhouette(x: &Matrix, labels: &[usize]) -> f64 {
     total / n as f64
 }
 
-/// Davies-Bouldin index (minimize): mean over clusters of the worst
-/// (S_i + S_j) / M_ij ratio.
-pub fn davies_bouldin(x: &Matrix, centroids: &Matrix, labels: &[usize]) -> f64 {
+/// Textbook Davies-Bouldin — the seed implementation, retained as the
+/// numeric oracle for the tiled kernel and the HLO artifacts.
+pub fn davies_bouldin_oracle(x: &Matrix, centroids: &Matrix, labels: &[usize]) -> f64 {
     let k = centroids.rows;
     let mut s = vec![0.0f64; k];
     let mut counts = vec![0usize; k];
@@ -133,6 +301,7 @@ mod tests {
     fn silhouette_single_cluster_is_zero() {
         let (x, _, _) = two_blobs();
         assert_eq!(silhouette(&x, &vec![0; 40]), 0.0);
+        assert_eq!(silhouette_oracle(&x, &vec![0; 40]), 0.0);
     }
 
     #[test]
@@ -140,6 +309,29 @@ mod tests {
         let (x, labels, _) = two_blobs();
         let s = silhouette(&x, &labels);
         assert!((-1.0..=1.0).contains(&s));
+    }
+
+    #[test]
+    fn tiled_silhouette_matches_oracle_here() {
+        let (x, labels, _) = two_blobs();
+        let want = silhouette_oracle(&x, &labels);
+        for threads in [1usize, 2, 8] {
+            let got = silhouette_with(&x, &labels, &ThreadPool::new(threads));
+            assert!(
+                (want - got).abs() < 1e-9,
+                "threads={threads}: oracle {want} vs tiled {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_silhouette_handles_sparse_label_ids() {
+        // Non-contiguous label values exercise the flat re-indexing.
+        let (x, labels, _) = two_blobs();
+        let sparse: Vec<usize> = labels.iter().map(|&l| l * 100 + 7).collect();
+        let want = silhouette_oracle(&x, &sparse);
+        let got = silhouette(&x, &sparse);
+        assert!((want - got).abs() < 1e-9, "{want} vs {got}");
     }
 
     #[test]
@@ -158,5 +350,19 @@ mod tests {
     fn davies_bouldin_single_active_cluster_zero() {
         let (x, _, c) = two_blobs();
         assert_eq!(davies_bouldin(&x, &c, &vec![0; 40]), 0.0);
+        assert_eq!(davies_bouldin_oracle(&x, &c, &vec![0; 40]), 0.0);
+    }
+
+    #[test]
+    fn tiled_davies_bouldin_matches_oracle_here() {
+        let (x, labels, c) = two_blobs();
+        let want = davies_bouldin_oracle(&x, &c, &labels);
+        for threads in [1usize, 2, 8] {
+            let got = davies_bouldin_with(&x, &c, &labels, &ThreadPool::new(threads));
+            assert!(
+                (want - got).abs() < 1e-9,
+                "threads={threads}: oracle {want} vs tiled {got}"
+            );
+        }
     }
 }

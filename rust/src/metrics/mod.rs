@@ -67,6 +67,8 @@ impl SweepSummary {
 
     /// Mean percent-of-K-visited across the sweep (the paper's headline
     /// "algorithms visit the following percentages of K" numbers).
+    /// Non-finite percentages (a poisoned NaN score upstream) are
+    /// dropped rather than NaN-ing the whole summary.
     pub fn mean_percent_visited(&self, method: &str, order: &str) -> f64 {
         let sel: Vec<f64> = self
             .rows
@@ -74,7 +76,7 @@ impl SweepSummary {
             .filter(|r| r.method == method && r.order == order)
             .map(MethodRow::percent_visited)
             .collect();
-        crate::util::mean(&sel)
+        crate::util::mean(&crate::util::finite(&sel))
     }
 
     /// RMSE of recovered k vs k_true (paper §IV-A K-means accuracy).

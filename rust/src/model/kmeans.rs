@@ -12,7 +12,7 @@ use crate::runtime::{
 };
 #[cfg(feature = "pjrt")]
 use crate::util::error::{ensure, Result};
-use crate::util::Pcg32;
+use crate::util::{Pcg32, ThreadPool};
 
 #[cfg(feature = "pjrt")]
 use super::store::SharedStore;
@@ -41,6 +41,9 @@ pub struct KMeansEvaluator {
     #[cfg(feature = "pjrt")]
     store: Option<Arc<SharedStore>>,
     seed: u64,
+    /// Intra-evaluation thread budget for the native kernels (§3.2);
+    /// serial unless [`KMeansEvaluator::with_eval_threads`] raises it.
+    pool: ThreadPool,
 }
 
 impl KMeansEvaluator {
@@ -70,6 +73,7 @@ impl KMeansEvaluator {
             backend: Backend::Hlo,
             store: Some(store),
             seed,
+            pool: ThreadPool::serial(),
         })
     }
 
@@ -85,11 +89,21 @@ impl KMeansEvaluator {
             #[cfg(feature = "pjrt")]
             store: None,
             seed,
+            pool: ThreadPool::serial(),
         }
     }
 
     pub fn with_restarts(mut self, n: usize) -> Self {
         self.n_init = n.max(1);
+        self
+    }
+
+    /// Intra-evaluation thread budget for the native kernels. Use
+    /// `util::pool::eval_thread_budget` (or
+    /// `config::ExperimentConfig::resolved_eval_threads`) so engine
+    /// workers × eval threads never oversubscribe the machine.
+    pub fn with_eval_threads(mut self, threads: usize) -> Self {
+        self.pool = ThreadPool::new(threads);
         self
     }
 
@@ -102,12 +116,18 @@ impl KMeansEvaluator {
         let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | init as u64);
         match self.backend {
             Backend::Native => {
-                let fit = linalg::kmeans(&self.x, k, self.bursts * 15, &mut rng);
+                let fit =
+                    linalg::kmeans_with(&self.x, k, self.bursts * 15, &mut rng, &self.pool);
                 let score = match self.scoring {
-                    KMeansScoring::Silhouette => linalg::silhouette(&self.x, &fit.labels),
-                    KMeansScoring::DaviesBouldin => {
-                        linalg::davies_bouldin(&self.x, &fit.centroids, &fit.labels)
+                    KMeansScoring::Silhouette => {
+                        linalg::silhouette_with(&self.x, &fit.labels, &self.pool)
                     }
+                    KMeansScoring::DaviesBouldin => linalg::davies_bouldin_with(
+                        &self.x,
+                        &fit.centroids,
+                        &fit.labels,
+                        &self.pool,
+                    ),
                 };
                 (fit.inertia, score)
             }
@@ -122,8 +142,8 @@ impl KMeansEvaluator {
     fn fit_once_hlo(&self, k: usize, rng: &mut Pcg32) -> Result<(f64, f64)> {
         let store = self.store.as_ref().expect("HLO backend without store");
         let d = self.x.cols;
-        // Farthest-first seeding on the host (cheap), padded to K_MAX.
-        let seeded = linalg::kmeans(&self.x, k, 1, rng);
+        // k-means++ seeding on the host (cheap), padded to K_MAX.
+        let seeded = linalg::kmeans_with(&self.x, k, 1, rng, &self.pool);
         let mut c = Matrix::zeros(self.k_max, d);
         c.data[..k * d].copy_from_slice(&seeded.centroids.data);
 
@@ -219,6 +239,18 @@ mod tests {
         let s_over = ev.evaluate(9);
         assert!(s_true > 0.75, "{s_true}");
         assert!(s_over < s_true, "{s_over} !< {s_true}");
+    }
+
+    #[test]
+    fn eval_threads_do_not_change_scores() {
+        let mut rng = Pcg32::new(214);
+        let ds = gaussian_blobs(&mut rng, 40, 4, 6, 10.0, 0.4);
+        let ev1 =
+            KMeansEvaluator::native(ds.x.clone(), 12, KMeansScoring::DaviesBouldin, 3);
+        let ev8 = KMeansEvaluator::native(ds.x, 12, KMeansScoring::DaviesBouldin, 3)
+            .with_eval_threads(8);
+        assert_eq!(ev1.evaluate(4).to_bits(), ev8.evaluate(4).to_bits());
+        assert_eq!(ev1.evaluate(7).to_bits(), ev8.evaluate(7).to_bits());
     }
 
     #[test]

@@ -15,12 +15,12 @@
 use std::sync::Arc;
 
 use crate::coordinator::KScorer;
-use crate::linalg::{nmf_from, perturbation_silhouette, Matrix};
+use crate::linalg::{nmf_from_with, perturbation_silhouette, Matrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32, literal_from_matrix, literal_to_matrix, rank_mask};
 #[cfg(feature = "pjrt")]
 use crate::util::error::{ensure, Result};
-use crate::util::Pcg32;
+use crate::util::{Pcg32, ThreadPool};
 
 #[cfg(feature = "pjrt")]
 use super::store::SharedStore;
@@ -41,6 +41,8 @@ pub struct NmfkEvaluator {
     #[cfg(feature = "pjrt")]
     store: Option<Arc<SharedStore>>,
     seed: u64,
+    /// Intra-evaluation thread budget for the native kernels (§3.2).
+    pool: ThreadPool,
 }
 
 impl NmfkEvaluator {
@@ -65,6 +67,7 @@ impl NmfkEvaluator {
             backend: Backend::Hlo,
             store: Some(store),
             seed,
+            pool: ThreadPool::serial(),
         })
     }
 
@@ -80,7 +83,17 @@ impl NmfkEvaluator {
             #[cfg(feature = "pjrt")]
             store: None,
             seed,
+            pool: ThreadPool::serial(),
         }
+    }
+
+    /// Intra-evaluation thread budget for the native NMF kernels. Size
+    /// it with `util::pool::eval_thread_budget` so engine workers ×
+    /// eval threads never oversubscribe the machine (§3.2). Scores are
+    /// bitwise identical under every budget.
+    pub fn with_eval_threads(mut self, threads: usize) -> Self {
+        self.pool = ThreadPool::new(threads);
+        self
     }
 
     pub fn with_perturbations(mut self, p: usize) -> Self {
@@ -116,7 +129,7 @@ impl NmfkEvaluator {
             Backend::Native => {
                 let w0 = Matrix::rand_uniform(self.x.rows, k, &mut rng).map(|v| v + 0.01);
                 let h0 = Matrix::rand_uniform(k, self.x.cols, &mut rng).map(|v| v + 0.01);
-                let fit = nmf_from(&xp, w0, h0, self.bursts * 25);
+                let fit = nmf_from_with(&xp, w0, h0, self.bursts * 25, &self.pool);
                 fit.w
             }
             #[cfg(feature = "pjrt")]
@@ -210,6 +223,15 @@ mod tests {
         let ev = NmfkEvaluator::native(ds.x.clone(), 8, 9);
         let ev2 = NmfkEvaluator::native(ds.x, 8, 9);
         assert_eq!(ev.evaluate(3), ev2.evaluate(3));
+    }
+
+    #[test]
+    fn eval_threads_do_not_change_scores() {
+        let mut rng = Pcg32::new(204);
+        let ds = planted_nmf(&mut rng, 40, 44, 3, 0.01);
+        let ev1 = NmfkEvaluator::native(ds.x.clone(), 8, 9);
+        let ev8 = NmfkEvaluator::native(ds.x, 8, 9).with_eval_threads(8);
+        assert_eq!(ev1.evaluate(3).to_bits(), ev8.evaluate(3).to_bits());
     }
 
     #[test]

@@ -6,12 +6,12 @@
 use std::sync::Arc;
 
 use crate::coordinator::KScorer;
-use crate::linalg::{perturbation_silhouette, rescal, Matrix};
+use crate::linalg::{perturbation_silhouette, rescal_with, Matrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32, rank_mask};
 #[cfg(feature = "pjrt")]
 use crate::util::error::{ensure, Result};
-use crate::util::Pcg32;
+use crate::util::{Pcg32, ThreadPool};
 
 #[cfg(feature = "pjrt")]
 use super::store::SharedStore;
@@ -30,6 +30,8 @@ pub struct RescalEvaluator {
     #[cfg(feature = "pjrt")]
     store: Option<Arc<SharedStore>>,
     seed: u64,
+    /// Intra-evaluation thread budget for the native kernels (§3.2).
+    pool: ThreadPool,
 }
 
 impl RescalEvaluator {
@@ -52,6 +54,7 @@ impl RescalEvaluator {
             backend: Backend::Hlo,
             store: Some(store),
             seed,
+            pool: ThreadPool::serial(),
         })
     }
 
@@ -67,7 +70,15 @@ impl RescalEvaluator {
             #[cfg(feature = "pjrt")]
             store: None,
             seed,
+            pool: ThreadPool::serial(),
         }
+    }
+
+    /// Intra-evaluation thread budget for the native RESCAL kernels
+    /// (§3.2); scores are bitwise identical under every budget.
+    pub fn with_eval_threads(mut self, threads: usize) -> Self {
+        self.pool = ThreadPool::new(threads);
+        self
     }
 
     pub fn with_perturbations(mut self, p: usize) -> Self {
@@ -99,7 +110,7 @@ impl RescalEvaluator {
         let tp = self.resampled(&mut rng);
         match self.backend {
             Backend::Native => {
-                let fit = rescal(&tp, k, self.bursts * 10, &mut rng);
+                let fit = rescal_with(&tp, k, self.bursts * 10, &mut rng, &self.pool);
                 fit.a
             }
             #[cfg(feature = "pjrt")]

@@ -8,11 +8,13 @@
 
 pub mod error;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
 pub use error::{Context, Error, Result};
+pub use pool::ThreadPool;
 pub use rng::Pcg32;
-pub use stats::{mean, median, percentile, rmse, std_dev};
+pub use stats::{finite, mean, median, percentile, rmse, std_dev};
 pub use timer::Stopwatch;

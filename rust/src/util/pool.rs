@@ -1,0 +1,242 @@
+//! Scoped, zero-dependency data-parallel thread pool (DESIGN.md S19).
+//!
+//! The evaluation kernels (`linalg/pairwise`, tiled scorers, the
+//! reference-model matmuls) are data-parallel over row blocks; this
+//! module gives them a chunked parallel-for built only on
+//! `std::thread::scope`. Threads are spawned per call and joined before
+//! return, so borrowed inputs need no `'static` bound and there is no
+//! persistent worker state to manage or poison.
+//!
+//! Determinism contract: chunk boundaries passed to
+//! [`ThreadPool::for_chunks`] / [`ThreadPool::map_chunks`] depend only
+//! on `(len, chunk)`, never on the thread count, and `map_chunks`
+//! returns results in chunk order — so a caller that folds the partials
+//! serially gets the same floating-point result under every thread
+//! budget. [`ThreadPool::for_slices_mut`] splits by thread count, but
+//! every element is produced by exactly one closure invocation, so any
+//! kernel whose per-element arithmetic is independent of its chunk
+//! (all of ours) is also budget-invariant.
+//!
+//! Oversubscription rule (§3.2): engine workers × intra-eval threads
+//! must not exceed the machine; [`eval_thread_budget`] implements the
+//! division and `config::ExperimentConfig::resolved_eval_threads` /
+//! `bleed search --eval-threads` plumb it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A thread budget for chunked parallel-for over slices.
+#[derive(Debug, Clone)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with a fixed thread budget (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Single-threaded pool: every `for_*` runs inline, no spawns.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Pool sized to the host's available parallelism.
+    pub fn auto() -> Self {
+        Self::new(available_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// This budget bounded to at most `cap` threads. Kernels pass
+    /// `work / MIN_WORK_PER_THREAD` so tiny inputs never pay a spawn.
+    pub fn capped(&self, cap: usize) -> ThreadPool {
+        ThreadPool::new(self.threads.min(cap.max(1)))
+    }
+
+    /// Chunked parallel-for over `0..len`: `f(chunk_index, start, end)`
+    /// for every chunk `[start, end)` of size `chunk` (last one ragged).
+    /// Chunks are claimed from an atomic cursor, so `f` must not depend
+    /// on which worker runs a chunk (ours never do).
+    pub fn for_chunks(&self, len: usize, chunk: usize, f: impl Fn(usize, usize, usize) + Sync) {
+        if len == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let n_chunks = len.div_ceil(chunk);
+        let workers = self.threads.min(n_chunks);
+        if workers <= 1 {
+            for ci in 0..n_chunks {
+                let s = ci * chunk;
+                f(ci, s, (s + chunk).min(len));
+            }
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        let drain = |cursor: &AtomicUsize| loop {
+            let ci = cursor.fetch_add(1, Ordering::Relaxed);
+            if ci >= n_chunks {
+                break;
+            }
+            let s = ci * chunk;
+            f(ci, s, (s + chunk).min(len));
+        };
+        std::thread::scope(|scope| {
+            for _ in 0..workers - 1 {
+                scope.spawn(|| drain(&cursor));
+            }
+            // The caller's thread is worker 0.
+            drain(&cursor);
+        });
+    }
+
+    /// Chunked parallel map: one `T` per chunk, returned **in chunk
+    /// order** so the caller's serial fold is thread-count invariant.
+    pub fn map_chunks<T: Send>(
+        &self,
+        len: usize,
+        chunk: usize,
+        f: impl Fn(usize, usize) -> T + Sync,
+    ) -> Vec<T> {
+        if len == 0 {
+            return Vec::new();
+        }
+        let chunk = chunk.max(1);
+        let n_chunks = len.div_ceil(chunk);
+        let slots: Vec<Mutex<Option<T>>> = (0..n_chunks).map(|_| Mutex::new(None)).collect();
+        self.for_chunks(len, chunk, |ci, s, e| {
+            *slots[ci].lock().unwrap() = Some(f(s, e));
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("chunk ran"))
+            .collect()
+    }
+
+    /// Parallel-for over disjoint mutable pieces of `data`, which is
+    /// treated as `data.len() / unit` logical units (`unit` elements
+    /// each, e.g. one output row). The slice is split into at most
+    /// `threads` contiguous pieces on unit boundaries;
+    /// `f(piece_index, first_unit, piece)` runs once per piece.
+    pub fn for_slices_mut<T: Send>(
+        &self,
+        data: &mut [T],
+        unit: usize,
+        f: impl Fn(usize, usize, &mut [T]) + Sync,
+    ) {
+        let unit = unit.max(1);
+        debug_assert_eq!(data.len() % unit, 0, "data must be whole units");
+        let units = data.len() / unit;
+        if units == 0 {
+            return;
+        }
+        let workers = self.threads.min(units);
+        if workers <= 1 {
+            f(0, 0, data);
+            return;
+        }
+        let per = units.div_ceil(workers);
+        std::thread::scope(|scope| {
+            // Spawn all pieces but the last; the caller's thread works
+            // the last one instead of idling at the join.
+            let mut pieces = data.chunks_mut(per * unit).enumerate().peekable();
+            while let Some((pi, piece)) = pieces.next() {
+                let f = &f;
+                if pieces.peek().is_some() {
+                    scope.spawn(move || f(pi, pi * per, piece));
+                } else {
+                    f(pi, pi * per, piece);
+                }
+            }
+        });
+    }
+}
+
+/// The host's available hardware parallelism (1 when unknown).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Intra-evaluation thread budget: divide `total` hardware threads
+/// across `workers` concurrent engine workers so the product never
+/// oversubscribes the machine (§3.2). Always at least 1.
+pub fn eval_thread_budget(total: usize, workers: usize) -> usize {
+    (total.max(1) / workers.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn for_chunks_covers_every_index_once() {
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<AtomicU64> = (0..103).map(|_| AtomicU64::new(0)).collect();
+            pool.for_chunks(103, 10, |_, s, e| {
+                for slot in &hits[s..e] {
+                    slot.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        }
+    }
+
+    #[test]
+    fn map_chunks_returns_in_chunk_order() {
+        let pool = ThreadPool::new(4);
+        let got = pool.map_chunks(25, 10, |s, e| (s, e));
+        assert_eq!(got, vec![(0, 10), (10, 20), (20, 25)]);
+        // Serial fold over ordered chunks is thread-count invariant.
+        let serial = ThreadPool::serial().map_chunks(25, 10, |s, e| (s, e));
+        assert_eq!(got, serial);
+    }
+
+    #[test]
+    fn for_slices_mut_partitions_rows() {
+        for threads in [1usize, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut data = vec![0u64; 7 * 4]; // 7 rows of width 4
+            pool.for_slices_mut(&mut data, 4, |_, row0, piece| {
+                for (r, row) in piece.chunks_mut(4).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (row0 + r) as u64 + 1;
+                    }
+                }
+            });
+            let want: Vec<u64> = (0..7).flat_map(|r| [r + 1; 4]).collect();
+            assert_eq!(data, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_are_fine() {
+        let pool = ThreadPool::new(8);
+        pool.for_chunks(0, 16, |_, _, _| panic!("no chunks for empty input"));
+        let mut empty: Vec<f64> = Vec::new();
+        pool.for_slices_mut(&mut empty, 3, |_, _, _| panic!("no pieces"));
+        assert!(pool.map_chunks(0, 4, |_, _| 1u8).is_empty());
+        let one = pool.map_chunks(1, 1000, |s, e| e - s);
+        assert_eq!(one, vec![1]);
+    }
+
+    #[test]
+    fn budget_never_oversubscribes() {
+        assert_eq!(eval_thread_budget(16, 4), 4);
+        assert_eq!(eval_thread_budget(8, 3), 2);
+        assert_eq!(eval_thread_budget(2, 8), 1);
+        assert_eq!(eval_thread_budget(0, 0), 1);
+        assert!(ThreadPool::auto().threads() >= 1);
+        assert_eq!(ThreadPool::new(8).capped(3).threads(), 3);
+        assert_eq!(ThreadPool::new(2).capped(100).threads(), 2);
+        assert_eq!(ThreadPool::new(8).capped(0).threads(), 1);
+    }
+}

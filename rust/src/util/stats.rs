@@ -1,4 +1,18 @@
 //! Descriptive statistics used by the metrics layer and the bench harness.
+//!
+//! NaN policy: order statistics ([`median`], [`percentile`]) *filter*
+//! NaN out before ranking — a NaN score carries no order information,
+//! and the seed's `partial_cmp().unwrap()` panicked the whole run the
+//! moment one arrived. Moment statistics ([`mean`], [`std_dev`],
+//! [`rmse`]) propagate NaN as plain IEEE arithmetic does; callers
+//! aggregating possibly-poisoned scores pre-filter with [`finite`].
+
+/// Copy of `xs` with NaN/±∞ removed — aggregation callers (metrics
+/// summaries) use this so one poisoned evaluation cannot NaN a whole
+/// table.
+pub fn finite(xs: &[f64]) -> Vec<f64> {
+    xs.iter().copied().filter(|x| x.is_finite()).collect()
+}
 
 /// Arithmetic mean; 0.0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -22,21 +36,32 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
-/// Linear-interpolated percentile, p in [0, 100].
+/// Linear-interpolated percentile, p in [0, 100]. NaN inputs are
+/// filtered before ranking (see the module NaN policy); 0.0 when
+/// nothing comparable remains. The sort is `total_cmp`, so ±∞ rank at
+/// the extremes instead of panicking.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
-        v[lo]
-    } else {
-        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+        return v[lo];
     }
+    let f = rank - lo as f64;
+    if v[lo].is_infinite() && v[hi].is_infinite() && v[lo] != v[hi] {
+        // Opposite infinities have no midpoint (the lerp would produce
+        // ∞ - ∞ = NaN): take the nearer endpoint, ties toward lo.
+        return if f > 0.5 { v[hi] } else { v[lo] };
+    }
+    // Two-sided lerp rather than `lo + f*(hi-lo)`: the latter turns an
+    // infinite endpoint into inf - inf = NaN, this form keeps ±∞
+    // endpoints at ±∞.
+    (1.0 - f) * v[lo] + f * v[hi]
 }
 
 /// Root-mean-square error between paired samples (paper §IV-A reports the
@@ -86,5 +111,40 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(median(&[]), 0.0);
         assert_eq!(rmse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn nan_inputs_no_longer_panic() {
+        // Regression: the seed's partial_cmp().unwrap() panicked here.
+        let xs = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        assert_eq!(median(&xs), 2.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert_eq!(median(&[f64::NAN]), 0.0);
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 95.0), 0.0);
+    }
+
+    #[test]
+    fn infinities_rank_at_extremes() {
+        let xs = [1.0, f64::INFINITY, f64::NEG_INFINITY, 2.0];
+        assert_eq!(percentile(&xs, 0.0), f64::NEG_INFINITY);
+        assert_eq!(percentile(&xs, 100.0), f64::INFINITY);
+        // Interpolated ranks touching an infinite endpoint stay at ±∞
+        // instead of collapsing to inf - inf = NaN.
+        assert_eq!(median(&[f64::NEG_INFINITY, 1.0]), f64::NEG_INFINITY);
+        assert_eq!(median(&[1.0, f64::INFINITY]), f64::INFINITY);
+        // Opposite infinities: nearer endpoint, never NaN.
+        assert_eq!(median(&[f64::NEG_INFINITY, f64::INFINITY]), f64::NEG_INFINITY);
+        assert_eq!(
+            percentile(&[f64::NEG_INFINITY, f64::INFINITY], 75.0),
+            f64::INFINITY
+        );
+    }
+
+    #[test]
+    fn finite_filters_poison() {
+        let xs = [1.0, f64::NAN, f64::INFINITY, 3.0];
+        assert_eq!(finite(&xs), vec![1.0, 3.0]);
+        assert_eq!(mean(&finite(&xs)), 2.0);
     }
 }

@@ -1,0 +1,238 @@
+//! Property suite: the blocked/parallel evaluation kernels match the
+//! retained textbook O(n²) oracles within 1e-9 across random shapes,
+//! label patterns, and thread budgets (1, 2, 8) — and are bitwise
+//! invariant under the thread budget.
+
+use binary_bleed::linalg::{
+    davies_bouldin_oracle, davies_bouldin_with, kmeans_with, nmf_from_with, silhouette_oracle,
+    silhouette_with, sq_dist_matrix, Matrix,
+};
+use binary_bleed::testing::{cases, check};
+use binary_bleed::util::{Pcg32, ThreadPool};
+
+const TOL: f64 = 1e-9;
+const THREADS: [usize; 3] = [1, 2, 8];
+
+/// Random labeled sample set: n up to 160 (exercises multi-thread row
+/// blocks past the kernels' work-size guards), d up to 12, up to 8
+/// clusters with per-cluster offsets so label structure varies from
+/// `min_sep` (0 = unstructured noise) to well separated. Labels are
+/// sparse ids (stride 3) to exercise the flat re-indexing.
+///
+/// Davies-Bouldin cases pass `min_sep = 1`: DB divides by the
+/// centroid-centroid separation, so near-coincident noise centroids
+/// amplify the (legitimate, ~1e-13) Gram-vs-subtract rounding past any
+/// fixed tolerance — a property of the metric, not of the kernel.
+fn gen_labeled(rng: &mut Pcg32, min_sep: u64) -> (Matrix, Vec<usize>, Matrix) {
+    let n = rng.gen_range(2, 161) as usize;
+    let d = rng.gen_range(1, 13) as usize;
+    let k = (rng.gen_range(2, 9) as usize).min(n);
+    let mut x = Matrix::rand_normal(n, d, rng);
+    let sep = rng.gen_range(min_sep, 4) as f32;
+    let labels: Vec<usize> = (0..n).map(|_| rng.gen_range(0, k as u64) as usize * 3).collect();
+    for (i, &l) in labels.iter().enumerate() {
+        for c in 0..d {
+            *x.at_mut(i, c) += (l / 3) as f32 * sep;
+        }
+    }
+    // Snap coordinates to a 1/64 grid: near-duplicate points either
+    // collapse to exact duplicates (distance exactly 0 in both the
+    // Gram and subtract formulations) or stay ≥ 1/64 apart, so the
+    // √d² step cannot amplify rounding past the 1e-9 tolerance.
+    let x = x.map(|v| (v * 64.0).round() / 64.0);
+    // Centroids for Davies-Bouldin: label means (empty clusters keep
+    // zeros, exercising the active-cluster logic).
+    let mut centroids = Matrix::zeros(k, d);
+    let mut counts = vec![0usize; k];
+    for (i, &l) in labels.iter().enumerate() {
+        counts[l / 3] += 1;
+        for c in 0..d {
+            *centroids.at_mut(l / 3, c) += x.at(i, c);
+        }
+    }
+    for cl in 0..k {
+        if counts[cl] > 0 {
+            for c in 0..d {
+                *centroids.at_mut(cl, c) /= counts[cl] as f32;
+            }
+        }
+    }
+    (x, labels, centroids)
+}
+
+#[test]
+fn tiled_silhouette_matches_oracle() {
+    for &threads in &THREADS {
+        let pool = ThreadPool::new(threads);
+        check(
+            "silhouette-tiled-matches-oracle",
+            cases(30),
+            |rng| gen_labeled(rng, 0),
+            |(x, labels, _)| {
+                let want = silhouette_oracle(x, labels);
+                let got = silhouette_with(x, labels, &pool);
+                if (want - got).abs() <= TOL {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "threads={threads}: oracle {want} vs tiled {got} \
+                         (|Δ| = {:.3e})",
+                        (want - got).abs()
+                    ))
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn tiled_davies_bouldin_matches_oracle() {
+    for &threads in &THREADS {
+        let pool = ThreadPool::new(threads);
+        check(
+            "davies-bouldin-tiled-matches-oracle",
+            cases(30),
+            |rng| gen_labeled(rng, 1),
+            |(x, labels, centroids)| {
+                // DB indexes clusters by centroid row: compact ids.
+                let compact: Vec<usize> = labels.iter().map(|&l| l / 3).collect();
+                let want = davies_bouldin_oracle(x, centroids, &compact);
+                let got = davies_bouldin_with(x, centroids, &compact, &pool);
+                // Relative 1e-9: when two sampled centroids pass close
+                // together the index legitimately blows up (ratio ∝ 1/m)
+                // and both formulations scale their rounding with it.
+                if (want - got).abs() <= TOL * want.abs().max(1.0) {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "threads={threads}: oracle {want} vs tiled {got}"
+                    ))
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn pairwise_matrix_matches_rowwise_oracle() {
+    for &threads in &THREADS {
+        let pool = ThreadPool::new(threads);
+        check(
+            "pairwise-matches-row_sq_dist",
+            cases(20),
+            |rng| {
+                let m = rng.gen_range(1, 140) as usize;
+                let n = rng.gen_range(1, 60) as usize;
+                let d = rng.gen_range(1, 10) as usize;
+                let snap = |v: f32| (v * 64.0).round() / 64.0;
+                (
+                    Matrix::rand_normal(m, d, rng).map(snap),
+                    Matrix::rand_normal(n, d, rng).map(snap),
+                )
+            },
+            |(a, b)| {
+                let dm = sq_dist_matrix(a, b, &pool);
+                for i in 0..a.rows {
+                    for j in 0..b.rows {
+                        let want = Matrix::row_sq_dist(a, i, b, j);
+                        let got = dm[i * b.rows + j];
+                        if (want - got).abs() > TOL {
+                            return Err(format!(
+                                "threads={threads} d²({i},{j}): {want} vs {got}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn scores_are_bitwise_thread_invariant() {
+    check(
+        "scores-thread-invariant",
+        cases(20),
+        |rng| gen_labeled(rng, 0),
+        |(x, labels, centroids)| {
+            let compact: Vec<usize> = labels.iter().map(|&l| l / 3).collect();
+            let s1 = silhouette_with(x, labels, &ThreadPool::serial());
+            let d1 = davies_bouldin_with(x, centroids, &compact, &ThreadPool::serial());
+            for &threads in &THREADS[1..] {
+                let pool = ThreadPool::new(threads);
+                let st = silhouette_with(x, labels, &pool);
+                let dt = davies_bouldin_with(x, centroids, &compact, &pool);
+                if s1.to_bits() != st.to_bits() {
+                    return Err(format!("silhouette {s1} != {st} at {threads} threads"));
+                }
+                if d1.to_bits() != dt.to_bits() {
+                    return Err(format!("davies-bouldin {d1} != {dt} at {threads} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kmeans_fits_are_bitwise_thread_invariant() {
+    check(
+        "kmeans-thread-invariant",
+        cases(10),
+        |rng| {
+            let n = rng.gen_range(8, 120) as usize;
+            let d = rng.gen_range(1, 8) as usize;
+            let k = (rng.gen_range(1, 7) as usize).min(n);
+            let seed = rng.next_u64();
+            (Matrix::rand_normal(n, d, rng), k, seed)
+        },
+        |(x, k, seed)| {
+            let mut r1 = Pcg32::new(*seed);
+            let mut r8 = Pcg32::new(*seed);
+            let f1 = kmeans_with(x, *k, 15, &mut r1, &ThreadPool::serial());
+            let f8 = kmeans_with(x, *k, 15, &mut r8, &ThreadPool::new(8));
+            if f1.labels != f8.labels {
+                return Err("labels diverged across thread budgets".into());
+            }
+            if f1.inertia.to_bits() != f8.inertia.to_bits() {
+                return Err(format!("inertia {} != {}", f1.inertia, f8.inertia));
+            }
+            if f1.centroids.data != f8.centroids.data {
+                return Err("centroids diverged across thread budgets".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn nmf_fits_are_bitwise_thread_invariant() {
+    check(
+        "nmf-thread-invariant",
+        cases(8),
+        |rng| {
+            let m = rng.gen_range(6, 60) as usize;
+            let n = rng.gen_range(6, 60) as usize;
+            let k = rng.gen_range(1, 6) as usize;
+            let x = Matrix::rand_uniform(m, n, rng);
+            let w0 = Matrix::rand_uniform(m, k, rng).map(|v| v + 0.01);
+            let h0 = Matrix::rand_uniform(k, n, rng).map(|v| v + 0.01);
+            (x, w0, h0)
+        },
+        |(x, w0, h0)| {
+            let f1 = nmf_from_with(x, w0.clone(), h0.clone(), 20, &ThreadPool::serial());
+            let f8 = nmf_from_with(x, w0.clone(), h0.clone(), 20, &ThreadPool::new(8));
+            if f1.w.data != f8.w.data || f1.h.data != f8.h.data {
+                return Err("NMF factors diverged across thread budgets".into());
+            }
+            if f1.relative_error.to_bits() != f8.relative_error.to_bits() {
+                return Err(format!(
+                    "relative error {} != {}",
+                    f1.relative_error, f8.relative_error
+                ));
+            }
+            Ok(())
+        },
+    );
+}
