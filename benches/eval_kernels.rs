@@ -1,19 +1,25 @@
 //! Bench: the blocked/parallel evaluation kernels vs the seed's scalar
 //! paths (ISSUE 2 acceptance: ≥ 4× on silhouette at n=2000, d=16 with
-//! 8 threads vs the retained textbook oracle).
+//! 8 threads vs the retained textbook oracle), plus the ISSUE 3
+//! task-level NMFk `score(k)` shape (sequential vs perturbation-level
+//! parallelism on the persistent pool).
 //!
 //! `--quick` shrinks shapes and iteration budgets to CI-smoke scale;
 //! the equivalence asserts run in both modes so the kernel layer cannot
-//! silently drift from the oracles.
+//! silently drift from the oracles. Every median lands in
+//! `BENCH_eval.json` so the perf trajectory is tracked across PRs.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
-use binary_bleed::bench::Bench;
-use binary_bleed::data::gaussian_blobs;
+use binary_bleed::bench::{Bench, BenchStats};
+use binary_bleed::data::{gaussian_blobs, planted_nmf};
 use binary_bleed::linalg::{
     davies_bouldin_oracle, davies_bouldin_with, kmeans_with, nmf_from_with, silhouette_oracle,
     silhouette_with, sq_dist_matrix, Matrix,
 };
+use binary_bleed::model::NmfkEvaluator;
+use binary_bleed::util::json::Json;
 use binary_bleed::util::{Pcg32, ThreadPool};
 
 fn main() {
@@ -28,6 +34,7 @@ fn main() {
             ..Bench::default()
         }
     };
+    let mut recorded: Vec<BenchStats> = Vec::new();
     let pool1 = ThreadPool::serial();
     let pool8 = ThreadPool::new(8);
 
@@ -45,6 +52,7 @@ fn main() {
     let s8 = bench.run("silhouette/tiled/8-threads", || {
         silhouette_with(&x, &labels, &pool8)
     });
+    recorded.extend([so.clone(), s1.clone(), s8.clone()]);
     let sp1 = so.median.as_secs_f64() / s1.median.as_secs_f64();
     let sp8 = so.median.as_secs_f64() / s8.median.as_secs_f64();
     println!("    -> speedup vs seed scalar path: {sp1:.1}x (1 thread), {sp8:.1}x (8 threads)");
@@ -56,12 +64,12 @@ fn main() {
 
     // --- Davies-Bouldin ------------------------------------------------
     let centroids = label_means(&x, &labels, kc);
-    bench.run("davies-bouldin/oracle-scalar", || {
+    recorded.push(bench.run("davies-bouldin/oracle-scalar", || {
         davies_bouldin_oracle(&x, &centroids, &labels)
-    });
-    bench.run("davies-bouldin/tiled/8-threads", || {
+    }));
+    recorded.push(bench.run("davies-bouldin/tiled/8-threads", || {
         davies_bouldin_with(&x, &centroids, &labels, &pool8)
-    });
+    }));
     let (want, got) = (
         davies_bouldin_oracle(&x, &centroids, &labels),
         davies_bouldin_with(&x, &centroids, &labels, &pool8),
@@ -72,26 +80,26 @@ fn main() {
     );
 
     // --- pairwise distance matrix --------------------------------------
-    bench.run("pairwise/full-matrix/1-thread", || {
+    recorded.push(bench.run("pairwise/full-matrix/1-thread", || {
         sq_dist_matrix(&x, &centroids, &pool1)
-    });
-    bench.run("pairwise/full-matrix/8-threads", || {
+    }));
+    recorded.push(bench.run("pairwise/full-matrix/8-threads", || {
         sq_dist_matrix(&x, &centroids, &pool8)
-    });
+    }));
 
     // --- k-means: blocked assignment vs scalar Lloyd inner loop --------
     let iters = if quick { 5 } else { 20 };
-    bench.run("kmeans/assignment-scalar(seed-style)", || {
+    recorded.push(bench.run("kmeans/assignment-scalar(seed-style)", || {
         scalar_assignment(&x, &centroids)
-    });
-    bench.run("kmeans/fit/1-thread", || {
+    }));
+    recorded.push(bench.run("kmeans/fit/1-thread", || {
         let mut r = Pcg32::new(7);
         kmeans_with(&x, kc, iters, &mut r, &pool1).inertia
-    });
-    bench.run("kmeans/fit/8-threads", || {
+    }));
+    recorded.push(bench.run("kmeans/fit/8-threads", || {
         let mut r = Pcg32::new(7);
         kmeans_with(&x, kc, iters, &mut r, &pool8).inertia
-    });
+    }));
 
     // --- NMF: Gram-form updates vs seed transpose-per-update ----------
     let (m_rows, n_cols, rank) = if quick { (80, 90, 6) } else { (400, 440, 12) };
@@ -99,15 +107,15 @@ fn main() {
     let w0 = Matrix::rand_uniform(m_rows, rank, &mut rng).map(|v| v + 0.01);
     let h0 = Matrix::rand_uniform(rank, n_cols, &mut rng).map(|v| v + 0.01);
     let nmf_iters = if quick { 3 } else { 10 };
-    bench.run("nmf/seed-transpose-updates", || {
+    recorded.push(bench.run("nmf/seed-transpose-updates", || {
         nmf_textbook(&xm, w0.clone(), h0.clone(), nmf_iters)
-    });
-    bench.run("nmf/gram-form/1-thread", || {
+    }));
+    recorded.push(bench.run("nmf/gram-form/1-thread", || {
         nmf_from_with(&xm, w0.clone(), h0.clone(), nmf_iters, &pool1).relative_error
-    });
-    bench.run("nmf/gram-form/8-threads", || {
+    }));
+    recorded.push(bench.run("nmf/gram-form/8-threads", || {
         nmf_from_with(&xm, w0.clone(), h0.clone(), nmf_iters, &pool8).relative_error
-    });
+    }));
     let seed_err = nmf_textbook(&xm, w0.clone(), h0.clone(), nmf_iters);
     let gram_err = nmf_from_with(&xm, w0.clone(), h0.clone(), nmf_iters, &pool8).relative_error;
     assert_eq!(
@@ -116,9 +124,64 @@ fn main() {
         "Gram-form NMF must match the seed transpose formulation bitwise"
     );
 
+    // --- NMFk score(k): perturbation-level task parallelism (ISSUE 3) --
+    // The same eval-thread budget, spent two ways: outer_tasks = 1 runs
+    // perturbations sequentially (each fit gets the whole budget, but
+    // small matmuls sit under the work-size guards), outer_tasks = auto
+    // fans the perturbations out as §3.2 tasks on the persistent pool.
+    let (nm, nn, ktrue) = if quick { (60, 66, 3) } else { (120, 132, 5) };
+    let score_k = (ktrue + 1) as u32;
+    let nds = planted_nmf(&mut rng, nm, nn, ktrue, 0.01);
+    let eval_threads = 2; // what a 2-worker engine leaves per §3.2
+    let ev_seq = NmfkEvaluator::native(nds.x.clone(), 2 * ktrue + 2, 77)
+        .with_bursts(2)
+        .with_eval_threads(eval_threads)
+        .with_outer_tasks(1);
+    let ev_par = NmfkEvaluator::native(nds.x, 2 * ktrue + 2, 77)
+        .with_bursts(2)
+        .with_eval_threads(eval_threads)
+        .with_outer_tasks(0);
+    let q_seq = bench.run("nmfk-score/outer-tasks-1", || ev_seq.evaluate(score_k));
+    let q_par = bench.run("nmfk-score/outer-tasks-auto", || ev_par.evaluate(score_k));
+    recorded.extend([q_seq.clone(), q_par.clone()]);
+    let task_speedup = q_seq.median.as_secs_f64() / q_par.median.as_secs_f64();
+    println!("    -> perturbation-level parallelism speedup: {task_speedup:.2}x");
+    assert_eq!(
+        ev_seq.evaluate(score_k).to_bits(),
+        ev_par.evaluate(score_k).to_bits(),
+        "outer task layer must not change NMFk scores"
+    );
+
+    // Machine-readable trajectory record (medians per kernel).
+    let mut medians = BTreeMap::new();
+    for st in &recorded {
+        medians.insert(st.name.clone(), Json::Num(st.median.as_secs_f64()));
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("bench".to_string(), Json::Str("eval_kernels".into()));
+    obj.insert("quick".to_string(), Json::Bool(quick));
+    obj.insert("n".to_string(), Json::Num(n as f64));
+    obj.insert("d".to_string(), Json::Num(d as f64));
+    obj.insert(
+        "silhouette_speedup_8t_vs_oracle".to_string(),
+        Json::Num(sp8),
+    );
+    obj.insert(
+        "nmfk_score_task_parallel_speedup".to_string(),
+        Json::Num(task_speedup),
+    );
+    obj.insert("medians_s".to_string(), Json::Obj(medians));
+    std::fs::write("BENCH_eval.json", format!("{}\n", Json::Obj(obj)))
+        .expect("write BENCH_eval.json");
+    println!("wrote BENCH_eval.json");
+
     if !quick {
         println!(
             "\nacceptance: silhouette n={n} d={d} 8-thread speedup = {sp8:.1}x (target >= 4x)"
+        );
+        assert!(
+            task_speedup > 1.0,
+            "NMFk score(k) must improve with perturbation-level parallelism: {task_speedup:.2}x"
         );
     }
 }

@@ -94,7 +94,8 @@ fn build_family(
             let ev = NmfkEvaluator::native(ds.x, cfg.k_max as usize + 2, cfg.seed)
                 .with_perturbations(cfg.perturbations)
                 .with_bursts(4)
-                .with_eval_threads(cfg.resolved_eval_threads());
+                .with_eval_threads_for(cfg.resolved_eval_threads(), cfg.engine_workers())
+                .with_outer_tasks(cfg.outer_tasks);
             (
                 Box::new(ev),
                 // stop = 0.0: only true stability collapse (negative
@@ -118,7 +119,8 @@ fn build_family(
                 cfg.seed,
             )
             .with_restarts(cfg.restarts)
-            .with_eval_threads(cfg.resolved_eval_threads());
+            .with_eval_threads_for(cfg.resolved_eval_threads(), cfg.engine_workers())
+            .with_outer_tasks(cfg.outer_tasks);
             (
                 Box::new(ev),
                 // Davies-Bouldin minimizes; §IV-A thresholds.

@@ -4,6 +4,7 @@
 //! bleed search     --model nmfk|kmeans|profile --k-min 2 --k-max 30
 //!                  [--mode vanilla|early-stop|standard] [--order pre|post|in]
 //!                  [--ranks N] [--threads T] [--eval-threads E]
+//!                  [--outer-tasks O]
 //!                  [--backend hlo|native]
 //!                  [--k-true K] [--seed S] [--config FILE]
 //! bleed experiment fig7|fig8|fig9|table2|arxiv|fig4|dynamics|all
@@ -94,6 +95,9 @@ SEARCH FLAGS:
   --ranks N --threads T    parallel shape (default 1x1 = serial)
   --eval-threads E         intra-evaluation kernel threads per model fit
                            (default 0 = auto: hardware / (ranks*threads))
+  --outer-tasks O          concurrent perturbations/restarts per evaluation,
+                           split from the eval-thread budget so outer x inner
+                           never oversubscribes (default 0 = auto; 1 = off)
   --backend B              hlo|native (default native; hlo needs artifacts)
   --k-true K               planted k for the synthetic dataset (default 15)
   --select X --stop X      thresholds (default 0.75 / 0.2)
@@ -170,6 +174,8 @@ fn cmd_search(args: &Args) -> Result<()> {
         ),
         n => n,
     };
+    // Outer task level (§3.2): 0 = auto (fill the eval budget).
+    let outer_tasks: usize = args.flag_parse("outer-tasks")?.unwrap_or(0);
     let mode = parse_mode(&args.flag_or("mode", "vanilla"))?;
     let order = parse_traversal(&args.flag_or("order", "pre"))?;
     let select: f64 = args.flag_parse("select")?.unwrap_or(0.75);
@@ -183,13 +189,26 @@ fn cmd_search(args: &Args) -> Result<()> {
 
     let ks: Vec<u32> = (k_min..=k_max).collect();
     let model = args.flag_or("model", "profile");
-    let (scorer, mut policy) =
-        build_scorer(&model, k_true, k_max, seed, backend, select, stop, eval_threads)?;
+    let (scorer, mut policy) = build_scorer(
+        &model,
+        k_true,
+        k_max,
+        seed,
+        backend,
+        select,
+        stop,
+        eval_threads,
+        // Pool worker set sized for every concurrent engine submitter
+        // (one shared evaluator serves all of them).
+        ranks.max(1) * threads.max(1),
+        outer_tasks,
+    )?;
     policy.mode = mode;
 
     println!(
         "searching K={{{k_min}..{k_max}}} model={model} mode={} order={} \
-         ranks={ranks}x{threads} eval-threads={eval_threads} backend={}",
+         ranks={ranks}x{threads} eval-threads={eval_threads} \
+         outer-tasks={outer_tasks} backend={}",
         mode.label(),
         order.label(),
         backend.label()
@@ -230,6 +249,8 @@ fn build_scorer(
     select: f64,
     stop: f64,
     eval_threads: usize,
+    engine_workers: usize,
+    outer_tasks: usize,
 ) -> Result<(Box<dyn KScorer>, SearchPolicy)> {
     let thresholds = Thresholds { select, stop };
     let mut rng = crate::util::Pcg32::new(seed);
@@ -250,7 +271,8 @@ fn build_scorer(
                     NmfkEvaluator::native(ds.x, k_max as usize + 2, seed)
                 }
             }
-            .with_eval_threads(eval_threads);
+            .with_eval_threads_for(eval_threads, engine_workers)
+            .with_outer_tasks(outer_tasks);
             Ok((
                 Box::new(ev),
                 SearchPolicy::maximize(Mode::Vanilla, thresholds),
@@ -270,7 +292,8 @@ fn build_scorer(
                     )
                 }
             }
-            .with_eval_threads(eval_threads);
+            .with_eval_threads_for(eval_threads, engine_workers)
+            .with_outer_tasks(outer_tasks);
             Ok((
                 Box::new(ev),
                 SearchPolicy::minimize(

@@ -31,6 +31,13 @@ pub struct ExperimentConfig {
     /// divide the host's hardware threads by the engine worker count so
     /// the product never oversubscribes the machine.
     pub eval_threads: usize,
+    /// Concurrent outer tasks per evaluation (§3.2 two-level rule):
+    /// NMFk/RESCALk perturbations and K-means restarts run as tasks on
+    /// the eval-thread pool, with outer × inner kernel threads never
+    /// exceeding `eval_threads`. `0` = auto (as many tasks as the
+    /// budget allows), `1` = sequential. Scores are bitwise identical
+    /// under every setting.
+    pub outer_tasks: usize,
     pub traversal: Traversal,
     pub pipeline: Pipeline,
     /// Sweep density for figure experiments: evaluate every `stride`-th
@@ -60,6 +67,7 @@ impl ExperimentConfig {
             ranks: 2,
             threads_per_rank: 2,
             eval_threads: 0,
+            outer_tasks: 0,
             traversal: Traversal::PreOrder,
             pipeline: Pipeline::SkipModThenSort,
             sweep_stride: 4,
@@ -109,8 +117,15 @@ impl ExperimentConfig {
         }
         crate::util::pool::eval_thread_budget(
             crate::util::pool::available_threads(),
-            self.ranks.max(1) * self.threads_per_rank.max(1),
+            self.engine_workers(),
         )
+    }
+
+    /// Concurrent engine workers (`ranks × threads_per_rank`) — the
+    /// submitter count the shared evaluator's persistent pool is sized
+    /// for (`ThreadPool::for_submitters`).
+    pub fn engine_workers(&self) -> usize {
+        self.ranks.max(1) * self.threads_per_rank.max(1)
     }
 
     /// Parallel config for the scheduler.
@@ -179,6 +194,13 @@ impl ExperimentConfig {
             // Clamp instead of `as usize`: a negative value would wrap
             // to an astronomical thread budget. Negative ⇒ 0 ⇒ auto.
             self.eval_threads = v.max(0) as usize;
+        }
+        if let Some(v) = t
+            .get_path("parallel.outer_tasks")
+            .and_then(TomlValue::as_int)
+        {
+            // Same clamp as eval_threads: negative ⇒ 0 ⇒ auto.
+            self.outer_tasks = v.max(0) as usize;
         }
         if let Some(v) = t.get_path("parallel.pipeline").and_then(TomlValue::as_str) {
             self.pipeline = parse_pipeline(v)?;
@@ -259,6 +281,7 @@ order = "post"
 [parallel]
 ranks = 8
 eval_threads = 3
+outer_tasks = 2
 pipeline = "t2"
 [sweep]
 stride = 2
@@ -272,6 +295,7 @@ stride = 2
         assert_eq!(cfg.ranks, 8);
         assert_eq!(cfg.eval_threads, 3);
         assert_eq!(cfg.resolved_eval_threads(), 3);
+        assert_eq!(cfg.outer_tasks, 2);
         assert_eq!(cfg.pipeline, Pipeline::SortThenSkipMod);
         assert_eq!(cfg.sweep_stride, 2);
     }
@@ -279,9 +303,10 @@ stride = 2
     #[test]
     fn negative_eval_threads_means_auto() {
         let mut cfg = ExperimentConfig::quick();
-        let doc = "[parallel]\neval_threads = -1\n";
+        let doc = "[parallel]\neval_threads = -1\nouter_tasks = -2\n";
         cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
         assert_eq!(cfg.eval_threads, 0, "negative clamps to auto, not wrap");
+        assert_eq!(cfg.outer_tasks, 0, "negative clamps to auto, not wrap");
         assert!(cfg.resolved_eval_threads() >= 1);
     }
 

@@ -13,6 +13,7 @@
 //! which is what makes concurrent and out-of-order publication safe.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use super::policy::SearchPolicy;
 
@@ -64,6 +65,11 @@ pub struct SharedState {
     /// raised to that k, so a reader that observes `best_k` also observes
     /// its score).
     scores: Vec<AtomicU64>,
+    /// Out-of-band side channel: remote bests rejected by
+    /// [`SharedState::merge_remote`] because their k lies outside this
+    /// state's domain. Off the admission hot path (only touched on a
+    /// rejected merge and at shutdown), so a small mutex is fine.
+    rejected_bests: Mutex<Vec<Candidate>>,
 }
 
 impl SharedState {
@@ -81,6 +87,7 @@ impl SharedState {
             best_k: AtomicI64::new(NO_BEST),
             claimed: (0..words).map(|_| AtomicU64::new(0)).collect(),
             scores: (0..domain.len()).map(|_| AtomicU64::new(0)).collect(),
+            rejected_bests: Mutex::new(Vec::new()),
         }
     }
 
@@ -154,9 +161,14 @@ impl SharedState {
     /// *rejected*, not merged: raising `best_k` to a k with no score
     /// slot would make [`SharedState::best`] report `score = NaN` from
     /// then on. All engine configurations build every rank's state over
-    /// the same normalized domain, so a rejected best only ever comes
+    /// the same normalized domain, so a rejected best normally comes
     /// from a misconfigured or corrupt peer — its floor/ceil movements
-    /// (plain integers, domain-independent) still merge above.
+    /// (plain integers, domain-independent) still merge above. In
+    /// heterogeneous-domain deployments, however, a peer can
+    /// legitimately search a different k set; rejected bests are
+    /// therefore kept out-of-band ([`SharedState::rejected_remote_bests`])
+    /// so the coordinator can fold them at shutdown instead of silently
+    /// dropping them.
     pub fn merge_remote(&self, floor: Option<u32>, ceil: Option<u32>, best: Option<Candidate>) {
         if let Some(f) = floor {
             self.floor.fetch_max(i64::from(f), Ordering::SeqCst);
@@ -168,8 +180,34 @@ impl SharedState {
             if let Some(pos) = self.pos(b.k) {
                 self.scores[pos].store(b.score.to_bits(), Ordering::SeqCst);
                 self.best_k.fetch_max(i64::from(b.k), Ordering::SeqCst);
+            } else {
+                // Deduplicate per k (peers re-broadcast their best every
+                // gossip round): last write wins, mirroring the
+                // policy-agnostic in-domain score slots — this state
+                // doesn't know whether the search maximizes or
+                // minimizes, so "keep the newest broadcast" is the only
+                // neutral choice. Bounded so a misbehaving peer cannot
+                // grow the channel forever.
+                const MAX_REJECTED: usize = 1024;
+                let mut rejected = self.rejected_bests.lock().unwrap();
+                if let Some(existing) = rejected.iter_mut().find(|c| c.k == b.k) {
+                    existing.score = b.score;
+                } else if rejected.len() < MAX_REJECTED {
+                    rejected.push(b);
+                }
             }
         }
+    }
+
+    /// Remote bests rejected by [`SharedState::merge_remote`] because
+    /// their k is outside this domain, in first-arrival order —
+    /// deduplicated per k (newest broadcast kept; this state is
+    /// policy-agnostic, so it cannot rank scores) and bounded, so
+    /// repeated gossip re-broadcasts cannot grow it. A
+    /// heterogeneous-domain deployment folds these against the local
+    /// [`SharedState::best`] at shutdown, under its own policy.
+    pub fn rejected_remote_bests(&self) -> Vec<Candidate> {
+        self.rejected_bests.lock().unwrap().clone()
     }
 
     /// The current candidate optimal.
@@ -322,6 +360,32 @@ mod tests {
         // ...while its (domain-independent) bounds still merge.
         let (f, _) = st.bounds();
         assert_eq!(f, Some(3));
+    }
+
+    #[test]
+    fn rejected_bests_are_kept_out_of_band() {
+        let st = SharedState::new(&[2, 4, 8]);
+        assert!(st.rejected_remote_bests().is_empty());
+        // Out-of-domain bests land in the side channel, in order.
+        st.merge_remote(None, None, Some(Candidate { k: 6, score: 0.9 }));
+        st.merge_remote(Some(3), None, Some(Candidate { k: 4, score: 0.8 }));
+        st.merge_remote(None, None, Some(Candidate { k: 99, score: 0.99 }));
+        // Re-broadcasts of the same k dedupe; the newest score wins
+        // (policy-agnostic: the state can't know minimize vs maximize).
+        st.merge_remote(None, None, Some(Candidate { k: 6, score: 0.95 }));
+        st.merge_remote(None, None, Some(Candidate { k: 6, score: 0.5 }));
+        let rejected = st.rejected_remote_bests();
+        assert_eq!(rejected.len(), 2);
+        assert_eq!((rejected[0].k, rejected[0].score), (6, 0.5));
+        assert_eq!((rejected[1].k, rejected[1].score), (99, 0.99));
+        // The in-domain merge was not recorded as rejected.
+        assert_eq!(st.best().unwrap().k, 4);
+        // Shutdown fold: a heterogeneous deployment can now compare the
+        // local best with the rejected remote ones.
+        let global = rejected
+            .iter()
+            .fold(st.best().unwrap(), |acc, c| if c.k > acc.k { *c } else { acc });
+        assert_eq!(global.k, 99);
     }
 
     #[test]

@@ -7,10 +7,16 @@
 //! rank the factors wander and the silhouette collapses — the square-wave
 //! premise Binary Bleed exploits.
 //!
-//! Data volume is tiny (m × k × p floats), so this stays host-side; the
-//! per-run NMF itself is the HLO-artifact hot path.
+//! The pair distances run through the blocked [`super::pairwise`]
+//! kernel on **unit-normalized** columns: for unit vectors the cosine
+//! distance is `1 − a·b = d²(a,b) / 2`, so the O(n²·m) all-pairs dot
+//! loop the seed recomputed point-by-point becomes one norms
+//! precompute + GEMM-shaped distance matrix, parallel over row blocks
+//! on a [`ThreadPool`].
 
 use super::matrix::{cosine_similarity, Matrix};
+use super::pairwise::sq_dist_matrix;
+use crate::util::pool::ThreadPool;
 
 /// Greedy max-cosine assignment of `w`'s columns onto `reference`'s
 /// columns (both m×k). Returns `perm[j] = reference column for w col j`.
@@ -43,37 +49,69 @@ pub fn match_columns(reference: &Matrix, w: &Matrix) -> Vec<usize> {
 }
 
 /// Cosine-distance silhouette of the aligned W-column clusters across
+/// perturbation runs, serial. See [`perturbation_silhouette_with`].
+pub fn perturbation_silhouette(ws: &[Matrix]) -> f64 {
+    perturbation_silhouette_with(ws, &ThreadPool::serial())
+}
+
+/// Cosine-distance silhouette of the aligned W-column clusters across
 /// perturbation runs. `ws` holds one m×k W per run. Returns the *minimum*
 /// per-cluster silhouette — NMFk's conservative stability statistic.
-pub fn perturbation_silhouette(ws: &[Matrix]) -> f64 {
+///
+/// Distances are computed as `d²/2` of the unit-normalized columns via
+/// the blocked [`super::pairwise`] kernel (norms hoisted, one tile pass
+/// for the full `p·k × p·k` matrix), parallel over row blocks on
+/// `pool`. Chunk boundaries depend only on the sample count, so the
+/// statistic is bitwise identical under every thread budget. The seed
+/// formula's degenerate-column semantics are reproduced *exactly in
+/// form*: `1 − dot/(‖a‖‖b‖ + 1e-12)` equals
+/// `1 − cos·(p/(p + 1e-12))` with `p = ‖a‖‖b‖`, so each pair's unit
+/// cosine is damped by the same `p/(p + 1e-12)` factor. A collapsed
+/// column (norm underflowed toward zero) therefore still reads as
+/// maximally distant from everything whose norm product vanishes
+/// against the guard — degenerate clusters stay maximally unstable
+/// instead of spuriously tight.
+pub fn perturbation_silhouette_with(ws: &[Matrix], pool: &ThreadPool) -> f64 {
     let p = ws.len();
     assert!(p >= 2, "need at least two perturbation runs");
     let k = ws[0].cols;
-    // Collect aligned columns: cluster c holds one column per run.
-    let mut samples: Vec<Vec<f32>> = Vec::with_capacity(p * k);
-    let mut labels: Vec<usize> = Vec::with_capacity(p * k);
-    for w in ws {
+    let m = ws[0].rows;
+    let n = p * k;
+    // Aligned columns (cluster c holds one column per run), written
+    // straight into the unit-normalized sample matrix — no intermediate
+    // per-column Vec. Norms are f64, matching the old loop's guard;
+    // one blocked all-pairs distance matrix then gives
+    // cos = 1 − ‖a − b‖² / 2 on the sphere.
+    let mut unit = Matrix::zeros(n, m);
+    let mut norms = vec![0.0f64; n];
+    let mut labels: Vec<usize> = Vec::with_capacity(n);
+    for (run, w) in ws.iter().enumerate() {
         let perm = match_columns(&ws[0], w);
         for j in 0..k {
-            samples.push(w.col(j));
             labels.push(perm[j]);
+            let i = run * k + j;
+            let norm = (0..m)
+                .map(|r| w.at(r, j) as f64 * w.at(r, j) as f64)
+                .sum::<f64>()
+                .sqrt();
+            norms[i] = norm;
+            let inv = 1.0 / (norm + 1e-12);
+            for (r, o) in unit.data[i * m..(i + 1) * m].iter_mut().enumerate() {
+                *o = (w.at(r, j) as f64 * inv) as f32;
+            }
         }
     }
-    let n = samples.len();
-    // Cosine distance with the column norms hoisted out of the O(n²)
-    // pair loop (same accumulation order as `cosine_similarity`, so the
-    // statistic is unchanged bit-for-bit).
-    let norms: Vec<f64> = samples
-        .iter()
-        .map(|s| s.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt())
-        .collect();
+    let d2 = sq_dist_matrix(&unit, &unit, pool);
+    // Per-pair damping, the seed formula in unit-vector form:
+    // 1 − dot/(p + 1e-12) = 1 − cos·(p/(p + 1e-12)), cos = 1 − d²/2 on
+    // the sphere. The damping factor is what made a collapsed (tiny- or
+    // zero-norm) column maximally distant under the seed's 1e-12
+    // denominator guard; dropping it would read coincident near-zero
+    // columns as a perfectly tight (stable) cluster — the inverse.
     let dist = |i: usize, j: usize| {
-        let dot: f64 = samples[i]
-            .iter()
-            .zip(&samples[j])
-            .map(|(&x, &y)| x as f64 * y as f64)
-            .sum();
-        1.0 - dot / (norms[i] * norms[j] + 1e-12)
+        let cos = 1.0 - 0.5 * d2[i * n + j];
+        let p = norms[i] * norms[j];
+        (1.0 - cos * (p / (p + 1e-12))).clamp(0.0, 2.0)
     };
     let mut cluster_sil = vec![0.0f64; k];
     let mut cluster_n = vec![0usize; k];
@@ -145,6 +183,120 @@ mod tests {
             (0..5).map(|_| Matrix::rand_uniform(30, 4, &mut rng)).collect();
         let s = perturbation_silhouette(&ws);
         assert!(s < 0.5, "random factors should score low: {s}");
+    }
+
+    #[test]
+    fn pairwise_form_matches_direct_cosine_loop() {
+        // The blocked unit-norm path must agree with the seed's direct
+        // dot/(|a||b| + 1e-12) loop within f32-normalization rounding.
+        let mut rng = Pcg32::new(55);
+        let ws: Vec<Matrix> =
+            (0..4).map(|_| Matrix::rand_uniform(24, 3, &mut rng)).collect();
+        let got = perturbation_silhouette(&ws);
+        let want = direct_cosine_silhouette(&ws);
+        assert!(
+            (got - want).abs() < 1e-4,
+            "pairwise {got} vs direct {want}"
+        );
+    }
+
+    #[test]
+    fn collapsed_zero_columns_read_as_unstable() {
+        // A factor column that underflows — to exact zeros or to tiny
+        // residue — in every run must drag the (minimum per-cluster)
+        // statistic down, exactly as the seed's dot/(|a||b| + 1e-12)
+        // formula did: not score as a perfectly tight cluster of
+        // coincident near-zero vectors.
+        for fill in [0.0f32, 1e-9] {
+            let mut rng = Pcg32::new(57);
+            let base = Matrix::rand_uniform(30, 3, &mut rng);
+            let ws: Vec<Matrix> = (0..4)
+                .map(|_| {
+                    let mut w = noisy_copy(&base, &mut rng, 0.01, false);
+                    for r in 0..w.rows {
+                        *w.at_mut(r, 2) = fill;
+                    }
+                    w
+                })
+                .collect();
+            let got = perturbation_silhouette(&ws);
+            let want = direct_cosine_silhouette(&ws);
+            assert!(
+                (got - want).abs() < 1e-3,
+                "fill={fill}: pairwise {got} vs direct {want}"
+            );
+            assert!(got < 0.2, "fill={fill}: collapsed cluster looks stable: {got}");
+        }
+    }
+
+    #[test]
+    fn thread_budget_does_not_change_statistic() {
+        let mut rng = Pcg32::new(56);
+        let base = Matrix::rand_uniform(40, 5, &mut rng);
+        let ws: Vec<Matrix> =
+            (0..6).map(|_| noisy_copy(&base, &mut rng, 0.05, true)).collect();
+        let s1 = perturbation_silhouette_with(&ws, &ThreadPool::serial());
+        let s8 = perturbation_silhouette_with(&ws, &ThreadPool::new(8));
+        assert_eq!(s1.to_bits(), s8.to_bits());
+    }
+
+    /// The seed's O(n²·m) formulation, kept as a test oracle.
+    fn direct_cosine_silhouette(ws: &[Matrix]) -> f64 {
+        let k = ws[0].cols;
+        let mut samples: Vec<Vec<f32>> = Vec::new();
+        let mut labels: Vec<usize> = Vec::new();
+        for w in ws {
+            let perm = match_columns(&ws[0], w);
+            for j in 0..k {
+                samples.push(w.col(j));
+                labels.push(perm[j]);
+            }
+        }
+        let n = samples.len();
+        let norms: Vec<f64> = samples
+            .iter()
+            .map(|s| s.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt())
+            .collect();
+        let dist = |i: usize, j: usize| {
+            let dot: f64 = samples[i]
+                .iter()
+                .zip(&samples[j])
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            1.0 - dot / (norms[i] * norms[j] + 1e-12)
+        };
+        let mut cluster_sil = vec![0.0f64; k];
+        let mut cluster_n = vec![0usize; k];
+        for i in 0..n {
+            let own = labels[i];
+            let mut sums = vec![0.0f64; k];
+            let mut counts = vec![0usize; k];
+            for j in 0..n {
+                if i != j {
+                    sums[labels[j]] += dist(i, j);
+                    counts[labels[j]] += 1;
+                }
+            }
+            if counts[own] == 0 {
+                continue;
+            }
+            let a = sums[own] / counts[own] as f64;
+            let b = (0..k)
+                .filter(|&c| c != own && counts[c] > 0)
+                .map(|c| sums[c] / counts[c] as f64)
+                .fold(f64::INFINITY, f64::min);
+            if !b.is_finite() {
+                continue;
+            }
+            let s = (b - a) / a.max(b).max(1e-12);
+            cluster_sil[own] += s;
+            cluster_n[own] += 1;
+        }
+        (0..k)
+            .filter(|&c| cluster_n[c] > 0)
+            .map(|c| cluster_sil[c] / cluster_n[c] as f64)
+            .fold(f64::INFINITY, f64::min)
+            .min(1.0)
     }
 
     #[test]

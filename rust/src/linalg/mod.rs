@@ -15,7 +15,9 @@ pub mod pairwise;
 pub mod rescal_ref;
 pub mod scores;
 
-pub use cluster_stability::{match_columns, perturbation_silhouette};
+pub use cluster_stability::{
+    match_columns, perturbation_silhouette, perturbation_silhouette_with,
+};
 pub use kmeans_ref::{kmeans, kmeans_with, KMeansFit};
 pub use matrix::{cosine_similarity, Matrix};
 pub use nmf_ref::{nmf, nmf_from, nmf_from_with, NmfFit};

@@ -7,6 +7,13 @@
 //! [`Matrix`] (same accumulation order as the seed's explicit
 //! transposes, so fits are bitwise unchanged), parallel over row blocks
 //! on a [`ThreadPool`].
+//!
+//! The per-slice work is additionally **task-parallel** (§3.2 outer
+//! level): the A-update's per-slice numerator/denominator contributions
+//! and the independent R_s updates run as pool tasks, with the
+//! contributions folded serially in slice order afterwards — the same
+//! accumulation order as the sequential loop, so fits stay bitwise
+//! identical under every thread budget.
 
 use super::matrix::Matrix;
 use crate::util::pool::ThreadPool;
@@ -41,13 +48,15 @@ pub fn rescal_with(
         (0..t.len()).map(|_| Matrix::rand_uniform(k, k, rng).map(|v| v + 0.01)).collect();
     for _ in 0..iters {
         a = a_update(t, &a, &r, pool);
-        // AᵀA is constant across the per-slice R updates: build it once.
+        // AᵀA is constant across the per-slice R updates: build it
+        // once. The per-slice updates are independent — run them as
+        // pool tasks (collected in slice order).
         let g = a.matmul_tn_with(&a, pool);
-        r = r
-            .iter()
-            .enumerate()
-            .map(|(s, rs)| r_update(&t[s], &a, &g, rs, pool))
-            .collect();
+        let (a_ref, g_ref, r_ref) = (&a, &g, &r);
+        let new_r = pool.map_tasks(0, t.len(), |s, inner| {
+            r_update(&t[s], a_ref, g_ref, &r_ref[s], inner)
+        });
+        r = new_r;
     }
     let relative_error = rescal_relative_error(t, &a, &r);
     RescalFit {
@@ -59,17 +68,34 @@ pub fn rescal_with(
 
 fn a_update(t: &[Matrix], a: &Matrix, r: &[Matrix], pool: &ThreadPool) -> Matrix {
     let g = a.matmul_tn_with(a, pool); // AᵀA (k,k)
+    // Per-slice contributions are independent: compute them as pool
+    // tasks, then fold serially in slice order — the fold interleaving
+    // (num += c1_s, num += c2_s per slice) matches the sequential loop
+    // exactly, so the update is bitwise unchanged. Slices are processed
+    // in groups of the pool budget so peak memory stays O(threads·n·k)
+    // instead of O(S·n·k) (only a group's contributions are live; the
+    // fold order over slices is untouched).
     let mut num = Matrix::zeros(a.rows, a.cols);
     let mut den_inner = Matrix::zeros(a.cols, a.cols);
-    for (s, rs) in r.iter().enumerate() {
-        let ar = a.matmul_with(rs, pool); // A R_s
-        let art = a.matmul_nt_with(rs, pool); // A R_sᵀ
-        num = num
-            .zip(&t[s].matmul_with(&art, pool), |x, y| x + y)
-            .zip(&t[s].matmul_tn_with(&ar, pool), |x, y| x + y); // T_sᵀ (A R_s)
-        let rgr = rs.matmul_with(&g, pool).matmul_nt_with(rs, pool); // R_s G R_sᵀ
-        let rtgr = rs.matmul_tn_with(&g, pool).matmul_with(rs, pool); // R_sᵀ G R_s
-        den_inner = den_inner.zip(&rgr, |x, y| x + y).zip(&rtgr, |x, y| x + y);
+    let group = pool.threads().max(1);
+    for start in (0..r.len()).step_by(group) {
+        let end = (start + group).min(r.len());
+        // outer = 0 is the task layer's auto split: fill the budget.
+        let contribs = pool.map_tasks(0, end - start, |gi, inner| {
+            let s = start + gi;
+            let rs = &r[s];
+            let ar = a.matmul_with(rs, inner); // A R_s
+            let art = a.matmul_nt_with(rs, inner); // A R_sᵀ
+            let c1 = t[s].matmul_with(&art, inner); // T_s (A R_sᵀ)
+            let c2 = t[s].matmul_tn_with(&ar, inner); // T_sᵀ (A R_s)
+            let rgr = rs.matmul_with(&g, inner).matmul_nt_with(rs, inner); // R_s G R_sᵀ
+            let rtgr = rs.matmul_tn_with(&g, inner).matmul_with(rs, inner); // R_sᵀ G R_s
+            (c1, c2, rgr, rtgr)
+        });
+        for (c1, c2, rgr, rtgr) in &contribs {
+            num = num.zip(c1, |x, y| x + y).zip(c2, |x, y| x + y);
+            den_inner = den_inner.zip(rgr, |x, y| x + y).zip(rtgr, |x, y| x + y);
+        }
     }
     let den = a.matmul_with(&den_inner, pool);
     a.zip(&num, |av, nv| av * nv)

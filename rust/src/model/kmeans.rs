@@ -44,6 +44,9 @@ pub struct KMeansEvaluator {
     /// Intra-evaluation thread budget for the native kernels (§3.2);
     /// serial unless [`KMeansEvaluator::with_eval_threads`] raises it.
     pool: ThreadPool,
+    /// Concurrent restart tasks (§3.2 outer level): `0` = auto (as many
+    /// as the pool budget allows), `1` = sequential.
+    outer_tasks: usize,
 }
 
 impl KMeansEvaluator {
@@ -74,6 +77,7 @@ impl KMeansEvaluator {
             store: Some(store),
             seed,
             pool: ThreadPool::serial(),
+            outer_tasks: 0,
         })
     }
 
@@ -90,6 +94,7 @@ impl KMeansEvaluator {
             store: None,
             seed,
             pool: ThreadPool::serial(),
+            outer_tasks: 0,
         }
     }
 
@@ -107,26 +112,46 @@ impl KMeansEvaluator {
         self
     }
 
+    /// Like [`KMeansEvaluator::with_eval_threads`], but sizes the
+    /// persistent worker set for `submitters` concurrent engine
+    /// workers sharing this evaluator (`ThreadPool::for_submitters`),
+    /// so parallel-search runs keep the whole §3.2 budget busy.
+    pub fn with_eval_threads_for(mut self, threads: usize, submitters: usize) -> Self {
+        self.pool = ThreadPool::for_submitters(threads, submitters);
+        self
+    }
+
+    /// Concurrent restart tasks (§3.2 outer level), split against the
+    /// eval-thread budget by `util::pool::outer_split` so outer × inner
+    /// never exceeds it. `0` (default) = as many as the budget allows.
+    /// Per-restart RNG streams are unchanged, so scores are bitwise
+    /// identical under every `(outer_tasks, eval_threads)` pair.
+    pub fn with_outer_tasks(mut self, tasks: usize) -> Self {
+        self.outer_tasks = tasks;
+        self
+    }
+
     pub fn backend(&self) -> Backend {
         self.backend
     }
 
-    /// One restart: fit and score.
-    fn fit_once(&self, k: usize, init: usize) -> (f64, f64) {
+    /// One restart: fit and score. `pool` is this restart's §3.2 inner
+    /// kernel budget.
+    fn fit_once(&self, k: usize, init: usize, pool: &ThreadPool) -> (f64, f64) {
         let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | init as u64);
         match self.backend {
             Backend::Native => {
                 let fit =
-                    linalg::kmeans_with(&self.x, k, self.bursts * 15, &mut rng, &self.pool);
+                    linalg::kmeans_with(&self.x, k, self.bursts * 15, &mut rng, pool);
                 let score = match self.scoring {
                     KMeansScoring::Silhouette => {
-                        linalg::silhouette_with(&self.x, &fit.labels, &self.pool)
+                        linalg::silhouette_with(&self.x, &fit.labels, pool)
                     }
                     KMeansScoring::DaviesBouldin => linalg::davies_bouldin_with(
                         &self.x,
                         &fit.centroids,
                         &fit.labels,
-                        &self.pool,
+                        pool,
                     ),
                 };
                 (fit.inertia, score)
@@ -193,8 +218,15 @@ impl KMeansEvaluator {
     pub fn evaluate(&self, k: u32) -> f64 {
         let k = k as usize;
         assert!(k >= 2 && k <= self.k_max, "k={k} outside [2, {}]", self.k_max);
-        (0..self.n_init)
-            .map(|i| self.fit_once(k, i))
+        // Restarts are embarrassingly parallel: one RNG stream per
+        // (k, init), results folded in restart order — identical to the
+        // sequential loop under every (outer_tasks, eval_threads) pair.
+        // `outer_tasks` forwards as-is: `outer_split` treats 0 as auto.
+        self.pool
+            .map_tasks(self.outer_tasks, self.n_init, |i, inner| {
+                self.fit_once(k, i, inner)
+            })
+            .into_iter()
             .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
             .map(|(_, s)| s)
             .unwrap()
@@ -252,6 +284,10 @@ mod tests {
         assert_eq!(ev1.evaluate(4).to_bits(), ev8.evaluate(4).to_bits());
         assert_eq!(ev1.evaluate(7).to_bits(), ev8.evaluate(7).to_bits());
     }
+
+    // Bitwise invariance across the full (outer_tasks, eval_threads)
+    // grid — including oversubscribed requests — is asserted for all
+    // three evaluators in rust/tests/kernel_equivalence.rs.
 
     #[test]
     #[should_panic]

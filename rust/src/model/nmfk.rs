@@ -15,7 +15,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::KScorer;
-use crate::linalg::{nmf_from_with, perturbation_silhouette, Matrix};
+use crate::linalg::{nmf_from_with, perturbation_silhouette_with, Matrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32, literal_from_matrix, literal_to_matrix, rank_mask};
 #[cfg(feature = "pjrt")]
@@ -43,6 +43,9 @@ pub struct NmfkEvaluator {
     seed: u64,
     /// Intra-evaluation thread budget for the native kernels (§3.2).
     pool: ThreadPool,
+    /// Concurrent perturbation tasks (§3.2 outer level): `0` = auto
+    /// (as many as the pool budget allows), `1` = sequential.
+    outer_tasks: usize,
 }
 
 impl NmfkEvaluator {
@@ -68,6 +71,7 @@ impl NmfkEvaluator {
             store: Some(store),
             seed,
             pool: ThreadPool::serial(),
+            outer_tasks: 0,
         })
     }
 
@@ -84,6 +88,7 @@ impl NmfkEvaluator {
             store: None,
             seed,
             pool: ThreadPool::serial(),
+            outer_tasks: 0,
         }
     }
 
@@ -93,6 +98,26 @@ impl NmfkEvaluator {
     /// bitwise identical under every budget.
     pub fn with_eval_threads(mut self, threads: usize) -> Self {
         self.pool = ThreadPool::new(threads);
+        self
+    }
+
+    /// Like [`NmfkEvaluator::with_eval_threads`], but sizes the
+    /// persistent worker set for `submitters` concurrent engine
+    /// workers sharing this evaluator (`ThreadPool::for_submitters`),
+    /// so parallel-search runs keep the whole §3.2 budget busy.
+    pub fn with_eval_threads_for(mut self, threads: usize, submitters: usize) -> Self {
+        self.pool = ThreadPool::for_submitters(threads, submitters);
+        self
+    }
+
+    /// Concurrent perturbation tasks (§3.2 outer level). The request is
+    /// split against the eval-thread budget by `util::pool::outer_split`
+    /// so outer tasks × inner kernel threads never exceed it; `0` (the
+    /// default) uses as many tasks as the budget allows. Each
+    /// perturbation keeps its own RNG stream, so scores are bitwise
+    /// identical under every `(outer_tasks, eval_threads)` pair.
+    pub fn with_outer_tasks(mut self, tasks: usize) -> Self {
+        self.outer_tasks = tasks;
         self
     }
 
@@ -122,14 +147,15 @@ impl NmfkEvaluator {
     }
 
     /// One NMF fit at rank k; returns the active W columns (m × k).
-    fn fit_w(&self, k: usize, pert: usize) -> Matrix {
+    /// `pool` is this perturbation's §3.2 inner kernel budget.
+    fn fit_w(&self, k: usize, pert: usize, pool: &ThreadPool) -> Matrix {
         let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | pert as u64);
         let xp = self.resample(&mut rng);
         match self.backend {
             Backend::Native => {
                 let w0 = Matrix::rand_uniform(self.x.rows, k, &mut rng).map(|v| v + 0.01);
                 let h0 = Matrix::rand_uniform(k, self.x.cols, &mut rng).map(|v| v + 0.01);
-                let fit = nmf_from_with(&xp, w0, h0, self.bursts * 25, &self.pool);
+                let fit = nmf_from_with(&xp, w0, h0, self.bursts * 25, pool);
                 fit.w
             }
             #[cfg(feature = "pjrt")]
@@ -181,9 +207,17 @@ impl NmfkEvaluator {
             // but it is excluded from search spaces (K starts at 2).
             return 1.0;
         }
-        let ws: Vec<Matrix> =
-            (0..self.perturbations).map(|p| self.fit_w(k, p)).collect();
-        perturbation_silhouette(&ws)
+        // Perturbations are embarrassingly parallel: one RNG stream per
+        // (k, pert), results collected in perturbation order, kernels
+        // bitwise budget-invariant — so the score is identical for
+        // every (outer_tasks, eval_threads) configuration.
+        // `outer_tasks` forwards as-is: `outer_split` treats 0 as auto.
+        let ws: Vec<Matrix> = self.pool.map_tasks(
+            self.outer_tasks,
+            self.perturbations,
+            |p, inner| self.fit_w(k, p, inner),
+        );
+        perturbation_silhouette_with(&ws, &self.pool)
     }
 }
 
@@ -233,6 +267,10 @@ mod tests {
         let ev8 = NmfkEvaluator::native(ds.x, 8, 9).with_eval_threads(8);
         assert_eq!(ev1.evaluate(3).to_bits(), ev8.evaluate(3).to_bits());
     }
+
+    // Bitwise invariance across the full (outer_tasks, eval_threads)
+    // grid — including oversubscribed requests — is asserted for all
+    // three evaluators in rust/tests/kernel_equivalence.rs.
 
     #[test]
     #[should_panic]

@@ -6,7 +6,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::KScorer;
-use crate::linalg::{perturbation_silhouette, rescal_with, Matrix};
+use crate::linalg::{perturbation_silhouette_with, rescal_with, Matrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32, rank_mask};
 #[cfg(feature = "pjrt")]
@@ -32,6 +32,9 @@ pub struct RescalEvaluator {
     seed: u64,
     /// Intra-evaluation thread budget for the native kernels (§3.2).
     pool: ThreadPool,
+    /// Concurrent perturbation tasks (§3.2 outer level): `0` = auto
+    /// (as many as the pool budget allows), `1` = sequential.
+    outer_tasks: usize,
 }
 
 impl RescalEvaluator {
@@ -55,6 +58,7 @@ impl RescalEvaluator {
             store: Some(store),
             seed,
             pool: ThreadPool::serial(),
+            outer_tasks: 0,
         })
     }
 
@@ -71,6 +75,7 @@ impl RescalEvaluator {
             store: None,
             seed,
             pool: ThreadPool::serial(),
+            outer_tasks: 0,
         }
     }
 
@@ -78,6 +83,25 @@ impl RescalEvaluator {
     /// (§3.2); scores are bitwise identical under every budget.
     pub fn with_eval_threads(mut self, threads: usize) -> Self {
         self.pool = ThreadPool::new(threads);
+        self
+    }
+
+    /// Like [`RescalEvaluator::with_eval_threads`], but sizes the
+    /// persistent worker set for `submitters` concurrent engine
+    /// workers sharing this evaluator (`ThreadPool::for_submitters`),
+    /// so parallel-search runs keep the whole §3.2 budget busy.
+    pub fn with_eval_threads_for(mut self, threads: usize, submitters: usize) -> Self {
+        self.pool = ThreadPool::for_submitters(threads, submitters);
+        self
+    }
+
+    /// Concurrent perturbation tasks (§3.2 outer level), split against
+    /// the eval-thread budget by `util::pool::outer_split`. `0` (the
+    /// default) = as many as the budget allows. Per-perturbation RNG
+    /// streams are unchanged, so scores are bitwise identical under
+    /// every `(outer_tasks, eval_threads)` pair.
+    pub fn with_outer_tasks(mut self, tasks: usize) -> Self {
+        self.outer_tasks = tasks;
         self
     }
 
@@ -105,12 +129,13 @@ impl RescalEvaluator {
     }
 
     /// One fit at rank k; returns the active A columns (n × k).
-    fn fit_a(&self, k: usize, pert: usize) -> Matrix {
+    /// `pool` is this perturbation's §3.2 inner kernel budget.
+    fn fit_a(&self, k: usize, pert: usize, pool: &ThreadPool) -> Matrix {
         let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | pert as u64);
         let tp = self.resampled(&mut rng);
         match self.backend {
             Backend::Native => {
-                let fit = rescal_with(&tp, k, self.bursts * 10, &mut rng, &self.pool);
+                let fit = rescal_with(&tp, k, self.bursts * 10, &mut rng, pool);
                 fit.a
             }
             #[cfg(feature = "pjrt")]
@@ -164,9 +189,16 @@ impl RescalEvaluator {
         if k == 1 {
             return 1.0;
         }
-        let activations: Vec<Matrix> =
-            (0..self.perturbations).map(|p| self.fit_a(k, p)).collect();
-        perturbation_silhouette(&activations)
+        // Perturbations are embarrassingly parallel: one RNG stream per
+        // (k, pert), ordered collection, budget-invariant kernels — so
+        // the score is identical for every (outer_tasks, eval_threads).
+        // `outer_tasks` forwards as-is: `outer_split` treats 0 as auto.
+        let activations: Vec<Matrix> = self.pool.map_tasks(
+            self.outer_tasks,
+            self.perturbations,
+            |p, inner| self.fit_a(k, p, inner),
+        );
+        perturbation_silhouette_with(&activations, &self.pool)
     }
 }
 
@@ -205,4 +237,8 @@ mod tests {
         let ev2 = RescalEvaluator::native(t.slices, 6, 5);
         assert_eq!(ev1.evaluate(2), ev2.evaluate(2));
     }
+
+    // Bitwise invariance across the full (outer_tasks, eval_threads)
+    // grid — including oversubscribed requests — is asserted for all
+    // three evaluators in rust/tests/kernel_equivalence.rs.
 }

@@ -1,45 +1,379 @@
-//! Scoped, zero-dependency data-parallel thread pool (DESIGN.md S19).
+//! Persistent, zero-dependency data-parallel worker pool (DESIGN.md S19).
 //!
 //! The evaluation kernels (`linalg/pairwise`, tiled scorers, the
-//! reference-model matmuls) are data-parallel over row blocks; this
-//! module gives them a chunked parallel-for built only on
-//! `std::thread::scope`. Threads are spawned per call and joined before
-//! return, so borrowed inputs need no `'static` bound and there is no
-//! persistent worker state to manage or poison.
+//! reference-model matmuls) are data-parallel over row blocks. The NMF
+//! path issues thousands of small matmuls per `score(k)`, so the pool
+//! keeps a set of **long-lived workers** behind a submission queue:
+//! workers park on a condvar when idle and claim work from an atomic
+//! cursor when a job is posted. Nothing is spawned per call — a
+//! parallel-for costs one queue push + condvar wake instead of an OS
+//! thread spawn/join round-trip (`benches/pool_overhead.rs` measures
+//! the difference on the many-small-calls shape).
 //!
-//! Determinism contract: chunk boundaries passed to
-//! [`ThreadPool::for_chunks`] / [`ThreadPool::map_chunks`] depend only
-//! on `(len, chunk)`, never on the thread count, and `map_chunks`
-//! returns results in chunk order — so a caller that folds the partials
-//! serially gets the same floating-point result under every thread
-//! budget. [`ThreadPool::for_slices_mut`] splits by thread count, but
-//! every element is produced by exactly one closure invocation, so any
-//! kernel whose per-element arithmetic is independent of its chunk
-//! (all of ours) is also budget-invariant.
+//! Borrow-friendliness is preserved: a submitted job holds a
+//! lifetime-erased pointer to the caller's closure, and the submitting
+//! call **blocks until every chunk has finished executing** before it
+//! returns, so borrowed (non-`'static`) inputs remain valid for every
+//! dereference. The submitter always participates in its own job, which
+//! also guarantees progress even when every worker is busy (nested jobs
+//! can never deadlock: a waiting submitter has already drained the
+//! cursor, so it only waits on chunks that are mid-flight on other
+//! threads, and chunk execution never blocks on another job's
+//! completion).
 //!
-//! Oversubscription rule (§3.2): engine workers × intra-eval threads
-//! must not exceed the machine; [`eval_thread_budget`] implements the
-//! division and `config::ExperimentConfig::resolved_eval_threads` /
-//! `bleed search --eval-threads` plumb it.
+//! Determinism contract (unchanged from the spawn-per-call pool): chunk
+//! boundaries passed to [`ThreadPool::for_chunks`] /
+//! [`ThreadPool::map_chunks`] depend only on `(len, chunk)`, never on
+//! the thread count, and `map_chunks` returns results in chunk order —
+//! so a caller that folds the partials serially gets the same
+//! floating-point result under every thread budget.
+//! [`ThreadPool::for_slices_mut`] splits by thread count, but every
+//! element is produced by exactly one closure invocation, so any kernel
+//! whose per-element arithmetic is independent of its chunk (all of
+//! ours) is also budget-invariant.
+//!
+//! Two-level budget rule (§3.2): engine workers × intra-eval threads
+//! must not exceed the machine ([`eval_thread_budget`]), and *within*
+//! one evaluation, outer tasks × inner kernel threads must not exceed
+//! the eval budget ([`outer_split`]). [`ThreadPool::scope_tasks`] /
+//! [`ThreadPool::map_tasks`] implement the task layer: embarrassingly
+//! parallel outer loops (NMFk perturbations, K-means restarts, RESCAL
+//! slice updates) run as tasks on the same worker set, each handed an
+//! inner [`ThreadPool`] view sized by `outer_split` — the workers are
+//! shared, not multiplied, so oversubscription is structurally
+//! impossible no matter how the two levels are configured.
+//!
+//! Panic policy: a panic inside a chunk is caught on the executing
+//! worker, the job still runs to completion (every claimed chunk is
+//! accounted), and the **first** payload is re-thrown on the submitting
+//! thread when the call returns. Workers survive panics and keep
+//! serving later jobs — the pool is never poisoned.
 
+use std::collections::VecDeque;
+use std::fmt;
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
-/// A thread budget for chunked parallel-for over slices.
-#[derive(Debug, Clone)]
-pub struct ThreadPool {
-    threads: usize,
+/// Total worker OS threads ever spawned by any pool in this process —
+/// introspection for the reuse tests and the spawn-overhead bench. A
+/// persistent pool moves this once at construction; a spawn-per-call
+/// design would move it on every parallel-for.
+static SPAWNED_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Process-wide count of pool worker threads ever spawned.
+pub fn spawned_worker_count() -> usize {
+    SPAWNED_WORKERS.load(Ordering::SeqCst)
 }
 
-impl ThreadPool {
-    /// Pool with a fixed thread budget (clamped to at least 1).
-    pub fn new(threads: usize) -> Self {
-        Self {
-            threads: threads.max(1),
+/// Lock a mutex ignoring poisoning: pool bookkeeping is just counters
+/// and flags, and a panicking chunk must never wedge the pool (the
+/// payload is re-thrown on the submitter instead).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Lifetime-erased pointer to the submitting call's chunk closure.
+///
+/// Safety: the submitter blocks until `pending == 0` before returning,
+/// and a worker only dereferences after claiming a chunk index below
+/// `n_chunks` — which implies that chunk has not yet executed, hence
+/// `pending > 0`, hence the closure (on the submitter's stack) is still
+/// live. After the cursor is exhausted the pointer may dangle inside
+/// still-queued `Job` handles, but it is never dereferenced again.
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+/// One submitted parallel-for: `n_chunks` invocations of the closure,
+/// claimed from an atomic cursor by at most `limit` participants.
+struct Job {
+    task: TaskRef,
+    n_chunks: usize,
+    /// Next chunk index to claim.
+    cursor: AtomicUsize,
+    /// Chunks claimed but not yet finished + chunks not yet claimed.
+    pending: AtomicUsize,
+    /// Participants so far (the submitter counts as one).
+    joined: AtomicUsize,
+    /// Max participants — the §3.2 budget for this call.
+    limit: usize,
+    /// Completion flag + first panic payload, guarded together so the
+    /// submitter observes both atomically.
+    done: Mutex<JobDone>,
+    cv: Condvar,
+}
+
+struct JobDone {
+    finished: bool,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Job {
+    /// Reserve a participant slot (the limit includes the submitter).
+    fn try_join(&self) -> bool {
+        let mut seen = self.joined.load(Ordering::Relaxed);
+        loop {
+            if seen >= self.limit {
+                return false;
+            }
+            match self.joined.compare_exchange_weak(
+                seen,
+                seen + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => seen = now,
+            }
         }
     }
 
-    /// Single-threaded pool: every `for_*` runs inline, no spawns.
+    /// Claim and execute chunks until the cursor is exhausted. Called by
+    /// the submitter and by every joined worker.
+    fn run_chunks(&self) {
+        loop {
+            let ci = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if ci >= self.n_chunks {
+                return;
+            }
+            // Safety: see `TaskRef` — ci < n_chunks implies the closure
+            // is still live on the submitting stack.
+            let task = unsafe { &*self.task.0 };
+            if let Err(payload) = panic::catch_unwind(AssertUnwindSafe(|| task(ci))) {
+                let mut d = lock(&self.done);
+                if d.panic.is_none() {
+                    d.panic = Some(payload);
+                }
+            }
+            // AcqRel: the final decrement observes every other
+            // participant's chunk effects, and the submitter observes
+            // them through the `done` mutex in turn.
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut d = lock(&self.done);
+                d.finished = true;
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+struct QueueState {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+/// Shared between workers and pool handles.
+struct RegistryInner {
+    queue: Mutex<QueueState>,
+    cond: Condvar,
+}
+
+impl RegistryInner {
+    fn worker_loop(&self) {
+        let mut q = lock(&self.queue);
+        loop {
+            if q.shutdown {
+                return;
+            }
+            // Scan front-to-back for a job with unclaimed chunks and a
+            // free participant slot; drop exhausted jobs on the way.
+            let mut picked = None;
+            let mut i = 0;
+            while i < q.jobs.len() {
+                let job = &q.jobs[i];
+                if job.cursor.load(Ordering::Relaxed) >= job.n_chunks {
+                    q.jobs.remove(i);
+                    continue;
+                }
+                if job.try_join() {
+                    picked = Some(job.clone());
+                    break;
+                }
+                i += 1;
+            }
+            match picked {
+                Some(job) => {
+                    drop(q);
+                    job.run_chunks();
+                    q = lock(&self.queue);
+                }
+                None => q = self.cond.wait(q).unwrap_or_else(|e| e.into_inner()),
+            }
+        }
+    }
+}
+
+/// Worker lifecycle handle: owned (via `Arc`) by every [`ThreadPool`]
+/// view onto the same worker set. Dropping the last view signals
+/// shutdown and joins the workers.
+struct Registry {
+    inner: Arc<RegistryInner>,
+    workers: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Registry {
+    fn new(workers: usize) -> Self {
+        let inner = Arc::new(RegistryInner {
+            queue: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            cond: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("bb-pool-{i}"))
+                    .spawn(move || inner.worker_loop())
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        SPAWNED_WORKERS.fetch_add(workers, Ordering::SeqCst);
+        Self {
+            inner,
+            workers,
+            handles: Mutex::new(handles),
+        }
+    }
+
+    /// Post a job, participate in it, wait for completion, re-throw the
+    /// first chunk panic (if any) on this thread.
+    fn run_job(&self, n_chunks: usize, limit: usize, run: &(dyn Fn(usize) + Sync)) {
+        debug_assert!(n_chunks > 0 && limit >= 1);
+        // Safety: lifetime erasure — `run` outlives the job because this
+        // function does not return until every chunk has executed.
+        let erased: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(run)
+        };
+        let task = TaskRef(erased as *const (dyn Fn(usize) + Sync));
+        let job = Arc::new(Job {
+            task,
+            n_chunks,
+            cursor: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n_chunks),
+            joined: AtomicUsize::new(1), // the submitter
+            limit,
+            done: Mutex::new(JobDone {
+                finished: false,
+                panic: None,
+            }),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = lock(&self.inner.queue);
+            q.jobs.push_back(Arc::clone(&job));
+        }
+        // Wake only the workers this job can admit (the submitter is
+        // one participant already): waking all of them would pay a
+        // futex round-trip per parked worker on every small call —
+        // the exact hot path the persistent pool exists to serve. A
+        // worker woken here that loses the try_join race rescans the
+        // queue and parks again, so an over-notify is harmless and an
+        // under-notify impossible (notify_one on an empty waiter set
+        // is a no-op, and the submitter always drains its own job).
+        for _ in 0..limit.saturating_sub(1).min(self.workers) {
+            self.inner.cond.notify_one();
+        }
+        job.run_chunks();
+        // The cursor is exhausted; wait for chunks mid-flight on workers.
+        {
+            let mut d = lock(&job.done);
+            while !d.finished {
+                d = job.cv.wait(d).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        // Drop the job from the queue if no worker scan removed it yet.
+        {
+            let mut q = lock(&self.inner.queue);
+            if let Some(ix) = q.jobs.iter().position(|j| Arc::ptr_eq(j, &job)) {
+                q.jobs.remove(ix);
+            }
+        }
+        let payload = lock(&job.done).panic.take();
+        if let Some(p) = payload {
+            panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for Registry {
+    fn drop(&mut self) {
+        {
+            let mut q = lock(&self.inner.queue);
+            q.shutdown = true;
+        }
+        self.inner.cond.notify_all();
+        for h in lock(&self.handles).drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper so disjoint `&mut` pieces can be re-materialized
+/// inside job chunks (`for_slices_mut`).
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// A thread-budget view onto a persistent worker set.
+///
+/// `new(t)` spawns `t - 1` long-lived workers (the submitting thread is
+/// always the t-th participant); [`ThreadPool::capped`] and the inner
+/// pools handed out by [`ThreadPool::scope_tasks`] are cheap views that
+/// **share** the same workers under a smaller budget. Cloning shares
+/// the workers too; the last clone to drop joins them.
+#[derive(Clone)]
+pub struct ThreadPool {
+    threads: usize,
+    registry: Option<Arc<Registry>>,
+}
+
+impl fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.threads)
+            .field("workers", &self.workers())
+            .finish()
+    }
+}
+
+impl ThreadPool {
+    /// Pool with a fixed thread budget (clamped to at least 1). Budgets
+    /// above 1 spawn `threads - 1` persistent workers immediately.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        Self {
+            threads,
+            registry: (threads > 1).then(|| Arc::new(Registry::new(threads - 1))),
+        }
+    }
+
+    /// Pool sized for `submitters` concurrent submitting threads, each
+    /// entitled to the full `threads` budget per call. One shared
+    /// evaluator serves every engine worker, so a registry sized for a
+    /// single submitter (`threads − 1` workers) would undersubscribe
+    /// the machine under `ranks × threads_per_rank` concurrent
+    /// `score(k)` calls; this spawns `submitters × (threads − 1)`
+    /// workers instead. Each call's participant limit is still
+    /// `threads` — one submitter can never exceed its §3.2 share, but
+    /// `submitters` concurrent calls together keep
+    /// `submitters × threads` threads busy, matching what that many
+    /// spawn-per-call pools provided.
+    pub fn for_submitters(threads: usize, submitters: usize) -> Self {
+        let threads = threads.max(1);
+        let workers = (threads - 1) * submitters.max(1);
+        Self {
+            threads,
+            registry: (workers > 0).then(|| Arc::new(Registry::new(workers))),
+        }
+    }
+
+    /// Single-threaded pool: every `for_*` runs inline, no workers.
     pub fn serial() -> Self {
         Self::new(1)
     }
@@ -53,10 +387,20 @@ impl ThreadPool {
         self.threads
     }
 
-    /// This budget bounded to at most `cap` threads. Kernels pass
-    /// `work / MIN_WORK_PER_THREAD` so tiny inputs never pay a spawn.
+    /// Long-lived worker threads behind this pool (0 when serial).
+    pub fn workers(&self) -> usize {
+        self.registry.as_ref().map_or(0, |r| r.workers)
+    }
+
+    /// This budget bounded to at most `cap` threads — a view sharing
+    /// the same persistent workers, so capping in a hot loop costs an
+    /// `Arc` clone, never a spawn. Kernels pass `work /
+    /// MIN_WORK_PER_THREAD` so tiny inputs never pay a queue push.
     pub fn capped(&self, cap: usize) -> ThreadPool {
-        ThreadPool::new(self.threads.min(cap.max(1)))
+        ThreadPool {
+            threads: self.threads.min(cap.max(1)),
+            registry: self.registry.clone(),
+        }
     }
 
     /// Chunked parallel-for over `0..len`: `f(chunk_index, start, end)`
@@ -69,30 +413,15 @@ impl ThreadPool {
         }
         let chunk = chunk.max(1);
         let n_chunks = len.div_ceil(chunk);
-        let workers = self.threads.min(n_chunks);
-        if workers <= 1 {
-            for ci in 0..n_chunks {
-                let s = ci * chunk;
-                f(ci, s, (s + chunk).min(len));
-            }
-            return;
-        }
-        let cursor = AtomicUsize::new(0);
-        let drain = |cursor: &AtomicUsize| loop {
-            let ci = cursor.fetch_add(1, Ordering::Relaxed);
-            if ci >= n_chunks {
-                break;
-            }
+        let run = |ci: usize| {
             let s = ci * chunk;
             f(ci, s, (s + chunk).min(len));
         };
-        std::thread::scope(|scope| {
-            for _ in 0..workers - 1 {
-                scope.spawn(|| drain(&cursor));
-            }
-            // The caller's thread is worker 0.
-            drain(&cursor);
-        });
+        let budget = self.threads.min(n_chunks);
+        match &self.registry {
+            Some(reg) if budget > 1 => reg.run_job(n_chunks, budget, &run),
+            _ => (0..n_chunks).for_each(run),
+        }
     }
 
     /// Chunked parallel map: one `T` per chunk, returned **in chunk
@@ -110,11 +439,11 @@ impl ThreadPool {
         let n_chunks = len.div_ceil(chunk);
         let slots: Vec<Mutex<Option<T>>> = (0..n_chunks).map(|_| Mutex::new(None)).collect();
         self.for_chunks(len, chunk, |ci, s, e| {
-            *slots[ci].lock().unwrap() = Some(f(s, e));
+            *lock(&slots[ci]) = Some(f(s, e));
         });
         slots
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("chunk ran"))
+            .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()).expect("chunk ran"))
             .collect()
     }
 
@@ -136,24 +465,77 @@ impl ThreadPool {
             return;
         }
         let workers = self.threads.min(units);
-        if workers <= 1 {
+        let Some(reg) = self.registry.as_ref().filter(|_| workers > 1) else {
             f(0, 0, data);
             return;
-        }
+        };
         let per = units.div_ceil(workers);
-        std::thread::scope(|scope| {
-            // Spawn all pieces but the last; the caller's thread works
-            // the last one instead of idling at the join.
-            let mut pieces = data.chunks_mut(per * unit).enumerate().peekable();
-            while let Some((pi, piece)) = pieces.next() {
-                let f = &f;
-                if pieces.peek().is_some() {
-                    scope.spawn(move || f(pi, pi * per, piece));
-                } else {
-                    f(pi, pi * per, piece);
-                }
-            }
+        let len = data.len();
+        // Piece count from the *element* length, exactly like a
+        // `chunks_mut(per * unit)` split. With whole-unit data (the
+        // contract, debug-asserted above) this equals units/per pieces;
+        // it also means a contract-violating ragged tail is still
+        // handed to `f` in release builds rather than silently skipped.
+        let piece_len = per * unit;
+        let n_pieces = len.div_ceil(piece_len);
+        let base = SendPtr(data.as_mut_ptr());
+        let run = |pi: usize| {
+            let start = pi * piece_len;
+            let end = ((pi + 1) * piece_len).min(len);
+            // Safety: pieces are disjoint ranges of the exclusively
+            // borrowed `data`, each materialized in exactly one chunk.
+            let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+            f(pi, pi * per, piece);
+        };
+        reg.run_job(n_pieces, n_pieces, &run);
+    }
+
+    /// Nested task layer (§3.2 two-level budget): run `tasks` closures
+    /// `f(task_index, inner_pool)` with at most `outer` concurrent
+    /// (`0` = auto: as many as the budget allows), each handed an inner
+    /// pool view sized by [`outer_split`] so outer × inner never
+    /// exceeds this pool's budget. Tasks run on the **same** persistent
+    /// workers as kernel jobs (one shared worker set, so nesting levels
+    /// share rather than multiply threads), and an oversubscribed
+    /// `outer` request is clamped, never spawned.
+    ///
+    /// Determinism: which task runs on which worker is unspecified, so
+    /// tasks must be independent (ours are: one RNG stream per task);
+    /// inner pools only change the kernel thread budget, which the
+    /// kernels are bitwise-invariant to.
+    pub fn scope_tasks(&self, outer: usize, tasks: usize, f: impl Fn(usize, &ThreadPool) + Sync) {
+        if tasks == 0 {
+            return;
+        }
+        let (outer, inner_budget) = outer_split(self.threads, outer, tasks);
+        let inner = ThreadPool {
+            threads: inner_budget,
+            registry: self.registry.clone(),
+        };
+        let run = |ti: usize| f(ti, &inner);
+        match &self.registry {
+            Some(reg) if outer > 1 => reg.run_job(tasks, outer, &run),
+            _ => (0..tasks).for_each(run),
+        }
+    }
+
+    /// [`ThreadPool::scope_tasks`] returning one `T` per task **in task
+    /// order**, so a serial fold over the results is identical to the
+    /// sequential loop's.
+    pub fn map_tasks<T: Send>(
+        &self,
+        outer: usize,
+        tasks: usize,
+        f: impl Fn(usize, &ThreadPool) -> T + Sync,
+    ) -> Vec<T> {
+        let slots: Vec<Mutex<Option<T>>> = (0..tasks).map(|_| Mutex::new(None)).collect();
+        self.scope_tasks(outer, tasks, |ti, pool| {
+            *lock(&slots[ti]) = Some(f(ti, pool));
         });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()).expect("task ran"))
+            .collect()
     }
 }
 
@@ -169,6 +551,22 @@ pub fn available_threads() -> usize {
 /// oversubscribes the machine (§3.2). Always at least 1.
 pub fn eval_thread_budget(total: usize, workers: usize) -> usize {
     (total.max(1) / workers.max(1)).max(1)
+}
+
+/// Two-level split of an intra-evaluation budget (§3.2): `outer`
+/// concurrent tasks × inner kernel threads each, with
+/// `outer × inner <= total` always. `outer == 0` means *auto* — as
+/// many tasks as the budget allows — matching the config/CLI
+/// convention (`parallel.outer_tasks = 0`), so a raw setting can be
+/// forwarded here without call-site translation. A non-zero request is
+/// clamped to the task count and to the budget (an oversubscribed
+/// request degrades to task-per-thread, never to more threads).
+/// Returns `(outer, inner)`.
+pub fn outer_split(total: usize, outer: usize, tasks: usize) -> (usize, usize) {
+    let total = total.max(1);
+    let outer = if outer == 0 { total } else { outer };
+    let outer = outer.min(tasks.max(1)).min(total);
+    (outer, (total / outer).max(1))
 }
 
 #[cfg(test)]
@@ -226,6 +624,7 @@ mod tests {
         assert!(pool.map_chunks(0, 4, |_, _| 1u8).is_empty());
         let one = pool.map_chunks(1, 1000, |s, e| e - s);
         assert_eq!(one, vec![1]);
+        pool.scope_tasks(4, 0, |_, _| panic!("no tasks"));
     }
 
     #[test]
@@ -238,5 +637,174 @@ mod tests {
         assert_eq!(ThreadPool::new(8).capped(3).threads(), 3);
         assert_eq!(ThreadPool::new(2).capped(100).threads(), 2);
         assert_eq!(ThreadPool::new(8).capped(0).threads(), 1);
+    }
+
+    #[test]
+    fn outer_split_never_oversubscribes() {
+        // outer × inner <= total in every configuration.
+        for total in [1usize, 2, 3, 4, 7, 8, 16] {
+            for outer in [0usize, 1, 2, 4, 8, 64] {
+                for tasks in [1usize, 3, 4, 100] {
+                    let (o, i) = outer_split(total, outer, tasks);
+                    assert!(o >= 1 && i >= 1);
+                    assert!(o * i <= total.max(1), "({total},{outer},{tasks}) -> ({o},{i})");
+                    assert!(o <= tasks);
+                }
+            }
+        }
+        assert_eq!(outer_split(8, 4, 100), (4, 2));
+        assert_eq!(outer_split(8, 1, 100), (1, 8));
+        assert_eq!(outer_split(2, 64, 8), (2, 1)); // oversubscribed request clamps
+        assert_eq!(outer_split(1, 4, 4), (1, 1));
+        // 0 = auto: fill the budget (the config/CLI convention).
+        assert_eq!(outer_split(8, 0, 100), (8, 1));
+        assert_eq!(outer_split(4, 0, 2), (2, 2));
+        assert_eq!(outer_split(1, 0, 5), (1, 1));
+    }
+
+    #[test]
+    fn for_submitters_sizes_workers_for_concurrent_callers() {
+        let pool = ThreadPool::for_submitters(4, 3);
+        assert_eq!(pool.threads(), 4, "per-call budget is unchanged");
+        assert_eq!(pool.workers(), 9, "3 submitters x (4 - 1) workers");
+        // Serial budget never spawns, regardless of submitter count.
+        assert_eq!(ThreadPool::for_submitters(1, 8).workers(), 0);
+        assert_eq!(ThreadPool::for_submitters(0, 0).threads(), 1);
+        // The wider worker set still serves calls correctly.
+        let got = pool.map_chunks(25, 10, |s, e| (s, e));
+        assert_eq!(got, vec![(0, 10), (10, 20), (20, 25)]);
+    }
+
+    #[test]
+    fn capped_shares_workers_instead_of_spawning() {
+        let pool = ThreadPool::new(4);
+        let before = spawned_worker_count();
+        for _ in 0..100 {
+            for cap in [1usize, 2, 3, 100] {
+                let view = pool.capped(cap);
+                view.for_chunks(64, 8, |_, _, _| {});
+            }
+        }
+        // Unrelated tests may create pools concurrently, so bound the
+        // growth instead of asserting an exact global count: per-call
+        // spawning here would add >= 400 workers.
+        let grew = spawned_worker_count() - before;
+        assert!(grew < 100, "capped() must never spawn: {grew} new workers");
+        assert_eq!(pool.capped(2).workers(), pool.workers());
+    }
+
+    #[test]
+    fn workers_persist_across_calls() {
+        let pool = ThreadPool::new(3);
+        let before = spawned_worker_count();
+        for _ in 0..500 {
+            pool.for_chunks(97, 8, |_, _, _| {});
+        }
+        // Other tests may create pools concurrently, so assert "this
+        // loop's 500 calls did not spawn ~1000 threads", not an exact
+        // global count.
+        let grew = spawned_worker_count() - before;
+        assert!(grew < 100, "per-call spawning detected: {grew} new workers");
+        assert_eq!(pool.workers(), 2);
+    }
+
+    #[test]
+    fn panic_in_chunk_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let caught = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.for_chunks(40, 4, |ci, _, _| {
+                if ci == 7 {
+                    panic!("chunk 7 exploded");
+                }
+            });
+        }));
+        let payload = caught.expect_err("panic must propagate to the submitter");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("chunk 7"), "wrong payload: {msg}");
+        // Every worker survived; the pool still computes correctly.
+        let got = pool.map_chunks(25, 10, |s, e| e - s);
+        assert_eq!(got, vec![10, 10, 5]);
+    }
+
+    #[test]
+    fn scope_tasks_runs_every_task_once_with_split_budget() {
+        for (threads, outer) in [(1usize, 1usize), (2, 2), (4, 2), (4, 8), (8, 3)] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<AtomicU64> = (0..9).map(|_| AtomicU64::new(0)).collect();
+            pool.scope_tasks(outer, 9, |ti, inner| {
+                hits[ti].fetch_add(1, Ordering::SeqCst);
+                let (o, want_inner) = outer_split(threads, outer, 9);
+                assert_eq!(inner.threads(), want_inner);
+                assert!(o * want_inner <= threads.max(1));
+                // Inner kernel calls work and share the same workers.
+                let sums = inner.map_chunks(12, 5, |s, e| e - s);
+                assert_eq!(sums, vec![5, 5, 2]);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        }
+    }
+
+    #[test]
+    fn map_tasks_returns_in_task_order() {
+        let pool = ThreadPool::new(4);
+        let got = pool.map_tasks(4, 10, |ti, _| ti * ti);
+        assert_eq!(got, (0..10).map(|t| t * t).collect::<Vec<_>>());
+        let serial = ThreadPool::serial().map_tasks(4, 10, |ti, _| ti * ti);
+        assert_eq!(got, serial);
+    }
+
+    #[test]
+    fn nested_tasks_share_one_worker_set() {
+        let pool = ThreadPool::new(4);
+        let before = spawned_worker_count();
+        let total: u64 = pool
+            .map_tasks(4, 6, |ti, inner| {
+                // Two levels of nesting, all on the same registry.
+                inner
+                    .map_tasks(2, 3, |tj, leaf| {
+                        leaf.map_chunks(8, 2, |s, e| (s + e) as u64).iter().sum::<u64>()
+                            + (ti * 100 + tj * 10) as u64
+                    })
+                    .iter()
+                    .sum::<u64>()
+            })
+            .iter()
+            .sum();
+        let serial: u64 = ThreadPool::serial()
+            .map_tasks(4, 6, |ti, inner| {
+                inner
+                    .map_tasks(2, 3, |tj, leaf| {
+                        leaf.map_chunks(8, 2, |s, e| (s + e) as u64).iter().sum::<u64>()
+                            + (ti * 100 + tj * 10) as u64
+                    })
+                    .iter()
+                    .sum::<u64>()
+            })
+            .iter()
+            .sum();
+        assert_eq!(total, serial);
+        // Bounded, not exact: unrelated tests may create pools
+        // concurrently. Spawn-per-task nesting would add hundreds.
+        let grew = spawned_worker_count() - before;
+        assert!(grew < 100, "nesting must not spawn workers: {grew} new");
+    }
+
+    #[test]
+    fn concurrent_external_submitters_are_safe() {
+        // Engine workers share one evaluator (and so one pool): hammer
+        // a single registry from several external threads at once.
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..50 {
+                        let s: u64 = pool.map_chunks(31, 4, |s, e| (e - s) as u64).iter().sum();
+                        total.fetch_add(s, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 50 * 31);
     }
 }

@@ -1,12 +1,15 @@
 //! Property suite: the blocked/parallel evaluation kernels match the
 //! retained textbook O(n²) oracles within 1e-9 across random shapes,
 //! label patterns, and thread budgets (1, 2, 8) — and are bitwise
-//! invariant under the thread budget.
+//! invariant under the thread budget, including the §3.2 nested
+//! `(outer_tasks × eval_threads)` task-level configurations.
 
+use binary_bleed::data::{gaussian_blobs, planted_nmf, planted_rescal};
 use binary_bleed::linalg::{
-    davies_bouldin_oracle, davies_bouldin_with, kmeans_with, nmf_from_with, silhouette_oracle,
-    silhouette_with, sq_dist_matrix, Matrix,
+    davies_bouldin_oracle, davies_bouldin_with, kmeans_with, nmf_from_with,
+    perturbation_silhouette_with, silhouette_oracle, silhouette_with, sq_dist_matrix, Matrix,
 };
+use binary_bleed::model::{KMeansEvaluator, KMeansScoring, NmfkEvaluator, RescalEvaluator};
 use binary_bleed::testing::{cases, check};
 use binary_bleed::util::{Pcg32, ThreadPool};
 
@@ -200,6 +203,98 @@ fn kmeans_fits_are_bitwise_thread_invariant() {
             }
             if f1.centroids.data != f8.centroids.data {
                 return Err("centroids diverged across thread budgets".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// §3.2 two-level grid: serial, old-style flat budgets (outer = 1), and
+/// nested outer × inner configurations, including oversubscribed
+/// requests (outer > budget, tasks > budget). Every evaluator score
+/// must be bitwise identical to the serial reference.
+const GRID: [(usize, usize); 6] = [(1, 1), (1, 8), (0, 4), (2, 4), (4, 2), (16, 2)];
+
+#[test]
+fn nmfk_scores_bitwise_invariant_across_task_grid() {
+    let mut rng = Pcg32::new(71);
+    let ds = planted_nmf(&mut rng, 48, 52, 3, 0.01);
+    let reference = NmfkEvaluator::native(ds.x.clone(), 9, 17)
+        .with_outer_tasks(1)
+        .evaluate(4);
+    for (outer, threads) in GRID {
+        let ev = NmfkEvaluator::native(ds.x.clone(), 9, 17)
+            .with_eval_threads(threads)
+            .with_outer_tasks(outer);
+        assert_eq!(
+            reference.to_bits(),
+            ev.evaluate(4).to_bits(),
+            "nmfk diverged at outer={outer} threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn kmeans_scores_bitwise_invariant_across_task_grid() {
+    let mut rng = Pcg32::new(72);
+    let ds = gaussian_blobs(&mut rng, 30, 4, 6, 9.0, 0.5);
+    let reference =
+        KMeansEvaluator::native(ds.x.clone(), 10, KMeansScoring::DaviesBouldin, 23)
+            .with_restarts(4)
+            .with_outer_tasks(1)
+            .evaluate(4);
+    for (outer, threads) in GRID {
+        let ev = KMeansEvaluator::native(ds.x.clone(), 10, KMeansScoring::DaviesBouldin, 23)
+            .with_restarts(4)
+            .with_eval_threads(threads)
+            .with_outer_tasks(outer);
+        assert_eq!(
+            reference.to_bits(),
+            ev.evaluate(4).to_bits(),
+            "kmeans diverged at outer={outer} threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn rescal_scores_bitwise_invariant_across_task_grid() {
+    let mut rng = Pcg32::new(73);
+    let t = planted_rescal(&mut rng, 3, 18, 2, 0.01);
+    let reference = RescalEvaluator::native(t.slices.clone(), 7, 29)
+        .with_outer_tasks(1)
+        .evaluate(3);
+    for (outer, threads) in GRID {
+        let ev = RescalEvaluator::native(t.slices.clone(), 7, 29)
+            .with_eval_threads(threads)
+            .with_outer_tasks(outer);
+        assert_eq!(
+            reference.to_bits(),
+            ev.evaluate(3).to_bits(),
+            "rescal diverged at outer={outer} threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn perturbation_silhouette_is_thread_invariant() {
+    check(
+        "perturbation-silhouette-thread-invariant",
+        cases(10),
+        |rng| {
+            let m = rng.gen_range(8, 50) as usize;
+            let k = rng.gen_range(2, 6) as usize;
+            let p = rng.gen_range(2, 6) as usize;
+            (0..p)
+                .map(|_| Matrix::rand_uniform(m, k, rng))
+                .collect::<Vec<Matrix>>()
+        },
+        |ws| {
+            let s1 = perturbation_silhouette_with(ws, &ThreadPool::serial());
+            for threads in [2usize, 8] {
+                let st = perturbation_silhouette_with(ws, &ThreadPool::new(threads));
+                if s1.to_bits() != st.to_bits() {
+                    return Err(format!("{s1} != {st} at {threads} threads"));
+                }
             }
             Ok(())
         },

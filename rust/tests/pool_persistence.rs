@@ -1,0 +1,118 @@
+//! Integration suite for the persistent worker pool (DESIGN.md S19):
+//! worker reuse across calls, panic propagation and pool survival, and
+//! bitwise kernel results under nested §3.2 task/thread configurations
+//! — including oversubscribed requests.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use binary_bleed::linalg::{silhouette_with, sq_dist_matrix, Matrix};
+use binary_bleed::util::pool::spawned_worker_count;
+use binary_bleed::util::{Pcg32, ThreadPool};
+
+#[test]
+fn workers_are_reused_across_many_calls() {
+    let pool = ThreadPool::new(4);
+    assert_eq!(pool.workers(), 3, "budget t spawns t-1 workers");
+    let before = spawned_worker_count();
+    let mut rng = Pcg32::new(1);
+    let a = Matrix::rand_normal(200, 6, &mut rng);
+    let b = Matrix::rand_normal(50, 6, &mut rng);
+    for _ in 0..300 {
+        // A realistic kernel call plus bare pool primitives.
+        let _ = sq_dist_matrix(&a, &b, &pool);
+        pool.for_chunks(512, 64, |_, _, _| {});
+        let _ = pool.map_chunks(128, 16, |s, e| e - s);
+    }
+    // Other test threads may create their own pools concurrently, so
+    // bound the growth rather than demanding an exact global count: a
+    // spawn-per-call pool would have added thousands of workers here.
+    let grew = spawned_worker_count() - before;
+    assert!(grew < 200, "per-call spawning detected: {grew} new workers");
+    assert_eq!(pool.workers(), 3, "worker set must stay stable");
+}
+
+#[test]
+fn capped_views_share_the_worker_set() {
+    let pool = ThreadPool::new(4);
+    let view = pool.capped(2);
+    assert_eq!(view.threads(), 2);
+    assert_eq!(view.workers(), pool.workers(), "views share workers");
+    let before = spawned_worker_count();
+    for _ in 0..200 {
+        let v = pool.capped(3);
+        v.for_chunks(96, 8, |_, _, _| {});
+    }
+    let grew = spawned_worker_count() - before;
+    assert!(grew < 100, "capped() spawned workers: {grew}");
+}
+
+#[test]
+fn panic_in_task_propagates_and_workers_survive() {
+    let pool = ThreadPool::new(4);
+    let workers_before = pool.workers();
+    for round in 0..3 {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.for_chunks(64, 4, |ci, _, _| {
+                if ci == 9 {
+                    panic!("boom in round {round}");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "chunk panic must reach the submitter");
+    }
+    // The same workers still serve jobs correctly after three panics.
+    assert_eq!(pool.workers(), workers_before);
+    let got = pool.map_chunks(40, 16, |s, e| e - s);
+    assert_eq!(got, vec![16, 16, 8]);
+}
+
+#[test]
+fn panic_inside_nested_task_propagates() {
+    let pool = ThreadPool::new(4);
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        pool.scope_tasks(2, 4, |ti, inner| {
+            inner.for_chunks(8, 2, |_, _, _| {});
+            if ti == 3 {
+                panic!("task 3 failed");
+            }
+        });
+    }));
+    assert!(caught.is_err(), "task panic must reach the submitter");
+    // Pool still healthy.
+    let sum: usize = pool.map_tasks(4, 5, |ti, _| ti).into_iter().sum();
+    assert_eq!(sum, 10);
+}
+
+#[test]
+fn kernel_results_identical_under_nested_and_oversubscribed_budgets() {
+    let mut rng = Pcg32::new(7);
+    let x = Matrix::rand_normal(160, 8, &mut rng);
+    let labels: Vec<usize> = (0..160).map(|i| i % 5).collect();
+    let reference = silhouette_with(&x, &labels, &ThreadPool::serial());
+    for threads in [2usize, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        // Flat call.
+        assert_eq!(
+            reference.to_bits(),
+            silhouette_with(&x, &labels, &pool).to_bits(),
+            "flat budget {threads}"
+        );
+        // Nested: the same kernel from inside tasks, every inner view.
+        for outer in [1usize, 2, 4, 16] {
+            let scores = pool.map_tasks(outer, 6, |_, inner| {
+                silhouette_with(&x, &labels, inner)
+            });
+            for (t, s) in scores.iter().enumerate() {
+                assert_eq!(
+                    reference.to_bits(),
+                    s.to_bits(),
+                    "outer={outer} threads={threads} task={t}"
+                );
+            }
+        }
+    }
+}
+
+// The outer_split budget invariant (outer × inner ≤ total across the
+// whole request grid, 0 = auto included) is property-tested once, in
+// util::pool's unit tests — not duplicated here.
