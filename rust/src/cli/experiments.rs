@@ -27,6 +27,7 @@ pub enum Family {
 /// E1 — Fig 7: score-vs-k curves with visited/pruned marks, NMFk
 /// (silhouette, maximize) and K-means (Davies-Bouldin, minimize).
 pub fn fig7(cfg: &ExperimentConfig) -> Result<()> {
+    cfg.install_simd();
     println!("== Fig 7: score-vs-k curves (Vanilla & Early-Stop) ==");
     let ks = cfg.ks();
     for (family, k_true) in [(Family::Nmfk, 15u32), (Family::Kmeans, 18u32)] {
@@ -140,6 +141,7 @@ fn build_family(
 /// vs Standard, for NMFk and K-means; prints the paper's mean-%-visited
 /// and RMSE summary lines.
 pub fn fig8(cfg: &ExperimentConfig, family: Family) -> Result<SweepSummary> {
+    cfg.install_simd();
     let label = match family {
         Family::Nmfk => "nmfk",
         Family::Kmeans => "kmeans",
@@ -249,6 +251,7 @@ pub fn fig8(cfg: &ExperimentConfig, family: Family) -> Result<SweepSummary> {
 
 /// E4 — Fig 9 + §IV-C: distributed NMF / RESCAL cost-model simulation.
 pub fn fig9(cfg: &ExperimentConfig) -> Result<()> {
+    cfg.install_simd();
     println!("== Fig 9: distributed NMF & RESCAL (cost-model simulation) ==");
     let mut rows = Vec::new();
     for (name, ks, cost) in [
@@ -352,6 +355,7 @@ pub fn fig9(cfg: &ExperimentConfig) -> Result<()> {
 
 /// E5 — Table II: the four chunk/sort composition orders.
 pub fn table2(cfg: &ExperimentConfig) -> Result<()> {
+    cfg.install_simd();
     println!("== Table II: chunk/sort compositions, k=[1..11], 2 resources ==");
     let ks: Vec<u32> = (1..=11).collect();
     let mut rows = Vec::new();
@@ -390,6 +394,7 @@ pub fn table2(cfg: &ExperimentConfig) -> Result<()> {
 /// E3 — §IV-B multi-node arXiv replay: K={2..100}, 10 ranks × 4 threads,
 /// Early-Stop vs Standard, k* = 71.
 pub fn arxiv(cfg: &ExperimentConfig) -> Result<()> {
+    cfg.install_simd();
     println!("== §IV-B multi-node (arXiv-like replay): K={{2..100}}, k*=71 ==");
     let ks: Vec<u32> = (2..=100).collect();
     // Replay profile: silhouette square wave with k*=71 plus the gradual
@@ -441,6 +446,7 @@ pub fn arxiv(cfg: &ExperimentConfig) -> Result<()> {
 
 /// E7 — Fig 4 walkthrough: crossings at {7, 8, 10, 24} ⇒ k*=24.
 pub fn fig4(cfg: &ExperimentConfig) -> Result<()> {
+    cfg.install_simd();
     println!("== Fig 4 walkthrough: selection crossings {{7,8,10,24}} ==");
     let ks: Vec<u32> = (2..=30).collect();
     let profile = ScoreProfile::fig4();
@@ -461,7 +467,10 @@ pub fn fig4(cfg: &ExperimentConfig) -> Result<()> {
 }
 
 /// E8 — Figs 2/3/5/6 operation dynamics: lockstep trace on k=[1..11].
-pub fn dynamics(_cfg: &ExperimentConfig) -> Result<()> {
+pub fn dynamics(cfg: &ExperimentConfig) -> Result<()> {
+    // Profile scorers only (no native kernels today), but every runner
+    // installs the policy on entry so the convention has no exceptions.
+    cfg.install_simd();
     println!("== Figs 2/3/5/6 dynamics: k=[1..11] ==");
     // Fig 2/3: 3 resources, Vanilla, k*=7 selected, 6/8 reject.
     let ks: Vec<u32> = (1..=11).collect();

@@ -4,7 +4,7 @@
 //! bleed search     --model nmfk|kmeans|profile --k-min 2 --k-max 30
 //!                  [--mode vanilla|early-stop|standard] [--order pre|post|in]
 //!                  [--ranks N] [--threads T] [--eval-threads E]
-//!                  [--outer-tasks O]
+//!                  [--outer-tasks O] [--simd auto|scalar|vector]
 //!                  [--backend hlo|native]
 //!                  [--k-true K] [--seed S] [--config FILE]
 //! bleed experiment fig7|fig8|fig9|table2|arxiv|fig4|dynamics|all
@@ -98,13 +98,19 @@ SEARCH FLAGS:
   --outer-tasks O          concurrent perturbations/restarts per evaluation,
                            split from the eval-thread budget so outer x inner
                            never oversubscribes (default 0 = auto; 1 = off)
+  --simd P                 kernel dispatch: auto|scalar|vector (default auto;
+                           scalar is the pre-SIMD oracle path — NUMERICS.md)
   --backend B              hlo|native (default native; hlo needs artifacts)
   --k-true K               planted k for the synthetic dataset (default 15)
   --select X --stop X      thresholds (default 0.75 / 0.2)
   --seed S                 rng seed
+  --config FILE            TOML defaults for seed and the parallel.*
+                           evaluation knobs (eval_threads, outer_tasks,
+                           simd); explicit flags win
 EXPERIMENT FLAGS:
   --preset P               quick|paper (default quick)
   --config FILE            TOML overrides (configs/*.toml)
+  --simd P                 kernel dispatch override: auto|scalar|vector
 ";
 
 /// Entry point for the `bleed` binary.
@@ -131,6 +137,13 @@ fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(seed) = args.flag_parse::<u64>("seed")? {
         cfg.seed = seed;
     }
+    if let Some(simd) = args.flag("simd") {
+        cfg.simd = crate::config::parse_simd(simd)?;
+    }
+    // No install_simd() here: every experiment runner installs the
+    // policy itself on entry (they are public entry points also called
+    // directly by library users and the smoke tests), so the single
+    // per-entry-point convention holds on every path.
     Ok(cfg)
 }
 
@@ -159,15 +172,27 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
+    // `--config FILE` supplies defaults for the evaluation knobs
+    // (seed, parallel.eval_threads / outer_tasks / simd); explicit
+    // flags always win.
+    let file_cfg = match args.flag("config") {
+        Some(path) => Some(ExperimentConfig::from_file(path)?),
+        None => None,
+    };
     let k_min: u32 = args.flag_parse("k-min")?.unwrap_or(2);
     let k_max: u32 = args.flag_parse("k-max")?.unwrap_or(30);
     let k_true: u32 = args.flag_parse("k-true")?.unwrap_or(15);
-    let seed: u64 = args.flag_parse("seed")?.unwrap_or(0xB1EED);
+    let seed: u64 = args
+        .flag_parse("seed")?
+        .unwrap_or_else(|| file_cfg.as_ref().map_or(0xB1EED, |c| c.seed));
     let ranks: usize = args.flag_parse("ranks")?.unwrap_or(1);
     let threads: usize = args.flag_parse("threads")?.unwrap_or(1);
     // Intra-evaluation thread budget (§3.2): explicit, or hardware
     // threads divided by the engine worker count.
-    let eval_threads: usize = match args.flag_parse("eval-threads")?.unwrap_or(0) {
+    let eval_threads_flag: usize = args
+        .flag_parse("eval-threads")?
+        .unwrap_or_else(|| file_cfg.as_ref().map_or(0, |c| c.eval_threads));
+    let eval_threads: usize = match eval_threads_flag {
         0 => crate::util::pool::eval_thread_budget(
             crate::util::pool::available_threads(),
             ranks.max(1) * threads.max(1),
@@ -175,7 +200,15 @@ fn cmd_search(args: &Args) -> Result<()> {
         n => n,
     };
     // Outer task level (§3.2): 0 = auto (fill the eval budget).
-    let outer_tasks: usize = args.flag_parse("outer-tasks")?.unwrap_or(0);
+    let outer_tasks: usize = args
+        .flag_parse("outer-tasks")?
+        .unwrap_or_else(|| file_cfg.as_ref().map_or(0, |c| c.outer_tasks));
+    // SIMD dispatch for every native kernel of this run (NUMERICS.md).
+    let simd = match args.flag("simd") {
+        Some(s) => crate::config::parse_simd(s)?,
+        None => file_cfg.as_ref().map_or(crate::util::SimdPolicy::Auto, |c| c.simd),
+    };
+    crate::util::simd::set_simd_policy(simd);
     let mode = parse_mode(&args.flag_or("mode", "vanilla"))?;
     let order = parse_traversal(&args.flag_or("order", "pre"))?;
     let select: f64 = args.flag_parse("select")?.unwrap_or(0.75);
@@ -208,9 +241,10 @@ fn cmd_search(args: &Args) -> Result<()> {
     println!(
         "searching K={{{k_min}..{k_max}}} model={model} mode={} order={} \
          ranks={ranks}x{threads} eval-threads={eval_threads} \
-         outer-tasks={outer_tasks} backend={}",
+         outer-tasks={outer_tasks} simd={} backend={}",
         mode.label(),
         order.label(),
+        simd.label(),
         backend.label()
     );
     let result = if ranks * threads <= 1 {

@@ -6,7 +6,8 @@
 
 pub mod toml;
 
-use crate::util::error::{bail, ensure, Context, Result};
+use crate::util::error::{anyhow, bail, ensure, Context, Result};
+use crate::util::simd::SimdPolicy;
 
 use crate::coordinator::{
     Mode, ParallelConfig, Pipeline, SearchPolicy, Thresholds, Traversal,
@@ -38,6 +39,12 @@ pub struct ExperimentConfig {
     /// budget allows), `1` = sequential. Scores are bitwise identical
     /// under every setting.
     pub outer_tasks: usize,
+    /// SIMD dispatch policy for the native evaluation kernels
+    /// (NUMERICS.md): `auto` (default, vector on), `scalar` (the
+    /// pre-SIMD oracle loops), `vector`. Installed process-globally by
+    /// [`ExperimentConfig::install_simd`]; TOML `parallel.simd`, CLI
+    /// `--simd`.
+    pub simd: SimdPolicy,
     pub traversal: Traversal,
     pub pipeline: Pipeline,
     /// Sweep density for figure experiments: evaluate every `stride`-th
@@ -68,6 +75,7 @@ impl ExperimentConfig {
             threads_per_rank: 2,
             eval_threads: 0,
             outer_tasks: 0,
+            simd: SimdPolicy::Auto,
             traversal: Traversal::PreOrder,
             pipeline: Pipeline::SkipModThenSort,
             sweep_stride: 4,
@@ -126,6 +134,14 @@ impl ExperimentConfig {
     /// for (`ThreadPool::for_submitters`).
     pub fn engine_workers(&self) -> usize {
         self.ranks.max(1) * self.threads_per_rank.max(1)
+    }
+
+    /// Install this config's SIMD policy as the process-global kernel
+    /// dispatch (`util::simd::set_simd_policy`). Experiment and search
+    /// entry points call this once before evaluating anything, so every
+    /// kernel of the run dispatches consistently.
+    pub fn install_simd(&self) {
+        crate::util::simd::set_simd_policy(self.simd);
     }
 
     /// Parallel config for the scheduler.
@@ -202,6 +218,9 @@ impl ExperimentConfig {
             // Same clamp as eval_threads: negative ⇒ 0 ⇒ auto.
             self.outer_tasks = v.max(0) as usize;
         }
+        if let Some(v) = t.get_path("parallel.simd").and_then(TomlValue::as_str) {
+            self.simd = parse_simd(v)?;
+        }
         if let Some(v) = t.get_path("parallel.pipeline").and_then(TomlValue::as_str) {
             self.pipeline = parse_pipeline(v)?;
         }
@@ -245,6 +264,11 @@ pub fn parse_mode(s: &str) -> Result<Mode> {
     })
 }
 
+/// Parse a SIMD policy label ("auto" | "scalar" | "vector").
+pub fn parse_simd(s: &str) -> Result<SimdPolicy> {
+    s.parse::<SimdPolicy>().map_err(|e| anyhow!("{e}"))
+}
+
 /// Parse a Table II pipeline label.
 pub fn parse_pipeline(s: &str) -> Result<Pipeline> {
     Ok(match s {
@@ -282,6 +306,7 @@ order = "post"
 ranks = 8
 eval_threads = 3
 outer_tasks = 2
+simd = "scalar"
 pipeline = "t2"
 [sweep]
 stride = 2
@@ -296,8 +321,20 @@ stride = 2
         assert_eq!(cfg.eval_threads, 3);
         assert_eq!(cfg.resolved_eval_threads(), 3);
         assert_eq!(cfg.outer_tasks, 2);
+        assert_eq!(cfg.simd, SimdPolicy::ForceScalar);
         assert_eq!(cfg.pipeline, Pipeline::SortThenSkipMod);
         assert_eq!(cfg.sweep_stride, 2);
+    }
+
+    #[test]
+    fn simd_defaults_to_auto_and_rejects_bad_labels() {
+        assert_eq!(ExperimentConfig::quick().simd, SimdPolicy::Auto);
+        assert_eq!(parse_simd("vector").unwrap(), SimdPolicy::ForceVector);
+        assert!(parse_simd("warp").is_err());
+        let mut cfg = ExperimentConfig::quick();
+        assert!(cfg
+            .apply_toml(&parse_toml("[parallel]\nsimd = \"mmx\"\n").unwrap())
+            .is_err());
     }
 
     #[test]

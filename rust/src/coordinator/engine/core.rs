@@ -195,9 +195,7 @@ pub fn run_threaded(
 
     let mut log = log.into_inner().unwrap();
     fill_pruned(&mut log, ks, &seq, clock.now());
-    // Fold rank-local optima (paper: ReceiveKCheck keeps the larger k);
-    // folding makes the result robust to in-flight messages at shutdown.
-    let best = states.iter().filter_map(|s| s.best()).max_by_key(|c| c.k);
+    let best = fold_best(states);
     SearchResult {
         k_optimal: best.map(|c| c.k),
         score: best.map(|c| c.score),
@@ -367,13 +365,36 @@ pub fn run_event(
             state.merge_remote(msg.floor, msg.ceil, msg.best);
         }
     }
-    let best = states.iter().filter_map(|s| s.best()).max_by_key(|c| c.k);
+    // The event driver builds every resource's state over the same
+    // `ks` today, so the rejected channel folded by `fold_best` is
+    // always empty here — sharing the helper keeps the two drivers'
+    // shutdown semantics structurally identical regardless.
+    let best = fold_best(&states);
     EventOutcome {
         log,
         best,
         makespan_minutes: makespan,
         spans,
     }
+}
+
+/// The shared shutdown fold of both drivers: the global candidate
+/// optimal across every rank's local best *and* the remote bests each
+/// rank parked as out-of-domain ([`SharedState::rejected_remote_bests`]),
+/// under the paper's largest-k rule (ReceiveKCheck keeps the larger k).
+/// Folding the parked bests means a heterogeneous-domain deployment
+/// reports an optimum covering every rank's domain instead of silently
+/// dropping k this rank never searched. Neither arm can carry a
+/// non-finite score: local publication only follows a threshold
+/// selection (false for NaN), and [`SharedState::merge_remote`] drops
+/// corrupt (non-finite) remote bests at ingestion — in-domain and
+/// out-of-domain alike — so a poisoned broadcast can never displace
+/// the genuine optimum here.
+fn fold_best(states: &[SharedState]) -> Option<Candidate> {
+    states
+        .iter()
+        .flat_map(|s| s.best().into_iter().chain(s.rejected_remote_bests()))
+        .max_by_key(|c| c.k)
 }
 
 /// Append PrunedSkip entries for k never touched by any worker, so the
@@ -408,6 +429,62 @@ mod tests {
 
     fn square(k_true: u32) -> impl Fn(u32) -> f64 + Sync {
         move |k| if k <= k_true { 0.95 } else { 0.05 }
+    }
+
+    #[test]
+    fn shutdown_fold_includes_rejected_remote_bests() {
+        // A heterogeneous-domain peer broadcast its best at k = 40,
+        // which lies outside this rank's {2..30} domain: merge_remote
+        // parks it out-of-band, and the shutdown fold must still report
+        // it as the global optimum (largest selected k wins).
+        let ks: Vec<u32> = (2..=30).collect();
+        let plan = WorkPlan::serial(&ks, Mode::Vanilla);
+        let state = SharedState::new(&ks);
+        state.merge_remote(None, None, Some(Candidate { k: 40, score: 0.91 }));
+        // A corrupt broadcast (non-finite score) must never displace a
+        // genuine optimum, no matter how large its k.
+        state.merge_remote(
+            None,
+            None,
+            Some(Candidate {
+                k: 9999,
+                score: f64::NAN,
+            }),
+        );
+        let r = run_threaded(
+            &ks,
+            &plan,
+            std::slice::from_ref(&state),
+            &Loopback,
+            &square(15),
+            pol(Mode::Vanilla),
+        );
+        assert_eq!(r.k_optimal, Some(40));
+        assert_eq!(r.score, Some(0.91));
+        // The local domain is still fully decided.
+        let mut all = r.log.evaluated();
+        all.extend(r.log.pruned());
+        all.sort_unstable();
+        assert_eq!(all, ks);
+    }
+
+    #[test]
+    fn shutdown_fold_prefers_larger_local_best() {
+        // The largest-k rule cuts both ways: a smaller out-of-domain
+        // remote best must not displace a larger local one.
+        let ks: Vec<u32> = (10..=30).collect();
+        let plan = WorkPlan::serial(&ks, Mode::Vanilla);
+        let state = SharedState::new(&ks);
+        state.merge_remote(None, None, Some(Candidate { k: 5, score: 0.99 }));
+        let r = run_threaded(
+            &ks,
+            &plan,
+            std::slice::from_ref(&state),
+            &Loopback,
+            &square(20),
+            pol(Mode::Vanilla),
+        );
+        assert_eq!(r.k_optimal, Some(20));
     }
 
     #[test]

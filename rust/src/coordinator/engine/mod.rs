@@ -25,6 +25,36 @@
 //! New regimes (async runtimes, real MPI, elastic resources) are new
 //! `Transport`/`Clock` implementations — not fifth and sixth copies of
 //! the loop.
+//!
+//! At shutdown the threaded driver folds every rank's candidate
+//! optimal — including remote bests a rank rejected as outside its own
+//! domain (kept out-of-band by
+//! [`SharedState`](super::state::SharedState)) — under the paper's
+//! largest-k rule, so heterogeneous-domain runs report a global best.
+//!
+//! Every entry point is a thin configuration of the same protocol, and
+//! they agree on the optimum:
+//!
+//! ```
+//! use binary_bleed::coordinator::{
+//!     binary_bleed_lockstep, binary_bleed_serial, Mode, ParallelConfig,
+//!     SearchPolicy, Thresholds,
+//! };
+//! let ks: Vec<u32> = (2..=30).collect();
+//! let scorer = |k: u32| if k <= 17 { 0.9 } else { 0.1 };
+//! let policy = SearchPolicy::maximize(
+//!     Mode::Vanilla,
+//!     Thresholds { select: 0.75, stop: 0.2 },
+//! );
+//! // Threaded driver, one worker, loopback transport (Alg 1).
+//! let serial = binary_bleed_serial(&ks, &scorer, policy);
+//! assert_eq!(serial.k_optimal, Some(17));
+//! // Event driver, unit cost, zero latency: deterministic lockstep
+//! // rounds on 2 simulated resources — same optimum.
+//! let cfg = ParallelConfig { ranks: 2, ..Default::default() };
+//! let lockstep = binary_bleed_lockstep(&ks, &scorer, policy, cfg);
+//! assert_eq!(lockstep.k_optimal, Some(17));
+//! ```
 
 pub mod clock;
 pub mod core;

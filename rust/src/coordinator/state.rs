@@ -157,18 +157,20 @@ impl SharedState {
     /// Merge a bound update received from another rank (ReceiveKCheck).
     /// Monotone merges: bounds only tighten, the best k only grows.
     ///
-    /// A remote best whose k is outside this state's domain is
-    /// *rejected*, not merged: raising `best_k` to a k with no score
-    /// slot would make [`SharedState::best`] report `score = NaN` from
-    /// then on. All engine configurations build every rank's state over
-    /// the same normalized domain, so a rejected best normally comes
-    /// from a misconfigured or corrupt peer — its floor/ceil movements
-    /// (plain integers, domain-independent) still merge above. In
-    /// heterogeneous-domain deployments, however, a peer can
-    /// legitimately search a different k set; rejected bests are
-    /// therefore kept out-of-band ([`SharedState::rejected_remote_bests`])
-    /// so the coordinator can fold them at shutdown instead of silently
-    /// dropping them.
+    /// A remote best whose k is outside this state's domain is not
+    /// merged into the hot-path state: raising `best_k` to a k with no
+    /// score slot would make [`SharedState::best`] report `score = NaN`
+    /// from then on. It is *parked* out-of-band instead
+    /// ([`SharedState::rejected_remote_bests`]) and folded into the
+    /// engine's `SearchResult` at shutdown — the supported way for
+    /// heterogeneous-domain deployments (peers legitimately searching
+    /// different k sets) to report a global optimum. The in-process
+    /// engine configurations build every rank's state over the same
+    /// normalized domain and so never populate the channel themselves.
+    /// Corruption is handled one layer earlier: a non-finite score is
+    /// dropped outright (a legitimate peer never selects on NaN/∞),
+    /// while floor/ceil movements (plain integers, domain-independent)
+    /// always merge.
     pub fn merge_remote(&self, floor: Option<u32>, ceil: Option<u32>, best: Option<Candidate>) {
         if let Some(f) = floor {
             self.floor.fetch_max(i64::from(f), Ordering::SeqCst);
@@ -177,6 +179,14 @@ impl SharedState {
             self.ceil.fetch_min(i64::from(c), Ordering::SeqCst);
         }
         if let Some(b) = best {
+            // A legitimate peer never selects on NaN/∞ (threshold
+            // comparisons are false for NaN, and scorers produce finite
+            // scores), so a non-finite remote best can only be a
+            // corrupt broadcast: drop it before it can poison the score
+            // slot behind `best()` or the out-of-band channel.
+            if !b.score.is_finite() {
+                return;
+            }
             if let Some(pos) = self.pos(b.k) {
                 self.scores[pos].store(b.score.to_bits(), Ordering::SeqCst);
                 self.best_k.fetch_max(i64::from(b.k), Ordering::SeqCst);
@@ -203,9 +213,11 @@ impl SharedState {
     /// their k is outside this domain, in first-arrival order —
     /// deduplicated per k (newest broadcast kept; this state is
     /// policy-agnostic, so it cannot rank scores) and bounded, so
-    /// repeated gossip re-broadcasts cannot grow it. A
-    /// heterogeneous-domain deployment folds these against the local
-    /// [`SharedState::best`] at shutdown, under its own policy.
+    /// repeated gossip re-broadcasts cannot grow it. The threaded
+    /// engine driver folds these into `SearchResult` at shutdown under
+    /// the paper's largest-k rule, so heterogeneous-domain runs report
+    /// a global best automatically; deployments with their own shutdown
+    /// path can fold against [`SharedState::best`] themselves.
     pub fn rejected_remote_bests(&self) -> Vec<Candidate> {
         self.rejected_bests.lock().unwrap().clone()
     }
@@ -360,6 +372,29 @@ mod tests {
         // ...while its (domain-independent) bounds still merge.
         let (f, _) = st.bounds();
         assert_eq!(f, Some(3));
+    }
+
+    #[test]
+    fn non_finite_remote_bests_are_dropped_at_ingestion() {
+        // A corrupt broadcast must poison neither the in-domain score
+        // slots behind best() nor the out-of-band rejected channel;
+        // its (plain-integer) bounds still merge.
+        let st = SharedState::new(&[2, 4, 8]);
+        st.merge_remote(Some(3), None, Some(Candidate { k: 4, score: f64::NAN }));
+        assert!(st.best().is_none(), "NaN in-domain best must be dropped");
+        st.merge_remote(
+            None,
+            None,
+            Some(Candidate {
+                k: 99,
+                score: f64::INFINITY,
+            }),
+        );
+        assert!(st.rejected_remote_bests().is_empty());
+        assert_eq!(st.bounds().0, Some(3), "bounds merge regardless");
+        // A later genuine best is unaffected.
+        st.merge_remote(None, None, Some(Candidate { k: 4, score: 0.8 }));
+        assert_eq!(st.best().unwrap().score, 0.8);
     }
 
     #[test]

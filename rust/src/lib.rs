@@ -21,9 +21,23 @@
 //! The native evaluation kernels (tiled pairwise distances, silhouette /
 //! Davies-Bouldin, k-means++ Lloyd, Gram-form NMF) are data-parallel
 //! over an intra-evaluation thread budget ([`util::pool`],
-//! [`linalg::pairwise`]); size it with `--eval-threads` /
-//! `config::ExperimentConfig::resolved_eval_threads` so engine workers ×
-//! eval threads never oversubscribe the machine.
+//! [`linalg::pairwise`]) and their inner loops are SIMD-vectorized
+//! ([`util::simd`]: explicit-width lanes, AVX2+FMA when the CPU has
+//! it, on by default). Three knobs shape an evaluation, all with CLI /
+//! TOML spellings:
+//!
+//! * `--eval-threads` (`parallel.eval_threads`) — kernel threads per
+//!   model fit; engine workers × eval threads never oversubscribe the
+//!   machine (§3.2, `config::ExperimentConfig::resolved_eval_threads`).
+//! * `--outer-tasks` (`parallel.outer_tasks`) — concurrent
+//!   perturbations/restarts per evaluation; outer × inner kernel
+//!   threads never exceed the eval budget (`0` = auto, `1` = off).
+//! * `--simd` (`parallel.simd`) — kernel dispatch: `auto` (default),
+//!   `scalar` (the retained oracle loops), `vector`.
+//!
+//! Scores are bitwise identical under every `(eval_threads,
+//! outer_tasks)` pair within a SIMD policy, and tolerance-bounded
+//! across policies — the repo-wide numeric contract is NUMERICS.md.
 //!
 //! Quickstart — every entry point is a thin engine configuration and
 //! they all agree on the optimum:
@@ -50,8 +64,8 @@
 //! ```
 //!
 //! See DESIGN.md for the system inventory (engine/Clock/Transport
-//! layering, feature flags) and EXPERIMENTS.md for the paper-vs-measured
-//! record.
+//! layering, feature flags), NUMERICS.md for the numeric contract, and
+//! EXPERIMENTS.md for the paper-vs-measured record.
 
 pub mod bench;
 pub mod cli;

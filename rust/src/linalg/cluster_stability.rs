@@ -15,8 +15,9 @@
 //! on a [`ThreadPool`].
 
 use super::matrix::{cosine_similarity, Matrix};
-use super::pairwise::sq_dist_matrix;
+use super::pairwise::sq_dist_matrix_policy;
 use crate::util::pool::ThreadPool;
+use crate::util::simd::{self, SimdPolicy};
 
 /// Greedy max-cosine assignment of `w`'s columns onto `reference`'s
 /// columns (both m×k). Returns `perm[j] = reference column for w col j`.
@@ -72,6 +73,17 @@ pub fn perturbation_silhouette(ws: &[Matrix]) -> f64 {
 /// against the guard — degenerate clusters stay maximally unstable
 /// instead of spuriously tight.
 pub fn perturbation_silhouette_with(ws: &[Matrix], pool: &ThreadPool) -> f64 {
+    perturbation_silhouette_with_policy(ws, pool, simd::simd_policy())
+}
+
+/// [`perturbation_silhouette_with`] under an explicit [`SimdPolicy`]
+/// (the all-pairs distance matrix is the only SIMD-dispatched step;
+/// column norms and the silhouette fold are scalar either way).
+pub fn perturbation_silhouette_with_policy(
+    ws: &[Matrix],
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> f64 {
     let p = ws.len();
     assert!(p >= 2, "need at least two perturbation runs");
     let k = ws[0].cols;
@@ -101,7 +113,7 @@ pub fn perturbation_silhouette_with(ws: &[Matrix], pool: &ThreadPool) -> f64 {
             }
         }
     }
-    let d2 = sq_dist_matrix(&unit, &unit, pool);
+    let d2 = sq_dist_matrix_policy(&unit, &unit, pool, policy);
     // Per-pair damping, the seed formula in unit-vector form:
     // 1 − dot/(p + 1e-12) = 1 − cos·(p/(p + 1e-12)), cos = 1 − d²/2 on
     // the sphere. The damping factor is what made a collapsed (tiny- or

@@ -13,8 +13,9 @@
 //! parallel over row blocks on a [`ThreadPool`].
 
 use super::matrix::Matrix;
-use super::pairwise::{row_sq_norms, sq_dist_tile};
+use super::pairwise::{row_sq_norms_policy, sq_dist_tile_policy};
 use crate::util::pool::ThreadPool;
+use crate::util::simd::{self, SimdPolicy};
 use crate::util::Pcg32;
 
 /// Result of a K-means fit.
@@ -32,13 +33,18 @@ pub fn kmeans(x: &Matrix, k: usize, max_iter: usize, rng: &mut Pcg32) -> KMeansF
 }
 
 /// Lloyd's algorithm with k-means++ seeding; distance work is parallel
-/// over row blocks on `pool`. At least one assignment pass always runs
-/// (the seed returned `inertia = ∞` with all-zero labels for
-/// `max_iter == 0`), so the fit always reflects the data.
+/// over row blocks on `pool`, under the process-global [`SimdPolicy`].
+/// At least one assignment pass always runs (the seed returned
+/// `inertia = ∞` with all-zero labels for `max_iter == 0`), so the fit
+/// always reflects the data.
 ///
 /// Thread-budget invariance: per-point assignments are computed
 /// independently and the inertia folds serially in row order, so the
-/// fit is bitwise identical under every budget.
+/// fit is bitwise identical under every budget. Across *policies* the
+/// fit is tolerance-bounded only in the typical case: a distance
+/// near-tie can flip an argmin or the D² draw and change the whole
+/// trajectory (NUMERICS.md files K-means under the policy-*sensitive*
+/// class).
 pub fn kmeans_with(
     x: &Matrix,
     k: usize,
@@ -46,10 +52,22 @@ pub fn kmeans_with(
     rng: &mut Pcg32,
     pool: &ThreadPool,
 ) -> KMeansFit {
+    kmeans_with_policy(x, k, max_iter, rng, pool, simd::simd_policy())
+}
+
+/// [`kmeans_with`] under an explicit [`SimdPolicy`].
+pub fn kmeans_with_policy(
+    x: &Matrix,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> KMeansFit {
     assert!(k >= 1 && k <= x.rows, "k out of range");
     let n = x.rows;
     let d = x.cols;
-    let norms = row_sq_norms(x);
+    let norms = row_sq_norms_policy(x, policy);
     let pool = pool.capped(n / 64);
 
     // --- k-means++ seeding ---------------------------------------------
@@ -61,7 +79,7 @@ pub fn kmeans_with(
             let mut t = [0.0f64; 1];
             for (off, slot) in piece.iter_mut().enumerate() {
                 let i = i0 + off;
-                sq_dist_tile(x, i, i + 1, &norms, x, c, c + 1, &norms, &mut t);
+                sq_dist_tile_policy(x, i, i + 1, &norms, x, c, c + 1, &norms, &mut t, policy);
                 if t[0] < *slot {
                     *slot = t[0];
                 }
@@ -114,13 +132,24 @@ pub fn kmeans_with(
     for it in 0..max_iter.max(1) {
         iterations = it + 1;
         // Assignment: blocked distances to all k centroids, argmin.
-        let cnorms = row_sq_norms(&centroids);
+        let cnorms = row_sq_norms_policy(&centroids, policy);
         let centroids_ref = &centroids;
         pool.for_slices_mut(&mut assign, 1, |_, i0, piece| {
             let mut dists = vec![0.0f64; k];
             for (off, slot) in piece.iter_mut().enumerate() {
                 let i = i0 + off;
-                sq_dist_tile(x, i, i + 1, &norms, centroids_ref, 0, k, &cnorms, &mut dists);
+                sq_dist_tile_policy(
+                    x,
+                    i,
+                    i + 1,
+                    &norms,
+                    centroids_ref,
+                    0,
+                    k,
+                    &cnorms,
+                    &mut dists,
+                    policy,
+                );
                 let (mut best_c, mut best_d) = (0usize, f64::INFINITY);
                 for (c, &dv) in dists.iter().enumerate() {
                     if dv < best_d {

@@ -4,10 +4,21 @@
 //! artifacts; this type backs the pure-Rust reference models (test
 //! oracles), the NMFk perturbation-clustering step (tiny data) and the
 //! literal marshaling into PJRT.
+//!
+//! The multiply micro-kernels dispatch through [`crate::util::simd`]
+//! (NUMERICS.md): the row-update (SAXPY) kernels of [`Matrix::matmul_with`]
+//! / [`Matrix::matmul_tn_with`] are **bitwise identical under every
+//! [`SimdPolicy`]** (elementwise, unfused — no reduction to reorder),
+//! while the dot-product kernel of [`Matrix::matmul_nt_with`] changes
+//! its f32 summation order under vector policies and agrees with the
+//! scalar form within f32-grade tolerance. [`Matrix::matmul`] itself
+//! stays a plain scalar loop — it is the seed-formulation oracle the
+//! others are tested against.
 
 use std::fmt;
 
 use crate::util::pool::ThreadPool;
+use crate::util::simd::{self, SimdPolicy};
 use crate::util::Pcg32;
 
 /// Dense row-major matrix of f32.
@@ -93,8 +104,20 @@ impl Matrix {
     /// C = A @ B with the multiply parallelized over output row blocks.
     /// Per-element accumulation order (ascending p, zero-skip) is the
     /// same as [`Matrix::matmul`], so results are bitwise identical to
-    /// the serial product under every thread budget.
+    /// the serial product under every thread budget **and every
+    /// [`SimdPolicy`]** (the vectorized SAXPY is unfused). Reads the
+    /// process-global policy.
     pub fn matmul_with(&self, other: &Matrix, pool: &ThreadPool) -> Matrix {
+        self.matmul_with_policy(other, pool, simd::simd_policy())
+    }
+
+    /// [`Matrix::matmul_with`] under an explicit [`SimdPolicy`].
+    pub fn matmul_with_policy(
+        &self,
+        other: &Matrix,
+        pool: &ThreadPool,
+        policy: SimdPolicy,
+    ) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, kdim, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
@@ -108,9 +131,7 @@ impl Matrix {
                         continue;
                     }
                     let brow = &other.data[p * n..(p + 1) * n];
-                    for (o, &b) in orow.iter_mut().zip(brow) {
-                        *o += a * b;
-                    }
+                    simd::saxpy(orow, a, brow, policy);
                 }
             }
         });
@@ -119,31 +140,50 @@ impl Matrix {
 
     /// C = A @ Bᵀ without materializing the transpose: rows of `other`
     /// are read directly (`out[i][j] = self.row(i) · other.row(j)`).
-    /// Accumulation order matches `self.matmul(&other.transpose())`
-    /// bitwise.
+    /// Under [`SimdPolicy::ForceScalar`] the accumulation order matches
+    /// `self.matmul(&other.transpose())` bitwise; vector policies run
+    /// the dot on 8 f32 lanes (f32-grade tolerance across policies,
+    /// NUMERICS.md). Reads the process-global policy.
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
         self.matmul_nt_with(other, &ThreadPool::serial())
     }
 
     /// [`Matrix::matmul_nt`] parallel over output row blocks.
     pub fn matmul_nt_with(&self, other: &Matrix, pool: &ThreadPool) -> Matrix {
+        self.matmul_nt_with_policy(other, pool, simd::simd_policy())
+    }
+
+    /// [`Matrix::matmul_nt_with`] under an explicit [`SimdPolicy`].
+    pub fn matmul_nt_with_policy(
+        &self,
+        other: &Matrix,
+        pool: &ThreadPool,
+        policy: SimdPolicy,
+    ) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
         let (m, d, n) = (self.rows, self.cols, other.rows);
         let mut out = Matrix::zeros(m, n);
         let pool = pool.capped(m * d * n / 32_768);
+        let vector = simd::use_vector(policy);
         pool.for_slices_mut(&mut out.data, n, |_, row0, piece| {
             for (r, orow) in piece.chunks_mut(n).enumerate() {
                 let arow = self.row(row0 + r);
                 for (j, o) in orow.iter_mut().enumerate() {
                     let brow = other.row(j);
-                    let mut acc = 0.0f32;
-                    for (&a, &b) in arow.iter().zip(brow) {
-                        if a == 0.0 {
-                            continue;
+                    *o = if vector {
+                        simd::dot_f32_vector(arow, brow)
+                    } else {
+                        // The seed loop, zero-skip included — the
+                        // bitwise oracle for `matmul(transpose)`.
+                        let mut acc = 0.0f32;
+                        for (&a, &b) in arow.iter().zip(brow) {
+                            if a == 0.0 {
+                                continue;
+                            }
+                            acc += a * b;
                         }
-                        acc += a * b;
-                    }
-                    *o = acc;
+                        acc
+                    };
                 }
             }
         });
@@ -159,8 +199,20 @@ impl Matrix {
 
     /// [`Matrix::matmul_tn`] parallel over output row blocks (each
     /// worker owns a block of `c` rows and scans all of `self`/`other`,
-    /// so per-element i-order is preserved under every budget).
+    /// so per-element i-order is preserved under every budget). Like
+    /// [`Matrix::matmul_with`], bitwise identical under every
+    /// [`SimdPolicy`] (unfused SAXPY). Reads the process-global policy.
     pub fn matmul_tn_with(&self, other: &Matrix, pool: &ThreadPool) -> Matrix {
+        self.matmul_tn_with_policy(other, pool, simd::simd_policy())
+    }
+
+    /// [`Matrix::matmul_tn_with`] under an explicit [`SimdPolicy`].
+    pub fn matmul_tn_with_policy(
+        &self,
+        other: &Matrix,
+        pool: &ThreadPool,
+        policy: SimdPolicy,
+    ) -> Matrix {
         assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
         let (m, kdim, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(kdim, n);
@@ -173,9 +225,7 @@ impl Matrix {
                     if a == 0.0 {
                         continue;
                     }
-                    for (o, &b) in orow.iter_mut().zip(xrow) {
-                        *o += a * b;
-                    }
+                    simd::saxpy(orow, a, xrow, policy);
                 }
             }
         });
@@ -287,12 +337,41 @@ mod tests {
 
     #[test]
     fn matmul_nt_tn_match_transpose_forms_bitwise() {
+        let serial = ThreadPool::serial();
         let mut rng = Pcg32::new(8);
         let a = Matrix::rand_normal(7, 5, &mut rng);
         let b = Matrix::rand_normal(9, 5, &mut rng); // A·Bᵀ: (7,5)·(5,9)
-        assert_eq!(a.matmul_nt(&b).data, a.matmul(&b.transpose()).data);
+        // The dot-product kernel is bitwise under the scalar oracle…
+        assert_eq!(
+            a.matmul_nt_with_policy(&b, &serial, SimdPolicy::ForceScalar).data,
+            a.matmul(&b.transpose()).data
+        );
+        // …and the SAXPY kernel is bitwise under *every* policy.
         let c = Matrix::rand_normal(7, 6, &mut rng); // Aᵀ·C: (5,7)·(7,6)
-        assert_eq!(a.matmul_tn(&c).data, a.transpose().matmul(&c).data);
+        let want = a.transpose().matmul(&c).data;
+        for policy in [SimdPolicy::ForceScalar, SimdPolicy::Auto, SimdPolicy::ForceVector] {
+            assert_eq!(
+                a.matmul_tn_with_policy(&c, &serial, policy).data,
+                want,
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn vector_matmul_nt_matches_transpose_form_within_tolerance() {
+        let serial = ThreadPool::serial();
+        let mut rng = Pcg32::new(10);
+        let a = Matrix::rand_normal(13, 11, &mut rng); // 11 % 8 ≠ 0: lane tail
+        let b = Matrix::rand_normal(9, 11, &mut rng);
+        let want = a.matmul(&b.transpose());
+        let got = a.matmul_nt_with_policy(&b, &serial, SimdPolicy::ForceVector);
+        for (i, (&w, &g)) in want.data.iter().zip(&got.data).enumerate() {
+            assert!(
+                (w - g).abs() <= 1e-4,
+                "element {i}: transpose-form {w} vs vector nt {g}"
+            );
+        }
     }
 
     #[test]

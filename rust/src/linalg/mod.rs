@@ -6,6 +6,15 @@
 //! (c) the blocked/parallel evaluation kernels ([`pairwise`], the tiled
 //! scorers, the transpose-free matmuls) that make the native hot path
 //! scale with the intra-evaluation thread budget (§3.2).
+//!
+//! The kernels' inner loops dispatch through the SIMD layer
+//! ([`crate::util::simd`], DESIGN.md S21): every public kernel has a
+//! `*_policy` variant taking an explicit
+//! [`SimdPolicy`](crate::util::simd::SimdPolicy), and the plain names
+//! read the process-global policy (default `Auto` = vector on). The
+//! repo-wide numeric contract — what is bitwise-invariant, what is
+//! tolerance-bounded, and across which axes — is written down in
+//! NUMERICS.md.
 
 pub mod cluster_stability;
 pub mod kmeans_ref;
@@ -17,13 +26,17 @@ pub mod scores;
 
 pub use cluster_stability::{
     match_columns, perturbation_silhouette, perturbation_silhouette_with,
+    perturbation_silhouette_with_policy,
 };
-pub use kmeans_ref::{kmeans, kmeans_with, KMeansFit};
+pub use kmeans_ref::{kmeans, kmeans_with, kmeans_with_policy, KMeansFit};
 pub use matrix::{cosine_similarity, Matrix};
-pub use nmf_ref::{nmf, nmf_from, nmf_from_with, NmfFit};
-pub use pairwise::{row_sq_norms, sq_dist_matrix, sq_dist_tile};
+pub use nmf_ref::{nmf, nmf_from, nmf_from_with, nmf_from_with_policy, NmfFit};
+pub use pairwise::{
+    row_sq_norms, row_sq_norms_policy, sq_dist_matrix, sq_dist_matrix_policy, sq_dist_tile,
+    sq_dist_tile_policy,
+};
 pub use rescal_ref::{rescal, rescal_relative_error, rescal_with, RescalFit};
 pub use scores::{
-    davies_bouldin, davies_bouldin_oracle, davies_bouldin_with, silhouette, silhouette_oracle,
-    silhouette_with,
+    davies_bouldin, davies_bouldin_oracle, davies_bouldin_with, davies_bouldin_with_policy,
+    silhouette, silhouette_oracle, silhouette_with, silhouette_with_policy,
 };

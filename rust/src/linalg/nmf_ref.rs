@@ -6,12 +6,17 @@
 //! computed once per iteration through the transpose-free matmuls
 //! ([`Matrix::matmul_nt_with`] / [`Matrix::matmul_tn_with`]), so no
 //! per-iteration transpose copy is materialized and every product is
-//! parallel over row blocks. The accumulation order of each output
-//! element is identical to the seed's transpose-then-multiply
-//! formulation, so fits are bitwise unchanged — at any thread budget.
+//! parallel over row blocks. Under `SimdPolicy::ForceScalar` the
+//! accumulation order of each output element is identical to the
+//! seed's transpose-then-multiply formulation, so fits are bitwise
+//! unchanged at any thread budget; under the default vector policy the
+//! `matmul_nt` dot products reorder their f32 sums, and the fit agrees
+//! with the scalar one within f32-grade tolerance (NUMERICS.md) —
+//! still bitwise identical across thread budgets within the policy.
 
 use super::matrix::Matrix;
 use crate::util::pool::ThreadPool;
+use crate::util::simd::{self, SimdPolicy};
 use crate::util::Pcg32;
 
 const EPS: f32 = 1e-9;
@@ -37,34 +42,47 @@ pub fn nmf_from(x: &Matrix, w: Matrix, h: Matrix, iters: usize) -> NmfFit {
 }
 
 /// Multiplicative updates from given initial factors; matmuls are
-/// parallel over row blocks on `pool`.
+/// parallel over row blocks on `pool`, under the process-global
+/// [`SimdPolicy`].
 pub fn nmf_from_with(
+    x: &Matrix,
+    w: Matrix,
+    h: Matrix,
+    iters: usize,
+    pool: &ThreadPool,
+) -> NmfFit {
+    nmf_from_with_policy(x, w, h, iters, pool, simd::simd_policy())
+}
+
+/// [`nmf_from_with`] under an explicit [`SimdPolicy`].
+pub fn nmf_from_with_policy(
     x: &Matrix,
     mut w: Matrix,
     mut h: Matrix,
     iters: usize,
     pool: &ThreadPool,
+    policy: SimdPolicy,
 ) -> NmfFit {
     assert_eq!(w.rows, x.rows);
     assert_eq!(h.cols, x.cols);
     assert_eq!(w.cols, h.rows);
     for _ in 0..iters {
         // W <- W ⊙ (X Hᵀ) / (W (H Hᵀ)) — H Hᵀ is k×k, built once.
-        let hht = h.matmul_nt_with(&h, pool);
-        let num = x.matmul_nt_with(&h, pool);
-        let den = w.matmul_with(&hht, pool);
+        let hht = h.matmul_nt_with_policy(&h, pool, policy);
+        let num = x.matmul_nt_with_policy(&h, pool, policy);
+        let den = w.matmul_with_policy(&hht, pool, policy);
         w = w
             .zip(&num, |wv, nv| wv * nv)
             .zip(&den, |wn, dv| wn / (dv + EPS));
         // H <- H ⊙ (Wᵀ X) / ((Wᵀ W) H) — Wᵀ W is k×k, built once.
-        let wtw = w.matmul_tn_with(&w, pool);
-        let num = w.matmul_tn_with(x, pool);
-        let den = wtw.matmul_with(&h, pool);
+        let wtw = w.matmul_tn_with_policy(&w, pool, policy);
+        let num = w.matmul_tn_with_policy(x, pool, policy);
+        let den = wtw.matmul_with_policy(&h, pool, policy);
         h = h
             .zip(&num, |hv, nv| hv * nv)
             .zip(&den, |hn, dv| hn / (dv + EPS));
     }
-    let relative_error = x.relative_error_to(&w.matmul_with(&h, pool));
+    let relative_error = x.relative_error_to(&w.matmul_with_policy(&h, pool, policy));
     NmfFit {
         w,
         h,

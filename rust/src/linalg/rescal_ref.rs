@@ -4,9 +4,10 @@
 //! Factorizes a stack of relational slices T_s ≈ A R_s Aᵀ with
 //! non-negative A:(n,k) and R_s:(k,k) — the model behind pyDRESCALk
 //! (paper ref [8]). Products run through the transpose-free matmuls of
-//! [`Matrix`] (same accumulation order as the seed's explicit
-//! transposes, so fits are bitwise unchanged), parallel over row blocks
-//! on a [`ThreadPool`].
+//! [`Matrix`] (under `SimdPolicy::ForceScalar` the accumulation order
+//! matches the seed's explicit transposes bitwise; the default vector
+//! policy reorders the `matmul_nt` f32 dots within f32-grade tolerance
+//! — NUMERICS.md), parallel over row blocks on a [`ThreadPool`].
 //!
 //! The per-slice work is additionally **task-parallel** (§3.2 outer
 //! level): the A-update's per-slice numerator/denominator contributions

@@ -17,10 +17,19 @@
 //!
 //! [`silhouette`] / [`davies_bouldin`] keep the original signatures and
 //! run the tiled path on a single thread.
+//!
+//! SIMD (NUMERICS.md): the distance tiles and the √d² pass dispatch
+//! through [`crate::util::simd`]. Within a [`SimdPolicy`] both scores
+//! are bitwise identical at any thread budget; across policies they
+//! agree within 1e-9 (the tile dot is the only order-sensitive step —
+//! packed sqrt is correctly rounded, hence exact). The `*_policy`
+//! variants take the policy explicitly; the plain names read the
+//! process-global one.
 
 use super::matrix::Matrix;
-use super::pairwise::{row_sq_norms, sq_dist_tile, TILE};
+use super::pairwise::{row_sq_norms_policy, sq_dist_tile_policy, TILE};
 use crate::util::pool::ThreadPool;
+use crate::util::simd::{self, SimdPolicy};
 
 /// Mean silhouette coefficient of a labeled sample set (maximize).
 /// Single-threaded convenience wrapper over [`silhouette_with`].
@@ -28,16 +37,29 @@ pub fn silhouette(x: &Matrix, labels: &[usize]) -> f64 {
     silhouette_with(x, labels, &ThreadPool::serial())
 }
 
-/// Mean silhouette coefficient (maximize), tiled + parallel.
+/// Mean silhouette coefficient (maximize), tiled + parallel, under the
+/// process-global [`SimdPolicy`].
 ///
 /// Matches sklearn's `silhouette_score` (Euclidean; singleton ⇒ 0) and
-/// [`silhouette_oracle`] to f64 rounding. One pass over the n×n
+/// [`silhouette_oracle`] within the 1e-9 tolerance class of
+/// NUMERICS.md (to f64 rounding under `ForceScalar`; vector policies
+/// reorder the tile-dot sums). One pass over the n×n
 /// distance tiles accumulates the n×C cluster-distance-sum matrix
 /// (`sums[i][c] = Σ_{j: label_j = c} d(i, j)`); per-sample a/b terms
 /// then read straight out of that matrix. The accumulation order over
 /// j is ascending for every i regardless of tiling or thread budget,
 /// so the score is thread-count invariant bit-for-bit.
 pub fn silhouette_with(x: &Matrix, labels: &[usize], pool: &ThreadPool) -> f64 {
+    silhouette_with_policy(x, labels, pool, simd::simd_policy())
+}
+
+/// [`silhouette_with`] under an explicit [`SimdPolicy`].
+pub fn silhouette_with_policy(
+    x: &Matrix,
+    labels: &[usize],
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> f64 {
     let n = x.rows;
     assert_eq!(labels.len(), n);
     if n == 0 {
@@ -63,7 +85,7 @@ pub fn silhouette_with(x: &Matrix, labels: &[usize], pool: &ThreadPool) -> f64 {
         counts[l] += 1;
     }
 
-    let norms = row_sq_norms(x);
+    let norms = row_sq_norms_policy(x, policy);
     let mut sums = vec![0.0f64; n * c];
     let pool = pool.capped(n / 64);
     pool.for_slices_mut(&mut sums, c, |_, row0, piece| {
@@ -74,11 +96,17 @@ pub fn silhouette_with(x: &Matrix, labels: &[usize], pool: &ThreadPool) -> f64 {
             let w = je - jb;
             for r in 0..rows {
                 let i = row0 + r;
-                sq_dist_tile(x, i, i + 1, &norms, x, jb, je, &norms, &mut tile[..w]);
+                sq_dist_tile_policy(
+                    x, i, i + 1, &norms, x, jb, je, &norms, &mut tile[..w], policy,
+                );
+                // Whole-tile √d² (packed on AVX — correctly rounded, so
+                // bitwise identical to per-element sqrt), then the
+                // flat-indexed scatter-add in ascending j order.
+                simd::sqrt_in_place(&mut tile[..w], policy);
                 let srow = &mut piece[r * c..(r + 1) * c];
-                for (t, &l) in tile[..w].iter().zip(&lab[jb..je]) {
+                for (&t, &l) in tile[..w].iter().zip(&lab[jb..je]) {
                     // d(i,i) is exactly 0.0, so no self-skip is needed.
-                    srow[l] += t.sqrt();
+                    srow[l] += t;
                 }
             }
         }
@@ -109,15 +137,27 @@ pub fn davies_bouldin(x: &Matrix, centroids: &Matrix, labels: &[usize]) -> f64 {
     davies_bouldin_with(x, centroids, labels, &ThreadPool::serial())
 }
 
-/// Davies-Bouldin index (minimize), tiled + parallel: the n×k
-/// point-to-centroid distances stream through the blocked kernel in
-/// fixed-size row chunks whose partial sums merge in chunk order, so
-/// the score is identical under every thread budget.
+/// Davies-Bouldin index (minimize), tiled + parallel, under the
+/// process-global [`SimdPolicy`]: the n×k point-to-centroid distances
+/// stream through the blocked kernel in fixed-size row chunks whose
+/// partial sums merge in chunk order, so the score is identical under
+/// every thread budget.
 pub fn davies_bouldin_with(
     x: &Matrix,
     centroids: &Matrix,
     labels: &[usize],
     pool: &ThreadPool,
+) -> f64 {
+    davies_bouldin_with_policy(x, centroids, labels, pool, simd::simd_policy())
+}
+
+/// [`davies_bouldin_with`] under an explicit [`SimdPolicy`].
+pub fn davies_bouldin_with_policy(
+    x: &Matrix,
+    centroids: &Matrix,
+    labels: &[usize],
+    pool: &ThreadPool,
+    policy: SimdPolicy,
 ) -> f64 {
     let n = x.rows;
     let k = centroids.rows;
@@ -125,8 +165,8 @@ pub fn davies_bouldin_with(
     if k == 0 {
         return 0.0;
     }
-    let nx = row_sq_norms(x);
-    let nc = row_sq_norms(centroids);
+    let nx = row_sq_norms_policy(x, policy);
+    let nc = row_sq_norms_policy(centroids, policy);
 
     // Per-cluster scatter: mean distance of members to their centroid.
     const CHUNK: usize = 256;
@@ -137,7 +177,7 @@ pub fn davies_bouldin_with(
         let mut d = [0.0f64; 1];
         for i in s..e {
             let l = labels[i];
-            sq_dist_tile(x, i, i + 1, &nx, centroids, l, l + 1, &nc, &mut d);
+            sq_dist_tile_policy(x, i, i + 1, &nx, centroids, l, l + 1, &nc, &mut d, policy);
             sums[l] += d[0].sqrt();
             cnts[l] += 1;
         }
@@ -161,7 +201,7 @@ pub fn davies_bouldin_with(
     }
     // Centroid-centroid separations: one k×k tile.
     let mut m = vec![0.0f64; k * k];
-    sq_dist_tile(centroids, 0, k, &nc, centroids, 0, k, &nc, &mut m);
+    sq_dist_tile_policy(centroids, 0, k, &nc, centroids, 0, k, &nc, &mut m, policy);
     let mut db = 0.0;
     for &i in &active {
         let mut worst: f64 = 0.0;
@@ -363,6 +403,21 @@ mod tests {
                 (want - got).abs() < 1e-9,
                 "threads={threads}: oracle {want} vs tiled {got}"
             );
+        }
+    }
+
+    #[test]
+    fn scores_agree_across_simd_policies() {
+        let (x, labels, c) = two_blobs();
+        let pool = ThreadPool::serial();
+        let s_ref = silhouette_with_policy(&x, &labels, &pool, SimdPolicy::ForceScalar);
+        let d_ref =
+            davies_bouldin_with_policy(&x, &c, &labels, &pool, SimdPolicy::ForceScalar);
+        for policy in [SimdPolicy::Auto, SimdPolicy::ForceVector] {
+            let s = silhouette_with_policy(&x, &labels, &pool, policy);
+            let d = davies_bouldin_with_policy(&x, &c, &labels, &pool, policy);
+            assert!((s_ref - s).abs() < 1e-9, "{policy:?}: {s_ref} vs {s}");
+            assert!((d_ref - d).abs() < 1e-9, "{policy:?}: {d_ref} vs {d}");
         }
     }
 }

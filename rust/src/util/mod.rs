@@ -1,5 +1,6 @@
 //! Small shared substrates: deterministic RNG, statistics, timers, JSON,
-//! error contexts.
+//! error contexts, the persistent worker pool ([`pool`]) and the SIMD
+//! kernel layer ([`simd`]).
 //!
 //! The sandbox has no network access to crates.io, so the usual `rand` /
 //! `serde_json` / `anyhow` dependencies are replaced by minimal in-tree
@@ -10,11 +11,13 @@ pub mod error;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod timer;
 
 pub use error::{Context, Error, Result};
 pub use pool::ThreadPool;
 pub use rng::Pcg32;
+pub use simd::SimdPolicy;
 pub use stats::{finite, mean, median, percentile, rmse, std_dev};
 pub use timer::Stopwatch;

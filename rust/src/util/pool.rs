@@ -48,6 +48,22 @@
 //! accounted), and the **first** payload is re-thrown on the submitting
 //! thread when the call returns. Workers survive panics and keep
 //! serving later jobs — the pool is never poisoned.
+//!
+//! ```
+//! use binary_bleed::util::ThreadPool;
+//! let pool = ThreadPool::new(4); // 3 persistent workers + the submitter
+//! // Chunk partials return in chunk order, so a serial fold over them
+//! // is identical under every thread budget.
+//! let partials = pool.map_chunks(100, 32, |s, e| (s..e).sum::<usize>());
+//! assert_eq!(partials.len(), 4); // 32 + 32 + 32 + 4
+//! assert_eq!(partials.iter().sum::<usize>(), 4950);
+//! // §3.2 task layer: outer tasks × inner kernel threads ≤ the budget.
+//! let squares = pool.map_tasks(2, 5, |ti, inner| {
+//!     assert!(2 * inner.threads() <= 4);
+//!     ti * ti
+//! });
+//! assert_eq!(squares, vec![0, 1, 4, 9, 16]);
+//! ```
 
 use std::collections::VecDeque;
 use std::fmt;

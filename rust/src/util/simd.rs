@@ -1,0 +1,688 @@
+//! Zero-dependency SIMD layer for the evaluation kernels (DESIGN.md S21,
+//! NUMERICS.md).
+//!
+//! Binary Bleed prunes *which* k get evaluated; every admitted k still
+//! pays the full model-fit + scoring cost, whose inner loops are dot
+//! products, SAXPYs and square roots over `f32`/`f64` slices. This
+//! module gives those loops explicit-width lanes on stable Rust:
+//!
+//! * **Lane types** — [`F64x4`] / [`F32x8`]: `#[inline(always)]`
+//!   structs over plain arrays with elementwise `add`/`mul`/`mul_add`
+//!   and a fixed-order horizontal sum ([`F64x4::hsum`]). The portable
+//!   vector paths are written against these; the compiler lowers them
+//!   to whatever the target offers.
+//! * **Runtime-dispatched x86 paths** — on `x86_64`, AVX2(+FMA)
+//!   implementations are selected once per process via
+//!   `is_x86_feature_detected!` and cached; every other target (and
+//!   every x86 without AVX2) takes the portable lane path. Dispatch is
+//!   deterministic for the lifetime of the process.
+//! * **A selectable policy** — [`SimdPolicy`]: `Auto` (default, vector
+//!   on), `ForceScalar` (the pre-SIMD loops, retained as the numeric
+//!   oracle) and `ForceVector`. The policy is threaded through
+//!   `config::ExperimentConfig` (TOML `parallel.simd`) and
+//!   `bleed search --simd`, which install it process-globally with
+//!   [`set_simd_policy`]; kernels also accept it explicitly through
+//!   their `*_policy` variants so tests can compare policies
+//!   concurrently without touching global state.
+//!
+//! # Determinism contract (the short form — NUMERICS.md is normative)
+//!
+//! * Lane partial sums fold in a **fixed order that depends only on the
+//!   slice length**, never on the thread budget or the worker a chunk
+//!   lands on — so every kernel built on this module stays bitwise
+//!   identical across thread budgets *within* a policy.
+//! * [`saxpy`] and [`sqrt_in_place`] are **bitwise identical across
+//!   policies**: their vector forms perform the exact per-element
+//!   IEEE operations of the scalar loop (unfused multiply-add,
+//!   correctly-rounded sqrt).
+//! * Reductions ([`dot_widened`], [`dot_f32_vector`]) change the
+//!   summation order under vector policies; across policies they agree
+//!   within the tolerances documented in NUMERICS.md (≤ 1e-9 for the
+//!   f64-widened dots behind the distance/score kernels).
+//! * Across *machines*, vector bits may differ (the AVX2 path fuses
+//!   multiply-adds, the portable path does not); all contracts are
+//!   per-process.
+//!
+//! ```
+//! use binary_bleed::util::simd::{dot_widened, SimdPolicy};
+//! let a = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+//! let b = [2.0f32, 2.0, 2.0, 2.0, 2.0];
+//! let scalar = dot_widened(&a, &b, SimdPolicy::ForceScalar);
+//! let vector = dot_widened(&a, &b, SimdPolicy::ForceVector);
+//! assert_eq!(scalar, 30.0); // small integers are exact in every path
+//! assert!((scalar - vector).abs() < 1e-9);
+//! ```
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which implementation the evaluation kernels dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdPolicy {
+    /// Let the library choose (currently: the vector path, with AVX2
+    /// when the CPU has it). The production default.
+    #[default]
+    Auto = 0,
+    /// The pre-SIMD scalar loops — retained as the numeric oracle and
+    /// for bisecting a numeric difference to the vector layer.
+    ForceScalar = 1,
+    /// Always the vector path, even where a future `Auto` heuristic
+    /// might choose scalar (e.g. very short slices).
+    ForceVector = 2,
+}
+
+impl SimdPolicy {
+    /// Stable label for CLI/TOML round-trips and bench records.
+    pub fn label(self) -> &'static str {
+        match self {
+            SimdPolicy::Auto => "auto",
+            SimdPolicy::ForceScalar => "scalar",
+            SimdPolicy::ForceVector => "vector",
+        }
+    }
+}
+
+impl std::str::FromStr for SimdPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(SimdPolicy::Auto),
+            "scalar" | "force-scalar" => Ok(SimdPolicy::ForceScalar),
+            "vector" | "simd" | "force-vector" => Ok(SimdPolicy::ForceVector),
+            other => Err(format!("unknown SIMD policy '{other}' (auto|scalar|vector)")),
+        }
+    }
+}
+
+/// Process-global policy, stored as the enum discriminant.
+static POLICY: AtomicU8 = AtomicU8::new(SimdPolicy::Auto as u8);
+
+/// Install `p` as the process-global kernel dispatch policy (what the
+/// convenience wrappers without a `_policy` suffix read). Set once at
+/// startup — `bleed search --simd` / `ExperimentConfig::install_simd`
+/// do — not per call; flipping it mid-run would mix summation orders
+/// between evaluations.
+pub fn set_simd_policy(p: SimdPolicy) {
+    POLICY.store(p as u8, Ordering::Relaxed);
+}
+
+/// The current process-global policy ([`SimdPolicy::Auto`] unless
+/// [`set_simd_policy`] changed it).
+#[inline]
+pub fn simd_policy() -> SimdPolicy {
+    match POLICY.load(Ordering::Relaxed) {
+        1 => SimdPolicy::ForceScalar,
+        2 => SimdPolicy::ForceVector,
+        _ => SimdPolicy::Auto,
+    }
+}
+
+/// Whether `p` selects the vector layer (everything except
+/// [`SimdPolicy::ForceScalar`] currently does).
+#[inline]
+pub fn use_vector(p: SimdPolicy) -> bool {
+    p != SimdPolicy::ForceScalar
+}
+
+/// Which implementation backs the vector layer on this machine —
+/// `"avx2+fma"` or `"portable"`. Recorded by `benches/eval_kernels.rs`
+/// in `BENCH_simd.json` so perf numbers are attributable.
+pub fn vector_backend() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            return "avx2+fma";
+        }
+    }
+    "portable"
+}
+
+/// Cached runtime CPU-feature probe: one `is_x86_feature_detected!`
+/// pair per process, then a relaxed atomic load.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2_available() -> bool {
+    // 0 = unknown, 1 = absent, 2 = present.
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        2 => true,
+        1 => false,
+        _ => {
+            let yes =
+                is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+            STATE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+            yes
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lane types
+// ---------------------------------------------------------------------
+
+/// Four f64 lanes. The portable vector paths accumulate into one of
+/// these and fold with [`F64x4::hsum`]; the fold order is part of the
+/// determinism contract.
+#[derive(Debug, Clone, Copy)]
+pub struct F64x4(pub [f64; 4]);
+
+impl F64x4 {
+    #[inline(always)]
+    pub fn splat(v: f64) -> Self {
+        Self([v; 4])
+    }
+
+    /// Widening load: four f32 promoted to f64 lanes (exact).
+    #[inline(always)]
+    pub fn load_widened(s: &[f32]) -> Self {
+        Self([s[0] as f64, s[1] as f64, s[2] as f64, s[3] as f64])
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        Self([
+            self.0[0] + o.0[0],
+            self.0[1] + o.0[1],
+            self.0[2] + o.0[2],
+            self.0[3] + o.0[3],
+        ])
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        Self([
+            self.0[0] * o.0[0],
+            self.0[1] * o.0[1],
+            self.0[2] * o.0[2],
+            self.0[3] * o.0[3],
+        ])
+    }
+
+    /// `acc + self·o` elementwise, **unfused** (two roundings — the
+    /// portable layer never fuses, so its bits match plain scalar
+    /// mul-then-add).
+    #[inline(always)]
+    pub fn mul_add(self, o: Self, acc: Self) -> Self {
+        acc.add(self.mul(o))
+    }
+
+    /// Horizontal sum in the fixed order `((l0 + l1) + l2) + l3`.
+    #[inline(always)]
+    pub fn hsum(self) -> f64 {
+        ((self.0[0] + self.0[1]) + self.0[2]) + self.0[3]
+    }
+}
+
+/// Eight f32 lanes — the single-precision sibling of [`F64x4`].
+#[derive(Debug, Clone, Copy)]
+pub struct F32x8(pub [f32; 8]);
+
+impl F32x8 {
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        Self([v; 8])
+    }
+
+    /// Load eight lanes from the front of `s` (must hold ≥ 8 elements).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> Self {
+        let mut v = [0.0f32; 8];
+        v.copy_from_slice(&s[..8]);
+        Self(v)
+    }
+
+    /// Store the lanes to the front of `s` (must hold ≥ 8 elements).
+    #[inline(always)]
+    pub fn store(self, s: &mut [f32]) {
+        s[..8].copy_from_slice(&self.0);
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(o.0) {
+            *a += b;
+        }
+        Self(v)
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        let mut v = self.0;
+        for (a, b) in v.iter_mut().zip(o.0) {
+            *a *= b;
+        }
+        Self(v)
+    }
+
+    /// `acc + self·o` elementwise, unfused (see [`F64x4::mul_add`]).
+    #[inline(always)]
+    pub fn mul_add(self, o: Self, acc: Self) -> Self {
+        acc.add(self.mul(o))
+    }
+
+    /// Horizontal sum, lanes folded left to right (`l0 + l1 + … + l7`).
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let l = self.0;
+        ((((((l[0] + l[1]) + l[2]) + l[3]) + l[4]) + l[5]) + l[6]) + l[7]
+    }
+}
+
+// ---------------------------------------------------------------------
+// f64-widened dot product (the distance-kernel workhorse)
+// ---------------------------------------------------------------------
+
+/// Dot product of two f32 slices with **f64 accumulation** — the
+/// primitive behind `linalg::pairwise` (row norms and Gram-form
+/// distance tiles). f32 products are exact in f64, so the only
+/// policy-dependent quantity is the f64 summation order:
+/// `ForceScalar` sums left to right (the seed loop); the vector path
+/// keeps 4 f64 accumulators over blocks of 4 and folds
+/// `((l0 + l1) + l2) + l3` before a left-to-right scalar tail. Both
+/// orders depend only on `min(a.len(), b.len())`.
+#[inline]
+pub fn dot_widened(a: &[f32], b: &[f32], policy: SimdPolicy) -> f64 {
+    debug_assert_eq!(a.len(), b.len(), "dot_widened: length mismatch");
+    if use_vector(policy) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if avx2_available() {
+                // Safety: AVX2 + FMA presence was just verified.
+                return unsafe { dot_widened_avx2(a, b) };
+            }
+        }
+        return dot_widened_lanes(a, b);
+    }
+    dot_widened_scalar(a, b)
+}
+
+/// The seed's scalar loop: left-to-right f64 accumulation.
+fn dot_widened_scalar(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| x as f64 * y as f64)
+        .sum()
+}
+
+/// Portable lane path: [`F64x4`] accumulators, unfused.
+fn dot_widened_lanes(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len().min(b.len());
+    let (ah, at) = a[..n].split_at(n - n % 4);
+    let (bh, bt) = b[..n].split_at(n - n % 4);
+    let mut acc = F64x4::splat(0.0);
+    for (ca, cb) in ah.chunks_exact(4).zip(bh.chunks_exact(4)) {
+        acc = F64x4::load_widened(ca).mul_add(F64x4::load_widened(cb), acc);
+    }
+    let mut dot = acc.hsum();
+    for (&x, &y) in at.iter().zip(bt) {
+        dot += x as f64 * y as f64;
+    }
+    dot
+}
+
+/// AVX2+FMA path: 4 f32 converted up per step, fused multiply-add into
+/// 4 f64 accumulators, same lane-fold order as the portable path.
+///
+/// Safety: caller must have verified AVX2 and FMA support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_widened_avx2(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let mut acc = _mm256_setzero_pd();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let va = _mm256_cvtps_pd(_mm_loadu_ps(a.as_ptr().add(i)));
+        let vb = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i)));
+        acc = _mm256_fmadd_pd(va, vb, acc);
+        i += 4;
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut dot = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+    while i < n {
+        dot += *a.get_unchecked(i) as f64 * *b.get_unchecked(i) as f64;
+        i += 1;
+    }
+    dot
+}
+
+// ---------------------------------------------------------------------
+// f32 dot product (the matmul_nt micro-kernel)
+// ---------------------------------------------------------------------
+
+/// f32-accumulated dot product, **vector path only** — the
+/// `Matrix::matmul_nt` micro-kernel. There is deliberately no policy
+/// argument: the scalar oracle for `matmul_nt` is its original
+/// zero-skipping loop, which lives at the call site (the skip is a
+/// sparsity shortcut the vector form drops). 8 f32 accumulators
+/// (fused on AVX2, unfused portable) folded left to right, then a
+/// left-to-right scalar tail.
+#[inline]
+pub fn dot_f32_vector(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            // Safety: AVX2 + FMA presence was just verified.
+            return unsafe { dot_f32_avx2(a, b) };
+        }
+    }
+    dot_f32_lanes(a, b)
+}
+
+fn dot_f32_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (ah, at) = a[..n].split_at(n - n % 8);
+    let (bh, bt) = b[..n].split_at(n - n % 8);
+    let mut acc = F32x8::splat(0.0);
+    for (ca, cb) in ah.chunks_exact(8).zip(bh.chunks_exact(8)) {
+        acc = F32x8::load(ca).mul_add(F32x8::load(cb), acc);
+    }
+    let mut dot = acc.hsum();
+    for (&x, &y) in at.iter().zip(bt) {
+        dot += x * y;
+    }
+    dot
+}
+
+/// Safety: caller must have verified AVX2 and FMA support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let va = _mm256_loadu_ps(a.as_ptr().add(i));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+        acc = _mm256_fmadd_ps(va, vb, acc);
+        i += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut dot =
+        ((((((lanes[0] + lanes[1]) + lanes[2]) + lanes[3]) + lanes[4]) + lanes[5]) + lanes[6])
+            + lanes[7];
+    while i < n {
+        dot += *a.get_unchecked(i) * *b.get_unchecked(i);
+        i += 1;
+    }
+    dot
+}
+
+// ---------------------------------------------------------------------
+// SAXPY (the matmul / matmul_tn micro-kernel)
+// ---------------------------------------------------------------------
+
+/// `y[i] += a · x[i]` — the row-update micro-kernel of `Matrix::matmul`
+/// / `matmul_tn`. **Bitwise identical under every policy**: the vector
+/// forms perform the exact per-element multiply-then-add of the scalar
+/// loop (no fusing, no reassociation — there is no reduction here), so
+/// the matmul family's accumulation order is untouched by the SIMD
+/// layer.
+#[inline]
+pub fn saxpy(y: &mut [f32], a: f32, x: &[f32], policy: SimdPolicy) {
+    debug_assert_eq!(y.len(), x.len(), "saxpy: length mismatch");
+    if use_vector(policy) {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if avx2_available() {
+                // Safety: AVX2 presence was just verified.
+                unsafe { saxpy_avx2(y, a, x) };
+                return;
+            }
+        }
+        saxpy_lanes(y, a, x);
+        return;
+    }
+    for (o, &b) in y.iter_mut().zip(x) {
+        *o += a * b;
+    }
+}
+
+fn saxpy_lanes(y: &mut [f32], a: f32, x: &[f32]) {
+    let n = y.len().min(x.len());
+    let split = n - n % 8;
+    let (yh, yt) = y[..n].split_at_mut(split);
+    let (xh, xt) = x[..n].split_at(split);
+    let va = F32x8::splat(a);
+    for (yy, xx) in yh.chunks_exact_mut(8).zip(xh.chunks_exact(8)) {
+        let vy = F32x8::load(yy);
+        vy.add(va.mul(F32x8::load(xx))).store(yy);
+    }
+    for (o, &b) in yt.iter_mut().zip(xt) {
+        *o += a * b;
+    }
+}
+
+/// Safety: caller must have verified AVX2 support. Unfused mul + add so
+/// the result is bitwise identical to the scalar loop.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn saxpy_avx2(y: &mut [f32], a: f32, x: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = y.len().min(x.len());
+    let va = _mm256_set1_ps(a);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+        let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(
+            y.as_mut_ptr().add(i),
+            _mm256_add_ps(vy, _mm256_mul_ps(va, vx)),
+        );
+        i += 8;
+    }
+    while i < n {
+        *y.get_unchecked_mut(i) += a * *x.get_unchecked(i);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Vectorized sqrt (the silhouette tile pass)
+// ---------------------------------------------------------------------
+
+/// `xs[i] = sqrt(xs[i])` over a whole tile — the silhouette
+/// accumulator's √d² pass. IEEE sqrt is correctly rounded in both the
+/// scalar and the packed form, so this is **bitwise identical under
+/// every policy**; the vector form just retires 4 roots per
+/// instruction on AVX.
+#[inline]
+pub fn sqrt_in_place(xs: &mut [f64], policy: SimdPolicy) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if use_vector(policy) && avx2_available() {
+            // Safety: AVX2 (⊇ AVX) presence was just verified.
+            unsafe { sqrt_avx2(xs) };
+            return;
+        }
+    }
+    // Portable vector ≡ scalar here (sqrt is correctly rounded), so
+    // the policy only selects an implementation on x86_64.
+    let _ = policy;
+    for v in xs.iter_mut() {
+        *v = v.sqrt();
+    }
+}
+
+/// Safety: caller must have verified AVX2 support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sqrt_avx2(xs: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = xs.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let v = _mm256_loadu_pd(xs.as_ptr().add(i));
+        _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_sqrt_pd(v));
+        i += 4;
+    }
+    while i < n {
+        let v = xs.get_unchecked_mut(i);
+        *v = v.sqrt();
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    const POLICIES: [SimdPolicy; 3] = [
+        SimdPolicy::ForceScalar,
+        SimdPolicy::Auto,
+        SimdPolicy::ForceVector,
+    ];
+
+    #[test]
+    fn policy_labels_round_trip() {
+        for p in POLICIES {
+            assert_eq!(p.label().parse::<SimdPolicy>().unwrap(), p);
+        }
+        assert!("warp-speed".parse::<SimdPolicy>().is_err());
+        assert_eq!("simd".parse::<SimdPolicy>().unwrap(), SimdPolicy::ForceVector);
+    }
+
+    #[test]
+    fn global_policy_defaults_to_auto() {
+        // Other tests never mutate the global (they use the explicit
+        // `_policy` variants), so the default must be observable here.
+        assert_eq!(simd_policy(), SimdPolicy::Auto);
+        assert!(use_vector(SimdPolicy::Auto));
+        assert!(use_vector(SimdPolicy::ForceVector));
+        assert!(!use_vector(SimdPolicy::ForceScalar));
+        assert!(!vector_backend().is_empty());
+    }
+
+    #[test]
+    fn hsum_folds_in_fixed_order() {
+        let v = F64x4([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(v.hsum(), ((1.0 + 2.0) + 3.0) + 4.0);
+        let w = F32x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(w.hsum(), 36.0);
+    }
+
+    #[test]
+    fn lane_arithmetic_is_elementwise() {
+        let a = F64x4([1.0, 2.0, 3.0, 4.0]);
+        let b = F64x4([10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(a.add(b).0, [11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(a.mul(b).0, [10.0, 40.0, 90.0, 160.0]);
+        assert_eq!(a.mul_add(b, F64x4::splat(1.0)).0, [11.0, 41.0, 91.0, 161.0]);
+    }
+
+    #[test]
+    fn dot_widened_exact_on_integers() {
+        // Integer-valued f32: every product and partial sum is exact in
+        // f64, so all summation orders agree bitwise.
+        let mut rng = Pcg32::new(11);
+        for len in 0..40 {
+            let a: Vec<f32> = (0..len).map(|_| rng.gen_range(0, 64) as f32 - 32.0).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.gen_range(0, 64) as f32 - 32.0).collect();
+            let want = dot_widened(&a, &b, SimdPolicy::ForceScalar);
+            for p in POLICIES {
+                assert_eq!(
+                    want.to_bits(),
+                    dot_widened(&a, &b, p).to_bits(),
+                    "len={len} policy={p:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_widened_policies_agree_within_tolerance() {
+        // Non-multiple-of-lane-width lengths included (1..=67 covers
+        // every residue mod 4 and mod 8).
+        let mut rng = Pcg32::new(12);
+        for len in 1..=67usize {
+            let a: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let want = dot_widened(&a, &b, SimdPolicy::ForceScalar);
+            let got = dot_widened(&a, &b, SimdPolicy::ForceVector);
+            assert!(
+                (want - got).abs() <= 1e-9 * want.abs().max(1.0),
+                "len={len}: scalar {want} vs vector {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_widened_is_deterministic_per_policy() {
+        let mut rng = Pcg32::new(13);
+        let a: Vec<f32> = (0..53).map(|_| rng.next_f32()).collect();
+        let b: Vec<f32> = (0..53).map(|_| rng.next_f32()).collect();
+        for p in POLICIES {
+            let first = dot_widened(&a, &b, p);
+            for _ in 0..5 {
+                assert_eq!(first.to_bits(), dot_widened(&a, &b, p).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dot_f32_vector_matches_scalar_within_f32_tolerance() {
+        let mut rng = Pcg32::new(14);
+        for len in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 50] {
+            let a: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let scalar: f32 = a.iter().zip(&b).map(|(&x, &y)| x * y).sum();
+            let got = dot_f32_vector(&a, &b);
+            let mag: f32 = a.iter().zip(&b).map(|(&x, &y)| (x * y).abs()).sum();
+            assert!(
+                (scalar - got).abs() <= 1e-5 * mag.max(1.0),
+                "len={len}: scalar {scalar} vs vector {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn saxpy_is_bitwise_policy_invariant() {
+        let mut rng = Pcg32::new(15);
+        for len in [0usize, 1, 5, 8, 13, 16, 29, 64] {
+            let x: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let y0: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let a = rng.next_gaussian() as f32;
+            let mut want = y0.clone();
+            saxpy(&mut want, a, &x, SimdPolicy::ForceScalar);
+            for p in POLICIES {
+                let mut got = y0.clone();
+                saxpy(&mut got, a, &x, p);
+                assert_eq!(want, got, "len={len} policy={p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_in_place_is_bitwise_policy_invariant() {
+        let mut rng = Pcg32::new(16);
+        for len in [0usize, 1, 3, 4, 5, 11, 32, 37] {
+            let xs: Vec<f64> = (0..len).map(|_| rng.next_f64() * 100.0).collect();
+            let mut want = xs.clone();
+            sqrt_in_place(&mut want, SimdPolicy::ForceScalar);
+            assert!(want
+                .iter()
+                .zip(&xs)
+                .all(|(&r, &x)| r.to_bits() == x.sqrt().to_bits()));
+            for p in POLICIES {
+                let mut got = xs.clone();
+                sqrt_in_place(&mut got, p);
+                assert_eq!(want, got, "len={len} policy={p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_slices_are_fine() {
+        assert_eq!(dot_widened(&[], &[], SimdPolicy::ForceVector), 0.0);
+        assert_eq!(dot_f32_vector(&[], &[]), 0.0);
+        let mut y: Vec<f32> = Vec::new();
+        saxpy(&mut y, 2.0, &[], SimdPolicy::ForceVector);
+        let mut xs: Vec<f64> = Vec::new();
+        sqrt_in_place(&mut xs, SimdPolicy::ForceVector);
+    }
+}

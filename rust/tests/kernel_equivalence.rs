@@ -3,18 +3,32 @@
 //! label patterns, and thread budgets (1, 2, 8) — and are bitwise
 //! invariant under the thread budget, including the §3.2 nested
 //! `(outer_tasks × eval_threads)` task-level configurations.
+//!
+//! SIMD×scalar grid (NUMERICS.md): the same kernels are additionally
+//! swept over all three [`SimdPolicy`] values × thread budgets 1/2/8,
+//! on shapes whose inner dimension deliberately includes
+//! non-multiple-of-lane-width lengths — asserting 1e-9-grade agreement
+//! *across* policies and bitwise invariance across budgets *within*
+//! each policy.
 
 use binary_bleed::data::{gaussian_blobs, planted_nmf, planted_rescal};
 use binary_bleed::linalg::{
-    davies_bouldin_oracle, davies_bouldin_with, kmeans_with, nmf_from_with,
-    perturbation_silhouette_with, silhouette_oracle, silhouette_with, sq_dist_matrix, Matrix,
+    davies_bouldin_oracle, davies_bouldin_with, davies_bouldin_with_policy, kmeans_with,
+    kmeans_with_policy, nmf_from_with, perturbation_silhouette_with,
+    perturbation_silhouette_with_policy, silhouette_oracle, silhouette_with,
+    silhouette_with_policy, sq_dist_matrix, sq_dist_matrix_policy, Matrix,
 };
 use binary_bleed::model::{KMeansEvaluator, KMeansScoring, NmfkEvaluator, RescalEvaluator};
 use binary_bleed::testing::{cases, check};
-use binary_bleed::util::{Pcg32, ThreadPool};
+use binary_bleed::util::{Pcg32, SimdPolicy, ThreadPool};
 
 const TOL: f64 = 1e-9;
 const THREADS: [usize; 3] = [1, 2, 8];
+const POLICIES: [SimdPolicy; 3] = [
+    SimdPolicy::ForceScalar,
+    SimdPolicy::Auto,
+    SimdPolicy::ForceVector,
+];
 
 /// Random labeled sample set: n up to 160 (exercises multi-thread row
 /// blocks past the kernels' work-size guards), d up to 12, up to 8
@@ -294,6 +308,242 @@ fn perturbation_silhouette_is_thread_invariant() {
                 let st = perturbation_silhouette_with(ws, &ThreadPool::new(threads));
                 if s1.to_bits() != st.to_bits() {
                     return Err(format!("{s1} != {st} at {threads} threads"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simd_grid_pairwise_tolerance_across_policies_bitwise_across_budgets() {
+    check(
+        "simd-grid-pairwise",
+        cases(16),
+        |rng| {
+            let m = rng.gen_range(1, 120) as usize;
+            let n = rng.gen_range(1, 50) as usize;
+            // d sweeps 1..=21: every residue mod 4 and mod 8 (lane
+            // tails) plus sub-lane-width lengths.
+            let d = rng.gen_range(1, 22) as usize;
+            (
+                Matrix::rand_normal(m, d, rng),
+                Matrix::rand_normal(n, d, rng),
+            )
+        },
+        |(a, b)| {
+            let reference =
+                sq_dist_matrix_policy(a, b, &ThreadPool::serial(), SimdPolicy::ForceScalar);
+            for &policy in &POLICIES {
+                let base = sq_dist_matrix_policy(a, b, &ThreadPool::serial(), policy);
+                for (i, (&want, &got)) in reference.iter().zip(&base).enumerate() {
+                    if (want - got).abs() > TOL * want.abs().max(1.0) {
+                        return Err(format!(
+                            "{policy:?} d²[{i}]: scalar {want} vs {got}"
+                        ));
+                    }
+                }
+                for &threads in &THREADS[1..] {
+                    let dt = sq_dist_matrix_policy(a, b, &ThreadPool::new(threads), policy);
+                    if dt != base {
+                        return Err(format!(
+                            "{policy:?} not bitwise across budgets at {threads} threads"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simd_grid_scores_tolerance_across_policies_bitwise_across_budgets() {
+    check(
+        "simd-grid-scores",
+        cases(16),
+        |rng| gen_labeled(rng, 1),
+        |(x, labels, centroids)| {
+            let compact: Vec<usize> = labels.iter().map(|&l| l / 3).collect();
+            let serial = ThreadPool::serial();
+            let s_ref = silhouette_with_policy(x, labels, &serial, SimdPolicy::ForceScalar);
+            let d_ref = davies_bouldin_with_policy(
+                x,
+                centroids,
+                &compact,
+                &serial,
+                SimdPolicy::ForceScalar,
+            );
+            for &policy in &POLICIES {
+                let s = silhouette_with_policy(x, labels, &serial, policy);
+                let d = davies_bouldin_with_policy(x, centroids, &compact, &serial, policy);
+                if (s_ref - s).abs() > TOL {
+                    return Err(format!("{policy:?} silhouette: {s_ref} vs {s}"));
+                }
+                if (d_ref - d).abs() > TOL * d_ref.abs().max(1.0) {
+                    return Err(format!("{policy:?} davies-bouldin: {d_ref} vs {d}"));
+                }
+                for &threads in &THREADS[1..] {
+                    let pool = ThreadPool::new(threads);
+                    let st = silhouette_with_policy(x, labels, &pool, policy);
+                    let dt =
+                        davies_bouldin_with_policy(x, centroids, &compact, &pool, policy);
+                    if st.to_bits() != s.to_bits() || dt.to_bits() != d.to_bits() {
+                        return Err(format!(
+                            "{policy:?} not bitwise across budgets at {threads} threads"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simd_grid_kmeans_bitwise_across_budgets_within_policy() {
+    // K-means is in the policy-*sensitive* class (a distance near-tie
+    // can flip an argmin and the whole trajectory — NUMERICS.md), so
+    // the cross-policy axis is not asserted here; within each policy
+    // the fit must stay bitwise identical at every thread budget.
+    check(
+        "simd-grid-kmeans",
+        cases(8),
+        |rng| {
+            let n = rng.gen_range(8, 100) as usize;
+            let d = rng.gen_range(1, 11) as usize;
+            let k = (rng.gen_range(1, 6) as usize).min(n);
+            let seed = rng.next_u64();
+            (Matrix::rand_normal(n, d, rng), k, seed)
+        },
+        |(x, k, seed)| {
+            for &policy in &POLICIES {
+                let mut r1 = Pcg32::new(*seed);
+                let f1 =
+                    kmeans_with_policy(x, *k, 12, &mut r1, &ThreadPool::serial(), policy);
+                for &threads in &THREADS[1..] {
+                    let mut rt = Pcg32::new(*seed);
+                    let ft = kmeans_with_policy(
+                        x,
+                        *k,
+                        12,
+                        &mut rt,
+                        &ThreadPool::new(threads),
+                        policy,
+                    );
+                    if f1.labels != ft.labels
+                        || f1.inertia.to_bits() != ft.inertia.to_bits()
+                        || f1.centroids.data != ft.centroids.data
+                    {
+                        return Err(format!(
+                            "{policy:?}: fit diverged at {threads} threads"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simd_grid_matmul_family() {
+    check(
+        "simd-grid-matmul",
+        cases(12),
+        |rng| {
+            let m = rng.gen_range(2, 40) as usize;
+            let d = rng.gen_range(1, 22) as usize; // lane tails again
+            let n = rng.gen_range(1, 30) as usize;
+            (
+                Matrix::rand_normal(m, d, rng),
+                Matrix::rand_normal(n, d, rng), // for A·Bᵀ
+                Matrix::rand_normal(m, n, rng), // for Aᵀ·C
+            )
+        },
+        |(a, b, c)| {
+            let serial = ThreadPool::serial();
+            // SAXPY kernels: bitwise under every policy and budget.
+            let tn_want = a.transpose().matmul(c).data;
+            for &policy in &POLICIES {
+                for &threads in &THREADS {
+                    let pool = ThreadPool::new(threads);
+                    let got = a.matmul_tn_with_policy(c, &pool, policy).data;
+                    if got != tn_want {
+                        return Err(format!(
+                            "matmul_tn {policy:?}/{threads}t diverged from transpose form"
+                        ));
+                    }
+                }
+            }
+            // Dot kernel: bitwise to the transpose form under the
+            // scalar oracle, f32-tolerance under vector policies,
+            // bitwise across budgets within every policy.
+            let nt_want = a.matmul(&b.transpose()).data;
+            let nt_scalar = a
+                .matmul_nt_with_policy(b, &serial, SimdPolicy::ForceScalar)
+                .data;
+            if nt_scalar != nt_want {
+                return Err("matmul_nt scalar oracle diverged".into());
+            }
+            for &policy in &POLICIES {
+                let base = a.matmul_nt_with_policy(b, &serial, policy).data;
+                for (i, (&want, &got)) in nt_want.iter().zip(&base).enumerate() {
+                    // f32 dot: bound the reorder error by eps · Σ|aᵢbᵢ|
+                    // (1e-4 is generous for d ≤ 21 of unit normals).
+                    if (want - got).abs() > 1e-4 {
+                        return Err(format!("matmul_nt {policy:?} [{i}]: {want} vs {got}"));
+                    }
+                }
+                for &threads in &THREADS[1..] {
+                    let got = a
+                        .matmul_nt_with_policy(b, &ThreadPool::new(threads), policy)
+                        .data;
+                    if got != base {
+                        return Err(format!(
+                            "matmul_nt {policy:?} not bitwise across budgets at {threads}t"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simd_grid_perturbation_silhouette() {
+    check(
+        "simd-grid-perturbation-silhouette",
+        cases(6),
+        |rng| {
+            let m = rng.gen_range(8, 40) as usize;
+            let k = rng.gen_range(2, 5) as usize;
+            let p = rng.gen_range(2, 5) as usize;
+            (0..p)
+                .map(|_| Matrix::rand_uniform(m, k, rng))
+                .collect::<Vec<Matrix>>()
+        },
+        |ws| {
+            let serial = ThreadPool::serial();
+            let want =
+                perturbation_silhouette_with_policy(ws, &serial, SimdPolicy::ForceScalar);
+            for &policy in &POLICIES {
+                let base = perturbation_silhouette_with_policy(ws, &serial, policy);
+                if (want - base).abs() > 1e-7 {
+                    return Err(format!("{policy:?}: {want} vs {base}"));
+                }
+                for &threads in &THREADS[1..] {
+                    let got = perturbation_silhouette_with_policy(
+                        ws,
+                        &ThreadPool::new(threads),
+                        policy,
+                    );
+                    if got.to_bits() != base.to_bits() {
+                        return Err(format!(
+                            "{policy:?} not bitwise across budgets at {threads} threads"
+                        ));
+                    }
                 }
             }
             Ok(())
