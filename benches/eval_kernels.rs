@@ -17,6 +17,7 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use binary_bleed::bench::{Bench, BenchStats};
+use binary_bleed::coordinator::EvalCache;
 use binary_bleed::data::{gaussian_blobs, planted_nmf};
 use binary_bleed::linalg::{
     davies_bouldin_oracle, davies_bouldin_with, kmeans_with, kmeans_with_policy, nmf_from_with,
@@ -174,6 +175,54 @@ fn main() {
         ev_par.evaluate(score_k).to_bits(),
         "outer task layer must not change NMFk scores"
     );
+
+    // --- eval cache: hit vs refit (ISSUE 5) ----------------------------
+    // The dedup cache turns a repeat request (another worker, a second
+    // metric pass, a resumed session) into a constant-time record
+    // lookup instead of a full NMFk fit. The record replays bitwise.
+    let cds = planted_nmf(&mut rng, nm, nn, ktrue, 0.01);
+    let cache_ev = NmfkEvaluator::native(cds.x, 2 * ktrue + 2, 78)
+        .with_bursts(2)
+        .with_eval_threads(eval_threads);
+    let cache = EvalCache::new(&cache_ev);
+    let refit = bench.run("cache/refit-direct", || cache_ev.evaluate(score_k));
+    cache.get_or_compute(score_k); // warm the slot
+    let hit = bench.run("cache/hit", || cache.get_or_compute(score_k).score);
+    recorded.extend([refit.clone(), hit.clone()]);
+    let cache_speedup = refit.median.as_secs_f64() / hit.median.as_secs_f64();
+    println!("    -> cache hit vs refit: {cache_speedup:.0}x");
+    assert_eq!(
+        cache.get_or_compute(score_k).score.to_bits(),
+        cache_ev.evaluate(score_k).to_bits(),
+        "cached records must replay bitwise"
+    );
+    let cstats = cache.stats();
+    let mut cache_medians = BTreeMap::new();
+    for st in [&refit, &hit] {
+        cache_medians.insert(st.name.clone(), Json::Num(st.median.as_secs_f64()));
+    }
+    let mut cache_obj = BTreeMap::new();
+    cache_obj.insert("bench".to_string(), Json::Str("eval_kernels/cache".into()));
+    cache_obj.insert("quick".to_string(), Json::Bool(quick));
+    cache_obj.insert(
+        "hit_vs_refit_speedup".to_string(),
+        Json::Num(cache_speedup),
+    );
+    cache_obj.insert("hits".to_string(), Json::Num(cstats.hits as f64));
+    cache_obj.insert("misses".to_string(), Json::Num(cstats.misses as f64));
+    cache_obj.insert("medians_s".to_string(), Json::Obj(cache_medians));
+    std::fs::write("BENCH_cache.json", format!("{}\n", Json::Obj(cache_obj)))
+        .expect("write BENCH_cache.json");
+    println!("wrote BENCH_cache.json");
+    if !quick {
+        // Acceptance (ISSUE 5): serving a record must beat re-fitting
+        // by an order of magnitude — anything less means the cache path
+        // grew a hidden fit.
+        assert!(
+            cache_speedup >= 10.0,
+            "cache hit must be >= 10x cheaper than a refit: {cache_speedup:.1}x"
+        );
+    }
 
     // --- SIMD layer: scalar vs vector dispatch (ISSUE 4) ---------------
     // Single-threaded on purpose: the only variable is the lane width,

@@ -6,6 +6,7 @@
 //!                  [--ranks N] [--threads T] [--eval-threads E]
 //!                  [--outer-tasks O] [--simd auto|scalar|vector]
 //!                  [--backend hlo|native]
+//!                  [--checkpoint FILE] [--resume]
 //!                  [--k-true K] [--seed S] [--config FILE]
 //! bleed experiment fig7|fig8|fig9|table2|arxiv|fig4|dynamics|all
 //!                  [--preset quick|paper] [--config FILE]
@@ -22,8 +23,7 @@ use crate::util::error::{anyhow, bail, ensure, Result};
 
 use crate::config::{parse_mode, parse_traversal, ExperimentConfig};
 use crate::coordinator::{
-    binary_bleed_parallel, binary_bleed_serial, KScorer, Mode, SearchPolicy,
-    Thresholds,
+    KEvaluator, Mode, ParallelConfig, SearchPolicy, SearchSession, Thresholds,
 };
 use crate::data::{gaussian_blobs, planted_nmf, ScoreProfile};
 use crate::model::{Backend, KMeansEvaluator, KMeansScoring, NmfkEvaluator};
@@ -101,12 +101,19 @@ SEARCH FLAGS:
   --simd P                 kernel dispatch: auto|scalar|vector (default auto;
                            scalar is the pre-SIMD oracle path — NUMERICS.md)
   --backend B              hlo|native (default native; hlo needs artifacts)
+  --checkpoint FILE        journal completed evaluations to FILE as they
+                           finish; the pruning-state snapshot + visit log
+                           land there at shutdown
+  --resume                 warm-start from --checkpoint: already-fitted k
+                           are served from their records with zero re-fits
+                           (missing file = fresh run)
   --k-true K               planted k for the synthetic dataset (default 15)
   --select X --stop X      thresholds (default 0.75 / 0.2)
   --seed S                 rng seed
-  --config FILE            TOML defaults for seed and the parallel.*
+  --config FILE            TOML defaults for seed, the parallel.*
                            evaluation knobs (eval_threads, outer_tasks,
-                           simd); explicit flags win
+                           simd) and session.* (checkpoint, resume);
+                           explicit flags win
 EXPERIMENT FLAGS:
   --preset P               quick|paper (default quick)
   --config FILE            TOML overrides (configs/*.toml)
@@ -218,11 +225,22 @@ fn cmd_search(args: &Args) -> Result<()> {
         "native" => Backend::Native,
         other => bail!("unknown backend '{other}'"),
     };
+    // Session persistence: explicit flags win over config defaults.
+    let checkpoint: Option<String> = args
+        .flag("checkpoint")
+        .map(str::to_string)
+        .or_else(|| file_cfg.as_ref().and_then(|c| c.checkpoint.clone()));
+    let resume =
+        args.flag("resume").is_some() || file_cfg.as_ref().is_some_and(|c| c.resume);
     ensure!(k_min >= 2 && k_min <= k_max, "need 2 <= k-min <= k-max");
+    ensure!(
+        !resume || checkpoint.is_some(),
+        "--resume needs --checkpoint (or session.checkpoint in the config)"
+    );
 
     let ks: Vec<u32> = (k_min..=k_max).collect();
     let model = args.flag_or("model", "profile");
-    let (scorer, mut policy) = build_scorer(
+    let (evaluator, mut policy) = build_evaluator(
         &model,
         k_true,
         k_max,
@@ -247,17 +265,23 @@ fn cmd_search(args: &Args) -> Result<()> {
         simd.label(),
         backend.label()
     );
-    let result = if ranks * threads <= 1 {
-        binary_bleed_serial(&ks, scorer.as_ref(), policy)
-    } else {
-        let pcfg = crate::coordinator::ParallelConfig {
+    let mut session = SearchSession::new(evaluator.as_ref(), policy).with_parallel(
+        ParallelConfig {
             ranks,
             threads_per_rank: threads,
             traversal: order,
             ..Default::default()
-        };
-        binary_bleed_parallel(&ks, scorer.as_ref(), policy, pcfg)
+        },
+    );
+    if let Some(path) = &checkpoint {
+        session = session.with_checkpoint(path);
+    }
+    let outcome = if resume {
+        session.resume(&ks)?
+    } else {
+        session.run(&ks)?
     };
+    let result = &outcome.result;
     println!(
         "k* = {:?} (score {:?}) — visited {}/{} ({:.0}%) in {:.2}s",
         result.k_optimal,
@@ -269,12 +293,25 @@ fn cmd_search(args: &Args) -> Result<()> {
     );
     println!("visit order: {:?}", result.log.evaluated());
     println!("pruned     : {:?}", result.log.pruned());
+    // Rich evaluators yield secondary metrics / fit diagnostics worth a
+    // table; scalar profiles don't.
+    if outcome
+        .records
+        .iter()
+        .any(|r| !r.secondary.is_empty() || r.diagnostics.fit_error.is_some())
+    {
+        print!("\n{}", crate::metrics::records_markdown(&outcome.records));
+    }
+    println!("{}", crate::metrics::cache_summary(&outcome.stats));
+    if let Some(path) = &checkpoint {
+        println!("checkpoint : {path}");
+    }
     Ok(())
 }
 
-/// Build a scorer for `bleed search`.
+/// Build a record-producing evaluator for `bleed search`.
 #[allow(clippy::too_many_arguments)]
-fn build_scorer(
+fn build_evaluator(
     model: &str,
     k_true: u32,
     k_max: u32,
@@ -285,7 +322,7 @@ fn build_scorer(
     eval_threads: usize,
     engine_workers: usize,
     outer_tasks: usize,
-) -> Result<(Box<dyn KScorer>, SearchPolicy)> {
+) -> Result<(Box<dyn KEvaluator>, SearchPolicy)> {
     let thresholds = Thresholds { select, stop };
     let mut rng = crate::util::Pcg32::new(seed);
     match model {
@@ -455,5 +492,41 @@ mod tests {
             "17".into(),
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn checkpointed_search_writes_and_resumes() {
+        let path = std::env::temp_dir().join(format!(
+            "bb_cli_ckpt_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let base = [
+            "search",
+            "--model",
+            "profile",
+            "--k-true",
+            "12",
+            "--checkpoint",
+            path.to_str().unwrap(),
+        ];
+        run(&base.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap();
+        assert!(path.exists(), "checkpoint file written");
+        let mut resumed: Vec<String> =
+            base.iter().map(|s| s.to_string()).collect();
+        resumed.push("--resume".into());
+        run(&resumed).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resume_without_checkpoint_errors() {
+        assert!(run(&[
+            "search".into(),
+            "--model".into(),
+            "profile".into(),
+            "--resume".into(),
+        ])
+        .is_err());
     }
 }

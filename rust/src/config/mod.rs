@@ -58,6 +58,14 @@ pub struct ExperimentConfig {
     pub results_dir: String,
     /// Human label.
     pub preset: String,
+    /// Session checkpoint file for `bleed search` (DESIGN.md S22):
+    /// completed evaluation records are journaled here as they finish,
+    /// and the pruning-state snapshot + visit log land at shutdown.
+    /// TOML `session.checkpoint`, CLI `--checkpoint`.
+    pub checkpoint: Option<String>,
+    /// Warm-start from the checkpoint (skip already-fitted k). TOML
+    /// `session.resume`, CLI `--resume`.
+    pub resume: bool,
 }
 
 impl ExperimentConfig {
@@ -83,6 +91,8 @@ impl ExperimentConfig {
             restarts: 2,
             results_dir: "results".into(),
             preset: "quick".into(),
+            checkpoint: None,
+            resume: false,
         }
     }
 
@@ -239,6 +249,15 @@ impl ExperimentConfig {
         if let Some(v) = t.get("results_dir").and_then(TomlValue::as_str) {
             self.results_dir = v.to_string();
         }
+        if let Some(v) = t
+            .get_path("session.checkpoint")
+            .and_then(TomlValue::as_str)
+        {
+            self.checkpoint = Some(v.to_string());
+        }
+        if let Some(v) = t.get_path("session.resume").and_then(TomlValue::as_bool) {
+            self.resume = v;
+        }
         ensure!(self.k_min >= 1 && self.k_min <= self.k_max, "bad k range");
         Ok(())
     }
@@ -324,6 +343,17 @@ stride = 2
         assert_eq!(cfg.simd, SimdPolicy::ForceScalar);
         assert_eq!(cfg.pipeline, Pipeline::SortThenSkipMod);
         assert_eq!(cfg.sweep_stride, 2);
+    }
+
+    #[test]
+    fn session_toml_overrides_apply() {
+        let mut cfg = ExperimentConfig::quick();
+        assert_eq!(cfg.checkpoint, None);
+        assert!(!cfg.resume);
+        let doc = "[session]\ncheckpoint = \"runs/search.ckpt.json\"\nresume = true\n";
+        cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
+        assert_eq!(cfg.checkpoint.as_deref(), Some("runs/search.ckpt.json"));
+        assert!(cfg.resume);
     }
 
     #[test]

@@ -1,0 +1,349 @@
+//! Concurrency-deduplicating evaluation cache (DESIGN.md S22).
+//!
+//! Sits between the engine drivers and a [`KEvaluator`]: the first
+//! request for a k claims an in-flight slot and computes; every
+//! concurrent request for the same k **blocks and shares** the result
+//! instead of double-fitting; every later request is a constant-time
+//! hit. Keyed by k — the non-`k` part of the key (dataset fingerprint,
+//! model, seed, perturbations/restarts) is the wrapped evaluator's
+//! [`Fingerprint`], captured at construction and validated whenever
+//! records cross a process boundary (checkpoints).
+//!
+//! Within one engine run the [`SharedState`](super::state::SharedState)
+//! claim bitmap already deduplicates k *per rank-state*; the cache is
+//! what deduplicates across rank states with overlapping domains,
+//! across back-to-back searches (the dual-metric report, simulator
+//! replays) and across process restarts (checkpoint preload via
+//! [`EvalCache::preload`]).
+//!
+//! Completed records replay **bitwise**: a hit returns the very
+//! [`Evaluation`] the fit produced (NUMERICS.md).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::evaluation::{Evaluation, Fingerprint, KEvaluator};
+
+/// Cache traffic counters. `hit_rate()` is what the reports print.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Served from a completed record without blocking.
+    pub hits: u64,
+    /// Computed by the wrapped evaluator (actual fits this process ran).
+    pub misses: u64,
+    /// Requests that found the k in flight and blocked until the racing
+    /// worker published it (the dedup channel).
+    pub shared_waits: u64,
+    /// Records seeded from a checkpoint before the run.
+    pub preloaded: u64,
+}
+
+impl CacheStats {
+    /// Fraction of requests served without a fit (hits + shared waits
+    /// over all requests). 0 when nothing was requested.
+    pub fn hit_rate(&self) -> f64 {
+        let served = self.hits + self.shared_waits;
+        let total = served + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            served as f64 / total as f64
+        }
+    }
+}
+
+enum Slot {
+    /// A worker is fitting this k right now; waiters park on the
+    /// condvar.
+    InFlight,
+    Done(Arc<Evaluation>),
+}
+
+type Journal = Box<dyn Fn(&[Evaluation]) + Send + Sync>;
+
+/// The cache. Borrows the evaluator it deduplicates; itself a
+/// [`KEvaluator`], so it drops into any engine driver or adapter
+/// (e.g. [`MetricView`](super::evaluation::MetricView)) transparently.
+pub struct EvalCache<'a> {
+    inner: &'a dyn KEvaluator,
+    fingerprint: Fingerprint,
+    slots: Mutex<HashMap<u32, Slot>>,
+    done: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    shared_waits: AtomicU64,
+    preloaded: AtomicU64,
+    /// Called with the full completed-record set after every computed
+    /// fit — the session installs its checkpoint writer here, so a
+    /// killed process still has every completed fit on disk.
+    journal: Option<Journal>,
+}
+
+impl<'a> EvalCache<'a> {
+    pub fn new(inner: &'a dyn KEvaluator) -> EvalCache<'a> {
+        EvalCache {
+            fingerprint: inner.fingerprint(),
+            inner,
+            slots: Mutex::new(HashMap::new()),
+            done: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            shared_waits: AtomicU64::new(0),
+            preloaded: AtomicU64::new(0),
+            journal: None,
+        }
+    }
+
+    /// Install a journal callback, invoked with the completed-record
+    /// set (ascending k) after each fit completes. Used by
+    /// [`SearchSession`](super::session::SearchSession) for incremental
+    /// checkpoints; the callback runs outside the cache lock.
+    pub fn with_journal(
+        mut self,
+        journal: Box<dyn Fn(&[Evaluation]) + Send + Sync>,
+    ) -> EvalCache<'a> {
+        self.journal = Some(journal);
+        self
+    }
+
+    /// The wrapped evaluator's identity — the non-`k` part of every
+    /// record's cache key.
+    pub fn fingerprint(&self) -> &Fingerprint {
+        &self.fingerprint
+    }
+
+    /// Seed completed records (checkpoint resume). Existing entries for
+    /// the same k are kept — the in-memory record is at least as fresh
+    /// as the persisted one.
+    pub fn preload(&self, records: impl IntoIterator<Item = Evaluation>) {
+        let mut slots = self.slots.lock().unwrap();
+        let mut added = 0u64;
+        for rec in records {
+            if let std::collections::hash_map::Entry::Vacant(e) = slots.entry(rec.k) {
+                e.insert(Slot::Done(Arc::new(rec)));
+                added += 1;
+            }
+        }
+        self.preloaded.fetch_add(added, Ordering::Relaxed);
+    }
+
+    /// Current traffic counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            shared_waits: self.shared_waits.load(Ordering::Relaxed),
+            preloaded: self.preloaded.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Every completed record, ascending by k.
+    pub fn records(&self) -> Vec<Evaluation> {
+        let slots = self.slots.lock().unwrap();
+        Self::completed(&slots)
+    }
+
+    fn completed(slots: &HashMap<u32, Slot>) -> Vec<Evaluation> {
+        let mut out: Vec<Evaluation> = slots
+            .values()
+            .filter_map(|s| match s {
+                Slot::Done(rec) => Some((**rec).clone()),
+                Slot::InFlight => None,
+            })
+            .collect();
+        out.sort_by_key(|r| r.k);
+        out
+    }
+
+    /// The get-or-compute-or-wait protocol. Exactly one caller per k
+    /// reaches the wrapped evaluator; racing callers block on the
+    /// condvar and share the winner's record.
+    pub fn get_or_compute(&self, k: u32) -> Arc<Evaluation> {
+        let mut slots = self.slots.lock().unwrap();
+        let mut waited = false;
+        loop {
+            match slots.get(&k) {
+                Some(Slot::Done(rec)) => {
+                    let rec = rec.clone();
+                    if waited {
+                        self.shared_waits.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return rec;
+                }
+                Some(Slot::InFlight) => {
+                    waited = true;
+                    slots = self.done.wait(slots).unwrap();
+                    // Loop: the slot is now Done — or vacated, if the
+                    // computing worker panicked; then this waiter takes
+                    // over the claim below.
+                }
+                None => {
+                    slots.insert(k, Slot::InFlight);
+                    break;
+                }
+            }
+        }
+        drop(slots);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+
+        // Compute outside the lock. If the evaluator panics, the guard
+        // vacates the in-flight claim and wakes the waiters so one of
+        // them can retry (or observe the same panic) instead of
+        // deadlocking.
+        let mut guard = ClaimGuard {
+            cache: self,
+            k,
+            armed: true,
+        };
+        let rec = Arc::new(self.inner.evaluate(k));
+        guard.armed = false;
+        drop(guard);
+
+        let snapshot = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.insert(k, Slot::Done(rec.clone()));
+            self.done.notify_all();
+            self.journal.as_ref().map(|_| Self::completed(&slots))
+        };
+        if let (Some(journal), Some(records)) = (self.journal.as_ref(), snapshot) {
+            journal(&records);
+        }
+        rec
+    }
+}
+
+/// Vacates an in-flight claim if the evaluator panicked mid-fit.
+struct ClaimGuard<'c, 'a> {
+    cache: &'c EvalCache<'a>,
+    k: u32,
+    armed: bool,
+}
+
+impl Drop for ClaimGuard<'_, '_> {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut slots = self.cache.slots.lock().unwrap();
+            if matches!(slots.get(&self.k), Some(Slot::InFlight)) {
+                slots.remove(&self.k);
+            }
+            self.cache.done.notify_all();
+        }
+    }
+}
+
+impl KEvaluator for EvalCache<'_> {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        (*self.get_or_compute(k)).clone()
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        self.fingerprint.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::evaluation::{CountingEvaluator, ScorerEvaluator};
+
+    #[test]
+    fn second_request_is_a_hit() {
+        let scorer = |k: u32| k as f64;
+        let counting = CountingEvaluator::new(ScorerEvaluator::new(&scorer));
+        let cache = EvalCache::new(&counting);
+        let a = cache.get_or_compute(9);
+        let b = cache.get_or_compute(9);
+        assert_eq!(a.score.to_bits(), b.score.to_bits());
+        assert_eq!(counting.evaluations(), 1);
+        let stats = cache.stats();
+        assert_eq!((stats.misses, stats.hits), (1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn preload_skips_fits_and_keeps_fresher_entries() {
+        let scorer = |k: u32| k as f64;
+        let counting = CountingEvaluator::new(ScorerEvaluator::new(&scorer));
+        let cache = EvalCache::new(&counting);
+        cache.get_or_compute(3);
+        cache.preload(vec![Evaluation::scalar(3, -1.0), Evaluation::scalar(4, 4.0)]);
+        // k=3 keeps the computed record, k=4 comes from the preload.
+        assert_eq!(cache.get_or_compute(3).score, 3.0);
+        assert_eq!(cache.get_or_compute(4).score, 4.0);
+        assert_eq!(counting.evaluations(), 1);
+        assert_eq!(cache.stats().preloaded, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_share_one_fit() {
+        let scorer = |k: u32| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            k as f64 * 2.0
+        };
+        let counting = CountingEvaluator::new(ScorerEvaluator::new(&scorer));
+        let cache = EvalCache::new(&counting);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for k in [5u32, 6, 5, 6, 5] {
+                        assert_eq!(cache.get_or_compute(k).score, k as f64 * 2.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(counting.evaluations(), 2, "one fit per distinct k");
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.hits + stats.shared_waits, 8 * 5 - 2);
+    }
+
+    #[test]
+    fn panicking_fit_vacates_the_claim() {
+        use std::sync::atomic::AtomicU64;
+        struct Flaky {
+            calls: AtomicU64,
+        }
+        impl KEvaluator for Flaky {
+            fn evaluate(&self, k: u32) -> Evaluation {
+                if self.calls.fetch_add(1, Ordering::Relaxed) == 0 {
+                    panic!("first fit dies");
+                }
+                Evaluation::scalar(k, 1.0)
+            }
+        }
+        let flaky = Flaky {
+            calls: AtomicU64::new(0),
+        };
+        let cache = EvalCache::new(&flaky);
+        let died = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.get_or_compute(7)
+        }));
+        assert!(died.is_err());
+        // The claim was vacated: a retry computes instead of deadlocking.
+        assert_eq!(cache.get_or_compute(7).score, 1.0);
+    }
+
+    #[test]
+    fn journal_sees_every_completed_fit() {
+        use std::sync::Mutex;
+        let scorer = |k: u32| k as f64;
+        let adapter = ScorerEvaluator::new(&scorer);
+        let seen: std::sync::Arc<Mutex<Vec<usize>>> =
+            std::sync::Arc::new(Mutex::new(Vec::new()));
+        let seen2 = seen.clone();
+        let cache = EvalCache::new(&adapter).with_journal(Box::new(move |records| {
+            seen2.lock().unwrap().push(records.len());
+        }));
+        cache.get_or_compute(2);
+        cache.get_or_compute(5);
+        cache.get_or_compute(2); // hit: no journal call
+        assert_eq!(*seen.lock().unwrap(), vec![1, 2]);
+    }
+}

@@ -28,6 +28,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use super::super::bleed::SearchResult;
+use super::super::evaluation::{KEvaluator, ScorerEvaluator};
 use super::super::policy::SearchPolicy;
 use super::super::rank::Broadcast;
 use super::super::scorer::KScorer;
@@ -90,7 +91,7 @@ pub(crate) fn protocol_step(
     thread: usize,
     k: u32,
     state: &SharedState,
-    scorer: &dyn KScorer,
+    evaluator: &dyn KEvaluator,
     policy: &SearchPolicy,
     transport: &dyn Transport,
     clock: &dyn Clock,
@@ -103,7 +104,10 @@ pub(crate) fn protocol_step(
     }
     match state.admit(k, policy) {
         Admission::Admit => {
-            let score = scorer.score(k);
+            // The full record lives on in whatever evaluator layer
+            // produced it (an EvalCache retains it for the session);
+            // the protocol itself only thresholds the primary score.
+            let score = evaluator.evaluate(k).score;
             let publication = state.publish(k, score, policy);
             if !publication.is_empty() {
                 // Alg 4 line 23: report the moved bound to every rank.
@@ -135,15 +139,38 @@ pub(crate) fn protocol_step(
     }
 }
 
-/// Real-thread driver: one worker per plan slot, rank-shared states,
-/// wall-clock timestamps. Single-worker plans run inline on the calling
-/// thread (the serial regime spawns nothing).
+/// Real-thread driver over a plain [`KScorer`] — the adapter-wrapped
+/// form of [`run_threaded_ev`], kept so closures and scorers drive the
+/// engine directly.
 pub fn run_threaded(
     ks: &[u32],
     plan: &WorkPlan,
     states: &[SharedState],
     transport: &dyn Transport,
     scorer: &dyn KScorer,
+    policy: SearchPolicy,
+) -> SearchResult {
+    run_threaded_ev(
+        ks,
+        plan,
+        states,
+        transport,
+        &ScorerEvaluator::new(scorer),
+        policy,
+    )
+}
+
+/// Real-thread driver: one worker per plan slot, rank-shared states,
+/// wall-clock timestamps. Single-worker plans run inline on the calling
+/// thread (the serial regime spawns nothing). Takes the record-producing
+/// [`KEvaluator`] — layer an [`EvalCache`](super::super::cache::EvalCache)
+/// in front to deduplicate and retain the records.
+pub fn run_threaded_ev(
+    ks: &[u32],
+    plan: &WorkPlan,
+    states: &[SharedState],
+    transport: &dyn Transport,
+    evaluator: &dyn KEvaluator,
     policy: SearchPolicy,
 ) -> SearchResult {
     assert!(
@@ -166,7 +193,7 @@ pub fn run_threaded(
                 slot.thread,
                 k,
                 state,
-                scorer,
+                evaluator,
                 &policy,
                 transport,
                 &clock,
@@ -270,14 +297,37 @@ impl Ord for Ready {
     }
 }
 
-/// Event-driven driver: replays the plan on a virtual clock. Each
-/// resource owns a rank-local [`SharedState`]; publications travel over
-/// a [`SimNet`] and become visible at the publisher's finish time (plus
-/// `link_latency_minutes` for peers).
+/// Event-driven driver over a plain [`KScorer`] — the adapter-wrapped
+/// form of [`run_event_ev`].
 pub fn run_event(
     ks: &[u32],
     plan: &WorkPlan,
     scorer: &dyn KScorer,
+    policy: SearchPolicy,
+    cost: &dyn EvalCost,
+    link_latency_minutes: f64,
+) -> EventOutcome {
+    run_event_ev(
+        ks,
+        plan,
+        &ScorerEvaluator::new(scorer),
+        policy,
+        cost,
+        link_latency_minutes,
+    )
+}
+
+/// Event-driven driver: replays the plan on a virtual clock. Each
+/// resource owns a rank-local [`SharedState`]; publications travel over
+/// a [`SimNet`] and become visible at the publisher's finish time (plus
+/// `link_latency_minutes` for peers). Evaluation is single-threaded
+/// here, so a shared [`EvalCache`](super::super::cache::EvalCache)
+/// serves replays deterministically: a cached k returns the identical
+/// record, and the schedule stays a pure function of the plan.
+pub fn run_event_ev(
+    ks: &[u32],
+    plan: &WorkPlan,
+    evaluator: &dyn KEvaluator,
     policy: SearchPolicy,
     cost: &dyn EvalCost,
     link_latency_minutes: f64,
@@ -307,7 +357,7 @@ pub fn run_event(
             cursors[r] += 1;
             match states[r].admit(k, &policy) {
                 Admission::Admit => {
-                    let score = scorer.score(k);
+                    let score = evaluator.evaluate(k).score;
                     let end = t + cost.minutes(k);
                     let selected = policy.selects(score);
                     // INTENTIONAL DIVERGENCE from `protocol_step`: the

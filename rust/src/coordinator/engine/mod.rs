@@ -62,6 +62,9 @@ pub mod transport;
 pub mod work;
 
 pub use self::clock::{duration_from_minutes, Clock, VirtualClock, WallClock};
-pub use self::core::{run_event, run_threaded, EvalCost, EvalSpan, EventOutcome, UnitCost};
+pub use self::core::{
+    run_event, run_event_ev, run_threaded, run_threaded_ev, EvalCost, EvalSpan, EventOutcome,
+    UnitCost,
+};
 pub use self::transport::{Loopback, MpscNet, SimNet, Transport};
 pub use self::work::{bleed_order, normalize_ks, WorkPlan, WorkerSlot};

@@ -1,0 +1,505 @@
+//! First-class evaluation records (DESIGN.md S22).
+//!
+//! The paper's premise is that each `f(k, D)` fit is expensive and the
+//! search should pay for as few of them as possible — yet a bare
+//! `fn score(&self, k) -> f64` throws away everything the fit already
+//! computed: the sibling metric (silhouette *and* Davies-Bouldin come
+//! out of the same K-means fit), the fit diagnostics (relative error,
+//! iterations, restart spread) and the wall-clock cost. This module
+//! promotes one evaluation to a value — [`Evaluation`] — produced by
+//! the [`KEvaluator`] trait, so the layers above (the deduplicating
+//! [`EvalCache`](super::cache::EvalCache), checkpointable
+//! [`SearchSession`](super::session::SearchSession)s, reporting) can
+//! reuse, persist and print it instead of re-fitting.
+//!
+//! [`KScorer`]s (including plain closures) keep working everywhere: the
+//! engine drivers accept either, and [`ScorerEvaluator`] adapts any
+//! scorer into an evaluator producing scalar-only records.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::scorer::KScorer;
+use crate::util::json::Json;
+use crate::util::Stopwatch;
+
+/// Fit diagnostics carried by an [`Evaluation`] — everything the model
+/// computation already knew about its own convergence, previously
+/// discarded at the `-> f64` boundary. All fields are optional: a
+/// synthetic score profile has no fit to diagnose.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EvalDiagnostics {
+    /// Fit quality of the reported model: relative reconstruction error
+    /// for NMF/RESCAL, inertia for K-means.
+    pub fit_error: Option<f64>,
+    /// Update iterations the reported fit ran.
+    pub iterations: Option<u64>,
+    /// Spread (max − min) of the fit-quality measure across the
+    /// restarts / perturbations folded into this record — a cheap
+    /// stability signal orthogonal to the score itself.
+    pub restart_spread: Option<f64>,
+    /// How many restarts / perturbations were folded.
+    pub restarts: Option<u64>,
+}
+
+impl EvalDiagnostics {
+    /// Diagnostics from the per-restart/perturbation fit-quality
+    /// samples: `fit_error` = mean, `restart_spread` = max − min,
+    /// `restarts` = sample count. Callers whose reported fit is a
+    /// specific sample (e.g. the best restart) override `fit_error`
+    /// afterwards. Empty samples yield no mean/spread rather than a
+    /// NaN division.
+    pub fn from_samples(samples: &[f64], iterations: u64) -> EvalDiagnostics {
+        let mut d = EvalDiagnostics {
+            iterations: Some(iterations),
+            restarts: Some(samples.len() as u64),
+            ..EvalDiagnostics::default()
+        };
+        if samples.is_empty() {
+            return d;
+        }
+        d.fit_error = Some(samples.iter().sum::<f64>() / samples.len() as f64);
+        d.restart_spread = Some(
+            samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+                - samples.iter().copied().fold(f64::INFINITY, f64::min),
+        );
+        d
+    }
+}
+
+/// One completed `S(f(k, D))` evaluation as a first-class record: the
+/// primary score the pruning policy sees, plus every secondary metric
+/// and diagnostic the same fit yielded, and what it cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evaluation {
+    pub k: u32,
+    /// Primary score — what [`super::policy::SearchPolicy`] thresholds.
+    pub score: f64,
+    /// Named secondary metrics computed from the *same* fit (e.g. the
+    /// K-means evaluator reports both `"silhouette"` and
+    /// `"davies_bouldin"` whichever one is primary). `BTreeMap` so
+    /// serialization order is deterministic.
+    pub secondary: BTreeMap<String, f64>,
+    pub diagnostics: EvalDiagnostics,
+    /// Wall-clock cost of computing this record. Replays (cache hits,
+    /// checkpoint restores) carry the original fit cost, not the replay
+    /// cost.
+    pub cost: Duration,
+}
+
+impl Evaluation {
+    /// A scalar-only record: just `k` and the primary score.
+    pub fn scalar(k: u32, score: f64) -> Evaluation {
+        Evaluation {
+            k,
+            score,
+            secondary: BTreeMap::new(),
+            diagnostics: EvalDiagnostics::default(),
+            cost: Duration::ZERO,
+        }
+    }
+
+    pub fn with_cost(mut self, cost: Duration) -> Evaluation {
+        self.cost = cost;
+        self
+    }
+
+    /// The named metric: a secondary by name, or the primary score for
+    /// `"score"`. `None` when the record does not carry it.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        if name == "score" {
+            return Some(self.score);
+        }
+        self.secondary.get(name).copied()
+    }
+
+    /// Serialize to the checkpoint JSON shape. Finite floats round-trip
+    /// bitwise (Rust prints the shortest representation that parses
+    /// back exactly); non-finite scores serialize as `null` and restore
+    /// as NaN (NUMERICS.md).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("k".to_string(), Json::Num(f64::from(self.k)));
+        obj.insert("score".to_string(), json_f64(self.score));
+        if !self.secondary.is_empty() {
+            let m: BTreeMap<String, Json> = self
+                .secondary
+                .iter()
+                .map(|(name, &v)| (name.clone(), json_f64(v)))
+                .collect();
+            obj.insert("secondary".to_string(), Json::Obj(m));
+        }
+        let d = &self.diagnostics;
+        let mut diag = BTreeMap::new();
+        if let Some(v) = d.fit_error {
+            diag.insert("fit_error".to_string(), json_f64(v));
+        }
+        if let Some(v) = d.iterations {
+            diag.insert("iterations".to_string(), Json::Num(v as f64));
+        }
+        if let Some(v) = d.restart_spread {
+            diag.insert("restart_spread".to_string(), json_f64(v));
+        }
+        if let Some(v) = d.restarts {
+            diag.insert("restarts".to_string(), Json::Num(v as f64));
+        }
+        if !diag.is_empty() {
+            obj.insert("diagnostics".to_string(), Json::Obj(diag));
+        }
+        obj.insert(
+            "cost_us".to_string(),
+            Json::Num(self.cost.as_micros() as f64),
+        );
+        Json::Obj(obj)
+    }
+
+    /// Inverse of [`Evaluation::to_json`].
+    pub fn from_json(j: &Json) -> Result<Evaluation, String> {
+        let k = j
+            .get("k")
+            .and_then(Json::as_f64)
+            .ok_or("evaluation record missing 'k'")? as u32;
+        let score = parse_f64(j.get("score").ok_or("evaluation record missing 'score'")?);
+        let mut secondary = BTreeMap::new();
+        if let Some(m) = j.get("secondary").and_then(Json::as_obj) {
+            for (name, v) in m {
+                secondary.insert(name.clone(), parse_f64(v));
+            }
+        }
+        let mut diagnostics = EvalDiagnostics::default();
+        if let Some(d) = j.get("diagnostics") {
+            diagnostics.fit_error = d.get("fit_error").map(parse_f64);
+            diagnostics.iterations = d
+                .get("iterations")
+                .and_then(Json::as_f64)
+                .map(|v| v as u64);
+            diagnostics.restart_spread = d.get("restart_spread").map(parse_f64);
+            diagnostics.restarts = d.get("restarts").and_then(Json::as_f64).map(|v| v as u64);
+        }
+        let cost_us = j.get("cost_us").and_then(Json::as_f64).unwrap_or(0.0);
+        Ok(Evaluation {
+            k,
+            score,
+            secondary,
+            diagnostics,
+            cost: Duration::from_micros(cost_us as u64),
+        })
+    }
+}
+
+/// Non-finite floats are not representable in JSON: store `null`,
+/// restore NaN.
+fn json_f64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn parse_f64(j: &Json) -> f64 {
+    j.as_f64().unwrap_or(f64::NAN)
+}
+
+/// Identity of an evaluation context: which `(dataset, model, seed,
+/// hyperparameters)` a record belongs to. Two records are
+/// interchangeable iff their fingerprints match — this is the non-`k`
+/// part of the cache key, and what a checkpoint validates on resume so
+/// stale records can never leak into a different search.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Fingerprint {
+    /// Model family label (`"kmeans"`, `"nmfk"`, `"rescalk"`,
+    /// `"scorer:<name>"`, ...).
+    pub model: String,
+    /// FNV-1a hash of the dataset bytes (0 for synthetic profiles).
+    pub dataset: u64,
+    /// RNG seed of the evaluator.
+    pub seed: u64,
+    /// Remaining evaluation knobs, rendered `key=value;...` (e.g.
+    /// perturbations, restarts, bursts, scoring metric, backend).
+    pub params: String,
+}
+
+impl Fingerprint {
+    /// Fingerprint for evaluators with no dataset/seed identity of
+    /// their own (closures, synthetic profiles).
+    pub fn anonymous(model: &str) -> Fingerprint {
+        Fingerprint {
+            model: format!("scorer:{model}"),
+            dataset: 0,
+            seed: 0,
+            params: String::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("model".to_string(), Json::Str(self.model.clone()));
+        obj.insert("dataset".to_string(), Json::Str(format!("{:016x}", self.dataset)));
+        obj.insert("seed".to_string(), Json::Num(self.seed as f64));
+        obj.insert("params".to_string(), Json::Str(self.params.clone()));
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Fingerprint, String> {
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or("fingerprint missing 'model'")?
+            .to_string();
+        let dataset = j
+            .get("dataset")
+            .and_then(Json::as_str)
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or("fingerprint missing 'dataset'")?;
+        let seed = j
+            .get("seed")
+            .and_then(Json::as_f64)
+            .ok_or("fingerprint missing 'seed'")? as u64;
+        let params = j
+            .get("params")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        Ok(Fingerprint {
+            model,
+            dataset,
+            seed,
+            params,
+        })
+    }
+}
+
+/// The record-producing evaluation abstraction: `f(k, D)` plus *all* of
+/// its scoring products. `Sync` because engine workers share one
+/// evaluator. The engine drivers take `&dyn KEvaluator`; anything that
+/// only has a [`KScorer`] (closures included) goes through
+/// [`ScorerEvaluator`].
+pub trait KEvaluator: Sync {
+    /// Fit the model at `k` and return the full record.
+    fn evaluate(&self, k: u32) -> Evaluation;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &str {
+        "evaluator"
+    }
+
+    /// Identity of this evaluation context (see [`Fingerprint`]).
+    fn fingerprint(&self) -> Fingerprint {
+        Fingerprint::anonymous(self.name())
+    }
+}
+
+/// Adapts any [`KScorer`] (closures included) into a [`KEvaluator`]
+/// producing scalar-only records stamped with their wall-clock cost.
+pub struct ScorerEvaluator<'a> {
+    inner: &'a dyn KScorer,
+}
+
+impl<'a> ScorerEvaluator<'a> {
+    pub fn new(inner: &'a dyn KScorer) -> ScorerEvaluator<'a> {
+        ScorerEvaluator { inner }
+    }
+}
+
+impl KEvaluator for ScorerEvaluator<'_> {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        let sw = Stopwatch::new();
+        let score = self.inner.score(k);
+        Evaluation::scalar(k, score).with_cost(sw.elapsed())
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+/// View of an evaluator (typically an
+/// [`EvalCache`](super::cache::EvalCache)) that re-primaries each record
+/// onto one of its secondary metrics. This is how a dual-metric report
+/// costs one fit per k: run the silhouette search against the cache,
+/// then a Davies-Bouldin search against
+/// `MetricView::new(&cache, "davies_bouldin")` — every record is served
+/// from the first search's fits.
+///
+/// Records that do not carry the metric pass through unchanged.
+pub struct MetricView<'a> {
+    inner: &'a dyn KEvaluator,
+    metric: String,
+}
+
+impl<'a> MetricView<'a> {
+    pub fn new(inner: &'a dyn KEvaluator, metric: impl Into<String>) -> MetricView<'a> {
+        MetricView {
+            inner,
+            metric: metric.into(),
+        }
+    }
+}
+
+impl KEvaluator for MetricView<'_> {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        let mut rec = self.inner.evaluate(k);
+        // `metric` also resolves the "score" alias, so a view on the
+        // primary is the identity; records without the metric pass
+        // through unchanged.
+        if let Some(v) = rec.metric(&self.metric) {
+            rec.score = v;
+        }
+        rec
+    }
+
+    fn name(&self) -> &str {
+        &self.metric
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        self.inner.fingerprint()
+    }
+}
+
+/// Wraps an evaluator and counts `evaluate` calls — placed *under* an
+/// [`EvalCache`](super::cache::EvalCache) this counts actual model
+/// fits, which is what the dedup/resume tests assert on.
+///
+/// Ordering contract: the count uses `Relaxed` atomics — it is a pure
+/// statistic read after the engine joined its workers (the join is the
+/// happens-before edge), never used to synchronize anything.
+pub struct CountingEvaluator<E> {
+    inner: E,
+    count: AtomicU64,
+}
+
+impl<E: KEvaluator> CountingEvaluator<E> {
+    pub fn new(inner: E) -> CountingEvaluator<E> {
+        CountingEvaluator {
+            inner,
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn evaluations(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+impl<E: KEvaluator> KEvaluator for CountingEvaluator<E> {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.evaluate(k)
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        self.inner.fingerprint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scorer_adapter_produces_scalar_records() {
+        let scorer = |k: u32| k as f64 * 0.5;
+        let ev = ScorerEvaluator::new(&scorer);
+        let rec = ev.evaluate(4);
+        assert_eq!(rec.k, 4);
+        assert_eq!(rec.score, 2.0);
+        assert!(rec.secondary.is_empty());
+        assert_eq!(rec.diagnostics, EvalDiagnostics::default());
+        assert!(ev.fingerprint().model.starts_with("scorer:"));
+    }
+
+    #[test]
+    fn json_roundtrip_is_bitwise_for_finite_scores() {
+        let mut rec = Evaluation::scalar(7, 0.1 + 0.2);
+        rec.secondary.insert("silhouette".into(), 0.812345678901234);
+        rec.secondary.insert("davies_bouldin".into(), 1.5e-3);
+        rec.diagnostics = EvalDiagnostics {
+            fit_error: Some(0.07),
+            iterations: Some(60),
+            restart_spread: Some(1e-4),
+            restarts: Some(3),
+        };
+        rec.cost = Duration::from_micros(1234);
+        let j = rec.to_json().to_string();
+        let back = Evaluation::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.k, rec.k);
+        assert_eq!(back.score.to_bits(), rec.score.to_bits());
+        assert_eq!(back.secondary, rec.secondary);
+        assert_eq!(
+            back.secondary["silhouette"].to_bits(),
+            rec.secondary["silhouette"].to_bits()
+        );
+        assert_eq!(back.diagnostics, rec.diagnostics);
+        assert_eq!(back.cost, rec.cost);
+    }
+
+    #[test]
+    fn non_finite_scores_serialize_as_null() {
+        let rec = Evaluation::scalar(3, f64::NAN);
+        let j = rec.to_json().to_string();
+        assert!(j.contains("null"), "{j}");
+        let back = Evaluation::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert!(back.score.is_nan());
+    }
+
+    #[test]
+    fn fingerprint_roundtrip_and_mismatch() {
+        let fp = Fingerprint {
+            model: "kmeans".into(),
+            dataset: 0xDEADBEEF12345678,
+            seed: 42,
+            params: "kmax=12;n_init=3".into(),
+        };
+        let j = fp.to_json().to_string();
+        let back = Fingerprint::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, fp);
+        assert_ne!(back, Fingerprint::anonymous("kmeans"));
+    }
+
+    #[test]
+    fn metric_view_swaps_primary() {
+        struct Dual;
+        impl KEvaluator for Dual {
+            fn evaluate(&self, k: u32) -> Evaluation {
+                let mut rec = Evaluation::scalar(k, 0.9);
+                rec.secondary.insert("davies_bouldin".into(), 0.25);
+                rec
+            }
+        }
+        let dual = Dual;
+        let view = MetricView::new(&dual, "davies_bouldin");
+        assert_eq!(view.evaluate(5).score, 0.25);
+        // Missing metric passes the record through unchanged.
+        let other = MetricView::new(&dual, "not-there");
+        assert_eq!(other.evaluate(5).score, 0.9);
+    }
+
+    #[test]
+    fn diagnostics_from_samples() {
+        let d = EvalDiagnostics::from_samples(&[0.2, 0.5, 0.3], 40);
+        assert!((d.fit_error.unwrap() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((d.restart_spread.unwrap() - 0.3).abs() < 1e-12);
+        assert_eq!((d.iterations, d.restarts), (Some(40), Some(3)));
+        // Empty samples: no NaN division, counts still recorded.
+        let empty = EvalDiagnostics::from_samples(&[], 40);
+        assert_eq!(empty.fit_error, None);
+        assert_eq!(empty.restart_spread, None);
+        assert_eq!(empty.restarts, Some(0));
+    }
+
+    #[test]
+    fn counting_evaluator_counts() {
+        let scorer = |k: u32| k as f64;
+        let ev = CountingEvaluator::new(ScorerEvaluator::new(&scorer));
+        ev.evaluate(1);
+        ev.evaluate(2);
+        assert_eq!(ev.evaluations(), 2);
+    }
+}

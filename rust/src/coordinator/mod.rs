@@ -17,28 +17,43 @@
 //!   (real threads and the deterministic lockstep replay).
 //! * [`visit_log`] — the per-k decision record every figure derives from.
 //! * [`scorer`] — the `S(f(k, D))` abstraction the engine drives.
+//! * [`evaluation`] — first-class [`Evaluation`] records and the
+//!   [`KEvaluator`] trait (scorer adapters included).
+//! * [`cache`] — the concurrency-deduplicating [`EvalCache`] between
+//!   the engines and the evaluators.
+//! * [`session`] — resumable [`SearchSession`]s with JSON checkpoints.
 
 pub mod bleed;
+pub mod cache;
 pub mod chunk;
 pub mod engine;
+pub mod evaluation;
 pub mod policy;
 pub mod rank;
 pub mod scheduler;
 pub mod scorer;
+pub mod session;
 pub mod state;
 pub mod traversal;
 pub mod visit_log;
 
 pub use bleed::{binary_bleed_serial, optimal_from_log, standard_search, SearchResult};
+pub use cache::{CacheStats, EvalCache};
 pub use chunk::{ChunkStrategy, Pipeline};
 pub use engine::{
-    bleed_order, normalize_ks, Clock, EvalCost, EvalSpan, EventOutcome, Loopback, MpscNet,
-    SimNet, Transport, UnitCost, VirtualClock, WallClock, WorkPlan, WorkerSlot,
+    bleed_order, normalize_ks, run_event_ev, run_threaded_ev, Clock, EvalCost, EvalSpan,
+    EventOutcome, Loopback, MpscNet, SimNet, Transport, UnitCost, VirtualClock, WallClock,
+    WorkPlan, WorkerSlot,
+};
+pub use evaluation::{
+    CountingEvaluator, EvalDiagnostics, Evaluation, Fingerprint, KEvaluator, MetricView,
+    ScorerEvaluator,
 };
 pub use policy::{Direction, Mode, SearchPolicy, Thresholds};
 pub use rank::{Broadcast, RankComm};
 pub use scheduler::{binary_bleed_lockstep, binary_bleed_parallel, ParallelConfig};
 pub use scorer::{CountingScorer, KScorer};
+pub use session::{Checkpoint, SearchSession, SessionOutcome, StateSnapshot};
 pub use state::{Admission, Candidate, SharedState};
 pub use traversal::Traversal;
 pub use visit_log::{Decision, Visit, VisitLog};

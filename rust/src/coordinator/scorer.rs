@@ -28,6 +28,13 @@ where
 
 /// Wraps a scorer and counts evaluations (used by tests and benches to
 /// assert visit counts independently of the VisitLog).
+///
+/// Ordering contract: the counter is a pure statistic, never used to
+/// synchronize anything — every reader of [`CountingScorer::evaluations`]
+/// runs *after* the engine joined its worker threads, and the join is
+/// the happens-before edge that publishes the final count. `Relaxed` is
+/// therefore sufficient on the hot path (one `fetch_add` per model fit);
+/// anything stronger would buy ordering nobody observes.
 pub struct CountingScorer<S> {
     inner: S,
     count: std::sync::atomic::AtomicU64,
@@ -42,14 +49,14 @@ impl<S: KScorer> CountingScorer<S> {
     }
 
     pub fn evaluations(&self) -> u64 {
-        self.count.load(std::sync::atomic::Ordering::SeqCst)
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 
 impl<S: KScorer> KScorer for CountingScorer<S> {
     fn score(&self, k: u32) -> f64 {
         self.count
-            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.inner.score(k)
     }
 

@@ -1,0 +1,571 @@
+//! Resumable search sessions (DESIGN.md S22): one search = an
+//! evaluator, a deduplicating [`EvalCache`], an engine configuration and
+//! an optional JSON checkpoint on disk.
+//!
+//! A [`SearchSession`] owns the orchestration the CLI used to improvise:
+//! it wraps the evaluator in a cache, journals every completed
+//! [`Evaluation`] to the checkpoint file *as it completes* (a killed
+//! process loses at most the fit in flight), snapshots the pruning
+//! state and visit log at shutdown, and on [`SearchSession::resume`]
+//! preloads the checkpointed records so already-fitted k are served in
+//! constant time with **zero** repeat fits.
+//!
+//! # Resume = replay, not bitmap restore
+//!
+//! The checkpoint serializes the [`SharedState`] bounds and claim
+//! bitmap (observability, external warm-starts), but resume does not
+//! blindly install them: a claim marks "a worker took this k", which
+//! includes evaluations that were *in flight* at kill time — restoring
+//! those bits would orphan their k forever. Instead resume reruns the
+//! schedule against the preloaded cache: every checkpointed k is
+//! re-admitted, served from its record in O(1) and re-published, which
+//! rebuilds bounds, best and claims *exactly* as the uninterrupted run
+//! would have — same k\*, same visited set, zero re-fits (the
+//! round-trip property test in `rust/tests/session_resume.rs`). Since
+//! records replay bitwise (NUMERICS.md), deterministic schedules
+//! reproduce the uninterrupted trajectory identically.
+
+use std::path::{Path, PathBuf};
+
+use super::bleed::SearchResult;
+use super::cache::{CacheStats, EvalCache};
+use super::engine::{normalize_ks, run_threaded_ev, Loopback, MpscNet, Transport, WorkPlan};
+use super::evaluation::{Evaluation, Fingerprint, KEvaluator};
+use super::policy::SearchPolicy;
+use super::scheduler::ParallelConfig;
+use super::state::{Candidate, SharedState};
+use super::visit_log::VisitLog;
+use crate::util::error::{bail, Context, Result};
+use crate::util::json::Json;
+
+/// Checkpoint schema version — bumped on incompatible layout changes.
+pub const CHECKPOINT_VERSION: u32 = 1;
+
+/// Serialized view of the pruning state: merged bounds + candidate
+/// optimal across every rank, and the union of claimed k.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StateSnapshot {
+    pub floor: Option<u32>,
+    pub ceil: Option<u32>,
+    pub best: Option<Candidate>,
+    pub claimed: Vec<u32>,
+}
+
+impl StateSnapshot {
+    /// Fold every rank's state: tightest bounds, largest-k best
+    /// (the paper's ReceiveKCheck rule), union of claims.
+    pub fn merged(states: &[SharedState]) -> StateSnapshot {
+        let mut snap = StateSnapshot::default();
+        for s in states {
+            let (f, c) = s.bounds();
+            snap.floor = match (snap.floor, f) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            };
+            snap.ceil = match (snap.ceil, c) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            if let Some(b) = s.best() {
+                snap.best = match snap.best {
+                    Some(cur) if cur.k >= b.k => Some(cur),
+                    _ => Some(b),
+                };
+            }
+            snap.claimed.extend(s.claimed_ks());
+        }
+        snap.claimed.sort_unstable();
+        snap.claimed.dedup();
+        snap
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        let opt = |v: Option<u32>| match v {
+            Some(x) => Json::Num(f64::from(x)),
+            None => Json::Null,
+        };
+        obj.insert("floor".to_string(), opt(self.floor));
+        obj.insert("ceil".to_string(), opt(self.ceil));
+        obj.insert(
+            "best".to_string(),
+            match self.best {
+                Some(c) => {
+                    let mut b = std::collections::BTreeMap::new();
+                    b.insert("k".to_string(), Json::Num(f64::from(c.k)));
+                    b.insert("score".to_string(), Json::Num(c.score));
+                    Json::Obj(b)
+                }
+                None => Json::Null,
+            },
+        );
+        obj.insert(
+            "claimed".to_string(),
+            Json::Arr(self.claimed.iter().map(|&k| Json::Num(f64::from(k))).collect()),
+        );
+        Json::Obj(obj)
+    }
+
+    fn from_json(j: &Json) -> Result<StateSnapshot> {
+        let opt = |key: &str| j.get(key).and_then(Json::as_f64).map(|v| v as u32);
+        let best = match j.get("best") {
+            Some(Json::Null) | None => None,
+            Some(b) => Some(Candidate {
+                k: b.get("k").and_then(Json::as_f64).context("best missing k")? as u32,
+                score: b
+                    .get("score")
+                    .and_then(Json::as_f64)
+                    .context("best missing score")?,
+            }),
+        };
+        let claimed = j
+            .get("claimed")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_f64).map(|v| v as u32).collect())
+            .unwrap_or_default();
+        Ok(StateSnapshot {
+            floor: opt("floor"),
+            ceil: opt("ceil"),
+            best,
+            claimed,
+        })
+    }
+}
+
+/// On-disk session checkpoint: evaluator identity, search domain, the
+/// completed evaluation records, and (in final form) the pruning-state
+/// snapshot plus the full visit log. Mid-run journal writes carry
+/// records only — `state`/`visits` are `None` until shutdown.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub version: u32,
+    pub fingerprint: Fingerprint,
+    pub domain: Vec<u32>,
+    pub records: Vec<Evaluation>,
+    pub state: Option<StateSnapshot>,
+    pub visits: Option<VisitLog>,
+}
+
+impl Checkpoint {
+    /// Mid-run journal form: completed records only.
+    pub fn partial(
+        fingerprint: Fingerprint,
+        domain: Vec<u32>,
+        records: Vec<Evaluation>,
+    ) -> Checkpoint {
+        Checkpoint {
+            version: CHECKPOINT_VERSION,
+            fingerprint,
+            domain,
+            records,
+            state: None,
+            visits: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("version".to_string(), Json::Num(self.version as f64));
+        obj.insert("fingerprint".to_string(), self.fingerprint.to_json());
+        obj.insert(
+            "domain".to_string(),
+            Json::Arr(self.domain.iter().map(|&k| Json::Num(f64::from(k))).collect()),
+        );
+        obj.insert(
+            "records".to_string(),
+            Json::Arr(self.records.iter().map(Evaluation::to_json).collect()),
+        );
+        if let Some(state) = &self.state {
+            obj.insert("state".to_string(), state.to_json());
+        }
+        if let Some(visits) = &self.visits {
+            obj.insert("visits".to_string(), visits.to_json());
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Checkpoint> {
+        let version = j
+            .get("version")
+            .and_then(Json::as_f64)
+            .context("checkpoint missing version")? as u32;
+        if version != CHECKPOINT_VERSION {
+            bail!("unsupported checkpoint version {version} (want {CHECKPOINT_VERSION})");
+        }
+        let fingerprint = Fingerprint::from_json(
+            j.get("fingerprint").context("checkpoint missing fingerprint")?,
+        )
+        .map_err(|e| crate::anyhow!("{e}"))?;
+        let domain: Vec<u32> = j
+            .get("domain")
+            .and_then(Json::as_arr)
+            .context("checkpoint missing domain")?
+            .iter()
+            .filter_map(Json::as_f64)
+            .map(|v| v as u32)
+            .collect();
+        let mut records = Vec::new();
+        for r in j
+            .get("records")
+            .and_then(Json::as_arr)
+            .context("checkpoint missing records")?
+        {
+            records.push(Evaluation::from_json(r).map_err(|e| crate::anyhow!("{e}"))?);
+        }
+        let state = match j.get("state") {
+            Some(s) => Some(StateSnapshot::from_json(s)?),
+            None => None,
+        };
+        let visits = match j.get("visits") {
+            Some(v) => Some(VisitLog::from_json(v).map_err(|e| crate::anyhow!("{e}"))?),
+            None => None,
+        };
+        Ok(Checkpoint {
+            version,
+            fingerprint,
+            domain,
+            records,
+            state,
+            visits,
+        })
+    }
+
+    /// Write atomically-ish: temp file in the same directory, then
+    /// rename over the target.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let j = crate::util::json::parse(&text)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))?;
+        Checkpoint::from_json(&j)
+    }
+
+    /// A checkpoint only warms a search over the *same* evaluation
+    /// context and domain; anything else is a hard error rather than a
+    /// silently wrong warm-start.
+    pub fn validate(&self, fingerprint: &Fingerprint, domain: &[u32]) -> Result<()> {
+        if &self.fingerprint != fingerprint {
+            bail!(
+                "checkpoint fingerprint mismatch: file has {:?}, evaluator is {:?}",
+                self.fingerprint,
+                fingerprint
+            );
+        }
+        if self.domain != domain {
+            bail!(
+                "checkpoint domain mismatch: file covers {} k, search has {} k",
+                self.domain.len(),
+                domain.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// What a finished session hands back: the engine's result plus the
+/// full evaluation records and the cache traffic.
+#[derive(Debug)]
+pub struct SessionOutcome {
+    pub result: SearchResult,
+    /// Every completed record, ascending by k (cache-retained — cheaper
+    /// than the fits that produced them by construction).
+    pub records: Vec<Evaluation>,
+    pub stats: CacheStats,
+}
+
+/// A configured, resumable search over one evaluator.
+pub struct SearchSession<'a> {
+    evaluator: &'a dyn KEvaluator,
+    policy: SearchPolicy,
+    parallel: ParallelConfig,
+    checkpoint: Option<PathBuf>,
+}
+
+impl<'a> SearchSession<'a> {
+    pub fn new(evaluator: &'a dyn KEvaluator, policy: SearchPolicy) -> SearchSession<'a> {
+        SearchSession {
+            evaluator,
+            policy,
+            parallel: ParallelConfig {
+                ranks: 1,
+                threads_per_rank: 1,
+                ..Default::default()
+            },
+            checkpoint: None,
+        }
+    }
+
+    /// Engine shape; `ranks × threads_per_rank ≤ 1` runs the serial
+    /// Alg 1 schedule (deterministic), larger shapes the threaded
+    /// multi-rank driver.
+    pub fn with_parallel(mut self, cfg: ParallelConfig) -> SearchSession<'a> {
+        self.parallel = cfg;
+        self
+    }
+
+    /// Journal completed fits to `path` during the run and write the
+    /// full checkpoint (records + state snapshot + visit log) at
+    /// shutdown.
+    pub fn with_checkpoint(mut self, path: impl Into<PathBuf>) -> SearchSession<'a> {
+        self.checkpoint = Some(path.into());
+        self
+    }
+
+    /// Fresh run; overwrites any existing checkpoint at the configured
+    /// path.
+    pub fn run(&self, ks: &[u32]) -> Result<SessionOutcome> {
+        self.run_inner(ks, Vec::new())
+    }
+
+    /// Resume from the configured checkpoint: validate it against this
+    /// evaluator + domain, preload its records, rerun the schedule. A
+    /// missing file degrades to a fresh run (first launch with
+    /// `--resume` just works).
+    pub fn resume(&self, ks: &[u32]) -> Result<SessionOutcome> {
+        let path = self
+            .checkpoint
+            .as_deref()
+            .context("resume requires with_checkpoint")?;
+        let preload = if path.exists() {
+            let cp = Checkpoint::load(path)?;
+            cp.validate(&self.evaluator.fingerprint(), &normalize_ks(ks))?;
+            cp.records
+        } else {
+            Vec::new()
+        };
+        self.run_inner(ks, preload)
+    }
+
+    fn run_inner(&self, ks: &[u32], preload: Vec<Evaluation>) -> Result<SessionOutcome> {
+        let ks = normalize_ks(ks);
+        let mut cache = EvalCache::new(self.evaluator);
+        if let Some(path) = &self.checkpoint {
+            let fingerprint = self.evaluator.fingerprint();
+            let domain = ks.clone();
+            let path = path.clone();
+            // Concurrent engine workers invoke the journal in parallel;
+            // the gate serializes writes (they share one tmp file) and
+            // drops snapshots already superseded by a larger one, so a
+            // late writer can never rename a stale record set over a
+            // newer checkpoint.
+            let write_gate: std::sync::Mutex<usize> = std::sync::Mutex::new(0);
+            cache = cache.with_journal(Box::new(move |records| {
+                let mut last = write_gate.lock().unwrap();
+                if records.len() <= *last {
+                    return;
+                }
+                let cp =
+                    Checkpoint::partial(fingerprint.clone(), domain.clone(), records.to_vec());
+                if let Err(e) = cp.save(&path) {
+                    // Best-effort journal: the search result is still
+                    // correct without it, so warn instead of aborting a
+                    // long run over a transient IO failure.
+                    eprintln!("warning: checkpoint journal failed: {e:#}");
+                } else {
+                    *last = records.len();
+                }
+            }));
+        }
+        // Only in-domain records can ever be requested; keep the cache
+        // (and its journal snapshots) free of stale out-of-domain k.
+        cache.preload(
+            preload
+                .into_iter()
+                .filter(|r| ks.binary_search(&r.k).is_ok()),
+        );
+
+        let (plan, states, net) = if self.parallel.resources() <= 1 {
+            // Serial Alg 1: deterministic bleed order, loopback.
+            (
+                WorkPlan::serial(&ks, self.policy.mode),
+                vec![SharedState::new(&ks)],
+                None,
+            )
+        } else {
+            let plan = WorkPlan::ranked(
+                &ks,
+                self.parallel.ranks,
+                self.parallel.threads_per_rank,
+                self.parallel.traversal,
+                self.parallel.pipeline,
+            );
+            let states: Vec<SharedState> =
+                (0..plan.ranks).map(|_| SharedState::new(&ks)).collect();
+            let net = Some(MpscNet::new(plan.ranks));
+            (plan, states, net)
+        };
+        let transport: &dyn Transport = match &net {
+            Some(n) => n,
+            None => &Loopback,
+        };
+        let result = run_threaded_ev(&ks, &plan, &states, transport, &cache, self.policy);
+
+        let records = cache.records();
+        let stats = cache.stats();
+        if let Some(path) = &self.checkpoint {
+            let cp = Checkpoint {
+                version: CHECKPOINT_VERSION,
+                fingerprint: self.evaluator.fingerprint(),
+                domain: ks.clone(),
+                records: records.clone(),
+                state: Some(StateSnapshot::merged(&states)),
+                visits: Some(result.log.clone()),
+            };
+            // The search itself succeeded: a failed final write must
+            // not discard the computed outcome (the journal already
+            // holds every completed record anyway).
+            if let Err(e) = cp.save(path) {
+                eprintln!("warning: final checkpoint write failed: {e:#}");
+            }
+        }
+        Ok(SessionOutcome {
+            result,
+            records,
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::evaluation::{CountingEvaluator, ScorerEvaluator};
+    use crate::coordinator::policy::{Mode, Thresholds};
+
+    fn pol() -> SearchPolicy {
+        SearchPolicy::maximize(
+            Mode::Vanilla,
+            Thresholds {
+                select: 0.75,
+                stop: 0.2,
+            },
+        )
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bb_session_{name}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn session_matches_serial_entry_point() {
+        let ks: Vec<u32> = (2..=30).collect();
+        let scorer = |k: u32| if k <= 17 { 0.9 } else { 0.1 };
+        let adapter = ScorerEvaluator::new(&scorer);
+        let out = SearchSession::new(&adapter, pol()).run(&ks).unwrap();
+        assert_eq!(out.result.k_optimal, Some(17));
+        // Every evaluated k has a retained record with its score.
+        assert_eq!(out.records.len(), out.result.log.evaluated_count());
+        assert_eq!(out.stats.misses as usize, out.records.len());
+        for rec in &out.records {
+            assert_eq!(
+                rec.score.to_bits(),
+                out.result.log.score_of(rec.k).unwrap().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_written_and_resumed_with_zero_refits() {
+        let ks: Vec<u32> = (2..=24).collect();
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let scorer = |k: u32| if k <= 11 { 0.9 } else { 0.1 };
+        let adapter = CountingEvaluator::new(ScorerEvaluator::new(&scorer));
+        let first = SearchSession::new(&adapter, pol())
+            .with_checkpoint(&path)
+            .run(&ks)
+            .unwrap();
+        let fits_first = adapter.evaluations();
+        assert!(path.exists());
+
+        let cp = Checkpoint::load(&path).unwrap();
+        assert_eq!(cp.records.len() as u64, fits_first);
+        let state = cp.state.as_ref().unwrap();
+        assert_eq!(state.floor, Some(11));
+        assert_eq!(state.best.unwrap().k, 11);
+        assert!(cp.visits.is_some());
+
+        // Resume: identical outcome, all records served from the file.
+        let adapter2 = CountingEvaluator::new(ScorerEvaluator::new(&scorer));
+        let second = SearchSession::new(&adapter2, pol())
+            .with_checkpoint(&path)
+            .resume(&ks)
+            .unwrap();
+        assert_eq!(adapter2.evaluations(), 0, "zero re-fits of checkpointed k");
+        assert_eq!(second.result.k_optimal, first.result.k_optimal);
+        assert_eq!(
+            second.result.log.evaluated(),
+            first.result.log.evaluated()
+        );
+        assert_eq!(second.stats.preloaded as u64, fits_first);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn resume_rejects_foreign_checkpoints() {
+        let ks: Vec<u32> = (2..=12).collect();
+        let path = tmp("foreign");
+        let _ = std::fs::remove_file(&path);
+        let scorer = |k: u32| if k <= 5 { 0.9 } else { 0.1 };
+        let adapter = ScorerEvaluator::new(&scorer);
+        SearchSession::new(&adapter, pol())
+            .with_checkpoint(&path)
+            .run(&ks)
+            .unwrap();
+        // Different domain → hard error.
+        let wider: Vec<u32> = (2..=20).collect();
+        let err = SearchSession::new(&adapter, pol())
+            .with_checkpoint(&path)
+            .resume(&wider);
+        assert!(err.is_err());
+        // Missing file → fresh run, no error.
+        let _ = std::fs::remove_file(&path);
+        let ok = SearchSession::new(&adapter, pol())
+            .with_checkpoint(&path)
+            .resume(&ks)
+            .unwrap();
+        assert_eq!(ok.result.k_optimal, Some(5));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrip() {
+        let mut rec = Evaluation::scalar(9, 0.875);
+        rec.secondary.insert("davies_bouldin".into(), 0.31);
+        let cp = Checkpoint {
+            version: CHECKPOINT_VERSION,
+            fingerprint: Fingerprint::anonymous("probe"),
+            domain: vec![2, 3, 4, 9],
+            records: vec![rec],
+            state: Some(StateSnapshot {
+                floor: Some(9),
+                ceil: None,
+                best: Some(Candidate { k: 9, score: 0.875 }),
+                claimed: vec![2, 9],
+            }),
+            visits: Some(VisitLog::new()),
+        };
+        let text = cp.to_json().to_string();
+        let back = Checkpoint::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.domain, cp.domain);
+        assert_eq!(back.records, cp.records);
+        assert_eq!(back.state.as_ref(), cp.state.as_ref());
+        assert_eq!(back.fingerprint, cp.fingerprint);
+        assert_eq!(back.visits.unwrap().visits.len(), 0);
+    }
+}

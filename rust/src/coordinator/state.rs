@@ -236,6 +236,22 @@ impl SharedState {
         Some(Candidate { k, score })
     }
 
+    /// Every k whose claim bit is set (ascending) — what a session
+    /// checkpoint serializes. A claim marks "a worker took this k",
+    /// which covers both completed and in-flight evaluations; resume
+    /// logic therefore treats claims as observability data and rebuilds
+    /// live claims by replaying completed records (DESIGN.md S22).
+    pub fn claimed_ks(&self) -> Vec<u32> {
+        self.domain
+            .iter()
+            .enumerate()
+            .filter(|(pos, _)| {
+                self.claimed[pos / 64].load(Ordering::SeqCst) & (1u64 << (pos % 64)) != 0
+            })
+            .map(|(_, &k)| k)
+            .collect()
+    }
+
     /// The current (floor, ceil) prune bounds.
     pub fn bounds(&self) -> (Option<u32>, Option<u32>) {
         let f = self.floor.load(Ordering::SeqCst);
@@ -445,6 +461,17 @@ mod tests {
         for &k in &big {
             assert_eq!(st.admit(k, &p), Admission::AlreadyClaimed, "k={k}");
         }
+    }
+
+    #[test]
+    fn claimed_ks_lists_exactly_the_claims() {
+        let st = SharedState::new(&domain());
+        let p = policy(Mode::Vanilla);
+        assert!(st.claimed_ks().is_empty());
+        for k in [7u32, 1, 30, 13] {
+            st.admit(k, &p);
+        }
+        assert_eq!(st.claimed_ks(), vec![1, 7, 13, 30]);
     }
 
     #[test]

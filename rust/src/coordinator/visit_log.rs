@@ -1,7 +1,11 @@
 //! Visit accounting: which k were evaluated, skipped or pruned, by whom,
-//! when. Every figure/table in §IV is a function of this log.
+//! when. Every figure/table in §IV is a function of this log, and a
+//! session checkpoint serializes it verbatim (DESIGN.md S22).
 
+use std::collections::BTreeMap;
 use std::time::Duration;
+
+use crate::util::json::Json;
 
 /// What happened when a worker looked at one k.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,6 +101,98 @@ impl VisitLog {
     pub fn merge(&mut self, other: VisitLog) {
         self.visits.extend(other.visits);
     }
+
+    /// Checkpoint serialization: an array of visit objects. Pruned
+    /// skips carry `score: null` (NaN is not representable in JSON).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.visits.iter().map(Visit::to_json).collect())
+    }
+
+    /// Inverse of [`VisitLog::to_json`].
+    pub fn from_json(j: &Json) -> Result<VisitLog, String> {
+        let arr = j.as_arr().ok_or("visit log must be an array")?;
+        let mut log = VisitLog::new();
+        for v in arr {
+            log.push(Visit::from_json(v)?);
+        }
+        Ok(log)
+    }
+}
+
+impl Decision {
+    pub fn label(self) -> &'static str {
+        match self {
+            Decision::Selected => "selected",
+            Decision::Rejected => "rejected",
+            Decision::PrunedSkip => "pruned",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Result<Decision, String> {
+        match s {
+            "selected" => Ok(Decision::Selected),
+            "rejected" => Ok(Decision::Rejected),
+            "pruned" => Ok(Decision::PrunedSkip),
+            other => Err(format!("unknown decision label '{other}'")),
+        }
+    }
+}
+
+impl Visit {
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("seq".to_string(), Json::Num(self.seq as f64));
+        obj.insert("k".to_string(), Json::Num(f64::from(self.k)));
+        obj.insert(
+            "score".to_string(),
+            if self.score.is_finite() {
+                Json::Num(self.score)
+            } else {
+                Json::Null
+            },
+        );
+        obj.insert(
+            "decision".to_string(),
+            Json::Str(self.decision.label().to_string()),
+        );
+        // usize::MAX marks the synthetic end-of-run prune entries; keep
+        // it representable as -1.
+        let rank = if self.rank == usize::MAX {
+            -1.0
+        } else {
+            self.rank as f64
+        };
+        obj.insert("rank".to_string(), Json::Num(rank));
+        obj.insert("thread".to_string(), Json::Num(self.thread as f64));
+        obj.insert("at_us".to_string(), Json::Num(self.at.as_micros() as f64));
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Visit, String> {
+        let num = |key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("visit missing '{key}'"))
+        };
+        let decision = Decision::from_label(
+            j.get("decision")
+                .and_then(Json::as_str)
+                .ok_or("visit missing 'decision'")?,
+        )?;
+        let rank = num("rank")?;
+        Ok(Visit {
+            seq: num("seq")? as u64,
+            k: num("k")? as u32,
+            score: j
+                .get("score")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN),
+            decision,
+            rank: if rank < 0.0 { usize::MAX } else { rank as usize },
+            thread: num("thread")? as usize,
+            at: Duration::from_micros(num("at_us")? as u64),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -140,5 +236,26 @@ mod tests {
     fn empty_log_is_zero_percent() {
         assert_eq!(VisitLog::new().percent_visited(29), 0.0);
         assert_eq!(VisitLog::new().percent_visited(0), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let mut log = VisitLog::new();
+        log.push(visit(0, 5, Decision::Selected));
+        log.push(visit(1, 3, Decision::PrunedSkip));
+        let mut tail = visit(2, 7, Decision::Rejected);
+        tail.rank = usize::MAX; // synthetic fill_pruned marker
+        tail.at = Duration::from_micros(12345);
+        log.push(tail);
+        let text = log.to_json().to_string();
+        let back =
+            VisitLog::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.visits.len(), 3);
+        for (a, b) in log.visits.iter().zip(&back.visits) {
+            assert_eq!((a.seq, a.k, a.decision, a.rank, a.thread, a.at),
+                       (b.seq, b.k, b.decision, b.rank, b.thread, b.at));
+            assert!(a.score.to_bits() == b.score.to_bits() || (a.score.is_nan() && b.score.is_nan()));
+        }
+        assert_eq!(back.pruned(), vec![3]);
     }
 }

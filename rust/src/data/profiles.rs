@@ -110,6 +110,26 @@ impl crate::coordinator::KScorer for ScoreProfile {
     }
 }
 
+impl crate::coordinator::KEvaluator for ScoreProfile {
+    fn evaluate(&self, k: u32) -> crate::coordinator::Evaluation {
+        crate::coordinator::Evaluation::scalar(k, ScoreProfile::score(self, k))
+    }
+
+    fn name(&self) -> &str {
+        crate::coordinator::KScorer::name(self)
+    }
+
+    fn fingerprint(&self) -> crate::coordinator::Fingerprint {
+        crate::coordinator::Fingerprint {
+            model: format!("profile:{}", crate::coordinator::KScorer::name(self)),
+            dataset: 0,
+            seed: 0,
+            // The profile parameters are the whole identity.
+            params: format!("{self:?}"),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -63,6 +63,41 @@
 //! assert_eq!(parallel.k_optimal, Some(15));
 //! ```
 //!
+//! Evaluations are first-class records (DESIGN.md S22): model
+//! evaluators return [`coordinator::Evaluation`]s — primary score,
+//! secondary metrics from the same fit (K-means reports silhouette
+//! *and* Davies-Bouldin per fit), fit diagnostics, wall-clock cost —
+//! deduplicated by a [`coordinator::EvalCache`] (racing workers
+//! block-and-share instead of double-fitting) and persisted by
+//! [`coordinator::SearchSession`] JSON checkpoints. On the CLI:
+//!
+//! ```text
+//! bleed search --model kmeans --checkpoint runs/kmeans.ckpt.json
+//! # killed? rerun with --resume: checkpointed k are served from their
+//! # records with zero re-fits, and the report prints both metrics plus
+//! # the cache hit rate.
+//! bleed search --model kmeans --checkpoint runs/kmeans.ckpt.json --resume
+//! ```
+//!
+//! ```no_run
+//! use binary_bleed::coordinator::{
+//!     Mode, ScorerEvaluator, SearchPolicy, SearchSession, Thresholds,
+//! };
+//! let ks: Vec<u32> = (2..=30).collect();
+//! let scorer = |k: u32| if k <= 15 { 0.9 } else { 0.1 };
+//! let adapter = ScorerEvaluator::new(&scorer);
+//! let policy = SearchPolicy::maximize(
+//!     Mode::Vanilla,
+//!     Thresholds { select: 0.75, stop: 0.2 },
+//! );
+//! let outcome = SearchSession::new(&adapter, policy)
+//!     .with_checkpoint("runs/quickstart.ckpt.json")
+//!     .run(&ks)
+//!     .unwrap();
+//! assert_eq!(outcome.result.k_optimal, Some(15));
+//! // outcome.records: every Evaluation; outcome.stats: cache traffic.
+//! ```
+//!
 //! See DESIGN.md for the system inventory (engine/Clock/Transport
 //! layering, feature flags), NUMERICS.md for the numeric contract, and
 //! EXPERIMENTS.md for the paper-vs-measured record.

@@ -300,6 +300,30 @@ impl Matrix {
     pub fn col(&self, c: usize) -> Vec<f32> {
         (0..self.rows).map(|r| self.at(r, c)).collect()
     }
+
+    /// FNV-1a hash over the shape and the element bit patterns —
+    /// the dataset component of an evaluation
+    /// [`Fingerprint`](crate::coordinator::Fingerprint). Bit-exact: two
+    /// matrices fingerprint equal iff shape and every f32 payload
+    /// (including NaN bits and signed zeros) match.
+    pub fn fingerprint64(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        for b in (self.rows as u64)
+            .to_le_bytes()
+            .into_iter()
+            .chain((self.cols as u64).to_le_bytes())
+        {
+            h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+        }
+        for &v in &self.data {
+            for b in v.to_bits().to_le_bytes() {
+                h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+            }
+        }
+        h
+    }
 }
 
 /// Cosine similarity between two equal-length vectors.
@@ -413,5 +437,18 @@ mod tests {
     fn row_sq_dist_matches_manual() {
         let a = Matrix::from_vec(2, 2, vec![0., 0., 3., 4.]);
         assert!((Matrix::row_sq_dist(&a, 0, &a, 1) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fingerprint_is_shape_and_bit_sensitive() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let same = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let transposed_shape = Matrix::from_vec(1, 4, vec![1., 2., 3., 4.]);
+        let mut bumped = a.clone();
+        bumped.data[3] = 4.0000005;
+        assert_eq!(a.fingerprint64(), same.fingerprint64());
+        assert_ne!(a.fingerprint64(), transposed_shape.fingerprint64());
+        assert_ne!(a.fingerprint64(), bumped.fingerprint64());
+        assert_ne!(a.fingerprint64(), 0);
     }
 }

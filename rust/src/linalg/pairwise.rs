@@ -39,7 +39,7 @@
 
 use super::matrix::Matrix;
 use crate::util::pool::ThreadPool;
-use crate::util::simd::{self, SimdPolicy};
+use crate::util::simd::{self, DotKernel, SimdPolicy};
 
 /// Column-block width of a distance tile: [`TILE`] rows of `b` stay
 /// cache-resident while a block of `a` rows streams against them.
@@ -54,12 +54,14 @@ pub fn row_sq_norms(x: &Matrix) -> Vec<f64> {
 /// [`row_sq_norms`] under an explicit policy. The norm of a row is
 /// computed as `dot(row, row)` with the *same* primitive and fold order
 /// as the tile dot products, so `d²(aᵢ, aᵢ)` cancels to exactly 0 under
-/// every policy.
+/// every policy. The backend is resolved once for the whole pass
+/// ([`DotKernel::resolve`]), not re-probed per row.
 pub fn row_sq_norms_policy(x: &Matrix, policy: SimdPolicy) -> Vec<f64> {
+    let kernel = DotKernel::resolve(policy, x.cols);
     (0..x.rows)
         .map(|i| {
             let row = x.row(i);
-            simd::dot_widened(row, row, policy)
+            kernel.dot_widened(row, row)
         })
         .collect()
 }
@@ -86,7 +88,11 @@ pub fn sq_dist_tile(
 
 /// [`sq_dist_tile`] under an explicit policy. `na`/`nb` must have been
 /// produced by [`row_sq_norms_policy`] under the *same* policy for the
-/// exact-zero self-distance guarantee to hold.
+/// exact-zero self-distance guarantee to hold. The dot backend is
+/// resolved **once per tile** from `(policy, d)` — the per-dot
+/// cached-probe branch is gone from the inner loop, which matters on
+/// small inner dimensions where the probe was a measurable fraction of
+/// the dot itself.
 #[allow(clippy::too_many_arguments)]
 pub fn sq_dist_tile_policy(
     a: &Matrix,
@@ -103,11 +109,12 @@ pub fn sq_dist_tile_policy(
     debug_assert_eq!(a.cols, b.cols, "pairwise: dimension mismatch");
     let w = j1 - j0;
     debug_assert!(out.len() >= (i1 - i0) * w, "tile buffer too small");
+    let kernel = DotKernel::resolve(policy, a.cols);
     for i in i0..i1 {
         let arow = a.row(i);
         let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
         for (o, j) in orow.iter_mut().zip(j0..j1) {
-            let dot = simd::dot_widened(arow, b.row(j), policy);
+            let dot = kernel.dot_widened(arow, b.row(j));
             *o = (na[i] + nb[j] - 2.0 * dot).max(0.0);
         }
     }
@@ -224,6 +231,26 @@ mod tests {
             let d1 = sq_dist_matrix_policy(&a, &b, &ThreadPool::serial(), policy);
             let d8 = sq_dist_matrix_policy(&a, &b, &ThreadPool::new(8), policy);
             assert_eq!(d1, d8, "{policy:?}: per-element arithmetic is chunk-independent");
+        }
+    }
+
+    #[test]
+    fn sublane_dims_are_bitwise_identical_across_policies() {
+        // d < 4: the Auto sub-lane fallback and every other backend run
+        // the same left-to-right sum, so tiles match bit for bit.
+        let mut rng = Pcg32::new(95);
+        for d in 1..4usize {
+            let a = Matrix::rand_normal(19, d, &mut rng);
+            let b = Matrix::rand_normal(7, d, &mut rng);
+            let pool = ThreadPool::serial();
+            let want = sq_dist_matrix_policy(&a, &b, &pool, SimdPolicy::ForceScalar);
+            for policy in POLICIES {
+                let got = sq_dist_matrix_policy(&a, &b, &pool, policy);
+                assert!(
+                    want.iter().zip(&got).all(|(w, g)| w.to_bits() == g.to_bits()),
+                    "{policy:?} d={d}: sub-lane tiles must be bitwise scalar"
+                );
+            }
         }
     }
 

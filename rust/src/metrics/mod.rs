@@ -1,11 +1,13 @@
 //! Reporting: turning [`SearchResult`]s into the rows/series the paper's
 //! tables and figures print (visit-%, speedups, RMSE of recovered k),
-//! plus markdown/CSV writers for `results/`.
+//! session reports over evaluation records (secondary metrics, fit
+//! diagnostics, cache hit rates), plus markdown/CSV writers for
+//! `results/`.
 
 use std::fmt::Write as _;
 use std::path::Path;
 
-use crate::coordinator::SearchResult;
+use crate::coordinator::{CacheStats, Evaluation, SearchResult};
 use crate::util::rmse;
 
 /// One row of a method-comparison table (Fig 8 / Fig 9 style).
@@ -107,6 +109,56 @@ impl SweepSummary {
     }
 }
 
+/// Render a session's evaluation records as a markdown table: one row
+/// per evaluated k with the primary score, every secondary metric the
+/// fits produced (column set = union across records), the fit
+/// diagnostics and the wall-clock cost. Fields a record does not carry
+/// print as `-`.
+pub fn records_markdown(records: &[Evaluation]) -> String {
+    use std::collections::BTreeSet;
+    let keys: BTreeSet<&str> = records
+        .iter()
+        .flat_map(|r| r.secondary.keys().map(String::as_str))
+        .collect();
+    let mut headers: Vec<&str> = vec!["k", "score"];
+    headers.extend(keys.iter().copied());
+    headers.extend(["fit_error", "iters", "spread", "cost_ms"]);
+    let fmt = |v: Option<f64>| match v {
+        Some(x) => format!("{x:.4}"),
+        None => "-".to_string(),
+    };
+    let rows: Vec<Vec<String>> = records
+        .iter()
+        .map(|r| {
+            let mut row = vec![r.k.to_string(), format!("{:.4}", r.score)];
+            for &key in &keys {
+                row.push(fmt(r.secondary.get(key).copied()));
+            }
+            row.push(fmt(r.diagnostics.fit_error));
+            row.push(match r.diagnostics.iterations {
+                Some(v) => v.to_string(),
+                None => "-".to_string(),
+            });
+            row.push(fmt(r.diagnostics.restart_spread));
+            row.push(format!("{:.2}", r.cost.as_secs_f64() * 1e3));
+            row
+        })
+        .collect();
+    render_markdown(&headers, &rows)
+}
+
+/// One-line cache-traffic summary for search output and session logs.
+pub fn cache_summary(stats: &CacheStats) -> String {
+    format!(
+        "cache: {} fits, {} hits, {} shared waits, {} preloaded — hit rate {:.0}%",
+        stats.misses,
+        stats.hits,
+        stats.shared_waits,
+        stats.preloaded,
+        100.0 * stats.hit_rate()
+    )
+}
+
 /// Render rows as a GitHub-style markdown table.
 pub fn render_markdown(headers: &[&str], rows: &[Vec<String>]) -> String {
     let mut s = String::new();
@@ -201,6 +253,37 @@ mod tests {
         );
         assert_eq!(md.lines().count(), 4);
         assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn records_table_unions_secondary_columns() {
+        let mut a = Evaluation::scalar(4, 0.81);
+        a.secondary.insert("silhouette".into(), 0.81);
+        a.secondary.insert("davies_bouldin".into(), 0.4);
+        a.diagnostics.fit_error = Some(12.5);
+        a.diagnostics.iterations = Some(30);
+        let b = Evaluation::scalar(9, 0.12); // scalar record: no secondary
+        let md = records_markdown(&[a, b]);
+        assert!(md.contains("davies_bouldin"), "{md}");
+        assert!(md.contains("silhouette"), "{md}");
+        // The scalar record fills missing columns with '-'.
+        let last = md.lines().last().unwrap();
+        assert!(last.starts_with("| 9 |"), "{md}");
+        assert!(last.contains(" - "), "{md}");
+        assert_eq!(md.lines().count(), 4);
+    }
+
+    #[test]
+    fn cache_summary_reports_hit_rate() {
+        let s = CacheStats {
+            hits: 6,
+            misses: 2,
+            shared_waits: 2,
+            preloaded: 1,
+        };
+        let line = cache_summary(&s);
+        assert!(line.contains("2 fits"), "{line}");
+        assert!(line.contains("80%"), "{line}");
     }
 
     #[test]

@@ -1,10 +1,17 @@
 //! K-means evaluator (§IV-A): Lloyd restarts + silhouette (maximize) or
 //! Davies-Bouldin (minimize) scoring.
+//!
+//! The evaluator produces full [`Evaluation`] records: both silhouette
+//! *and* Davies-Bouldin are computed from the same best-restart fit
+//! (one fit per k serves dual-metric reports through
+//! [`MetricView`](crate::coordinator::MetricView)), plus fit
+//! diagnostics — inertia, Lloyd iterations, restart spread.
 
+use std::collections::BTreeMap;
 #[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
-use crate::coordinator::KScorer;
+use crate::coordinator::{EvalDiagnostics, Evaluation, Fingerprint, KEvaluator, KScorer};
 use crate::linalg::{self, Matrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{
@@ -12,7 +19,7 @@ use crate::runtime::{
 };
 #[cfg(feature = "pjrt")]
 use crate::util::error::{ensure, Result};
-use crate::util::{Pcg32, ThreadPool};
+use crate::util::{Pcg32, Stopwatch, ThreadPool};
 
 #[cfg(feature = "pjrt")]
 use super::store::SharedStore;
@@ -37,6 +44,13 @@ pub struct KMeansEvaluator {
     /// Lloyd iterations).
     bursts: usize,
     pub scoring: KMeansScoring,
+    /// Compute *both* silhouette and Davies-Bouldin per record (one
+    /// fit, two metrics — what dual-metric reports and `MetricView`
+    /// consume). On by default; disable via
+    /// [`KMeansEvaluator::with_dual_metrics`] when the off-primary
+    /// metric is never read — silhouette is O(n²·d), so DB-primary
+    /// searches over large datasets should opt out.
+    dual_metrics: bool,
     backend: Backend,
     #[cfg(feature = "pjrt")]
     store: Option<Arc<SharedStore>>,
@@ -73,6 +87,7 @@ impl KMeansEvaluator {
             n_init: 3,
             bursts: 2,
             scoring,
+            dual_metrics: true,
             backend: Backend::Hlo,
             store: Some(store),
             seed,
@@ -89,6 +104,7 @@ impl KMeansEvaluator {
             n_init: 3,
             bursts: 2,
             scoring,
+            dual_metrics: true,
             backend: Backend::Native,
             #[cfg(feature = "pjrt")]
             store: None,
@@ -131,30 +147,33 @@ impl KMeansEvaluator {
         self
     }
 
+    /// Whether records carry both metrics (default) or only the
+    /// configured primary. The old single-metric cost profile is
+    /// `with_dual_metrics(false)`: a DB-primary search then never pays
+    /// the O(n²·d) silhouette pass.
+    pub fn with_dual_metrics(mut self, dual: bool) -> Self {
+        self.dual_metrics = dual;
+        self
+    }
+
     pub fn backend(&self) -> Backend {
         self.backend
     }
 
-    /// One restart: fit and score. `pool` is this restart's §3.2 inner
-    /// kernel budget.
-    fn fit_once(&self, k: usize, init: usize, pool: &ThreadPool) -> (f64, f64) {
+    /// One restart: fit only (scoring happens once, on the best
+    /// restart). `pool` is this restart's §3.2 inner kernel budget.
+    fn fit_once(&self, k: usize, init: usize, pool: &ThreadPool) -> RestartFit {
         let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | init as u64);
         match self.backend {
             Backend::Native => {
                 let fit =
                     linalg::kmeans_with(&self.x, k, self.bursts * 15, &mut rng, pool);
-                let score = match self.scoring {
-                    KMeansScoring::Silhouette => {
-                        linalg::silhouette_with(&self.x, &fit.labels, pool)
-                    }
-                    KMeansScoring::DaviesBouldin => linalg::davies_bouldin_with(
-                        &self.x,
-                        &fit.centroids,
-                        &fit.labels,
-                        pool,
-                    ),
-                };
-                (fit.inertia, score)
+                RestartFit {
+                    inertia: fit.inertia,
+                    iterations: fit.iterations,
+                    labels: fit.labels,
+                    centroids: fit.centroids,
+                }
             }
             #[cfg(feature = "pjrt")]
             Backend::Hlo => self.fit_once_hlo(k, &mut rng).expect("HLO kmeans failed"),
@@ -164,7 +183,7 @@ impl KMeansEvaluator {
     }
 
     #[cfg(feature = "pjrt")]
-    fn fit_once_hlo(&self, k: usize, rng: &mut Pcg32) -> Result<(f64, f64)> {
+    fn fit_once_hlo(&self, k: usize, rng: &mut Pcg32) -> Result<RestartFit> {
         let store = self.store.as_ref().expect("HLO backend without store");
         let d = self.x.cols;
         // k-means++ seeding on the host (cheap), padded to K_MAX.
@@ -186,51 +205,151 @@ impl KMeansEvaluator {
             labels = outs[1].to_vec::<f32>()?;
             inertia = literal_to_scalar(&outs[2])?;
         }
-        let score = match self.scoring {
-            KMeansScoring::Silhouette => {
-                let outs = store.execute(
-                    "silhouette",
-                    &[
-                        x_lit,
-                        literal_f32(&[self.x.rows], &labels)?,
-                        mask_lit,
-                    ],
-                )?;
-                literal_to_scalar(&outs[0])?
-            }
-            KMeansScoring::DaviesBouldin => {
-                let outs = store.execute(
-                    "davies_bouldin",
-                    &[
-                        x_lit,
-                        literal_from_matrix(&c)?,
-                        literal_f32(&[self.x.rows], &labels)?,
-                        mask_lit,
-                    ],
-                )?;
-                literal_to_scalar(&outs[0])?
-            }
-        };
-        Ok((inertia, score))
+        // Keep the active k×d block; scoring re-pads as needed.
+        let mut active = Matrix::zeros(k, d);
+        active.data.copy_from_slice(&c.data[..k * d]);
+        Ok(RestartFit {
+            inertia,
+            iterations: self.bursts * 15,
+            labels: labels.iter().map(|&l| l as usize).collect(),
+            centroids: active,
+        })
     }
 
-    /// Best-restart score at k.
-    pub fn evaluate(&self, k: u32) -> f64 {
-        let k = k as usize;
-        assert!(k >= 2 && k <= self.k_max, "k={k} outside [2, {}]", self.k_max);
+    /// Both scores from one fit — silhouette and Davies-Bouldin over
+    /// the same labels/centroids.
+    fn score_both(&self, fit: &RestartFit) -> (f64, f64) {
+        match self.backend {
+            Backend::Native => (
+                linalg::silhouette_with(&self.x, &fit.labels, &self.pool),
+                linalg::davies_bouldin_with(&self.x, &fit.centroids, &fit.labels, &self.pool),
+            ),
+            #[cfg(feature = "pjrt")]
+            Backend::Hlo => self.score_both_hlo(fit).expect("HLO scoring failed"),
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Hlo => unreachable!("Backend::Hlo evaluators require the `pjrt` feature"),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn score_both_hlo(&self, fit: &RestartFit) -> Result<(f64, f64)> {
+        let store = self.store.as_ref().expect("HLO backend without store");
+        let k = fit.centroids.rows;
+        let d = self.x.cols;
+        let labels: Vec<f32> = fit.labels.iter().map(|&l| l as f32).collect();
+        let mut padded = Matrix::zeros(self.k_max, d);
+        padded.data[..k * d].copy_from_slice(&fit.centroids.data);
+        let x_lit = literal_from_matrix(&self.x)?;
+        let mask_lit = literal_f32(&[self.k_max], &rank_mask(k, self.k_max))?;
+        let labels_lit = literal_f32(&[self.x.rows], &labels)?;
+        let sil = literal_to_scalar(
+            &store.execute(
+                "silhouette",
+                &[x_lit.clone(), labels_lit.clone(), mask_lit.clone()],
+            )?[0],
+        )?;
+        let db = literal_to_scalar(
+            &store.execute(
+                "davies_bouldin",
+                &[x_lit, literal_from_matrix(&padded)?, labels_lit, mask_lit],
+            )?[0],
+        )?;
+        Ok((sil, db))
+    }
+
+    /// Only the configured primary metric — the `dual_metrics = false`
+    /// scoring path. (Under the HLO backend both artifact executions
+    /// are cheap relative to the fit; the native path genuinely skips
+    /// the off-primary kernel.)
+    fn score_primary(&self, fit: &RestartFit) -> f64 {
+        match self.backend {
+            Backend::Native => match self.scoring {
+                KMeansScoring::Silhouette => {
+                    linalg::silhouette_with(&self.x, &fit.labels, &self.pool)
+                }
+                KMeansScoring::DaviesBouldin => linalg::davies_bouldin_with(
+                    &self.x,
+                    &fit.centroids,
+                    &fit.labels,
+                    &self.pool,
+                ),
+            },
+            #[cfg(feature = "pjrt")]
+            Backend::Hlo => {
+                let (sil, db) = self.score_both_hlo(fit).expect("HLO scoring failed");
+                match self.scoring {
+                    KMeansScoring::Silhouette => sil,
+                    KMeansScoring::DaviesBouldin => db,
+                }
+            }
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Hlo => unreachable!("Backend::Hlo evaluators require the `pjrt` feature"),
+        }
+    }
+
+    /// Full evaluation record at k: the best restart (by inertia)
+    /// scored under *both* metrics (unless
+    /// [`KMeansEvaluator::with_dual_metrics`] opted out), with fit
+    /// diagnostics.
+    pub fn evaluate_record(&self, k: u32) -> Evaluation {
+        let sw = Stopwatch::new();
+        let ku = k as usize;
+        assert!(
+            ku >= 2 && ku <= self.k_max,
+            "k={ku} outside [2, {}]",
+            self.k_max
+        );
         // Restarts are embarrassingly parallel: one RNG stream per
         // (k, init), results folded in restart order — identical to the
         // sequential loop under every (outer_tasks, eval_threads) pair.
         // `outer_tasks` forwards as-is: `outer_split` treats 0 as auto.
-        self.pool
+        let fits = self
+            .pool
             .map_tasks(self.outer_tasks, self.n_init, |i, inner| {
-                self.fit_once(k, i, inner)
-            })
+                self.fit_once(ku, i, inner)
+            });
+        let inertias: Vec<f64> = fits.iter().map(|f| f.inertia).collect();
+        let best = fits
             .into_iter()
-            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
-            .map(|(_, s)| s)
-            .unwrap()
+            .min_by(|a, b| a.inertia.partial_cmp(&b.inertia).unwrap())
+            .unwrap();
+        let mut secondary = BTreeMap::new();
+        let score = if self.dual_metrics {
+            let (sil, db) = self.score_both(&best);
+            secondary.insert("silhouette".to_string(), sil);
+            secondary.insert("davies_bouldin".to_string(), db);
+            match self.scoring {
+                KMeansScoring::Silhouette => sil,
+                KMeansScoring::DaviesBouldin => db,
+            }
+        } else {
+            self.score_primary(&best)
+        };
+        let mut diagnostics =
+            EvalDiagnostics::from_samples(&inertias, best.iterations as u64);
+        // The reported fit is the best restart, not the mean.
+        diagnostics.fit_error = Some(best.inertia);
+        Evaluation {
+            k,
+            score,
+            secondary,
+            diagnostics,
+            cost: sw.elapsed(),
+        }
     }
+
+    /// Best-restart primary score at k.
+    pub fn evaluate(&self, k: u32) -> f64 {
+        self.evaluate_record(k).score
+    }
+}
+
+/// One restart's fit, before scoring.
+struct RestartFit {
+    inertia: f64,
+    iterations: usize,
+    labels: Vec<usize>,
+    centroids: Matrix,
 }
 
 impl KScorer for KMeansEvaluator {
@@ -242,6 +361,40 @@ impl KScorer for KMeansEvaluator {
         match self.scoring {
             KMeansScoring::Silhouette => "kmeans-silhouette",
             KMeansScoring::DaviesBouldin => "kmeans-davies-bouldin",
+        }
+    }
+}
+
+impl KEvaluator for KMeansEvaluator {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        self.evaluate_record(k)
+    }
+
+    fn name(&self) -> &str {
+        KScorer::name(self)
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        Fingerprint {
+            model: "kmeans".to_string(),
+            dataset: self.x.fingerprint64(),
+            seed: self.seed,
+            // `dual` is part of the identity: records written without
+            // secondary metrics must not warm-start a search that
+            // expects them (MetricView would silently fall back to the
+            // primary).
+            params: format!(
+                "kmax={};n_init={};bursts={};scoring={};dual={};backend={}",
+                self.k_max,
+                self.n_init,
+                self.bursts,
+                match self.scoring {
+                    KMeansScoring::Silhouette => "silhouette",
+                    KMeansScoring::DaviesBouldin => "davies-bouldin",
+                },
+                self.dual_metrics,
+                self.backend.label()
+            ),
         }
     }
 }
@@ -288,6 +441,50 @@ mod tests {
     // Bitwise invariance across the full (outer_tasks, eval_threads)
     // grid — including oversubscribed requests — is asserted for all
     // three evaluators in rust/tests/kernel_equivalence.rs.
+
+    #[test]
+    fn record_carries_both_metrics_from_one_fit() {
+        let mut rng = Pcg32::new(215);
+        let ds = gaussian_blobs(&mut rng, 30, 4, 5, 10.0, 0.4);
+        let sil_ev =
+            KMeansEvaluator::native(ds.x.clone(), 10, KMeansScoring::Silhouette, 5);
+        let db_ev = KMeansEvaluator::native(ds.x, 10, KMeansScoring::DaviesBouldin, 5);
+        let rec = sil_ev.evaluate_record(4);
+        // Primary == the configured metric; both metrics present and
+        // bitwise equal to what a single-metric evaluator reports.
+        assert_eq!(rec.score.to_bits(), rec.secondary["silhouette"].to_bits());
+        assert_eq!(
+            rec.secondary["davies_bouldin"].to_bits(),
+            db_ev.evaluate(4).to_bits()
+        );
+        let d = &rec.diagnostics;
+        assert!(d.fit_error.unwrap().is_finite());
+        assert!(d.iterations.unwrap() > 0);
+        assert!(d.restart_spread.unwrap() >= 0.0);
+        assert_eq!(d.restarts, Some(3));
+        // Fingerprints differ only in the scoring knob.
+        use crate::coordinator::KEvaluator as _;
+        let (a, b) = (sil_ev.fingerprint(), db_ev.fingerprint());
+        assert_eq!(a.dataset, b.dataset);
+        assert_ne!(a.params, b.params);
+    }
+
+    #[test]
+    fn dual_metrics_opt_out_keeps_primary_bitwise() {
+        let mut rng = Pcg32::new(216);
+        let ds = gaussian_blobs(&mut rng, 25, 3, 5, 9.0, 0.5);
+        let dual = KMeansEvaluator::native(
+            ds.x.clone(),
+            8,
+            KMeansScoring::DaviesBouldin,
+            6,
+        );
+        let single = KMeansEvaluator::native(ds.x, 8, KMeansScoring::DaviesBouldin, 6)
+            .with_dual_metrics(false);
+        let rec = single.evaluate_record(3);
+        assert!(rec.secondary.is_empty(), "opted out of secondary metrics");
+        assert_eq!(rec.score.to_bits(), dual.evaluate(3).to_bits());
+    }
 
     #[test]
     #[should_panic]

@@ -11,16 +11,17 @@
 //! multiplicative updates through the `nmf_run` HLO artifact (or the
 //! pure-Rust reference with `Backend::Native`).
 
+use std::collections::BTreeMap;
 #[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
-use crate::coordinator::KScorer;
+use crate::coordinator::{EvalDiagnostics, Evaluation, Fingerprint, KEvaluator, KScorer};
 use crate::linalg::{nmf_from_with, perturbation_silhouette_with, Matrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32, literal_from_matrix, literal_to_matrix, rank_mask};
 #[cfg(feature = "pjrt")]
 use crate::util::error::{ensure, Result};
-use crate::util::{Pcg32, ThreadPool};
+use crate::util::{Pcg32, Stopwatch, ThreadPool};
 
 #[cfg(feature = "pjrt")]
 use super::store::SharedStore;
@@ -146,9 +147,10 @@ impl NmfkEvaluator {
             })
     }
 
-    /// One NMF fit at rank k; returns the active W columns (m × k).
-    /// `pool` is this perturbation's §3.2 inner kernel budget.
-    fn fit_w(&self, k: usize, pert: usize, pool: &ThreadPool) -> Matrix {
+    /// One NMF fit at rank k; returns the active W columns (m × k) and
+    /// the fit's relative reconstruction error against the resampled
+    /// copy. `pool` is this perturbation's §3.2 inner kernel budget.
+    fn fit_w(&self, k: usize, pert: usize, pool: &ThreadPool) -> (Matrix, f64) {
         let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | pert as u64);
         let xp = self.resample(&mut rng);
         match self.backend {
@@ -156,7 +158,7 @@ impl NmfkEvaluator {
                 let w0 = Matrix::rand_uniform(self.x.rows, k, &mut rng).map(|v| v + 0.01);
                 let h0 = Matrix::rand_uniform(k, self.x.cols, &mut rng).map(|v| v + 0.01);
                 let fit = nmf_from_with(&xp, w0, h0, self.bursts * 25, pool);
-                fit.w
+                (fit.w, fit.relative_error)
             }
             #[cfg(feature = "pjrt")]
             Backend::Hlo => self.fit_w_hlo(&xp, k, &mut rng).expect("HLO nmf_run failed"),
@@ -166,7 +168,7 @@ impl NmfkEvaluator {
     }
 
     #[cfg(feature = "pjrt")]
-    fn fit_w_hlo(&self, xp: &Matrix, k: usize, rng: &mut Pcg32) -> Result<Matrix> {
+    fn fit_w_hlo(&self, xp: &Matrix, k: usize, rng: &mut Pcg32) -> Result<(Matrix, f64)> {
         let store = self.store.as_ref().expect("HLO backend without store");
         let (m, n) = (self.x.rows, self.x.cols);
         let mask = rank_mask(k, self.k_max);
@@ -188,36 +190,69 @@ impl NmfkEvaluator {
             w = literal_to_matrix(&outs[0], m, self.k_max)?;
             h = literal_to_matrix(&outs[1], self.k_max, n)?;
         }
-        // Slice the k active columns.
+        // Slice the k active columns (and rows of H for the error).
         let mut wk = Matrix::zeros(m, k);
         for r in 0..m {
             for c in 0..k {
                 *wk.at_mut(r, c) = w.at(r, c);
             }
         }
-        Ok(wk)
+        let mut hk = Matrix::zeros(k, n);
+        for r in 0..k {
+            for c in 0..n {
+                *hk.at_mut(r, c) = h.at(r, c);
+            }
+        }
+        let relative_error = xp.relative_error_to(&wk.matmul(&hk));
+        Ok((wk, relative_error))
     }
 
-    /// The NMFk stability score at rank k.
-    pub fn evaluate(&self, k: u32) -> f64 {
-        let k = k as usize;
-        assert!(k >= 1 && k <= self.k_max, "k={k} outside [1, {}]", self.k_max);
-        if k == 1 {
+    /// Full evaluation record at rank k: the perturbation-stability
+    /// score plus per-perturbation fit diagnostics.
+    pub fn evaluate_record(&self, k: u32) -> Evaluation {
+        let sw = Stopwatch::new();
+        let ku = k as usize;
+        assert!(
+            ku >= 1 && ku <= self.k_max,
+            "k={ku} outside [1, {}]",
+            self.k_max
+        );
+        if ku == 1 {
             // Rank-1 is always "stable"; NMFk convention scores it 1.0
             // but it is excluded from search spaces (K starts at 2).
-            return 1.0;
+            return Evaluation::scalar(k, 1.0).with_cost(sw.elapsed());
         }
         // Perturbations are embarrassingly parallel: one RNG stream per
         // (k, pert), results collected in perturbation order, kernels
         // bitwise budget-invariant — so the score is identical for
         // every (outer_tasks, eval_threads) configuration.
         // `outer_tasks` forwards as-is: `outer_split` treats 0 as auto.
-        let ws: Vec<Matrix> = self.pool.map_tasks(
+        let fits: Vec<(Matrix, f64)> = self.pool.map_tasks(
             self.outer_tasks,
             self.perturbations,
-            |p, inner| self.fit_w(k, p, inner),
+            |p, inner| self.fit_w(ku, p, inner),
         );
-        perturbation_silhouette_with(&ws, &self.pool)
+        let errs: Vec<f64> = fits.iter().map(|(_, e)| *e).collect();
+        let ws: Vec<Matrix> = fits.into_iter().map(|(w, _)| w).collect();
+        let score = perturbation_silhouette_with(&ws, &self.pool);
+        let diagnostics =
+            EvalDiagnostics::from_samples(&errs, (self.bursts * 25) as u64);
+        let mut secondary = BTreeMap::new();
+        if let Some(mean_err) = diagnostics.fit_error {
+            secondary.insert("mean_relative_error".to_string(), mean_err);
+        }
+        Evaluation {
+            k,
+            score,
+            secondary,
+            diagnostics,
+            cost: sw.elapsed(),
+        }
+    }
+
+    /// The NMFk stability score at rank k.
+    pub fn evaluate(&self, k: u32) -> f64 {
+        self.evaluate_record(k).score
     }
 }
 
@@ -228,6 +263,32 @@ impl KScorer for NmfkEvaluator {
 
     fn name(&self) -> &str {
         "nmfk-silhouette"
+    }
+}
+
+impl KEvaluator for NmfkEvaluator {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        self.evaluate_record(k)
+    }
+
+    fn name(&self) -> &str {
+        KScorer::name(self)
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        Fingerprint {
+            model: "nmfk".to_string(),
+            dataset: self.x.fingerprint64(),
+            seed: self.seed,
+            params: format!(
+                "kmax={};perturbations={};bursts={};amplitude={};backend={}",
+                self.k_max,
+                self.perturbations,
+                self.bursts,
+                self.resample_amplitude,
+                self.backend.label()
+            ),
+        }
     }
 }
 

@@ -2,16 +2,17 @@
 //! automatic model selection via perturbation stability of the A factor,
 //! mirroring pyDRESCALk's silhouette-over-A procedure.
 
+use std::collections::BTreeMap;
 #[cfg(feature = "pjrt")]
 use std::sync::Arc;
 
-use crate::coordinator::KScorer;
+use crate::coordinator::{EvalDiagnostics, Evaluation, Fingerprint, KEvaluator, KScorer};
 use crate::linalg::{perturbation_silhouette_with, rescal_with, Matrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{literal_f32, rank_mask};
 #[cfg(feature = "pjrt")]
 use crate::util::error::{ensure, Result};
-use crate::util::{Pcg32, ThreadPool};
+use crate::util::{Pcg32, Stopwatch, ThreadPool};
 
 #[cfg(feature = "pjrt")]
 use super::store::SharedStore;
@@ -128,15 +129,16 @@ impl RescalEvaluator {
             .collect()
     }
 
-    /// One fit at rank k; returns the active A columns (n × k).
+    /// One fit at rank k; returns the active A columns (n × k) and the
+    /// fit's relative reconstruction error against the resampled stack.
     /// `pool` is this perturbation's §3.2 inner kernel budget.
-    fn fit_a(&self, k: usize, pert: usize, pool: &ThreadPool) -> Matrix {
+    fn fit_a(&self, k: usize, pert: usize, pool: &ThreadPool) -> (Matrix, f64) {
         let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | pert as u64);
         let tp = self.resampled(&mut rng);
         match self.backend {
             Backend::Native => {
                 let fit = rescal_with(&tp, k, self.bursts * 10, &mut rng, pool);
-                fit.a
+                (fit.a, fit.relative_error)
             }
             #[cfg(feature = "pjrt")]
             Backend::Hlo => self.fit_a_hlo(&tp, k, &mut rng).expect("HLO rescal failed"),
@@ -146,7 +148,7 @@ impl RescalEvaluator {
     }
 
     #[cfg(feature = "pjrt")]
-    fn fit_a_hlo(&self, tp: &[Matrix], k: usize, rng: &mut Pcg32) -> Result<Matrix> {
+    fn fit_a_hlo(&self, tp: &[Matrix], k: usize, rng: &mut Pcg32) -> Result<(Matrix, f64)> {
         let store = self.store.as_ref().expect("HLO backend without store");
         let s = self.slices.len();
         let n = self.slices[0].rows;
@@ -179,26 +181,66 @@ impl RescalEvaluator {
                 *ak.at_mut(row, c) = full.at(row, c);
             }
         }
-        Ok(ak)
+        // Active k×k core slices for the reconstruction error.
+        let rk: Vec<Matrix> = (0..s)
+            .map(|sl| {
+                let mut core = Matrix::zeros(k, k);
+                for i in 0..k {
+                    for j in 0..k {
+                        core.data[i * k + j] =
+                            r[sl * self.k_max * self.k_max + i * self.k_max + j];
+                    }
+                }
+                core
+            })
+            .collect();
+        let err = crate::linalg::rescal_relative_error(tp, &ak, &rk);
+        Ok((ak, err))
     }
 
-    /// Stability score at rank k.
-    pub fn evaluate(&self, k: u32) -> f64 {
-        let k = k as usize;
-        assert!(k >= 1 && k <= self.k_max, "k={k} outside [1, {}]", self.k_max);
-        if k == 1 {
-            return 1.0;
+    /// Full evaluation record at rank k: perturbation stability of the
+    /// A factor plus per-perturbation fit diagnostics.
+    pub fn evaluate_record(&self, k: u32) -> Evaluation {
+        let sw = Stopwatch::new();
+        let ku = k as usize;
+        assert!(
+            ku >= 1 && ku <= self.k_max,
+            "k={ku} outside [1, {}]",
+            self.k_max
+        );
+        if ku == 1 {
+            return Evaluation::scalar(k, 1.0).with_cost(sw.elapsed());
         }
         // Perturbations are embarrassingly parallel: one RNG stream per
         // (k, pert), ordered collection, budget-invariant kernels — so
         // the score is identical for every (outer_tasks, eval_threads).
         // `outer_tasks` forwards as-is: `outer_split` treats 0 as auto.
-        let activations: Vec<Matrix> = self.pool.map_tasks(
+        let fits: Vec<(Matrix, f64)> = self.pool.map_tasks(
             self.outer_tasks,
             self.perturbations,
-            |p, inner| self.fit_a(k, p, inner),
+            |p, inner| self.fit_a(ku, p, inner),
         );
-        perturbation_silhouette_with(&activations, &self.pool)
+        let errs: Vec<f64> = fits.iter().map(|(_, e)| *e).collect();
+        let activations: Vec<Matrix> = fits.into_iter().map(|(a, _)| a).collect();
+        let score = perturbation_silhouette_with(&activations, &self.pool);
+        let diagnostics =
+            EvalDiagnostics::from_samples(&errs, (self.bursts * 10) as u64);
+        let mut secondary = BTreeMap::new();
+        if let Some(mean_err) = diagnostics.fit_error {
+            secondary.insert("mean_relative_error".to_string(), mean_err);
+        }
+        Evaluation {
+            k,
+            score,
+            secondary,
+            diagnostics,
+            cost: sw.elapsed(),
+        }
+    }
+
+    /// Stability score at rank k.
+    pub fn evaluate(&self, k: u32) -> f64 {
+        self.evaluate_record(k).score
     }
 }
 
@@ -209,6 +251,39 @@ impl KScorer for RescalEvaluator {
 
     fn name(&self) -> &str {
         "rescalk-silhouette"
+    }
+}
+
+impl KEvaluator for RescalEvaluator {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        self.evaluate_record(k)
+    }
+
+    fn name(&self) -> &str {
+        KScorer::name(self)
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        // Fold the per-slice fingerprints: the dataset identity covers
+        // the whole stack, order-sensitively.
+        const PRIME: u64 = 0x100000001b3;
+        let mut dataset: u64 = 0xcbf29ce484222325;
+        for slice in &self.slices {
+            dataset = (dataset ^ slice.fingerprint64()).wrapping_mul(PRIME);
+        }
+        Fingerprint {
+            model: "rescalk".to_string(),
+            dataset,
+            seed: self.seed,
+            params: format!(
+                "kmax={};perturbations={};bursts={};amplitude={};backend={}",
+                self.k_max,
+                self.perturbations,
+                self.bursts,
+                self.resample_amplitude,
+                self.backend.label()
+            ),
+        }
     }
 }
 

@@ -273,6 +273,69 @@ impl F32x8 {
 // f64-widened dot product (the distance-kernel workhorse)
 // ---------------------------------------------------------------------
 
+/// Slice lengths below one full f64 lane (`d < 4`) have no vector body
+/// at all — the lane paths degenerate to their scalar tails. `Auto`
+/// resolves them to the scalar kernel outright, skipping the dispatch
+/// machinery on shapes it cannot help with.
+const DOT_SUBLANE: usize = 4;
+
+/// A dot backend resolved from (policy, slice length) **once** — per
+/// pairwise tile / norm pass — instead of re-probing the cached CPU
+/// feature branch inside every dot of the tile.
+///
+/// Resolution rules:
+/// * `ForceScalar` → [`DotKernel::Scalar`] (the seed loop, the oracle).
+/// * `Auto` with `len < 4` → [`DotKernel::Scalar`]: a sub-lane slice
+///   runs zero vector chunks, so the scalar loop computes the **same
+///   bits** with less dispatch — this fallback is bitwise-neutral by
+///   construction (NUMERICS.md).
+/// * `Auto`/`ForceVector` otherwise → AVX2+FMA when the CPU has it,
+///   portable lanes elsewhere. `ForceVector` stays on the vector path
+///   even sub-lane (its contract: always the vector code path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DotKernel {
+    /// Left-to-right f64 accumulation (the seed loop).
+    Scalar,
+    /// Portable [`F64x4`] lane path, unfused.
+    Lanes,
+    /// AVX2+FMA path (presence verified at resolution).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+impl DotKernel {
+    /// Resolve the backend for dots over slices of length `len`.
+    #[inline]
+    pub fn resolve(policy: SimdPolicy, len: usize) -> DotKernel {
+        match policy {
+            SimdPolicy::ForceScalar => DotKernel::Scalar,
+            SimdPolicy::Auto if len < DOT_SUBLANE => DotKernel::Scalar,
+            SimdPolicy::Auto | SimdPolicy::ForceVector => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if avx2_available() {
+                        return DotKernel::Avx2;
+                    }
+                }
+                DotKernel::Lanes
+            }
+        }
+    }
+
+    /// f64-widened dot product on the resolved backend (see
+    /// [`dot_widened`] for the numeric contract).
+    #[inline]
+    pub fn dot_widened(self, a: &[f32], b: &[f32]) -> f64 {
+        match self {
+            DotKernel::Scalar => dot_widened_scalar(a, b),
+            DotKernel::Lanes => dot_widened_lanes(a, b),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: AVX2 + FMA presence was verified by `resolve`.
+            DotKernel::Avx2 => unsafe { dot_widened_avx2(a, b) },
+        }
+    }
+}
+
 /// Dot product of two f32 slices with **f64 accumulation** — the
 /// primitive behind `linalg::pairwise` (row norms and Gram-form
 /// distance tiles). f32 products are exact in f64, so the only
@@ -281,20 +344,14 @@ impl F32x8 {
 /// keeps 4 f64 accumulators over blocks of 4 and folds
 /// `((l0 + l1) + l2) + l3` before a left-to-right scalar tail. Both
 /// orders depend only on `min(a.len(), b.len())`.
+///
+/// One-shot form of [`DotKernel::resolve`] + [`DotKernel::dot_widened`];
+/// tile loops that issue many dots of one length should resolve once
+/// and reuse the kernel.
 #[inline]
 pub fn dot_widened(a: &[f32], b: &[f32], policy: SimdPolicy) -> f64 {
     debug_assert_eq!(a.len(), b.len(), "dot_widened: length mismatch");
-    if use_vector(policy) {
-        #[cfg(target_arch = "x86_64")]
-        {
-            if avx2_available() {
-                // Safety: AVX2 + FMA presence was just verified.
-                return unsafe { dot_widened_avx2(a, b) };
-            }
-        }
-        return dot_widened_lanes(a, b);
-    }
-    dot_widened_scalar(a, b)
+    DotKernel::resolve(policy, a.len().min(b.len())).dot_widened(a, b)
 }
 
 /// The seed's scalar loop: left-to-right f64 accumulation.
@@ -607,6 +664,61 @@ mod tests {
             assert!(
                 (want - got).abs() <= 1e-9 * want.abs().max(1.0),
                 "len={len}: scalar {want} vs vector {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_resolves_scalar_below_one_lane() {
+        // Sub-lane slices: Auto falls back to scalar, ForceVector does
+        // not, ForceScalar always does.
+        for len in 0..4 {
+            assert_eq!(DotKernel::resolve(SimdPolicy::Auto, len), DotKernel::Scalar);
+            assert_ne!(
+                DotKernel::resolve(SimdPolicy::ForceVector, len),
+                DotKernel::Scalar
+            );
+        }
+        assert_ne!(DotKernel::resolve(SimdPolicy::Auto, 4), DotKernel::Scalar);
+        for len in [0usize, 3, 4, 64] {
+            assert_eq!(
+                DotKernel::resolve(SimdPolicy::ForceScalar, len),
+                DotKernel::Scalar
+            );
+        }
+    }
+
+    #[test]
+    fn sublane_fallback_is_bitwise_neutral() {
+        // d < 4 runs zero vector chunks, so every backend computes the
+        // identical left-to-right sum: the Auto→scalar fallback cannot
+        // change a single bit.
+        let mut rng = Pcg32::new(17);
+        for len in 0..4usize {
+            let a: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.next_gaussian() as f32).collect();
+            let want = dot_widened_scalar(&a, &b);
+            for p in POLICIES {
+                assert_eq!(
+                    want.to_bits(),
+                    dot_widened(&a, &b, p).to_bits(),
+                    "len={len} policy={p:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resolved_kernel_matches_per_dot_dispatch() {
+        let mut rng = Pcg32::new(18);
+        let a: Vec<f32> = (0..37).map(|_| rng.next_gaussian() as f32).collect();
+        let b: Vec<f32> = (0..37).map(|_| rng.next_gaussian() as f32).collect();
+        for p in POLICIES {
+            let kernel = DotKernel::resolve(p, a.len());
+            assert_eq!(
+                kernel.dot_widened(&a, &b).to_bits(),
+                dot_widened(&a, &b, p).to_bits(),
+                "policy={p:?}"
             );
         }
     }

@@ -1,0 +1,363 @@
+//! ISSUE 5 acceptance: resumable sessions and the deduplicating eval
+//! cache.
+//!
+//! * Checkpoint round-trip property: a search killed mid-run and
+//!   resumed from its checkpoint reaches the same k*, evaluates the
+//!   same visited set, and never re-fits a checkpointed k — across kill
+//!   points.
+//! * Concurrent dedup: 8 engine workers racing over the *same* k lists
+//!   (separate rank states, so the claim bitmaps cannot help) produce
+//!   at most one fit per key through a shared [`EvalCache`].
+//! * Dual-metric report: a silhouette search and a Davies-Bouldin
+//!   search over one cache cost one K-means fit per distinct k.
+
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
+
+use binary_bleed::coordinator::{
+    bleed_order, run_threaded_ev, Checkpoint, EvalCache, Evaluation, Fingerprint, KEvaluator,
+    Loopback, MetricView, Mode, ScorerEvaluator, SearchPolicy, SearchSession, SharedState,
+    Thresholds, WorkPlan, WorkerSlot,
+};
+use binary_bleed::data::gaussian_blobs;
+use binary_bleed::model::{KMeansEvaluator, KMeansScoring};
+use binary_bleed::util::Pcg32;
+
+/// Counts fits per k. Placed *under* the cache, its counts are actual
+/// model fits — exactly what the dedup/resume properties assert on.
+struct Probe<'a> {
+    inner: &'a dyn KEvaluator,
+    counts: Mutex<HashMap<u32, u64>>,
+}
+
+impl<'a> Probe<'a> {
+    fn new(inner: &'a dyn KEvaluator) -> Probe<'a> {
+        Probe {
+            inner,
+            counts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn count_of(&self, k: u32) -> u64 {
+        self.counts.lock().unwrap().get(&k).copied().unwrap_or(0)
+    }
+
+    fn total(&self) -> u64 {
+        self.counts.lock().unwrap().values().sum()
+    }
+}
+
+impl KEvaluator for Probe<'_> {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        *self.counts.lock().unwrap().entry(k).or_insert(0) += 1;
+        self.inner.evaluate(k)
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        self.inner.fingerprint()
+    }
+}
+
+/// Kill switch: panics mid-"process" after a budget of fits, modelling
+/// a crashed search.
+struct PanicAfter<'a> {
+    inner: &'a dyn KEvaluator,
+    left: AtomicI64,
+}
+
+impl KEvaluator for PanicAfter<'_> {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        if self.left.fetch_sub(1, Ordering::SeqCst) <= 0 {
+            panic!("search killed mid-fit");
+        }
+        self.inner.evaluate(k)
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        self.inner.fingerprint()
+    }
+}
+
+fn pol() -> SearchPolicy {
+    SearchPolicy::maximize(
+        Mode::Vanilla,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    )
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "bb_resume_{name}_{}.json",
+        std::process::id()
+    ))
+}
+
+#[test]
+fn killed_and_resumed_search_equals_uninterrupted() {
+    let ks: Vec<u32> = (2..=40).collect();
+    let square = |k: u32| if k <= 27 { 0.9 } else { 0.1 };
+    let base = ScorerEvaluator::new(&square);
+
+    // The uninterrupted reference run.
+    let probe_u = Probe::new(&base);
+    let uninterrupted = SearchSession::new(&probe_u, pol()).run(&ks).unwrap();
+    let fits_u = probe_u.total();
+    assert_eq!(uninterrupted.result.k_optimal, Some(27));
+    assert!(fits_u > 4, "property needs a few kill points: {fits_u}");
+
+    let path = tmp("kill");
+    for kill_after in [1, fits_u / 2, fits_u - 1] {
+        let _ = std::fs::remove_file(&path);
+
+        // Run until the kill switch fires; every completed fit was
+        // journaled to the checkpoint before the crash.
+        let probe_k = Probe::new(&base);
+        let flaky = PanicAfter {
+            inner: &probe_k,
+            left: AtomicI64::new(kill_after as i64),
+        };
+        let session = SearchSession::new(&flaky, pol()).with_checkpoint(&path);
+        let killed = catch_unwind(AssertUnwindSafe(|| session.run(&ks)));
+        assert!(killed.is_err(), "kill_after={kill_after} must crash");
+        let cp = Checkpoint::load(&path).unwrap();
+        assert_eq!(
+            cp.records.len() as u64,
+            kill_after,
+            "every completed fit is on disk"
+        );
+        assert!(cp.state.is_none(), "mid-run journal has no final state");
+
+        // Resume: same optimum, same visited set, zero re-fits of any
+        // checkpointed k, and total fits across both runs equal the
+        // uninterrupted count.
+        let probe_r = Probe::new(&base);
+        let resumed = SearchSession::new(&probe_r, pol())
+            .with_checkpoint(&path)
+            .resume(&ks)
+            .unwrap();
+        assert_eq!(
+            resumed.result.k_optimal, uninterrupted.result.k_optimal,
+            "kill_after={kill_after}"
+        );
+        assert_eq!(
+            resumed.result.log.evaluated(),
+            uninterrupted.result.log.evaluated(),
+            "kill_after={kill_after}: resume must replay the same schedule"
+        );
+        assert_eq!(
+            resumed.result.log.pruned(),
+            uninterrupted.result.log.pruned(),
+            "kill_after={kill_after}"
+        );
+        for rec in &cp.records {
+            assert_eq!(
+                probe_r.count_of(rec.k),
+                0,
+                "kill_after={kill_after}: checkpointed k={} was re-fitted",
+                rec.k
+            );
+        }
+        assert_eq!(
+            probe_r.total() + cp.records.len() as u64,
+            fits_u,
+            "kill_after={kill_after}: fits are conserved across the kill"
+        );
+        // Replayed scores are bitwise identical to the uninterrupted run.
+        for rec in &resumed.records {
+            let want = uninterrupted
+                .result
+                .log
+                .score_of(rec.k)
+                .expect("same visited set");
+            assert_eq!(rec.score.to_bits(), want.to_bits());
+        }
+        // The resumed run's final checkpoint is complete.
+        let fin = Checkpoint::load(&path).unwrap();
+        assert!(fin.state.is_some());
+        assert_eq!(fin.state.unwrap().best.unwrap().k, 27);
+        assert!(fin.visits.is_some());
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn cache_never_admits_two_fits_under_eight_engine_workers() {
+    // 8 workers, each with its OWN rank state over the SAME full list:
+    // the per-rank claim bitmaps no longer deduplicate across workers,
+    // so every k races 8 ways and only the cache stands between the
+    // engine and 8x duplicate fits.
+    let ks: Vec<u32> = (2..=60).collect();
+    let slow_square = |k: u32| {
+        std::thread::sleep(std::time::Duration::from_micros(300));
+        if k <= 45 {
+            0.9
+        } else {
+            0.1
+        }
+    };
+    let base = ScorerEvaluator::new(&slow_square);
+    let probe = Probe::new(&base);
+    let cache = EvalCache::new(&probe);
+
+    let order = bleed_order(&ks);
+    let workers = 8usize;
+    let plan = WorkPlan {
+        workers: (0..workers)
+            .map(|rank| WorkerSlot {
+                rank,
+                thread: 0,
+                list: order.clone(),
+            })
+            .collect(),
+        ranks: workers,
+    };
+    let states: Vec<SharedState> = (0..workers).map(|_| SharedState::new(&ks)).collect();
+    let result = run_threaded_ev(&ks, &plan, &states, &Loopback, &cache, pol());
+
+    assert_eq!(result.k_optimal, Some(45));
+    let distinct: HashSet<u32> = result.log.evaluated().into_iter().collect();
+    let stats = cache.stats();
+    assert_eq!(
+        probe.total() as usize,
+        distinct.len(),
+        "one fit per distinct evaluated k"
+    );
+    assert_eq!(stats.misses, probe.total());
+    for &k in &ks {
+        assert!(
+            probe.count_of(k) <= 1,
+            "k={k} was fitted {} times",
+            probe.count_of(k)
+        );
+    }
+    // The racing workers were actually served by the dedup channel or
+    // the hit path, not by silent refits.
+    assert!(stats.hits + stats.shared_waits > 0);
+}
+
+#[test]
+fn dual_metric_report_costs_one_fit_per_k() {
+    // One K-means evaluator, one cache, two searches: silhouette
+    // (maximize) then Davies-Bouldin (minimize) through a MetricView of
+    // the same cache. Every record carries both metrics from one fit.
+    let mut rng = Pcg32::new(212);
+    let ds = gaussian_blobs(&mut rng, 40, 5, 4, 10.0, 0.4);
+    let k_true = 5u32;
+    let ev = KMeansEvaluator::native(ds.x, 12, KMeansScoring::Silhouette, 4);
+    let probe = Probe::new(&ev);
+    let cache = EvalCache::new(&probe);
+    let ks: Vec<u32> = (2..=10).collect();
+    let plan = WorkPlan::serial(&ks, Mode::Vanilla);
+
+    let sil_policy = SearchPolicy::maximize(
+        Mode::Vanilla,
+        Thresholds {
+            select: 0.75,
+            stop: 0.1,
+        },
+    );
+    let st1 = SharedState::new(&ks);
+    let r1 = run_threaded_ev(
+        &ks,
+        &plan,
+        std::slice::from_ref(&st1),
+        &Loopback,
+        &cache,
+        sil_policy,
+    );
+
+    let db_view = MetricView::new(&cache, "davies_bouldin");
+    let db_policy = SearchPolicy::minimize(
+        Mode::Vanilla,
+        Thresholds {
+            select: 0.45,
+            stop: 5.0,
+        },
+    );
+    let st2 = SharedState::new(&ks);
+    let r2 = run_threaded_ev(
+        &ks,
+        &plan,
+        std::slice::from_ref(&st2),
+        &Loopback,
+        &db_view,
+        db_policy,
+    );
+
+    // Both searches land near the planted k (same tolerance as the
+    // evaluator e2e suite).
+    let f1 = r1.k_optimal.expect("silhouette search must select");
+    let f2 = r2.k_optimal.expect("davies-bouldin search must select");
+    assert!(f1.abs_diff(k_true) <= 2, "silhouette found {f1}");
+    assert!(f2.abs_diff(k_true) <= 2, "davies-bouldin found {f2}");
+
+    // THE acceptance: one fit per distinct k across both searches.
+    let mut union: HashSet<u32> = r1.log.evaluated().into_iter().collect();
+    let second: HashSet<u32> = r2.log.evaluated().into_iter().collect();
+    union.extend(&second);
+    assert_eq!(
+        probe.total() as usize,
+        union.len(),
+        "dual-metric report must cost one fit per distinct k"
+    );
+    for &k in &union {
+        assert_eq!(probe.count_of(k), 1, "k={k}");
+    }
+    // Every record carries both metrics, and the DB search's decisions
+    // used the same fit's davies_bouldin value.
+    for rec in cache.records() {
+        assert!(rec.secondary.contains_key("silhouette"), "k={}", rec.k);
+        assert!(rec.secondary.contains_key("davies_bouldin"), "k={}", rec.k);
+        assert_eq!(rec.score.to_bits(), rec.secondary["silhouette"].to_bits());
+        if let Some(db_seen) = r2.log.score_of(rec.k) {
+            assert_eq!(db_seen.to_bits(), rec.secondary["davies_bouldin"].to_bits());
+        }
+    }
+}
+
+#[test]
+fn parallel_resume_reaches_same_optimum_with_zero_refits() {
+    // Threaded multi-worker resume: the visit *set* is schedule
+    // dependent, but the optimum must match and no checkpointed k may
+    // be re-fitted.
+    use binary_bleed::coordinator::ParallelConfig;
+    let ks: Vec<u32> = (2..=48).collect();
+    let square = |k: u32| if k <= 33 { 0.9 } else { 0.1 };
+    let base = ScorerEvaluator::new(&square);
+    let path = tmp("parallel");
+    let _ = std::fs::remove_file(&path);
+
+    let cfg = ParallelConfig {
+        ranks: 2,
+        threads_per_rank: 2,
+        ..Default::default()
+    };
+    let probe1 = Probe::new(&base);
+    let first = SearchSession::new(&probe1, pol())
+        .with_parallel(cfg)
+        .with_checkpoint(&path)
+        .run(&ks)
+        .unwrap();
+    assert_eq!(first.result.k_optimal, Some(33));
+    let cp = Checkpoint::load(&path).unwrap();
+    assert_eq!(cp.records.len() as u64, probe1.total());
+
+    let probe2 = Probe::new(&base);
+    let second = SearchSession::new(&probe2, pol())
+        .with_parallel(cfg)
+        .with_checkpoint(&path)
+        .resume(&ks)
+        .unwrap();
+    assert_eq!(second.result.k_optimal, Some(33));
+    for rec in &cp.records {
+        assert_eq!(probe2.count_of(rec.k), 0, "k={} re-fitted", rec.k);
+    }
+    assert_eq!(second.stats.preloaded, cp.records.len() as u64);
+    let _ = std::fs::remove_file(&path);
+}
