@@ -11,7 +11,11 @@
 //! silently drift from the oracles. Medians land in `BENCH_eval.json`;
 //! the SIMD comparison writes `BENCH_simd.json` (with the detected
 //! vector backend) and, in full mode, asserts the vector path wins on
-//! the vectorizable shapes (pairwise + matmul).
+//! the vectorizable shapes (pairwise + matmul). The ISSUE 6
+//! bound-accelerated k-means section (Lloyd vs Hamerly/Elkan/Yinyang
+//! vs the per-shape Auto pick) writes `BENCH_kmeans.json` and, in full
+//! mode, asserts Auto never loses to Lloyd while strictly reducing
+//! distance computations on the bound-resolved shapes.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -20,9 +24,9 @@ use binary_bleed::bench::{Bench, BenchStats};
 use binary_bleed::coordinator::EvalCache;
 use binary_bleed::data::{gaussian_blobs, planted_nmf};
 use binary_bleed::linalg::{
-    davies_bouldin_oracle, davies_bouldin_with, kmeans_with, kmeans_with_policy, nmf_from_with,
-    nmf_from_with_policy, silhouette_oracle, silhouette_with, sq_dist_matrix,
-    sq_dist_matrix_policy, Matrix,
+    davies_bouldin_oracle, davies_bouldin_with, kmeans_with, kmeans_with_algo,
+    kmeans_with_policy, nmf_from_with, nmf_from_with_policy, silhouette_oracle,
+    silhouette_with, sq_dist_matrix, sq_dist_matrix_policy, KMeansAlgo, Matrix,
 };
 use binary_bleed::model::NmfkEvaluator;
 use binary_bleed::util::json::Json;
@@ -318,6 +322,121 @@ fn main() {
             "vector matmul_nt must beat scalar: {matmul_speedup:.2}x"
         );
     }
+
+    // --- bound-accelerated k-means: Lloyd vs Hamerly/Elkan/Yinyang/Auto
+    // Serial on purpose (only the assignment algorithm varies). Every
+    // variant must reproduce Lloyd's labels — asserted in both modes —
+    // and in full mode the Auto pick must never lose to Lloyd while
+    // strictly reducing distance computations wherever it resolves to a
+    // bound path.
+    const KM_ALGOS: [KMeansAlgo; 5] = [
+        KMeansAlgo::Lloyd,
+        KMeansAlgo::Hamerly,
+        KMeansAlgo::Elkan,
+        KMeansAlgo::Yinyang,
+        KMeansAlgo::Auto,
+    ];
+    let km_shapes: &[(usize, usize, usize)] = if quick {
+        &[(300, 8, 8), (300, 2, 16)]
+    } else {
+        &[(2000, 16, 8), (2000, 2, 32), (2000, 64, 32), (500, 3, 8)]
+    };
+    let km_algo_iters = if quick { 8 } else { 25 };
+    let mut km_shapes_json = BTreeMap::new();
+    for &(kn, kd, kk) in km_shapes {
+        let c = kk.min(8);
+        let mut srng = Pcg32::new(97);
+        let sds = gaussian_blobs(&mut srng, (kn / c).max(1), c, kd, 8.0, 0.8);
+        let sx = sds.x;
+        let fit_with = |algo: KMeansAlgo| {
+            let mut r = Pcg32::new(11);
+            kmeans_with_algo(&sx, kk, km_algo_iters, &mut r, &pool1, SimdPolicy::Auto, algo)
+        };
+        let lloyd_fit = fit_with(KMeansAlgo::Lloyd);
+        let auto_fit = fit_with(KMeansAlgo::Auto);
+        let mut km_medians = BTreeMap::new();
+        let mut km_calcs = BTreeMap::new();
+        let mut lloyd_median = 0.0f64;
+        let mut auto_median = 0.0f64;
+        for &algo in &KM_ALGOS {
+            let fit = fit_with(algo);
+            assert_eq!(
+                fit.labels, lloyd_fit.labels,
+                "{} diverged from Lloyd at n={kn} d={kd} k={kk}",
+                algo.label()
+            );
+            let st = bench.run(
+                &format!("kmeans-algo/{}/n{kn}-d{kd}-k{kk}", algo.label()),
+                || fit_with(algo).inertia,
+            );
+            let med = st.median.as_secs_f64();
+            if algo == KMeansAlgo::Lloyd {
+                lloyd_median = med;
+            }
+            if algo == KMeansAlgo::Auto {
+                auto_median = med;
+            }
+            km_medians.insert(algo.label().to_string(), Json::Num(med));
+            km_calcs.insert(
+                algo.label().to_string(),
+                Json::Num(fit.distance_calcs as f64),
+            );
+            recorded.push(st);
+        }
+        let auto_speedup = lloyd_median / auto_median;
+        println!(
+            "    -> kmeans-algo n={kn} d={kd} k={kk}: auto={} {auto_speedup:.2}x vs lloyd \
+             ({} vs {} distance calcs)",
+            auto_fit.algo.label(),
+            auto_fit.distance_calcs,
+            lloyd_fit.distance_calcs
+        );
+        let mut shape_obj = BTreeMap::new();
+        shape_obj.insert("n".to_string(), Json::Num(sx.rows as f64));
+        shape_obj.insert("d".to_string(), Json::Num(kd as f64));
+        shape_obj.insert("k".to_string(), Json::Num(kk as f64));
+        shape_obj.insert(
+            "auto_resolved".to_string(),
+            Json::Str(auto_fit.algo.label().into()),
+        );
+        shape_obj.insert(
+            "auto_vs_lloyd_speedup".to_string(),
+            Json::Num(auto_speedup),
+        );
+        shape_obj.insert("medians_s".to_string(), Json::Obj(km_medians));
+        shape_obj.insert("distance_calcs".to_string(), Json::Obj(km_calcs));
+        km_shapes_json.insert(format!("n{kn}_d{kd}_k{kk}"), Json::Obj(shape_obj));
+        if !quick {
+            // Acceptance (ISSUE 6): the per-shape Auto pick never loses
+            // to Lloyd (10% median noise margin) and strictly reduces
+            // distance work whenever it resolves to a bound path.
+            assert!(
+                auto_median <= lloyd_median * 1.10,
+                "auto k-means slower than Lloyd at n={kn} d={kd} k={kk}: \
+                 {auto_median:.4}s vs {lloyd_median:.4}s"
+            );
+            if auto_fit.algo != KMeansAlgo::Lloyd {
+                assert!(
+                    auto_fit.distance_calcs < lloyd_fit.distance_calcs,
+                    "auto ({}) did not reduce distance calcs at n={kn} d={kd} k={kk}: \
+                     {} vs {}",
+                    auto_fit.algo.label(),
+                    auto_fit.distance_calcs,
+                    lloyd_fit.distance_calcs
+                );
+            }
+        }
+    }
+    let mut km_obj = BTreeMap::new();
+    km_obj.insert(
+        "bench".to_string(),
+        Json::Str("eval_kernels/kmeans_algo".into()),
+    );
+    km_obj.insert("quick".to_string(), Json::Bool(quick));
+    km_obj.insert("shapes".to_string(), Json::Obj(km_shapes_json));
+    std::fs::write("BENCH_kmeans.json", format!("{}\n", Json::Obj(km_obj)))
+        .expect("write BENCH_kmeans.json");
+    println!("wrote BENCH_kmeans.json");
 
     // Machine-readable trajectory record (medians per kernel).
     let mut medians = BTreeMap::new();

@@ -5,6 +5,7 @@
 //!                  [--mode vanilla|early-stop|standard] [--order pre|post|in]
 //!                  [--ranks N] [--threads T] [--eval-threads E]
 //!                  [--outer-tasks O] [--simd auto|scalar|vector]
+//!                  [--kmeans-algo lloyd|hamerly|elkan|yinyang|auto]
 //!                  [--backend hlo|native]
 //!                  [--checkpoint FILE] [--resume]
 //!                  [--k-true K] [--seed S] [--config FILE]
@@ -100,6 +101,10 @@ SEARCH FLAGS:
                            never oversubscribes (default 0 = auto; 1 = off)
   --simd P                 kernel dispatch: auto|scalar|vector (default auto;
                            scalar is the pre-SIMD oracle path — NUMERICS.md)
+  --kmeans-algo A          k-means assignment: lloyd|hamerly|elkan|yinyang|auto
+                           (default auto = per-shape pick; lloyd is the
+                           bitwise oracle — bound paths match it up to
+                           documented near-ties, NUMERICS.md)
   --backend B              hlo|native (default native; hlo needs artifacts)
   --checkpoint FILE        journal completed evaluations to FILE as they
                            finish; the pruning-state snapshot + visit log
@@ -216,6 +221,14 @@ fn cmd_search(args: &Args) -> Result<()> {
         None => file_cfg.as_ref().map_or(crate::util::SimdPolicy::Auto, |c| c.simd),
     };
     crate::util::simd::set_simd_policy(simd);
+    // K-means assignment algorithm for the native backend (ignored by
+    // the fused HLO kernel and the non-kmeans evaluators).
+    let kmeans_algo = match args.flag("kmeans-algo") {
+        Some(s) => crate::config::parse_kmeans_algo(s)?,
+        None => file_cfg
+            .as_ref()
+            .map_or(crate::linalg::KMeansAlgo::Auto, |c| c.kmeans_algo),
+    };
     let mode = parse_mode(&args.flag_or("mode", "vanilla"))?;
     let order = parse_traversal(&args.flag_or("order", "pre"))?;
     let select: f64 = args.flag_parse("select")?.unwrap_or(0.75);
@@ -253,17 +266,19 @@ fn cmd_search(args: &Args) -> Result<()> {
         // (one shared evaluator serves all of them).
         ranks.max(1) * threads.max(1),
         outer_tasks,
+        kmeans_algo,
     )?;
     policy.mode = mode;
 
     println!(
         "searching K={{{k_min}..{k_max}}} model={model} mode={} order={} \
          ranks={ranks}x{threads} eval-threads={eval_threads} \
-         outer-tasks={outer_tasks} simd={} backend={}",
+         outer-tasks={outer_tasks} simd={} backend={} kmeans-algo={}",
         mode.label(),
         order.label(),
         simd.label(),
-        backend.label()
+        backend.label(),
+        kmeans_algo.label()
     );
     let mut session = SearchSession::new(evaluator.as_ref(), policy).with_parallel(
         ParallelConfig {
@@ -322,6 +337,7 @@ fn build_evaluator(
     eval_threads: usize,
     engine_workers: usize,
     outer_tasks: usize,
+    kmeans_algo: crate::linalg::KMeansAlgo,
 ) -> Result<(Box<dyn KEvaluator>, SearchPolicy)> {
     let thresholds = Thresholds { select, stop };
     let mut rng = crate::util::Pcg32::new(seed);
@@ -364,7 +380,8 @@ fn build_evaluator(
                 }
             }
             .with_eval_threads_for(eval_threads, engine_workers)
-            .with_outer_tasks(outer_tasks);
+            .with_outer_tasks(outer_tasks)
+            .with_algo(kmeans_algo);
             Ok((
                 Box::new(ev),
                 SearchPolicy::minimize(

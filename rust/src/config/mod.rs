@@ -6,6 +6,7 @@
 
 pub mod toml;
 
+use crate::linalg::KMeansAlgo;
 use crate::util::error::{anyhow, bail, ensure, Context, Result};
 use crate::util::simd::SimdPolicy;
 
@@ -54,6 +55,11 @@ pub struct ExperimentConfig {
     pub perturbations: usize,
     /// K-means restarts per k.
     pub restarts: usize,
+    /// K-means assignment algorithm for the native backend
+    /// (NUMERICS.md): `lloyd` (the bitwise oracle), the bound-based
+    /// `hamerly` | `elkan` | `yinyang`, or `auto` (default — pick per
+    /// (n, d, k) shape). TOML `model.kmeans_algo`, CLI `--kmeans-algo`.
+    pub kmeans_algo: KMeansAlgo,
     /// Where results (csv/md) land.
     pub results_dir: String,
     /// Human label.
@@ -89,6 +95,7 @@ impl ExperimentConfig {
             sweep_stride: 4,
             perturbations: 3,
             restarts: 2,
+            kmeans_algo: KMeansAlgo::Auto,
             results_dir: "results".into(),
             preset: "quick".into(),
             checkpoint: None,
@@ -246,6 +253,12 @@ impl ExperimentConfig {
         if let Some(v) = t.get_path("model.restarts").and_then(TomlValue::as_int) {
             self.restarts = v as usize;
         }
+        if let Some(v) = t
+            .get_path("model.kmeans_algo")
+            .and_then(TomlValue::as_str)
+        {
+            self.kmeans_algo = parse_kmeans_algo(v)?;
+        }
         if let Some(v) = t.get("results_dir").and_then(TomlValue::as_str) {
             self.results_dir = v.to_string();
         }
@@ -286,6 +299,12 @@ pub fn parse_mode(s: &str) -> Result<Mode> {
 /// Parse a SIMD policy label ("auto" | "scalar" | "vector").
 pub fn parse_simd(s: &str) -> Result<SimdPolicy> {
     s.parse::<SimdPolicy>().map_err(|e| anyhow!("{e}"))
+}
+
+/// Parse a k-means algorithm label
+/// ("lloyd" | "hamerly" | "elkan" | "yinyang" | "auto").
+pub fn parse_kmeans_algo(s: &str) -> Result<KMeansAlgo> {
+    s.parse::<KMeansAlgo>().map_err(|e| anyhow!("{e}"))
 }
 
 /// Parse a Table II pipeline label.
@@ -393,6 +412,19 @@ stride = 2
         assert!(parse_traversal("sideways").is_err());
         assert!(parse_mode("chaotic").is_err());
         assert!(parse_pipeline("t9").is_err());
+        assert!(parse_kmeans_algo("macqueen").is_err());
+    }
+
+    #[test]
+    fn kmeans_algo_defaults_to_auto_and_overrides_from_toml() {
+        let mut cfg = ExperimentConfig::quick();
+        assert_eq!(cfg.kmeans_algo, KMeansAlgo::Auto);
+        let doc = "[model]\nkmeans_algo = \"elkan\"\n";
+        cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
+        assert_eq!(cfg.kmeans_algo, KMeansAlgo::Elkan);
+        assert!(cfg
+            .apply_toml(&parse_toml("[model]\nkmeans_algo = \"fast\"\n").unwrap())
+            .is_err());
     }
 
     #[test]

@@ -41,6 +41,13 @@ pub struct EvalDiagnostics {
     pub restart_spread: Option<f64>,
     /// How many restarts / perturbations were folded.
     pub restarts: Option<u64>,
+    /// Point↔center distance evaluations the reported fit performed
+    /// (summed across restarts) — the realized cost the bound-
+    /// accelerated assignment paths save against (DESIGN.md S23).
+    pub distance_calcs: Option<u64>,
+    /// The concrete assignment algorithm that ran (`"lloyd"`,
+    /// `"hamerly"`, … — `Auto` resolved per shape).
+    pub algo: Option<String>,
 }
 
 impl EvalDiagnostics {
@@ -144,6 +151,12 @@ impl Evaluation {
         if let Some(v) = d.restarts {
             diag.insert("restarts".to_string(), Json::Num(v as f64));
         }
+        if let Some(v) = d.distance_calcs {
+            diag.insert("distance_calcs".to_string(), Json::Num(v as f64));
+        }
+        if let Some(v) = &d.algo {
+            diag.insert("algo".to_string(), Json::Str(v.clone()));
+        }
         if !diag.is_empty() {
             obj.insert("diagnostics".to_string(), Json::Obj(diag));
         }
@@ -176,6 +189,11 @@ impl Evaluation {
                 .map(|v| v as u64);
             diagnostics.restart_spread = d.get("restart_spread").map(parse_f64);
             diagnostics.restarts = d.get("restarts").and_then(Json::as_f64).map(|v| v as u64);
+            diagnostics.distance_calcs = d
+                .get("distance_calcs")
+                .and_then(Json::as_f64)
+                .map(|v| v as u64);
+            diagnostics.algo = d.get("algo").and_then(Json::as_str).map(str::to_string);
         }
         let cost_us = j.get("cost_us").and_then(Json::as_f64).unwrap_or(0.0);
         Ok(Evaluation {
@@ -425,6 +443,8 @@ mod tests {
             iterations: Some(60),
             restart_spread: Some(1e-4),
             restarts: Some(3),
+            distance_calcs: Some(123_456),
+            algo: Some("elkan".into()),
         };
         rec.cost = Duration::from_micros(1234);
         let j = rec.to_json().to_string();

@@ -34,6 +34,12 @@
 //!   threads never exceed the eval budget (`0` = auto, `1` = off).
 //! * `--simd` (`parallel.simd`) — kernel dispatch: `auto` (default),
 //!   `scalar` (the retained oracle loops), `vector`.
+//! * `--kmeans-algo` (`model.kmeans_algo`) — k-means assignment:
+//!   `lloyd` (the bitwise oracle), the triangle-inequality bound paths
+//!   `hamerly` | `elkan` | `yinyang`, or `auto` (default — picked per
+//!   (n, d, k) shape; [`linalg::KMeansAlgo`]). Bound fits reproduce
+//!   Lloyd's labels while skipping most distance computations, and
+//!   report the realized count in their diagnostics.
 //!
 //! Scores are bitwise identical under every `(eval_threads,
 //! outer_tasks)` pair within a SIMD policy, and tolerance-bounded

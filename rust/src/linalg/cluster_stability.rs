@@ -11,11 +11,11 @@
 //! kernel on **unit-normalized** columns: for unit vectors the cosine
 //! distance is `1 − a·b = d²(a,b) / 2`, so the O(n²·m) all-pairs dot
 //! loop the seed recomputed point-by-point becomes one norms
-//! precompute + GEMM-shaped distance matrix, parallel over row blocks
-//! on a [`ThreadPool`].
+//! precompute + streamed GEMM-shaped distance tiles (never the full
+//! n×n matrix), parallel over row blocks on a [`ThreadPool`].
 
 use super::matrix::{cosine_similarity, Matrix};
-use super::pairwise::sq_dist_matrix_policy;
+use super::pairwise::{row_sq_norms_policy, sq_dist_tile_policy, TILE};
 use crate::util::pool::ThreadPool;
 use crate::util::simd::{self, SimdPolicy};
 
@@ -60,10 +60,14 @@ pub fn perturbation_silhouette(ws: &[Matrix]) -> f64 {
 /// per-cluster silhouette — NMFk's conservative stability statistic.
 ///
 /// Distances are computed as `d²/2` of the unit-normalized columns via
-/// the blocked [`super::pairwise`] kernel (norms hoisted, one tile pass
-/// for the full `p·k × p·k` matrix), parallel over row blocks on
-/// `pool`. Chunk boundaries depend only on the sample count, so the
-/// statistic is bitwise identical under every thread budget. The seed
+/// the blocked [`super::pairwise`] tile kernel, *streamed*: each
+/// sample's distance row is consumed one `TILE`-column block at a time
+/// and folded straight into per-cluster sums, so peak distance storage
+/// is O(n·TILE) instead of the materialized `p·k × p·k` matrix.
+/// Parallel over row blocks on `pool`; chunk boundaries depend only on
+/// the sample count and per-pair values and fold order match the
+/// full-matrix form exactly, so the statistic is bitwise identical
+/// under every thread budget. The seed
 /// formula's degenerate-column semantics are reproduced *exactly in
 /// form*: `1 − dot/(‖a‖‖b‖ + 1e-12)` equals
 /// `1 − cos·(p/(p + 1e-12))` with `p = ‖a‖‖b‖`, so each pair's unit
@@ -113,37 +117,76 @@ pub fn perturbation_silhouette_with_policy(
             }
         }
     }
-    let d2 = sq_dist_matrix_policy(&unit, &unit, pool, policy);
+    // Streamed distance rows: for each sample i, walk its distance row
+    // in TILE-column blocks and fold each pair straight into the
+    // per-cluster sums. Per-pair values come from the same tile kernel
+    // the materialized n×n matrix used and accumulate in the same
+    // ascending-j order, so this is a memory change (O(n·TILE) live
+    // tiles), not a numeric one.
+    //
     // Per-pair damping, the seed formula in unit-vector form:
     // 1 − dot/(p + 1e-12) = 1 − cos·(p/(p + 1e-12)), cos = 1 − d²/2 on
     // the sphere. The damping factor is what made a collapsed (tiny- or
     // zero-norm) column maximally distant under the seed's 1e-12
     // denominator guard; dropping it would read coincident near-zero
     // columns as a perfectly tight (stable) cluster — the inverse.
-    let dist = |i: usize, j: usize| {
-        let cos = 1.0 - 0.5 * d2[i * n + j];
-        let p = norms[i] * norms[j];
-        (1.0 - cos * (p / (p + 1e-12))).clamp(0.0, 2.0)
-    };
+    let unorms = row_sq_norms_policy(&unit, policy);
+    let mut counts_all = vec![0usize; k];
+    for &l in &labels {
+        counts_all[l] += 1;
+    }
+    let mut sums = vec![0.0f64; n * k];
+    let unit_ref = &unit;
+    let unorms_ref = &unorms;
+    let labels_ref = &labels;
+    let norms_ref = &norms;
+    pool.capped(n / 32).for_slices_mut(&mut sums, k, |_, i0, piece| {
+        let mut tile = vec![0.0f64; TILE];
+        for (off, row_sums) in piece.chunks_exact_mut(k).enumerate() {
+            let i = i0 + off;
+            let mut jb = 0;
+            while jb < n {
+                let je = (jb + TILE).min(n);
+                sq_dist_tile_policy(
+                    unit_ref,
+                    i,
+                    i + 1,
+                    unorms_ref,
+                    unit_ref,
+                    jb,
+                    je,
+                    unorms_ref,
+                    &mut tile[..je - jb],
+                    policy,
+                );
+                for j in jb..je {
+                    if j == i {
+                        continue;
+                    }
+                    let cos = 1.0 - 0.5 * tile[j - jb];
+                    let p = norms_ref[i] * norms_ref[j];
+                    let d = (1.0 - cos * (p / (p + 1e-12))).clamp(0.0, 2.0);
+                    row_sums[labels_ref[j]] += d;
+                }
+                jb = je;
+            }
+        }
+    });
+    // Serial silhouette fold in sample order (thread-invariant). The
+    // competitor counts are the global label counts minus self.
     let mut cluster_sil = vec![0.0f64; k];
     let mut cluster_n = vec![0usize; k];
     for i in 0..n {
         let own = labels[i];
-        let mut sums = vec![0.0f64; k];
-        let mut counts = vec![0usize; k];
-        for j in 0..n {
-            if i != j {
-                sums[labels[j]] += dist(i, j);
-                counts[labels[j]] += 1;
-            }
-        }
-        if counts[own] == 0 {
+        let row = &sums[i * k..(i + 1) * k];
+        let count = |c: usize| counts_all[c] - usize::from(c == own);
+        if count(own) == 0 {
             continue;
         }
-        let a = sums[own] / counts[own] as f64;
+        let a = row[own] / count(own) as f64;
         let b = (0..k)
-            .filter(|&c| c != own && counts[c] > 0)
-            .map(|c| sums[c] / counts[c] as f64)
+            .filter(|&c| c != own && count(c) > 0)
+            .map(|c| row[c] / count(c) as f64)
             .fold(f64::INFINITY, f64::min);
         if !b.is_finite() {
             continue; // k == 1: stability undefined, treat as perfect

@@ -1,6 +1,8 @@
-//! Pure-Rust Lloyd K-means — the reference implementation / test oracle
-//! for the `kmeans_run` HLO artifact, and the fallback backend of the
-//! K-means evaluator when artifacts are unavailable.
+//! Pure-Rust K-means — the reference Lloyd implementation / test oracle
+//! for the `kmeans_run` HLO artifact, the fallback backend of the
+//! K-means evaluator, and the bound-accelerated assignment variants
+//! (Hamerly / Elkan / Yinyang) that prune distance work without moving
+//! the fixed point (DESIGN.md S23, NUMERICS.md).
 //!
 //! Seeding is true D²-sampled k-means++ (Arthur & Vassilvitskii 2007)
 //! on the caller's [`Pcg32`]: the first centroid is uniform, every
@@ -8,15 +10,118 @@
 //! distance from the nearest chosen centroid. (The seed implementation
 //! claimed "k-means++-style" but ran deterministic farthest-first,
 //! which chases outliers; D² sampling keeps the spread without that
-//! failure mode.) Assignment and the seeding distance updates stream
-//! through the blocked Gram-form kernel in [`super::pairwise`],
-//! parallel over row blocks on a [`ThreadPool`].
+//! failure mode.) Every algorithm variant consumes the seeding RNG
+//! identically, so all variants start from the same centroids.
+//!
+//! Assignment streams through the blocked Gram-form kernel in
+//! [`super::pairwise`], parallel over row blocks on a [`ThreadPool`].
+//! The bound variants keep triangle-inequality bounds per point across
+//! Lloyd iterations (aged by the per-iteration center drifts) and skip
+//! the full argmin wherever the bounds prove it cannot change; the
+//! exact squared distance to the *assigned* center is still recomputed
+//! every iteration, so the inertia sequence — and with it the
+//! convergence trajectory — matches Lloyd's exactly whenever the labels
+//! do (the non-degenerate case; see NUMERICS.md "bound-accelerated
+//! k-means").
 
 use super::matrix::Matrix;
 use super::pairwise::{row_sq_norms_policy, sq_dist_tile_policy};
 use crate::util::pool::ThreadPool;
 use crate::util::simd::{self, SimdPolicy};
 use crate::util::Pcg32;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Assignment algorithm for the K-means fit (DESIGN.md S23).
+///
+/// `Lloyd` is the bitwise oracle: a full n×k distance pass per
+/// iteration. The bound variants prune provably-futile distance
+/// computations with triangle-inequality bounds maintained across
+/// iterations (Elkan 2003; Hamerly 2010; Ding et al. 2015 "Yinyang"),
+/// converging to Lloyd-identical labels and inertia on non-degenerate
+/// inputs — a distance near-tie can keep a stale equal-distance
+/// assignment where Lloyd's argmin would re-pick by index, the same
+/// control-flow sensitivity the argmin already has across SIMD policies
+/// (NUMERICS.md). `Auto` resolves per (n, d, k) shape via
+/// [`KMeansAlgo::resolve`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KMeansAlgo {
+    /// Full assignment pass every iteration — the bitwise oracle.
+    Lloyd,
+    /// One global second-closest lower bound per point (best at low k).
+    Hamerly,
+    /// Per-center lower bounds plus the center–center separation
+    /// filter (best at high k, low-to-moderate d).
+    Elkan,
+    /// Group lower bounds over index-contiguous center groups of ~10
+    /// (≈ k/10 groups — the middle ground).
+    Yinyang,
+    /// Pick per (n, d, k) shape from the documented decision rule.
+    #[default]
+    Auto,
+}
+
+impl KMeansAlgo {
+    /// Stable lowercase name (CLI flag value, TOML value, diagnostics).
+    pub fn label(self) -> &'static str {
+        match self {
+            KMeansAlgo::Lloyd => "lloyd",
+            KMeansAlgo::Hamerly => "hamerly",
+            KMeansAlgo::Elkan => "elkan",
+            KMeansAlgo::Yinyang => "yinyang",
+            KMeansAlgo::Auto => "auto",
+        }
+    }
+
+    /// Resolve `Auto` to a concrete algorithm for an (n, d, k) shape;
+    /// concrete variants return themselves. The rule is a pure function
+    /// of the shape (deterministic, documented in DESIGN.md §3.2), with
+    /// Wang/Sun/Bao's algorithm-selection table as the prior and the
+    /// thresholds rounded against `BENCH_kmeans.json`:
+    ///
+    /// * `k < 2` or `n < 4·k` → `Lloyd` — no pruning headroom; bound
+    ///   bookkeeping and per-iteration drift passes would only add
+    ///   overhead.
+    /// * `k ≤ 8` → `Hamerly` — one bound pair per point beats k bounds
+    ///   when there are few centers to rule out.
+    /// * `k² ≤ 2·n` and `d ≤ 32` → `Elkan` — per-center bounds plus the
+    ///   k×k separation matrix pay off once k is large, as long as the
+    ///   k² per-iteration overhead stays small next to the n·k pass.
+    /// * otherwise → `Yinyang` — grouped bounds amortize the
+    ///   bookkeeping when k is large relative to n or d is high.
+    pub fn resolve(self, n: usize, d: usize, k: usize) -> KMeansAlgo {
+        match self {
+            KMeansAlgo::Auto => {
+                if k < 2 || n < 4 * k {
+                    KMeansAlgo::Lloyd
+                } else if k <= 8 {
+                    KMeansAlgo::Hamerly
+                } else if k * k <= 2 * n && d <= 32 {
+                    KMeansAlgo::Elkan
+                } else {
+                    KMeansAlgo::Yinyang
+                }
+            }
+            other => other,
+        }
+    }
+}
+
+impl std::str::FromStr for KMeansAlgo {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "lloyd" => Ok(KMeansAlgo::Lloyd),
+            "hamerly" => Ok(KMeansAlgo::Hamerly),
+            "elkan" => Ok(KMeansAlgo::Elkan),
+            "yinyang" => Ok(KMeansAlgo::Yinyang),
+            "auto" => Ok(KMeansAlgo::Auto),
+            other => Err(format!(
+                "unknown kmeans algo '{other}' (expected lloyd|hamerly|elkan|yinyang|auto)"
+            )),
+        }
+    }
+}
 
 /// Result of a K-means fit.
 #[derive(Debug, Clone)]
@@ -25,6 +130,13 @@ pub struct KMeansFit {
     pub labels: Vec<usize>,
     pub inertia: f64,
     pub iterations: usize,
+    /// Point↔center and center↔center distance evaluations performed,
+    /// seeding included. Deterministic for a given (data, config) —
+    /// chunk counts fold through a commutative integer sum, so every
+    /// thread budget reports the same number.
+    pub distance_calcs: u64,
+    /// The concrete algorithm that ran (`Auto` resolved per shape).
+    pub algo: KMeansAlgo,
 }
 
 /// Lloyd's algorithm with k-means++ seeding, single-threaded.
@@ -55,7 +167,9 @@ pub fn kmeans_with(
     kmeans_with_policy(x, k, max_iter, rng, pool, simd::simd_policy())
 }
 
-/// [`kmeans_with`] under an explicit [`SimdPolicy`].
+/// [`kmeans_with`] under an explicit [`SimdPolicy`]. Always runs the
+/// Lloyd oracle path; [`kmeans_with_algo`] selects a bound-accelerated
+/// variant.
 pub fn kmeans_with_policy(
     x: &Matrix,
     k: usize,
@@ -64,13 +178,50 @@ pub fn kmeans_with_policy(
     pool: &ThreadPool,
     policy: SimdPolicy,
 ) -> KMeansFit {
-    assert!(k >= 1 && k <= x.rows, "k out of range");
+    kmeans_with_algo(x, k, max_iter, rng, pool, policy, KMeansAlgo::Lloyd)
+}
+
+/// [`kmeans_with_policy`] under an explicit [`KMeansAlgo`]. `Auto`
+/// resolves per shape; [`KMeansFit::algo`] records what actually ran.
+///
+/// `k` is clamped to the sample count: at `k = n` every point is its
+/// own centroid and extra centers could only duplicate, so requesting
+/// `k > n` (which the evaluator can do on tiny data) fits `k = n`
+/// instead of panicking mid-search.
+#[allow(clippy::too_many_arguments)]
+pub fn kmeans_with_algo(
+    x: &Matrix,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+    algo: KMeansAlgo,
+) -> KMeansFit {
+    assert!(k >= 1, "k must be at least 1");
+    assert!(x.rows >= 1, "kmeans on empty data");
+    let k = k.min(x.rows);
+    match algo.resolve(x.rows, x.cols, k) {
+        KMeansAlgo::Lloyd => kmeans_lloyd(x, k, max_iter, rng, pool, policy),
+        concrete => kmeans_bounded(x, k, max_iter, rng, pool, policy, concrete),
+    }
+}
+
+/// Shared D²-sampled k-means++ seeding. Every algorithm variant calls
+/// this with identical RNG consumption, so all variants start from the
+/// same centroids. Adds its distance evaluations (k passes over n
+/// points) to `calcs`.
+fn seed_centroids(
+    x: &Matrix,
+    k: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+    norms: &[f64],
+    calcs: &mut u64,
+) -> Matrix {
     let n = x.rows;
     let d = x.cols;
-    let norms = row_sq_norms_policy(x, policy);
-    let pool = pool.capped(n / 64);
-
-    // --- k-means++ seeding ---------------------------------------------
     let mut centers: Vec<usize> = vec![rng.gen_range(0, n as u64) as usize];
     // min_d2[i] = squared distance of point i to its nearest chosen center.
     let mut min_d2 = vec![0.0f64; n];
@@ -79,7 +230,7 @@ pub fn kmeans_with_policy(
             let mut t = [0.0f64; 1];
             for (off, slot) in piece.iter_mut().enumerate() {
                 let i = i0 + off;
-                sq_dist_tile_policy(x, i, i + 1, &norms, x, c, c + 1, &norms, &mut t, policy);
+                sq_dist_tile_policy(x, i, i + 1, norms, x, c, c + 1, norms, &mut t, policy);
                 if t[0] < *slot {
                     *slot = t[0];
                 }
@@ -88,6 +239,7 @@ pub fn kmeans_with_policy(
     };
     min_d2.fill(f64::INFINITY);
     seed_update(&mut min_d2, centers[0]);
+    *calcs += n as u64;
     while centers.len() < k {
         let total: f64 = min_d2.iter().sum();
         let next = if total > 0.0 {
@@ -116,11 +268,29 @@ pub fn kmeans_with_policy(
         };
         centers.push(next);
         seed_update(&mut min_d2, next);
+        *calcs += n as u64;
     }
     let mut centroids = Matrix::zeros(k, d);
     for (ci, &i) in centers.iter().enumerate() {
         centroids.data[ci * d..(ci + 1) * d].copy_from_slice(x.row(i));
     }
+    centroids
+}
+
+/// The Lloyd oracle path: full n×k assignment every iteration.
+fn kmeans_lloyd(
+    x: &Matrix,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> KMeansFit {
+    let n = x.rows;
+    let norms = row_sq_norms_policy(x, policy);
+    let pool = pool.capped(n / 64);
+    let mut calcs = 0u64;
+    let mut centroids = seed_centroids(x, k, rng, &pool, policy, &norms, &mut calcs);
 
     // --- Lloyd iterations ----------------------------------------------
     let mut labels = vec![0usize; n];
@@ -160,32 +330,13 @@ pub fn kmeans_with_policy(
                 *slot = (best_c as u32, best_d);
             }
         });
+        calcs += (n as u64) * (k as u64);
         let mut new_inertia = 0.0;
         for (i, &(c, dv)) in assign.iter().enumerate() {
             labels[i] = c as usize;
             new_inertia += dv;
         }
-        // Update (serial: O(n·d), cheap next to the O(n·k·d) assignment).
-        let mut sums = Matrix::zeros(k, d);
-        let mut counts = vec![0usize; k];
-        for i in 0..n {
-            let c = labels[i];
-            counts[c] += 1;
-            for (s, &v) in sums.data[c * d..(c + 1) * d].iter_mut().zip(x.row(i)) {
-                *s += v;
-            }
-        }
-        for c in 0..k {
-            if counts[c] > 0 {
-                for v in &mut sums.data[c * d..(c + 1) * d] {
-                    *v /= counts[c] as f32;
-                }
-            } else {
-                // Keep empty centroids in place.
-                sums.data[c * d..(c + 1) * d].copy_from_slice(centroids.row(c));
-            }
-        }
-        centroids = sums;
+        centroids = update_centroids(x, &labels, &centroids, k);
         let converged = (inertia - new_inertia).abs() < 1e-7 * inertia.max(1.0);
         inertia = new_inertia;
         if converged {
@@ -197,6 +348,312 @@ pub fn kmeans_with_policy(
         labels,
         inertia,
         iterations,
+        distance_calcs: calcs,
+        algo: KMeansAlgo::Lloyd,
+    }
+}
+
+/// Mean-update step shared by every variant (serial: O(n·d), cheap next
+/// to the O(n·k·d) assignment). Empty centroids keep their position.
+fn update_centroids(x: &Matrix, labels: &[usize], old: &Matrix, k: usize) -> Matrix {
+    let n = x.rows;
+    let d = x.cols;
+    let mut sums = Matrix::zeros(k, d);
+    let mut counts = vec![0usize; k];
+    for i in 0..n {
+        let c = labels[i];
+        counts[c] += 1;
+        for (s, &v) in sums.data[c * d..(c + 1) * d].iter_mut().zip(x.row(i)) {
+            *s += v;
+        }
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            for v in &mut sums.data[c * d..(c + 1) * d] {
+                *v /= counts[c] as f32;
+            }
+        } else {
+            // Keep empty centroids in place.
+            sums.data[c * d..(c + 1) * d].copy_from_slice(old.row(c));
+        }
+    }
+    sums
+}
+
+/// Relative slack applied to the triangle-inequality bounds so a prune
+/// is conservative against every rounding source in the bound chain
+/// (Gram-form tile error ≤ ~1e-9 relative, sqrt and drift-sum
+/// rounding). Lower bounds are deflated and drifts inflated by this
+/// factor: the only assignments it can cost are distance ties closer
+/// than ~4e-9 relative — already control-flow-sensitive for Lloyd
+/// across SIMD policies (NUMERICS.md).
+const BOUND_SLACK: f64 = 4e-9;
+
+/// Bound-accelerated Lloyd: one grouped-bound engine instantiated as
+/// Hamerly (one group of k centers), Elkan (k singleton groups plus the
+/// center–center separation filter), or Yinyang (index-contiguous
+/// groups of ~10 centers).
+///
+/// Invariants that pin the result to the Lloyd oracle:
+///
+/// * The exact squared distance to the *assigned* center is recomputed
+///   every iteration for every point — it is both the inertia term and
+///   the tightened upper bound — so the convergence test sees exactly
+///   the same inertia sequence as Lloyd while the labels agree.
+/// * A pruned point keeps its assignment; the bound math (with
+///   [`BOUND_SLACK`] absorbing rounding) guarantees the kept center is
+///   a true argmin except on distance ties. A non-pruned point runs the
+///   same ascending-index strict-`<` argmin over bitwise-identical tile
+///   distances as Lloyd, reusing the already-computed assigned-center
+///   column — so a fully-failed point costs exactly k evaluations, the
+///   Lloyd cost, and the per-point total never exceeds it.
+/// * Per-point work is chunk-independent and the inertia folds serially
+///   in row order, so fits are bitwise identical across thread budgets.
+fn kmeans_bounded(
+    x: &Matrix,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+    algo: KMeansAlgo,
+) -> KMeansFit {
+    let n = x.rows;
+    let norms = row_sq_norms_policy(x, policy);
+    let pool = pool.capped(n / 64);
+    let mut calcs = 0u64;
+    let mut centroids = seed_centroids(x, k, rng, &pool, policy, &norms, &mut calcs);
+
+    // Centers per bound group. Real Yinyang clusters the centers; we
+    // group by index, which keeps the bookkeeping deterministic and
+    // cheap — grouping only affects *how much* is pruned, never the
+    // result.
+    let span = match algo {
+        KMeansAlgo::Hamerly => k,
+        KMeansAlgo::Elkan => 1,
+        KMeansAlgo::Yinyang => 10,
+        _ => unreachable!("resolve() returns a concrete algorithm"),
+    };
+    let groups = k.div_ceil(span);
+    let elkan = algo == KMeansAlgo::Elkan;
+    // Per-point state, stride `s`: [label, d²(assigned), l(group 0)..].
+    // The label rides as an exact small integer in f64 so the whole
+    // state parallelizes through one `for_slices_mut` with unit `s`.
+    let s = 2 + groups;
+    let mut state = vec![0.0f64; n * s];
+    let mut drifts = vec![0.0f64; k];
+    let mut gdrift = vec![0.0f64; groups];
+    // Elkan extras, refreshed per iteration: deflated center–center
+    // distances and sep[c] = ½·min distance to another center.
+    let mut cc: Vec<f64> = Vec::new();
+    let mut sep: Vec<f64> = Vec::new();
+
+    let mut labels = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    let shared_calcs = AtomicU64::new(0);
+    for it in 0..max_iter.max(1) {
+        iterations = it + 1;
+        let cnorms = row_sq_norms_policy(&centroids, policy);
+        if elkan {
+            let mut cc2 = vec![0.0f64; k * k];
+            sq_dist_tile_policy(
+                &centroids, 0, k, &cnorms, &centroids, 0, k, &cnorms, &mut cc2, policy,
+            );
+            calcs += (k * k) as u64;
+            cc = cc2.iter().map(|&v| v.sqrt() * (1.0 - BOUND_SLACK)).collect();
+            sep = (0..k)
+                .map(|c| {
+                    let mut m = f64::INFINITY;
+                    for (c2, &dist) in cc[c * k..(c + 1) * k].iter().enumerate() {
+                        if c2 != c {
+                            m = m.min(dist);
+                        }
+                    }
+                    0.5 * m
+                })
+                .collect();
+        }
+        let first = it == 0;
+        let centroids_ref = &centroids;
+        let cc_ref = &cc;
+        let sep_ref = &sep;
+        let gdrift_ref = &gdrift;
+        let calcs_ref = &shared_calcs;
+        pool.for_slices_mut(&mut state, s, |_, p0, piece| {
+            let mut row = vec![0.0f64; k];
+            let mut t = [0.0f64; 1];
+            let mut gmin = vec![f64::INFINITY; groups];
+            let mut gmin2 = vec![f64::INFINITY; groups];
+            let mut gdone = vec![false; groups];
+            let mut local: u64 = 0;
+            for (off, st) in piece.chunks_exact_mut(s).enumerate() {
+                let i = p0 + off;
+                if first {
+                    // Full Lloyd pass: initializes the labels and bounds.
+                    sq_dist_tile_policy(
+                        x, i, i + 1, &norms, centroids_ref, 0, k, &cnorms, &mut row, policy,
+                    );
+                    local += k as u64;
+                    let (mut best_c, mut best_d) = (0usize, f64::INFINITY);
+                    for (c, &dv) in row.iter().enumerate() {
+                        if dv < best_d {
+                            best_d = dv;
+                            best_c = c;
+                        }
+                    }
+                    st[0] = best_c as f64;
+                    st[1] = best_d;
+                    for g in 0..groups {
+                        let (c0, c1) = (g * span, ((g + 1) * span).min(k));
+                        let mut m = f64::INFINITY;
+                        for (c, &dv) in row[c0..c1].iter().enumerate().map(|(o, v)| (c0 + o, v)) {
+                            if c != best_c {
+                                m = m.min(dv);
+                            }
+                        }
+                        // min over {c ∈ g, c ≠ best}; INF for best's
+                        // singleton group = "no competitor in here".
+                        st[2 + g] = m.sqrt() * (1.0 - BOUND_SLACK);
+                    }
+                    continue;
+                }
+                let a0 = st[0] as usize;
+                // Exact distance to the current center: the inertia
+                // term and the tightened upper bound.
+                sq_dist_tile_policy(
+                    x, i, i + 1, &norms, centroids_ref, a0, a0 + 1, &cnorms, &mut t, policy,
+                );
+                local += 1;
+                let d2a = t[0];
+                let ua = d2a.sqrt();
+                let ua_hi = ua * (1.0 + BOUND_SLACK);
+                // Age the stored group bounds by this iteration's group
+                // drifts (cumulative: the aged value is written back).
+                let mut lmin = f64::INFINITY;
+                for (g, gd) in gdrift_ref.iter().enumerate() {
+                    let l = st[2 + g] - gd;
+                    st[2 + g] = l;
+                    lmin = lmin.min(l);
+                }
+                if ua_hi <= lmin || (elkan && ua_hi <= sep_ref[a0]) {
+                    // Every other center is provably no closer: the
+                    // assignment cannot change.
+                    st[1] = d2a;
+                    continue;
+                }
+                // Group filter + exact distances for survivors.
+                for g in 0..groups {
+                    gdone[g] = false;
+                    gmin[g] = f64::INFINITY;
+                    gmin2[g] = f64::INFINITY;
+                }
+                let (mut best_c, mut best_d2) = (a0, d2a);
+                for g in 0..groups {
+                    if ua_hi <= st[2 + g] {
+                        continue; // whole group pruned; aged bound stays
+                    }
+                    let c0 = g * span;
+                    let c1 = ((g + 1) * span).min(k);
+                    // Elkan (singleton groups): the center–center
+                    // filter — 2·d(i,a) ≤ d(a,c) already rules c out.
+                    if elkan && c0 != a0 && ua_hi <= 0.5 * cc_ref[a0 * k + c0] {
+                        continue;
+                    }
+                    // Exact distances for the group; the assigned
+                    // center's column is reused, not recomputed.
+                    if a0 >= c0 && a0 < c1 {
+                        if a0 > c0 {
+                            sq_dist_tile_policy(
+                                x, i, i + 1, &norms, centroids_ref, c0, a0, &cnorms,
+                                &mut row[c0..a0], policy,
+                            );
+                        }
+                        if a0 + 1 < c1 {
+                            sq_dist_tile_policy(
+                                x, i, i + 1, &norms, centroids_ref, a0 + 1, c1, &cnorms,
+                                &mut row[a0 + 1..c1], policy,
+                            );
+                        }
+                        row[a0] = d2a;
+                        local += (c1 - c0 - 1) as u64;
+                    } else {
+                        sq_dist_tile_policy(
+                            x, i, i + 1, &norms, centroids_ref, c0, c1, &cnorms,
+                            &mut row[c0..c1], policy,
+                        );
+                        local += (c1 - c0) as u64;
+                    }
+                    gdone[g] = true;
+                    for (c, &dv) in row[c0..c1].iter().enumerate().map(|(o, v)| (c0 + o, v)) {
+                        if dv < gmin[g] {
+                            gmin2[g] = gmin[g];
+                            gmin[g] = dv;
+                        } else if dv < gmin2[g] {
+                            gmin2[g] = dv;
+                        }
+                        if dv < best_d2 {
+                            best_d2 = dv;
+                            best_c = c;
+                        }
+                    }
+                }
+                let moved = best_c != a0;
+                st[0] = best_c as f64;
+                st[1] = best_d2;
+                for g in 0..groups {
+                    if gdone[g] {
+                        // Exact refresh: min over the group's computed
+                        // centers excluding the final assignment.
+                        let in_g = best_c >= g * span && best_c < ((g + 1) * span).min(k);
+                        let m = if in_g { gmin2[g] } else { gmin[g] };
+                        st[2 + g] = m.sqrt() * (1.0 - BOUND_SLACK);
+                    } else if moved && a0 >= g * span && a0 < ((g + 1) * span).min(k) {
+                        // The bound excluded the *old* center, which the
+                        // group's competitor set just regained; its
+                        // exact distance is known, so tighten with it.
+                        st[2 + g] = st[2 + g].min(ua * (1.0 - BOUND_SLACK));
+                    }
+                }
+            }
+            calcs_ref.fetch_add(local, Ordering::Relaxed);
+        });
+        calcs += shared_calcs.swap(0, Ordering::Relaxed);
+        let mut new_inertia = 0.0;
+        for (i, st) in state.chunks_exact(s).enumerate() {
+            labels[i] = st[0] as usize;
+            new_inertia += st[1];
+        }
+        let new_centroids = update_centroids(x, &labels, &centroids, k);
+        // Center drifts age the bounds next iteration; inflated by the
+        // slack so a downward-rounded drift can never over-prune.
+        for c in 0..k {
+            let mut dd = 0.0f64;
+            for (o, nw) in centroids.row(c).iter().zip(new_centroids.row(c)) {
+                let diff = *o as f64 - *nw as f64;
+                dd += diff * diff;
+            }
+            drifts[c] = dd.sqrt() * (1.0 + BOUND_SLACK);
+        }
+        calcs += k as u64;
+        for (g, gd) in gdrift.iter_mut().enumerate() {
+            let (c0, c1) = (g * span, ((g + 1) * span).min(k));
+            *gd = drifts[c0..c1].iter().copied().fold(0.0, f64::max);
+        }
+        centroids = new_centroids;
+        let converged = (inertia - new_inertia).abs() < 1e-7 * inertia.max(1.0);
+        inertia = new_inertia;
+        if converged {
+            break;
+        }
+    }
+    KMeansFit {
+        centroids,
+        labels,
+        inertia,
+        iterations,
+        distance_calcs: calcs,
+        algo,
     }
 }
 
@@ -204,6 +661,17 @@ pub fn kmeans_with_policy(
 mod tests {
     use super::*;
     use crate::data::blobs::gaussian_blobs;
+
+    const BOUND_ALGOS: [KMeansAlgo; 3] =
+        [KMeansAlgo::Hamerly, KMeansAlgo::Elkan, KMeansAlgo::Yinyang];
+
+    const ALL_ALGOS: [KMeansAlgo; 5] = [
+        KMeansAlgo::Lloyd,
+        KMeansAlgo::Hamerly,
+        KMeansAlgo::Elkan,
+        KMeansAlgo::Yinyang,
+        KMeansAlgo::Auto,
+    ];
 
     #[test]
     fn recovers_separated_blobs() {
@@ -244,6 +712,32 @@ mod tests {
     }
 
     #[test]
+    fn k_at_and_above_n_clamps_cleanly() {
+        // Bugfix: k > n used to fall through to the k-means++ walk and
+        // rely on its degenerate path; now it clamps to k = n (every
+        // point its own centroid) in every algorithm variant.
+        let mut rng = Pcg32::new(26);
+        let x = Matrix::rand_normal(6, 3, &mut rng);
+        for algo in ALL_ALGOS {
+            for k in [6usize, 9] {
+                let mut frng = Pcg32::with_stream(7, k as u64);
+                let fit = kmeans_with_algo(
+                    &x,
+                    k,
+                    20,
+                    &mut frng,
+                    &ThreadPool::serial(),
+                    SimdPolicy::Auto,
+                    algo,
+                );
+                assert!(fit.inertia < 1e-6, "{algo:?} k={k}: inertia {}", fit.inertia);
+                assert_eq!(fit.centroids.rows, 6, "{algo:?} k={k}: clamps to n");
+                assert_eq!(fit.labels.len(), 6);
+            }
+        }
+    }
+
+    #[test]
     fn zero_max_iter_still_assigns() {
         // Regression: the seed returned inertia = ∞ and all-zero labels.
         let mut rng = Pcg32::new(24);
@@ -267,5 +761,74 @@ mod tests {
         assert_eq!(f1.labels, f8.labels);
         assert_eq!(f1.inertia.to_bits(), f8.inertia.to_bits());
         assert_eq!(f1.centroids.data, f8.centroids.data);
+    }
+
+    #[test]
+    fn bound_variants_are_thread_budget_invariant() {
+        let mut rng = Pcg32::new(28);
+        let ds = gaussian_blobs(&mut rng, 80, 4, 6, 8.0, 0.7);
+        for algo in BOUND_ALGOS {
+            let mut rng1 = Pcg32::with_stream(99, 2);
+            let mut rng8 = Pcg32::with_stream(99, 2);
+            let f1 = kmeans_with_algo(
+                &ds.x, 5, 30, &mut rng1, &ThreadPool::serial(), SimdPolicy::Auto, algo,
+            );
+            let f8 = kmeans_with_algo(
+                &ds.x, 5, 30, &mut rng8, &ThreadPool::new(8), SimdPolicy::Auto, algo,
+            );
+            assert_eq!(f1.labels, f8.labels, "{algo:?}");
+            assert_eq!(f1.inertia.to_bits(), f8.inertia.to_bits(), "{algo:?}");
+            assert_eq!(f1.centroids.data, f8.centroids.data, "{algo:?}");
+            assert_eq!(f1.distance_calcs, f8.distance_calcs, "{algo:?}: count is chunk-free");
+        }
+    }
+
+    #[test]
+    fn bound_variants_match_lloyd_and_prune() {
+        let mut rng = Pcg32::new(27);
+        let ds = gaussian_blobs(&mut rng, 60, 5, 6, 8.0, 0.6);
+        let mut lrng = Pcg32::with_stream(11, 0);
+        let pool = ThreadPool::serial();
+        let lloyd = kmeans_with_algo(
+            &ds.x, 5, 40, &mut lrng, &pool, SimdPolicy::Auto, KMeansAlgo::Lloyd,
+        );
+        for algo in BOUND_ALGOS {
+            let mut frng = Pcg32::with_stream(11, 0);
+            let fit = kmeans_with_algo(&ds.x, 5, 40, &mut frng, &pool, SimdPolicy::Auto, algo);
+            assert_eq!(fit.algo, algo);
+            assert_eq!(fit.labels, lloyd.labels, "{algo:?}");
+            assert!(
+                (fit.inertia - lloyd.inertia).abs() <= 1e-9 * lloyd.inertia.max(1.0),
+                "{algo:?}: inertia {} vs {}",
+                fit.inertia,
+                lloyd.inertia
+            );
+            assert!(
+                fit.distance_calcs < lloyd.distance_calcs,
+                "{algo:?}: {} !< {}",
+                fit.distance_calcs,
+                lloyd.distance_calcs
+            );
+        }
+    }
+
+    #[test]
+    fn auto_resolves_by_shape() {
+        // The documented decision rule, pinned so a silent change shows.
+        assert_eq!(KMeansAlgo::Auto.resolve(50, 8, 32), KMeansAlgo::Lloyd);
+        assert_eq!(KMeansAlgo::Auto.resolve(500, 8, 1), KMeansAlgo::Lloyd);
+        assert_eq!(KMeansAlgo::Auto.resolve(500, 8, 4), KMeansAlgo::Hamerly);
+        assert_eq!(KMeansAlgo::Auto.resolve(1000, 8, 32), KMeansAlgo::Elkan);
+        assert_eq!(KMeansAlgo::Auto.resolve(500, 64, 32), KMeansAlgo::Yinyang);
+        // Concrete variants resolve to themselves.
+        assert_eq!(KMeansAlgo::Elkan.resolve(10, 2, 2), KMeansAlgo::Elkan);
+    }
+
+    #[test]
+    fn algo_labels_round_trip() {
+        for algo in ALL_ALGOS {
+            assert_eq!(algo.label().parse::<KMeansAlgo>().unwrap(), algo);
+        }
+        assert!("kmedoids".parse::<KMeansAlgo>().is_err());
     }
 }

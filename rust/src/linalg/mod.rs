@@ -28,7 +28,9 @@ pub use cluster_stability::{
     match_columns, perturbation_silhouette, perturbation_silhouette_with,
     perturbation_silhouette_with_policy,
 };
-pub use kmeans_ref::{kmeans, kmeans_with, kmeans_with_policy, KMeansFit};
+pub use kmeans_ref::{
+    kmeans, kmeans_with, kmeans_with_algo, kmeans_with_policy, KMeansAlgo, KMeansFit,
+};
 pub use matrix::{cosine_similarity, Matrix};
 pub use nmf_ref::{nmf, nmf_from, nmf_from_with, nmf_from_with_policy, NmfFit};
 pub use pairwise::{

@@ -110,13 +110,29 @@ pub fn sq_dist_tile_policy(
     let w = j1 - j0;
     debug_assert!(out.len() >= (i1 - i0) * w, "tile buffer too small");
     let kernel = DotKernel::resolve(policy, a.cols);
-    for i in i0..i1 {
+    // Multi-row micro-tile: quads of `a` rows share each widened load
+    // of a `b` row ([`DotKernel::dot_widened_x4`]). Bitwise-neutral by
+    // construction — every element keeps the single-row fold order —
+    // so it slots in under the existing NUMERICS.md contract.
+    let mut i = i0;
+    while i + 4 <= i1 {
+        let quad = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        for j in j0..j1 {
+            let dots = kernel.dot_widened_x4(quad, b.row(j));
+            for (r, &dot) in dots.iter().enumerate() {
+                out[(i - i0 + r) * w + (j - j0)] = (na[i + r] + nb[j] - 2.0 * dot).max(0.0);
+            }
+        }
+        i += 4;
+    }
+    while i < i1 {
         let arow = a.row(i);
         let orow = &mut out[(i - i0) * w..(i - i0 + 1) * w];
         for (o, j) in orow.iter_mut().zip(j0..j1) {
             let dot = kernel.dot_widened(arow, b.row(j));
             *o = (na[i] + nb[j] - 2.0 * dot).max(0.0);
         }
+        i += 1;
     }
 }
 
@@ -217,6 +233,33 @@ mod tests {
                 );
                 for j in 0..30 {
                     assert!(out[i * 30 + j] >= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_row_quads_are_bitwise_row_at_a_time() {
+        // 11 rows = two quads + a 3-row remainder: the micro-tile path
+        // and the single-row fallback must produce identical bits, so a
+        // caller can never observe where the quad boundary fell.
+        let mut rng = Pcg32::new(96);
+        let a = Matrix::rand_normal(11, 13, &mut rng);
+        let b = Matrix::rand_normal(6, 13, &mut rng);
+        for policy in POLICIES {
+            let na = row_sq_norms_policy(&a, policy);
+            let nb = row_sq_norms_policy(&b, policy);
+            let mut whole = vec![0.0f64; 11 * 6];
+            sq_dist_tile_policy(&a, 0, 11, &na, &b, 0, 6, &nb, &mut whole, policy);
+            for i in 0..11 {
+                let mut row = vec![0.0f64; 6];
+                sq_dist_tile_policy(&a, i, i + 1, &na, &b, 0, 6, &nb, &mut row, policy);
+                for j in 0..6 {
+                    assert_eq!(
+                        whole[i * 6 + j].to_bits(),
+                        row[j].to_bits(),
+                        "{policy:?} d²({i},{j}): quad vs single-row"
+                    );
                 }
             }
         }

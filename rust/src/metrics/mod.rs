@@ -122,7 +122,9 @@ pub fn records_markdown(records: &[Evaluation]) -> String {
         .collect();
     let mut headers: Vec<&str> = vec!["k", "score"];
     headers.extend(keys.iter().copied());
-    headers.extend(["fit_error", "iters", "spread", "cost_ms"]);
+    headers.extend([
+        "fit_error", "iters", "spread", "algo", "dist_calcs", "cost_ms",
+    ]);
     let fmt = |v: Option<f64>| match v {
         Some(x) => format!("{x:.4}"),
         None => "-".to_string(),
@@ -140,6 +142,14 @@ pub fn records_markdown(records: &[Evaluation]) -> String {
                 None => "-".to_string(),
             });
             row.push(fmt(r.diagnostics.restart_spread));
+            row.push(match &r.diagnostics.algo {
+                Some(a) => a.clone(),
+                None => "-".to_string(),
+            });
+            row.push(match r.diagnostics.distance_calcs {
+                Some(v) => v.to_string(),
+                None => "-".to_string(),
+            });
             row.push(format!("{:.2}", r.cost.as_secs_f64() * 1e3));
             row
         })
@@ -262,10 +272,15 @@ mod tests {
         a.secondary.insert("davies_bouldin".into(), 0.4);
         a.diagnostics.fit_error = Some(12.5);
         a.diagnostics.iterations = Some(30);
+        a.diagnostics.algo = Some("elkan".into());
+        a.diagnostics.distance_calcs = Some(480_000);
         let b = Evaluation::scalar(9, 0.12); // scalar record: no secondary
         let md = records_markdown(&[a, b]);
         assert!(md.contains("davies_bouldin"), "{md}");
         assert!(md.contains("silhouette"), "{md}");
+        assert!(md.contains("dist_calcs"), "{md}");
+        assert!(md.contains("| elkan |"), "{md}");
+        assert!(md.contains("| 480000 |"), "{md}");
         // The scalar record fills missing columns with '-'.
         let last = md.lines().last().unwrap();
         assert!(last.starts_with("| 9 |"), "{md}");

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::coordinator::{EvalDiagnostics, Evaluation, Fingerprint, KEvaluator, KScorer};
-use crate::linalg::{self, Matrix};
+use crate::linalg::{self, KMeansAlgo, Matrix};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{
     literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar, rank_mask,
@@ -61,6 +61,11 @@ pub struct KMeansEvaluator {
     /// Concurrent restart tasks (§3.2 outer level): `0` = auto (as many
     /// as the pool budget allows), `1` = sequential.
     outer_tasks: usize,
+    /// Assignment algorithm for the native backend (DESIGN.md S23).
+    /// Defaults to [`KMeansAlgo::Auto`] — per-(n, d, k) selection among
+    /// Lloyd and the bound-accelerated variants; the HLO backend always
+    /// runs its fused Lloyd kernel and ignores this.
+    algo: KMeansAlgo,
 }
 
 impl KMeansEvaluator {
@@ -93,6 +98,7 @@ impl KMeansEvaluator {
             seed,
             pool: ThreadPool::serial(),
             outer_tasks: 0,
+            algo: KMeansAlgo::Auto,
         })
     }
 
@@ -111,6 +117,7 @@ impl KMeansEvaluator {
             seed,
             pool: ThreadPool::serial(),
             outer_tasks: 0,
+            algo: KMeansAlgo::Auto,
         }
     }
 
@@ -156,6 +163,15 @@ impl KMeansEvaluator {
         self
     }
 
+    /// Assignment algorithm for the native backend. `Auto` (the
+    /// default) resolves per (n, d, k) shape; `Lloyd` restores the
+    /// bitwise oracle path. The choice is part of the evaluator's
+    /// [`Fingerprint`], so cached records never leak across algorithms.
+    pub fn with_algo(mut self, algo: KMeansAlgo) -> Self {
+        self.algo = algo;
+        self
+    }
+
     pub fn backend(&self) -> Backend {
         self.backend
     }
@@ -166,13 +182,22 @@ impl KMeansEvaluator {
         let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | init as u64);
         match self.backend {
             Backend::Native => {
-                let fit =
-                    linalg::kmeans_with(&self.x, k, self.bursts * 15, &mut rng, pool);
+                let fit = linalg::kmeans_with_algo(
+                    &self.x,
+                    k,
+                    self.bursts * 15,
+                    &mut rng,
+                    pool,
+                    crate::util::simd::simd_policy(),
+                    self.algo,
+                );
                 RestartFit {
                     inertia: fit.inertia,
                     iterations: fit.iterations,
                     labels: fit.labels,
                     centroids: fit.centroids,
+                    distance_calcs: fit.distance_calcs,
+                    algo: Some(fit.algo.label()),
                 }
             }
             #[cfg(feature = "pjrt")]
@@ -213,6 +238,9 @@ impl KMeansEvaluator {
             iterations: self.bursts * 15,
             labels: labels.iter().map(|&l| l as usize).collect(),
             centroids: active,
+            // The fused HLO kernel does not count its distance work.
+            distance_calcs: 0,
+            algo: None,
         })
     }
 
@@ -309,6 +337,9 @@ impl KMeansEvaluator {
                 self.fit_once(ku, i, inner)
             });
         let inertias: Vec<f64> = fits.iter().map(|f| f.inertia).collect();
+        // Realized distance work across *all* restarts — the cost the
+        // bound-accelerated paths save against (reported per k).
+        let dist_total: u64 = fits.iter().map(|f| f.distance_calcs).sum();
         let best = fits
             .into_iter()
             .min_by(|a, b| a.inertia.partial_cmp(&b.inertia).unwrap())
@@ -329,6 +360,10 @@ impl KMeansEvaluator {
             EvalDiagnostics::from_samples(&inertias, best.iterations as u64);
         // The reported fit is the best restart, not the mean.
         diagnostics.fit_error = Some(best.inertia);
+        if let Some(a) = best.algo {
+            diagnostics.algo = Some(a.to_string());
+            diagnostics.distance_calcs = Some(dist_total);
+        }
         Evaluation {
             k,
             score,
@@ -350,6 +385,11 @@ struct RestartFit {
     iterations: usize,
     labels: Vec<usize>,
     centroids: Matrix,
+    /// Distance evaluations this restart performed (native backend;
+    /// the fused HLO kernel reports 0 and `algo: None`).
+    distance_calcs: u64,
+    /// Concrete assignment algorithm label (`Auto` already resolved).
+    algo: Option<&'static str>,
 }
 
 impl KScorer for KMeansEvaluator {
@@ -382,9 +422,10 @@ impl KEvaluator for KMeansEvaluator {
             // `dual` is part of the identity: records written without
             // secondary metrics must not warm-start a search that
             // expects them (MetricView would silently fall back to the
-            // primary).
+            // primary). `algo` likewise — a near-tie can make variants
+            // diverge, so cached records must not cross algorithms.
             params: format!(
-                "kmax={};n_init={};bursts={};scoring={};dual={};backend={}",
+                "kmax={};n_init={};bursts={};scoring={};dual={};backend={};algo={}",
                 self.k_max,
                 self.n_init,
                 self.bursts,
@@ -393,7 +434,8 @@ impl KEvaluator for KMeansEvaluator {
                     KMeansScoring::DaviesBouldin => "davies-bouldin",
                 },
                 self.dual_metrics,
-                self.backend.label()
+                self.backend.label(),
+                self.algo.label()
             ),
         }
     }

@@ -334,6 +334,32 @@ impl DotKernel {
             DotKernel::Avx2 => unsafe { dot_widened_avx2(a, b) },
         }
     }
+
+    /// The multi-row micro-tile: four f64-widened dots against one
+    /// shared right-hand side (4 `a` rows × 1 `b` row — the pairwise
+    /// point-block × centroid shape). Each output element is **bitwise
+    /// identical** to the corresponding single-row
+    /// [`DotKernel::dot_widened`] call on the same backend when the four
+    /// rows share `b`'s length (the only way the tile kernels call it):
+    /// every row keeps its own accumulator chain in the single-row fold
+    /// order, the rows merely share the widened loads of `b`. The win
+    /// is instruction-level — `b` is loaded and converted f32→f64 once
+    /// per step instead of four times (NUMERICS.md "micro-tile").
+    #[inline]
+    pub fn dot_widened_x4(self, a: [&[f32]; 4], b: &[f32]) -> [f64; 4] {
+        match self {
+            DotKernel::Scalar => [
+                dot_widened_scalar(a[0], b),
+                dot_widened_scalar(a[1], b),
+                dot_widened_scalar(a[2], b),
+                dot_widened_scalar(a[3], b),
+            ],
+            DotKernel::Lanes => dot_widened_lanes_x4(a, b),
+            #[cfg(target_arch = "x86_64")]
+            // Safety: AVX2 + FMA presence was verified by `resolve`.
+            DotKernel::Avx2 => unsafe { dot_widened_avx2_x4(a, b) },
+        }
+    }
 }
 
 /// Dot product of two f32 slices with **f64 accumulation** — the
@@ -403,6 +429,69 @@ unsafe fn dot_widened_avx2(a: &[f32], b: &[f32]) -> f64 {
         i += 1;
     }
     dot
+}
+
+/// Portable micro-tile: one [`F64x4`] accumulator per row, the `b`
+/// chunk widened once and shared. Per-row chain, lane fold, and scalar
+/// tail are exactly [`dot_widened_lanes`], so each element of the
+/// result is bitwise equal to the single-row call (for equal-length
+/// rows — the kernel truncates to the shortest slice like the
+/// single-row path does).
+fn dot_widened_lanes_x4(a: [&[f32]; 4], b: &[f32]) -> [f64; 4] {
+    let n = a.iter().map(|r| r.len()).fold(b.len(), usize::min);
+    let head = n - n % 4;
+    let mut acc = [F64x4::splat(0.0); 4];
+    for i in (0..head).step_by(4) {
+        let vb = F64x4::load_widened(&b[i..]);
+        for (ar, arow) in acc.iter_mut().zip(&a) {
+            *ar = F64x4::load_widened(&arow[i..]).mul_add(vb, *ar);
+        }
+    }
+    let mut out = [0.0f64; 4];
+    for ((o, ar), arow) in out.iter_mut().zip(acc).zip(&a) {
+        let mut dot = ar.hsum();
+        for (&x, &y) in arow[head..n].iter().zip(&b[head..n]) {
+            dot += x as f64 * y as f64;
+        }
+        *o = dot;
+    }
+    out
+}
+
+/// AVX2+FMA micro-tile: four f64 accumulator registers fed by one
+/// shared widened load of `b` per step. Per-row fold order matches
+/// [`dot_widened_avx2`] exactly (bitwise-neutral vs four single-row
+/// calls on equal-length rows).
+///
+/// Safety: caller must have verified AVX2 and FMA support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_widened_avx2_x4(a: [&[f32]; 4], b: &[f32]) -> [f64; 4] {
+    use std::arch::x86_64::*;
+    let n = a.iter().map(|r| r.len()).fold(b.len(), usize::min);
+    let mut acc = [_mm256_setzero_pd(); 4];
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let vb = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(i)));
+        for (ar, arow) in acc.iter_mut().zip(&a) {
+            let va = _mm256_cvtps_pd(_mm_loadu_ps(arow.as_ptr().add(i)));
+            *ar = _mm256_fmadd_pd(va, vb, *ar);
+        }
+        i += 4;
+    }
+    let mut out = [0.0f64; 4];
+    for ((o, ar), arow) in out.iter_mut().zip(acc).zip(&a) {
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), ar);
+        let mut dot = ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3];
+        let mut j = i;
+        while j < n {
+            dot += *arow.get_unchecked(j) as f64 * *b.get_unchecked(j) as f64;
+            j += 1;
+        }
+        *o = dot;
+    }
+    out
 }
 
 // ---------------------------------------------------------------------
@@ -720,6 +809,40 @@ mod tests {
                 dot_widened(&a, &b, p).to_bits(),
                 "policy={p:?}"
             );
+        }
+    }
+
+    #[test]
+    fn micro_tile_matches_single_row_dots_bitwise() {
+        // The 4-row micro-tile shares the widened loads of `b` but keeps
+        // one accumulator chain per row in the single-row fold order, so
+        // each element must equal the single-row dot bit for bit — on
+        // every backend, including the lane tails (d % 4 ≠ 0).
+        let mut rng = Pcg32::new(19);
+        for d in [1usize, 3, 4, 5, 7, 16, 33] {
+            let rows: Vec<Vec<f32>> = (0..4)
+                .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+                .collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let quad = [
+                rows[0].as_slice(),
+                rows[1].as_slice(),
+                rows[2].as_slice(),
+                rows[3].as_slice(),
+            ];
+            let mut kernels = vec![DotKernel::Scalar, DotKernel::Lanes];
+            kernels.push(DotKernel::resolve(SimdPolicy::ForceVector, d));
+            for kernel in kernels {
+                let got = kernel.dot_widened_x4(quad, &b);
+                for (r, row) in quad.iter().enumerate() {
+                    let want = kernel.dot_widened(row, &b);
+                    assert_eq!(
+                        want.to_bits(),
+                        got[r].to_bits(),
+                        "{kernel:?} d={d} row={r}: micro-tile must be bitwise-neutral"
+                    );
+                }
+            }
         }
     }
 

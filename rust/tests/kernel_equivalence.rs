@@ -14,9 +14,9 @@
 use binary_bleed::data::{gaussian_blobs, planted_nmf, planted_rescal};
 use binary_bleed::linalg::{
     davies_bouldin_oracle, davies_bouldin_with, davies_bouldin_with_policy, kmeans_with,
-    kmeans_with_policy, nmf_from_with, perturbation_silhouette_with,
+    kmeans_with_algo, kmeans_with_policy, nmf_from_with, perturbation_silhouette_with,
     perturbation_silhouette_with_policy, silhouette_oracle, silhouette_with,
-    silhouette_with_policy, sq_dist_matrix, sq_dist_matrix_policy, Matrix,
+    silhouette_with_policy, sq_dist_matrix, sq_dist_matrix_policy, KMeansAlgo, Matrix,
 };
 use binary_bleed::model::{KMeansEvaluator, KMeansScoring, NmfkEvaluator, RescalEvaluator};
 use binary_bleed::testing::{cases, check};
@@ -444,6 +444,89 @@ fn simd_grid_kmeans_bitwise_across_budgets_within_policy() {
             Ok(())
         },
     );
+}
+
+/// Bound-accelerated k-means grid (NUMERICS.md): every bound variant
+/// (and the per-shape Auto pick) must reproduce Lloyd's labels exactly
+/// and its inertia within tolerance on blob data across shapes ×
+/// thread budgets × SIMD policies — while doing strictly fewer distance
+/// computations than Lloyd whenever the shape is non-trivial (enough
+/// iterations for the bounds to amortize, n ≥ 4k). When Auto resolves
+/// to Lloyd the fit is the same code path, so the count must be equal.
+#[test]
+fn kmeans_algo_variants_match_lloyd_across_grid() {
+    const ALGOS: [KMeansAlgo; 4] = [
+        KMeansAlgo::Hamerly,
+        KMeansAlgo::Elkan,
+        KMeansAlgo::Yinyang,
+        KMeansAlgo::Auto,
+    ];
+    // Two policies keep the grid fast; the scalar-vs-vector tile
+    // agreement itself is covered by the pairwise grid above.
+    let grid_policies = [SimdPolicy::ForceScalar, SimdPolicy::Auto];
+    let mut rng = Pcg32::new(91);
+    for &n in &[50usize, 500] {
+        for &d in &[2usize, 3, 16, 64] {
+            for &k in &[2usize, 8, 32] {
+                let c = k.min(8);
+                let ds = gaussian_blobs(&mut rng, (n / c).max(1), c, d, 8.0, 0.6);
+                let rows = ds.x.rows;
+                let seed = rng.next_u64();
+                for &policy in &grid_policies {
+                    let mut lr = Pcg32::new(seed);
+                    let lloyd = kmeans_with_algo(
+                        &ds.x,
+                        k,
+                        12,
+                        &mut lr,
+                        &ThreadPool::serial(),
+                        policy,
+                        KMeansAlgo::Lloyd,
+                    );
+                    for &algo in &ALGOS {
+                        for &threads in &THREADS {
+                            let mut r = Pcg32::new(seed);
+                            let fit = kmeans_with_algo(
+                                &ds.x,
+                                k,
+                                12,
+                                &mut r,
+                                &ThreadPool::new(threads),
+                                policy,
+                                algo,
+                            );
+                            let tag = format!(
+                                "n={n} d={d} k={k} {policy:?} {algo:?} \
+                                 (resolved {:?}) {threads}t",
+                                fit.algo
+                            );
+                            assert_eq!(fit.labels, lloyd.labels, "labels: {tag}");
+                            assert!(
+                                (fit.inertia - lloyd.inertia).abs()
+                                    <= TOL * lloyd.inertia.abs().max(1.0),
+                                "inertia: {tag}: {} vs {}",
+                                fit.inertia,
+                                lloyd.inertia
+                            );
+                            if fit.algo == KMeansAlgo::Lloyd {
+                                assert_eq!(
+                                    fit.distance_calcs, lloyd.distance_calcs,
+                                    "lloyd-resolved count: {tag}"
+                                );
+                            } else if lloyd.iterations >= 4 && rows >= 4 * k {
+                                assert!(
+                                    fit.distance_calcs < lloyd.distance_calcs,
+                                    "no distance reduction: {tag}: {} vs {}",
+                                    fit.distance_calcs,
+                                    lloyd.distance_calcs
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[test]
