@@ -7,7 +7,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::util::{median, percentile};
+use crate::util::{mean, median, percentile};
 
 /// Statistics for one benchmark.
 #[derive(Debug, Clone)]
@@ -111,9 +111,7 @@ impl Bench {
             iters,
             median: Duration::from_secs_f64(median(&samples)),
             p95: Duration::from_secs_f64(percentile(&samples, 95.0)),
-            mean: Duration::from_secs_f64(
-                samples.iter().sum::<f64>() / samples.len() as f64,
-            ),
+            mean: Duration::from_secs_f64(mean(&samples)),
             total,
         };
         println!("{stats}");

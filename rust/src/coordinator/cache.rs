@@ -125,16 +125,19 @@ impl<'a> EvalCache<'a> {
                 added += 1;
             }
         }
+        // ORDER: Relaxed — independent traffic counter; commutative
+        // fetch_add, no data published through it (stats are advisory).
         self.preloaded.fetch_add(added, Ordering::Relaxed);
     }
 
-    /// Current traffic counters.
+    /// Current traffic counters. The counters are independent advisory
+    /// gauges: a snapshot promises no cross-counter consistency.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            shared_waits: self.shared_waits.load(Ordering::Relaxed),
-            preloaded: self.preloaded.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed), // ORDER: advisory counter
+            misses: self.misses.load(Ordering::Relaxed), // ORDER: advisory counter
+            shared_waits: self.shared_waits.load(Ordering::Relaxed), // ORDER: advisory counter
+            preloaded: self.preloaded.load(Ordering::Relaxed), // ORDER: advisory counter
         }
     }
 
@@ -145,6 +148,9 @@ impl<'a> EvalCache<'a> {
     }
 
     fn completed(slots: &HashMap<u32, Slot>) -> Vec<Evaluation> {
+        // bleedlint: allow(L5) -- hash order never escapes: the records
+        // are sorted by k below before any caller (journal, checkpoint,
+        // report) sees them.
         let mut out: Vec<Evaluation> = slots
             .values()
             .filter_map(|s| match s {
@@ -167,8 +173,11 @@ impl<'a> EvalCache<'a> {
                 Some(Slot::Done(rec)) => {
                     let rec = rec.clone();
                     if waited {
+                        // ORDER: Relaxed — advisory counter; the slot map's
+                        // mutex orders the record itself.
                         self.shared_waits.fetch_add(1, Ordering::Relaxed);
                     } else {
+                        // ORDER: Relaxed — advisory counter (see above).
                         self.hits.fetch_add(1, Ordering::Relaxed);
                     }
                     return rec;
@@ -187,6 +196,8 @@ impl<'a> EvalCache<'a> {
             }
         }
         drop(slots);
+        // ORDER: Relaxed — advisory counter; the claim was made under the
+        // mutex, which is the real synchronization point.
         self.misses.fetch_add(1, Ordering::Relaxed);
 
         // Compute outside the lock. If the evaluator panics, the guard

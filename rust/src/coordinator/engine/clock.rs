@@ -51,14 +51,18 @@ impl VirtualClock {
     /// models' unit). Saturates instead of wrapping on absurd inputs.
     pub fn set_minutes(&self, minutes: f64) {
         let nanos = duration_from_minutes(minutes).as_nanos();
+        // ORDER: Relaxed — the driver advances the clock between engine
+        // steps, never concurrently with readers that need a fresher
+        // value; `now()` only feeds timestamps, not synchronization.
         self.nanos
-            .store(u64::try_from(nanos).unwrap_or(u64::MAX), Ordering::SeqCst);
+            .store(u64::try_from(nanos).unwrap_or(u64::MAX), Ordering::Relaxed);
     }
 }
 
 impl Clock for VirtualClock {
     fn now(&self) -> Duration {
-        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+        // ORDER: Relaxed — pure value read; see `set_minutes`.
+        Duration::from_nanos(self.nanos.load(Ordering::Relaxed))
     }
 }
 

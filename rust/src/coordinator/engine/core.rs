@@ -49,7 +49,10 @@ fn eval_visit(
     at: Duration,
 ) -> Visit {
     Visit {
-        seq: seq.fetch_add(1, Ordering::SeqCst),
+        // ORDER: Relaxed — sequence numbers only need to be unique, which
+        // the RMW guarantees at any ordering; visits are merged into the
+        // log later under exclusive access, so no publication edge here.
+        seq: seq.fetch_add(1, Ordering::Relaxed),
         k,
         score,
         decision: if selected {
@@ -66,7 +69,9 @@ fn eval_visit(
 /// Build the visit record for one pruned skip.
 fn prune_visit(seq: &AtomicU64, k: u32, rank: usize, thread: usize, at: Duration) -> Visit {
     Visit {
-        seq: seq.fetch_add(1, Ordering::SeqCst),
+        // ORDER: Relaxed — same contract as `eval_visit`: uniqueness from
+        // the RMW alone; the log merge happens under exclusive access.
+        seq: seq.fetch_add(1, Ordering::Relaxed),
         k,
         score: f64::NAN,
         decision: Decision::PrunedSkip,
@@ -213,6 +218,12 @@ pub fn run_threaded_ev(
         }
     } else {
         let worker_ref = &run_worker;
+        // bleedlint: allow(L3) -- engine *workers* are the outer layer of
+        // the two-level budget (§3.2): one scoped thread per protocol
+        // worker, joined before this function returns. The pool owns
+        // intra-evaluation parallelism underneath; routing the protocol
+        // layer through it would deadlock workers against their own
+        // kernels' chunk claims.
         std::thread::scope(|scope| {
             for slot in &plan.workers {
                 scope.spawn(move || worker_ref(slot));

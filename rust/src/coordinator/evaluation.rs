@@ -66,7 +66,7 @@ impl EvalDiagnostics {
         if samples.is_empty() {
             return d;
         }
-        d.fit_error = Some(samples.iter().sum::<f64>() / samples.len() as f64);
+        d.fit_error = Some(crate::util::stats::mean(samples));
         d.restart_spread = Some(
             samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
                 - samples.iter().copied().fold(f64::INFINITY, f64::min),
@@ -398,12 +398,14 @@ impl<E: KEvaluator> CountingEvaluator<E> {
     }
 
     pub fn evaluations(&self) -> u64 {
+        // ORDER: Relaxed — advisory counter read for reports/tests.
         self.count.load(Ordering::Relaxed)
     }
 }
 
 impl<E: KEvaluator> KEvaluator for CountingEvaluator<E> {
     fn evaluate(&self, k: u32) -> Evaluation {
+        // ORDER: Relaxed — advisory counter; no data published through it.
         self.count.fetch_add(1, Ordering::Relaxed);
         self.inner.evaluate(k)
     }

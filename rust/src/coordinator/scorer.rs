@@ -49,12 +49,14 @@ impl<S: KScorer> CountingScorer<S> {
     }
 
     pub fn evaluations(&self) -> u64 {
+        // ORDER: Relaxed — advisory counter read for reports/tests.
         self.count.load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 
 impl<S: KScorer> KScorer for CountingScorer<S> {
     fn score(&self, k: u32) -> f64 {
+        // ORDER: Relaxed — advisory counter; no data published through it.
         self.count
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.inner.score(k)

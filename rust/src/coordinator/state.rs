@@ -102,10 +102,16 @@ impl SharedState {
     /// plus one `fetch_or` on the claim bitmap.
     pub fn admit(&self, k: u32, _policy: &SearchPolicy) -> Admission {
         let k64 = i64::from(k);
-        if k64 <= self.floor.load(Ordering::SeqCst) {
+        // ORDER: Relaxed — the bounds are monotone (floor only rises,
+        // ceil only falls), so a stale read can only under-prune: the
+        // worker wastes one evaluation it would have skipped, it never
+        // admits a k the final bounds allow to be wrong. No data is
+        // published through the bound values themselves.
+        if k64 <= self.floor.load(Ordering::Relaxed) {
             return Admission::PrunedBySelect;
         }
-        if k64 >= self.ceil.load(Ordering::SeqCst) {
+        // ORDER: Relaxed — same monotone-bound argument as floor above.
+        if k64 >= self.ceil.load(Ordering::Relaxed) {
             return Admission::PrunedByStop;
         }
         let Some(pos) = self.pos(k) else {
@@ -113,7 +119,11 @@ impl SharedState {
             return Admission::AlreadyClaimed;
         };
         let bit = 1u64 << (pos % 64);
-        let prev = self.claimed[pos / 64].fetch_or(bit, Ordering::SeqCst);
+        // ORDER: Relaxed — claim exclusivity needs only the RMW
+        // atomicity of fetch_or on this word (exactly one caller sees
+        // the bit clear); no other memory is published via the claim,
+        // so no acquire/release edge is required.
+        let prev = self.claimed[pos / 64].fetch_or(bit, Ordering::Relaxed);
         if prev & bit != 0 {
             Admission::AlreadyClaimed
         } else {
@@ -129,24 +139,33 @@ impl SharedState {
         let k64 = i64::from(k);
         let mut publication = Publication::default();
         if policy.selects(score) {
-            // Score slot is written before best_k is raised (release/
-            // acquire pairing via the SeqCst best_k update).
             if let Some(pos) = self.pos(k) {
-                self.scores[pos].store(score.to_bits(), Ordering::SeqCst);
+                // ORDER: Relaxed store — the slot write is sequenced before
+                // the Release fetch_max on best_k below, which is the sole
+                // publication edge: a reader that acquires best_k == k also
+                // observes this slot (see `best()`).
+                self.scores[pos].store(score.to_bits(), Ordering::Relaxed);
             }
-            let prev = self.best_k.fetch_max(k64, Ordering::SeqCst);
+            // ORDER: Release — pairs with the Acquire load in `best()`:
+            // observing best_k == k must also make k's score slot
+            // visible (the cross-variable best_k/scores invariant).
+            let prev = self.best_k.fetch_max(k64, Ordering::Release);
             if k64 > prev {
                 publication.new_best = Some(Candidate { k, score });
             }
             if policy.prunes_on_select() {
-                let prev = self.floor.fetch_max(k64, Ordering::SeqCst);
+                // ORDER: Relaxed — monotone bound movement; readers
+                // tolerate staleness (see `admit`), nothing is
+                // published through the bound value.
+                let prev = self.floor.fetch_max(k64, Ordering::Relaxed);
                 if k64 > prev {
                     publication.new_floor = Some(k);
                 }
             }
         }
         if policy.stops(score) {
-            let prev = self.ceil.fetch_min(k64, Ordering::SeqCst);
+            // ORDER: Relaxed — same monotone-bound argument as floor.
+            let prev = self.ceil.fetch_min(k64, Ordering::Relaxed);
             if k64 < prev {
                 publication.new_ceil = Some(k);
             }
@@ -173,10 +192,13 @@ impl SharedState {
     /// always merge.
     pub fn merge_remote(&self, floor: Option<u32>, ceil: Option<u32>, best: Option<Candidate>) {
         if let Some(f) = floor {
-            self.floor.fetch_max(i64::from(f), Ordering::SeqCst);
+            // ORDER: Relaxed — monotone bound merge, same argument as
+            // in `publish`: staleness only under-prunes.
+            self.floor.fetch_max(i64::from(f), Ordering::Relaxed);
         }
         if let Some(c) = ceil {
-            self.ceil.fetch_min(i64::from(c), Ordering::SeqCst);
+            // ORDER: Relaxed — monotone bound merge (see above).
+            self.ceil.fetch_min(i64::from(c), Ordering::Relaxed);
         }
         if let Some(b) = best {
             // A legitimate peer never selects on NaN/∞ (threshold
@@ -188,8 +210,14 @@ impl SharedState {
                 return;
             }
             if let Some(pos) = self.pos(b.k) {
-                self.scores[pos].store(b.score.to_bits(), Ordering::SeqCst);
-                self.best_k.fetch_max(i64::from(b.k), Ordering::SeqCst);
+                // ORDER: Relaxed store + Release fetch_max — identical
+                // publication protocol to `publish`: the slot write is
+                // sequenced before the Release edge on best_k, which
+                // pairs with the Acquire load in `best()`.
+                self.scores[pos].store(b.score.to_bits(), Ordering::Relaxed);
+                // ORDER: Release — pairs with the Acquire load in
+                // `best()`, exactly as in `publish`.
+                self.best_k.fetch_max(i64::from(b.k), Ordering::Release);
             } else {
                 // Deduplicate per k (peers re-broadcast their best every
                 // gossip round): last write wins, mirroring the
@@ -224,14 +252,19 @@ impl SharedState {
 
     /// The current candidate optimal.
     pub fn best(&self) -> Option<Candidate> {
-        let bk = self.best_k.load(Ordering::SeqCst);
+        // ORDER: Acquire — pairs with the Release fetch_max in
+        // `publish`/`merge_remote`; observing best_k == k guarantees
+        // k's score slot (written before that Release edge) is visible.
+        let bk = self.best_k.load(Ordering::Acquire);
         if bk == NO_BEST {
             return None;
         }
         let k = bk as u32;
+        // ORDER: Relaxed — the happens-before needed to read k's slot
+        // was already established by the Acquire load of best_k above.
         let score = self
             .pos(k)
-            .map(|p| f64::from_bits(self.scores[p].load(Ordering::SeqCst)))
+            .map(|p| f64::from_bits(self.scores[p].load(Ordering::Relaxed)))
             .unwrap_or(f64::NAN);
         Some(Candidate { k, score })
     }
@@ -246,7 +279,11 @@ impl SharedState {
             .iter()
             .enumerate()
             .filter(|(pos, _)| {
-                self.claimed[pos / 64].load(Ordering::SeqCst) & (1u64 << (pos % 64)) != 0
+                // ORDER: Relaxed — observability snapshot for the
+                // checkpoint layer; claims are set-once bits and resume
+                // logic re-derives liveness from completed records
+                // (DESIGN.md S22), so no synchronization is carried.
+                self.claimed[pos / 64].load(Ordering::Relaxed) & (1u64 << (pos % 64)) != 0
             })
             .map(|(_, &k)| k)
             .collect()
@@ -254,8 +291,10 @@ impl SharedState {
 
     /// The current (floor, ceil) prune bounds.
     pub fn bounds(&self) -> (Option<u32>, Option<u32>) {
-        let f = self.floor.load(Ordering::SeqCst);
-        let c = self.ceil.load(Ordering::SeqCst);
+        // ORDER: Relaxed — monotone-bound snapshot for broadcasting /
+        // checkpoints; a stale value is a valid earlier bound.
+        let f = self.floor.load(Ordering::Relaxed);
+        let c = self.ceil.load(Ordering::Relaxed); // ORDER: same as above.
         (
             (f != NO_FLOOR).then_some(f as u32),
             (c != NO_CEIL).then_some(c as u32),

@@ -65,6 +65,8 @@ pub fn paper_kmeans_workload(rng: &mut Pcg32, k_true: usize, n_per: usize, d: us
             point.push(lo + (hi - lo) * rng.next_f32());
         }
         for c in 0..k_true {
+            // bleedlint: allow(L4) -- data generation: nearest-center
+            // labeling of synthetic noise, never a reported metric.
             let dist: f64 = point
                 .iter()
                 .zip(ds.centers.row(c))

@@ -104,6 +104,15 @@
 //! // outcome.records: every Evaluation; outcome.stats: cache traffic.
 //! ```
 //!
+//! The unsafe/atomic/determinism surface of this crate is statically
+//! linted by the in-tree `bleedlint` pass (DESIGN.md §3.5): every
+//! `unsafe` carries a `SAFETY:` contract, every atomic ordering an
+//! `ORDER:` contract, thread spawns stay in [`util::pool`], float
+//! reductions stay in the fixed-fold kernels, and neither hash order
+//! nor wall-clock time can leak into engine schedules, checkpoints, or
+//! reports. `cargo run -p bleedlint` checks the tree; the tier-1 test
+//! `bleedlint_clean` gates every PR.
+//!
 //! See DESIGN.md for the system inventory (engine/Clock/Transport
 //! layering, feature flags), NUMERICS.md for the numeric contract, and
 //! EXPERIMENTS.md for the paper-vs-measured record.

@@ -616,8 +616,12 @@ fn kmeans_bounded(
                     }
                 }
             }
+            // ORDER: Relaxed — commutative u64 fold of per-chunk distance
+            // counts; the pool's join provides the happens-before edge.
             calcs_ref.fetch_add(local, Ordering::Relaxed);
         });
+        // ORDER: Relaxed — read-and-reset after the join above; all worker
+        // increments are already visible through the pool's barrier.
         calcs += shared_calcs.swap(0, Ordering::Relaxed);
         let mut new_inertia = 0.0;
         for (i, st) in state.chunks_exact(s).enumerate() {

@@ -79,7 +79,9 @@ static SPAWNED_WORKERS: AtomicUsize = AtomicUsize::new(0);
 
 /// Process-wide count of pool worker threads ever spawned.
 pub fn spawned_worker_count() -> usize {
-    SPAWNED_WORKERS.load(Ordering::SeqCst)
+    // ORDER: Relaxed — monotone introspection counter; tests assert
+    // bounded growth, no data is published through it.
+    SPAWNED_WORKERS.load(Ordering::Relaxed)
 }
 
 /// Lock a mutex ignoring poisoning: pool bookkeeping is just counters
@@ -91,7 +93,7 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 
 /// Lifetime-erased pointer to the submitting call's chunk closure.
 ///
-/// Safety: the submitter blocks until `pending == 0` before returning,
+/// SAFETY: the submitter blocks until `pending == 0` before returning,
 /// and a worker only dereferences after claiming a chunk index below
 /// `n_chunks` — which implies that chunk has not yet executed, hence
 /// `pending > 0`, hence the closure (on the submitter's stack) is still
@@ -99,6 +101,10 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// still-queued `Job` handles, but it is never dereferenced again.
 struct TaskRef(*const (dyn Fn(usize) + Sync));
 
+// SAFETY: the pointee is `Sync` (bound in the type) and its liveness is
+// guaranteed for every dereference by the submitter-blocks protocol
+// documented on `TaskRef` above; the raw pointer itself carries no
+// thread affinity.
 unsafe impl Send for TaskRef {}
 unsafe impl Sync for TaskRef {}
 
@@ -129,11 +135,16 @@ struct JobDone {
 impl Job {
     /// Reserve a participant slot (the limit includes the submitter).
     fn try_join(&self) -> bool {
+        // ORDER: Relaxed — `joined` is a pure admission counter; no
+        // memory is published through it (chunk effects synchronize via
+        // `pending`/`done`, not via joining).
         let mut seen = self.joined.load(Ordering::Relaxed);
         loop {
             if seen >= self.limit {
                 return false;
             }
+            // ORDER: Relaxed/Relaxed — slot exclusivity needs only the
+            // RMW atomicity of the CAS (see the counter note above).
             match self.joined.compare_exchange_weak(
                 seen,
                 seen + 1,
@@ -150,11 +161,14 @@ impl Job {
     /// the submitter and by every joined worker.
     fn run_chunks(&self) {
         loop {
+            // ORDER: Relaxed — chunk claiming needs only the RMW
+            // atomicity of fetch_add (each index handed out once); the
+            // chunk's memory effects synchronize via `pending` below.
             let ci = self.cursor.fetch_add(1, Ordering::Relaxed);
             if ci >= self.n_chunks {
                 return;
             }
-            // Safety: see `TaskRef` — ci < n_chunks implies the closure
+            // SAFETY: see `TaskRef` — ci < n_chunks implies the closure
             // is still live on the submitting stack.
             let task = unsafe { &*self.task.0 };
             if let Err(payload) = panic::catch_unwind(AssertUnwindSafe(|| task(ci))) {
@@ -163,9 +177,12 @@ impl Job {
                     d.panic = Some(payload);
                 }
             }
-            // AcqRel: the final decrement observes every other
-            // participant's chunk effects, and the submitter observes
-            // them through the `done` mutex in turn.
+            // ORDER: AcqRel — each decrement releases this chunk's
+            // memory effects into the release sequence on `pending` and
+            // acquires every earlier decrement, so the final
+            // participant (reads 1) observes all other participants'
+            // chunk effects before it flips `finished`; the submitter
+            // then observes them through the `done` mutex in turn.
             if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
                 let mut d = lock(&self.done);
                 d.finished = true;
@@ -199,6 +216,9 @@ impl RegistryInner {
             let mut i = 0;
             while i < q.jobs.len() {
                 let job = &q.jobs[i];
+                // ORDER: Relaxed — exhaustion probe; a stale low read
+                // only means a useless try_join/rescan, a stale high
+                // read is impossible (the cursor never decreases).
                 if job.cursor.load(Ordering::Relaxed) >= job.n_chunks {
                     q.jobs.remove(i);
                     continue;
@@ -248,7 +268,9 @@ impl Registry {
                     .expect("spawn pool worker")
             })
             .collect();
-        SPAWNED_WORKERS.fetch_add(workers, Ordering::SeqCst);
+        // ORDER: Relaxed — monotone introspection counter (see
+        // `spawned_worker_count`).
+        SPAWNED_WORKERS.fetch_add(workers, Ordering::Relaxed);
         Self {
             inner,
             workers,
@@ -260,7 +282,7 @@ impl Registry {
     /// first chunk panic (if any) on this thread.
     fn run_job(&self, n_chunks: usize, limit: usize, run: &(dyn Fn(usize) + Sync)) {
         debug_assert!(n_chunks > 0 && limit >= 1);
-        // Safety: lifetime erasure — `run` outlives the job because this
+        // SAFETY: lifetime erasure — `run` outlives the job because this
         // function does not return until every chunk has executed.
         let erased: &'static (dyn Fn(usize) + Sync) = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(run)
@@ -333,6 +355,11 @@ impl Drop for Registry {
 /// inside job chunks (`for_slices_mut`).
 struct SendPtr<T>(*mut T);
 
+// SAFETY: the wrapper only ever carries the base pointer of a slice the
+// caller holds `&mut` over for the whole job; chunks materialize
+// disjoint subslices from it (see `for_slices_mut`), so sharing the
+// base address across worker threads aliases nothing. `T: Send` keeps
+// the elements themselves movable across threads.
 unsafe impl<T: Send> Send for SendPtr<T> {}
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
@@ -498,7 +525,7 @@ impl ThreadPool {
         let run = |pi: usize| {
             let start = pi * piece_len;
             let end = ((pi + 1) * piece_len).min(len);
-            // Safety: pieces are disjoint ranges of the exclusively
+            // SAFETY: pieces are disjoint ranges of the exclusively
             // borrowed `data`, each materialized in exactly one chunk.
             let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
             f(pi, pi * per, piece);

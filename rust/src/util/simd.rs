@@ -103,6 +103,9 @@ static POLICY: AtomicU8 = AtomicU8::new(SimdPolicy::Auto as u8);
 /// do — not per call; flipping it mid-run would mix summation orders
 /// between evaluations.
 pub fn set_simd_policy(p: SimdPolicy) {
+    // ORDER: Relaxed — single-byte flag set once at startup before the
+    // kernels run; readers need the value, not a happens-before edge
+    // (no other memory is published through the policy).
     POLICY.store(p as u8, Ordering::Relaxed);
 }
 
@@ -110,6 +113,7 @@ pub fn set_simd_policy(p: SimdPolicy) {
 /// [`set_simd_policy`] changed it).
 #[inline]
 pub fn simd_policy() -> SimdPolicy {
+    // ORDER: Relaxed — see `set_simd_policy`: a pure value read.
     match POLICY.load(Ordering::Relaxed) {
         1 => SimdPolicy::ForceScalar,
         2 => SimdPolicy::ForceVector,
@@ -144,12 +148,16 @@ pub fn vector_backend() -> &'static str {
 fn avx2_available() -> bool {
     // 0 = unknown, 1 = absent, 2 = present.
     static STATE: AtomicU8 = AtomicU8::new(0);
+    // ORDER: Relaxed — racing initializers recompute the same
+    // CPU-feature answer (the probe is a pure function of the host), so
+    // a benign double-init is acceptable and no ordering is needed.
     match STATE.load(Ordering::Relaxed) {
         2 => true,
         1 => false,
         _ => {
             let yes =
                 is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+            // ORDER: Relaxed — pure value publication (see above).
             STATE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
             yes
         }
@@ -330,7 +338,7 @@ impl DotKernel {
             DotKernel::Scalar => dot_widened_scalar(a, b),
             DotKernel::Lanes => dot_widened_lanes(a, b),
             #[cfg(target_arch = "x86_64")]
-            // Safety: AVX2 + FMA presence was verified by `resolve`.
+            // SAFETY: AVX2 + FMA presence was verified by `resolve`.
             DotKernel::Avx2 => unsafe { dot_widened_avx2(a, b) },
         }
     }
@@ -356,7 +364,7 @@ impl DotKernel {
             ],
             DotKernel::Lanes => dot_widened_lanes_x4(a, b),
             #[cfg(target_arch = "x86_64")]
-            // Safety: AVX2 + FMA presence was verified by `resolve`.
+            // SAFETY: AVX2 + FMA presence was verified by `resolve`.
             DotKernel::Avx2 => unsafe { dot_widened_avx2_x4(a, b) },
         }
     }
@@ -407,7 +415,8 @@ fn dot_widened_lanes(a: &[f32], b: &[f32]) -> f64 {
 /// AVX2+FMA path: 4 f32 converted up per step, fused multiply-add into
 /// 4 f64 accumulators, same lane-fold order as the portable path.
 ///
-/// Safety: caller must have verified AVX2 and FMA support.
+/// # Safety
+/// Caller must have verified AVX2 and FMA support.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot_widened_avx2(a: &[f32], b: &[f32]) -> f64 {
@@ -463,7 +472,8 @@ fn dot_widened_lanes_x4(a: [&[f32]; 4], b: &[f32]) -> [f64; 4] {
 /// [`dot_widened_avx2`] exactly (bitwise-neutral vs four single-row
 /// calls on equal-length rows).
 ///
-/// Safety: caller must have verified AVX2 and FMA support.
+/// # Safety
+/// Caller must have verified AVX2 and FMA support.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot_widened_avx2_x4(a: [&[f32]; 4], b: &[f32]) -> [f64; 4] {
@@ -510,7 +520,7 @@ pub fn dot_f32_vector(a: &[f32], b: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
     {
         if avx2_available() {
-            // Safety: AVX2 + FMA presence was just verified.
+            // SAFETY: AVX2 + FMA presence was just verified.
             return unsafe { dot_f32_avx2(a, b) };
         }
     }
@@ -532,7 +542,8 @@ fn dot_f32_lanes(a: &[f32], b: &[f32]) -> f32 {
     dot
 }
 
-/// Safety: caller must have verified AVX2 and FMA support.
+/// # Safety
+/// Caller must have verified AVX2 and FMA support.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
@@ -575,7 +586,7 @@ pub fn saxpy(y: &mut [f32], a: f32, x: &[f32], policy: SimdPolicy) {
         #[cfg(target_arch = "x86_64")]
         {
             if avx2_available() {
-                // Safety: AVX2 presence was just verified.
+                // SAFETY: AVX2 presence was just verified.
                 unsafe { saxpy_avx2(y, a, x) };
                 return;
             }
@@ -603,8 +614,11 @@ fn saxpy_lanes(y: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
-/// Safety: caller must have verified AVX2 support. Unfused mul + add so
-/// the result is bitwise identical to the scalar loop.
+/// Unfused mul + add so the result is bitwise identical to the scalar
+/// loop.
+///
+/// # Safety
+/// Caller must have verified AVX2 support.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn saxpy_avx2(y: &mut [f32], a: f32, x: &[f32]) {
@@ -641,7 +655,7 @@ pub fn sqrt_in_place(xs: &mut [f64], policy: SimdPolicy) {
     #[cfg(target_arch = "x86_64")]
     {
         if use_vector(policy) && avx2_available() {
-            // Safety: AVX2 (⊇ AVX) presence was just verified.
+            // SAFETY: AVX2 (⊇ AVX) presence was just verified.
             unsafe { sqrt_avx2(xs) };
             return;
         }
@@ -654,7 +668,8 @@ pub fn sqrt_in_place(xs: &mut [f64], policy: SimdPolicy) {
     }
 }
 
-/// Safety: caller must have verified AVX2 support.
+/// # Safety
+/// Caller must have verified AVX2 support.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn sqrt_avx2(xs: &mut [f64]) {

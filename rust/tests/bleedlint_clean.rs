@@ -1,0 +1,51 @@
+//! Tier-1 gate: `rust/src/**` is `bleedlint`-clean.
+//!
+//! The analyzer source is included directly (it is a single
+//! self-contained std-only file) rather than pulled in as a dev
+//! dependency, so the root package keeps its zero-dependency default
+//! build and `cargo test -q` exercises the same code `cargo run -p
+//! bleedlint` ships. DESIGN.md §3.5 (S24) documents the lint catalog
+//! and the `// bleedlint: allow(Lx) -- reason` exception syntax.
+
+#[path = "../../tools/bleedlint/src/analyzer.rs"]
+mod analyzer;
+
+use std::path::PathBuf;
+
+fn src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust")
+        .join("src")
+}
+
+#[test]
+fn rust_src_is_lint_clean() {
+    let root = src_root();
+    let findings = analyzer::lint_tree(&root).expect("walk rust/src");
+    if !findings.is_empty() {
+        for f in &findings {
+            eprintln!("{f}");
+        }
+        panic!(
+            "bleedlint: {} finding(s) in rust/src — fix the site or add an audited \
+             `// bleedlint: allow(Lx) -- reason` (see DESIGN.md S24)",
+            findings.len()
+        );
+    }
+}
+
+#[test]
+fn tree_walk_sees_the_whole_crate() {
+    // Guard against the gate silently passing because the walk looked
+    // at the wrong directory: the crate has dozens of source files.
+    let n = analyzer::count_rs_files(&src_root()).expect("walk rust/src");
+    assert!(n >= 30, "expected >= 30 source files under rust/src, saw {n}");
+}
+
+#[test]
+fn catalog_is_stable() {
+    // The DESIGN.md S24 catalog references these IDs; renaming one is a
+    // doc-breaking change and should be deliberate.
+    let codes: Vec<&str> = analyzer::ALL_LINTS.iter().map(|l| l.code()).collect();
+    assert_eq!(codes, vec!["L0", "L1", "L2", "L3", "L4", "L5", "L6"]);
+}

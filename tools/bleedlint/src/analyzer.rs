@@ -1,0 +1,1304 @@
+//! The `bleedlint` analyzer: a small Rust lexer + line analyzer that
+//! enforces the repo-specific unsafe/atomic/determinism invariants
+//! catalogued in DESIGN.md §3.5 (S24). Zero dependencies; shared
+//! verbatim between the `bleedlint` tool crate and the root package's
+//! tier-1 `bleedlint_clean` integration test via `#[path]` inclusion.
+//!
+//! The analyzer is deliberately *lexical*: it scrubs comments and
+//! string/char literals with a real tokenizer state machine (nested
+//! block comments, raw strings, byte strings, lifetime-vs-char-literal
+//! disambiguation), tracks brace depth to skip `#[cfg(test)]` modules,
+//! and resolves "is there a contract comment for this site?" with a
+//! statement-aware upward scan — but it does not type-check. Where a
+//! lint needs type information it cannot have (L4's float folds, L5's
+//! hash-container receivers), the heuristic is documented in the lint
+//! catalog and pinned by fixture self-tests below; genuine false
+//! positives are silenced in place with an audited
+//! `// bleedlint: allow(Lx) -- reason` directive.
+
+use std::fmt;
+use std::path::Path;
+
+// ---------------------------------------------------------------------
+// Lint catalog
+// ---------------------------------------------------------------------
+
+/// The enforced lints. `L0` is the analyzer's own discipline check: a
+/// malformed `bleedlint:` directive (e.g. an `allow` without a reason)
+/// is itself a finding, so suppressions stay audited.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LintId {
+    /// Malformed `bleedlint:` directive.
+    L0,
+    /// `unsafe` without a `// SAFETY:` / `# Safety` contract.
+    L1,
+    /// Atomic `Ordering::*` without an `// ORDER:` contract
+    /// (`SeqCst` must additionally say why weaker orderings fail).
+    L2,
+    /// Thread spawning outside `util/pool.rs`.
+    L3,
+    /// Floating-point `.sum()`/`.fold(...)` reduction outside the
+    /// documented fixed-fold kernels.
+    L4,
+    /// `HashMap`/`HashSet` iteration on a determinism/replay path.
+    L5,
+    /// Wall-clock reads inside the replay-deterministic session path
+    /// outside `util/timer.rs`.
+    L6,
+}
+
+pub const ALL_LINTS: [LintId; 7] = [
+    LintId::L0,
+    LintId::L1,
+    LintId::L2,
+    LintId::L3,
+    LintId::L4,
+    LintId::L5,
+    LintId::L6,
+];
+
+impl LintId {
+    pub fn code(self) -> &'static str {
+        match self {
+            LintId::L0 => "L0",
+            LintId::L1 => "L1",
+            LintId::L2 => "L2",
+            LintId::L3 => "L3",
+            LintId::L4 => "L4",
+            LintId::L5 => "L5",
+            LintId::L6 => "L6",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LintId::L0 => "malformed-directive",
+            LintId::L1 => "unsafe-needs-safety-contract",
+            LintId::L2 => "atomic-needs-order-contract",
+            LintId::L3 => "thread-spawn-outside-pool",
+            LintId::L4 => "float-fold-outside-kernels",
+            LintId::L5 => "hash-iteration-on-deterministic-path",
+            LintId::L6 => "wall-clock-outside-timer",
+        }
+    }
+
+    /// One-line statement of the invariant, printed by `--list`.
+    pub fn contract(self) -> &'static str {
+        match self {
+            LintId::L0 => "`// bleedlint: allow(Lx) -- reason` is the only accepted directive form; the reason is mandatory",
+            LintId::L1 => "every `unsafe` block/fn/impl carries a `// SAFETY:` comment (or a `# Safety` doc section) stating the invariant that makes it sound",
+            LintId::L2 => "every atomic `Ordering::*` use carries an `// ORDER:` contract; `SeqCst` must name why a weaker ordering is insufficient; orderings stay fully qualified so the lint can see them",
+            LintId::L3 => "no `thread::spawn`/`thread::Builder`/`thread::scope` outside util/pool.rs — all parallelism goes through the pool's budgeted worker set",
+            LintId::L4 => "no floating-point `.sum()`/`.fold(float-init, ..)` reductions outside util/simd.rs, util/stats.rs and linalg/ (NUMERICS.md fixed-fold contract); min/max lattice folds are exempt (order-insensitive)",
+            LintId::L5 => "no HashMap/HashSet iteration feeding engine schedules, checkpoints or report output (coordinator/, metrics/, runtime/, cli/) — determinism paths iterate sorted or Vec-ordered",
+            LintId::L6 => "no `Instant::now`/`SystemTime` reads inside the replay-deterministic session path (coordinator/, model/, linalg/, simulate/) except via util/timer.rs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LintId> {
+        ALL_LINTS.iter().copied().find(|l| l.code() == s)
+    }
+}
+
+impl fmt::Display for LintId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} ({})", self.code(), self.name())
+    }
+}
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub lint: LintId,
+    /// Path relative to the scanned root, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {}\n  | {}",
+            self.path, self.line, self.lint, self.message, self.snippet
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lexer: scrub comments and literals, keep per-line code + comment text
+// ---------------------------------------------------------------------
+
+/// A source file after lexical scrubbing. `code[i]` holds line `i`'s
+/// characters outside comments and outside string/char literal bodies
+/// (delimiters are kept so tokens stay separated); `comment[i]` holds
+/// the line's comment text (line, block and doc comments alike).
+struct Scrubbed {
+    code: Vec<String>,
+    comment: Vec<String>,
+    /// Line participates in a `#[...]`/`#![...]` attribute.
+    attr: Vec<bool>,
+    /// Line is inside a `#[cfg(test)] mod` body (lints skip it).
+    test: Vec<bool>,
+    /// Lints explicitly allowed for this line via a directive.
+    allowed: Vec<Vec<LintId>>,
+    /// Malformed-directive findings discovered while parsing allows.
+    directive_findings: Vec<(usize, String, String)>,
+}
+
+#[derive(PartialEq)]
+enum Mode {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+    CharLit,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn scrub(text: &str) -> Scrubbed {
+    let b: Vec<char> = text.chars().collect();
+    let mut code_lines: Vec<String> = Vec::new();
+    let mut comment_lines: Vec<String> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            code_lines.push(std::mem::take(&mut code));
+            comment_lines.push(std::mem::take(&mut comment));
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = b.get(i + 1).copied();
+                let prev_ident = i > 0 && is_ident(b[i - 1]);
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if !prev_ident && (c == 'r' || c == 'b') {
+                    // Raw / byte string starts: r" r#" br" b" b' …
+                    let mut j = i + 1;
+                    let mut is_raw = c == 'r';
+                    if c == 'b' {
+                        match b.get(j) {
+                            Some('r') => {
+                                is_raw = true;
+                                j += 1;
+                            }
+                            Some('"') => {
+                                code.push('"');
+                                mode = Mode::Str;
+                                i = j + 1;
+                                continue;
+                            }
+                            Some('\'') => {
+                                code.push_str("''");
+                                mode = Mode::CharLit;
+                                i = j + 1;
+                                continue;
+                            }
+                            _ => {
+                                code.push(c);
+                                i += 1;
+                                continue;
+                            }
+                        }
+                    }
+                    if is_raw {
+                        let mut hashes = 0usize;
+                        while b.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if b.get(j) == Some(&'"') {
+                            code.push('"');
+                            mode = Mode::RawStr(hashes);
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                    code.push(c);
+                    i += 1;
+                } else if c == '\'' {
+                    // Lifetime or char literal. `'\…'` and `'x'` are
+                    // literals; `'ident` (no closing quote right after
+                    // one scalar) is a lifetime.
+                    if next == Some('\\') {
+                        code.push_str("''");
+                        mode = Mode::CharLit;
+                        i += 1;
+                    } else if next.is_some() && b.get(i + 2) == Some(&'\'') {
+                        code.push_str("''");
+                        i += 3;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let closed = (1..=hashes).all(|h| b.get(i + h) == Some(&'#'));
+                    if closed {
+                        code.push('"');
+                        mode = Mode::Code;
+                        i += 1 + hashes;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            Mode::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '\'' {
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() || text.ends_with('\n') {
+        code_lines.push(code);
+        comment_lines.push(comment);
+    }
+
+    let n = code_lines.len();
+    let attr = mark_attr_lines(&code_lines);
+    let test = mark_test_lines(&code_lines, &attr);
+    let (allowed, directive_findings) = parse_allows(&code_lines, &comment_lines);
+    debug_assert_eq!(comment_lines.len(), n);
+    Scrubbed {
+        code: code_lines,
+        comment: comment_lines,
+        attr,
+        test,
+        allowed,
+        directive_findings,
+    }
+}
+
+/// Mark lines participating in `#[...]` / `#![...]` attributes,
+/// including multi-line attributes (tracked by `[`/`]` balance).
+fn mark_attr_lines(code: &[String]) -> Vec<bool> {
+    let mut attr = vec![false; code.len()];
+    let mut balance = 0i64;
+    let mut open = false;
+    for (i, line) in code.iter().enumerate() {
+        let t = line.trim_start();
+        if !open && (t.starts_with("#[") || t.starts_with("#![")) {
+            open = true;
+            balance = 0;
+        }
+        if open {
+            attr[i] = true;
+            for c in line.chars() {
+                match c {
+                    '[' => balance += 1,
+                    ']' => balance -= 1,
+                    _ => {}
+                }
+            }
+            if balance <= 0 {
+                open = false;
+            }
+        }
+    }
+    attr
+}
+
+/// Mark lines inside `#[cfg(test)] mod … { … }` bodies using brace
+/// depth over scrubbed code. Lints skip test modules: their invariants
+/// are exercised dynamically (Miri/TSan run the same tests), and test
+/// scaffolding legitimately spawns threads and reads clocks.
+fn mark_test_lines(code: &[String], attr: &[bool]) -> Vec<bool> {
+    let mut test = vec![false; code.len()];
+    let mut depth = 0i64;
+    let mut pending_cfg_test = false;
+    let mut in_test_until_depth: Option<i64> = None;
+    for (i, line) in code.iter().enumerate() {
+        let start_depth = depth;
+        for c in line.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if let Some(d) = in_test_until_depth {
+            test[i] = true;
+            if depth <= d {
+                in_test_until_depth = None;
+            }
+            continue;
+        }
+        let t = line.trim();
+        if attr[i] && t.contains("cfg(test)") {
+            pending_cfg_test = true;
+            continue;
+        }
+        if pending_cfg_test {
+            if t.is_empty() || attr[i] {
+                continue;
+            }
+            if t.starts_with("mod ") || t.starts_with("pub mod ") {
+                pending_cfg_test = false;
+                if t.contains('{') && depth > start_depth {
+                    test[i] = true;
+                    in_test_until_depth = Some(start_depth);
+                } else if !t.ends_with(';') {
+                    // `mod x` with `{` on a later line.
+                    test[i] = true;
+                    in_test_until_depth = Some(start_depth);
+                }
+            } else {
+                // `#[cfg(test)]` gating a non-module item (use, fn):
+                // skip just that item's line.
+                test[i] = true;
+                pending_cfg_test = false;
+            }
+        }
+    }
+    test
+}
+
+/// Parse `bleedlint: allow(Lx[, Ly]) -- reason` directives out of the
+/// comment text. A directive on a line with code covers that line; on a
+/// comment-only line it covers the next line that has code.
+fn parse_allows(
+    code: &[String],
+    comment: &[String],
+) -> (Vec<Vec<LintId>>, Vec<(usize, String, String)>) {
+    let mut allowed: Vec<Vec<LintId>> = vec![Vec::new(); code.len()];
+    let mut malformed: Vec<(usize, String, String)> = Vec::new();
+    for i in 0..code.len() {
+        let c = &comment[i];
+        let Some(pos) = c.find("bleedlint:") else {
+            continue;
+        };
+        let rest = c[pos + "bleedlint:".len()..].trim_start();
+        let parsed = parse_allow_body(rest);
+        match parsed {
+            Ok(ids) => {
+                // Attach to this line if it has code, else to the next
+                // code-bearing line.
+                let mut target = i;
+                if code[i].trim().is_empty() {
+                    for (j, cj) in code.iter().enumerate().skip(i + 1) {
+                        if !cj.trim().is_empty() {
+                            target = j;
+                            break;
+                        }
+                    }
+                }
+                allowed[target].extend(ids);
+            }
+            Err(why) => {
+                malformed.push((i + 1, why, c.trim().to_string()));
+            }
+        }
+    }
+    (allowed, malformed)
+}
+
+/// Parse the body after `bleedlint:`. Accepted form:
+/// `allow(L4) -- reason text` / `allow(L2, L5) -- reason`.
+fn parse_allow_body(rest: &str) -> Result<Vec<LintId>, String> {
+    let Some(args) = rest.strip_prefix("allow(") else {
+        return Err("unknown directive (only `allow(Lx) -- reason` is supported)".into());
+    };
+    let Some(close) = args.find(')') else {
+        return Err("unclosed `allow(` argument list".into());
+    };
+    let mut ids = Vec::new();
+    for raw in args[..close].split(',') {
+        let id = raw.trim();
+        match LintId::parse(id) {
+            Some(l) => ids.push(l),
+            None => return Err(format!("unknown lint id `{id}` in allow(..)")),
+        }
+    }
+    if ids.is_empty() {
+        return Err("empty allow(..) list".into());
+    }
+    let tail = args[close + 1..].trim_start();
+    let reason = tail.strip_prefix("--").map(str::trim).unwrap_or("");
+    if reason.is_empty() {
+        return Err("allow(..) without a `-- reason` justification".into());
+    }
+    Ok(ids)
+}
+
+// ---------------------------------------------------------------------
+// Contract lookup (SAFETY / ORDER comments)
+// ---------------------------------------------------------------------
+
+impl Scrubbed {
+    /// First line (0-based) of the statement containing line `ix`:
+    /// walk up while the previous line carries code that does not end a
+    /// statement/block (`;`, `{`, `}`); attribute lines are transparent.
+    fn stmt_start(&self, ix: usize) -> usize {
+        let mut s = ix;
+        for _ in 0..40 {
+            if s == 0 {
+                break;
+            }
+            let prev = s - 1;
+            let pc = self.code[prev].trim();
+            if pc.is_empty() {
+                break;
+            }
+            if self.attr[prev] {
+                s = prev;
+                continue;
+            }
+            match pc.chars().last() {
+                Some(';') | Some('{') | Some('}') => break,
+                _ => s = prev,
+            }
+        }
+        s
+    }
+
+    /// Whether `lint` is allowed at `ix` — directly, or anywhere in the
+    /// enclosing multi-line statement (an `allow` above a statement
+    /// covers the whole chain, not just its first line).
+    fn allowed_at(&self, ix: usize, lint: LintId) -> bool {
+        let start = self.stmt_start(ix);
+        (start..=ix).any(|i| self.allowed[i].contains(&lint))
+    }
+
+    /// The statement containing line `ix` as a single string: trimmed
+    /// code lines concatenated without separators, so method chains
+    /// split across lines (`slots` / `.values()`) re-join for pattern
+    /// matching.
+    fn stmt_text(&self, ix: usize) -> String {
+        let start = self.stmt_start(ix);
+        let mut text = String::new();
+        for i in start..=ix {
+            text.push_str(self.code[i].trim());
+        }
+        text
+    }
+
+    /// All comment text that can justify a site at `ix` (0-based):
+    /// the line's own comment, trailing comments of earlier lines of
+    /// the same multi-line statement, and the contiguous comment /
+    /// attribute block immediately above the statement. For L1,
+    /// adjacent one-line `unsafe impl … {}` items are transparent so a
+    /// single SAFETY block can cover a Send/Sync pair.
+    fn contract_text(&self, ix: usize, through_unsafe_impl: bool) -> String {
+        let mut text = String::new();
+        text.push_str(&self.comment[ix]);
+        // Phase 1: walk to the start of the statement (bounded).
+        let mut s = ix;
+        for _ in 0..40 {
+            if s == 0 {
+                break;
+            }
+            let prev = s - 1;
+            let pc = self.code[prev].trim();
+            if pc.is_empty() {
+                break; // blank or comment-only line — statement starts here
+            }
+            if self.attr[prev] {
+                s = prev;
+                continue;
+            }
+            match pc.chars().last() {
+                Some(';') | Some('{') | Some('}') => break,
+                _ => {
+                    text.push_str(&self.comment[prev]);
+                    text.push(' ');
+                    s = prev;
+                }
+            }
+        }
+        // Phase 2: contiguous comment/attr block above the statement.
+        let mut p = s;
+        for _ in 0..80 {
+            if p == 0 {
+                break;
+            }
+            let prev = p - 1;
+            let pc = self.code[prev].trim();
+            let has_comment = !self.comment[prev].trim().is_empty();
+            let transparent_impl = through_unsafe_impl
+                && pc.starts_with("unsafe impl")
+                && pc.ends_with("{}");
+            if (pc.is_empty() && has_comment) || self.attr[prev] || transparent_impl {
+                text.push(' ');
+                text.push_str(&self.comment[prev]);
+                p = prev;
+            } else {
+                break;
+            }
+        }
+        text
+    }
+}
+
+// ---------------------------------------------------------------------
+// The lint passes
+// ---------------------------------------------------------------------
+
+/// Paths where L4 float reductions are legal: the documented fixed-fold
+/// kernels (NUMERICS.md) and the scalar stats helpers built on them.
+fn l4_allowed(path: &str) -> bool {
+    path.ends_with("util/simd.rs") || path.ends_with("util/stats.rs") || path.contains("linalg/")
+}
+
+/// Determinism/replay paths for L5 (schedules, checkpoints, reports).
+fn l5_restricted(path: &str) -> bool {
+    ["coordinator/", "metrics/", "runtime/", "cli/"]
+        .iter()
+        .any(|p| path.starts_with(p) || path.contains(&format!("src/{p}")))
+}
+
+/// Replay-deterministic session path for L6.
+fn l6_restricted(path: &str) -> bool {
+    ["coordinator/", "model/", "linalg/", "simulate/"]
+        .iter()
+        .any(|p| path.starts_with(p) || path.contains(&format!("src/{p}")))
+}
+
+const ATOMIC_ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Lint one already-read source file. `rel_path` uses `/` separators
+/// and is relative to the scanned root (e.g. `coordinator/state.rs`).
+pub fn lint_source(rel_path: &str, text: &str) -> Vec<Finding> {
+    let sc = scrub(text);
+    let raw_lines: Vec<&str> = text.lines().collect();
+    let mut out: Vec<Finding> = Vec::new();
+    let snippet = |ix: usize| raw_lines.get(ix).map_or(String::new(), |l| l.trim().to_string());
+    let mut push = |lint: LintId, ix: usize, message: String, snip: String| {
+        if !out.iter().any(|f: &Finding| f.lint == lint && f.line == ix + 1) {
+            out.push(Finding {
+                lint,
+                path: rel_path.to_string(),
+                line: ix + 1,
+                message,
+                snippet: snip,
+            });
+        }
+    };
+
+    // L0: malformed directives are findings wherever they appear.
+    for (line, why, snip) in &sc.directive_findings {
+        push(LintId::L0, line - 1, why.clone(), snip.clone());
+    }
+
+    // Names bound to hash containers in this file (L5 heuristic).
+    let hash_names = harvest_hash_names(&sc);
+
+    for ix in 0..sc.code.len() {
+        if sc.test[ix] {
+            continue;
+        }
+        let code = sc.code[ix].clone();
+        let allowed = |l: LintId| sc.allowed_at(ix, l);
+
+        // ---- L1: unsafe needs a SAFETY contract ----
+        if !allowed(LintId::L1) && has_word(&code, "unsafe") {
+            let contract = sc.contract_text(ix, true);
+            if !contract.contains("SAFETY:") && !contract.contains("# Safety") {
+                push(
+                    LintId::L1,
+                    ix,
+                    "`unsafe` without a `// SAFETY:` (or `# Safety` doc) contract stating the \
+                     invariant that makes it sound"
+                        .into(),
+                    snippet(ix),
+                );
+            }
+        }
+
+        // ---- L2: atomic orderings need an ORDER contract ----
+        if !allowed(LintId::L2) {
+            let trimmed = code.trim_start();
+            if trimmed.starts_with("use ") && code.contains("atomic::Ordering::") {
+                push(
+                    LintId::L2,
+                    ix,
+                    "importing `Ordering` variants hides them from the lint; keep atomic \
+                     orderings fully qualified (`Ordering::Relaxed`, …)"
+                        .into(),
+                    snippet(ix),
+                );
+            } else {
+                for ord in ATOMIC_ORDERINGS {
+                    if !code.contains(&format!("Ordering::{ord}")) {
+                        continue;
+                    }
+                    let contract = sc.contract_text(ix, false);
+                    if !contract.contains("ORDER:") {
+                        push(
+                            LintId::L2,
+                            ix,
+                            format!(
+                                "atomic `Ordering::{ord}` without an `// ORDER:` contract \
+                                 documenting the required happens-before (or why none is needed)"
+                            ),
+                            snippet(ix),
+                        );
+                    } else if ord == "SeqCst" && !contract.contains("SeqCst") {
+                        push(
+                            LintId::L2,
+                            ix,
+                            "`SeqCst` site: the `// ORDER:` contract must name why a weaker \
+                             ordering (Acquire/Release/Relaxed) is insufficient — mention \
+                             `SeqCst` explicitly"
+                                .into(),
+                            snippet(ix),
+                        );
+                    }
+                }
+            }
+        }
+
+        // ---- L3: thread spawning outside the pool ----
+        if !allowed(LintId::L3) && !rel_path.ends_with("util/pool.rs") {
+            for pat in ["thread::spawn", "thread::Builder", "thread::scope"] {
+                if code.contains(pat) {
+                    push(
+                        LintId::L3,
+                        ix,
+                        format!(
+                            "`{pat}` outside util/pool.rs: all parallelism must go through the \
+                             pool's budgeted worker set (§3.2 two-level budget)"
+                        ),
+                        snippet(ix),
+                    );
+                }
+            }
+        }
+
+        // ---- L4: float reductions outside the documented kernels ----
+        if !allowed(LintId::L4) && !l4_allowed(rel_path) {
+            if let Some(why) = float_fold_on_line(&sc, ix) {
+                push(
+                    LintId::L4,
+                    ix,
+                    format!(
+                        "{why} outside the documented fixed-fold kernels (util/simd.rs, \
+                         util/stats.rs, linalg/) — route through a documented fold or justify \
+                         with `// bleedlint: allow(L4) -- reason` (NUMERICS.md)"
+                    ),
+                    snippet(ix),
+                );
+            }
+        }
+
+        // ---- L5: hash iteration on determinism paths ----
+        if !allowed(LintId::L5) && l5_restricted(rel_path) {
+            if let Some(name) = hash_iteration_at(&sc, ix, &hash_names) {
+                push(
+                    LintId::L5,
+                    ix,
+                    format!(
+                        "iteration over hash container `{name}` on a determinism/replay path: \
+                         hash order is nondeterministic — iterate a sorted Vec/BTreeMap, sort \
+                         before use, or justify with `// bleedlint: allow(L5) -- reason`"
+                    ),
+                    snippet(ix),
+                );
+            }
+        }
+
+        // ---- L6: wall clock inside the session path ----
+        if !allowed(LintId::L6) && l6_restricted(rel_path) && !rel_path.ends_with("util/timer.rs") {
+            for pat in ["Instant::now", "SystemTime::now", "SystemTime::UNIX_EPOCH"] {
+                if code.contains(pat) {
+                    push(
+                        LintId::L6,
+                        ix,
+                        format!(
+                            "`{pat}` inside the replay-deterministic session path: read time \
+                             through `util::timer::Stopwatch` (or a `Clock` impl) so replays \
+                             and simulations stay deterministic"
+                        ),
+                        snippet(ix),
+                    );
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.lint).cmp(&(b.line, b.lint)));
+    out
+}
+
+/// Word-boundary containment check on scrubbed code.
+fn has_word(code: &str, word: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0 || !is_ident(code[..at].chars().next_back().unwrap());
+        let after = code[at + word.len()..].chars().next();
+        let after_ok = after.is_none_or(|c| !is_ident(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+/// L4 detector: returns a description if line `ix` performs a
+/// floating-point reduction. Rules (documented in the catalog):
+/// * `.sum::<f64>()` / `.sum::<f32>()` always count;
+/// * `.fold(` with a float initializer counts, except min/max lattice
+///   folds (`f64::min` / `f64::max` etc.), which are order-insensitive;
+/// * a bare `.sum()` counts when the enclosing statement mentions
+///   `f64`/`f32` (lexical float-context heuristic).
+fn float_fold_on_line(sc: &Scrubbed, ix: usize) -> Option<String> {
+    let code = &sc.code[ix];
+    if code.contains(".sum::<f64>") || code.contains(".sum::<f32>") {
+        return Some("floating-point `.sum::<fN>()` reduction".into());
+    }
+    if let Some(pos) = code.find(".fold(") {
+        let init = code[pos + ".fold(".len()..].trim_start();
+        let is_float_init = init.starts_with("f64::")
+            || init.starts_with("f32::")
+            || looks_like_float_literal(init);
+        let is_lattice = code.contains("::min") || code.contains("::max");
+        if is_float_init && !is_lattice {
+            return Some("floating-point `.fold(..)` reduction".into());
+        }
+    }
+    if code.contains(".sum()") {
+        // Collect the statement's code (this line plus up to 4
+        // continuation lines above) and look for float context.
+        let mut stmt = code.clone();
+        let mut s = ix;
+        for _ in 0..4 {
+            if s == 0 {
+                break;
+            }
+            let prev = s - 1;
+            let pc = sc.code[prev].trim();
+            if pc.is_empty() || matches!(pc.chars().last(), Some(';') | Some('{') | Some('}')) {
+                break;
+            }
+            stmt.push(' ');
+            stmt.push_str(pc);
+            s = prev;
+        }
+        if stmt.contains("f64") || stmt.contains("f32") {
+            return Some("floating-point `.sum()` reduction (float-typed statement)".into());
+        }
+    }
+    None
+}
+
+fn looks_like_float_literal(s: &str) -> bool {
+    let mut chars = s.chars().peekable();
+    let mut saw_digit = false;
+    while let Some(&c) = chars.peek() {
+        if c.is_ascii_digit() || c == '_' {
+            saw_digit = true;
+            chars.next();
+        } else {
+            break;
+        }
+    }
+    if !saw_digit {
+        return false;
+    }
+    match chars.next() {
+        Some('.') => true,
+        Some('f') => {
+            let rest: String = chars.collect();
+            rest.starts_with("32") || rest.starts_with("64")
+        }
+        _ => false,
+    }
+}
+
+/// Harvest identifiers bound to `HashMap`/`HashSet` in this file
+/// (let bindings, struct fields, fn params — lexical heuristic).
+fn harvest_hash_names(sc: &Scrubbed) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for code in &sc.code {
+        for token in ["HashMap", "HashSet"] {
+            let mut start = 0usize;
+            while let Some(pos) = code[start..].find(token) {
+                let at = start + pos;
+                start = at + token.len();
+                // Reject matches inside longer identifiers.
+                if at > 0 && is_ident(code[..at].chars().next_back().unwrap()) {
+                    continue;
+                }
+                // `::` path segments obscure the separator search:
+                // neutralize them, then find the nearest `:` or `=`
+                // to the left — the identifier before it is the binding.
+                let left = code[..at].replace("::", "  ");
+                let sep = left.rfind([':', '=']);
+                let Some(sep) = sep else { continue };
+                let ident: String = left[..sep]
+                    .trim_end()
+                    .chars()
+                    .rev()
+                    .take_while(|&c| is_ident(c))
+                    .collect::<String>()
+                    .chars()
+                    .rev()
+                    .collect();
+                if !ident.is_empty()
+                    && !ident.chars().next().unwrap().is_ascii_digit()
+                    && ident != "mut"
+                    && !names.contains(&ident)
+                {
+                    names.push(ident);
+                }
+            }
+        }
+    }
+    names
+}
+
+const HASH_ITER_METHODS: [&str; 7] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".drain(",
+];
+
+/// L5 detector, anchored at line `ix`: the line must carry an iteration
+/// method (or a `for … in` header), and the *statement* — chain lines
+/// re-joined, so `slots` / `.values()` splits don't hide the receiver —
+/// must apply it to one of the harvested hash-container `names`.
+fn hash_iteration_at(sc: &Scrubbed, ix: usize, names: &[String]) -> Option<String> {
+    let line = &sc.code[ix];
+    let line_has_method =
+        HASH_ITER_METHODS.iter().any(|m| line.contains(m)) || line.contains("for ");
+    if !line_has_method {
+        return None;
+    }
+    let stmt = sc.stmt_text(ix);
+    for name in names {
+        for method in HASH_ITER_METHODS {
+            let pat = format!("{name}{method}");
+            if line.contains(method) {
+                if let Some(pos) = stmt.find(&pat) {
+                    let before_ok =
+                        pos == 0 || !is_ident(stmt[..pos].chars().next_back().unwrap());
+                    if before_ok {
+                        return Some(name.clone());
+                    }
+                }
+            }
+        }
+        // `for x in &name` / `for x in name` loop headers (single-line).
+        if line.contains("for ") {
+            for pat in [format!("in &{name}"), format!("in {name}")] {
+                if let Some(pos) = line.find(&pat) {
+                    let after = line[pos + pat.len()..].chars().next();
+                    if after.is_none_or(|c| !is_ident(c) && c != '.' && c != '(') {
+                        return Some(name.clone());
+                    }
+                }
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Tree walking
+// ---------------------------------------------------------------------
+
+/// Lint every `.rs` file under `root` (sorted traversal, so output
+/// order is deterministic — the same discipline L5 enforces).
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let text = std::fs::read_to_string(f)
+            .map_err(|e| format!("read {}: {e}", f.display()))?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.extend(lint_source(&rel, &text));
+    }
+    Ok(out)
+}
+
+/// Number of `.rs` files a [`lint_tree`] call over `root` would scan.
+pub fn count_rs_files(root: &Path) -> Result<usize, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    Ok(files.len())
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<_> = entries
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fixture self-tests: every lint both ways (flagged / clean), plus the
+// lexer's tricky cases (literals, comments, attributes, test modules).
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(findings: &[Finding]) -> Vec<(&'static str, usize)> {
+        findings.iter().map(|f| (f.lint.code(), f.line)).collect()
+    }
+
+    // ---- L1 ----
+
+    #[test]
+    fn l1_flags_uncommented_unsafe() {
+        let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(codes(&lint_source("util/x.rs", bad)), vec![("L1", 2)]);
+    }
+
+    #[test]
+    fn l1_accepts_safety_comment_and_doc_section() {
+        let good = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+        let doc = "/// Reads a byte.\n///\n/// # Safety\n/// `p` must be valid.\npub unsafe fn f(p: *const u8) -> u8 {\n    *p\n}\n";
+        assert!(lint_source("util/x.rs", doc).is_empty());
+    }
+
+    #[test]
+    fn l1_safety_block_covers_send_sync_pair() {
+        let good = "struct W(*mut u8);\n\n// SAFETY: access is serialized by the owning mutex.\nunsafe impl Send for W {}\nunsafe impl Sync for W {}\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+        // Without the comment, both impls flag.
+        let bad = "struct W(*mut u8);\n\nunsafe impl Send for W {}\nunsafe impl Sync for W {}\n";
+        assert_eq!(codes(&lint_source("util/x.rs", bad)), vec![("L1", 3), ("L1", 4)]);
+    }
+
+    #[test]
+    fn l1_ignores_unsafe_in_strings_and_comments() {
+        let good = "// this mentions unsafe code in prose\nfn f() -> &'static str {\n    \"unsafe { }\"\n}\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+        let raw = "fn f() -> &'static str {\n    r#\"unsafe impl Send for X {}\"#\n}\n";
+        assert!(lint_source("util/x.rs", raw).is_empty());
+    }
+
+    #[test]
+    fn l1_survives_multiline_attribute() {
+        let good = "#[cfg(\n    target_arch = \"x86_64\"\n)]\n// SAFETY: caller verified AVX2.\nunsafe fn g() {}\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+        let bad = "#[cfg(\n    target_arch = \"x86_64\"\n)]\nunsafe fn g() {}\n";
+        assert_eq!(codes(&lint_source("util/x.rs", bad)), vec![("L1", 4)]);
+    }
+
+    #[test]
+    fn l1_trailing_comment_on_statement_counts() {
+        let good = "fn f(p: *const u8) -> u8 {\n    let v = // SAFETY: p valid per contract.\n        unsafe { *p };\n    v\n}\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+    }
+
+    // ---- L2 ----
+
+    #[test]
+    fn l2_flags_undocumented_ordering() {
+        let bad = "fn f(a: &std::sync::atomic::AtomicU64) -> u64 {\n    a.load(Ordering::Relaxed)\n}\n";
+        assert_eq!(codes(&lint_source("util/x.rs", bad)), vec![("L2", 2)]);
+    }
+
+    #[test]
+    fn l2_accepts_order_contract() {
+        let good = "fn f(a: &AtomicU64) -> u64 {\n    // ORDER: independent counter; no data published through it.\n    a.load(Ordering::Relaxed)\n}\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn l2_seqcst_must_name_why_weaker_fails() {
+        let vague = "fn f(a: &AtomicU64) -> u64 {\n    // ORDER: synchronizes stuff.\n    a.load(Ordering::SeqCst)\n}\n";
+        let f = lint_source("util/x.rs", vague);
+        assert_eq!(codes(&f), vec![("L2", 3)]);
+        assert!(f[0].message.contains("SeqCst"));
+        let good = "fn f(a: &AtomicU64) -> u64 {\n    // ORDER: SeqCst — needs a single total order across this flag\n    // and the queue cursor; Acquire/Release on each alone allows the\n    // IRIW interleaving that loses a wakeup.\n    a.load(Ordering::SeqCst)\n}\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn l2_flags_variant_imports() {
+        let bad = "use std::sync::atomic::Ordering::Relaxed;\n";
+        assert_eq!(codes(&lint_source("util/x.rs", bad)), vec![("L2", 1)]);
+    }
+
+    #[test]
+    fn l2_contract_covers_multiline_call() {
+        let good = "fn f(a: &AtomicU64) {\n    // ORDER: slot reservation needs only RMW atomicity.\n    let _ = a.compare_exchange_weak(\n        0,\n        1,\n        Ordering::Relaxed,\n        Ordering::Relaxed,\n    );\n}\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn l2_ignores_cmp_ordering() {
+        let good = "fn f(xs: &mut [f64]) {\n    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));\n}\n";
+        assert!(lint_source("util/x.rs", good).is_empty());
+    }
+
+    // ---- L3 ----
+
+    #[test]
+    fn l3_flags_spawn_outside_pool() {
+        let bad = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        assert_eq!(codes(&lint_source("coordinator/x.rs", bad)), vec![("L3", 2)]);
+        let builder = "fn f() {\n    std::thread::Builder::new().spawn(|| {}).unwrap();\n}\n";
+        assert_eq!(codes(&lint_source("model/x.rs", builder)), vec![("L3", 2)]);
+    }
+
+    #[test]
+    fn l3_allows_pool_and_tests() {
+        let pool = "fn f() {\n    std::thread::Builder::new().spawn(|| {}).unwrap();\n}\n";
+        assert!(lint_source("util/pool.rs", pool).is_empty());
+        let test = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        std::thread::scope(|s| { s.spawn(|| {}); });\n    }\n}\n";
+        assert!(lint_source("coordinator/x.rs", test).is_empty());
+    }
+
+    // ---- L4 ----
+
+    #[test]
+    fn l4_flags_float_sum_outside_kernels() {
+        let bad = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>()\n}\n";
+        assert_eq!(codes(&lint_source("coordinator/x.rs", bad)), vec![("L4", 2)]);
+        // Same code inside linalg/ or util/stats.rs is the documented home.
+        assert!(lint_source("linalg/scores.rs", bad).is_empty());
+        assert!(lint_source("util/stats.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn l4_flags_bare_sum_with_float_context() {
+        let bad = "fn f(p: &[f32]) -> f64 {\n    let d: f64 = p\n        .iter()\n        .map(|&x| x as f64)\n        .sum();\n    d\n}\n";
+        assert_eq!(codes(&lint_source("data/x.rs", bad)), vec![("L4", 5)]);
+        let int = "fn f(xs: &[u64]) -> u64 {\n    xs.iter().sum()\n}\n";
+        assert!(lint_source("data/x.rs", int).is_empty());
+    }
+
+    #[test]
+    fn l4_exempts_lattice_folds() {
+        let good = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().copied().fold(f64::INFINITY, f64::min)\n}\n";
+        assert!(lint_source("coordinator/x.rs", good).is_empty());
+        let bad = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().fold(0.0, |a, &b| a + b)\n}\n";
+        assert_eq!(codes(&lint_source("coordinator/x.rs", bad)), vec![("L4", 2)]);
+    }
+
+    // ---- L5 ----
+
+    #[test]
+    fn l5_flags_hash_iteration_on_restricted_paths() {
+        let bad = "use std::collections::HashMap;\nfn f(slots: &HashMap<u32, f64>) -> Vec<f64> {\n    slots.values().copied().collect()\n}\n";
+        assert_eq!(codes(&lint_source("coordinator/cache.rs", bad)), vec![("L5", 3)]);
+        // The same code outside the determinism paths is fine.
+        assert!(lint_source("data/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn l5_flags_for_loops_and_lets() {
+        let bad = "fn f() {\n    let mut seen = std::collections::HashMap::new();\n    seen.insert(1u32, 2u32);\n    for (k, v) in &seen {\n        let _ = (k, v);\n    }\n}\n";
+        assert_eq!(codes(&lint_source("metrics/x.rs", bad)), vec![("L5", 4)]);
+    }
+
+    #[test]
+    fn l5_sees_through_multiline_chains() {
+        // The receiver and the method live on different lines; the
+        // statement-joined view still connects `slots` to `.values()`.
+        let bad = "use std::collections::HashMap;\nfn f(slots: &HashMap<u32, f64>) -> Vec<f64> {\n    let out: Vec<f64> = slots\n        .values()\n        .copied()\n        .collect();\n    out\n}\n";
+        assert_eq!(codes(&lint_source("coordinator/cache.rs", bad)), vec![("L5", 4)]);
+        // An allow above the statement covers the whole chain, even
+        // though the finding anchors on a deeper line.
+        let ok = "use std::collections::HashMap;\nfn f(slots: &HashMap<u32, f64>) -> Vec<f64> {\n    // bleedlint: allow(L5) -- sorted before any caller sees it\n    let mut out: Vec<f64> = slots\n        .values()\n        .copied()\n        .collect();\n    out.sort_by(|a, b| a.total_cmp(b));\n    out\n}\n";
+        assert!(lint_source("coordinator/cache.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn l5_allows_lookups_and_vec_iteration() {
+        let good = "fn f(counts: &std::collections::HashMap<usize, usize>, ks: &[usize]) -> usize {\n    ks.iter().map(|k| counts[k]).sum()\n}\n";
+        assert!(lint_source("coordinator/x.rs", good).is_empty());
+    }
+
+    // ---- L6 ----
+
+    #[test]
+    fn l6_flags_wall_clock_in_session_path() {
+        let bad = "fn f() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+        assert_eq!(codes(&lint_source("coordinator/session.rs", bad)), vec![("L6", 2)]);
+        assert_eq!(codes(&lint_source("model/kmeans.rs", bad)), vec![("L6", 2)]);
+        // The CLI/bench layers report wall time by design.
+        assert!(lint_source("cli/mod.rs", bad).is_empty());
+        assert!(lint_source("bench/mod.rs", bad).is_empty());
+        // util/timer.rs is the sanctioned wrapper.
+        assert!(lint_source("util/timer.rs", bad).is_empty());
+    }
+
+    // ---- allow directives ----
+
+    #[test]
+    fn allow_suppresses_named_lint_only() {
+        let allowed = "fn f(xs: &[f64]) -> f64 {\n    // bleedlint: allow(L4) -- generator-side fold, fixed order by construction\n    xs.iter().sum::<f64>()\n}\n";
+        assert!(lint_source("data/x.rs", allowed).is_empty());
+        // The allow names L4; an L2 violation on the same line still fires.
+        let wrong = "fn f(a: &AtomicU64) -> u64 {\n    // bleedlint: allow(L4) -- not the right lint\n    a.load(Ordering::Relaxed)\n}\n";
+        assert_eq!(codes(&lint_source("util/x.rs", wrong)), vec![("L2", 3)]);
+    }
+
+    #[test]
+    fn allow_on_same_line_works() {
+        let s = "fn f(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>() // bleedlint: allow(L4) -- documented caller-side mean\n}\n";
+        assert!(lint_source("data/x.rs", s).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding() {
+        let s = "fn f(xs: &[f64]) -> f64 {\n    // bleedlint: allow(L4)\n    xs.iter().sum::<f64>()\n}\n";
+        let f = lint_source("data/x.rs", s);
+        // Both the malformed directive AND the undischarged L4 fire.
+        assert_eq!(codes(&f), vec![("L0", 2), ("L4", 3)]);
+    }
+
+    #[test]
+    fn allow_with_unknown_id_is_a_finding() {
+        let s = "// bleedlint: allow(L9) -- no such lint\nfn f() {}\n";
+        assert_eq!(codes(&lint_source("util/x.rs", s)), vec![("L0", 1)]);
+    }
+
+    #[test]
+    fn allow_list_covers_multiple_lints() {
+        let s = "fn f(m: &std::collections::HashMap<u32, f64>) -> f64 {\n    // bleedlint: allow(L4, L5) -- commutative sum over values for a gauge metric\n    m.values().sum::<f64>()\n}\n";
+        assert!(lint_source("metrics/x.rs", s).is_empty());
+    }
+
+    // ---- lexer edge cases ----
+
+    #[test]
+    fn lexer_handles_lifetimes_chars_and_raw_strings() {
+        let s = "fn f<'a>(x: &'a str) -> char {\n    let q = '\"';\n    let _r = r#\"Ordering::SeqCst unsafe\"#;\n    let _e = '\\'';\n    let _ = x;\n    q\n}\nfn g(a: &AtomicU64) -> u64 {\n    a.load(Ordering::Relaxed)\n}\n";
+        // The only finding is the genuinely-undocumented Relaxed in g():
+        // nothing in the string/char soup confused the lexer.
+        assert_eq!(codes(&lint_source("util/x.rs", s)), vec![("L2", 9)]);
+    }
+
+    #[test]
+    fn lexer_handles_nested_block_comments() {
+        let s = "/* outer /* inner unsafe Ordering::SeqCst */ still comment */\nfn f() {}\n";
+        assert!(lint_source("util/x.rs", s).is_empty());
+    }
+
+    #[test]
+    fn lexer_handles_byte_literals() {
+        let s = "fn f() -> (u8, &'static [u8]) {\n    (b'x', b\"unsafe\")\n}\n";
+        assert!(lint_source("util/x.rs", s).is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_skipped_entirely() {
+        let s = "fn prod(a: &AtomicU64) -> u64 {\n    // ORDER: independent counter.\n    a.load(Ordering::Relaxed)\n}\n\n#[cfg(test)]\nmod tests {\n    use super::*;\n\n    #[test]\n    fn t() {\n        let a = AtomicU64::new(0);\n        a.store(1, Ordering::SeqCst);\n        let _ = unsafe { *(&1u8 as *const u8) };\n    }\n}\n";
+        assert!(lint_source("coordinator/x.rs", s).is_empty());
+    }
+
+    #[test]
+    fn code_after_test_module_is_linted_again() {
+        let s = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {}\n}\n\nfn late(a: &AtomicU64) -> u64 {\n    a.load(Ordering::Relaxed)\n}\n";
+        assert_eq!(codes(&lint_source("util/x.rs", s)), vec![("L2", 8)]);
+    }
+
+    // ---- catalog sanity ----
+
+    #[test]
+    fn every_lint_has_code_name_contract() {
+        for l in ALL_LINTS {
+            assert!(!l.code().is_empty());
+            assert!(!l.name().is_empty());
+            assert!(!l.contract().is_empty());
+            assert_eq!(LintId::parse(l.code()), Some(l));
+        }
+        assert_eq!(LintId::parse("L99"), None);
+    }
+
+    #[test]
+    fn findings_render_with_location_and_snippet() {
+        let bad = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        let f = lint_source("coordinator/x.rs", bad);
+        let shown = f[0].to_string();
+        assert!(shown.contains("coordinator/x.rs:2"));
+        assert!(shown.contains("L3"));
+        assert!(shown.contains("thread::spawn"));
+    }
+}

@@ -1,0 +1,13 @@
+//! `bleedlint` — the repo's in-tree static analysis pass for the
+//! unsafe / atomic / determinism surface. See DESIGN.md §3.5 (S24) for
+//! the lint catalog and the `// bleedlint: allow(Lx) -- reason`
+//! exception syntax.
+//!
+//! The analyzer lives in [`analyzer`] as a single self-contained file
+//! so the root package's tier-1 `bleedlint_clean` test can include it
+//! with `#[path]` without a cross-crate dev-dependency (the repo's
+//! default build stays a single zero-dependency package).
+
+pub mod analyzer;
+
+pub use analyzer::{count_rs_files, lint_source, lint_tree, Finding, LintId, ALL_LINTS};

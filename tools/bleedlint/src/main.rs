@@ -1,0 +1,64 @@
+//! `bleedlint` CLI: lint the repo's Rust sources against the invariant
+//! catalog in DESIGN.md §3.5 (S24).
+//!
+//! Usage:
+//!   cargo run -p bleedlint              # lint rust/src/** (the default root)
+//!   cargo run -p bleedlint -- <dir>...  # lint explicit roots
+//!   cargo run -p bleedlint -- --list    # print the lint catalog
+//!
+//! Exit status: 0 when clean, 1 when any finding (or a root is
+//! unreadable), so CI and the tier-1 test can gate on it directly.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use bleedlint::{count_rs_files, lint_tree, ALL_LINTS};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--list") {
+        for l in ALL_LINTS {
+            println!("{:>2} {:<40} {}", l.code(), l.name(), l.contract());
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        // tools/bleedlint/ -> repo root -> rust/src
+        let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        vec![manifest.join("../..").join("rust").join("src")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+
+    let mut n_findings = 0usize;
+    let mut n_files = 0usize;
+    for root in &roots {
+        match count_rs_files(root) {
+            Ok(n) => n_files += n,
+            Err(e) => {
+                eprintln!("bleedlint: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+        match lint_tree(root) {
+            Ok(findings) => {
+                for f in &findings {
+                    println!("{f}");
+                }
+                n_findings += findings.len();
+            }
+            Err(e) => {
+                eprintln!("bleedlint: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if n_findings == 0 {
+        eprintln!("bleedlint: {n_files} files clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("bleedlint: {n_findings} finding(s) across {n_files} files");
+        ExitCode::FAILURE
+    }
+}
