@@ -85,12 +85,7 @@ fn main() {
     {
         let net = RankComm::network(4);
         bench.run("rank/broadcast+drain(4 ranks)", || {
-            net[0].broadcast(Broadcast {
-                from: 0,
-                floor: Some(7),
-                ceil: None,
-                best: None,
-            });
+            net[0].broadcast(Broadcast::bounds(0, Some(7), None, None));
             (net[1].drain().len(), net[2].drain().len(), net[3].drain().len())
         });
     }

@@ -111,7 +111,19 @@ SEARCH FLAGS:
                            land there at shutdown
   --resume                 warm-start from --checkpoint: already-fitted k
                            are served from their records with zero re-fits
-                           (missing file = fresh run)
+                           (missing file = fresh run; checkpointed failed
+                           k are quarantined, never retry-looped)
+  --max-attempts N         fit attempts per k before the k is quarantined
+                           and the search routes around it (default 1 =
+                           no containment: a failing fit crashes the run);
+                           retries back off deterministically, jittered
+                           from --seed
+  --retry-backoff-ms MS    nominal delay before the 2nd attempt, doubling
+                           per further attempt (default 10)
+  --lease-ttl T            claim-lease TTL in lease-clock ticks: a worker
+                           that dies mid-fit stops renewing, survivors
+                           re-admit its k after T ticks (default 0 =
+                           permanent claims)
   --k-true K               planted k for the synthetic dataset (default 15)
   --select X --stop X      thresholds (default 0.75 / 0.2)
   --seed S                 rng seed
@@ -245,6 +257,17 @@ fn cmd_search(args: &Args) -> Result<()> {
         .or_else(|| file_cfg.as_ref().and_then(|c| c.checkpoint.clone()));
     let resume =
         args.flag("resume").is_some() || file_cfg.as_ref().is_some_and(|c| c.resume);
+    // Fault tolerance (DESIGN.md §3.6): explicit flags win over config.
+    let max_attempts: u32 = args
+        .flag_parse("max-attempts")?
+        .unwrap_or_else(|| file_cfg.as_ref().map_or(1, |c| c.max_attempts))
+        .max(1);
+    let retry_backoff_ms: u64 = args
+        .flag_parse("retry-backoff-ms")?
+        .unwrap_or_else(|| file_cfg.as_ref().map_or(10, |c| c.retry_backoff_ms));
+    let lease_ttl: u64 = args
+        .flag_parse("lease-ttl")?
+        .unwrap_or_else(|| file_cfg.as_ref().map_or(0, |c| c.lease_ttl));
     ensure!(k_min >= 2 && k_min <= k_max, "need 2 <= k-min <= k-max");
     ensure!(
         !resume || checkpoint.is_some(),
@@ -291,6 +314,15 @@ fn cmd_search(args: &Args) -> Result<()> {
     if let Some(path) = &checkpoint {
         session = session.with_checkpoint(path);
     }
+    if max_attempts > 1 || lease_ttl > 0 {
+        let retry = (max_attempts > 1).then(|| crate::coordinator::RetryPolicy {
+            max_attempts,
+            base_backoff: std::time::Duration::from_millis(retry_backoff_ms),
+            max_backoff: std::time::Duration::from_millis(retry_backoff_ms.saturating_mul(25)),
+            seed,
+        });
+        session = session.with_faults(crate::coordinator::FaultPolicy { retry, lease_ttl });
+    }
     let outcome = if resume {
         session.resume(&ks)?
     } else {
@@ -308,6 +340,16 @@ fn cmd_search(args: &Args) -> Result<()> {
     );
     println!("visit order: {:?}", result.log.evaluated());
     println!("pruned     : {:?}", result.log.pruned());
+    if result.partial {
+        println!(
+            "failed     : {:?} (quarantined after {max_attempts} attempt(s); \
+             partial result over the surviving domain)",
+            result.failed_ks
+        );
+        for err in &outcome.failed {
+            println!("             k={}: {} [{} attempt(s)]", err.k, err.reason, err.attempts);
+        }
+    }
     // Rich evaluators yield secondary metrics / fit diagnostics worth a
     // table; scalar profiles don't.
     if outcome
@@ -534,6 +576,30 @@ mod tests {
         resumed.push("--resume".into());
         run(&resumed).unwrap();
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fault_flags_search_end_to_end() {
+        // A clean evaluator under full fault tolerance behaves exactly
+        // like the plain run (the containment layers are pass-through).
+        run(&[
+            "search".into(),
+            "--model".into(),
+            "profile".into(),
+            "--k-true".into(),
+            "17".into(),
+            "--max-attempts".into(),
+            "3".into(),
+            "--retry-backoff-ms".into(),
+            "1".into(),
+            "--lease-ttl".into(),
+            "8".into(),
+            "--ranks".into(),
+            "2".into(),
+            "--threads".into(),
+            "2".into(),
+        ])
+        .unwrap();
     }
 
     #[test]

@@ -72,6 +72,19 @@ pub struct ExperimentConfig {
     /// Warm-start from the checkpoint (skip already-fitted k). TOML
     /// `session.resume`, CLI `--resume`.
     pub resume: bool,
+    /// Evaluator-failure containment (DESIGN.md §3.6): total fit
+    /// attempts per k before quarantine. `1` disables retries (a second
+    /// attempt never happens); paired with `retry_backoff_ms` for the
+    /// delay schedule. TOML `fault.max_attempts`, CLI `--max-attempts`.
+    pub max_attempts: u32,
+    /// Nominal backoff before the second attempt, doubling per further
+    /// attempt (deterministically jittered from the run seed). TOML
+    /// `fault.backoff_ms`, CLI `--retry-backoff-ms`.
+    pub retry_backoff_ms: u64,
+    /// Claim-lease TTL in lease-clock ticks; `0` = permanent claims (no
+    /// worker-death recovery). TOML `fault.lease_ttl`, CLI
+    /// `--lease-ttl`.
+    pub lease_ttl: u64,
 }
 
 impl ExperimentConfig {
@@ -100,6 +113,9 @@ impl ExperimentConfig {
             preset: "quick".into(),
             checkpoint: None,
             resume: false,
+            max_attempts: 1,
+            retry_backoff_ms: 10,
+            lease_ttl: 0,
         }
     }
 
@@ -159,6 +175,26 @@ impl ExperimentConfig {
     /// kernel of the run dispatches consistently.
     pub fn install_simd(&self) {
         crate::util::simd::set_simd_policy(self.simd);
+    }
+
+    /// Fault policy for search sessions (DESIGN.md §3.6): retries are
+    /// on when `max_attempts > 1`, claim leases when `lease_ttl > 0`.
+    /// The retry jitter is seeded from the run seed, so a re-run
+    /// reproduces the same backoff schedule.
+    pub fn faults(&self) -> crate::coordinator::FaultPolicy {
+        use crate::coordinator::{FaultPolicy, RetryPolicy};
+        let retry = (self.max_attempts > 1).then(|| RetryPolicy {
+            max_attempts: self.max_attempts,
+            base_backoff: std::time::Duration::from_millis(self.retry_backoff_ms),
+            max_backoff: std::time::Duration::from_millis(
+                self.retry_backoff_ms.saturating_mul(25),
+            ),
+            seed: self.seed,
+        });
+        FaultPolicy {
+            retry,
+            lease_ttl: self.lease_ttl,
+        }
     }
 
     /// Parallel config for the scheduler.
@@ -271,6 +307,16 @@ impl ExperimentConfig {
         if let Some(v) = t.get_path("session.resume").and_then(TomlValue::as_bool) {
             self.resume = v;
         }
+        if let Some(v) = t.get_path("fault.max_attempts").and_then(TomlValue::as_int) {
+            // Clamp: zero/negative would mean "never even try once".
+            self.max_attempts = v.max(1) as u32;
+        }
+        if let Some(v) = t.get_path("fault.backoff_ms").and_then(TomlValue::as_int) {
+            self.retry_backoff_ms = v.max(0) as u64;
+        }
+        if let Some(v) = t.get_path("fault.lease_ttl").and_then(TomlValue::as_int) {
+            self.lease_ttl = v.max(0) as u64;
+        }
         ensure!(self.k_min >= 1 && self.k_min <= self.k_max, "bad k range");
         Ok(())
     }
@@ -373,6 +419,30 @@ stride = 2
         cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
         assert_eq!(cfg.checkpoint.as_deref(), Some("runs/search.ckpt.json"));
         assert!(cfg.resume);
+    }
+
+    #[test]
+    fn fault_toml_overrides_apply() {
+        let mut cfg = ExperimentConfig::quick();
+        // Defaults: no containment, no leases.
+        assert!(!cfg.faults().is_enabled());
+        let doc = "[fault]\nmax_attempts = 4\nbackoff_ms = 5\nlease_ttl = 16\n";
+        cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
+        assert_eq!(cfg.max_attempts, 4);
+        assert_eq!(cfg.retry_backoff_ms, 5);
+        assert_eq!(cfg.lease_ttl, 16);
+        let faults = cfg.faults();
+        assert!(faults.is_enabled());
+        assert_eq!(faults.lease_ttl, 16);
+        let retry = faults.retry.unwrap();
+        assert_eq!(retry.max_attempts, 4);
+        assert_eq!(retry.seed, cfg.seed, "jitter is seeded from the run seed");
+        // Clamps: attempts never below one fit.
+        let mut cfg = ExperimentConfig::quick();
+        cfg.apply_toml(&parse_toml("[fault]\nmax_attempts = 0\n").unwrap())
+            .unwrap();
+        assert_eq!(cfg.max_attempts, 1);
+        assert!(cfg.faults().retry.is_none(), "one attempt = no retry layer");
     }
 
     #[test]

@@ -30,6 +30,11 @@ pub struct SearchResult {
     pub total_k: usize,
     /// Wall-clock duration of the whole search.
     pub elapsed: Duration,
+    /// `true` when any k was quarantined: the result covers only the
+    /// surviving domain (graceful degradation, not a crash).
+    pub partial: bool,
+    /// ks quarantined after exhausting their retry budget, ascending.
+    pub failed_ks: Vec<u32>,
 }
 
 impl SearchResult {

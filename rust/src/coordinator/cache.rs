@@ -23,7 +23,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-use super::evaluation::{Evaluation, Fingerprint, KEvaluator};
+use super::evaluation::{EvalError, EvalOutcome, Evaluation, Fingerprint, KEvaluator};
 
 /// Cache traffic counters. `hit_rate()` is what the reports print.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -165,7 +165,23 @@ impl<'a> EvalCache<'a> {
     /// The get-or-compute-or-wait protocol. Exactly one caller per k
     /// reaches the wrapped evaluator; racing callers block on the
     /// condvar and share the winner's record.
+    ///
+    /// Panics propagate (the in-flight claim is vacated on the way
+    /// out); an evaluator `Err` becomes a panic here — fallible callers
+    /// use [`EvalCache::get_or_try_compute`].
     pub fn get_or_compute(&self, k: u32) -> Arc<Evaluation> {
+        self.get_or_try_compute(k)
+            .unwrap_or_else(|err| panic!("infallible evaluation failed: {err}"))
+    }
+
+    /// Fallible form of [`EvalCache::get_or_compute`]. A failed fit
+    /// (panic unwinds; `Err` returns) **vacates** the in-flight claim
+    /// and wakes every blocked sharer, so one of them retakes the claim
+    /// and retries the fit — sharers never deadlock on a vacated claim
+    /// and never observe a phantom record. Failures are *not* cached:
+    /// retry/quarantine policy belongs to the
+    /// [`FailSafeEvaluator`](super::fault::FailSafeEvaluator) above.
+    pub fn get_or_try_compute(&self, k: u32) -> Result<Arc<Evaluation>, EvalError> {
         let mut slots = self.slots.lock().unwrap();
         let mut waited = false;
         loop {
@@ -180,13 +196,13 @@ impl<'a> EvalCache<'a> {
                         // ORDER: Relaxed — advisory counter (see above).
                         self.hits.fetch_add(1, Ordering::Relaxed);
                     }
-                    return rec;
+                    return Ok(rec);
                 }
                 Some(Slot::InFlight) => {
                     waited = true;
                     slots = self.done.wait(slots).unwrap();
                     // Loop: the slot is now Done — or vacated, if the
-                    // computing worker panicked; then this waiter takes
+                    // computing worker failed; then this waiter takes
                     // over the claim below.
                 }
                 None => {
@@ -200,16 +216,16 @@ impl<'a> EvalCache<'a> {
         // mutex, which is the real synchronization point.
         self.misses.fetch_add(1, Ordering::Relaxed);
 
-        // Compute outside the lock. If the evaluator panics, the guard
-        // vacates the in-flight claim and wakes the waiters so one of
-        // them can retry (or observe the same panic) instead of
-        // deadlocking.
+        // Compute outside the lock. If the evaluator panics or errors,
+        // the guard vacates the in-flight claim and wakes the waiters
+        // so one of them can retry (or observe the same failure)
+        // instead of deadlocking.
         let mut guard = ClaimGuard {
             cache: self,
             k,
             armed: true,
         };
-        let rec = Arc::new(self.inner.evaluate(k));
+        let rec = Arc::new(self.inner.try_evaluate(k)?);
         guard.armed = false;
         drop(guard);
 
@@ -222,7 +238,7 @@ impl<'a> EvalCache<'a> {
         if let (Some(journal), Some(records)) = (self.journal.as_ref(), snapshot) {
             journal(&records);
         }
-        rec
+        Ok(rec)
     }
 }
 
@@ -248,6 +264,10 @@ impl Drop for ClaimGuard<'_, '_> {
 impl KEvaluator for EvalCache<'_> {
     fn evaluate(&self, k: u32) -> Evaluation {
         (*self.get_or_compute(k)).clone()
+    }
+
+    fn try_evaluate(&self, k: u32) -> EvalOutcome {
+        self.get_or_try_compute(k).map(|rec| (*rec).clone())
     }
 
     fn name(&self) -> &str {
@@ -339,6 +359,92 @@ mod tests {
         assert!(died.is_err());
         // The claim was vacated: a retry computes instead of deadlocking.
         assert_eq!(cache.get_or_compute(7).score, 1.0);
+    }
+
+    #[test]
+    fn racing_workers_retake_a_vacated_claim() {
+        use std::sync::atomic::AtomicU64;
+        // The first `FAILS` fits for any k panic; later fits succeed.
+        // Under 8 racing workers the failed claims must be vacated and
+        // retaken until one fit lands — no deadlocked sharer, no
+        // phantom record, and exactly FAILS+1 fits in total.
+        const FAILS: u64 = 3;
+        struct Flaky {
+            calls: AtomicU64,
+        }
+        impl KEvaluator for Flaky {
+            fn evaluate(&self, k: u32) -> Evaluation {
+                if self.calls.fetch_add(1, Ordering::Relaxed) < FAILS {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    panic!("fit {k} dies");
+                }
+                Evaluation::scalar(k, 42.0)
+            }
+        }
+        let flaky = Flaky {
+            calls: AtomicU64::new(0),
+        };
+        let cache = EvalCache::new(&flaky);
+        let successes = AtomicU64::new(0);
+        let panics = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        cache.get_or_compute(7)
+                    })) {
+                        Ok(rec) => {
+                            assert_eq!(rec.score, 42.0, "no phantom record");
+                            successes.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            panics.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                });
+            }
+        });
+        // Panics surface only in the workers that held the claim; every
+        // other worker shares the eventual good fit.
+        assert_eq!(panics.load(Ordering::Relaxed), FAILS);
+        assert_eq!(successes.load(Ordering::Relaxed), 8 - FAILS);
+        assert_eq!(flaky.calls.load(Ordering::Relaxed), FAILS + 1);
+        // The record is cached: one more request is a pure hit.
+        assert_eq!(cache.get_or_compute(7).score, 42.0);
+        assert_eq!(cache.stats().misses, FAILS + 1);
+    }
+
+    #[test]
+    fn failed_fits_vacate_without_caching_the_error() {
+        use std::sync::atomic::AtomicU64;
+        struct ErrsOnce {
+            calls: AtomicU64,
+        }
+        impl KEvaluator for ErrsOnce {
+            fn evaluate(&self, _k: u32) -> Evaluation {
+                unreachable!("try_evaluate only")
+            }
+            fn try_evaluate(&self, k: u32) -> EvalOutcome {
+                if self.calls.fetch_add(1, Ordering::Relaxed) == 0 {
+                    return Err(EvalError {
+                        k,
+                        attempts: 1,
+                        reason: "transient".into(),
+                    });
+                }
+                Ok(Evaluation::scalar(k, 5.0))
+            }
+        }
+        let inner = ErrsOnce {
+            calls: AtomicU64::new(0),
+        };
+        let cache = EvalCache::new(&inner);
+        let err = cache.get_or_try_compute(3).expect_err("first fit errors");
+        assert_eq!(err.reason, "transient");
+        // The failure was not cached and the claim was vacated: the
+        // retry reaches the evaluator and succeeds.
+        assert_eq!(cache.get_or_try_compute(3).unwrap().score, 5.0);
+        assert_eq!(cache.records().len(), 1);
     }
 
     #[test]

@@ -32,11 +32,11 @@ use super::super::evaluation::{KEvaluator, ScorerEvaluator};
 use super::super::policy::SearchPolicy;
 use super::super::rank::Broadcast;
 use super::super::scorer::KScorer;
-use super::super::state::{Admission, Candidate, SharedState};
+use super::super::state::{Admission, Candidate, ClaimEvent, SharedState};
 use super::super::visit_log::{Decision, Visit, VisitLog};
 use super::clock::{duration_from_minutes, Clock, VirtualClock, WallClock};
 use super::transport::{SimNet, Transport};
-use super::work::{WorkPlan, WorkerSlot};
+use super::work::{bleed_order, WorkPlan, WorkerSlot};
 
 /// Build the visit record for one evaluation.
 fn eval_visit(
@@ -81,6 +81,102 @@ fn prune_visit(seq: &AtomicU64, k: u32, rank: usize, thread: usize, at: Duration
     }
 }
 
+/// Build the visit record for one quarantined (permanently failed) k.
+fn failed_visit(seq: &AtomicU64, k: u32, rank: usize, thread: usize, at: Duration) -> Visit {
+    Visit {
+        // ORDER: Relaxed — same contract as `eval_visit`.
+        seq: seq.fetch_add(1, Ordering::Relaxed),
+        k,
+        score: f64::NAN,
+        decision: Decision::Failed,
+        rank,
+        thread,
+        at,
+    }
+}
+
+/// ReceiveKCheck: merge every pending remote bound movement and claim
+/// event into the rank-local state.
+fn drain_and_merge(rank: usize, state: &SharedState, transport: &dyn Transport, now: Duration) {
+    for msg in transport.drain(rank, now) {
+        state.merge_remote(msg.floor, msg.ceil, msg.best);
+        if let Some(ev) = msg.claim {
+            state.merge_claim_event(ev);
+        }
+    }
+}
+
+/// The admitted half of the protocol step: evaluate, publish, settle
+/// the lease, broadcast, build the visit. Shared by [`protocol_step`]
+/// and the recovery sweep so stolen work follows the identical path.
+///
+/// The lease-settle transition gates the visit record: lease theft can
+/// produce duplicate evaluations of one k (by design — duplicates waste
+/// work, never correctness), but exactly one of them logs the k. An
+/// `Err` outcome quarantines the k; the quarantine transition gates the
+/// single `Failed` visit the same way.
+#[allow(clippy::too_many_arguments)]
+fn evaluate_admitted(
+    rank: usize,
+    thread: usize,
+    k: u32,
+    state: &SharedState,
+    evaluator: &dyn KEvaluator,
+    policy: &SearchPolicy,
+    transport: &dyn Transport,
+    clock: &dyn Clock,
+    seq: &AtomicU64,
+) -> Option<Visit> {
+    if state.leases_enabled() {
+        // Advertise the lease so peer sweeps leave in-progress work
+        // alone. Advisory: a lost message costs duplicate work only.
+        transport.broadcast(
+            rank,
+            clock.now(),
+            Broadcast::claim_event(rank, ClaimEvent::Leased(k)),
+        );
+    }
+    match evaluator.try_evaluate(k) {
+        Ok(rec) => {
+            // The full record lives on in whatever evaluator layer
+            // produced it (an EvalCache retains it for the session);
+            // the protocol itself only thresholds the primary score.
+            let score = rec.score;
+            let publication = state.publish(k, score, policy);
+            let first = state.lease_complete(k);
+            let claim = (first && state.leases_enabled()).then_some(ClaimEvent::Done(k));
+            if !publication.is_empty() || claim.is_some() {
+                // Alg 4 line 23: report the moved bound to every rank.
+                transport.broadcast(
+                    rank,
+                    clock.now(),
+                    Broadcast {
+                        from: rank,
+                        floor: publication.new_floor,
+                        ceil: publication.new_ceil,
+                        best: publication.new_best,
+                        claim,
+                    },
+                );
+            }
+            first.then(|| eval_visit(seq, k, score, policy.selects(score), rank, thread, clock.now()))
+        }
+        Err(_err) => {
+            // The evaluator (or its containment wrapper) gave up on k:
+            // quarantine it and route the search around it.
+            let first = state.mark_failed(k);
+            if first && state.leases_enabled() {
+                transport.broadcast(
+                    rank,
+                    clock.now(),
+                    Broadcast::claim_event(rank, ClaimEvent::Failed(k)),
+                );
+            }
+            first.then(|| failed_visit(seq, k, rank, thread, clock.now()))
+        }
+    }
+}
+
 /// Alg 4 for one k on one worker: ReceiveKCheck, admission, evaluation,
 /// publication, BroadcastK. Returns the visit to record, or `None` when
 /// another worker already claimed the k.
@@ -104,43 +200,77 @@ pub(crate) fn protocol_step(
 ) -> Option<Visit> {
     // ReceiveKCheck: merge every pending remote bound movement.
     let now = clock.now();
-    for msg in transport.drain(rank, now) {
-        state.merge_remote(msg.floor, msg.ceil, msg.best);
-    }
+    drain_and_merge(rank, state, transport, now);
     match state.admit(k, policy) {
-        Admission::Admit => {
-            // The full record lives on in whatever evaluator layer
-            // produced it (an EvalCache retains it for the session);
-            // the protocol itself only thresholds the primary score.
-            let score = evaluator.evaluate(k).score;
-            let publication = state.publish(k, score, policy);
-            if !publication.is_empty() {
-                // Alg 4 line 23: report the moved bound to every rank.
-                transport.broadcast(
-                    rank,
-                    clock.now(),
-                    Broadcast {
-                        from: rank,
-                        floor: publication.new_floor,
-                        ceil: publication.new_ceil,
-                        best: publication.new_best,
-                    },
-                );
-            }
-            Some(eval_visit(
-                seq,
-                k,
-                score,
-                policy.selects(score),
-                rank,
-                thread,
-                clock.now(),
-            ))
-        }
+        Admission::Admit => evaluate_admitted(
+            rank, thread, k, state, evaluator, policy, transport, clock, seq,
+        ),
         Admission::PrunedBySelect | Admission::PrunedByStop => {
             Some(prune_visit(seq, k, rank, thread, now))
         }
-        Admission::AlreadyClaimed => None,
+        // Failed: the quarantining worker already logged the Failed
+        // visit; this worker just routes around the k.
+        Admission::AlreadyClaimed | Admission::Failed => None,
+    }
+}
+
+/// Fault-tolerant epilogue for lease-mode workers: after finishing its
+/// own list, a worker sweeps the whole domain re-admitting ks whose
+/// leases expired — a dead (or stalled) worker's claims are thereby
+/// completed by the survivors (ROADMAP item 5: killed-rank ≡
+/// uninterrupted). Each pass ticks the lease clock, so expiry needs no
+/// wall-clock and no live holder: TTL sweep passes alone age a dead
+/// worker's lease out.
+///
+/// The sweep records *only* the visits its own steals settle (the
+/// lease-settle gate in [`evaluate_admitted`]); pruned/settled ks are
+/// skipped silently — the owner's visit or the end-of-run
+/// [`fill_pruned`] accounts for them.
+#[allow(clippy::too_many_arguments)]
+fn recovery_sweep(
+    rank: usize,
+    thread: usize,
+    order: &[u32],
+    state: &SharedState,
+    evaluator: &dyn KEvaluator,
+    policy: &SearchPolicy,
+    transport: &dyn Transport,
+    clock: &dyn Clock,
+    seq: &AtomicU64,
+    local: &mut VisitLog,
+) {
+    loop {
+        state.lease_tick();
+        let mut outstanding = false;
+        let mut progress = false;
+        for &k in order {
+            drain_and_merge(rank, state, transport, clock.now());
+            match state.admit(k, policy) {
+                Admission::Admit => {
+                    progress = true;
+                    if let Some(v) = evaluate_admitted(
+                        rank, thread, k, state, evaluator, policy, transport, clock, seq,
+                    ) {
+                        local.push(v);
+                    }
+                }
+                Admission::AlreadyClaimed => {
+                    // Unsettled lease: its holder may be alive (keep
+                    // waiting) or dead (it will expire under our ticks).
+                    if state.lease_outstanding(k) {
+                        outstanding = true;
+                    }
+                }
+                Admission::PrunedBySelect | Admission::PrunedByStop | Admission::Failed => {}
+            }
+        }
+        if !outstanding {
+            return;
+        }
+        if !progress {
+            // Nothing stolen this pass: yield so live holders run.
+            std::thread::yield_now();
+        }
     }
 }
 
@@ -187,28 +317,67 @@ pub fn run_threaded_ev(
     let clock = WallClock::start();
     let seq = AtomicU64::new(0);
     let log = Mutex::new(VisitLog::new());
+    // Fault-tolerant mode is keyed off the states: leased claims mean
+    // worker deaths are contained and survivors sweep for expired
+    // leases. Without leases the driver behaves exactly as before —
+    // a worker panic unwinds out of this function.
+    let fault_tolerant = states.iter().any(SharedState::leases_enabled);
+    let sweep_order = if fault_tolerant {
+        bleed_order(ks)
+    } else {
+        Vec::new()
+    };
 
     let run_worker = |slot: &WorkerSlot| {
         let state = &states[slot.rank];
         // Perf: visits buffer locally and merge under one lock at exit.
         let mut local = VisitLog::new();
-        for &k in &slot.list {
-            if let Some(v) = protocol_step(
-                slot.rank,
-                slot.thread,
-                k,
-                state,
-                evaluator,
-                &policy,
-                transport,
-                &clock,
-                &seq,
-            ) {
-                local.push(v);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for &k in &slot.list {
+                if let Some(v) = protocol_step(
+                    slot.rank,
+                    slot.thread,
+                    k,
+                    state,
+                    evaluator,
+                    &policy,
+                    transport,
+                    &clock,
+                    &seq,
+                ) {
+                    local.push(v);
+                }
             }
-        }
+            if fault_tolerant {
+                recovery_sweep(
+                    slot.rank,
+                    slot.thread,
+                    &sweep_order,
+                    state,
+                    evaluator,
+                    &policy,
+                    transport,
+                    &clock,
+                    &seq,
+                    &mut local,
+                );
+            }
+        }));
+        // Merge even a dead worker's completed visits: their
+        // publications are already in the shared state, so the log must
+        // agree with it.
         if !local.visits.is_empty() {
             log.lock().unwrap().merge(local);
+        }
+        if let Err(payload) = outcome {
+            if !fault_tolerant {
+                // Pre-fault-tolerance semantics: a worker panic takes
+                // the run down (the crash-then-`--resume` story).
+                std::panic::resume_unwind(payload);
+            }
+            // Contained worker death: drop the payload; the lease layer
+            // re-admits whatever ks this worker still held once their
+            // leases expire under the survivors' sweeps.
         }
     };
 
@@ -234,12 +403,15 @@ pub fn run_threaded_ev(
     let mut log = log.into_inner().unwrap();
     fill_pruned(&mut log, ks, &seq, clock.now());
     let best = fold_best(states);
+    let failed_ks = log.failed();
     SearchResult {
         k_optimal: best.map(|c| c.k),
         score: best.map(|c| c.score),
         log,
         total_k: ks.len(),
         elapsed: clock.now(),
+        partial: !failed_ks.is_empty(),
+        failed_ks,
     }
 }
 
@@ -360,6 +532,9 @@ pub fn run_event_ev(
         // ReceiveKCheck at the resource's current time.
         for msg in net.drain(r, now) {
             states[r].merge_remote(msg.floor, msg.ceil, msg.best);
+            if let Some(ev) = msg.claim {
+                states[r].merge_claim_event(ev);
+            }
         }
         let slot = &plan.workers[r];
         // Pull the next admissible k; pruned skips cost zero time.
@@ -368,7 +543,27 @@ pub fn run_event_ev(
             cursors[r] += 1;
             match states[r].admit(k, &policy) {
                 Admission::Admit => {
-                    let score = evaluator.evaluate(k).score;
+                    let rec = match evaluator.try_evaluate(k) {
+                        Ok(rec) => rec,
+                        Err(_err) => {
+                            // Quarantined k: zero simulated cost (the
+                            // containment wrapper already charged the
+                            // retries in real time; the schedule model
+                            // treats a dead fit as instantaneous).
+                            // Gossip the quarantine so peer resources
+                            // route around it too.
+                            if states[r].mark_failed(k) {
+                                log.push(failed_visit(&seq, k, r, slot.thread, now));
+                                net.broadcast(
+                                    r,
+                                    now,
+                                    Broadcast::claim_event(r, ClaimEvent::Failed(k)),
+                                );
+                            }
+                            continue;
+                        }
+                    };
+                    let score = rec.score;
                     let end = t + cost.minutes(k);
                     let selected = policy.selects(score);
                     // INTENTIONAL DIVERGENCE from `protocol_step`: the
@@ -394,6 +589,7 @@ pub fn run_event_ev(
                         } else {
                             None
                         },
+                        claim: None,
                     };
                     if msg.floor.is_some() || msg.ceil.is_some() || msg.best.is_some() {
                         net.broadcast(r, duration_from_minutes(end), msg);
@@ -414,7 +610,8 @@ pub fn run_event_ev(
                 Admission::PrunedBySelect | Admission::PrunedByStop => {
                     log.push(prune_visit(&seq, k, r, slot.thread, now));
                 }
-                Admission::AlreadyClaimed => {}
+                // Failed: the quarantining resource logged it already.
+                Admission::AlreadyClaimed | Admission::Failed => {}
             }
         }
     }
@@ -424,6 +621,9 @@ pub fn run_event_ev(
     for (r, state) in states.iter().enumerate() {
         for msg in net.drain(r, Duration::MAX) {
             state.merge_remote(msg.floor, msg.ceil, msg.best);
+            if let Some(ev) = msg.claim {
+                state.merge_claim_event(ev);
+            }
         }
     }
     // The event driver builds every resource's state over the same

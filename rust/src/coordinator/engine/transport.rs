@@ -111,15 +111,15 @@ mod tests {
     use crate::coordinator::state::Candidate;
 
     fn msg(floor: u32) -> Broadcast {
-        Broadcast {
-            from: 0,
-            floor: Some(floor),
-            ceil: None,
-            best: Some(Candidate {
+        Broadcast::bounds(
+            0,
+            Some(floor),
+            None,
+            Some(Candidate {
                 k: floor,
                 score: 0.9,
             }),
-        }
+        )
     }
 
     #[test]

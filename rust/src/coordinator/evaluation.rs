@@ -206,6 +206,62 @@ impl Evaluation {
     }
 }
 
+/// A contained evaluation failure: which k failed, how many fit
+/// attempts were spent on it, and why. This is the error half of
+/// [`EvalOutcome`] — what the engine drivers route around (the k is
+/// quarantined, the search degrades to a partial result) instead of
+/// dying with the fit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EvalError {
+    pub k: u32,
+    /// Fit attempts consumed before giving up (≥ 1 once a fit actually
+    /// ran; 0 for failures preloaded from a checkpoint).
+    pub attempts: u32,
+    /// Human-readable cause: the panic payload, the evaluator's own
+    /// error text, or the containment policy's verdict.
+    pub reason: String,
+}
+
+impl EvalError {
+    /// Checkpoint serialization (the `failed` array entries).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("k".to_string(), Json::Num(f64::from(self.k)));
+        obj.insert("attempts".to_string(), Json::Num(f64::from(self.attempts)));
+        obj.insert("reason".to_string(), Json::Str(self.reason.clone()));
+        Json::Obj(obj)
+    }
+
+    /// Inverse of [`EvalError::to_json`].
+    pub fn from_json(j: &Json) -> Result<EvalError, String> {
+        let k = j
+            .get("k")
+            .and_then(Json::as_f64)
+            .ok_or("failed-k record missing 'k'")? as u32;
+        let attempts = j.get("attempts").and_then(Json::as_f64).unwrap_or(0.0) as u32;
+        let reason = j
+            .get("reason")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string();
+        Ok(EvalError { k, attempts, reason })
+    }
+}
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "k={} failed after {} attempt(s): {}",
+            self.k, self.attempts, self.reason
+        )
+    }
+}
+
+/// Result of one fallible evaluation: the record, or the contained
+/// failure the search must route around.
+pub type EvalOutcome = Result<Evaluation, EvalError>;
+
 /// Non-finite floats are not representable in JSON: store `null`,
 /// restore NaN.
 fn json_f64(v: f64) -> Json {
@@ -298,6 +354,19 @@ pub trait KEvaluator: Sync {
     /// Fit the model at `k` and return the full record.
     fn evaluate(&self, k: u32) -> Evaluation;
 
+    /// Fallible form of [`KEvaluator::evaluate`]. The engine drivers
+    /// call this entry; an `Err` marks the k as failed (a `Failed`
+    /// visit, reported in `failed_ks`) instead of unwinding the worker.
+    ///
+    /// The default is infallible — it delegates to `evaluate` and lets
+    /// panics propagate, preserving the crash-then-`--resume` story for
+    /// evaluators that do not opt into containment. Wrap an evaluator
+    /// in [`FailSafeEvaluator`](super::fault::FailSafeEvaluator) to get
+    /// panic capture, seeded bounded-backoff retries and quarantine.
+    fn try_evaluate(&self, k: u32) -> EvalOutcome {
+        Ok(self.evaluate(k))
+    }
+
     /// Human-readable name for reports.
     fn name(&self) -> &str {
         "evaluator"
@@ -368,6 +437,14 @@ impl KEvaluator for MetricView<'_> {
         rec
     }
 
+    fn try_evaluate(&self, k: u32) -> EvalOutcome {
+        let mut rec = self.inner.try_evaluate(k)?;
+        if let Some(v) = rec.metric(&self.metric) {
+            rec.score = v;
+        }
+        Ok(rec)
+    }
+
     fn name(&self) -> &str {
         &self.metric
     }
@@ -408,6 +485,14 @@ impl<E: KEvaluator> KEvaluator for CountingEvaluator<E> {
         // ORDER: Relaxed — advisory counter; no data published through it.
         self.count.fetch_add(1, Ordering::Relaxed);
         self.inner.evaluate(k)
+    }
+
+    fn try_evaluate(&self, k: u32) -> EvalOutcome {
+        // ORDER: Relaxed — advisory counter; no data published through it.
+        // Counted here (not via the `evaluate` delegation) so failed
+        // attempts are attempts too — the retry-storm tests bound this.
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.try_evaluate(k)
     }
 
     fn name(&self) -> &str {

@@ -1,0 +1,497 @@
+//! Evaluator failure containment (DESIGN.md §3.6).
+//!
+//! The fits the search guards are the dominant cost (Wang/Sun/Bao,
+//! PAPERS.md), so a failing fit must be **bounded**: caught at the
+//! worker, retried under a seeded deterministic backoff, and after the
+//! budget is spent quarantined as a failed k that the search routes
+//! around — never an unbounded re-fit loop, and never a panic that
+//! takes the whole run down.
+//!
+//! Layering: engines call [`KEvaluator::try_evaluate`]. By default that
+//! is infallible (panics propagate — the crash-then-`--resume` story).
+//! Wrapping any evaluator in [`FailSafeEvaluator`] opts into
+//! containment:
+//!
+//! ```text
+//! engine → FailSafeEvaluator → EvalCache → model evaluator
+//! ```
+//!
+//! The wrapper sits *above* the cache so a quarantined k costs zero
+//! further fits (the quarantine check precedes any cache traffic), and
+//! the cache's claim-vacating panic path (`cache.rs`) still lets
+//! blocked sharers retake a fit the wrapper is about to retry.
+//!
+//! Determinism (NUMERICS.md): retries call the same evaluator with the
+//! same k — evaluators seed their RNG per (seed, k), so a retried fit
+//! that succeeds produces a bitwise-identical record to a first-try
+//! success. Backoff delays are a pure function of
+//! `(policy.seed, k, attempt)`; they shift wall-clock, never data.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::evaluation::{EvalError, EvalOutcome, Evaluation, Fingerprint, KEvaluator};
+
+/// Seeded deterministic bounded-backoff retry policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total fit attempts per k across *all* workers, including the
+    /// first (clamped to ≥ 1).
+    pub max_attempts: u32,
+    /// Nominal delay before the second attempt; doubles per further
+    /// attempt (attempt `a` waits ~`base · 2^(a−2)`).
+    pub base_backoff: Duration,
+    /// Cap on any single delay. `ZERO` means "cap at `base_backoff`".
+    pub max_backoff: Duration,
+    /// Jitter seed: the realized delay is the nominal delay scaled by a
+    /// hash of `(seed, k, attempt)` into `[0.5, 1.0)` — deterministic,
+    /// so a fault run replays with identical pacing.
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    /// No retries: one attempt, immediate quarantine on failure.
+    pub fn none() -> RetryPolicy {
+        RetryPolicy::with_attempts(1)
+    }
+
+    /// `n` attempts with zero backoff (the testing default — retries
+    /// are immediate).
+    pub fn with_attempts(n: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: n.max(1),
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+            seed: 0,
+        }
+    }
+
+    fn attempts(&self) -> u32 {
+        self.max_attempts.max(1)
+    }
+
+    /// Delay to sleep before the given attempt (1-based; the first
+    /// attempt never waits). Pure function of `(seed, k, attempt)`.
+    pub fn backoff_before(&self, k: u32, attempt: u32) -> Duration {
+        if attempt <= 1 || self.base_backoff.is_zero() {
+            return Duration::ZERO;
+        }
+        let cap = if self.max_backoff.is_zero() {
+            self.base_backoff
+        } else {
+            self.max_backoff
+        };
+        let exp = (attempt - 2).min(20);
+        let nominal = self.base_backoff.saturating_mul(1u32 << exp).min(cap);
+        // Jitter into [0.5, 1.0) of nominal: decorrelates racing
+        // workers without losing replayability.
+        let h = splitmix64(self.seed ^ (u64::from(k) << 32) ^ u64::from(attempt));
+        let frac = 0.5 + 0.5 * ((h >> 11) as f64 / (1u64 << 53) as f64);
+        nominal.mul_f64(frac)
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(250),
+            seed: 0,
+        }
+    }
+}
+
+/// Session-level fault-tolerance switches
+/// ([`SearchSession::with_faults`](super::session::SearchSession::with_faults)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultPolicy {
+    /// Evaluator-level containment: panics/errors are caught, retried
+    /// and quarantined under this policy. `None` leaves evaluator
+    /// panics free to kill their worker (the lease layer then contains
+    /// the *worker* death instead).
+    pub retry: Option<RetryPolicy>,
+    /// Claim-lease TTL in lease-clock ticks
+    /// ([`SharedState::with_leases`](super::state::SharedState::with_leases));
+    /// `0` disables leases (claims are permanent, worker panics
+    /// propagate out of the engine).
+    pub lease_ttl: u64,
+}
+
+impl FaultPolicy {
+    /// Everything on: 3 bounded-backoff attempts per k, leases with a
+    /// 16-tick TTL.
+    pub fn tolerant() -> FaultPolicy {
+        FaultPolicy {
+            retry: Some(RetryPolicy::default()),
+            lease_ttl: 16,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.retry.is_some() || self.lease_ttl > 0
+    }
+}
+
+/// Per-k containment record in the shared ledger.
+#[derive(Default)]
+struct AttemptState {
+    /// Fit attempts consumed so far, *across all workers*.
+    attempts: u32,
+    /// Set once any attempt succeeds: later callers go straight through
+    /// (a cache hit underneath — zero extra fits).
+    succeeded: bool,
+    /// Set once the budget is spent: the k is failed, permanently.
+    quarantined: Option<EvalError>,
+}
+
+/// Worker-side failure containment: catches panics and `EvalError`s
+/// from the wrapped evaluator, retries under [`RetryPolicy`], and
+/// quarantines ks that exhaust their budget. The attempt ledger is
+/// shared by every worker, so the `max_attempts` bound is **global**
+/// per k — racing workers driving the same k cannot multiply the
+/// budget into a retry storm.
+///
+/// Non-finite scores are treated as failed attempts: a NaN score can
+/// never be selected, so under containment it is retried (models seed
+/// per-(seed, k): a deterministic NaN quarantines after the budget).
+pub struct FailSafeEvaluator<'a> {
+    inner: &'a dyn KEvaluator,
+    policy: RetryPolicy,
+    ledger: Mutex<BTreeMap<u32, AttemptState>>,
+    /// Signaled whenever a k reaches a verdict (success or quarantine)
+    /// so callers parked on an exhausted-but-undecided budget wake.
+    changed: Condvar,
+}
+
+impl<'a> FailSafeEvaluator<'a> {
+    pub fn new(inner: &'a dyn KEvaluator, policy: RetryPolicy) -> FailSafeEvaluator<'a> {
+        FailSafeEvaluator {
+            inner,
+            policy,
+            ledger: Mutex::new(BTreeMap::new()),
+            changed: Condvar::new(),
+        }
+    }
+
+    /// The quarantined failures, ascending k.
+    pub fn failures(&self) -> Vec<EvalError> {
+        let ledger = self.ledger.lock().unwrap();
+        ledger
+            .values()
+            .filter_map(|st| st.quarantined.clone())
+            .collect()
+    }
+
+    /// Preload quarantined ks (checkpoint `failed` records) so a
+    /// resumed session reports them without spending a single fit on
+    /// re-proving the failure.
+    pub fn preload_failures(&self, errs: impl IntoIterator<Item = EvalError>) {
+        let mut ledger = self.ledger.lock().unwrap();
+        for err in errs {
+            let st = ledger.entry(err.k).or_default();
+            if !st.succeeded && st.quarantined.is_none() {
+                st.attempts = st.attempts.max(err.attempts);
+                st.quarantined = Some(err);
+            }
+        }
+    }
+
+    /// One contained attempt: panic, explicit `Err`, and non-finite
+    /// scores all normalize to `Err(reason)`.
+    fn attempt(&self, k: u32) -> Result<Evaluation, String> {
+        match catch_unwind(AssertUnwindSafe(|| self.inner.try_evaluate(k))) {
+            Ok(Ok(rec)) => {
+                if rec.score.is_finite() {
+                    Ok(rec)
+                } else {
+                    Err(format!("non-finite score {}", rec.score))
+                }
+            }
+            Ok(Err(err)) => Err(err.reason),
+            Err(payload) => Err(format!("panic: {}", panic_message(&payload))),
+        }
+    }
+}
+
+impl KEvaluator for FailSafeEvaluator<'_> {
+    /// Infallible entry: only sound for ks that cannot be quarantined.
+    /// A quarantined k has no record to return, so this panics with the
+    /// quarantine verdict — engines go through `try_evaluate`.
+    fn evaluate(&self, k: u32) -> Evaluation {
+        self.try_evaluate(k)
+            .unwrap_or_else(|err| panic!("quarantined evaluation requested infallibly: {err}"))
+    }
+
+    fn try_evaluate(&self, k: u32) -> EvalOutcome {
+        loop {
+            // Admission to one attempt, under the global per-k budget.
+            let attempt = {
+                let mut ledger = self.ledger.lock().unwrap();
+                loop {
+                    let st = ledger.entry(k).or_default();
+                    if let Some(err) = &st.quarantined {
+                        return Err(err.clone());
+                    }
+                    if st.succeeded {
+                        // Another worker already proved the fit: the
+                        // call below is a cache hit, not a new attempt.
+                        drop(ledger);
+                        return self.inner.try_evaluate(k);
+                    }
+                    if st.attempts < self.policy.attempts() {
+                        st.attempts += 1;
+                        break st.attempts;
+                    }
+                    // Budget spent but undecided: the final attempt is
+                    // in flight on another worker. Wait for its verdict
+                    // (it always sets `succeeded` or `quarantined`).
+                    ledger = self.changed.wait(ledger).unwrap();
+                }
+            };
+            let delay = self.policy.backoff_before(k, attempt);
+            if !delay.is_zero() {
+                std::thread::sleep(delay);
+            }
+            match self.attempt(k) {
+                Ok(rec) => {
+                    let mut ledger = self.ledger.lock().unwrap();
+                    ledger.entry(k).or_default().succeeded = true;
+                    drop(ledger);
+                    self.changed.notify_all();
+                    return Ok(rec);
+                }
+                Err(reason) => {
+                    let mut ledger = self.ledger.lock().unwrap();
+                    let st = ledger.entry(k).or_default();
+                    if st.succeeded {
+                        // A racing worker won with a good fit while ours
+                        // failed; serve the shared record.
+                        drop(ledger);
+                        return self.inner.try_evaluate(k);
+                    }
+                    if st.attempts >= self.policy.attempts() && st.quarantined.is_none() {
+                        st.quarantined = Some(EvalError {
+                            k,
+                            attempts: st.attempts,
+                            reason,
+                        });
+                    }
+                    if let Some(err) = &st.quarantined {
+                        let err = err.clone();
+                        drop(ledger);
+                        self.changed.notify_all();
+                        return Err(err);
+                    }
+                    // Budget remains: loop for another admission.
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        self.inner.fingerprint()
+    }
+}
+
+/// Render a panic payload: `&str` and `String` payloads verbatim
+/// (covers `panic!`/`assert!`), anything else opaquely.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Panics for `k` the first `panics` times it is asked, then
+    /// succeeds; always errors for ks in `poison`.
+    struct Flaky {
+        panics: AtomicU64,
+        victim: u32,
+        poison: Vec<u32>,
+    }
+
+    impl KEvaluator for Flaky {
+        fn evaluate(&self, k: u32) -> Evaluation {
+            // ORDER: Relaxed — test bookkeeping only.
+            if k == self.victim && self.panics.load(Ordering::Relaxed) > 0 {
+                self.panics.fetch_sub(1, Ordering::Relaxed);
+                panic!("flaky fit k={k}");
+            }
+            assert!(!self.poison.contains(&k), "poisoned k reached evaluate");
+            Evaluation::scalar(k, f64::from(k))
+        }
+
+        fn try_evaluate(&self, k: u32) -> EvalOutcome {
+            if self.poison.contains(&k) {
+                return Err(EvalError {
+                    k,
+                    attempts: 1,
+                    reason: "poisoned".into(),
+                });
+            }
+            Ok(self.evaluate(k))
+        }
+    }
+
+    #[test]
+    fn retries_then_succeeds_within_budget() {
+        let flaky = Flaky {
+            panics: AtomicU64::new(2),
+            victim: 7,
+            poison: vec![],
+        };
+        let safe = FailSafeEvaluator::new(&flaky, RetryPolicy::with_attempts(3));
+        let rec = safe.try_evaluate(7).expect("third attempt succeeds");
+        assert_eq!(rec.score, 7.0);
+        assert!(safe.failures().is_empty());
+    }
+
+    #[test]
+    fn exhausted_budget_quarantines_and_sticks() {
+        let flaky = Flaky {
+            panics: AtomicU64::new(10),
+            victim: 5,
+            poison: vec![9],
+        };
+        let safe = FailSafeEvaluator::new(&flaky, RetryPolicy::with_attempts(2));
+        let err = safe.try_evaluate(5).expect_err("budget of 2 exhausted");
+        assert_eq!((err.k, err.attempts), (5, 2));
+        assert!(err.reason.contains("flaky fit"), "{}", err.reason);
+        // Quarantine is sticky and costs zero further fits: the inner
+        // panic counter does not move again.
+        // ORDER: Relaxed — test bookkeeping only.
+        let left = flaky.panics.load(Ordering::Relaxed);
+        let again = safe.try_evaluate(5).expect_err("still quarantined");
+        assert_eq!(again, err);
+        assert_eq!(flaky.panics.load(Ordering::Relaxed), left);
+        // Explicit Err paths quarantine too, with the evaluator's text.
+        let poisoned = safe.try_evaluate(9).expect_err("poisoned k fails");
+        assert_eq!(poisoned.reason, "poisoned");
+        let failed: Vec<u32> = safe.failures().iter().map(|e| e.k).collect();
+        assert_eq!(failed, vec![5, 9]);
+    }
+
+    #[test]
+    fn racing_workers_share_one_global_budget() {
+        // 8 workers hammer one always-failing k under max_attempts=3:
+        // the inner evaluator must be hit at most 3 times in total.
+        struct CountErr {
+            calls: AtomicU64,
+        }
+        impl KEvaluator for CountErr {
+            fn evaluate(&self, _k: u32) -> Evaluation {
+                unreachable!("try_evaluate only")
+            }
+            fn try_evaluate(&self, k: u32) -> EvalOutcome {
+                // ORDER: Relaxed — test bookkeeping only.
+                self.calls.fetch_add(1, Ordering::Relaxed);
+                Err(EvalError {
+                    k,
+                    attempts: 1,
+                    reason: "always fails".into(),
+                })
+            }
+        }
+        let inner = CountErr {
+            calls: AtomicU64::new(0),
+        };
+        let safe = FailSafeEvaluator::new(&inner, RetryPolicy::with_attempts(3));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let err = safe.try_evaluate(4).expect_err("always fails");
+                    assert_eq!(err.k, 4);
+                });
+            }
+        });
+        // ORDER: Relaxed — read after join; the join is the edge.
+        assert!(inner.calls.load(Ordering::Relaxed) <= 3);
+        assert_eq!(safe.failures().len(), 1);
+    }
+
+    #[test]
+    fn preloaded_failures_skip_refits() {
+        let flaky = Flaky {
+            panics: AtomicU64::new(0),
+            victim: 0,
+            poison: vec![],
+        };
+        let safe = FailSafeEvaluator::new(&flaky, RetryPolicy::with_attempts(3));
+        safe.preload_failures([EvalError {
+            k: 11,
+            attempts: 3,
+            reason: "from checkpoint".into(),
+        }]);
+        let err = safe.try_evaluate(11).expect_err("preloaded quarantine");
+        assert_eq!(err.reason, "from checkpoint");
+        // Other ks are unaffected.
+        assert_eq!(safe.try_evaluate(3).unwrap().score, 3.0);
+    }
+
+    #[test]
+    fn non_finite_scores_are_contained_failures() {
+        struct NanAt13;
+        impl KEvaluator for NanAt13 {
+            fn evaluate(&self, k: u32) -> Evaluation {
+                let score = if k == 13 { f64::NAN } else { f64::from(k) };
+                Evaluation::scalar(k, score)
+            }
+        }
+        let inner = NanAt13;
+        let safe = FailSafeEvaluator::new(&inner, RetryPolicy::with_attempts(2));
+        let err = safe.try_evaluate(13).expect_err("NaN is a failure");
+        assert!(err.reason.contains("non-finite"), "{}", err.reason);
+        assert_eq!(safe.try_evaluate(12).unwrap().score, 12.0);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_grows() {
+        let p = RetryPolicy {
+            max_attempts: 5,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(40),
+            seed: 0xFA11,
+        };
+        // First attempt never waits.
+        assert_eq!(p.backoff_before(9, 1), Duration::ZERO);
+        let d2 = p.backoff_before(9, 2);
+        let d3 = p.backoff_before(9, 3);
+        let d4 = p.backoff_before(9, 4);
+        // Jitter keeps each delay within [nominal/2, nominal], nominal
+        // doubling then capping.
+        assert!(d2 >= Duration::from_millis(5) && d2 <= Duration::from_millis(10));
+        assert!(d3 >= Duration::from_millis(10) && d3 <= Duration::from_millis(20));
+        assert!(d4 >= Duration::from_millis(20) && d4 <= Duration::from_millis(40));
+        // Replayable: same (seed, k, attempt) → same delay; different k
+        // decorrelates.
+        assert_eq!(d2, p.backoff_before(9, 2));
+        assert_ne!(p.backoff_before(9, 2), p.backoff_before(10, 2));
+        // Zero-backoff policies never sleep.
+        assert_eq!(
+            RetryPolicy::with_attempts(4).backoff_before(9, 3),
+            Duration::ZERO
+        );
+    }
+}

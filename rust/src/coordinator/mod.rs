@@ -22,12 +22,16 @@
 //! * [`cache`] — the concurrency-deduplicating [`EvalCache`] between
 //!   the engines and the evaluators.
 //! * [`session`] — resumable [`SearchSession`]s with JSON checkpoints.
+//! * [`fault`] — failure containment (DESIGN.md §3.6): retry policies,
+//!   the [`FailSafeEvaluator`] quarantine wrapper, and the
+//!   [`FaultPolicy`] knob sessions/CLI expose.
 
 pub mod bleed;
 pub mod cache;
 pub mod chunk;
 pub mod engine;
 pub mod evaluation;
+pub mod fault;
 pub mod policy;
 pub mod rank;
 pub mod scheduler;
@@ -46,14 +50,15 @@ pub use engine::{
     WorkPlan, WorkerSlot,
 };
 pub use evaluation::{
-    CountingEvaluator, EvalDiagnostics, Evaluation, Fingerprint, KEvaluator, MetricView,
-    ScorerEvaluator,
+    CountingEvaluator, EvalDiagnostics, EvalError, EvalOutcome, Evaluation, Fingerprint,
+    KEvaluator, MetricView, ScorerEvaluator,
 };
+pub use fault::{FailSafeEvaluator, FaultPolicy, RetryPolicy};
 pub use policy::{Direction, Mode, SearchPolicy, Thresholds};
 pub use rank::{Broadcast, RankComm};
 pub use scheduler::{binary_bleed_lockstep, binary_bleed_parallel, ParallelConfig};
 pub use scorer::{CountingScorer, KScorer};
 pub use session::{Checkpoint, SearchSession, SessionOutcome, StateSnapshot};
-pub use state::{Admission, Candidate, SharedState};
+pub use state::{Admission, Candidate, ClaimEvent, SharedState};
 pub use traversal::Traversal;
 pub use visit_log::{Decision, Visit, VisitLog};

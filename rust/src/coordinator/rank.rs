@@ -9,15 +9,49 @@
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Mutex;
 
-use super::state::Candidate;
+use super::state::{Candidate, ClaimEvent};
 
-/// A BroadcastK payload: whatever bounds/optimal the sender moved.
+/// A BroadcastK payload: whatever bounds/optimal the sender moved, plus
+/// (when claim leases are enabled) one claim-lifecycle event so peer
+/// lease tables track remote work. Everything here is advisory: a lost
+/// message costs wasted work, never a wrong answer.
 #[derive(Debug, Clone, Copy)]
 pub struct Broadcast {
     pub from: usize,
     pub floor: Option<u32>,
     pub ceil: Option<u32>,
     pub best: Option<Candidate>,
+    /// Claim gossip ([`ClaimEvent`]); `None` outside lease mode.
+    pub claim: Option<ClaimEvent>,
+}
+
+impl Broadcast {
+    /// A bounds/best-only message (the non-lease protocol shape).
+    pub fn bounds(
+        from: usize,
+        floor: Option<u32>,
+        ceil: Option<u32>,
+        best: Option<Candidate>,
+    ) -> Broadcast {
+        Broadcast {
+            from,
+            floor,
+            ceil,
+            best,
+            claim: None,
+        }
+    }
+
+    /// A claim-gossip-only message (lease mode).
+    pub fn claim_event(from: usize, ev: ClaimEvent) -> Broadcast {
+        Broadcast {
+            from,
+            floor: None,
+            ceil: None,
+            best: None,
+            claim: Some(ev),
+        }
+    }
 }
 
 /// One rank's mailbox plus handles to every peer.
@@ -82,12 +116,12 @@ mod tests {
     #[test]
     fn broadcast_reaches_all_other_ranks() {
         let net = RankComm::network(3);
-        net[0].broadcast(Broadcast {
-            from: 0,
-            floor: Some(7),
-            ceil: None,
-            best: Some(Candidate { k: 7, score: 0.9 }),
-        });
+        net[0].broadcast(Broadcast::bounds(
+            0,
+            Some(7),
+            None,
+            Some(Candidate { k: 7, score: 0.9 }),
+        ));
         assert!(net[0].drain().is_empty(), "no self-delivery");
         for r in 1..3 {
             let got = net[r].drain();
@@ -102,12 +136,7 @@ mod tests {
         let net = RankComm::network(2);
         assert!(net[1].drain().is_empty());
         for k in [3u32, 5, 9] {
-            net[0].broadcast(Broadcast {
-                from: 0,
-                floor: Some(k),
-                ceil: None,
-                best: None,
-            });
+            net[0].broadcast(Broadcast::bounds(0, Some(k), None, None));
         }
         let got = net[1].drain();
         assert_eq!(

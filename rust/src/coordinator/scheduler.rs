@@ -92,12 +92,15 @@ pub fn binary_bleed_lockstep(
     let ks = normalize_ks(ks);
     let plan = WorkPlan::flat(&ks, cfg.resources(), cfg.traversal, cfg.pipeline);
     let out = run_event(&ks, &plan, scorer, policy, &UnitCost, 0.0);
+    let failed_ks = out.log.failed();
     SearchResult {
         k_optimal: out.best.map(|c| c.k),
         score: out.best.map(|c| c.score),
         log: out.log,
         total_k: ks.len(),
         elapsed: sw.elapsed(),
+        partial: !failed_ks.is_empty(),
+        failed_ks,
     }
 }
 

@@ -30,7 +30,8 @@ use std::path::{Path, PathBuf};
 use super::bleed::SearchResult;
 use super::cache::{CacheStats, EvalCache};
 use super::engine::{normalize_ks, run_threaded_ev, Loopback, MpscNet, Transport, WorkPlan};
-use super::evaluation::{Evaluation, Fingerprint, KEvaluator};
+use super::evaluation::{EvalError, Evaluation, Fingerprint, KEvaluator};
+use super::fault::{FailSafeEvaluator, FaultPolicy};
 use super::policy::SearchPolicy;
 use super::scheduler::ParallelConfig;
 use super::state::{Candidate, SharedState};
@@ -142,6 +143,11 @@ pub struct Checkpoint {
     pub fingerprint: Fingerprint,
     pub domain: Vec<u32>,
     pub records: Vec<Evaluation>,
+    /// Quarantined ks with their attempt counts and reasons, so
+    /// `--resume` routes around known-bad ks instead of retry-looping
+    /// them. Absent in pre-fault checkpoints (reads as empty — same
+    /// schema version, purely additive).
+    pub failed: Vec<EvalError>,
     pub state: Option<StateSnapshot>,
     pub visits: Option<VisitLog>,
 }
@@ -158,6 +164,7 @@ impl Checkpoint {
             fingerprint,
             domain,
             records,
+            failed: Vec::new(),
             state: None,
             visits: None,
         }
@@ -175,6 +182,12 @@ impl Checkpoint {
             "records".to_string(),
             Json::Arr(self.records.iter().map(Evaluation::to_json).collect()),
         );
+        if !self.failed.is_empty() {
+            obj.insert(
+                "failed".to_string(),
+                Json::Arr(self.failed.iter().map(EvalError::to_json).collect()),
+            );
+        }
         if let Some(state) = &self.state {
             obj.insert("state".to_string(), state.to_json());
         }
@@ -212,6 +225,12 @@ impl Checkpoint {
         {
             records.push(Evaluation::from_json(r).map_err(|e| crate::anyhow!("{e}"))?);
         }
+        let mut failed = Vec::new();
+        if let Some(arr) = j.get("failed").and_then(Json::as_arr) {
+            for f in arr {
+                failed.push(EvalError::from_json(f).map_err(|e| crate::anyhow!("{e}"))?);
+            }
+        }
         let state = match j.get("state") {
             Some(s) => Some(StateSnapshot::from_json(s)?),
             None => None,
@@ -225,25 +244,66 @@ impl Checkpoint {
             fingerprint,
             domain,
             records,
+            failed,
             state,
             visits,
         })
     }
 
-    /// Write atomically-ish: temp file in the same directory, then
-    /// rename over the target.
+    /// Write atomically: a uniquely-named temp file in the same
+    /// directory, fsynced *before* the rename over the target.
+    ///
+    /// Two hardenings over a plain write-then-rename:
+    /// * the temp name embeds the process id and a per-process counter,
+    ///   so interleaved savers (journal callback racing the final
+    ///   shutdown write, or two processes sharing a checkpoint path)
+    ///   never scribble on each other's half-written temp file — each
+    ///   rename publishes one complete, self-consistent snapshot;
+    /// * `sync_all` before the rename means the published file can
+    ///   never be an empty/truncated husk after a power cut (rename
+    ///   is ordered after the data reaches the disk, and the parent
+    ///   directory is fsynced best-effort so the rename itself
+    ///   survives too).
     pub fn save(&self, path: &Path) -> Result<()> {
+        use std::io::Write;
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)
                     .with_context(|| format!("creating {}", dir.display()))?;
             }
         }
-        let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, format!("{}\n", self.to_json()))
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("renaming into {}", path.display()))?;
+        static SAVE_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        // ORDER: Relaxed — the counter only needs per-process
+        // uniqueness, which the RMW guarantees at any ordering; the
+        // temp file itself is published by the rename, not by this
+        // atomic.
+        let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp.{}.{}", std::process::id(), seq));
+        let write = (|| -> Result<()> {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(format!("{}\n", self.to_json()).as_bytes())
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("syncing {}", tmp.display()))?;
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("renaming into {}", path.display()))?;
+            Ok(())
+        })();
+        if write.is_err() {
+            // Don't leak temp files on a failed save.
+            let _ = std::fs::remove_file(&tmp);
+            return write;
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                // Best-effort: not all platforms/filesystems support
+                // directory fsync; the data itself is already durable.
+                if let Ok(d) = std::fs::File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
         Ok(())
     }
 
@@ -285,6 +345,9 @@ pub struct SessionOutcome {
     /// Every completed record, ascending by k (cache-retained — cheaper
     /// than the fits that produced them by construction).
     pub records: Vec<Evaluation>,
+    /// Quarantined ks with attempt counts and reasons (empty on a clean
+    /// run); mirrors `result.failed_ks`.
+    pub failed: Vec<EvalError>,
     pub stats: CacheStats,
 }
 
@@ -294,6 +357,7 @@ pub struct SearchSession<'a> {
     policy: SearchPolicy,
     parallel: ParallelConfig,
     checkpoint: Option<PathBuf>,
+    faults: FaultPolicy,
 }
 
 impl<'a> SearchSession<'a> {
@@ -307,6 +371,7 @@ impl<'a> SearchSession<'a> {
                 ..Default::default()
             },
             checkpoint: None,
+            faults: FaultPolicy::default(),
         }
     }
 
@@ -326,10 +391,19 @@ impl<'a> SearchSession<'a> {
         self
     }
 
+    /// Fault tolerance (DESIGN.md §3.6): `retry: Some` wraps the
+    /// evaluator in a [`FailSafeEvaluator`] (panics/errors caught,
+    /// retried, quarantined); `lease_ttl > 0` gives claims expiring
+    /// leases so a dead worker's ks are re-admitted by survivors.
+    pub fn with_faults(mut self, faults: FaultPolicy) -> SearchSession<'a> {
+        self.faults = faults;
+        self
+    }
+
     /// Fresh run; overwrites any existing checkpoint at the configured
     /// path.
     pub fn run(&self, ks: &[u32]) -> Result<SessionOutcome> {
-        self.run_inner(ks, Vec::new())
+        self.run_inner(ks, Vec::new(), Vec::new())
     }
 
     /// Resume from the configured checkpoint: validate it against this
@@ -341,17 +415,22 @@ impl<'a> SearchSession<'a> {
             .checkpoint
             .as_deref()
             .context("resume requires with_checkpoint")?;
-        let preload = if path.exists() {
+        let (preload, preload_failed) = if path.exists() {
             let cp = Checkpoint::load(path)?;
             cp.validate(&self.evaluator.fingerprint(), &normalize_ks(ks))?;
-            cp.records
+            (cp.records, cp.failed)
         } else {
-            Vec::new()
+            (Vec::new(), Vec::new())
         };
-        self.run_inner(ks, preload)
+        self.run_inner(ks, preload, preload_failed)
     }
 
-    fn run_inner(&self, ks: &[u32], preload: Vec<Evaluation>) -> Result<SessionOutcome> {
+    fn run_inner(
+        &self,
+        ks: &[u32],
+        preload: Vec<Evaluation>,
+        preload_failed: Vec<EvalError>,
+    ) -> Result<SessionOutcome> {
         let ks = normalize_ks(ks);
         let mut cache = EvalCache::new(self.evaluator);
         if let Some(path) = &self.checkpoint {
@@ -389,11 +468,34 @@ impl<'a> SearchSession<'a> {
                 .filter(|r| ks.binary_search(&r.k).is_ok()),
         );
 
+        // Containment layering (DESIGN.md §3.6): engine → FailSafe →
+        // cache → evaluator. The cache stays *inside* the containment
+        // wrapper so only successful records are deduplicated/journaled
+        // and a vacated claim can be retried by the policy.
+        let failsafe = self
+            .faults
+            .retry
+            .map(|retry| FailSafeEvaluator::new(&cache, retry));
+        if let Some(fs) = &failsafe {
+            // Checkpointed quarantines short-circuit to Err with zero
+            // fits — `--resume` never retry-loops a known-bad k.
+            fs.preload_failures(
+                preload_failed
+                    .into_iter()
+                    .filter(|f| ks.binary_search(&f.k).is_ok()),
+            );
+        }
+        let evaluator: &dyn KEvaluator = match &failsafe {
+            Some(fs) => fs,
+            None => &cache,
+        };
+
+        let mk_state = |_: usize| SharedState::with_leases(&ks, self.faults.lease_ttl);
         let (plan, states, net) = if self.parallel.resources() <= 1 {
             // Serial Alg 1: deterministic bleed order, loopback.
             (
                 WorkPlan::serial(&ks, self.policy.mode),
-                vec![SharedState::new(&ks)],
+                vec![mk_state(0)],
                 None,
             )
         } else {
@@ -404,8 +506,7 @@ impl<'a> SearchSession<'a> {
                 self.parallel.traversal,
                 self.parallel.pipeline,
             );
-            let states: Vec<SharedState> =
-                (0..plan.ranks).map(|_| SharedState::new(&ks)).collect();
+            let states: Vec<SharedState> = (0..plan.ranks).map(mk_state).collect();
             let net = Some(MpscNet::new(plan.ranks));
             (plan, states, net)
         };
@@ -413,16 +514,32 @@ impl<'a> SearchSession<'a> {
             Some(n) => n,
             None => &Loopback,
         };
-        let result = run_threaded_ev(&ks, &plan, &states, transport, &cache, self.policy);
+        let result = run_threaded_ev(&ks, &plan, &states, transport, evaluator, self.policy);
 
         let records = cache.records();
         let stats = cache.stats();
+        // The authoritative failure ledger lives in the containment
+        // wrapper; without one, reconstruct (attempt counts unknown)
+        // from the engine's quarantine log.
+        let failed: Vec<EvalError> = match &failsafe {
+            Some(fs) => fs.failures(),
+            None => result
+                .failed_ks
+                .iter()
+                .map(|&k| EvalError {
+                    k,
+                    attempts: 0,
+                    reason: "evaluator-reported failure".to_string(),
+                })
+                .collect(),
+        };
         if let Some(path) = &self.checkpoint {
             let cp = Checkpoint {
                 version: CHECKPOINT_VERSION,
                 fingerprint: self.evaluator.fingerprint(),
                 domain: ks.clone(),
                 records: records.clone(),
+                failed: failed.clone(),
                 state: Some(StateSnapshot::merged(&states)),
                 visits: Some(result.log.clone()),
             };
@@ -436,6 +553,7 @@ impl<'a> SearchSession<'a> {
         Ok(SessionOutcome {
             result,
             records,
+            failed,
             stats,
         })
     }
@@ -552,6 +670,11 @@ mod tests {
             fingerprint: Fingerprint::anonymous("probe"),
             domain: vec![2, 3, 4, 9],
             records: vec![rec],
+            failed: vec![EvalError {
+                k: 4,
+                attempts: 3,
+                reason: "fit diverged".to_string(),
+            }],
             state: Some(StateSnapshot {
                 floor: Some(9),
                 ceil: None,
@@ -564,8 +687,137 @@ mod tests {
         let back = Checkpoint::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.domain, cp.domain);
         assert_eq!(back.records, cp.records);
+        assert_eq!(back.failed, cp.failed);
         assert_eq!(back.state.as_ref(), cp.state.as_ref());
         assert_eq!(back.fingerprint, cp.fingerprint);
         assert_eq!(back.visits.unwrap().visits.len(), 0);
+    }
+
+    #[test]
+    fn pre_fault_checkpoints_read_as_no_failures() {
+        // Purely additive schema change: a checkpoint written before the
+        // `failed` array existed must still load (empty failures).
+        let cp = Checkpoint::partial(Fingerprint::anonymous("probe"), vec![2, 3], Vec::new());
+        let mut j = match cp.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        j.remove("failed"); // absent in old files anyway; be explicit
+        let back = Checkpoint::from_json(&Json::Obj(j)).unwrap();
+        assert!(back.failed.is_empty());
+    }
+
+    #[test]
+    fn interleaved_saves_always_leave_a_complete_checkpoint() {
+        // Satellite: racing savers over ONE path (journal callback vs.
+        // final writer, or two processes) must never corrupt the file —
+        // every load observes exactly one of the competing snapshots,
+        // never a mix or a truncation. The unique temp names make each
+        // rename publish a complete file.
+        let path = tmp("interleaved");
+        let _ = std::fs::remove_file(&path);
+        let fp = Fingerprint::anonymous("probe");
+        let mk = |n: usize| {
+            let records = (0..n)
+                .map(|i| Evaluation::scalar(2 + i as u32, 0.5))
+                .collect();
+            Checkpoint::partial(fp.clone(), (2..=64).collect(), records)
+        };
+        std::thread::scope(|scope| {
+            for w in 0..4 {
+                let path = &path;
+                let mk = &mk;
+                scope.spawn(move || {
+                    for round in 0..12 {
+                        mk(1 + (w * 12 + round) % 40).save(path).unwrap();
+                        // Every intermediate observation parses and is
+                        // internally consistent.
+                        let cp = Checkpoint::load(path).unwrap();
+                        assert_eq!(cp.version, CHECKPOINT_VERSION);
+                        assert_eq!(cp.domain.len(), 63);
+                        assert!(!cp.records.is_empty());
+                    }
+                });
+            }
+        });
+        let cp = Checkpoint::load(&path).unwrap();
+        assert!(!cp.records.is_empty());
+        // No temp-file litter once every saver has renamed or cleaned up.
+        let dir = path.parent().unwrap();
+        let stem = path.file_name().unwrap().to_string_lossy().to_string();
+        let leftovers: Vec<String> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().to_string())
+            .filter(|n| n != &stem && n.starts_with(stem.trim_end_matches(".json")))
+            .collect();
+        assert!(leftovers.is_empty(), "temp litter: {leftovers:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn faulty_session_quarantines_and_resume_skips_failed_ks() {
+        use crate::coordinator::fault::RetryPolicy;
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        // k = 13 always panics; everything else scores a square wave.
+        struct Poisoned {
+            fits: AtomicU64,
+        }
+        impl KEvaluator for Poisoned {
+            fn evaluate(&self, k: u32) -> Evaluation {
+                // ORDER: Relaxed — test-only counter, read after join.
+                self.fits.fetch_add(1, Ordering::Relaxed);
+                assert!(k != 13, "poisoned k");
+                Evaluation::scalar(k, if k <= 20 { 0.9 } else { 0.1 })
+            }
+            fn fingerprint(&self) -> Fingerprint {
+                Fingerprint::anonymous("poisoned")
+            }
+        }
+
+        let ks: Vec<u32> = (2..=24).collect();
+        let path = tmp("faulty");
+        let _ = std::fs::remove_file(&path);
+        let eval = Poisoned {
+            fits: AtomicU64::new(0),
+        };
+        let faults = FaultPolicy {
+            retry: Some(RetryPolicy::with_attempts(3)),
+            lease_ttl: 8,
+        };
+        let out = SearchSession::new(&eval, pol())
+            .with_checkpoint(&path)
+            .with_faults(faults)
+            .run(&ks)
+            .unwrap();
+        // Graceful degradation: the poisoned k is quarantined, the
+        // search still answers from the surviving domain.
+        assert_eq!(out.result.k_optimal, Some(20));
+        assert!(out.result.partial);
+        assert_eq!(out.result.failed_ks, vec![13]);
+        assert_eq!(out.failed.len(), 1);
+        assert_eq!(out.failed[0].k, 13);
+        assert_eq!(out.failed[0].attempts, 3);
+
+        // The checkpoint carries the quarantine...
+        let cp = Checkpoint::load(&path).unwrap();
+        assert_eq!(cp.failed.len(), 1);
+        assert_eq!(cp.failed[0].k, 13);
+
+        // ...and resume does not retry-loop it: zero fits of 13 (and
+        // zero re-fits of anything checkpointed).
+        let eval2 = Poisoned {
+            fits: AtomicU64::new(0),
+        };
+        let resumed = SearchSession::new(&eval2, pol())
+            .with_checkpoint(&path)
+            .with_faults(faults)
+            .resume(&ks)
+            .unwrap();
+        assert_eq!(eval2.fits.load(Ordering::Relaxed), 0, "zero re-fits");
+        assert_eq!(resumed.result.k_optimal, Some(20));
+        assert_eq!(resumed.result.failed_ks, vec![13]);
+        let _ = std::fs::remove_file(&path);
     }
 }

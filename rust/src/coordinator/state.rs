@@ -23,6 +23,10 @@ const NO_FLOOR: i64 = -1;
 const NO_CEIL: i64 = i64::MAX;
 /// Sentinel: no candidate optimal yet.
 const NO_BEST: i64 = -1;
+/// Lease slot sentinel: the k is settled (published or quarantined) —
+/// the lease never expires again. `u64::MAX` so a monotone `fetch_max`
+/// merge can never downgrade a settled slot.
+const LEASE_DONE: u64 = u64::MAX;
 
 /// The candidate optimal: k and its score.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -42,6 +46,26 @@ pub enum Admission {
     PrunedByStop,
     /// Another worker already claimed this k (or k is outside the domain).
     AlreadyClaimed,
+    /// The k is quarantined: its evaluator exhausted the retry budget.
+    /// The search routes around it (no visit, no fit).
+    Failed,
+}
+
+/// Claim-lifecycle gossip riding a
+/// [`Broadcast`](super::rank::Broadcast): how rank-local lease tables
+/// learn about each other's claims so a dead rank's ks are re-admitted
+/// by survivors while live ranks' work is not stolen. Advisory like the
+/// prune bounds — losing one costs duplicate work, never correctness
+/// (the claim CAS and the monotone publication protocol stay the
+/// authority).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClaimEvent {
+    /// A worker took (or renewed) a lease on k.
+    Leased(u32),
+    /// k completed: its lease is settled permanently.
+    Done(u32),
+    /// k exhausted its retry budget: quarantined everywhere.
+    Failed(u32),
 }
 
 /// Process-wide shared search state over a fixed k domain.
@@ -70,11 +94,46 @@ pub struct SharedState {
     /// state's domain. Off the admission hot path (only touched on a
     /// rejected merge and at shutdown), so a small mutex is fine.
     rejected_bests: Mutex<Vec<Candidate>>,
+    /// Claim-lease TTL in lease-clock ticks; 0 = leases disabled
+    /// (claims are permanent — the pre-fault-tolerance behavior).
+    lease_ttl: u64,
+    /// Logical lease clock: advanced by completions, failures and
+    /// recovery-sweep passes — never wall-clock (the replay-determinism
+    /// contract, bleedlint L6). Starts at 1 so a lease stamp of 0
+    /// always means "unclaimed".
+    epoch: AtomicU64,
+    /// One lease stamp per k-position: 0 = unclaimed, [`LEASE_DONE`] =
+    /// settled, otherwise the lease-clock value at which the current
+    /// holder took the k. A holder that stops completing work stops
+    /// advancing the clock past its stamp+TTL only by the work of
+    /// *others* — i.e. a dead worker's leases expire exactly when the
+    /// survivors have made TTL ticks of progress.
+    leases: Vec<AtomicU64>,
+    /// One bit per k-position: quarantined after exhausting its retry
+    /// budget. Set once, never cleared.
+    failed: Vec<AtomicU64>,
 }
 
 impl SharedState {
     /// Build the state over the (ascending, deduplicated) search domain.
     pub fn new(domain: &[u32]) -> Self {
+        Self::with_leases(domain, 0)
+    }
+
+    /// Build the state with claim leases enabled: a claim taken at
+    /// lease-clock `e` expires once the clock passes `e + ttl`, after
+    /// which any worker may re-admit the k (`ttl = 0` disables leases —
+    /// identical behavior to [`SharedState::new`]). The clock ticks on
+    /// completions and recovery-sweep passes, so the TTL is measured in
+    /// units of *other workers' progress*, not wall-clock time
+    /// (bleedlint L6: the session path reads no clocks).
+    ///
+    /// Lease theft is safe by construction: the worst case is a
+    /// duplicate evaluation of a k whose slow-but-alive holder finishes
+    /// anyway — the `EvalCache` dedups the fit and the publication
+    /// protocol is monotone, so duplicates waste work, never break the
+    /// answer (the same argument as lost broadcasts).
+    pub fn with_leases(domain: &[u32], ttl: u64) -> Self {
         debug_assert!(
             domain.windows(2).all(|w| w[0] < w[1]),
             "domain must be ascending"
@@ -88,7 +147,17 @@ impl SharedState {
             claimed: (0..words).map(|_| AtomicU64::new(0)).collect(),
             scores: (0..domain.len()).map(|_| AtomicU64::new(0)).collect(),
             rejected_bests: Mutex::new(Vec::new()),
+            lease_ttl: ttl,
+            epoch: AtomicU64::new(1),
+            leases: (0..domain.len()).map(|_| AtomicU64::new(0)).collect(),
+            failed: (0..words).map(|_| AtomicU64::new(0)).collect(),
         }
+    }
+
+    /// Whether claims expire ([`SharedState::with_leases`] with a
+    /// non-zero TTL).
+    pub fn leases_enabled(&self) -> bool {
+        self.lease_ttl != 0
     }
 
     /// Position of k in the domain.
@@ -119,15 +188,193 @@ impl SharedState {
             return Admission::AlreadyClaimed;
         };
         let bit = 1u64 << (pos % 64);
-        // ORDER: Relaxed — claim exclusivity needs only the RMW
-        // atomicity of fetch_or on this word (exactly one caller sees
-        // the bit clear); no other memory is published via the claim,
-        // so no acquire/release edge is required.
-        let prev = self.claimed[pos / 64].fetch_or(bit, Ordering::Relaxed);
-        if prev & bit != 0 {
-            Admission::AlreadyClaimed
-        } else {
-            Admission::Admit
+        // ORDER: Relaxed — the quarantine bit is set-once and terminal;
+        // a stale (unset) read merely admits a doomed k whose evaluator
+        // layer re-asserts the quarantine. The failure details travel
+        // through the evaluator's mutex, not this bit.
+        if self.failed[pos / 64].load(Ordering::Relaxed) & bit != 0 {
+            return Admission::Failed;
+        }
+        if self.lease_ttl == 0 {
+            // ORDER: Relaxed — claim exclusivity needs only the RMW
+            // atomicity of fetch_or on this word (exactly one caller sees
+            // the bit clear); no other memory is published via the claim,
+            // so no acquire/release edge is required.
+            let prev = self.claimed[pos / 64].fetch_or(bit, Ordering::Relaxed);
+            return if prev & bit != 0 {
+                Admission::AlreadyClaimed
+            } else {
+                Admission::Admit
+            };
+        }
+        // Leased claims: take the slot if it is unclaimed or expired.
+        // ORDER: Relaxed — the lease clock is a logical counter; a stale
+        // read only delays expiry (under-steals), never corrupts data.
+        let now = self.epoch.load(Ordering::Relaxed).max(1);
+        let slot = &self.leases[pos];
+        // ORDER: Relaxed — advisory snapshot; the CAS below re-validates.
+        let mut cur = slot.load(Ordering::Relaxed);
+        loop {
+            if cur == LEASE_DONE {
+                return Admission::AlreadyClaimed;
+            }
+            if cur != 0 && now.saturating_sub(cur) <= self.lease_ttl {
+                // Live lease held by someone else.
+                return Admission::AlreadyClaimed;
+            }
+            // ORDER: Relaxed CAS — lease exclusivity needs only the RMW
+            // atomicity (exactly one caller moves the slot from `cur`);
+            // evaluation results travel through the publish protocol,
+            // not the lease slot, so no acquire/release edge is needed.
+            // A lost race re-reads the new holder's stamp and bails on
+            // the live-lease check above.
+            match slot.compare_exchange(cur, now, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => {
+                    // Keep the permanent claim bitmap as observability
+                    // data (checkpoints list every k a worker took).
+                    // ORDER: Relaxed — set-once observability bit, no
+                    // data published through it (see claimed_ks).
+                    self.claimed[pos / 64].fetch_or(bit, Ordering::Relaxed);
+                    return Admission::Admit;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Advance the lease clock one tick without completing anything —
+    /// the recovery sweep's heartbeat, so a dead worker's leases expire
+    /// even when no other evaluation is finishing.
+    pub fn lease_tick(&self) {
+        if self.lease_ttl != 0 {
+            // ORDER: Relaxed — logical lease clock: a monotone counter
+            // consulted only for advisory expiry decisions; staleness
+            // delays re-admission, nothing more.
+            self.epoch.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Settle k's lease after a successful publication. Returns whether
+    /// this call performed the settling transition — the gate that keeps
+    /// exactly one eval visit per k when sweeps duplicate work. Always
+    /// true with leases disabled (the set-once claim bit is the gate
+    /// there).
+    pub fn lease_complete(&self, k: u32) -> bool {
+        if self.lease_ttl == 0 {
+            return true;
+        }
+        let Some(pos) = self.pos(k) else {
+            return false;
+        };
+        // ORDER: Relaxed swap — LEASE_DONE is a terminal sentinel and
+        // RMW atomicity alone picks the single caller that observes the
+        // transition; the evaluation's data travels via the publish
+        // protocol / the engine's log mutex, not this slot.
+        let prev = self.leases[pos].swap(LEASE_DONE, Ordering::Relaxed);
+        // ORDER: Relaxed — logical lease clock (see lease_tick).
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+        prev != LEASE_DONE
+    }
+
+    /// Whether k is currently under an (unsettled) lease — live or
+    /// expired-but-unstolen. The recovery sweep's "someone may still be
+    /// working here" signal. Always false with leases disabled.
+    pub fn lease_outstanding(&self, k: u32) -> bool {
+        if self.lease_ttl == 0 {
+            return false;
+        }
+        let Some(pos) = self.pos(k) else {
+            return false;
+        };
+        // ORDER: Relaxed — advisory snapshot for sweep termination; the
+        // admit CAS re-validates before any work is taken.
+        let v = self.leases[pos].load(Ordering::Relaxed);
+        v != 0 && v != LEASE_DONE
+    }
+
+    /// Quarantine k: its evaluator exhausted the retry budget. Settles
+    /// any lease so sweeps stop re-admitting it. Returns whether this
+    /// call performed the transition (the gate for the single `Failed`
+    /// visit and the failure broadcast).
+    pub fn mark_failed(&self, k: u32) -> bool {
+        let Some(pos) = self.pos(k) else {
+            return false;
+        };
+        let bit = 1u64 << (pos % 64);
+        // ORDER: Relaxed — terminal set-once quarantine bit; RMW
+        // atomicity alone picks the single transition winner. The
+        // failure details travel through the evaluator layer's mutex,
+        // not this bit.
+        let prev = self.failed[pos / 64].fetch_or(bit, Ordering::Relaxed);
+        if self.lease_ttl != 0 {
+            // ORDER: Relaxed — terminal sentinel (see lease_complete).
+            self.leases[pos].store(LEASE_DONE, Ordering::Relaxed);
+            // ORDER: Relaxed — logical lease clock (see lease_tick).
+            self.epoch.fetch_add(1, Ordering::Relaxed);
+        }
+        prev & bit == 0
+    }
+
+    /// Whether k is quarantined.
+    pub fn is_failed(&self, k: u32) -> bool {
+        self.pos(k).is_some_and(|pos| {
+            // ORDER: Relaxed — set-once bit, advisory read (see admit).
+            self.failed[pos / 64].load(Ordering::Relaxed) & (1u64 << (pos % 64)) != 0
+        })
+    }
+
+    /// Every quarantined k, ascending.
+    pub fn failed_ks(&self) -> Vec<u32> {
+        self.domain
+            .iter()
+            .enumerate()
+            .filter(|(pos, _)| {
+                // ORDER: Relaxed — observability snapshot of set-once
+                // bits (same contract as claimed_ks).
+                self.failed[pos / 64].load(Ordering::Relaxed) & (1u64 << (pos % 64)) != 0
+            })
+            .map(|(_, &k)| k)
+            .collect()
+    }
+
+    /// Merge claim-lifecycle gossip from a peer rank. All merges are
+    /// advisory and monotone-safe: a lost or reordered event costs
+    /// duplicate work at worst (see [`ClaimEvent`]).
+    pub fn merge_claim_event(&self, ev: ClaimEvent) {
+        match ev {
+            ClaimEvent::Leased(k) => {
+                if self.lease_ttl == 0 {
+                    return;
+                }
+                if let Some(pos) = self.pos(k) {
+                    // ORDER: Relaxed — logical lease clock (see admit).
+                    let now = self.epoch.load(Ordering::Relaxed).max(1);
+                    // ORDER: Relaxed fetch_max — monotone merge: stamps
+                    // only refresh forward and LEASE_DONE (u64::MAX)
+                    // wins every max, so a settled slot can never be
+                    // reopened by stale gossip. Advisory: staleness only
+                    // means earlier theft, i.e. duplicate work.
+                    self.leases[pos].fetch_max(now, Ordering::Relaxed);
+                }
+            }
+            ClaimEvent::Done(k) => {
+                if self.lease_ttl == 0 {
+                    return;
+                }
+                if let Some(pos) = self.pos(k) {
+                    // ORDER: Relaxed — terminal sentinel store (see
+                    // lease_complete); the peer's result arrives through
+                    // the same broadcast's bound/best merge.
+                    self.leases[pos].store(LEASE_DONE, Ordering::Relaxed);
+                    let bit = 1u64 << (pos % 64);
+                    // ORDER: Relaxed — set-once observability bit (see
+                    // admit): the k is settled remotely.
+                    self.claimed[pos / 64].fetch_or(bit, Ordering::Relaxed);
+                }
+            }
+            ClaimEvent::Failed(k) => {
+                let _ = self.mark_failed(k);
+            }
         }
     }
 
@@ -511,6 +758,130 @@ mod tests {
             st.admit(k, &p);
         }
         assert_eq!(st.claimed_ks(), vec![1, 7, 13, 30]);
+    }
+
+    #[test]
+    fn leases_expire_and_are_retaken() {
+        let st = SharedState::with_leases(&domain(), 2);
+        let p = policy(Mode::Vanilla);
+        assert!(st.leases_enabled());
+        assert_eq!(st.admit(9, &p), Admission::Admit);
+        // Live lease: not re-admittable, but outstanding.
+        assert_eq!(st.admit(9, &p), Admission::AlreadyClaimed);
+        assert!(st.lease_outstanding(9));
+        // Two ticks pass (TTL) — still within the lease.
+        st.lease_tick();
+        st.lease_tick();
+        assert_eq!(st.admit(9, &p), Admission::AlreadyClaimed);
+        // One more tick: expired; a survivor steals the claim.
+        st.lease_tick();
+        assert_eq!(st.admit(9, &p), Admission::Admit);
+        // Completion settles it permanently — no more stealing, ever.
+        assert!(st.lease_complete(9));
+        assert!(!st.lease_complete(9), "settle transition happens once");
+        assert!(!st.lease_outstanding(9));
+        for _ in 0..10 {
+            st.lease_tick();
+        }
+        assert_eq!(st.admit(9, &p), Admission::AlreadyClaimed);
+    }
+
+    #[test]
+    fn zero_ttl_keeps_claims_permanent() {
+        let st = SharedState::new(&domain());
+        let p = policy(Mode::Vanilla);
+        assert!(!st.leases_enabled());
+        assert_eq!(st.admit(9, &p), Admission::Admit);
+        st.lease_tick(); // no-op
+        assert_eq!(st.admit(9, &p), Admission::AlreadyClaimed);
+        assert!(!st.lease_outstanding(9));
+        assert!(st.lease_complete(9), "disabled leases always gate true");
+    }
+
+    #[test]
+    fn completions_advance_the_lease_clock() {
+        // A dead worker's lease expires purely through others' progress:
+        // no explicit ticks, just TTL completions elsewhere.
+        let st = SharedState::with_leases(&domain(), 2);
+        let p = policy(Mode::Vanilla);
+        assert_eq!(st.admit(9, &p), Admission::Admit); // the "dead" holder
+        for k in [3u32, 4, 5] {
+            assert_eq!(st.admit(k, &p), Admission::Admit);
+            st.lease_complete(k);
+        }
+        assert_eq!(st.admit(9, &p), Admission::Admit, "expired via progress");
+    }
+
+    #[test]
+    fn failed_ks_are_quarantined_and_sticky() {
+        let st = SharedState::with_leases(&domain(), 4);
+        let p = policy(Mode::Vanilla);
+        assert_eq!(st.admit(6, &p), Admission::Admit);
+        assert!(st.mark_failed(6), "first failure transitions");
+        assert!(!st.mark_failed(6), "quarantine is set-once");
+        assert!(st.is_failed(6));
+        assert_eq!(st.admit(6, &p), Admission::Failed);
+        assert!(!st.lease_outstanding(6), "failure settles the lease");
+        assert_eq!(st.failed_ks(), vec![6]);
+        // Quarantine also works without leases.
+        let flat = SharedState::new(&domain());
+        assert!(flat.mark_failed(11));
+        assert_eq!(flat.admit(11, &p), Admission::Failed);
+        assert_eq!(flat.failed_ks(), vec![11]);
+    }
+
+    #[test]
+    fn claim_events_merge_monotonically() {
+        let st = SharedState::with_leases(&domain(), 2);
+        let p = policy(Mode::Vanilla);
+        // A remote lease blocks local admission until it expires.
+        st.merge_claim_event(ClaimEvent::Leased(9));
+        assert_eq!(st.admit(9, &p), Admission::AlreadyClaimed);
+        for _ in 0..3 {
+            st.lease_tick();
+        }
+        // A re-broadcast renews the lease rather than downgrading it...
+        st.merge_claim_event(ClaimEvent::Leased(9));
+        assert_eq!(st.admit(9, &p), Admission::AlreadyClaimed);
+        // ...and Done settles it so stale Leased gossip cannot reopen.
+        st.merge_claim_event(ClaimEvent::Done(9));
+        st.merge_claim_event(ClaimEvent::Leased(9));
+        for _ in 0..8 {
+            st.lease_tick();
+        }
+        assert_eq!(st.admit(9, &p), Admission::AlreadyClaimed);
+        assert!(st.claimed_ks().contains(&9), "remote done is observable");
+        // Remote failures quarantine locally.
+        st.merge_claim_event(ClaimEvent::Failed(13));
+        assert_eq!(st.admit(13, &p), Admission::Failed);
+        // Claim events on lease-less states are inert (except Failed).
+        let flat = SharedState::new(&domain());
+        flat.merge_claim_event(ClaimEvent::Leased(9));
+        flat.merge_claim_event(ClaimEvent::Done(9));
+        assert_eq!(flat.admit(9, &p), Admission::Admit);
+    }
+
+    #[test]
+    fn expired_lease_steal_is_exclusive() {
+        // Many threads race to steal one expired lease: exactly one wins
+        // per expiry window.
+        let ks: Vec<u32> = (1..=8).collect();
+        let st = SharedState::with_leases(&ks, 1);
+        let p = policy(Mode::Vanilla);
+        assert_eq!(st.admit(5, &p), Admission::Admit);
+        st.lease_tick();
+        st.lease_tick(); // lease on 5 is now expired
+        let stolen = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    if st.admit(5, &p) == Admission::Admit {
+                        stolen.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(stolen.load(Ordering::SeqCst), 1);
     }
 
     #[test]

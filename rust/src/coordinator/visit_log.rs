@@ -16,6 +16,10 @@ pub enum Decision {
     Rejected,
     /// Never evaluated — discarded by a pruning bound before execution.
     PrunedSkip,
+    /// Evaluation failed permanently: the evaluator exhausted its retry
+    /// budget and the k was quarantined (score is NaN). The search
+    /// routed around it — a partial result, not a crash.
+    Failed,
 }
 
 /// One entry in the visit log.
@@ -50,13 +54,14 @@ impl VisitLog {
         self.visits.push(v);
     }
 
-    /// k values that were actually evaluated (model+scorer executed),
-    /// in evaluation order.
+    /// k values that were actually evaluated (model+scorer executed and
+    /// produced a score), in evaluation order. Failed ks are excluded —
+    /// they have no score; [`VisitLog::failed`] lists them.
     pub fn evaluated(&self) -> Vec<u32> {
         let mut v: Vec<&Visit> = self
             .visits
             .iter()
-            .filter(|v| v.decision != Decision::PrunedSkip)
+            .filter(|v| matches!(v.decision, Decision::Selected | Decision::Rejected))
             .collect();
         v.sort_by_key(|v| v.seq);
         v.iter().map(|v| v.k).collect()
@@ -74,10 +79,25 @@ impl VisitLog {
         v
     }
 
+    /// k values quarantined after exhausting their retry budget,
+    /// ascending, deduplicated (multiple rank states may each record
+    /// the quarantine transition they observed).
+    pub fn failed(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .visits
+            .iter()
+            .filter(|v| v.decision == Decision::Failed)
+            .map(|v| v.k)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
     pub fn evaluated_count(&self) -> usize {
         self.visits
             .iter()
-            .filter(|v| v.decision != Decision::PrunedSkip)
+            .filter(|v| matches!(v.decision, Decision::Selected | Decision::Rejected))
             .count()
     }
 
@@ -94,7 +114,9 @@ impl VisitLog {
     pub fn score_of(&self, k: u32) -> Option<f64> {
         self.visits
             .iter()
-            .find(|v| v.k == k && v.decision != Decision::PrunedSkip)
+            .find(|v| {
+                v.k == k && matches!(v.decision, Decision::Selected | Decision::Rejected)
+            })
             .map(|v| v.score)
     }
 
@@ -125,6 +147,7 @@ impl Decision {
             Decision::Selected => "selected",
             Decision::Rejected => "rejected",
             Decision::PrunedSkip => "pruned",
+            Decision::Failed => "failed",
         }
     }
 
@@ -133,6 +156,7 @@ impl Decision {
             "selected" => Ok(Decision::Selected),
             "rejected" => Ok(Decision::Rejected),
             "pruned" => Ok(Decision::PrunedSkip),
+            "failed" => Ok(Decision::Failed),
             other => Err(format!("unknown decision label '{other}'")),
         }
     }
@@ -236,6 +260,28 @@ mod tests {
     fn empty_log_is_zero_percent() {
         assert_eq!(VisitLog::new().percent_visited(29), 0.0);
         assert_eq!(VisitLog::new().percent_visited(0), 0.0);
+    }
+
+    #[test]
+    fn failed_visits_partition_separately() {
+        let mut log = VisitLog::new();
+        log.push(visit(0, 5, Decision::Selected));
+        log.push(visit(1, 3, Decision::PrunedSkip));
+        let mut f = visit(2, 8, Decision::Failed);
+        f.score = f64::NAN;
+        log.push(f.clone());
+        log.push(f); // duplicate transition from a second rank state
+        // Failed ks are neither evaluated nor pruned, and dedup.
+        assert_eq!(log.evaluated(), vec![5]);
+        assert_eq!(log.pruned(), vec![3]);
+        assert_eq!(log.failed(), vec![8]);
+        assert_eq!(log.evaluated_count(), 1);
+        assert_eq!(log.score_of(8), None, "failed k has no score");
+        // Round-trips through the checkpoint shape.
+        let text = log.to_json().to_string();
+        let back = VisitLog::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.failed(), vec![8]);
+        assert_eq!(Decision::from_label("failed").unwrap(), Decision::Failed);
     }
 
     #[test]

@@ -1,0 +1,437 @@
+//! Deterministic fault injection for the search core (DESIGN.md §3.6).
+//!
+//! Two decorators, both seeded and replayable:
+//!
+//! * [`FaultNet`] wraps any [`Transport`] and drops / duplicates /
+//!   reorders / delays `Broadcast`s per recipient. Binary Bleed's
+//!   messages are *advisory* — a lost bound movement or claim event
+//!   costs wasted work, never a wrong answer — so the property suites
+//!   assert k\* is invariant under **any** fault plan.
+//! * [`ChaosEvaluator`] wraps any [`KEvaluator`] and injects panics,
+//!   errors and slow fits on a per-(k, call-index) schedule, so retry /
+//!   quarantine / worker-death paths are exercised reproducibly.
+//!
+//! Determinism contract: every decision is drawn from a [`Pcg32`]
+//! stream derived from the plan seed — per *rank* for the net (each
+//! rank's fault sequence depends only on its own drain order, which is
+//! deterministic in serial and event regimes), per *(k, call-index)*
+//! for the evaluator (independent of thread interleaving entirely).
+//! Re-running a plan with the same seed replays the same faults.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::engine::Transport;
+use crate::coordinator::evaluation::{EvalError, EvalOutcome, Evaluation, Fingerprint, KEvaluator};
+use crate::coordinator::rank::Broadcast;
+use crate::util::Pcg32;
+
+/// Seeded message-fault schedule. Probabilities are per message per
+/// recipient, decided at drain time.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// P(message silently dropped).
+    pub drop: f64,
+    /// P(message delivered twice in one drain).
+    pub duplicate: f64,
+    /// P(a drained batch is shuffled).
+    pub reorder: f64,
+    /// P(message withheld until a later drain).
+    pub delay: f64,
+    /// Upper bound on how many drains a delayed message is withheld
+    /// (≥ 1 when `delay > 0`; a held message always matures, so no
+    /// message is delayed forever).
+    pub max_hold: u32,
+}
+
+impl FaultPlan {
+    /// No faults — the decorated transport behaves identically to the
+    /// inner one (the control arm of every property).
+    pub fn none(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            drop: 0.0,
+            duplicate: 0.0,
+            reorder: 0.0,
+            delay: 0.0,
+            max_hold: 0,
+        }
+    }
+
+    /// A moderately hostile network: every fault class active.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            drop: 0.25,
+            duplicate: 0.25,
+            reorder: 0.5,
+            delay: 0.25,
+            max_hold: 3,
+        }
+    }
+
+    /// Every message lost — the degenerate worst case (each rank runs
+    /// on local knowledge only).
+    pub fn blackout(seed: u64) -> FaultPlan {
+        FaultPlan {
+            drop: 1.0,
+            ..FaultPlan::none(seed)
+        }
+    }
+}
+
+/// Counts of injected faults, for asserting a plan actually fired.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub dropped: u64,
+    pub duplicated: u64,
+    pub delayed: u64,
+    pub reordered_batches: u64,
+}
+
+/// Per-recipient fault lane: its own rng stream plus withheld messages.
+struct FaultLane {
+    rng: Pcg32,
+    /// (drains left to withhold, payload).
+    held: Vec<(u32, Broadcast)>,
+}
+
+/// Transport decorator injecting a [`FaultPlan`] at the delivery edge.
+///
+/// `broadcast` passes straight through to the inner transport (faults
+/// model the *link*, and deciding per recipient at drain time lets one
+/// send be dropped for rank 1 but delivered to rank 2 — the asymmetric
+/// case that actually stresses bound merging).
+pub struct FaultNet<T: Transport> {
+    inner: T,
+    plan: FaultPlan,
+    lanes: Mutex<Vec<FaultLane>>,
+    stats: Mutex<FaultStats>,
+}
+
+impl<T: Transport> FaultNet<T> {
+    pub fn new(inner: T, ranks: usize, plan: FaultPlan) -> FaultNet<T> {
+        let lanes = (0..ranks.max(1))
+            .map(|rank| FaultLane {
+                // One independent stream per recipient keeps each
+                // rank's fault sequence a function of its own drain
+                // count alone.
+                rng: Pcg32::with_stream(plan.seed, rank as u64),
+                held: Vec::new(),
+            })
+            .collect();
+        FaultNet {
+            inner,
+            plan,
+            lanes: Mutex::new(lanes),
+            stats: Mutex::new(FaultStats::default()),
+        }
+    }
+
+    pub fn stats(&self) -> FaultStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// The decorated transport, for draining leftovers in tests.
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: Transport> Transport for FaultNet<T> {
+    fn broadcast(&self, from: usize, now: Duration, msg: Broadcast) {
+        self.inner.broadcast(from, now, msg);
+    }
+
+    fn drain(&self, rank: usize, now: Duration) -> Vec<Broadcast> {
+        let fresh = self.inner.drain(rank, now);
+        let mut lanes = self.lanes.lock().unwrap();
+        let plan = &self.plan;
+        let mut stats = FaultStats::default();
+        let lane = &mut lanes[rank];
+        let mut out = Vec::new();
+        // Withheld messages age by one drain; matured ones deliver
+        // ahead of the fresh batch (they are older traffic).
+        for (hold, msg) in std::mem::take(&mut lane.held) {
+            if hold == 0 {
+                out.push(msg);
+            } else {
+                lane.held.push((hold - 1, msg));
+            }
+        }
+        for msg in fresh {
+            if lane.rng.next_f64() < plan.drop {
+                stats.dropped += 1;
+                continue;
+            }
+            if plan.max_hold > 0 && lane.rng.next_f64() < plan.delay {
+                let hold = lane.rng.gen_range(0, u64::from(plan.max_hold)) as u32;
+                lane.held.push((hold, msg));
+                stats.delayed += 1;
+                continue;
+            }
+            out.push(msg);
+            if lane.rng.next_f64() < plan.duplicate {
+                out.push(msg);
+                stats.duplicated += 1;
+            }
+        }
+        if out.len() > 1 && lane.rng.next_f64() < plan.reorder {
+            lane.rng.shuffle(&mut out);
+            stats.reordered_batches += 1;
+        }
+        drop(lanes);
+        let mut s = self.stats.lock().unwrap();
+        s.dropped += stats.dropped;
+        s.duplicated += stats.duplicated;
+        s.delayed += stats.delayed;
+        s.reordered_batches += stats.reordered_batches;
+        out
+    }
+}
+
+/// Seeded evaluator-fault schedule: what fraction of fit attempts
+/// panic, error, or stall.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    /// P(an attempt panics) — exercises `catch_unwind` containment and,
+    /// without containment, worker death.
+    pub panic_p: f64,
+    /// P(an attempt returns `Err`) — the graceful failure path.
+    pub error_p: f64,
+    /// P(an attempt sleeps `slow_for` first) — exercises lease expiry.
+    pub slow_p: f64,
+    pub slow_for: Duration,
+}
+
+impl ChaosPlan {
+    pub fn none(seed: u64) -> ChaosPlan {
+        ChaosPlan {
+            seed,
+            panic_p: 0.0,
+            error_p: 0.0,
+            slow_p: 0.0,
+            slow_for: Duration::ZERO,
+        }
+    }
+
+    /// Flaky-but-recoverable: a third of attempts fail somehow, so a
+    /// 3-attempt retry budget almost always converges.
+    pub fn flaky(seed: u64) -> ChaosPlan {
+        ChaosPlan {
+            seed,
+            panic_p: 0.15,
+            error_p: 0.15,
+            slow_p: 0.1,
+            slow_for: Duration::from_millis(1),
+        }
+    }
+}
+
+/// Evaluator decorator injecting a [`ChaosPlan`].
+///
+/// Faults are decided per (k, call index): the i-th attempt at a given
+/// k draws from `Pcg32::with_stream(seed ^ k, i)`, so the schedule is
+/// identical regardless of which worker/thread lands the attempt, and a
+/// retry policy re-running attempt i+1 sees a fresh (but still
+/// deterministic) draw. ks listed in `always_fail` error on every
+/// attempt — the quarantine path's guaranteed trigger.
+pub struct ChaosEvaluator<'a> {
+    inner: &'a dyn KEvaluator,
+    plan: ChaosPlan,
+    always_fail: Vec<u32>,
+    /// Per-k attempt counter assigning call indices.
+    calls: Mutex<BTreeMap<u32, u64>>,
+}
+
+impl<'a> ChaosEvaluator<'a> {
+    pub fn new(inner: &'a dyn KEvaluator, plan: ChaosPlan) -> ChaosEvaluator<'a> {
+        ChaosEvaluator {
+            inner,
+            plan,
+            always_fail: Vec::new(),
+            calls: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// ks that fail (with `Err`, not a panic) on every attempt.
+    pub fn with_always_fail(mut self, ks: impl IntoIterator<Item = u32>) -> ChaosEvaluator<'a> {
+        self.always_fail = ks.into_iter().collect();
+        self.always_fail.sort_unstable();
+        self.always_fail.dedup();
+        self
+    }
+
+    /// Total attempts ever made at `k` (includes injected failures).
+    pub fn attempts_at(&self, k: u32) -> u64 {
+        self.calls.lock().unwrap().get(&k).copied().unwrap_or(0)
+    }
+}
+
+impl KEvaluator for ChaosEvaluator<'_> {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        match self.try_evaluate(k) {
+            Ok(rec) => rec,
+            // Uncontained callers experience injected errors as panics —
+            // the pre-fault-tolerance crash semantics.
+            Err(err) => panic!("{err}"),
+        }
+    }
+
+    fn try_evaluate(&self, k: u32) -> EvalOutcome {
+        let call = {
+            let mut calls = self.calls.lock().unwrap();
+            let c = calls.entry(k).or_insert(0);
+            *c += 1;
+            *c - 1
+        };
+        if self.always_fail.binary_search(&k).is_ok() {
+            return Err(EvalError {
+                k,
+                attempts: 1,
+                reason: "chaos: always-fail k".to_string(),
+            });
+        }
+        let mut rng = Pcg32::with_stream(self.plan.seed ^ u64::from(k), call);
+        let roll = rng.next_f64();
+        if roll < self.plan.panic_p {
+            panic!("chaos: injected panic at k={k} (call {call})");
+        }
+        if roll < self.plan.panic_p + self.plan.error_p {
+            return Err(EvalError {
+                k,
+                attempts: 1,
+                reason: format!("chaos: injected error at k={k} (call {call})"),
+            });
+        }
+        if roll < self.plan.panic_p + self.plan.error_p + self.plan.slow_p {
+            std::thread::sleep(self.plan.slow_for);
+        }
+        self.inner.try_evaluate(k)
+    }
+
+    fn name(&self) -> &str {
+        "chaos"
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        self.inner.fingerprint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MpscNet;
+    use crate::coordinator::evaluation::ScorerEvaluator;
+    use crate::coordinator::state::Candidate;
+
+    fn bmsg(floor: u32) -> Broadcast {
+        Broadcast::bounds(0, Some(floor), None, Some(Candidate { k: floor, score: 0.9 }))
+    }
+
+    #[test]
+    fn none_plan_is_transparent() {
+        let net = FaultNet::new(MpscNet::new(2), 2, FaultPlan::none(7));
+        for k in [3u32, 5, 9] {
+            net.broadcast(0, Duration::ZERO, bmsg(k));
+        }
+        let got = net.drain(1, Duration::ZERO);
+        assert_eq!(
+            got.iter().map(|m| m.floor.unwrap()).collect::<Vec<_>>(),
+            vec![3, 5, 9]
+        );
+        assert_eq!(net.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn blackout_drops_everything() {
+        let net = FaultNet::new(MpscNet::new(2), 2, FaultPlan::blackout(7));
+        for k in [3u32, 5, 9] {
+            net.broadcast(0, Duration::ZERO, bmsg(k));
+        }
+        assert!(net.drain(1, Duration::ZERO).is_empty());
+        assert_eq!(net.stats().dropped, 3);
+    }
+
+    #[test]
+    fn delayed_messages_always_mature() {
+        let plan = FaultPlan {
+            seed: 11,
+            drop: 0.0,
+            duplicate: 0.0,
+            reorder: 0.0,
+            delay: 1.0,
+            max_hold: 3,
+        };
+        let net = FaultNet::new(MpscNet::new(2), 2, plan);
+        net.broadcast(0, Duration::ZERO, bmsg(5));
+        let mut delivered = 0;
+        // One drain to withhold + at most max_hold to mature.
+        for _ in 0..=plan.max_hold {
+            delivered += net.drain(1, Duration::ZERO).len();
+        }
+        assert_eq!(delivered, 1, "a delayed message is never lost");
+        assert_eq!(net.stats().delayed, 1);
+    }
+
+    #[test]
+    fn fault_sequences_replay_per_seed() {
+        let run = |seed: u64| -> (Vec<u32>, FaultStats) {
+            let net = FaultNet::new(MpscNet::new(2), 2, FaultPlan::chaos(seed));
+            for k in 2..40u32 {
+                net.broadcast(0, Duration::ZERO, bmsg(k));
+            }
+            let mut seen = Vec::new();
+            for _ in 0..8 {
+                seen.extend(net.drain(1, Duration::ZERO).iter().map(|m| m.floor.unwrap()));
+            }
+            (seen, net.stats())
+        };
+        let (a, sa) = run(42);
+        let (b, sb) = run(42);
+        assert_eq!(a, b, "same seed, same fault schedule");
+        assert_eq!(sa, sb);
+        let (c, _) = run(43);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn chaos_evaluator_schedule_is_per_call_deterministic() {
+        let scorer = |k: u32| f64::from(k);
+        let adapter = ScorerEvaluator::new(&scorer);
+        let outcome_of = |plan: ChaosPlan, k: u32, call_count: usize| -> Vec<bool> {
+            let chaos = ChaosEvaluator::new(&adapter, plan);
+            (0..call_count)
+                .map(|_| {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        chaos.try_evaluate(k).is_ok()
+                    }))
+                    .unwrap_or(false)
+                })
+                .collect()
+        };
+        let a = outcome_of(ChaosPlan::flaky(9), 7, 64);
+        let b = outcome_of(ChaosPlan::flaky(9), 7, 64);
+        assert_eq!(a, b);
+        assert!(
+            a.iter().any(|ok| *ok) && a.iter().any(|ok| !*ok),
+            "flaky plan mixes successes and failures over 64 calls: {a:?}"
+        );
+    }
+
+    #[test]
+    fn always_fail_ks_error_every_attempt() {
+        let scorer = |k: u32| f64::from(k);
+        let adapter = ScorerEvaluator::new(&scorer);
+        let chaos = ChaosEvaluator::new(&adapter, ChaosPlan::none(1)).with_always_fail([7]);
+        for _ in 0..4 {
+            assert!(chaos.try_evaluate(7).is_err());
+        }
+        assert!(chaos.try_evaluate(8).is_ok());
+        assert_eq!(chaos.attempts_at(7), 4);
+    }
+}

@@ -9,6 +9,8 @@
 
 use crate::util::Pcg32;
 
+pub mod fault;
+
 /// Environment knob: `BB_PROP_CASES` scales case counts (CI vs soak).
 pub fn cases(default: usize) -> usize {
     std::env::var("BB_PROP_CASES")

@@ -10,17 +10,21 @@
 //!   at most one fit per key through a shared [`EvalCache`].
 //! * Dual-metric report: a silhouette search and a Davies-Bouldin
 //!   search over one cache cost one K-means fit per distinct k.
+//! * Killed-rank containment (ISSUE 8): a worker dying mid-fit inside a
+//!   multi-rank MpscNet session is contained by the claim leases — its
+//!   leased ks expire, survivors steal them, and the run converges to
+//!   the uninterrupted answer without a crash or a duplicate fit.
 
 use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::Mutex;
 
 use binary_bleed::coordinator::{
-    bleed_order, run_threaded_ev, Checkpoint, EvalCache, Evaluation, Fingerprint, KEvaluator,
-    Loopback, MetricView, Mode, ScorerEvaluator, SearchPolicy, SearchSession, SharedState,
-    Thresholds, WorkPlan, WorkerSlot,
+    bleed_order, run_threaded_ev, Checkpoint, EvalCache, Evaluation, FaultPolicy, Fingerprint,
+    KEvaluator, Loopback, MetricView, Mode, ScorerEvaluator, SearchPolicy, SearchSession,
+    SharedState, Thresholds, WorkPlan, WorkerSlot,
 };
 use binary_bleed::data::gaussian_blobs;
 use binary_bleed::model::{KMeansEvaluator, KMeansScoring};
@@ -360,4 +364,97 @@ fn parallel_resume_reaches_same_optimum_with_zero_refits() {
     }
     assert_eq!(second.stats.preloaded, cp.records.len() as u64);
     let _ = std::fs::remove_file(&path);
+}
+
+/// Panics exactly once, on the first fit of `kill_k` — one engine
+/// worker dies mid-evaluation and never comes back.
+struct DieOnce<'a> {
+    inner: &'a dyn KEvaluator,
+    armed: AtomicBool,
+    kill_k: u32,
+}
+
+impl KEvaluator for DieOnce<'_> {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        if k == self.kill_k && self.armed.swap(false, Ordering::SeqCst) {
+            panic!("rank worker killed mid-fit at k={k}");
+        }
+        self.inner.evaluate(k)
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        self.inner.fingerprint()
+    }
+}
+
+#[test]
+fn killed_rank_with_leases_matches_uninterrupted_run() {
+    // The multi-rank flavour of the kill-point property: instead of
+    // killing the whole process and resuming from the checkpoint, one
+    // worker thread dies mid-fit and the *same run* must absorb it.
+    // Standard mode makes the visited set deterministic — every k must
+    // be evaluated, including the dead worker's remaining list, which
+    // only reaches the survivors through lease expiry and theft.
+    use binary_bleed::coordinator::ParallelConfig;
+    let ks: Vec<u32> = (2..=40).collect();
+    let k_true = 27u32;
+    let square = move |k: u32| if k <= k_true { 0.9 } else { 0.1 };
+    let policy = SearchPolicy::maximize(
+        Mode::Standard,
+        Thresholds {
+            select: 0.75,
+            stop: 0.2,
+        },
+    );
+    let cfg = ParallelConfig {
+        ranks: 2,
+        threads_per_rank: 2,
+        ..Default::default()
+    };
+
+    // Uninterrupted reference.
+    let base = ScorerEvaluator::new(&square);
+    let clean = SearchSession::new(&base, policy)
+        .with_parallel(cfg)
+        .with_faults(FaultPolicy {
+            retry: None,
+            lease_ttl: 3,
+        })
+        .run(&ks)
+        .unwrap();
+    assert_eq!(clean.result.k_optimal, Some(k_true));
+    let clean_visited: HashSet<u32> = clean.result.log.evaluated().into_iter().collect();
+    let want: HashSet<u32> = ks.iter().copied().collect();
+    assert_eq!(clean_visited, want, "Standard mode evaluates everything");
+
+    // Same session shape, but one worker dies on its first fit of
+    // k_true. retry: None leaves the panic uncaught at the evaluator
+    // layer — the worker is genuinely lost; only the leases save us.
+    let probe = Probe::new(&base);
+    let die = DieOnce {
+        inner: &probe,
+        armed: AtomicBool::new(true),
+        kill_k: k_true,
+    };
+    let killed = SearchSession::new(&die, policy)
+        .with_parallel(cfg)
+        .with_faults(FaultPolicy {
+            retry: None,
+            lease_ttl: 3,
+        })
+        .run(&ks)
+        .expect("worker death must be contained, not surfaced");
+
+    assert_eq!(killed.result.k_optimal, Some(k_true), "same optimum");
+    assert!(!killed.result.partial && killed.failed.is_empty());
+    let visited: HashSet<u32> = killed.result.log.evaluated().into_iter().collect();
+    assert_eq!(
+        visited, clean_visited,
+        "survivors must finish the dead worker's leased ks"
+    );
+    // The session cache bounds real fits to one per k even across lease
+    // theft (the killed attempt aborted before reaching the probe).
+    for &k in &ks {
+        assert_eq!(probe.count_of(k), 1, "k={k} fitted {}x", probe.count_of(k));
+    }
 }
