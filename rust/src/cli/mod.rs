@@ -3,16 +3,26 @@
 //! ```text
 //! bleed search     --model nmfk|kmeans|profile --k-min 2 --k-max 30
 //!                  [--mode vanilla|early-stop|standard] [--order pre|post|in]
-//!                  [--ranks N] [--threads T] [--eval-threads E]
+//!                  [--ranks N | --ranks host1:p1,host2:p2] [--threads T]
+//!                  [--eval-threads E]
 //!                  [--outer-tasks O] [--simd auto|scalar|vector]
 //!                  [--kmeans-algo lloyd|hamerly|elkan|yinyang|auto]
 //!                  [--backend hlo|native]
 //!                  [--checkpoint FILE] [--resume]
 //!                  [--k-true K] [--seed S] [--config FILE]
+//! bleed worker     --rank R --ranks host1:p1,host2:p2 [--listen ADDR]
+//!                  [--out FILE] [search flags]
 //! bleed experiment fig7|fig8|fig9|table2|arxiv|fig4|dynamics|all
 //!                  [--preset quick|paper] [--config FILE]
 //! bleed artifacts-check [--dir artifacts]
 //! ```
+//!
+//! A `--ranks` value with host:port entries turns `bleed search` into a
+//! cluster orchestrator (DESIGN.md §3.7): it self-spawns one `bleed
+//! worker` OS process per rank, each running its slots of the shared
+//! deterministic work plan over a [`TcpNet`](crate::coordinator::TcpNet)
+//! mesh, then merges the per-rank reports. Same seeds ⇒ same k*, visit
+//! set, and bitwise-identical per-k records as the in-process run.
 
 pub mod experiments;
 
@@ -24,7 +34,8 @@ use crate::util::error::{anyhow, bail, ensure, Result};
 
 use crate::config::{parse_mode, parse_traversal, ExperimentConfig};
 use crate::coordinator::{
-    KEvaluator, Mode, ParallelConfig, SearchPolicy, SearchSession, Thresholds,
+    EvalOutcome, Evaluation, Fingerprint, KEvaluator, Mode, ParallelConfig, SearchPolicy,
+    SearchSession, Thresholds, Traversal,
 };
 use crate::data::{gaussian_blobs, planted_nmf, ScoreProfile};
 use crate::model::{Backend, KMeansEvaluator, KMeansScoring, NmfkEvaluator};
@@ -85,6 +96,7 @@ bleed — Binary Bleed automatic model selection (paper reproduction)
 
 USAGE:
   bleed search --model nmfk|kmeans|profile [flags]
+  bleed worker --rank R --ranks host1:p1,host2:p2 [--listen ADDR] [--out FILE] [flags]
   bleed experiment fig7|fig8|fig9|table2|arxiv|fig4|dynamics|all [flags]
   bleed artifacts-check [--dir artifacts]
   bleed help
@@ -93,7 +105,15 @@ SEARCH FLAGS:
   --k-min N --k-max N      search space (default 2..30)
   --mode M                 standard|vanilla|early-stop (default vanilla)
   --order O                pre|post|in (default pre)
-  --ranks N --threads T    parallel shape (default 1x1 = serial)
+  --ranks N --threads T    parallel shape (default 1x1 = serial); when
+                           --ranks is a host:port,host:port,... list the
+                           search runs as a multi-process cluster: one
+                           `bleed worker` process is self-spawned per
+                           rank, gossiping bounds/claims over TCP
+                           (port 0 entries get fresh loopback ports)
+  --heartbeat-ms MS        cluster heartbeat: each beat renews held claim
+                           leases and redials dead links (default 25;
+                           0 disables — dead processes then never expire)
   --eval-threads E         intra-evaluation kernel threads per model fit
                            (default 0 = auto: hardware / (ranks*threads))
   --outer-tasks O          concurrent perturbations/restarts per evaluation,
@@ -129,8 +149,15 @@ SEARCH FLAGS:
   --seed S                 rng seed
   --config FILE            TOML defaults for seed, the parallel.*
                            evaluation knobs (eval_threads, outer_tasks,
-                           simd) and session.* (checkpoint, resume);
-                           explicit flags win
+                           simd), session.* (checkpoint, resume) and
+                           cluster.* (ranks, heartbeat_ms); explicit
+                           flags win
+WORKER FLAGS (one rank process of a cluster search; plus search flags):
+  --rank R                 this process's rank in the --ranks list
+  --listen ADDR            listen address override (default: the rank's
+                           entry in --ranks)
+  --out FILE               write the rank report JSON here (default:
+                           print to stdout)
 EXPERIMENT FLAGS:
   --preset P               quick|paper (default quick)
   --config FILE            TOML overrides (configs/*.toml)
@@ -142,6 +169,7 @@ pub fn run(raw_args: &[String]) -> Result<()> {
     let args = Args::parse(raw_args)?;
     match args.positional.first().map(String::as_str) {
         Some("search") => cmd_search(&args),
+        Some("worker") => cmd_worker(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("artifacts-check") => cmd_artifacts_check(&args),
         Some("help") | None => {
@@ -195,10 +223,83 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     }
 }
 
-fn cmd_search(args: &Args) -> Result<()> {
+/// Every `bleed search` knob, resolved from flags with `--config` TOML
+/// fallbacks. `bleed worker` parses the same spec — the orchestrator
+/// forwards its resolved values verbatim ([`forward_flags`]), so a
+/// worker's evaluator is built from the same inputs as an in-process
+/// run's (the determinism contract hangs on this).
+#[derive(Debug, Clone)]
+struct SearchSpec {
+    model: String,
+    k_min: u32,
+    k_max: u32,
+    k_true: u32,
+    seed: u64,
+    /// In-process rank count; 1 when `cluster` is non-empty.
+    ranks: usize,
+    threads: usize,
+    /// Raw budget: 0 = auto (resolved per consumer via
+    /// [`SearchSpec::resolved_eval_threads`], since the engine worker
+    /// count differs between in-process and cluster runs).
+    eval_threads: usize,
+    outer_tasks: usize,
+    simd: crate::util::SimdPolicy,
+    kmeans_algo: crate::linalg::KMeansAlgo,
+    mode: Mode,
+    order: Traversal,
+    select: f64,
+    stop: f64,
+    backend: Backend,
+    checkpoint: Option<String>,
+    resume: bool,
+    max_attempts: u32,
+    retry_backoff_ms: u64,
+    lease_ttl: u64,
+    /// Cluster rank listen addresses; empty = in-process run.
+    cluster: Vec<String>,
+    heartbeat_ms: u64,
+}
+
+impl SearchSpec {
+    fn ks(&self) -> Vec<u32> {
+        (self.k_min..=self.k_max).collect()
+    }
+
+    /// Intra-evaluation thread budget (§3.2): explicit, or hardware
+    /// threads divided by the engine worker count.
+    fn resolved_eval_threads(&self, engine_workers: usize) -> usize {
+        match self.eval_threads {
+            0 => crate::util::pool::eval_thread_budget(
+                crate::util::pool::available_threads(),
+                engine_workers,
+            ),
+            n => n,
+        }
+    }
+
+    fn fault_policy(&self) -> Option<crate::coordinator::FaultPolicy> {
+        if self.max_attempts <= 1 && self.lease_ttl == 0 {
+            return None;
+        }
+        let retry = (self.max_attempts > 1).then(|| crate::coordinator::RetryPolicy {
+            max_attempts: self.max_attempts,
+            base_backoff: std::time::Duration::from_millis(self.retry_backoff_ms),
+            max_backoff: std::time::Duration::from_millis(
+                self.retry_backoff_ms.saturating_mul(25),
+            ),
+            seed: self.seed,
+        });
+        Some(crate::coordinator::FaultPolicy {
+            retry,
+            lease_ttl: self.lease_ttl,
+        })
+    }
+}
+
+fn parse_search_spec(args: &Args) -> Result<SearchSpec> {
     // `--config FILE` supplies defaults for the evaluation knobs
-    // (seed, parallel.eval_threads / outer_tasks / simd); explicit
-    // flags always win.
+    // (seed, parallel.eval_threads / outer_tasks / simd) and the
+    // cluster shape; explicit flags always win.
     let file_cfg = match args.flag("config") {
         Some(path) => Some(ExperimentConfig::from_file(path)?),
         None => None,
@@ -209,20 +310,42 @@ fn cmd_search(args: &Args) -> Result<()> {
     let seed: u64 = args
         .flag_parse("seed")?
         .unwrap_or_else(|| file_cfg.as_ref().map_or(0xB1EED, |c| c.seed));
-    let ranks: usize = args.flag_parse("ranks")?.unwrap_or(1);
+    // `--ranks` is overloaded: a bare count keeps the run in-process,
+    // a host:port list makes it a multi-process cluster (checked on
+    // the raw string — the numeric parse would reject host lists).
+    let mut ranks: usize = 1;
+    let mut cluster: Vec<String> = Vec::new();
+    match args.flag("ranks") {
+        Some(raw) if !raw.is_empty() && raw.bytes().all(|b| b.is_ascii_digit()) => {
+            ranks = raw
+                .parse()
+                .map_err(|_| anyhow!("bad value for --ranks: '{raw}'"))?;
+        }
+        Some(raw) => {
+            cluster = raw
+                .split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(str::to_string)
+                .collect();
+            for addr in &cluster {
+                ensure!(
+                    addr.contains(':'),
+                    "--ranks wants a count or host:port,host:port,... (got '{addr}')"
+                );
+            }
+        }
+        None => {
+            cluster = file_cfg
+                .as_ref()
+                .map(|c| c.cluster_ranks.clone())
+                .unwrap_or_default();
+        }
+    }
     let threads: usize = args.flag_parse("threads")?.unwrap_or(1);
-    // Intra-evaluation thread budget (§3.2): explicit, or hardware
-    // threads divided by the engine worker count.
-    let eval_threads_flag: usize = args
+    let eval_threads: usize = args
         .flag_parse("eval-threads")?
         .unwrap_or_else(|| file_cfg.as_ref().map_or(0, |c| c.eval_threads));
-    let eval_threads: usize = match eval_threads_flag {
-        0 => crate::util::pool::eval_thread_budget(
-            crate::util::pool::available_threads(),
-            ranks.max(1) * threads.max(1),
-        ),
-        n => n,
-    };
     // Outer task level (§3.2): 0 = auto (fill the eval budget).
     let outer_tasks: usize = args
         .flag_parse("outer-tasks")?
@@ -232,7 +355,6 @@ fn cmd_search(args: &Args) -> Result<()> {
         Some(s) => crate::config::parse_simd(s)?,
         None => file_cfg.as_ref().map_or(crate::util::SimdPolicy::Auto, |c| c.simd),
     };
-    crate::util::simd::set_simd_policy(simd);
     // K-means assignment algorithm for the native backend (ignored by
     // the fused HLO kernel and the non-kmeans evaluators).
     let kmeans_algo = match args.flag("kmeans-algo") {
@@ -268,66 +390,104 @@ fn cmd_search(args: &Args) -> Result<()> {
     let lease_ttl: u64 = args
         .flag_parse("lease-ttl")?
         .unwrap_or_else(|| file_cfg.as_ref().map_or(0, |c| c.lease_ttl));
+    let heartbeat_ms: u64 = args
+        .flag_parse("heartbeat-ms")?
+        .unwrap_or_else(|| file_cfg.as_ref().map_or(25, |c| c.heartbeat_ms));
     ensure!(k_min >= 2 && k_min <= k_max, "need 2 <= k-min <= k-max");
     ensure!(
         !resume || checkpoint.is_some(),
         "--resume needs --checkpoint (or session.checkpoint in the config)"
     );
-
-    let ks: Vec<u32> = (k_min..=k_max).collect();
-    let model = args.flag_or("model", "profile");
-    let (evaluator, mut policy) = build_evaluator(
-        &model,
-        k_true,
+    Ok(SearchSpec {
+        model: args.flag_or("model", "profile"),
+        k_min,
         k_max,
+        k_true,
         seed,
-        backend,
+        ranks,
+        threads,
+        eval_threads,
+        outer_tasks,
+        simd,
+        kmeans_algo,
+        mode,
+        order,
         select,
         stop,
+        backend,
+        checkpoint,
+        resume,
+        max_attempts,
+        retry_backoff_ms,
+        lease_ttl,
+        cluster,
+        heartbeat_ms,
+    })
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let spec = parse_search_spec(args)?;
+    if !spec.cluster.is_empty() {
+        return cluster_search(&spec);
+    }
+    crate::util::simd::set_simd_policy(spec.simd);
+    let engine_workers = spec.ranks.max(1) * spec.threads.max(1);
+    let eval_threads = spec.resolved_eval_threads(engine_workers);
+    let ks = spec.ks();
+    let (evaluator, mut policy) = build_evaluator(
+        &spec.model,
+        spec.k_true,
+        spec.k_max,
+        spec.seed,
+        spec.backend,
+        spec.select,
+        spec.stop,
         eval_threads,
         // Pool worker set sized for every concurrent engine submitter
         // (one shared evaluator serves all of them).
-        ranks.max(1) * threads.max(1),
-        outer_tasks,
-        kmeans_algo,
+        engine_workers,
+        spec.outer_tasks,
+        spec.kmeans_algo,
     )?;
-    policy.mode = mode;
+    policy.mode = spec.mode;
 
     println!(
-        "searching K={{{k_min}..{k_max}}} model={model} mode={} order={} \
-         ranks={ranks}x{threads} eval-threads={eval_threads} \
-         outer-tasks={outer_tasks} simd={} backend={} kmeans-algo={}",
-        mode.label(),
-        order.label(),
-        simd.label(),
-        backend.label(),
-        kmeans_algo.label()
+        "searching K={{{}..{}}} model={} mode={} order={} \
+         ranks={}x{} eval-threads={eval_threads} \
+         outer-tasks={} simd={} backend={} kmeans-algo={}",
+        spec.k_min,
+        spec.k_max,
+        spec.model,
+        spec.mode.label(),
+        spec.order.label(),
+        spec.ranks,
+        spec.threads,
+        spec.outer_tasks,
+        spec.simd.label(),
+        spec.backend.label(),
+        spec.kmeans_algo.label()
     );
     let mut session = SearchSession::new(evaluator.as_ref(), policy).with_parallel(
         ParallelConfig {
-            ranks,
-            threads_per_rank: threads,
-            traversal: order,
+            ranks: spec.ranks,
+            threads_per_rank: spec.threads,
+            traversal: spec.order,
             ..Default::default()
         },
     );
-    if let Some(path) = &checkpoint {
+    if let Some(path) = &spec.checkpoint {
         session = session.with_checkpoint(path);
     }
-    if max_attempts > 1 || lease_ttl > 0 {
-        let retry = (max_attempts > 1).then(|| crate::coordinator::RetryPolicy {
-            max_attempts,
-            base_backoff: std::time::Duration::from_millis(retry_backoff_ms),
-            max_backoff: std::time::Duration::from_millis(retry_backoff_ms.saturating_mul(25)),
-            seed,
-        });
-        session = session.with_faults(crate::coordinator::FaultPolicy { retry, lease_ttl });
+    if let Some(faults) = spec.fault_policy() {
+        session = session.with_faults(faults);
     }
-    let outcome = if resume {
+    let outcome = if spec.resume {
         session.resume(&ks)?
     } else {
         session.run(&ks)?
     };
+    let checkpoint = &spec.checkpoint;
+    let max_attempts = spec.max_attempts;
     let result = &outcome.result;
     println!(
         "k* = {:?} (score {:?}) — visited {}/{} ({:.0}%) in {:.2}s",
@@ -366,9 +526,238 @@ fn cmd_search(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build a record-producing evaluator for `bleed search`.
+/// The search flags every `bleed worker` inherits from the
+/// orchestrator: the spec's *resolved* values, so a worker re-parses to
+/// the identical spec regardless of which side had config-file
+/// fallbacks (the labels all round-trip through the parsers).
+fn forward_flags(spec: &SearchSpec) -> Vec<String> {
+    let flags = [
+        ("--model", spec.model.clone()),
+        ("--k-min", spec.k_min.to_string()),
+        ("--k-max", spec.k_max.to_string()),
+        ("--k-true", spec.k_true.to_string()),
+        ("--seed", spec.seed.to_string()),
+        ("--threads", spec.threads.to_string()),
+        ("--eval-threads", spec.eval_threads.to_string()),
+        ("--outer-tasks", spec.outer_tasks.to_string()),
+        ("--simd", spec.simd.label().to_string()),
+        ("--kmeans-algo", spec.kmeans_algo.label().to_string()),
+        ("--mode", spec.mode.label().to_string()),
+        ("--order", spec.order.label().to_string()),
+        ("--select", spec.select.to_string()),
+        ("--stop", spec.stop.to_string()),
+        ("--backend", spec.backend.label().to_string()),
+        ("--max-attempts", spec.max_attempts.to_string()),
+        ("--retry-backoff-ms", spec.retry_backoff_ms.to_string()),
+        ("--lease-ttl", spec.lease_ttl.to_string()),
+        ("--heartbeat-ms", spec.heartbeat_ms.to_string()),
+    ];
+    flags
+        .into_iter()
+        .flat_map(|(name, value)| [name.to_string(), value])
+        .collect()
+}
+
+/// Orchestrate a multi-process search (DESIGN.md §3.7): self-spawn one
+/// `bleed worker` per `--ranks` entry, wait, merge.
+fn cluster_search(spec: &SearchSpec) -> Result<()> {
+    ensure!(spec.cluster.len() >= 2, "a cluster needs at least 2 ranks");
+    ensure!(
+        spec.checkpoint.is_none() && !spec.resume,
+        "cluster runs journal per-rank internally; drop --checkpoint/--resume"
+    );
+    let ks = spec.ks();
+    println!(
+        "searching K={{{}..{}}} model={} mode={} order={} \
+         cluster={} ranks x {} threads (tcp, heartbeat {}ms)",
+        spec.k_min,
+        spec.k_max,
+        spec.model,
+        spec.mode.label(),
+        spec.order.label(),
+        spec.cluster.len(),
+        spec.threads,
+        spec.heartbeat_ms
+    );
+    let out = crate::runtime::run_cluster(
+        &crate::runtime::ClusterSpec {
+            addrs: spec.cluster.clone(),
+            forward: forward_flags(spec),
+            worker_bin: None,
+            out_dir: None,
+            env_per_rank: Vec::new(),
+            // Survivors can only adopt a dead rank's ks when leases
+            // expire; without a TTL a death poisons the whole run.
+            tolerate_failures: spec.lease_ttl > 0,
+        },
+        &ks,
+    )?;
+    println!(
+        "k* = {:?} (score {:?}) — visited {}/{} across {} ranks in {:.2}s",
+        out.k_optimal,
+        out.score,
+        out.visited.len(),
+        ks.len(),
+        out.ranks,
+        out.elapsed_secs
+    );
+    println!("visited    : {:?}", out.visited);
+    println!("pruned     : {:?}", out.pruned);
+    if !out.failed.is_empty() {
+        println!("failed     : {:?}", out.failed);
+    }
+    if !out.dead_ranks.is_empty() {
+        println!(
+            "dead ranks : {:?} (their journaled fits were recovered; \
+             unfinished ks re-admitted by survivors)",
+            out.dead_ranks
+        );
+    }
+    if out
+        .records
+        .iter()
+        .any(|r| !r.secondary.is_empty() || r.diagnostics.fit_error.is_some())
+    {
+        print!("\n{}", crate::metrics::records_markdown(&out.records));
+    }
+    Ok(())
+}
+
+/// Chaos hook for the killed-process tests: simulated power loss at one
+/// k — `abort()` skips unwinding, the final report, and the shutdown
+/// checkpoint, exactly like `kill -9` mid-fit.
+struct AbortAtK<'a> {
+    inner: &'a dyn KEvaluator,
+    at: u32,
+}
+
+impl KEvaluator for AbortAtK<'_> {
+    fn evaluate(&self, k: u32) -> Evaluation {
+        if k == self.at {
+            std::process::abort();
+        }
+        self.inner.evaluate(k)
+    }
+
+    fn try_evaluate(&self, k: u32) -> EvalOutcome {
+        if k == self.at {
+            std::process::abort();
+        }
+        self.inner.try_evaluate(k)
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn fingerprint(&self) -> Fingerprint {
+        self.inner.fingerprint()
+    }
+}
+
+/// One rank process of a cluster search: bind, mesh up over TCP, run
+/// this rank's slots of the shared deterministic work plan, report.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let spec = parse_search_spec(args)?;
+    let rank: usize = args
+        .flag_parse("rank")?
+        .ok_or_else(|| anyhow!("worker needs --rank R"))?;
+    ensure!(
+        !spec.cluster.is_empty(),
+        "worker needs --ranks host1:port,host2:port,..."
+    );
+    let addrs = crate::runtime::resolve_cluster_addrs(&spec.cluster)?;
+    ensure!(
+        rank < addrs.len(),
+        "--rank {rank} outside the {}-rank cluster",
+        addrs.len()
+    );
+    let listen = args
+        .flag("listen")
+        .map(str::to_string)
+        .unwrap_or_else(|| addrs[rank].clone());
+    let out_path: Option<String> = args.flag("out").map(str::to_string);
+    crate::util::simd::set_simd_policy(spec.simd);
+
+    // Bind before the (possibly slow) evaluator build so peers dialing
+    // this rank land in the listen backlog instead of burning retries.
+    let bound = crate::coordinator::TcpNet::bind(&listen)?;
+    let ks = spec.ks();
+    let engine_workers = addrs.len().max(1) * spec.threads.max(1);
+    let (evaluator, mut policy) = build_evaluator(
+        &spec.model,
+        spec.k_true,
+        spec.k_max,
+        spec.seed,
+        spec.backend,
+        spec.select,
+        spec.stop,
+        spec.resolved_eval_threads(engine_workers),
+        spec.threads.max(1),
+        spec.outer_tasks,
+        spec.kmeans_algo,
+    )?;
+    policy.mode = spec.mode;
+    let chaos_abort: Option<u32> = std::env::var("BB_CHAOS_ABORT_K")
+        .ok()
+        .and_then(|v| v.parse().ok());
+    let wrapped;
+    let eval_ref: &dyn KEvaluator = match chaos_abort {
+        Some(at) => {
+            wrapped = AbortAtK {
+                inner: evaluator.as_ref(),
+                at,
+            };
+            &wrapped
+        }
+        None => evaluator.as_ref(),
+    };
+
+    let net = bound.connect(
+        rank,
+        &addrs,
+        crate::coordinator::TcpNetConfig {
+            retry: crate::coordinator::RetryPolicy {
+                seed: spec.seed,
+                ..crate::coordinator::TcpNetConfig::default().retry
+            },
+            heartbeat: std::time::Duration::from_millis(spec.heartbeat_ms),
+        },
+    )?;
+    let mut session = SearchSession::new(eval_ref, policy).with_parallel(ParallelConfig {
+        ranks: addrs.len(),
+        threads_per_rank: spec.threads,
+        traversal: spec.order,
+        ..Default::default()
+    });
+    if let Some(path) = &spec.checkpoint {
+        session = session.with_checkpoint(path);
+    }
+    if let Some(faults) = spec.fault_policy() {
+        session = session.with_faults(faults);
+    }
+    let outcome = if spec.resume {
+        session.resume_rank(&ks, rank, &net)?
+    } else {
+        session.run_rank(&ks, rank, &net)?
+    };
+    // Tear the mesh down before reporting: the Drop joins the service
+    // threads, so the report is only written once gossip has settled.
+    drop(net);
+    let report = crate::runtime::RankReport::from_outcome(rank, &outcome);
+    match &out_path {
+        Some(p) => report.save(std::path::Path::new(p))?,
+        None => println!("{}", report.to_json()),
+    }
+    Ok(())
+}
+
+/// Build a record-producing evaluator for `bleed search`. Public so the
+/// multi-process integration tests can construct the exact in-process
+/// twin of a cluster run's evaluator when checking the determinism
+/// contract.
 #[allow(clippy::too_many_arguments)]
-fn build_evaluator(
+pub fn build_evaluator(
     model: &str,
     k_true: u32,
     k_max: u32,
@@ -600,6 +989,95 @@ mod tests {
             "2".into(),
         ])
         .unwrap();
+    }
+
+    #[test]
+    fn ranks_flag_detects_cluster_lists() {
+        // Bare count: in-process, no cluster.
+        let spec = parse_search_spec(&args(&["search", "--ranks", "3"])).unwrap();
+        assert_eq!(spec.ranks, 3);
+        assert!(spec.cluster.is_empty());
+        // host:port list: cluster mode (raw-string detection — the
+        // numeric parse would have rejected this).
+        let spec = parse_search_spec(&args(&[
+            "search",
+            "--ranks",
+            "127.0.0.1:0, 127.0.0.1:0",
+        ]))
+        .unwrap();
+        assert_eq!(spec.cluster, vec!["127.0.0.1:0", "127.0.0.1:0"]);
+        assert_eq!(spec.ranks, 1);
+        // Neither a count nor host:port entries: typed error.
+        assert!(parse_search_spec(&args(&["search", "--ranks", "2x"])).is_err());
+    }
+
+    #[test]
+    fn cluster_search_rejects_checkpoint_flags() {
+        let spec = parse_search_spec(&args(&[
+            "search",
+            "--ranks",
+            "127.0.0.1:0,127.0.0.1:0",
+            "--checkpoint",
+            "/tmp/never-written.json",
+        ]))
+        .unwrap();
+        assert!(cluster_search(&spec).is_err(), "checkpointing is per-rank");
+    }
+
+    #[test]
+    fn forward_flags_roundtrip_to_the_same_spec() {
+        // The orchestrator→worker contract: re-parsing the forwarded
+        // flags yields the identical spec, so both sides build the same
+        // evaluator (determinism over the wire).
+        let spec = parse_search_spec(&args(&[
+            "search",
+            "--model",
+            "kmeans",
+            "--k-min",
+            "3",
+            "--k-max",
+            "17",
+            "--k-true",
+            "9",
+            "--mode",
+            "standard",
+            "--order",
+            "post",
+            "--simd",
+            "scalar",
+            "--kmeans-algo",
+            "elkan",
+            "--select",
+            "0.45",
+            "--stop",
+            "0.9",
+            "--max-attempts",
+            "3",
+            "--lease-ttl",
+            "6",
+            "--heartbeat-ms",
+            "10",
+            "--seed",
+            "42",
+        ]))
+        .unwrap();
+        let mut raw = vec!["worker".to_string()];
+        raw.extend(forward_flags(&spec));
+        let respec = parse_search_spec(&Args::parse(&raw).unwrap()).unwrap();
+        assert_eq!(format!("{spec:?}"), format!("{respec:?}"));
+    }
+
+    #[test]
+    fn worker_without_rank_or_cluster_errors() {
+        assert!(run(&["worker".to_string()]).is_err());
+        assert!(run(&[
+            "worker".into(),
+            "--rank".into(),
+            "0".into(),
+            "--ranks".into(),
+            "3".into(),
+        ])
+        .is_err());
     }
 
     #[test]

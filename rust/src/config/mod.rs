@@ -85,6 +85,17 @@ pub struct ExperimentConfig {
     /// worker-death recovery). TOML `fault.lease_ttl`, CLI
     /// `--lease-ttl`.
     pub lease_ttl: u64,
+    /// Multi-process cluster (DESIGN.md §3.7): one `host:port` listen
+    /// address per rank. Non-empty turns `bleed search` into an
+    /// orchestrator that self-spawns one `bleed worker` process per
+    /// rank over TCP. TOML `cluster.ranks` (array of strings, or one
+    /// comma-separated string), CLI `--ranks host1:p1,host2:p2`.
+    pub cluster_ranks: Vec<String>,
+    /// TCP heartbeat period in milliseconds: each beat renews held
+    /// claim leases and redials dead links; `0` disables the heartbeat
+    /// thread (then a dead process's leases never expire). TOML
+    /// `cluster.heartbeat_ms`, CLI `--heartbeat-ms`.
+    pub heartbeat_ms: u64,
 }
 
 impl ExperimentConfig {
@@ -116,6 +127,8 @@ impl ExperimentConfig {
             max_attempts: 1,
             retry_backoff_ms: 10,
             lease_ttl: 0,
+            cluster_ranks: Vec::new(),
+            heartbeat_ms: 25,
         }
     }
 
@@ -317,6 +330,30 @@ impl ExperimentConfig {
         if let Some(v) = t.get_path("fault.lease_ttl").and_then(TomlValue::as_int) {
             self.lease_ttl = v.max(0) as u64;
         }
+        if let Some(v) = t.get_path("cluster.ranks") {
+            // Either an array of "host:port" strings or one
+            // comma-separated string — both forms appear in the wild.
+            self.cluster_ranks = match v {
+                TomlValue::Array(items) => items
+                    .iter()
+                    .map(|it| {
+                        it.as_str()
+                            .map(str::to_string)
+                            .context("cluster.ranks entries must be \"host:port\" strings")
+                    })
+                    .collect::<Result<Vec<String>>>()?,
+                TomlValue::Str(s) => s
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|p| !p.is_empty())
+                    .map(str::to_string)
+                    .collect(),
+                _ => bail!("cluster.ranks must be an array or comma string"),
+            };
+        }
+        if let Some(v) = t.get_path("cluster.heartbeat_ms").and_then(TomlValue::as_int) {
+            self.heartbeat_ms = v.max(0) as u64;
+        }
         ensure!(self.k_min >= 1 && self.k_min <= self.k_max, "bad k range");
         Ok(())
     }
@@ -443,6 +480,27 @@ stride = 2
             .unwrap();
         assert_eq!(cfg.max_attempts, 1);
         assert!(cfg.faults().retry.is_none(), "one attempt = no retry layer");
+    }
+
+    #[test]
+    fn cluster_toml_overrides_apply() {
+        let mut cfg = ExperimentConfig::quick();
+        assert!(cfg.cluster_ranks.is_empty(), "single-process by default");
+        assert_eq!(cfg.heartbeat_ms, 25);
+        let doc = "[cluster]\nranks = [\"127.0.0.1:7401\", \"127.0.0.1:7402\"]\nheartbeat_ms = 10\n";
+        cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
+        assert_eq!(cfg.cluster_ranks, vec!["127.0.0.1:7401", "127.0.0.1:7402"]);
+        assert_eq!(cfg.heartbeat_ms, 10);
+        // Comma-string form parses to the same list.
+        let mut cfg = ExperimentConfig::quick();
+        let doc = "[cluster]\nranks = \"127.0.0.1:7401, 127.0.0.1:7402\"\n";
+        cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
+        assert_eq!(cfg.cluster_ranks, vec!["127.0.0.1:7401", "127.0.0.1:7402"]);
+        // Non-string entries are rejected with a typed error.
+        let mut cfg = ExperimentConfig::quick();
+        assert!(cfg
+            .apply_toml(&parse_toml("[cluster]\nranks = [7401, 7402]\n").unwrap())
+            .is_err());
     }
 
     #[test]

@@ -7,12 +7,12 @@
 //! protocol over the lock-free [`SharedState`](super::state::SharedState),
 //! parameterized by three orthogonal axes:
 //!
-//! | axis        | trait / type          | implementations                          |
-//! |-------------|-----------------------|------------------------------------------|
-//! | time        | [`Clock`]             | [`WallClock`], [`VirtualClock`]          |
-//! | propagation | [`Transport`]         | [`Loopback`], [`MpscNet`], [`SimNet`]    |
-//! | work source | [`WorkPlan`]          | serial / ranked / flat chunkings         |
-//! | eval cost   | [`EvalCost`]          | [`UnitCost`], `simulate::CostModel`      |
+//! | axis        | trait / type          | implementations                                  |
+//! |-------------|-----------------------|--------------------------------------------------|
+//! | time        | [`Clock`]             | [`WallClock`], [`VirtualClock`]                  |
+//! | propagation | [`Transport`]         | [`Loopback`], [`MpscNet`], [`SimNet`], [`TcpNet`] |
+//! | work source | [`WorkPlan`]          | serial / ranked / flat chunkings                 |
+//! | eval cost   | [`EvalCost`]          | [`UnitCost`], `simulate::CostModel`              |
 //!
 //! The four public entry points are thin configurations:
 //!
@@ -58,7 +58,9 @@
 
 pub mod clock;
 pub mod core;
+pub mod tcpnet;
 pub mod transport;
+pub mod wire;
 pub mod work;
 
 pub use self::clock::{duration_from_minutes, Clock, VirtualClock, WallClock};
@@ -66,5 +68,7 @@ pub use self::core::{
     run_event, run_event_ev, run_threaded, run_threaded_ev, EvalCost, EvalSpan, EventOutcome,
     UnitCost,
 };
+pub use self::tcpnet::{TcpBound, TcpFabric, TcpNet, TcpNetConfig, TcpStats};
 pub use self::transport::{Loopback, MpscNet, SimNet, Transport};
+pub use self::wire::{WireError, WireMsg, MAX_FRAME_LEN};
 pub use self::work::{bleed_order, normalize_ks, WorkPlan, WorkerSlot};

@@ -1,0 +1,724 @@
+//! `TcpNet`: the real multi-process transport (DESIGN.md §3.7).
+//!
+//! Each rank process binds one listening socket and dials one outgoing
+//! connection to every peer (its broadcast channel), so an N-rank
+//! cluster is a full mesh of 2·C(N,2) directed TCP streams. The first
+//! frame on every connection is a [`WireMsg::Hello`] identifying the
+//! dialer; after that the dialer writes [`WireMsg::Cast`] frames (the
+//! protocol's BroadcastK traffic) and periodic [`WireMsg::Heartbeat`]
+//! beacons, and the acceptor side only reads.
+//!
+//! Everything on the wire is advisory — the Binary Bleed protocol
+//! already tolerates lost, duplicated, and reordered broadcasts (the
+//! `FaultNet` conformance suite pins this) — so the send path never
+//! blocks on recovery: a failed write just drops the connection and the
+//! heartbeat thread redials it later under the seeded
+//! [`RetryPolicy`] backoff schedule.
+//!
+//! # Heartbeat × lease clock
+//!
+//! Claim leases (DESIGN.md §3.6) age on a *logical* clock: sweep ticks,
+//! not wall time. A dead thread stops ticking and its leases expire; a
+//! dead **process** additionally stops gossiping. `TcpNet` closes that
+//! gap from the liveness side: it watches its own outgoing claim gossip
+//! to track which ks this process currently holds (`Leased` adds,
+//! `Done`/`Failed` settles), and every heartbeat interval re-broadcasts
+//! `Leased(k)` for each held k. On the receiving side that renewal is a
+//! plain `merge_claim_event` → `fetch_max(now)`, which keeps a live
+//! process's leases fresh in every peer's table no matter how fast the
+//! peers tick. When the process dies the renewals stop, the survivors'
+//! recovery sweeps age the orphaned leases past the TTL, and the dead
+//! process's ks are re-admitted — the process-level analogue of the
+//! killed-thread property in `rust/tests/fault_injection.rs`.
+//!
+//! The heartbeat thread is paced purely by `thread::sleep`; neither it
+//! nor any other `TcpNet` path reads a wall clock (bleedlint L6).
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use super::super::fault::RetryPolicy;
+use super::super::rank::Broadcast;
+use super::super::state::ClaimEvent;
+use super::transport::Transport;
+use super::wire::{self, WireMsg, MAX_FRAME_LEN};
+use crate::util::error::{ensure, Context, Result};
+
+/// Connection-lifecycle knobs.
+#[derive(Debug, Clone)]
+pub struct TcpNetConfig {
+    /// Dial schedule for initial connects and reconnects: up to
+    /// `max_attempts` tries per peer, backing off per
+    /// [`RetryPolicy::backoff_before`] (jitter seeded per peer rank, so
+    /// a cluster cold-starting in lockstep doesn't dial in lockstep).
+    pub retry: RetryPolicy,
+    /// Heartbeat period: every tick redials dead links, re-broadcasts
+    /// held claim leases, and sends a liveness beacon. `ZERO` disables
+    /// the thread entirely (useful for single-shot codec tests).
+    pub heartbeat: Duration,
+}
+
+impl Default for TcpNetConfig {
+    fn default() -> Self {
+        TcpNetConfig {
+            // ~7s of dial patience: enough for a sibling process spawned
+            // in the same orchestration round to bind its listener.
+            retry: RetryPolicy {
+                max_attempts: 400,
+                base_backoff: Duration::from_millis(5),
+                max_backoff: Duration::from_millis(25),
+                seed: 0xB1EED,
+            },
+            heartbeat: Duration::from_millis(25),
+        }
+    }
+}
+
+/// Counters for observability and tests (snapshot via [`TcpNet::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TcpStats {
+    pub sent: u64,
+    pub received: u64,
+    pub send_errors: u64,
+    pub corrupt_frames: u64,
+    pub reconnects: u64,
+    pub heartbeats_out: u64,
+}
+
+/// Reconnect pacing for one dead link, advanced by the heartbeat thread.
+#[derive(Debug, Default)]
+struct DialState {
+    /// Failed dials since the link last worked.
+    attempts: u32,
+    /// Heartbeat ticks to skip before the next dial (the backoff
+    /// schedule quantized to beats).
+    skip_beats: u32,
+}
+
+/// One outgoing link to a peer.
+struct PeerLink {
+    addr: SocketAddr,
+    conn: Mutex<Option<TcpStream>>,
+    dial: Mutex<DialState>,
+}
+
+struct Shared {
+    rank: usize,
+    /// Indexed by peer rank; `None` at our own slot.
+    links: Vec<Option<PeerLink>>,
+    /// Broadcasts received from peers, drained by the engine.
+    inbox: Mutex<Vec<Broadcast>>,
+    /// ks this process currently holds a lease on (observed from our
+    /// own outgoing claim gossip); renewed every heartbeat.
+    held: Mutex<Vec<u32>>,
+    /// Read-half clones of accepted connections, shut down on Drop to
+    /// unblock the reader threads.
+    accepted: Mutex<Vec<TcpStream>>,
+    reader_handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// Liveness beacons seen per peer rank (tests assert on this).
+    beats_from: Mutex<Vec<u64>>,
+    stop: AtomicBool,
+    retry: RetryPolicy,
+    sent: AtomicU64,
+    received: AtomicU64,
+    send_errors: AtomicU64,
+    corrupt_frames: AtomicU64,
+    reconnects: AtomicU64,
+    heartbeats_out: AtomicU64,
+}
+
+impl Shared {
+    fn stopped(&self) -> bool {
+        // ORDER: Relaxed — the stop flag is a latch polled by loops that
+        // also sleep/block; no data is published through it (everything
+        // the threads touch is behind mutexes).
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Write one pre-encoded frame to every live link; a failed write
+    /// drops that link (the heartbeat redials it).
+    fn fan_out(&self, bytes: &[u8]) {
+        for link in self.links.iter().flatten() {
+            let mut guard = link.conn.lock().unwrap();
+            let ok = match guard.as_mut() {
+                Some(stream) => stream.write_all(bytes).is_ok(),
+                None => false,
+            };
+            if ok {
+                // ORDER: Relaxed — monotonic counter, read only in
+                // stats snapshots.
+                self.sent.fetch_add(1, Ordering::Relaxed);
+            } else if guard.take().is_some() {
+                // Only a *failed write* is a send error; a link already
+                // down just drops the advisory message.
+                // ORDER: Relaxed — monotonic counter (see above).
+                self.send_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Track our own claim gossip so the heartbeat can renew leases.
+    fn note_claim(&self, ev: ClaimEvent) {
+        let mut held = self.held.lock().unwrap();
+        match ev {
+            ClaimEvent::Leased(k) => {
+                if !held.contains(&k) {
+                    held.push(k);
+                }
+            }
+            ClaimEvent::Done(k) | ClaimEvent::Failed(k) => held.retain(|&h| h != k),
+        }
+    }
+}
+
+/// A bound-but-not-yet-connected listener. Splitting bind from connect
+/// lets a cluster bind every listener (possibly on ephemeral `:0`
+/// ports) before any rank starts dialing.
+pub struct TcpBound {
+    listener: TcpListener,
+    local: SocketAddr,
+}
+
+/// The TCP [`Transport`]: one instance per rank process (or one per
+/// simulated rank inside a test — see [`TcpFabric`]).
+pub struct TcpNet {
+    shared: Arc<Shared>,
+    local: SocketAddr,
+    /// Acceptor + heartbeat threads, joined on Drop.
+    service_handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl TcpNet {
+    /// Bind the listening socket for one rank. `addr` may use port 0 to
+    /// let the OS pick (read it back via [`TcpBound::local_addr`]).
+    pub fn bind(addr: &str) -> Result<TcpBound> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding rank listener on {addr}"))?;
+        let local = listener
+            .local_addr()
+            .context("reading bound listener address")?;
+        Ok(TcpBound { listener, local })
+    }
+
+    /// Bind + connect in one step: join the cluster described by
+    /// `addrs` as rank `rank` (binding on `addrs[rank]`).
+    pub fn join(rank: usize, addrs: &[String], cfg: TcpNetConfig) -> Result<TcpNet> {
+        ensure!(rank < addrs.len(), "rank {rank} outside {} addrs", addrs.len());
+        Self::bind(&addrs[rank])?.connect(rank, addrs, cfg)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shared.rank
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    pub fn stats(&self) -> TcpStats {
+        // ORDER: Relaxed — advisory counters; each is independently
+        // monotonic and the snapshot makes no cross-field claims.
+        TcpStats {
+            sent: self.shared.sent.load(Ordering::Relaxed),
+            received: self.shared.received.load(Ordering::Relaxed),
+            send_errors: self.shared.send_errors.load(Ordering::Relaxed),
+            corrupt_frames: self.shared.corrupt_frames.load(Ordering::Relaxed),
+            reconnects: self.shared.reconnects.load(Ordering::Relaxed),
+            heartbeats_out: self.shared.heartbeats_out.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Liveness beacons received from `rank` so far.
+    pub fn beats_from(&self, rank: usize) -> u64 {
+        self.shared
+            .beats_from
+            .lock()
+            .unwrap()
+            .get(rank)
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+impl TcpBound {
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Dial every peer in `addrs` (skipping our own slot), start the
+    /// acceptor and heartbeat threads, and return the live transport.
+    pub fn connect(self, rank: usize, addrs: &[String], cfg: TcpNetConfig) -> Result<TcpNet> {
+        ensure!(addrs.len() >= 2, "a TCP cluster needs at least 2 ranks");
+        ensure!(rank < addrs.len(), "rank {rank} outside {} addrs", addrs.len());
+        let mut links = Vec::with_capacity(addrs.len());
+        for (peer, addr) in addrs.iter().enumerate() {
+            if peer == rank {
+                links.push(None);
+                continue;
+            }
+            let resolved = addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolving peer address '{addr}'"))?
+                .next()
+                .with_context(|| format!("peer address '{addr}' resolved to nothing"))?;
+            links.push(Some(PeerLink {
+                addr: resolved,
+                conn: Mutex::new(None),
+                dial: Mutex::new(DialState::default()),
+            }));
+        }
+        let ranks = addrs.len();
+        let shared = Arc::new(Shared {
+            rank,
+            links,
+            inbox: Mutex::new(Vec::new()),
+            held: Mutex::new(Vec::new()),
+            accepted: Mutex::new(Vec::new()),
+            reader_handles: Mutex::new(Vec::new()),
+            beats_from: Mutex::new(vec![0; ranks]),
+            stop: AtomicBool::new(false),
+            retry: cfg.retry,
+            sent: AtomicU64::new(0),
+            received: AtomicU64::new(0),
+            send_errors: AtomicU64::new(0),
+            corrupt_frames: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            heartbeats_out: AtomicU64::new(0),
+        });
+
+        // Acceptor: non-blocking accept + short sleeps, so shutdown is
+        // a flag flip away (no wall-clock reads, no self-connect hack).
+        self.listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let acceptor_shared = Arc::clone(&shared);
+        let listener = self.listener;
+        // bleedlint: allow(L3) -- transport service thread: the acceptor
+        // outlives any one search and cannot run on the scoped eval pool.
+        let acceptor = thread::spawn(move || acceptor_loop(&listener, &acceptor_shared));
+
+        // Dial every peer now, with seeded backoff; peers bound before
+        // us queue the connection in their listen backlog even if their
+        // acceptor thread isn't up yet.
+        for peer in 0..ranks {
+            if peer != rank {
+                dial_blocking(&shared, peer)?;
+            }
+        }
+
+        let mut service_handles = vec![acceptor];
+        if !cfg.heartbeat.is_zero() {
+            let hb_shared = Arc::clone(&shared);
+            let period = cfg.heartbeat;
+            // bleedlint: allow(L3) -- transport service thread: the
+            // heartbeat paces lease renewal for the process lifetime.
+            service_handles.push(thread::spawn(move || heartbeat_loop(&hb_shared, period)));
+        }
+
+        Ok(TcpNet {
+            shared,
+            local: self.local,
+            service_handles: Mutex::new(service_handles),
+        })
+    }
+}
+
+/// Prepare a just-connected outgoing stream: low-latency writes, a
+/// bounded write stall (a peer that stops draining must not wedge the
+/// engine's publish path), and the identifying Hello frame.
+fn prime_stream(stream: &TcpStream, rank: usize) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut hello = Vec::with_capacity(16);
+    wire::encode(&WireMsg::Hello { rank: rank as u32 }, &mut hello);
+    let mut writer = stream;
+    writer.write_all(&hello)
+}
+
+/// Initial connect: retry under the policy's backoff schedule, blocking
+/// this (construction-time) thread between attempts.
+fn dial_blocking(shared: &Shared, peer: usize) -> Result<()> {
+    let link = shared.links[peer].as_ref().expect("peer link exists");
+    let mut attempt = 1u32;
+    loop {
+        match TcpStream::connect(link.addr) {
+            Ok(stream) => {
+                prime_stream(&stream, shared.rank)
+                    .with_context(|| format!("priming connection to rank {peer}"))?;
+                *link.conn.lock().unwrap() = Some(stream);
+                return Ok(());
+            }
+            Err(e) => {
+                if attempt >= shared.retry.max_attempts.max(1) {
+                    return Err(crate::anyhow!(
+                        "dialing rank {peer} at {}: {e} (gave up after {attempt} attempts)",
+                        link.addr
+                    ));
+                }
+                attempt += 1;
+                thread::sleep(shared.retry.backoff_before(peer as u32, attempt));
+            }
+        }
+    }
+}
+
+fn acceptor_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    while !shared.stopped() {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Readers block on read_exact; keep their socket
+                // blocking and stash a clone so Drop can unblock them.
+                let _ = stream.set_nonblocking(false);
+                if let Ok(clone) = stream.try_clone() {
+                    shared.accepted.lock().unwrap().push(clone);
+                }
+                let reader_shared = Arc::clone(shared);
+                // bleedlint: allow(L3) -- transport service thread: one
+                // blocking frame-reader per accepted peer connection.
+                let handle = thread::spawn(move || reader_loop(stream, &reader_shared));
+                shared.reader_handles.lock().unwrap().push(handle);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Read frames off one accepted connection until EOF/shutdown/corruption.
+fn reader_loop(mut stream: TcpStream, shared: &Arc<Shared>) {
+    let mut header = [0u8; 4];
+    let mut payload = [0u8; MAX_FRAME_LEN];
+    let mut greeted = false;
+    while !shared.stopped() {
+        if stream.read_exact(&mut header).is_err() {
+            break; // EOF or shutdown: the peer is gone.
+        }
+        let len = match wire::frame_len(header) {
+            Ok(len) => len,
+            Err(_) => {
+                // ORDER: Relaxed — monotonic counter, stats-only.
+                shared.corrupt_frames.fetch_add(1, Ordering::Relaxed);
+                break; // Framing lost: drop the connection.
+            }
+        };
+        if stream.read_exact(&mut payload[..len]).is_err() {
+            break;
+        }
+        let msg = match wire::decode_payload(&payload[..len]) {
+            Ok(msg) => msg,
+            Err(_) => {
+                // ORDER: Relaxed — monotonic counter, stats-only.
+                shared.corrupt_frames.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        };
+        match msg {
+            WireMsg::Hello { .. } if !greeted => greeted = true,
+            WireMsg::Hello { .. } => {} // redundant re-hello: harmless
+            _ if !greeted => {
+                // Protocol violation: the first frame must identify the
+                // dialer. ORDER: Relaxed — monotonic counter, stats-only.
+                shared.corrupt_frames.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            WireMsg::Cast(b) => {
+                shared.inbox.lock().unwrap().push(b);
+                // ORDER: Relaxed — monotonic counter, stats-only; the
+                // message itself is published by the inbox mutex.
+                shared.received.fetch_add(1, Ordering::Relaxed);
+            }
+            WireMsg::Heartbeat { rank } => {
+                let mut beats = shared.beats_from.lock().unwrap();
+                if let Some(slot) = beats.get_mut(rank as usize) {
+                    *slot += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Heartbeat: redial dead links on the seeded backoff schedule, renew
+/// held claim leases, and beacon liveness — paced purely by sleep.
+fn heartbeat_loop(shared: &Arc<Shared>, period: Duration) {
+    let mut beacon = Vec::with_capacity(16);
+    wire::encode(
+        &WireMsg::Heartbeat {
+            rank: shared.rank as u32,
+        },
+        &mut beacon,
+    );
+    loop {
+        thread::sleep(period);
+        if shared.stopped() {
+            return;
+        }
+        // 1. Reconnect dead links, one dial per due beat, spacing dials
+        //    by the RetryPolicy backoff quantized to beats.
+        for (peer, link) in shared.links.iter().enumerate() {
+            let Some(link) = link else { continue };
+            if link.conn.lock().unwrap().is_some() {
+                *link.dial.lock().unwrap() = DialState::default();
+                continue;
+            }
+            let mut dial = link.dial.lock().unwrap();
+            if dial.skip_beats > 0 {
+                dial.skip_beats -= 1;
+                continue;
+            }
+            dial.attempts = dial.attempts.saturating_add(1);
+            match TcpStream::connect(link.addr) {
+                Ok(stream) if prime_stream(&stream, shared.rank).is_ok() => {
+                    *link.conn.lock().unwrap() = Some(stream);
+                    *dial = DialState::default();
+                    // ORDER: Relaxed — monotonic counter, stats-only.
+                    shared.reconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {
+                    let backoff = shared
+                        .retry
+                        .backoff_before(peer as u32, dial.attempts.saturating_add(1));
+                    dial.skip_beats = beats_for(backoff, period);
+                }
+            }
+        }
+        // 2. Lease renewal: re-gossip Leased(k) for every k this
+        //    process holds. Receivers fold it with fetch_max, so a live
+        //    process's leases never age out under peers' sweep ticks.
+        let held: Vec<u32> = shared.held.lock().unwrap().clone();
+        for k in held {
+            let mut frame = Vec::with_capacity(24);
+            wire::encode(
+                &WireMsg::Cast(Broadcast::claim_event(shared.rank, ClaimEvent::Leased(k))),
+                &mut frame,
+            );
+            shared.fan_out(&frame);
+        }
+        // 3. Liveness beacon.
+        shared.fan_out(&beacon);
+        // ORDER: Relaxed — monotonic counter, stats-only.
+        shared.heartbeats_out.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Quantize a backoff duration to whole heartbeat ticks (≥ 1 so a
+/// failed dial never retries on the very next beat with zero spacing —
+/// unless the policy really asked for zero backoff).
+fn beats_for(backoff: Duration, period: Duration) -> u32 {
+    if backoff.is_zero() || period.is_zero() {
+        return 0;
+    }
+    let beats = backoff.as_nanos().div_ceil(period.as_nanos().max(1));
+    beats.min(u128::from(u32::MAX)) as u32
+}
+
+impl Transport for TcpNet {
+    fn broadcast(&self, from: usize, _now: Duration, msg: Broadcast) {
+        debug_assert_eq!(from, self.shared.rank, "TcpNet sends only as its own rank");
+        if let Some(ev) = msg.claim {
+            self.shared.note_claim(ev);
+        }
+        let mut frame = Vec::with_capacity(40);
+        wire::encode(&WireMsg::Cast(msg), &mut frame);
+        self.shared.fan_out(&frame);
+    }
+
+    fn drain(&self, _rank: usize, _now: Duration) -> Vec<Broadcast> {
+        std::mem::take(&mut *self.shared.inbox.lock().unwrap())
+    }
+}
+
+impl Drop for TcpNet {
+    fn drop(&mut self) {
+        // ORDER: Relaxed — latch; the threads observe it after their
+        // current blocking op is broken by the socket shutdowns below.
+        self.shared.stop.store(true, Ordering::Relaxed);
+        for link in self.shared.links.iter().flatten() {
+            if let Some(stream) = link.conn.lock().unwrap().take() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        for stream in self.shared.accepted.lock().unwrap().drain(..) {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        // Acceptor first (it spawns readers), then a second shutdown
+        // pass for any connection it accepted while we were draining
+        // above (a late redial would otherwise leave its reader blocked
+        // until the dialing peer exits), then the readers themselves.
+        for handle in self.service_handles.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+        for stream in self.shared.accepted.lock().unwrap().drain(..) {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        for handle in self.shared.reader_handles.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// An in-process bundle of N [`TcpNet`] rank endpoints presented as one
+/// multi-rank [`Transport`]: `broadcast(from, …)` routes to rank
+/// `from`'s endpoint, `drain(rank, …)` to rank `rank`'s. This is what
+/// lets the in-process engine drivers (and `FaultNet`, unchanged) run
+/// over real loopback TCP sockets in tests.
+pub struct TcpFabric {
+    nets: Vec<TcpNet>,
+}
+
+impl TcpFabric {
+    /// Stand up an N-rank full mesh on ephemeral loopback ports: bind
+    /// every listener first, then connect every rank.
+    pub fn local(ranks: usize, cfg: TcpNetConfig) -> Result<TcpFabric> {
+        ensure!(ranks >= 2, "a TCP fabric needs at least 2 ranks");
+        let bounds: Vec<TcpBound> = (0..ranks)
+            .map(|_| TcpNet::bind("127.0.0.1:0"))
+            .collect::<Result<_>>()?;
+        let addrs: Vec<String> = bounds.iter().map(|b| b.local_addr().to_string()).collect();
+        let nets = bounds
+            .into_iter()
+            .enumerate()
+            .map(|(rank, bound)| bound.connect(rank, &addrs, cfg.clone()))
+            .collect::<Result<_>>()?;
+        Ok(TcpFabric { nets })
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.nets.len()
+    }
+
+    pub fn net(&self, rank: usize) -> &TcpNet {
+        &self.nets[rank]
+    }
+}
+
+impl Transport for TcpFabric {
+    fn broadcast(&self, from: usize, now: Duration, msg: Broadcast) {
+        self.nets[from].broadcast(from, now, msg);
+    }
+
+    fn drain(&self, rank: usize, now: Duration) -> Vec<Broadcast> {
+        self.nets[rank].drain(rank, now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::Candidate;
+
+    fn fast_cfg(heartbeat_ms: u64) -> TcpNetConfig {
+        TcpNetConfig {
+            retry: RetryPolicy {
+                max_attempts: 100,
+                base_backoff: Duration::from_millis(1),
+                max_backoff: Duration::from_millis(5),
+                seed: 7,
+            },
+            heartbeat: Duration::from_millis(heartbeat_ms),
+        }
+    }
+
+    /// Poll-drain until `want` messages arrive or ~2s elapse (delivery
+    /// is async; the settle loop is bounded, not timed by a clock read).
+    fn drain_until(net: &TcpNet, want: usize) -> Vec<Broadcast> {
+        let mut got = Vec::new();
+        for _ in 0..2000 {
+            got.extend(net.drain(net.rank(), Duration::ZERO));
+            if got.len() >= want {
+                break;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        got
+    }
+
+    #[test]
+    fn fabric_delivers_to_peers_only() {
+        let fabric = TcpFabric::local(3, fast_cfg(0)).unwrap();
+        let msg = Broadcast::bounds(0, Some(9), None, Some(Candidate { k: 9, score: 0.75 }));
+        fabric.broadcast(0, Duration::ZERO, msg);
+        for rank in 1..3 {
+            let got = drain_until(fabric.net(rank), 1);
+            assert_eq!(got, vec![msg], "rank {rank} got the exact broadcast");
+        }
+        thread::sleep(Duration::from_millis(20));
+        assert!(
+            fabric.net(0).drain(0, Duration::ZERO).is_empty(),
+            "no self-delivery"
+        );
+    }
+
+    #[test]
+    fn heartbeat_beacons_flow_between_ranks() {
+        let fabric = TcpFabric::local(2, fast_cfg(5)).unwrap();
+        for _ in 0..2000 {
+            if fabric.net(0).beats_from(1) >= 3 && fabric.net(1).beats_from(0) >= 3 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert!(fabric.net(0).beats_from(1) >= 3, "beacons from rank 1");
+        assert!(fabric.net(1).beats_from(0) >= 3, "beacons from rank 0");
+    }
+
+    #[test]
+    fn held_leases_are_renewed_until_settled() {
+        let fabric = TcpFabric::local(2, fast_cfg(5)).unwrap();
+        // Rank 0 leases k=12: the heartbeat should re-gossip it, so
+        // rank 1 keeps receiving Leased(12) without further sends.
+        fabric.broadcast(0, Duration::ZERO, Broadcast::claim_event(0, ClaimEvent::Leased(12)));
+        let got = drain_until(fabric.net(1), 3);
+        assert!(
+            got.len() >= 3,
+            "lease renewals keep arriving (got {})",
+            got.len()
+        );
+        assert!(got
+            .iter()
+            .all(|b| b.claim == Some(ClaimEvent::Leased(12)) && b.from == 0));
+
+        // Done(12) settles it: renewals stop (drain what's in flight,
+        // then observe silence across several heartbeat periods).
+        fabric.broadcast(0, Duration::ZERO, Broadcast::claim_event(0, ClaimEvent::Done(12)));
+        thread::sleep(Duration::from_millis(40));
+        fabric.net(1).drain(1, Duration::ZERO);
+        thread::sleep(Duration::from_millis(40));
+        let after = fabric.net(1).drain(1, Duration::ZERO);
+        assert!(
+            after.iter().all(|b| b.claim != Some(ClaimEvent::Leased(12))),
+            "no renewals after Done: {after:?}"
+        );
+    }
+
+    #[test]
+    fn corrupt_frame_drops_connection_not_process() {
+        let bound = TcpNet::bind("127.0.0.1:0").unwrap();
+        let addr = bound.local_addr();
+        // Rank 1 is a bare listener (kept alive so rank 0's dial lands
+        // in its backlog); we then talk to rank 0 from a raw socket.
+        let far = TcpNet::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![addr.to_string(), far.local_addr().to_string()];
+        let net = bound.connect(0, &addrs, fast_cfg(0)).unwrap();
+        let mut raw = TcpStream::connect(addr).unwrap();
+        let mut hello = Vec::new();
+        wire::encode(&WireMsg::Hello { rank: 1 }, &mut hello);
+        raw.write_all(&hello).unwrap();
+        // Oversized length prefix: the reader must reject and hang up.
+        raw.write_all(&(MAX_FRAME_LEN as u32 + 99).to_be_bytes()).unwrap();
+        raw.write_all(&[0u8; 8]).unwrap();
+        for _ in 0..2000 {
+            if net.stats().corrupt_frames > 0 {
+                break;
+            }
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(net.stats().corrupt_frames, 1, "typed rejection, counted");
+        assert!(net.drain(0, Duration::ZERO).is_empty(), "nothing invented");
+    }
+}

@@ -1,0 +1,408 @@
+//! Zero-dependency wire codec for the TCP transport (DESIGN.md §3.7).
+//!
+//! Every frame is length-prefixed — `[len: u32 BE][payload]` — and the
+//! payload is `[kind: u8][body]`, all integers big-endian:
+//!
+//! | kind | message     | body                                        |
+//! |------|-------------|---------------------------------------------|
+//! | 1    | `Hello`     | `rank: u32` (first frame on a connection)   |
+//! | 2    | `Cast`      | a full [`Broadcast`] (layout below)         |
+//! | 3    | `Heartbeat` | `rank: u32` (liveness beacon)               |
+//!
+//! A [`Broadcast`] body is option-tagged field by field:
+//!
+//! ```text
+//! from: u32
+//! floor: tag u8 (0|1) [u32]
+//! ceil:  tag u8 (0|1) [u32]
+//! best:  tag u8 (0|1) [k: u32, score: u64 = f64::to_bits]
+//! claim: tag u8 (0=none 1=leased 2=done 3=failed) [k: u32]
+//! ```
+//!
+//! Scores cross the wire as raw IEEE-754 bits, so every peer rebuilds
+//! the exact f64 the publisher computed — the bitwise half of the
+//! "determinism over the wire" contract (NUMERICS.md). Decoding never
+//! panics: malformed input comes back as a typed [`WireError`] and the
+//! connection that produced it is dropped by the caller.
+
+use super::super::rank::Broadcast;
+use super::super::state::{Candidate, ClaimEvent};
+
+/// Hard ceiling on a frame payload. The largest legal payload (a fully
+/// populated `Cast`) is 28 bytes; anything claiming more than this is a
+/// corrupt or hostile length prefix, rejected before any allocation.
+pub const MAX_FRAME_LEN: usize = 64;
+
+/// One decoded frame payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WireMsg {
+    /// Connection preamble: the dialing rank identifies itself.
+    Hello { rank: u32 },
+    /// A protocol broadcast (bounds / best / claim gossip).
+    Cast(Broadcast),
+    /// Liveness beacon from `rank` (no protocol content).
+    Heartbeat { rank: u32 },
+}
+
+/// Typed decode failure — never a panic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ends before the field (or frame) it promises.
+    Truncated { have: usize, need: usize },
+    /// The length prefix exceeds [`MAX_FRAME_LEN`].
+    Oversized { len: usize },
+    /// Structurally invalid content (bad kind/tag, trailing bytes, …).
+    Corrupt { what: &'static str },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { have, need } => {
+                write!(f, "truncated frame: have {have} bytes, need {need}")
+            }
+            WireError::Oversized { len } => {
+                write!(f, "oversized frame: {len} bytes (max {MAX_FRAME_LEN})")
+            }
+            WireError::Corrupt { what } => write!(f, "corrupt frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+const KIND_HELLO: u8 = 1;
+const KIND_CAST: u8 = 2;
+const KIND_HEARTBEAT: u8 = 3;
+
+/// Append one length-prefixed frame for `msg` to `out`.
+pub fn encode(msg: &WireMsg, out: &mut Vec<u8>) {
+    let start = out.len();
+    out.extend_from_slice(&[0u8; 4]); // length backpatched below
+    match msg {
+        WireMsg::Hello { rank } => {
+            out.push(KIND_HELLO);
+            out.extend_from_slice(&rank.to_be_bytes());
+        }
+        WireMsg::Cast(b) => {
+            out.push(KIND_CAST);
+            out.extend_from_slice(&(b.from as u32).to_be_bytes());
+            put_opt_u32(out, b.floor);
+            put_opt_u32(out, b.ceil);
+            match b.best {
+                None => out.push(0),
+                Some(c) => {
+                    out.push(1);
+                    out.extend_from_slice(&c.k.to_be_bytes());
+                    out.extend_from_slice(&c.score.to_bits().to_be_bytes());
+                }
+            }
+            match b.claim {
+                None => out.push(0),
+                Some(ClaimEvent::Leased(k)) => {
+                    out.push(1);
+                    out.extend_from_slice(&k.to_be_bytes());
+                }
+                Some(ClaimEvent::Done(k)) => {
+                    out.push(2);
+                    out.extend_from_slice(&k.to_be_bytes());
+                }
+                Some(ClaimEvent::Failed(k)) => {
+                    out.push(3);
+                    out.extend_from_slice(&k.to_be_bytes());
+                }
+            }
+        }
+        WireMsg::Heartbeat { rank } => {
+            out.push(KIND_HEARTBEAT);
+            out.extend_from_slice(&rank.to_be_bytes());
+        }
+    }
+    let len = out.len() - start - 4;
+    debug_assert!(len <= MAX_FRAME_LEN, "encoder exceeded MAX_FRAME_LEN");
+    out[start..start + 4].copy_from_slice(&(len as u32).to_be_bytes());
+}
+
+fn put_opt_u32(out: &mut Vec<u8>, v: Option<u32>) {
+    match v {
+        None => out.push(0),
+        Some(x) => {
+            out.push(1);
+            out.extend_from_slice(&x.to_be_bytes());
+        }
+    }
+}
+
+/// Validate a length prefix. `Ok(n)` is the payload size to read next.
+pub fn frame_len(header: [u8; 4]) -> Result<usize, WireError> {
+    let len = u32::from_be_bytes(header) as usize;
+    if len == 0 {
+        return Err(WireError::Corrupt {
+            what: "empty payload",
+        });
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversized { len });
+    }
+    Ok(len)
+}
+
+/// Sequential big-endian field reader over a payload slice.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Truncated {
+                have: self.buf.len(),
+                need: self.pos + n,
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        Ok(u32::from_be_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        Ok(u64::from_be_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    fn opt_u32(&mut self) -> Result<Option<u32>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u32()?)),
+            _ => Err(WireError::Corrupt {
+                what: "bad option tag",
+            }),
+        }
+    }
+}
+
+/// Decode one payload (the bytes after the length prefix). Strict: any
+/// trailing bytes after the message are rejected.
+pub fn decode_payload(payload: &[u8]) -> Result<WireMsg, WireError> {
+    let mut r = Reader {
+        buf: payload,
+        pos: 0,
+    };
+    let msg = match r.u8()? {
+        KIND_HELLO => WireMsg::Hello { rank: r.u32()? },
+        KIND_CAST => {
+            let from = r.u32()? as usize;
+            let floor = r.opt_u32()?;
+            let ceil = r.opt_u32()?;
+            let best = match r.u8()? {
+                0 => None,
+                1 => Some(Candidate {
+                    k: r.u32()?,
+                    score: f64::from_bits(r.u64()?),
+                }),
+                _ => {
+                    return Err(WireError::Corrupt {
+                        what: "bad best tag",
+                    })
+                }
+            };
+            let claim = match r.u8()? {
+                0 => None,
+                1 => Some(ClaimEvent::Leased(r.u32()?)),
+                2 => Some(ClaimEvent::Done(r.u32()?)),
+                3 => Some(ClaimEvent::Failed(r.u32()?)),
+                _ => {
+                    return Err(WireError::Corrupt {
+                        what: "bad claim tag",
+                    })
+                }
+            };
+            WireMsg::Cast(Broadcast {
+                from,
+                floor,
+                ceil,
+                best,
+                claim,
+            })
+        }
+        KIND_HEARTBEAT => WireMsg::Heartbeat { rank: r.u32()? },
+        _ => {
+            return Err(WireError::Corrupt {
+                what: "unknown frame kind",
+            })
+        }
+    };
+    if r.pos != payload.len() {
+        return Err(WireError::Corrupt {
+            what: "trailing bytes",
+        });
+    }
+    Ok(msg)
+}
+
+/// Decode one full frame (prefix + payload) from the front of `buf`;
+/// returns the message and the number of bytes consumed. A buffer
+/// shorter than the frame it promises is `Truncated`.
+pub fn decode_frame(buf: &[u8]) -> Result<(WireMsg, usize), WireError> {
+    if buf.len() < 4 {
+        return Err(WireError::Truncated {
+            have: buf.len(),
+            need: 4,
+        });
+    }
+    let len = frame_len([buf[0], buf[1], buf[2], buf[3]])?;
+    if buf.len() < 4 + len {
+        return Err(WireError::Truncated {
+            have: buf.len(),
+            need: 4 + len,
+        });
+    }
+    let msg = decode_payload(&buf[4..4 + len])?;
+    Ok((msg, 4 + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: WireMsg) {
+        let mut buf = Vec::new();
+        encode(&msg, &mut buf);
+        let (back, used) = decode_frame(&buf).unwrap();
+        assert_eq!(used, buf.len(), "frame self-describes its length");
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn hello_and_heartbeat_roundtrip() {
+        roundtrip(WireMsg::Hello { rank: 0 });
+        roundtrip(WireMsg::Hello { rank: u32::MAX });
+        roundtrip(WireMsg::Heartbeat { rank: 7 });
+    }
+
+    #[test]
+    fn cast_roundtrips_every_field_shape() {
+        roundtrip(WireMsg::Cast(Broadcast::bounds(3, None, None, None)));
+        roundtrip(WireMsg::Cast(Broadcast::bounds(
+            0,
+            Some(11),
+            Some(40),
+            Some(Candidate {
+                k: 11,
+                score: 0.8125,
+            }),
+        )));
+        for ev in [
+            ClaimEvent::Leased(5),
+            ClaimEvent::Done(6),
+            ClaimEvent::Failed(7),
+        ] {
+            roundtrip(WireMsg::Cast(Broadcast::claim_event(2, ev)));
+        }
+    }
+
+    #[test]
+    fn score_bits_survive_exactly() {
+        // Subnormals, negative zero, and "ugly" decimals all cross the
+        // wire bit-for-bit.
+        for score in [f64::MIN_POSITIVE / 2.0, -0.0, 0.1 + 0.2, f64::MAX] {
+            let msg = WireMsg::Cast(Broadcast::bounds(
+                1,
+                None,
+                None,
+                Some(Candidate { k: 3, score }),
+            ));
+            let mut buf = Vec::new();
+            encode(&msg, &mut buf);
+            let (back, _) = decode_frame(&buf).unwrap();
+            match back {
+                WireMsg::Cast(b) => {
+                    assert_eq!(b.best.unwrap().score.to_bits(), score.to_bits())
+                }
+                other => panic!("wrong decode: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors() {
+        let mut buf = Vec::new();
+        encode(
+            &WireMsg::Cast(Broadcast::bounds(
+                0,
+                Some(4),
+                None,
+                Some(Candidate { k: 4, score: 0.5 }),
+            )),
+            &mut buf,
+        );
+        // Every proper prefix fails with Truncated — never panics, and
+        // never parses as a different message.
+        for cut in 0..buf.len() {
+            match decode_frame(&buf[..cut]) {
+                Err(WireError::Truncated { have, need }) => {
+                    assert_eq!(have, cut);
+                    assert!(need > cut);
+                }
+                other => panic!("prefix len {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_and_empty_prefixes_rejected() {
+        assert_eq!(
+            frame_len((MAX_FRAME_LEN as u32 + 1).to_be_bytes()),
+            Err(WireError::Oversized {
+                len: MAX_FRAME_LEN + 1
+            })
+        );
+        assert_eq!(
+            frame_len(u32::MAX.to_be_bytes()),
+            Err(WireError::Oversized {
+                len: u32::MAX as usize
+            })
+        );
+        assert!(matches!(
+            frame_len(0u32.to_be_bytes()),
+            Err(WireError::Corrupt { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_tags_and_trailing_bytes_rejected() {
+        // Unknown kind.
+        assert!(matches!(
+            decode_payload(&[99, 0, 0, 0, 0]),
+            Err(WireError::Corrupt { .. })
+        ));
+        // Bad option tag inside a Cast.
+        assert!(matches!(
+            decode_payload(&[2, 0, 0, 0, 0, 7]),
+            Err(WireError::Corrupt { .. })
+        ));
+        // Valid Hello followed by a stray byte.
+        let mut buf = Vec::new();
+        encode(&WireMsg::Hello { rank: 1 }, &mut buf);
+        let mut payload = buf[4..].to_vec();
+        payload.push(0);
+        assert_eq!(
+            decode_payload(&payload),
+            Err(WireError::Corrupt {
+                what: "trailing bytes"
+            })
+        );
+    }
+}

@@ -3,7 +3,8 @@
 //! * [`engine`] — the pluggable execution core: ONE implementation of
 //!   Alg 4's claim → evaluate → publish → broadcast protocol,
 //!   parameterized by Clock (wall vs. virtual time), Transport (loopback,
-//!   in-proc channels, latency-injecting simulated links), WorkPlan
+//!   in-proc channels, latency-injecting simulated links, and real
+//!   multi-process TCP with a zero-dependency wire codec), WorkPlan
 //!   (chunk/traversal front-end) and EvalCost. Every public entry point
 //!   below is a thin configuration of it.
 //! * [`bleed`] — Alg 1: serial Binary Bleed (Vanilla / Early-Stop) plus
@@ -46,8 +47,9 @@ pub use cache::{CacheStats, EvalCache};
 pub use chunk::{ChunkStrategy, Pipeline};
 pub use engine::{
     bleed_order, normalize_ks, run_event_ev, run_threaded_ev, Clock, EvalCost, EvalSpan,
-    EventOutcome, Loopback, MpscNet, SimNet, Transport, UnitCost, VirtualClock, WallClock,
-    WorkPlan, WorkerSlot,
+    EventOutcome, Loopback, MpscNet, SimNet, TcpBound, TcpFabric, TcpNet, TcpNetConfig, TcpStats,
+    Transport, UnitCost, VirtualClock, WallClock, WireError, WireMsg, WorkPlan, WorkerSlot,
+    MAX_FRAME_LEN,
 };
 pub use evaluation::{
     CountingEvaluator, EvalDiagnostics, EvalError, EvalOutcome, Evaluation, Fingerprint,

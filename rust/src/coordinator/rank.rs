@@ -15,7 +15,7 @@ use super::state::{Candidate, ClaimEvent};
 /// (when claim leases are enabled) one claim-lifecycle event so peer
 /// lease tables track remote work. Everything here is advisory: a lost
 /// message costs wasted work, never a wrong answer.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Broadcast {
     pub from: usize,
     pub floor: Option<u32>,

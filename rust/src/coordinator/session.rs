@@ -403,7 +403,49 @@ impl<'a> SearchSession<'a> {
     /// Fresh run; overwrites any existing checkpoint at the configured
     /// path.
     pub fn run(&self, ks: &[u32]) -> Result<SessionOutcome> {
-        self.run_inner(ks, Vec::new(), Vec::new())
+        self.run_inner(ks, Vec::new(), Vec::new(), None)
+    }
+
+    /// One rank of a multi-process cluster run (DESIGN.md §3.7): build
+    /// the same deterministic [`WorkPlan`] every rank of the cluster
+    /// builds (so `parallel.ranks` must equal the cluster size), keep
+    /// only this rank's worker slots, and propagate bounds/best/claim
+    /// gossip over `transport` (normally a
+    /// [`TcpNet`](super::engine::TcpNet)) instead of in-process
+    /// channels. Because each process runs exactly the slots an
+    /// in-process run would give that rank — against the same seeded
+    /// evaluator — the merged cluster outcome matches the in-process
+    /// `MpscNet` run: same k*, same visited set, bitwise-identical
+    /// per-k records (`rust/tests/distributed.rs`).
+    pub fn run_rank(
+        &self,
+        ks: &[u32],
+        rank: usize,
+        transport: &dyn Transport,
+    ) -> Result<SessionOutcome> {
+        self.run_inner(ks, Vec::new(), Vec::new(), Some((rank, transport)))
+    }
+
+    /// [`SearchSession::resume`] for one cluster rank: preload this
+    /// rank's checkpoint, then continue as [`SearchSession::run_rank`].
+    pub fn resume_rank(
+        &self,
+        ks: &[u32],
+        rank: usize,
+        transport: &dyn Transport,
+    ) -> Result<SessionOutcome> {
+        let path = self
+            .checkpoint
+            .as_deref()
+            .context("resume requires with_checkpoint")?;
+        let (preload, preload_failed) = if path.exists() {
+            let cp = Checkpoint::load(path)?;
+            cp.validate(&self.evaluator.fingerprint(), &normalize_ks(ks))?;
+            (cp.records, cp.failed)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        self.run_inner(ks, preload, preload_failed, Some((rank, transport)))
     }
 
     /// Resume from the configured checkpoint: validate it against this
@@ -422,7 +464,7 @@ impl<'a> SearchSession<'a> {
         } else {
             (Vec::new(), Vec::new())
         };
-        self.run_inner(ks, preload, preload_failed)
+        self.run_inner(ks, preload, preload_failed, None)
     }
 
     fn run_inner(
@@ -430,6 +472,7 @@ impl<'a> SearchSession<'a> {
         ks: &[u32],
         preload: Vec<Evaluation>,
         preload_failed: Vec<EvalError>,
+        cluster: Option<(usize, &dyn Transport)>,
     ) -> Result<SessionOutcome> {
         let ks = normalize_ks(ks);
         let mut cache = EvalCache::new(self.evaluator);
@@ -491,7 +534,26 @@ impl<'a> SearchSession<'a> {
         };
 
         let mk_state = |_: usize| SharedState::with_leases(&ks, self.faults.lease_ttl);
-        let (plan, states, net) = if self.parallel.resources() <= 1 {
+        let (plan, states, net) = if let Some((rank, _)) = cluster {
+            // Cluster rank: the full ranked plan is the cross-process
+            // coordinate system (every process computes the identical
+            // plan from the shared config), then each process executes
+            // only its own slots. States exist for all ranks so remote
+            // gossip merges into the usual per-rank tables.
+            let mut plan = WorkPlan::ranked(
+                &ks,
+                self.parallel.ranks,
+                self.parallel.threads_per_rank,
+                self.parallel.traversal,
+                self.parallel.pipeline,
+            );
+            if rank >= plan.ranks {
+                bail!("rank {rank} outside the {}-rank work plan", plan.ranks);
+            }
+            plan.workers.retain(|w| w.rank == rank);
+            let states: Vec<SharedState> = (0..plan.ranks).map(mk_state).collect();
+            (plan, states, None)
+        } else if self.parallel.resources() <= 1 {
             // Serial Alg 1: deterministic bleed order, loopback.
             (
                 WorkPlan::serial(&ks, self.policy.mode),
@@ -510,9 +572,10 @@ impl<'a> SearchSession<'a> {
             let net = Some(MpscNet::new(plan.ranks));
             (plan, states, net)
         };
-        let transport: &dyn Transport = match &net {
-            Some(n) => n,
-            None => &Loopback,
+        let transport: &dyn Transport = match (&net, cluster) {
+            (Some(n), _) => n,
+            (None, Some((_, t))) => t,
+            (None, None) => &Loopback,
         };
         let result = run_threaded_ev(&ks, &plan, &states, transport, evaluator, self.policy);
 

@@ -83,6 +83,10 @@
 //! # records with zero re-fits, and the report prints both metrics plus
 //! # the cache hit rate.
 //! bleed search --model kmeans --checkpoint runs/kmeans.ckpt.json --resume
+//! # Multi-process (DESIGN.md §3.7): self-spawns one `bleed worker` OS
+//! # process per host:port, meshed over TCP — same k*, visited set and
+//! # per-k record bits as the in-process run on the same seeds.
+//! bleed search --model kmeans --ranks 127.0.0.1:0,127.0.0.1:0
 //! ```
 //!
 //! ```no_run

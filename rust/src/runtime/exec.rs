@@ -1,10 +1,32 @@
-//! Literal marshaling helpers: host `Vec<f32>`/[`Matrix`] ⇄ PJRT literals.
+//! Execution paths outside the in-process engine.
+//!
+//! Two halves live here:
+//!
+//! * **PJRT literal marshaling** (behind the `pjrt` feature): host
+//!   `Vec<f32>`/[`Matrix`] ⇄ PJRT literals for the AOT HLO artifacts.
+//! * **Multi-process cluster orchestration** (always built, DESIGN.md
+//!   §3.7): [`run_cluster`] self-spawns one `bleed worker` OS process
+//!   per rank on this machine, waits for them, and merges their
+//!   [`RankReport`]s into one [`ClusterOutcome`] — the `bleed search
+//!   --ranks host:port,…` path. Worker processes journal completed fits
+//!   through the session checkpoint machinery, so a rank that dies
+//!   mid-run loses at most the fit in flight: its completed records are
+//!   recovered from its journal and its unfinished ks are re-admitted
+//!   by the survivors via lease expiry.
 
-use crate::util::error::{ensure, Result};
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
 
+use crate::coordinator::{Checkpoint, Evaluation, SessionOutcome};
+use crate::util::error::{bail, ensure, Context, Result};
+use crate::util::json::Json;
+
+#[cfg(feature = "pjrt")]
 use crate::linalg::Matrix;
 
 /// Build an f32 literal of the given shape from a flat row-major slice.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product();
     ensure!(
@@ -22,16 +44,19 @@ pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
 }
 
 /// Matrix -> 2-D literal.
+#[cfg(feature = "pjrt")]
 pub fn literal_from_matrix(m: &Matrix) -> Result<xla::Literal> {
     literal_f32(&[m.rows, m.cols], &m.data)
 }
 
 /// Literal -> flat f32 vec.
+#[cfg(feature = "pjrt")]
 pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
 /// Literal -> Matrix with the given shape.
+#[cfg(feature = "pjrt")]
 pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
     let v = literal_to_vec(lit)?;
     ensure!(
@@ -43,6 +68,7 @@ pub fn literal_to_matrix(lit: &xla::Literal, rows: usize, cols: usize) -> Result
 }
 
 /// Literal -> f64 scalar (f32 storage).
+#[cfg(feature = "pjrt")]
 pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f64> {
     let v = literal_to_vec(lit)?;
     ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
@@ -56,6 +82,367 @@ pub fn rank_mask(k: usize, k_max: usize) -> Vec<f32> {
     let mut m = vec![0.0f32; k_max];
     m[..k].fill(1.0);
     m
+}
+
+// ---------------------------------------------------------------------------
+// Cluster orchestration (DESIGN.md §3.7)
+// ---------------------------------------------------------------------------
+
+/// What one rank process reports back (its `--out` JSON file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankReport {
+    pub rank: usize,
+    pub k_optimal: Option<u32>,
+    pub score: Option<f64>,
+    /// ks this rank evaluated itself (its local visit log).
+    pub evaluated: Vec<u32>,
+    /// ks this rank quarantined.
+    pub failed: Vec<u32>,
+    /// Completed evaluation records (bitwise, NUMERICS.md).
+    pub records: Vec<Evaluation>,
+    pub partial: bool,
+    pub elapsed_secs: f64,
+}
+
+impl RankReport {
+    pub fn from_outcome(rank: usize, out: &SessionOutcome) -> RankReport {
+        RankReport {
+            rank,
+            k_optimal: out.result.k_optimal,
+            score: out.result.score,
+            evaluated: out.result.log.evaluated(),
+            failed: out.result.failed_ks.clone(),
+            records: out.records.clone(),
+            partial: out.result.partial,
+            elapsed_secs: out.result.elapsed.as_secs_f64(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("rank".to_string(), Json::Num(self.rank as f64));
+        let opt_u32 = |v: Option<u32>| match v {
+            Some(x) => Json::Num(f64::from(x)),
+            None => Json::Null,
+        };
+        obj.insert("k_optimal".to_string(), opt_u32(self.k_optimal));
+        obj.insert(
+            "score".to_string(),
+            match self.score {
+                Some(s) => Json::Num(s),
+                None => Json::Null,
+            },
+        );
+        let ks = |v: &[u32]| Json::Arr(v.iter().map(|&k| Json::Num(f64::from(k))).collect());
+        obj.insert("evaluated".to_string(), ks(&self.evaluated));
+        obj.insert("failed".to_string(), ks(&self.failed));
+        obj.insert(
+            "records".to_string(),
+            Json::Arr(self.records.iter().map(Evaluation::to_json).collect()),
+        );
+        obj.insert("partial".to_string(), Json::Bool(self.partial));
+        obj.insert("elapsed_secs".to_string(), Json::Num(self.elapsed_secs));
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RankReport> {
+        let rank = j
+            .get("rank")
+            .and_then(Json::as_f64)
+            .context("rank report missing rank")? as usize;
+        let opt_u32 = |key: &str| match j.get(key) {
+            Some(Json::Null) | None => None,
+            Some(v) => v.as_f64().map(|x| x as u32),
+        };
+        let score = match j.get("score") {
+            Some(Json::Num(s)) => Some(*s),
+            _ => None,
+        };
+        let ks = |key: &str| -> Vec<u32> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).map(|v| v as u32).collect())
+                .unwrap_or_default()
+        };
+        let mut records = Vec::new();
+        for r in j
+            .get("records")
+            .and_then(Json::as_arr)
+            .context("rank report missing records")?
+        {
+            records.push(Evaluation::from_json(r).map_err(|e| crate::anyhow!("{e}"))?);
+        }
+        Ok(RankReport {
+            rank,
+            k_optimal: opt_u32("k_optimal"),
+            score,
+            evaluated: ks("evaluated"),
+            failed: ks("failed"),
+            records,
+            partial: matches!(j.get("partial"), Some(Json::Bool(true))),
+            elapsed_secs: j.get("elapsed_secs").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing rank report {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<RankReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading rank report {}", path.display()))?;
+        let j = crate::util::json::parse(&text)
+            .with_context(|| format!("parsing rank report {}", path.display()))?;
+        RankReport::from_json(&j)
+    }
+}
+
+/// A single-machine multi-process run: where the ranks listen, which
+/// binary to spawn, and what search flags every worker gets.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterSpec {
+    /// One `host:port` per rank; port 0 entries are resolved to fresh
+    /// loopback ports before spawning.
+    pub addrs: Vec<String>,
+    /// Search flags forwarded verbatim to every `bleed worker`.
+    pub forward: Vec<String>,
+    /// Worker binary; `None` = this executable (`current_exe`). Tests
+    /// pass `env!("CARGO_BIN_EXE_bleed")` because their own
+    /// `current_exe` is the test harness, not the CLI.
+    pub worker_bin: Option<PathBuf>,
+    /// Report/journal directory; `None` = a temp dir removed after the
+    /// merge.
+    pub out_dir: Option<PathBuf>,
+    /// Extra per-rank environment: `(rank, key, value)` — the chaos
+    /// hooks in `rust/tests/distributed.rs` poison exactly one rank.
+    pub env_per_rank: Vec<(usize, String, String)>,
+    /// Keep going when ranks die, as long as at least one survives
+    /// (the survivors adopt the dead ranks' ks via lease expiry —
+    /// meaningful only with `--lease-ttl > 0` forwarded).
+    pub tolerate_failures: bool,
+}
+
+/// Merged result of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterOutcome {
+    pub ranks: usize,
+    pub k_optimal: Option<u32>,
+    pub score: Option<f64>,
+    /// Union of every rank's evaluated ks, ascending.
+    pub visited: Vec<u32>,
+    /// Domain ks neither evaluated nor failed anywhere.
+    pub pruned: Vec<u32>,
+    /// ks that failed on some rank and succeeded nowhere.
+    pub failed: Vec<u32>,
+    /// One record per evaluated k (cross-process duplicates — lease
+    /// theft across processes — are bitwise-identical and deduplicated).
+    pub records: Vec<Evaluation>,
+    pub dead_ranks: Vec<usize>,
+    pub elapsed_secs: f64,
+}
+
+/// Reserve `n` distinct ephemeral loopback ports by binding them all at
+/// once, then releasing. Test-grade: there is a small window between
+/// release and the worker's re-bind, acceptable for single-machine
+/// orchestration (real deployments pass explicit ports).
+pub fn reserve_loopback_ports(n: usize) -> Result<Vec<u16>> {
+    let listeners: Vec<TcpListener> = (0..n)
+        .map(|_| TcpListener::bind("127.0.0.1:0"))
+        .collect::<std::io::Result<_>>()
+        .context("reserving loopback ports")?;
+    listeners
+        .iter()
+        .map(|l| Ok(l.local_addr().context("reading reserved port")?.port()))
+        .collect()
+}
+
+/// Replace `:0` ports in a rank address list with freshly reserved
+/// loopback ports; explicit ports pass through untouched.
+pub fn resolve_cluster_addrs(addrs: &[String]) -> Result<Vec<String>> {
+    let needs: Vec<usize> = addrs
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| a.rsplit_once(':').map(|(_, p)| p) == Some("0"))
+        .map(|(i, _)| i)
+        .collect();
+    if needs.is_empty() {
+        return Ok(addrs.to_vec());
+    }
+    let ports = reserve_loopback_ports(needs.len())?;
+    let mut out = addrs.to_vec();
+    for (slot, port) in needs.into_iter().zip(ports) {
+        let host = out[slot].rsplit_once(':').map(|(h, _)| h).unwrap_or("");
+        ensure!(!host.is_empty(), "bad rank address '{}'", out[slot]);
+        out[slot] = format!("{host}:{port}");
+    }
+    Ok(out)
+}
+
+/// Spawn one `bleed worker` process per rank, wait for all of them, and
+/// merge their reports. Dead ranks (non-zero exit, or no readable
+/// report) contribute whatever their journal checkpoint captured; with
+/// `tolerate_failures` the merge proceeds as long as one rank survived.
+pub fn run_cluster(spec: &ClusterSpec, domain: &[u32]) -> Result<ClusterOutcome> {
+    ensure!(spec.addrs.len() >= 2, "a cluster needs at least 2 ranks");
+    let addrs = resolve_cluster_addrs(&spec.addrs)?;
+    let ranks = addrs.len();
+    let bin = match &spec.worker_bin {
+        Some(p) => p.clone(),
+        None => std::env::current_exe().context("locating the bleed binary")?,
+    };
+    static RUN_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    // ORDER: Relaxed — the counter only needs per-process uniqueness
+    // for the temp directory name; nothing is published through it.
+    let seq = RUN_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let (out_dir, cleanup) = match &spec.out_dir {
+        Some(d) => (d.clone(), false),
+        None => (
+            std::env::temp_dir().join(format!("bb_cluster_{}_{seq}", std::process::id())),
+            true,
+        ),
+    };
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+
+    let ranks_arg = addrs.join(",");
+    let mut children = Vec::with_capacity(ranks);
+    for rank in 0..ranks {
+        let report_path = out_dir.join(format!("rank{rank}.json"));
+        let journal_path = out_dir.join(format!("rank{rank}.ckpt.json"));
+        let mut cmd = Command::new(&bin);
+        cmd.arg("worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--ranks")
+            .arg(&ranks_arg)
+            .arg("--out")
+            .arg(&report_path)
+            // Journal completed fits: a killed process loses at most
+            // the fit in flight, the merge below recovers the rest.
+            .arg("--checkpoint")
+            .arg(&journal_path)
+            .args(&spec.forward)
+            .stdout(Stdio::null());
+        for (r, key, value) in &spec.env_per_rank {
+            if *r == rank {
+                cmd.env(key, value);
+            }
+        }
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning worker rank {rank} ({})", bin.display()))?;
+        children.push((rank, report_path, journal_path, child));
+    }
+
+    let mut dead_ranks = Vec::new();
+    let mut reports = Vec::new();
+    for (rank, report_path, journal_path, mut child) in children {
+        let status = child
+            .wait()
+            .with_context(|| format!("waiting for worker rank {rank}"))?;
+        if status.success() {
+            match RankReport::load(&report_path) {
+                Ok(report) => {
+                    reports.push(report);
+                    continue;
+                }
+                Err(e) => eprintln!("warning: rank {rank} exited 0 without a report: {e:#}"),
+            }
+        }
+        dead_ranks.push(rank);
+        // Salvage the dead rank's completed fits from its journal.
+        if journal_path.exists() {
+            if let Ok(cp) = Checkpoint::load(&journal_path) {
+                reports.push(RankReport {
+                    rank,
+                    k_optimal: None,
+                    score: None,
+                    evaluated: cp.records.iter().map(|r| r.k).collect(),
+                    failed: cp.failed.iter().map(|f| f.k).collect(),
+                    records: cp.records,
+                    partial: true,
+                    elapsed_secs: 0.0,
+                });
+            }
+        }
+    }
+    if cleanup {
+        let _ = std::fs::remove_dir_all(&out_dir);
+    }
+    if reports.is_empty() {
+        bail!("no worker rank produced a result (dead ranks: {dead_ranks:?})");
+    }
+    if !dead_ranks.is_empty() && !spec.tolerate_failures {
+        bail!(
+            "worker rank(s) {dead_ranks:?} died; pass --lease-ttl > 0 so survivors \
+             adopt their ks, or rerun"
+        );
+    }
+    Ok(merge_rank_reports(domain, ranks, &reports, dead_ranks))
+}
+
+/// Fold per-rank reports into a cluster outcome under the paper's
+/// rules: largest-k optimum across ranks, union visit set, quarantine
+/// only where no rank succeeded, one (bitwise-deduplicated) record per
+/// evaluated k.
+pub fn merge_rank_reports(
+    domain: &[u32],
+    ranks: usize,
+    reports: &[RankReport],
+    mut dead_ranks: Vec<usize>,
+) -> ClusterOutcome {
+    // k*: the publisher of the globally best candidate reports it as
+    // its own optimum (every rank folds remote bests at shutdown), so
+    // the merge is the same largest-k rule over per-rank optima.
+    let mut k_optimal: Option<u32> = None;
+    let mut score: Option<f64> = None;
+    for report in reports {
+        if let Some(k) = report.k_optimal {
+            if k_optimal.map_or(true, |cur| k > cur) {
+                k_optimal = Some(k);
+                score = report.score;
+            }
+        }
+    }
+    let mut visited: Vec<u32> = reports
+        .iter()
+        .flat_map(|r| r.evaluated.iter().copied())
+        .collect();
+    visited.sort_unstable();
+    visited.dedup();
+    // A k that failed on one rank but succeeded on another succeeded.
+    let mut failed: Vec<u32> = reports
+        .iter()
+        .flat_map(|r| r.failed.iter().copied())
+        .filter(|k| visited.binary_search(k).is_err())
+        .collect();
+    failed.sort_unstable();
+    failed.dedup();
+    let mut records: Vec<Evaluation> = reports
+        .iter()
+        .flat_map(|r| r.records.iter().cloned())
+        .collect();
+    records.sort_by_key(|r| r.k);
+    records.dedup_by_key(|r| r.k);
+    let pruned: Vec<u32> = domain
+        .iter()
+        .copied()
+        .filter(|k| visited.binary_search(k).is_err() && failed.binary_search(k).is_err())
+        .collect();
+    let elapsed_secs = reports.iter().map(|r| r.elapsed_secs).fold(0.0, f64::max);
+    dead_ranks.sort_unstable();
+    ClusterOutcome {
+        ranks,
+        k_optimal,
+        score,
+        visited,
+        pruned,
+        failed,
+        records,
+        dead_ranks,
+        elapsed_secs,
+    }
 }
 
 #[cfg(test)]
@@ -75,6 +462,7 @@ mod tests {
         rank_mask(6, 5);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_vec_and_matrix() {
         let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
@@ -85,8 +473,93 @@ mod tests {
         assert_eq!(literal_to_scalar(&s).unwrap(), 7.5);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_shape_mismatch_errors() {
         assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    fn report(rank: usize, k_optimal: Option<u32>, evaluated: &[u32]) -> RankReport {
+        RankReport {
+            rank,
+            k_optimal,
+            score: k_optimal.map(|k| 0.5 + f64::from(k) / 100.0),
+            evaluated: evaluated.to_vec(),
+            failed: Vec::new(),
+            records: evaluated
+                .iter()
+                .map(|&k| Evaluation::scalar(k, 0.5 + f64::from(k) / 100.0))
+                .collect(),
+            partial: false,
+            elapsed_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn rank_report_json_roundtrip() {
+        let mut original = report(1, Some(7), &[3, 5, 7]);
+        original.failed = vec![9];
+        original.partial = true;
+        original.records[0].secondary.insert("db".into(), 0.25);
+        let text = original.to_json().to_string();
+        let back =
+            RankReport::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, original);
+        // None fields survive too.
+        let empty = report(0, None, &[]);
+        let back =
+            RankReport::from_json(&crate::util::json::parse(&empty.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(back, empty);
+    }
+
+    #[test]
+    fn merge_takes_largest_k_and_unions_coverage() {
+        let domain: Vec<u32> = (2..=10).collect();
+        let reports = vec![
+            report(0, Some(6), &[2, 4, 6]),
+            report(1, Some(7), &[3, 5, 7]),
+        ];
+        let out = merge_rank_reports(&domain, 2, &reports, Vec::new());
+        assert_eq!(out.k_optimal, Some(7));
+        assert_eq!(out.score, reports[1].score);
+        assert_eq!(out.visited, vec![2, 3, 4, 5, 6, 7]);
+        assert_eq!(out.pruned, vec![8, 9, 10]);
+        assert!(out.failed.is_empty());
+        assert_eq!(out.records.len(), 6);
+        assert_eq!(out.ranks, 2);
+    }
+
+    #[test]
+    fn merge_dedups_stolen_fits_and_settles_cross_rank_failures() {
+        let domain: Vec<u32> = (2..=6).collect();
+        let mut a = report(0, Some(4), &[2, 3, 4]);
+        a.failed = vec![5]; // rank 0 gave up on 5...
+        let b = report(1, Some(5), &[4, 5, 6]); // ...rank 1 fitted it (and stole 4)
+        let out = merge_rank_reports(&domain, 2, &[a, b], vec![9]);
+        assert_eq!(out.visited, vec![2, 3, 4, 5, 6]);
+        assert!(out.failed.is_empty(), "a k that succeeded anywhere succeeded");
+        assert!(out.pruned.is_empty());
+        // One record per k despite the duplicate fit of k=4.
+        let record_ks: Vec<u32> = out.records.iter().map(|r| r.k).collect();
+        assert_eq!(record_ks, vec![2, 3, 4, 5, 6]);
+        assert_eq!(out.dead_ranks, vec![9]);
+    }
+
+    #[test]
+    fn resolve_addrs_fills_zero_ports_only() {
+        let addrs = vec!["127.0.0.1:0".to_string(), "127.0.0.1:7401".to_string()];
+        let resolved = resolve_cluster_addrs(&addrs).unwrap();
+        assert_eq!(resolved[1], "127.0.0.1:7401");
+        let port: u16 = resolved[0].rsplit_once(':').unwrap().1.parse().unwrap();
+        assert_ne!(port, 0);
+        // Distinct ports when several ranks ask at once.
+        let many = vec!["127.0.0.1:0".to_string(); 4];
+        let resolved = resolve_cluster_addrs(&many).unwrap();
+        let mut ports: Vec<&str> =
+            resolved.iter().map(|a| a.rsplit_once(':').unwrap().1).collect();
+        ports.sort_unstable();
+        ports.dedup();
+        assert_eq!(ports.len(), 4);
     }
 }

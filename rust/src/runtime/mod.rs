@@ -1,14 +1,17 @@
-//! PJRT runtime (DESIGN.md S7): loads the AOT HLO-text artifacts and
-//! executes them from the coordinator hot path. Python never runs here.
+//! Runtime layer: PJRT execution and multi-process orchestration.
 //!
-//! Flow: `ArtifactStore::open("artifacts")` → parses `manifest.json` →
-//! `execute("nmf_run", &[x, w, h, mask])` compiles on first use (cached)
-//! and returns the output tuple as literals. See rust/tests/ for the
-//! numeric round-trip checks against the pure-Rust oracles.
+//! * **PJRT (DESIGN.md S7, `pjrt` feature)**: loads the AOT HLO-text
+//!   artifacts and executes them from the coordinator hot path. Python
+//!   never runs here. Flow: `ArtifactStore::open("artifacts")` → parses
+//!   `manifest.json` → `execute("nmf_run", &[x, w, h, mask])` compiles
+//!   on first use (cached) and returns the output tuple as literals.
+//! * **Cluster orchestration (DESIGN.md §3.7, always built)**:
+//!   [`run_cluster`] self-spawns one `bleed worker` OS process per rank,
+//!   waits, and merges their [`RankReport`]s — the `bleed search
+//!   --ranks host:port,…` execution path.
 
 #[cfg(feature = "pjrt")]
 pub mod artifact;
-#[cfg(feature = "pjrt")]
 pub mod exec;
 pub mod manifest;
 
@@ -16,7 +19,10 @@ pub mod manifest;
 pub use artifact::ArtifactStore;
 #[cfg(feature = "pjrt")]
 pub use exec::{
-    literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar,
-    literal_to_vec, rank_mask,
+    literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar, literal_to_vec,
+};
+pub use exec::{
+    merge_rank_reports, rank_mask, resolve_cluster_addrs, run_cluster, ClusterOutcome,
+    ClusterSpec, RankReport,
 };
 pub use manifest::{Entry, Manifest, TensorSpec};

@@ -10,6 +10,7 @@
 use crate::util::Pcg32;
 
 pub mod fault;
+pub mod transport;
 
 /// Environment knob: `BB_PROP_CASES` scales case counts (CI vs soak).
 pub fn cases(default: usize) -> usize {

@@ -1,0 +1,220 @@
+//! Reusable [`Transport`] contract checker (DESIGN.md §3.7).
+//!
+//! Every transport — in-process or over a wire — must uphold the same
+//! zero-fault contract the engine relies on:
+//!
+//! 1. **Nothing invented**: a fresh transport drains empty everywhere.
+//! 2. **Peers-only delivery** (or self-inclusive, per profile): one
+//!    broadcast arrives exactly once at each entitled recipient.
+//! 3. **Drain-once**: a delivered message never reappears.
+//! 4. **No loss/duplication under bursts**, and **per-sender FIFO**:
+//!    messages from one sender arrive in send order (the event driver's
+//!    replay and the lease gossip's Leased→Done ordering both lean on
+//!    this; cross-sender order stays unspecified).
+//!
+//! [`check_transport_contract`] runs all four over any `&dyn Transport`
+//! given a [`TransportProfile`] describing its delivery semantics —
+//! synchronous mailboxes assert immediately, asynchronous ones (TCP)
+//! poll within a bounded settle budget.
+
+use std::time::Duration;
+
+use crate::coordinator::{Broadcast, Candidate, Transport};
+
+/// Delivery semantics of the transport under test.
+#[derive(Debug, Clone, Copy)]
+pub struct TransportProfile {
+    pub ranks: usize,
+    /// Broadcasts reach every rank other than the sender.
+    pub delivers_to_peers: bool,
+    /// Broadcasts also reach the sender itself (SimNet's visibility
+    /// model; false for MpscNet/TcpNet, vacuous for Loopback).
+    pub delivers_to_self: bool,
+    /// Link latency: peer deliveries are due at `send_time + latency`.
+    pub latency: Duration,
+    /// `Some(budget)` for asynchronous transports: poll-drain up to
+    /// this long before declaring a message lost. `None` = synchronous,
+    /// assert on the first drain.
+    pub settle: Option<Duration>,
+}
+
+impl TransportProfile {
+    pub fn loopback(ranks: usize) -> TransportProfile {
+        TransportProfile {
+            ranks,
+            delivers_to_peers: false,
+            delivers_to_self: false,
+            latency: Duration::ZERO,
+            settle: None,
+        }
+    }
+
+    pub fn mpsc(ranks: usize) -> TransportProfile {
+        TransportProfile {
+            ranks,
+            delivers_to_peers: true,
+            delivers_to_self: false,
+            latency: Duration::ZERO,
+            settle: None,
+        }
+    }
+
+    pub fn sim(ranks: usize, latency: Duration) -> TransportProfile {
+        TransportProfile {
+            ranks,
+            delivers_to_peers: true,
+            delivers_to_self: true,
+            latency,
+            settle: None,
+        }
+    }
+
+    pub fn tcp(ranks: usize) -> TransportProfile {
+        TransportProfile {
+            ranks,
+            delivers_to_peers: true,
+            delivers_to_self: false,
+            latency: Duration::ZERO,
+            settle: Some(Duration::from_secs(5)),
+        }
+    }
+}
+
+/// A uniquely-tagged probe message: the tag rides in `floor` and the
+/// candidate, so assertions can match full payload equality.
+fn probe(from: usize, tag: u32) -> Broadcast {
+    Broadcast::bounds(
+        from,
+        Some(tag),
+        None,
+        Some(Candidate {
+            k: tag,
+            score: 0.5 + f64::from(tag % 7) / 16.0,
+        }),
+    )
+}
+
+/// Drain `rank` until `want` messages arrived or the settle budget is
+/// spent (sync transports get exactly one drain).
+fn drain_settled(
+    t: &dyn Transport,
+    rank: usize,
+    now: Duration,
+    want: usize,
+    settle: Option<Duration>,
+) -> Vec<Broadcast> {
+    let mut got = t.drain(rank, now);
+    if let Some(budget) = settle {
+        // Bounded poll: 1ms per round, no wall-clock reads.
+        let rounds = (budget.as_millis() as usize).max(1);
+        for _ in 0..rounds {
+            if got.len() >= want {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            got.extend(t.drain(rank, now));
+        }
+    }
+    got
+}
+
+/// For async transports: give in-flight traffic a moment to land before
+/// asserting an inbox is (and stays) empty.
+fn grace(settle: Option<Duration>) {
+    if settle.is_some() {
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Assert the zero-fault transport contract. Panics with context on any
+/// violation.
+pub fn check_transport_contract(t: &dyn Transport, p: &TransportProfile) {
+    assert!(p.ranks >= 1, "profile needs at least one rank");
+    let t0 = Duration::from_secs(1);
+    let due = t0 + p.latency;
+
+    // 1. Nothing invented.
+    for rank in 0..p.ranks {
+        assert!(
+            t.drain(rank, due).is_empty(),
+            "rank {rank}: fresh transport invented a message"
+        );
+    }
+
+    // 2+3. Single broadcast: exact delivery set, exactly once.
+    let sent = probe(0, 42);
+    t.broadcast(0, t0, sent);
+    if p.delivers_to_self {
+        let own = drain_settled(t, 0, due, 1, p.settle);
+        assert_eq!(own, vec![sent], "sender sees its own broadcast");
+    } else {
+        grace(p.settle);
+        assert!(
+            t.drain(0, due).is_empty(),
+            "no self-delivery expected for the sender"
+        );
+    }
+    for rank in 1..p.ranks {
+        if p.delivers_to_peers {
+            if !p.latency.is_zero() {
+                assert!(
+                    t.drain(rank, t0).is_empty(),
+                    "rank {rank}: delivered before one link latency elapsed"
+                );
+            }
+            let got = drain_settled(t, rank, due, 1, p.settle);
+            assert_eq!(got, vec![sent], "rank {rank}: exactly-once delivery");
+            assert!(
+                t.drain(rank, due).is_empty(),
+                "rank {rank}: drain-once violated (message reappeared)"
+            );
+        } else {
+            grace(p.settle);
+            assert!(
+                t.drain(rank, due).is_empty(),
+                "rank {rank}: delivery where none expected"
+            );
+        }
+    }
+
+    // 4. Burst from every rank: multiset-exact delivery + per-sender
+    //    FIFO. Tags are globally unique (sender*100 + index).
+    const BURST: u32 = 8;
+    for from in 0..p.ranks {
+        for i in 0..BURST {
+            t.broadcast(from, due, probe(from, from as u32 * 100 + i));
+        }
+    }
+    let all_due = due + p.latency;
+    for rank in 0..p.ranks {
+        let senders: Vec<usize> = (0..p.ranks)
+            .filter(|&s| {
+                if s == rank {
+                    p.delivers_to_self
+                } else {
+                    p.delivers_to_peers
+                }
+            })
+            .collect();
+        let want = senders.len() * BURST as usize;
+        let got = drain_settled(t, rank, all_due, want, p.settle);
+        assert_eq!(
+            got.len(),
+            want,
+            "rank {rank}: burst lost or invented messages"
+        );
+        for &s in &senders {
+            let tags: Vec<u32> = got
+                .iter()
+                .filter(|b| b.from == s)
+                .map(|b| b.floor.expect("probe carries its tag"))
+                .collect();
+            let expect: Vec<u32> = (0..BURST).map(|i| s as u32 * 100 + i).collect();
+            assert_eq!(tags, expect, "rank {rank}: per-sender FIFO from {s} violated");
+        }
+        assert!(
+            t.drain(rank, all_due).is_empty(),
+            "rank {rank}: drain-once violated after burst"
+        );
+    }
+}

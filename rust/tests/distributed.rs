@@ -1,0 +1,268 @@
+//! ISSUE 9 acceptance, multi-process half (DESIGN.md §3.7): spawn real
+//! `bleed worker` OS processes over loopback TCP and hold the cluster
+//! to the determinism contract — same k*, same visited set, and
+//! bitwise-identical per-k [`Evaluation`] records as an in-process
+//! `MpscNet` run on the same seeds (delivery order is the only thing
+//! allowed to differ; the record `cost` field is excluded).
+//!
+//! The killed-process test honors `BB_CHAOS_SEED`: the seed picks which
+//! of the victim rank's ks triggers the simulated power loss.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use binary_bleed::cli::build_evaluator;
+use binary_bleed::coordinator::{
+    Evaluation, Mode, ParallelConfig, Pipeline, SearchSession, SessionOutcome, Traversal, WorkPlan,
+};
+use binary_bleed::linalg::KMeansAlgo;
+use binary_bleed::model::Backend;
+use binary_bleed::runtime::{run_cluster, ClusterOutcome, ClusterSpec};
+
+/// The worker binary under test — workers must NOT be the test harness
+/// (`current_exe` here), so the spec always pins the real `bleed` bin.
+fn bleed_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_bleed"))
+}
+
+fn chaos_base_seed() -> u64 {
+    std::env::var("BB_CHAOS_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Search parameters shared by a cluster run and its in-process twin.
+#[derive(Clone)]
+struct Scenario {
+    model: &'static str,
+    k_min: u32,
+    k_max: u32,
+    k_true: u32,
+    seed: u64,
+    ranks: usize,
+    lease_ttl: u64,
+}
+
+impl Scenario {
+    fn ks(&self) -> Vec<u32> {
+        (self.k_min..=self.k_max).collect()
+    }
+
+    /// The exact flag list the orchestrator forwards to every worker
+    /// (Standard mode + single-threaded eval so the full domain is
+    /// fitted and both sides resolve identical thread shapes).
+    fn forward(&self) -> Vec<String> {
+        [
+            ("--model", self.model.to_string()),
+            ("--k-min", self.k_min.to_string()),
+            ("--k-max", self.k_max.to_string()),
+            ("--k-true", self.k_true.to_string()),
+            ("--seed", self.seed.to_string()),
+            ("--threads", "1".to_string()),
+            ("--eval-threads", "1".to_string()),
+            ("--outer-tasks", "1".to_string()),
+            ("--mode", "standard".to_string()),
+            ("--order", "pre".to_string()),
+            ("--backend", "native".to_string()),
+            ("--lease-ttl", self.lease_ttl.to_string()),
+            ("--heartbeat-ms", "10".to_string()),
+        ]
+        .into_iter()
+        .flat_map(|(name, value)| [name.to_string(), value])
+        .collect()
+    }
+
+    fn cluster_spec(&self) -> ClusterSpec {
+        ClusterSpec {
+            addrs: vec!["127.0.0.1:0".to_string(); self.ranks],
+            forward: self.forward(),
+            worker_bin: Some(bleed_bin()),
+            out_dir: None,
+            env_per_rank: Vec::new(),
+            tolerate_failures: self.lease_ttl > 0,
+        }
+    }
+
+    /// The in-process twin: same evaluator construction as
+    /// `bleed worker` (via the public [`build_evaluator`]), same work
+    /// plan shape, `MpscNet` instead of sockets.
+    fn run_in_process(&self) -> SessionOutcome {
+        let (evaluator, mut policy) = build_evaluator(
+            self.model,
+            self.k_true,
+            self.k_max,
+            self.seed,
+            Backend::Native,
+            0.75,
+            0.2,
+            1, // eval_threads — forwarded as --eval-threads 1
+            1, // engine submitters per process (--threads 1)
+            1, // outer_tasks — forwarded as --outer-tasks 1
+            KMeansAlgo::Auto,
+        )
+        .expect("in-process evaluator");
+        policy.mode = Mode::Standard;
+        SearchSession::new(evaluator.as_ref(), policy)
+            .with_parallel(ParallelConfig {
+                ranks: self.ranks,
+                threads_per_rank: 1,
+                traversal: Traversal::PreOrder,
+                ..Default::default()
+            })
+            .run(&self.ks())
+            .expect("in-process baseline run")
+    }
+}
+
+fn by_k(records: &[Evaluation]) -> BTreeMap<u32, &Evaluation> {
+    records.iter().map(|r| (r.k, r)).collect()
+}
+
+/// Bitwise record comparison per the NUMERICS.md "determinism over the
+/// wire" contract: primary score and every secondary metric must carry
+/// identical f64 bits; `cost` is wall-clock and excluded.
+fn assert_records_bitwise(cluster: &[Evaluation], baseline: &[Evaluation], ks: &[u32]) {
+    let got = by_k(cluster);
+    let want = by_k(baseline);
+    for &k in ks {
+        let (g, w) = match (got.get(&k), want.get(&k)) {
+            (Some(g), Some(w)) => (g, w),
+            _ => panic!("k={k}: missing record (cluster: {}, baseline: {})",
+                got.contains_key(&k), want.contains_key(&k)),
+        };
+        assert_eq!(
+            g.score.to_bits(),
+            w.score.to_bits(),
+            "k={k}: primary score bits differ (cluster {} vs in-process {})",
+            g.score,
+            w.score
+        );
+        assert_eq!(
+            g.secondary.len(),
+            w.secondary.len(),
+            "k={k}: secondary metric sets differ"
+        );
+        for (name, gv) in &g.secondary {
+            let wv = w.secondary.get(name).unwrap_or_else(|| {
+                panic!("k={k}: cluster-only secondary metric '{name}'")
+            });
+            assert_eq!(
+                gv.to_bits(),
+                wv.to_bits(),
+                "k={k}: secondary '{name}' bits differ"
+            );
+        }
+    }
+}
+
+fn assert_matches_baseline(out: &ClusterOutcome, base: &SessionOutcome, ks: &[u32]) {
+    assert_eq!(out.k_optimal, base.result.k_optimal, "k* diverged");
+    match (out.score, base.result.score) {
+        (Some(a), Some(b)) => assert_eq!(a.to_bits(), b.to_bits(), "k* score bits diverged"),
+        (a, b) => assert_eq!(a.is_some(), b.is_some(), "k* score presence diverged"),
+    }
+    let mut base_visited = base.result.log.evaluated();
+    base_visited.sort_unstable();
+    assert_eq!(out.visited, base_visited, "visited set diverged");
+    assert_eq!(out.visited, ks, "Standard mode must cover the whole domain");
+    assert!(out.failed.is_empty(), "no evaluator failures were injected");
+    assert_records_bitwise(&out.records, &base.records, ks);
+}
+
+#[test]
+fn two_process_profile_run_matches_in_process_twin() {
+    let sc = Scenario {
+        model: "profile",
+        k_min: 2,
+        k_max: 24,
+        k_true: 17,
+        seed: 0xB1EED,
+        ranks: 2,
+        lease_ttl: 0,
+    };
+    let ks = sc.ks();
+    let base = sc.run_in_process();
+    let out = run_cluster(&sc.cluster_spec(), &ks).expect("cluster run");
+    assert_eq!(out.ranks, 2);
+    assert!(out.dead_ranks.is_empty(), "no rank was killed");
+    assert_matches_baseline(&out, &base, &ks);
+    assert_eq!(out.k_optimal, Some(sc.k_true), "square wave k* is k_true");
+}
+
+#[test]
+fn kmeans_records_cross_the_wire_bitwise() {
+    // Real fits with secondary metrics: the strongest form of the
+    // contract — every f64 a worker computed arrives in the merged
+    // report bit-for-bit.
+    let sc = Scenario {
+        model: "kmeans",
+        k_min: 2,
+        k_max: 12,
+        k_true: 6,
+        seed: 42,
+        ranks: 2,
+        lease_ttl: 0,
+    };
+    let ks = sc.ks();
+    let base = sc.run_in_process();
+    let out = run_cluster(&sc.cluster_spec(), &ks).expect("cluster run");
+    assert!(out.dead_ranks.is_empty(), "no rank was killed");
+    assert_matches_baseline(&out, &base, &ks);
+    assert!(
+        out.records.iter().all(|r| !r.secondary.is_empty()),
+        "kmeans records carry secondary metrics through the wire"
+    );
+}
+
+#[test]
+fn killed_worker_is_absorbed_by_survivors() {
+    // Simulated power loss: rank 1 calls abort() mid-fit (no unwinding,
+    // no final report — exactly kill -9). Claim leases expire via the
+    // heartbeat-ticked logical clock, survivors re-admit the dead
+    // rank's unfinished ks, and the merged result is the same full
+    // domain and k* as an uninterrupted run.
+    let sc = Scenario {
+        model: "profile",
+        k_min: 2,
+        k_max: 20,
+        k_true: 13,
+        seed: 7,
+        ranks: 3,
+        lease_ttl: 6,
+    };
+    let ks = sc.ks();
+
+    // Victim k: drawn (by BB_CHAOS_SEED) from the k list rank 1 will
+    // actually fit — every worker builds this same deterministic plan.
+    let plan = WorkPlan::ranked(&ks, 3, 1, Traversal::PreOrder, Pipeline::SkipModThenSort);
+    let rank1_ks: Vec<u32> = plan
+        .workers
+        .iter()
+        .filter(|w| w.rank == 1)
+        .flat_map(|w| w.list.iter().copied())
+        .collect();
+    assert!(!rank1_ks.is_empty(), "rank 1 must own some ks");
+    let victim_k = rank1_ks[(chaos_base_seed() as usize) % rank1_ks.len()];
+
+    let mut spec = sc.cluster_spec();
+    spec.env_per_rank = vec![(1, "BB_CHAOS_ABORT_K".to_string(), victim_k.to_string())];
+    let out = run_cluster(&spec, &ks).expect("cluster run with a killed rank");
+
+    assert_eq!(out.dead_ranks, vec![1], "exactly rank 1 died");
+    assert_eq!(
+        out.visited, ks,
+        "survivors re-admitted the dead rank's ks (victim k={victim_k})"
+    );
+    assert!(out.failed.is_empty(), "a killed process is not a failed k");
+    let record_ks: Vec<u32> = out.records.iter().map(|r| r.k).collect();
+    assert_eq!(record_ks, ks, "exactly one merged record per k");
+
+    // Same answer as the uninterrupted in-process run.
+    let base = sc.run_in_process();
+    assert_eq!(out.k_optimal, base.result.k_optimal);
+    assert_eq!(out.k_optimal, Some(sc.k_true));
+    // Duplicated fits (lease theft near the abort) are bitwise clones,
+    // so even the post-merge records still match the clean run.
+    assert_records_bitwise(&out.records, &base.records, &ks);
+}
