@@ -96,6 +96,8 @@ bleed — Binary Bleed automatic model selection (paper reproduction)
 
 USAGE:
   bleed search --model nmfk|kmeans|profile [flags]
+  bleed gen --out data.bbm [--k-true K] [--per-cluster N] [--d D]
+            [--tile-rows T] [--seed S]
   bleed worker --rank R --ranks host1:p1,host2:p2 [--listen ADDR] [--out FILE] [flags]
   bleed experiment fig7|fig8|fig9|table2|arxiv|fig4|dynamics|all [flags]
   bleed artifacts-check [--dir artifacts]
@@ -144,14 +146,31 @@ SEARCH FLAGS:
                            that dies mid-fit stops renewing, survivors
                            re-admit its k after T ticks (default 0 =
                            permanent claims)
+  --data FILE.bbm          search an out-of-core tiled dataset instead of
+                           generating one in memory (kmeans + native only;
+                           write the file with `bleed gen`). Scores are
+                           bitwise identical to the in-memory run on the
+                           same data; records gain io_bytes/stalls columns
+  --prefetch-tiles N       out-of-core prefetch window: tiles read ahead
+                           of compute (default 2; 0 = synchronous reads;
+                           any depth gives bitwise-identical results)
   --k-true K               planted k for the synthetic dataset (default 15)
   --select X --stop X      thresholds (default 0.75 / 0.2)
   --seed S                 rng seed
   --config FILE            TOML defaults for seed, the parallel.*
                            evaluation knobs (eval_threads, outer_tasks,
-                           simd), session.* (checkpoint, resume) and
-                           cluster.* (ranks, heartbeat_ms); explicit
-                           flags win
+                           simd), session.* (checkpoint, resume),
+                           cluster.* (ranks, heartbeat_ms) and data.*
+                           (path, prefetch_tiles); explicit flags win
+GEN FLAGS (write a synthetic dataset as a tiled .bbm file):
+  --out FILE.bbm           output path (required)
+  --k-true K               planted cluster count (default 15)
+  --per-cluster N          rows per cluster (default 25; total rows = K*N)
+  --d D                    feature dimensions (default 8)
+  --tile-rows T            rows per tile (default 256)
+  --seed S                 rng seed (default matches `bleed search`, so
+                           gen + search --data reproduces the in-memory
+                           kmeans search bitwise)
 WORKER FLAGS (one rank process of a cluster search; plus search flags):
   --rank R                 this process's rank in the --ranks list
   --listen ADDR            listen address override (default: the rank's
@@ -169,6 +188,7 @@ pub fn run(raw_args: &[String]) -> Result<()> {
     let args = Args::parse(raw_args)?;
     match args.positional.first().map(String::as_str) {
         Some("search") => cmd_search(&args),
+        Some("gen") => cmd_gen(&args),
         Some("worker") => cmd_worker(&args),
         Some("experiment") => cmd_experiment(&args),
         Some("artifacts-check") => cmd_artifacts_check(&args),
@@ -258,6 +278,10 @@ struct SearchSpec {
     /// Cluster rank listen addresses; empty = in-process run.
     cluster: Vec<String>,
     heartbeat_ms: u64,
+    /// Out-of-core dataset path (`.bbm`); None = in-memory synthetic.
+    data: Option<String>,
+    /// Prefetch window for the out-of-core reader (tiles in flight).
+    prefetch_tiles: usize,
 }
 
 impl SearchSpec {
@@ -393,6 +417,15 @@ fn parse_search_spec(args: &Args) -> Result<SearchSpec> {
     let heartbeat_ms: u64 = args
         .flag_parse("heartbeat-ms")?
         .unwrap_or_else(|| file_cfg.as_ref().map_or(25, |c| c.heartbeat_ms));
+    // Out-of-core dataset (DESIGN.md §3.8): explicit flag wins over
+    // TOML `data.path`.
+    let data: Option<String> = args
+        .flag("data")
+        .map(str::to_string)
+        .or_else(|| file_cfg.as_ref().and_then(|c| c.data_path.clone()));
+    let prefetch_tiles: usize = args
+        .flag_parse("prefetch-tiles")?
+        .unwrap_or_else(|| file_cfg.as_ref().map_or(2, |c| c.prefetch_tiles));
     ensure!(k_min >= 2 && k_min <= k_max, "need 2 <= k-min <= k-max");
     ensure!(
         !resume || checkpoint.is_some(),
@@ -422,7 +455,41 @@ fn parse_search_spec(args: &Args) -> Result<SearchSpec> {
         lease_ttl,
         cluster,
         heartbeat_ms,
+        data,
+        prefetch_tiles,
     })
+}
+
+/// `bleed gen`: write the synthetic k-means dataset as a tiled `.bbm`
+/// file for out-of-core searches. With matching `--k-true`/`--seed`
+/// (and default shape flags) the payload is byte-identical to the
+/// dataset `bleed search --model kmeans` generates in memory, so
+/// `gen` + `search --data` reproduces the in-memory search bitwise.
+fn cmd_gen(args: &Args) -> Result<()> {
+    let out = args
+        .flag("out")
+        .ok_or_else(|| anyhow!("gen needs --out FILE.bbm"))?;
+    let k_true: u32 = args.flag_parse("k-true")?.unwrap_or(15);
+    let per_cluster: usize = args.flag_parse("per-cluster")?.unwrap_or(25);
+    let d: usize = args.flag_parse("d")?.unwrap_or(8);
+    let tile_rows: usize = args.flag_parse("tile-rows")?.unwrap_or(256);
+    let seed: u64 = args.flag_parse("seed")?.unwrap_or(0xB1EED);
+    ensure!(k_true >= 1, "--k-true must be >= 1");
+    ensure!(per_cluster >= 1 && d >= 1, "--per-cluster and --d must be >= 1");
+    ensure!(tile_rows >= 1, "--tile-rows must be >= 1");
+    // Same generator call as build_evaluator's in-memory kmeans path.
+    let mut rng = crate::util::Pcg32::new(seed);
+    let ds = gaussian_blobs(&mut rng, per_cluster, k_true as usize, d, 9.0, 0.5);
+    crate::linalg::write_bbm(out, &ds.x, tile_rows)?;
+    println!(
+        "wrote {out}: {} x {} f32 ({} tiles of {tile_rows} rows, {} bytes, fingerprint {:016x})",
+        ds.x.rows,
+        ds.x.cols,
+        ds.x.rows.div_ceil(tile_rows),
+        32 + ds.x.rows * ds.x.cols * 4,
+        ds.x.fingerprint64(),
+    );
+    Ok(())
 }
 
 fn cmd_search(args: &Args) -> Result<()> {
@@ -448,6 +515,8 @@ fn cmd_search(args: &Args) -> Result<()> {
         engine_workers,
         spec.outer_tasks,
         spec.kmeans_algo,
+        spec.data.as_deref(),
+        spec.prefetch_tiles,
     )?;
     policy.mode = spec.mode;
 
@@ -551,11 +620,17 @@ fn forward_flags(spec: &SearchSpec) -> Vec<String> {
         ("--retry-backoff-ms", spec.retry_backoff_ms.to_string()),
         ("--lease-ttl", spec.lease_ttl.to_string()),
         ("--heartbeat-ms", spec.heartbeat_ms.to_string()),
+        ("--prefetch-tiles", spec.prefetch_tiles.to_string()),
     ];
-    flags
+    let mut out: Vec<String> = flags
         .into_iter()
         .flat_map(|(name, value)| [name.to_string(), value])
-        .collect()
+        .collect();
+    if let Some(data) = &spec.data {
+        out.push("--data".to_string());
+        out.push(data.clone());
+    }
+    out
 }
 
 /// Orchestrate a multi-process search (DESIGN.md §3.7): self-spawn one
@@ -696,6 +771,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
         spec.threads.max(1),
         spec.outer_tasks,
         spec.kmeans_algo,
+        spec.data.as_deref(),
+        spec.prefetch_tiles,
     )?;
     policy.mode = spec.mode;
     let chaos_abort: Option<u32> = std::env::var("BB_CHAOS_ABORT_K")
@@ -769,8 +846,45 @@ pub fn build_evaluator(
     engine_workers: usize,
     outer_tasks: usize,
     kmeans_algo: crate::linalg::KMeansAlgo,
+    data: Option<&str>,
+    prefetch_tiles: usize,
 ) -> Result<(Box<dyn KEvaluator>, SearchPolicy)> {
     let thresholds = Thresholds { select, stop };
+    if let Some(path) = data {
+        // Out-of-core backing (DESIGN.md §3.8). kmeans/native only for
+        // now: NMFk holds perturbed copies of X per trial and the HLO
+        // backend materializes the whole literal, so neither gains
+        // anything from a streamed source yet.
+        ensure!(
+            model == "kmeans",
+            "--data currently supports --model kmeans (got '{model}')"
+        );
+        ensure!(
+            backend == Backend::Native,
+            "--data requires --backend native (the HLO backend \
+             materializes the dataset in device memory)"
+        );
+        let src = crate::linalg::MatrixSource::open(path, prefetch_tiles)?;
+        let ev = KMeansEvaluator::native_src(
+            src,
+            k_max as usize + 2,
+            KMeansScoring::DaviesBouldin,
+            seed,
+        )
+        .with_eval_threads_for(eval_threads, engine_workers)
+        .with_outer_tasks(outer_tasks)
+        .with_algo(kmeans_algo);
+        return Ok((
+            Box::new(ev),
+            SearchPolicy::minimize(
+                Mode::Vanilla,
+                Thresholds {
+                    select: 0.45,
+                    stop: 0.9,
+                },
+            ),
+        ));
+    }
     let mut rng = crate::util::Pcg32::new(seed);
     match model {
         "profile" => Ok((

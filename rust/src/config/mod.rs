@@ -96,6 +96,16 @@ pub struct ExperimentConfig {
     /// thread (then a dead process's leases never expire). TOML
     /// `cluster.heartbeat_ms`, CLI `--heartbeat-ms`.
     pub heartbeat_ms: u64,
+    /// Out-of-core dataset (DESIGN.md §3.8): path to a `.bbm` tiled
+    /// matrix to search instead of generating a synthetic dataset.
+    /// `None` = in-memory synthetic data. TOML `data.path`, CLI
+    /// `--data`.
+    pub data_path: Option<String>,
+    /// Prefetch window (tiles in flight) for the out-of-core reader:
+    /// `0` = synchronous reads, `n` = the consumer runs up to `n` tiles
+    /// behind the prefetcher. Results are bitwise identical at every
+    /// depth. TOML `data.prefetch_tiles`, CLI `--prefetch-tiles`.
+    pub prefetch_tiles: usize,
 }
 
 impl ExperimentConfig {
@@ -129,6 +139,8 @@ impl ExperimentConfig {
             lease_ttl: 0,
             cluster_ranks: Vec::new(),
             heartbeat_ms: 25,
+            data_path: None,
+            prefetch_tiles: 2,
         }
     }
 
@@ -354,6 +366,16 @@ impl ExperimentConfig {
         if let Some(v) = t.get_path("cluster.heartbeat_ms").and_then(TomlValue::as_int) {
             self.heartbeat_ms = v.max(0) as u64;
         }
+        if let Some(v) = t.get_path("data.path").and_then(TomlValue::as_str) {
+            self.data_path = Some(v.to_string());
+        }
+        if let Some(v) = t
+            .get_path("data.prefetch_tiles")
+            .and_then(TomlValue::as_int)
+        {
+            // Same clamp as eval_threads: negative ⇒ 0 ⇒ synchronous.
+            self.prefetch_tiles = v.max(0) as usize;
+        }
         ensure!(self.k_min >= 1 && self.k_min <= self.k_max, "bad k range");
         Ok(())
     }
@@ -501,6 +523,21 @@ stride = 2
         assert!(cfg
             .apply_toml(&parse_toml("[cluster]\nranks = [7401, 7402]\n").unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn data_toml_overrides_apply() {
+        let mut cfg = ExperimentConfig::quick();
+        assert_eq!(cfg.data_path, None, "synthetic data by default");
+        assert_eq!(cfg.prefetch_tiles, 2);
+        let doc = "[data]\npath = \"data/big.bbm\"\nprefetch_tiles = 4\n";
+        cfg.apply_toml(&parse_toml(doc).unwrap()).unwrap();
+        assert_eq!(cfg.data_path.as_deref(), Some("data/big.bbm"));
+        assert_eq!(cfg.prefetch_tiles, 4);
+        // Negative depth clamps to synchronous, not a wrapped usize.
+        cfg.apply_toml(&parse_toml("[data]\nprefetch_tiles = -3\n").unwrap())
+            .unwrap();
+        assert_eq!(cfg.prefetch_tiles, 0);
     }
 
     #[test]

@@ -48,6 +48,13 @@ pub struct EvalDiagnostics {
     /// The concrete assignment algorithm that ran (`"lloyd"`,
     /// `"hamerly"`, … — `Auto` resolved per shape).
     pub algo: Option<String>,
+    /// Bytes this evaluation streamed from an out-of-core dataset
+    /// (DESIGN.md §3.8). `None` for in-memory backings.
+    pub bytes_read: Option<u64>,
+    /// Times the streaming consumer had to wait for a tile the
+    /// prefetcher had not finished — 0 means I/O fully hid behind
+    /// compute. `None` for in-memory backings.
+    pub prefetch_stalls: Option<u64>,
 }
 
 impl EvalDiagnostics {
@@ -157,6 +164,12 @@ impl Evaluation {
         if let Some(v) = &d.algo {
             diag.insert("algo".to_string(), Json::Str(v.clone()));
         }
+        if let Some(v) = d.bytes_read {
+            diag.insert("bytes_read".to_string(), Json::Num(v as f64));
+        }
+        if let Some(v) = d.prefetch_stalls {
+            diag.insert("prefetch_stalls".to_string(), Json::Num(v as f64));
+        }
         if !diag.is_empty() {
             obj.insert("diagnostics".to_string(), Json::Obj(diag));
         }
@@ -194,6 +207,14 @@ impl Evaluation {
                 .and_then(Json::as_f64)
                 .map(|v| v as u64);
             diagnostics.algo = d.get("algo").and_then(Json::as_str).map(str::to_string);
+            diagnostics.bytes_read = d
+                .get("bytes_read")
+                .and_then(Json::as_f64)
+                .map(|v| v as u64);
+            diagnostics.prefetch_stalls = d
+                .get("prefetch_stalls")
+                .and_then(Json::as_f64)
+                .map(|v| v as u64);
         }
         let cost_us = j.get("cost_us").and_then(Json::as_f64).unwrap_or(0.0);
         Ok(Evaluation {
@@ -532,6 +553,8 @@ mod tests {
             restarts: Some(3),
             distance_calcs: Some(123_456),
             algo: Some("elkan".into()),
+            bytes_read: Some(4_194_304),
+            prefetch_stalls: Some(2),
         };
         rec.cost = Duration::from_micros(1234);
         let j = rec.to_json().to_string();

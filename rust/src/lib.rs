@@ -87,6 +87,12 @@
 //! # process per host:port, meshed over TCP — same k*, visited set and
 //! # per-k record bits as the in-process run on the same seeds.
 //! bleed search --model kmeans --ranks 127.0.0.1:0,127.0.0.1:0
+//! # Out-of-core (DESIGN.md §3.8): write a tiled .bbm once, then stream
+//! # it from disk through the double-buffered prefetcher — labels,
+//! # scores and the dataset fingerprint are bitwise identical to the
+//! # in-memory run, and the report grows io_bytes/stalls columns.
+//! bleed gen --out data.bbm
+//! bleed search --model kmeans --data data.bbm --prefetch-tiles 2
 //! ```
 //!
 //! ```no_run

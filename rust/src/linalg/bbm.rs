@@ -1,0 +1,471 @@
+//! `.bbm` — the on-disk tiled matrix format behind out-of-core search
+//! (DESIGN.md §3.8).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"BBM1"
+//! 4       4     version (u32, = 1)
+//! 8       8     rows      (u64)
+//! 16      8     cols      (u64)
+//! 24      8     tile_rows (u64) — preferred streaming granularity
+//! 32      …     payload: rows·cols f32, row-major, LE bit patterns
+//! ```
+//!
+//! A "tile" is `tile_rows` consecutive full rows — purely an I/O
+//! granularity hint recorded by the writer; readers may stream any row
+//! range ([`BbmReader::read_rows_into`] is one positioned read at
+//! `HEADER_LEN + r0·cols·4`, pread-style, so a shared reader serves
+//! many threads without a seek cursor). The payload is the exact
+//! `to_le_bytes` image of [`Matrix::data`], so a write → read round
+//! trip is bit-exact (NaN payloads and signed zeros included) and the
+//! streamed fingerprint ([`super::source::MatrixSource::fingerprint64`])
+//! reproduces [`Matrix::fingerprint64`] byte for byte.
+//!
+//! Robustness contract: [`BbmReader::open`] validates magic, version,
+//! shape arithmetic (overflow-checked) and the payload length against
+//! the file size, so truncated or corrupt files surface as typed
+//! [`Error`](crate::util::error::Error)s — never a panic, and never a
+//! short read later in the middle of a search.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use super::matrix::Matrix;
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
+
+/// First four payload bytes of every `.bbm` file.
+pub const BBM_MAGIC: [u8; 4] = *b"BBM1";
+/// Current (only) format version.
+pub const BBM_VERSION: u32 = 1;
+/// Fixed header length in bytes; the payload starts here.
+pub const BBM_HEADER_LEN: u64 = 32;
+
+/// Decoded `.bbm` header: the matrix shape plus the writer's preferred
+/// streaming tile height.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BbmHeader {
+    pub rows: usize,
+    pub cols: usize,
+    pub tile_rows: usize,
+}
+
+impl BbmHeader {
+    /// Number of row tiles at the recorded granularity (the last tile
+    /// may be short when `tile_rows` does not divide `rows`).
+    pub fn n_tiles(&self) -> usize {
+        self.rows.div_ceil(self.tile_rows)
+    }
+
+    /// Half-open row range `[r0, r1)` of tile `t`.
+    pub fn tile_bounds(&self, t: usize) -> (usize, usize) {
+        let r0 = t * self.tile_rows;
+        (r0, (r0 + self.tile_rows).min(self.rows))
+    }
+}
+
+/// Write `m` to `path` in `.bbm` format with the given preferred tile
+/// height (clamped to `1..=rows`). Parent directories are created.
+pub fn write_bbm(path: impl AsRef<Path>, m: &Matrix, tile_rows: usize) -> Result<()> {
+    let path = path.as_ref();
+    ensure!(m.rows >= 1 && m.cols >= 1, "bbm: refusing to write empty {}x{} matrix", m.rows, m.cols);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("bbm: creating directory {}", dir.display()))?;
+        }
+    }
+    let tile_rows = tile_rows.clamp(1, m.rows);
+    let file = File::create(path).with_context(|| format!("bbm: creating {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    let header_err = || format!("bbm: writing header of {}", path.display());
+    w.write_all(&BBM_MAGIC).with_context(header_err)?;
+    w.write_all(&BBM_VERSION.to_le_bytes()).with_context(header_err)?;
+    w.write_all(&(m.rows as u64).to_le_bytes()).with_context(header_err)?;
+    w.write_all(&(m.cols as u64).to_le_bytes()).with_context(header_err)?;
+    w.write_all(&(tile_rows as u64).to_le_bytes()).with_context(header_err)?;
+    let mut buf = Vec::with_capacity(m.cols * 4);
+    for r in 0..m.rows {
+        buf.clear();
+        for &v in m.row(r) {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)
+            .with_context(|| format!("bbm: writing row {r} of {}", path.display()))?;
+    }
+    w.flush().with_context(|| format!("bbm: flushing {}", path.display()))?;
+    Ok(())
+}
+
+/// Validated read handle over one `.bbm` file. Positioned reads only —
+/// no interior seek cursor — so one reader is shared by the prefetcher
+/// task and any stalled consumer concurrently.
+#[derive(Debug)]
+pub struct BbmReader {
+    file: File,
+    header: BbmHeader,
+}
+
+impl BbmReader {
+    /// Open and fully validate `path`: magic, version, overflow-checked
+    /// shape, and payload length vs file size. Every failure is a typed
+    /// error naming the file and the mismatch.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let file =
+            File::open(path).with_context(|| format!("bbm: opening {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("bbm: inspecting {}", path.display()))?
+            .len();
+        ensure!(
+            len >= BBM_HEADER_LEN,
+            "bbm: {}: truncated header: {len} bytes < the {BBM_HEADER_LEN}-byte header",
+            path.display()
+        );
+        let mut hdr = [0u8; BBM_HEADER_LEN as usize];
+        read_exact_at_off(&file, &mut hdr, 0)
+            .with_context(|| format!("bbm: reading header of {}", path.display()))?;
+        ensure!(
+            hdr[..4] == BBM_MAGIC,
+            "bbm: {}: bad magic {:02x?} (expected {:02x?}; not a .bbm file?)",
+            path.display(),
+            &hdr[..4],
+            BBM_MAGIC
+        );
+        let le_u32 = |b: &[u8]| u32::from_le_bytes(b.try_into().expect("4-byte header field"));
+        let le_u64 = |b: &[u8]| u64::from_le_bytes(b.try_into().expect("8-byte header field"));
+        let version = le_u32(&hdr[4..8]);
+        ensure!(
+            version == BBM_VERSION,
+            "bbm: {}: unsupported version {version} (this build reads {BBM_VERSION})",
+            path.display()
+        );
+        let (rows, cols, tile_rows) =
+            (le_u64(&hdr[8..16]), le_u64(&hdr[16..24]), le_u64(&hdr[24..32]));
+        ensure!(
+            rows >= 1 && cols >= 1,
+            "bbm: {}: degenerate shape {rows}x{cols}",
+            path.display()
+        );
+        ensure!(
+            (1..=rows).contains(&tile_rows),
+            "bbm: {}: tile_rows {tile_rows} outside 1..={rows}",
+            path.display()
+        );
+        let payload = match rows.checked_mul(cols).and_then(|e| e.checked_mul(4)) {
+            Some(p) => p,
+            None => bail!("bbm: {}: shape {rows}x{cols} overflows the payload size", path.display()),
+        };
+        ensure!(
+            len == BBM_HEADER_LEN + payload,
+            "bbm: {}: payload length mismatch: file carries {} payload bytes, header {rows}x{cols} needs {payload} (truncated or corrupt)",
+            path.display(),
+            len.saturating_sub(BBM_HEADER_LEN)
+        );
+        let dim = |v: u64, what: &str| -> Result<usize> {
+            usize::try_from(v)
+                .with_context(|| format!("bbm: {}: {what} {v} exceeds this platform's usize", path.display()))
+        };
+        let header = BbmHeader {
+            rows: dim(rows, "rows")?,
+            cols: dim(cols, "cols")?,
+            tile_rows: dim(tile_rows, "tile_rows")?,
+        };
+        Ok(BbmReader { file, header })
+    }
+
+    pub fn header(&self) -> BbmHeader {
+        self.header
+    }
+
+    /// Read rows `[r0, r1)` into `out` (`out.len() == (r1-r0)·cols`) as
+    /// one positioned read. Thread-safe: no shared cursor. The range is
+    /// a caller invariant (validated against the already-validated
+    /// header), so violations are programming errors, not file errors.
+    pub fn read_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]) -> Result<()> {
+        let h = self.header;
+        assert!(r0 <= r1 && r1 <= h.rows, "bbm: row range {r0}..{r1} outside 0..{}", h.rows);
+        assert_eq!(out.len(), (r1 - r0) * h.cols, "bbm: output buffer shape mismatch");
+        if r0 == r1 {
+            return Ok(());
+        }
+        let mut raw = vec![0u8; (r1 - r0) * h.cols * 4];
+        let off = BBM_HEADER_LEN + r0 as u64 * h.cols as u64 * 4;
+        read_exact_at_off(&self.file, &mut raw, off)
+            .with_context(|| format!("bbm: reading rows {r0}..{r1}"))?;
+        for (dst, src) in out.iter_mut().zip(raw.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(src.try_into().expect("4-byte chunk"));
+        }
+        Ok(())
+    }
+
+    /// Materialize the whole payload as an in-memory [`Matrix`].
+    pub fn read_matrix(&self) -> Result<Matrix> {
+        let h = self.header;
+        let mut m = Matrix::zeros(h.rows, h.cols);
+        self.read_rows_into(0, h.rows, &mut m.data)?;
+        Ok(m)
+    }
+}
+
+#[cfg(unix)]
+fn read_exact_at_off(file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    use std::os::unix::fs::FileExt;
+    file.read_exact_at(buf, off)
+}
+
+#[cfg(not(unix))]
+fn read_exact_at_off(mut file: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    // Portable fallback: seek + read on the shared handle. `&File`
+    // implements Seek/Read, but the cursor is per-handle state, so a
+    // process-global lock serializes concurrent readers (correctness
+    // over concurrency; the unix pread path has no shared cursor).
+    use std::io::{Read, Seek, SeekFrom};
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    let _g = LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    file.seek(SeekFrom::Start(off))?;
+    file.read_exact(buf)
+}
+
+/// Optional zero-copy payload access over `mmap(2)` (`--features mmap`,
+/// unix only; off by default so the default build stays free of raw
+/// syscalls). The prefetcher does not need it — positioned reads
+/// already overlap with compute — but very-wide-row workloads can map
+/// the payload once and hand out borrowed tiles.
+#[cfg(all(unix, feature = "mmap"))]
+mod mapped {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+    use std::path::Path;
+
+    use super::{BbmHeader, BbmReader, BBM_HEADER_LEN};
+    use crate::bail;
+    use crate::util::error::Result;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+    const MAP_FAILED: isize = -1;
+
+    /// A whole-file private read-only mapping of one validated `.bbm`.
+    pub struct MappedBbm {
+        ptr: *const u8,
+        len: usize,
+        header: BbmHeader,
+    }
+
+    // SAFETY: the mapping is created PROT_READ | MAP_PRIVATE over a
+    // file this process opened, is never written through, and lives
+    // exactly as long as `self` (munmap only in Drop) — immutable bytes
+    // behind a stable pointer are freely shared across threads.
+    unsafe impl Send for MappedBbm {}
+    // SAFETY: see the Send impl directly above — read-only mapping,
+    // no interior mutability, pointer valid for the value's lifetime.
+    unsafe impl Sync for MappedBbm {}
+
+    impl MappedBbm {
+        /// Map `path` after full [`BbmReader::open`] validation, so the
+        /// mapped length is exactly `BBM_HEADER_LEN + payload`.
+        pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+            let path = path.as_ref();
+            let reader = BbmReader::open(path)?;
+            let header = reader.header();
+            let file = File::open(path)?;
+            let len = BBM_HEADER_LEN as usize + header.rows * header.cols * 4;
+            // SAFETY: fd is a live descriptor owned by `file` for the
+            // duration of the call; addr=null lets the kernel pick the
+            // placement; `len` was validated against the file size by
+            // BbmReader::open, so the mapping covers real file bytes
+            // and faults cannot outrun the payload.
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == MAP_FAILED || ptr.is_null() {
+                bail!("bbm: mmap of {} failed", path.display());
+            }
+            Ok(MappedBbm { ptr: ptr as *const u8, len, header })
+        }
+
+        pub fn header(&self) -> BbmHeader {
+            self.header
+        }
+
+        /// Raw little-endian payload bytes of rows `[r0, r1)`.
+        pub fn rows_bytes(&self, r0: usize, r1: usize) -> &[u8] {
+            let h = self.header;
+            assert!(r0 <= r1 && r1 <= h.rows, "bbm: row range {r0}..{r1} outside 0..{}", h.rows);
+            let start = BBM_HEADER_LEN as usize + r0 * h.cols * 4;
+            let len = (r1 - r0) * h.cols * 4;
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly
+            // `self.len` bytes (unmapped only in Drop); the asserted
+            // row range keeps `start + len <= self.len`, and u8 has no
+            // alignment or validity requirements.
+            unsafe { std::slice::from_raw_parts(self.ptr.add(start), len) }
+        }
+    }
+
+    impl Drop for MappedBbm {
+        fn drop(&mut self) {
+            // SAFETY: `ptr`/`len` are the exact values returned by the
+            // successful mmap in `open`, unmapped exactly once here; no
+            // borrow of the mapping can outlive self (rows_bytes ties
+            // returned slices to &self).
+            unsafe {
+                munmap(self.ptr as *mut u8, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, feature = "mmap"))]
+pub use mapped::MappedBbm;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bb_bbm_{}_{name}.bbm", std::process::id()))
+    }
+
+    fn sample(rows: usize, cols: usize) -> Matrix {
+        let mut rng = Pcg32::new(77);
+        let mut m = Matrix::rand_normal(rows, cols, &mut rng);
+        // Exercise bit-exactness on the awkward payloads too.
+        m.data[0] = -0.0;
+        m.data[1] = f32::NAN;
+        m.data[2] = f32::from_bits(0x0000_0001); // subnormal
+        m
+    }
+
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let m = sample(13, 7);
+        let p = tmp("roundtrip");
+        write_bbm(&p, &m, 5).unwrap();
+        let r = BbmReader::open(&p).unwrap();
+        assert_eq!(r.header(), BbmHeader { rows: 13, cols: 7, tile_rows: 5 });
+        let got = r.read_matrix().unwrap();
+        assert_eq!(bits(&m), bits(&got));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn partial_row_reads_match_slices() {
+        let m = sample(11, 4);
+        let p = tmp("partial");
+        write_bbm(&p, &m, 4).unwrap();
+        let r = BbmReader::open(&p).unwrap();
+        for (r0, r1) in [(0, 4), (4, 8), (8, 11), (3, 5), (10, 11), (6, 6)] {
+            let mut buf = vec![0.0f32; (r1 - r0) * 4];
+            r.read_rows_into(r0, r1, &mut buf).unwrap();
+            let want = &m.data[r0 * 4..r1 * 4];
+            assert_eq!(
+                buf.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "rows {r0}..{r1}"
+            );
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn tile_bounds_cover_non_divisor_shapes() {
+        let h = BbmHeader { rows: 10, cols: 3, tile_rows: 4 };
+        assert_eq!(h.n_tiles(), 3);
+        assert_eq!(h.tile_bounds(0), (0, 4));
+        assert_eq!(h.tile_bounds(1), (4, 8));
+        assert_eq!(h.tile_bounds(2), (8, 10));
+    }
+
+    #[test]
+    fn truncated_header_is_a_typed_error() {
+        let p = tmp("short");
+        std::fs::write(&p, b"BBM1\x01\x00").unwrap();
+        let err = BbmReader::open(&p).unwrap_err();
+        assert!(format!("{err}").contains("truncated header"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn bad_magic_is_a_typed_error() {
+        let m = sample(4, 4);
+        let p = tmp("magic");
+        write_bbm(&p, &m, 2).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        raw[0] = b'X';
+        std::fs::write(&p, raw).unwrap();
+        let err = BbmReader::open(&p).unwrap_err();
+        assert!(format!("{err}").contains("bad magic"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn unsupported_version_is_a_typed_error() {
+        let m = sample(4, 4);
+        let p = tmp("version");
+        write_bbm(&p, &m, 2).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        raw[4] = 9;
+        std::fs::write(&p, raw).unwrap();
+        let err = BbmReader::open(&p).unwrap_err();
+        assert!(format!("{err}").contains("unsupported version 9"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn truncated_payload_is_a_typed_error() {
+        let m = sample(6, 5);
+        let p = tmp("payload");
+        write_bbm(&p, &m, 3).unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &raw[..raw.len() - 7]).unwrap();
+        let err = BbmReader::open(&p).unwrap_err();
+        assert!(format!("{err}").contains("payload length mismatch"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_tile_rows_is_a_typed_error() {
+        let m = sample(4, 4);
+        let p = tmp("tilerows");
+        write_bbm(&p, &m, 2).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        raw[24..32].copy_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, raw).unwrap();
+        let err = BbmReader::open(&p).unwrap_err();
+        assert!(format!("{err}").contains("tile_rows"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn writer_clamps_tile_rows() {
+        let m = sample(3, 3);
+        let p = tmp("clamp");
+        write_bbm(&p, &m, 4096).unwrap();
+        assert_eq!(BbmReader::open(&p).unwrap().header().tile_rows, 3);
+        write_bbm(&p, &m, 0).unwrap();
+        assert_eq!(BbmReader::open(&p).unwrap().header().tile_rows, 1);
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -14,7 +14,7 @@
 //! precompute + streamed GEMM-shaped distance tiles (never the full
 //! n×n matrix), parallel over row blocks on a [`ThreadPool`].
 
-use super::matrix::{cosine_similarity, Matrix};
+use super::matrix::{cosine_similarity_iter, Matrix};
 use super::pairwise::{row_sq_norms_policy, sq_dist_tile_policy, TILE};
 use crate::util::pool::ThreadPool;
 use crate::util::simd::{self, SimdPolicy};
@@ -24,15 +24,20 @@ use crate::util::simd::{self, SimdPolicy};
 pub fn match_columns(reference: &Matrix, w: &Matrix) -> Vec<usize> {
     let k = reference.cols;
     assert_eq!(w.cols, k);
-    let ref_cols: Vec<Vec<f32>> = (0..k).map(|c| reference.col(c)).collect();
-    let w_cols: Vec<Vec<f32>> = (0..k).map(|c| w.col(c)).collect();
-    // All pair similarities, pick greedily best-first (k is small).
-    // `total_cmp` keeps the sort total even if a degenerate input ever
-    // produced a non-finite similarity.
+    // All pair similarities over borrowed strided columns — the 2k
+    // materialized Vec copies per call are gone, and the f64 fold in
+    // `cosine_similarity_iter` is the same, so similarities are bitwise
+    // unchanged. Pick greedily best-first (k is small). `total_cmp`
+    // keeps the sort total even if a degenerate input ever produced a
+    // non-finite similarity.
     let mut pairs: Vec<(f64, usize, usize)> = Vec::with_capacity(k * k);
-    for (j, wc) in w_cols.iter().enumerate() {
-        for (r, rc) in ref_cols.iter().enumerate() {
-            pairs.push((cosine_similarity(wc, rc), j, r));
+    for j in 0..k {
+        for r in 0..k {
+            pairs.push((
+                cosine_similarity_iter(w.col_iter(j), reference.col_iter(r)),
+                j,
+                r,
+            ));
         }
     }
     pairs.sort_by(|a, b| b.0.total_cmp(&a.0));

@@ -23,11 +23,25 @@
 //! convergence trajectory — matches Lloyd's exactly whenever the labels
 //! do (the non-degenerate case; see NUMERICS.md "bound-accelerated
 //! k-means").
+//!
+//! Out-of-core (DESIGN.md §3.8): every path is written against
+//! [`RowSource`] row blocks. The in-memory backing yields the whole
+//! matrix as one zero-copy block — structurally the original
+//! single-pass loops — while a `.bbm`-backed
+//! [`MatrixSource`](super::source::MatrixSource) streams tiles through
+//! the prefetch pipe. The centroid-mean accumulation is fused into the
+//! per-block assignment pass (one dataset scan per iteration instead
+//! of two), folding in ascending absolute row order — exactly the
+//! order the separate update pass used — so streamed fits are bitwise
+//! identical to in-memory across tile sizes, prefetch depths, and
+//! thread budgets.
 
 use super::matrix::Matrix;
-use super::pairwise::{row_sq_norms_policy, sq_dist_tile_policy};
+use super::pairwise::sq_dist_tile_policy;
+use super::source::{MatrixSource, RowSource};
+use crate::util::error::Result;
 use crate::util::pool::ThreadPool;
-use crate::util::simd::{self, SimdPolicy};
+use crate::util::simd::{self, DotKernel, SimdPolicy};
 use crate::util::Pcg32;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -198,47 +212,114 @@ pub fn kmeans_with_algo(
     policy: SimdPolicy,
     algo: KMeansAlgo,
 ) -> KMeansFit {
+    kmeans_fit_source(x, k, max_iter, rng, pool, policy, algo)
+        .expect("in-memory k-means performs no I/O and cannot fail")
+}
+
+/// [`kmeans_with_algo`] over a [`MatrixSource`]: the out-of-core entry
+/// point. In-memory sources take exactly the [`kmeans_with_algo`] path;
+/// `.bbm`-backed sources stream row tiles through the prefetch pipe and
+/// produce bitwise-identical fits (NUMERICS.md "Determinism from
+/// disk"). Errors are disk errors only.
+#[allow(clippy::too_many_arguments)]
+pub fn kmeans_with_algo_src(
+    x: &MatrixSource,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+    algo: KMeansAlgo,
+) -> Result<KMeansFit> {
+    kmeans_fit_source(x, k, max_iter, rng, pool, policy, algo)
+}
+
+/// Shared fit driver over any [`RowSource`] backing.
+#[allow(clippy::too_many_arguments)]
+fn kmeans_fit_source(
+    x: &dyn RowSource,
+    k: usize,
+    max_iter: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+    algo: KMeansAlgo,
+) -> Result<KMeansFit> {
     assert!(k >= 1, "k must be at least 1");
-    assert!(x.rows >= 1, "kmeans on empty data");
-    let k = k.min(x.rows);
-    match algo.resolve(x.rows, x.cols, k) {
+    assert!(x.rows() >= 1, "kmeans on empty data");
+    let k = k.min(x.rows());
+    match algo.resolve(x.rows(), x.cols(), k) {
         KMeansAlgo::Lloyd => kmeans_lloyd(x, k, max_iter, rng, pool, policy),
         concrete => kmeans_bounded(x, k, max_iter, rng, pool, policy, concrete),
     }
+}
+
+/// Per-row squared norms over any backing: the same
+/// `DotKernel`-resolved `dot(row, row)` fold as
+/// [`super::pairwise::row_sq_norms_policy`], replayed per block — each
+/// norm is a pure function of its own row bytes, so the result is
+/// bitwise identical to the in-memory pass.
+fn source_row_sq_norms(
+    x: &dyn RowSource,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<Vec<f64>> {
+    let kernel = DotKernel::resolve(policy, x.cols());
+    let mut norms = vec![0.0f64; x.rows()];
+    x.for_blocks(pool, &mut |r0, block| {
+        for li in 0..block.rows {
+            let row = block.row(li);
+            norms[r0 + li] = kernel.dot_widened(row, row);
+        }
+        Ok(())
+    })?;
+    Ok(norms)
 }
 
 /// Shared D²-sampled k-means++ seeding. Every algorithm variant calls
 /// this with identical RNG consumption, so all variants start from the
 /// same centroids. Adds its distance evaluations (k passes over n
 /// points) to `calcs`.
+///
+/// Each chosen center's row is materialized once (one positioned read
+/// on the out-of-core backing) and the per-point distance runs against
+/// that copy with the block-local norm slice — the Gram-form element is
+/// a pure function of the two rows and their norms, so the values match
+/// the in-memory absolute-index call bit for bit.
 fn seed_centroids(
-    x: &Matrix,
+    x: &dyn RowSource,
     k: usize,
     rng: &mut Pcg32,
     pool: &ThreadPool,
     policy: SimdPolicy,
     norms: &[f64],
     calcs: &mut u64,
-) -> Matrix {
-    let n = x.rows;
-    let d = x.cols;
+) -> Result<Matrix> {
+    let n = x.rows();
+    let d = x.cols();
     let mut centers: Vec<usize> = vec![rng.gen_range(0, n as u64) as usize];
     // min_d2[i] = squared distance of point i to its nearest chosen center.
     let mut min_d2 = vec![0.0f64; n];
-    let seed_update = |min_d2: &mut [f64], c: usize| {
-        pool.for_slices_mut(min_d2, 1, |_, i0, piece| {
-            let mut t = [0.0f64; 1];
-            for (off, slot) in piece.iter_mut().enumerate() {
-                let i = i0 + off;
-                sq_dist_tile_policy(x, i, i + 1, norms, x, c, c + 1, norms, &mut t, policy);
-                if t[0] < *slot {
-                    *slot = t[0];
+    let mut crow = Matrix::zeros(1, d);
+    let seed_update = |min_d2: &mut Vec<f64>, crow: &Matrix, cnorm: &[f64; 1]| -> Result<()> {
+        x.for_blocks(pool, &mut |r0, block| {
+            let bnorms = &norms[r0..r0 + block.rows];
+            pool.for_slices_mut(&mut min_d2[r0..r0 + block.rows], 1, |_, i0, piece| {
+                let mut t = [0.0f64; 1];
+                for (off, slot) in piece.iter_mut().enumerate() {
+                    let li = i0 + off;
+                    sq_dist_tile_policy(block, li, li + 1, bnorms, crow, 0, 1, cnorm, &mut t, policy);
+                    if t[0] < *slot {
+                        *slot = t[0];
+                    }
                 }
-            }
-        });
+            });
+            Ok(())
+        })
     };
     min_d2.fill(f64::INFINITY);
-    seed_update(&mut min_d2, centers[0]);
+    x.copy_row(centers[0], &mut crow.data)?;
+    seed_update(&mut min_d2, &crow, &[norms[centers[0]]])?;
     *calcs += n as u64;
     while centers.len() < k {
         let total: f64 = min_d2.iter().sum();
@@ -267,30 +348,35 @@ fn seed_centroids(
             (0..n).find(|i| !centers.contains(i)).unwrap_or(0)
         };
         centers.push(next);
-        seed_update(&mut min_d2, next);
+        x.copy_row(next, &mut crow.data)?;
+        seed_update(&mut min_d2, &crow, &[norms[next]])?;
         *calcs += n as u64;
     }
     let mut centroids = Matrix::zeros(k, d);
     for (ci, &i) in centers.iter().enumerate() {
-        centroids.data[ci * d..(ci + 1) * d].copy_from_slice(x.row(i));
+        x.copy_row(i, &mut centroids.data[ci * d..(ci + 1) * d])?;
     }
-    centroids
+    Ok(centroids)
 }
 
-/// The Lloyd oracle path: full n×k assignment every iteration.
+/// The Lloyd oracle path: full n×k assignment every iteration. The
+/// centroid-mean accumulation is fused into the block scan (ascending
+/// absolute row order — the same fold the separate update pass used),
+/// so each iteration reads the dataset exactly once.
 fn kmeans_lloyd(
-    x: &Matrix,
+    x: &dyn RowSource,
     k: usize,
     max_iter: usize,
     rng: &mut Pcg32,
     pool: &ThreadPool,
     policy: SimdPolicy,
-) -> KMeansFit {
-    let n = x.rows;
-    let norms = row_sq_norms_policy(x, policy);
+) -> Result<KMeansFit> {
+    let n = x.rows();
+    let d = x.cols();
+    let norms = source_row_sq_norms(x, pool, policy)?;
     let pool = pool.capped(n / 64);
     let mut calcs = 0u64;
-    let mut centroids = seed_centroids(x, k, rng, &pool, policy, &norms, &mut calcs);
+    let mut centroids = seed_centroids(x, k, rng, &pool, policy, &norms, &mut calcs)?;
 
     // --- Lloyd iterations ----------------------------------------------
     let mut labels = vec![0usize; n];
@@ -301,76 +387,88 @@ fn kmeans_lloyd(
     let mut iterations = 0;
     for it in 0..max_iter.max(1) {
         iterations = it + 1;
-        // Assignment: blocked distances to all k centroids, argmin.
-        let cnorms = row_sq_norms_policy(&centroids, policy);
+        // Assignment: blocked distances to all k centroids, argmin,
+        // plus the fused mean accumulation per block.
+        let cnorms = super::pairwise::row_sq_norms_policy(&centroids, policy);
         let centroids_ref = &centroids;
-        pool.for_slices_mut(&mut assign, 1, |_, i0, piece| {
-            let mut dists = vec![0.0f64; k];
-            for (off, slot) in piece.iter_mut().enumerate() {
-                let i = i0 + off;
-                sq_dist_tile_policy(
-                    x,
-                    i,
-                    i + 1,
-                    &norms,
-                    centroids_ref,
-                    0,
-                    k,
-                    &cnorms,
-                    &mut dists,
-                    policy,
-                );
-                let (mut best_c, mut best_d) = (0usize, f64::INFINITY);
-                for (c, &dv) in dists.iter().enumerate() {
-                    if dv < best_d {
-                        best_d = dv;
-                        best_c = c;
+        let mut sums = Matrix::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        x.for_blocks(&pool, &mut |r0, block| {
+            let bnorms = &norms[r0..r0 + block.rows];
+            pool.for_slices_mut(&mut assign[r0..r0 + block.rows], 1, |_, i0, piece| {
+                let mut dists = vec![0.0f64; k];
+                for (off, slot) in piece.iter_mut().enumerate() {
+                    let li = i0 + off;
+                    sq_dist_tile_policy(
+                        block,
+                        li,
+                        li + 1,
+                        bnorms,
+                        centroids_ref,
+                        0,
+                        k,
+                        &cnorms,
+                        &mut dists,
+                        policy,
+                    );
+                    let (mut best_c, mut best_d) = (0usize, f64::INFINITY);
+                    for (c, &dv) in dists.iter().enumerate() {
+                        if dv < best_d {
+                            best_d = dv;
+                            best_c = c;
+                        }
                     }
+                    *slot = (best_c as u32, best_d);
                 }
-                *slot = (best_c as u32, best_d);
-            }
-        });
+            });
+            accumulate_means(block, &assign[r0..r0 + block.rows], &mut sums, &mut counts);
+            Ok(())
+        })?;
         calcs += (n as u64) * (k as u64);
         let mut new_inertia = 0.0;
         for (i, &(c, dv)) in assign.iter().enumerate() {
             labels[i] = c as usize;
             new_inertia += dv;
         }
-        centroids = update_centroids(x, &labels, &centroids, k);
+        centroids = finalize_centroids(sums, &counts, &centroids);
         let converged = (inertia - new_inertia).abs() < 1e-7 * inertia.max(1.0);
         inertia = new_inertia;
         if converged {
             break;
         }
     }
-    KMeansFit {
+    Ok(KMeansFit {
         centroids,
         labels,
         inertia,
         iterations,
         distance_calcs: calcs,
         algo: KMeansAlgo::Lloyd,
-    }
+    })
 }
 
-/// Mean-update step shared by every variant (serial: O(n·d), cheap next
-/// to the O(n·k·d) assignment). Empty centroids keep their position.
-fn update_centroids(x: &Matrix, labels: &[usize], old: &Matrix, k: usize) -> Matrix {
-    let n = x.rows;
-    let d = x.cols;
-    let mut sums = Matrix::zeros(k, d);
-    let mut counts = vec![0usize; k];
-    for i in 0..n {
-        let c = labels[i];
+/// Fused mean-update accumulation for one row block: f32 sums folded in
+/// ascending row order — called with ascending blocks, this is exactly
+/// the serial `for i in 0..n` fold of the original two-pass update.
+fn accumulate_means(block: &Matrix, assign: &[(u32, f64)], sums: &mut Matrix, counts: &mut [usize]) {
+    let d = block.cols;
+    for (li, &(c, _)) in assign.iter().enumerate() {
+        let c = c as usize;
         counts[c] += 1;
-        for (s, &v) in sums.data[c * d..(c + 1) * d].iter_mut().zip(x.row(i)) {
+        for (s, &v) in sums.data[c * d..(c + 1) * d].iter_mut().zip(block.row(li)) {
             *s += v;
         }
     }
-    for c in 0..k {
-        if counts[c] > 0 {
+}
+
+/// Finish the mean update: divide by counts; empty centroids keep their
+/// old position.
+fn finalize_centroids(mut sums: Matrix, counts: &[usize], old: &Matrix) -> Matrix {
+    let d = sums.cols;
+    for (c, &cnt) in counts.iter().enumerate() {
+        if cnt > 0 {
             for v in &mut sums.data[c * d..(c + 1) * d] {
-                *v /= counts[c] as f32;
+                *v /= cnt as f32;
             }
         } else {
             // Keep empty centroids in place.
@@ -408,21 +506,25 @@ const BOUND_SLACK: f64 = 4e-9;
 ///   column — so a fully-failed point costs exactly k evaluations, the
 ///   Lloyd cost, and the per-point total never exceeds it.
 /// * Per-point work is chunk-independent and the inertia folds serially
-///   in row order, so fits are bitwise identical across thread budgets.
+///   in row order, so fits are bitwise identical across thread budgets
+///   — and across backings: per-point state depends only on the point's
+///   own row, the centroids, and its norm, all invariant under tiling.
+#[allow(clippy::too_many_arguments)]
 fn kmeans_bounded(
-    x: &Matrix,
+    x: &dyn RowSource,
     k: usize,
     max_iter: usize,
     rng: &mut Pcg32,
     pool: &ThreadPool,
     policy: SimdPolicy,
     algo: KMeansAlgo,
-) -> KMeansFit {
-    let n = x.rows;
-    let norms = row_sq_norms_policy(x, policy);
+) -> Result<KMeansFit> {
+    let n = x.rows();
+    let d = x.cols();
+    let norms = source_row_sq_norms(x, pool, policy)?;
     let pool = pool.capped(n / 64);
     let mut calcs = 0u64;
-    let mut centroids = seed_centroids(x, k, rng, &pool, policy, &norms, &mut calcs);
+    let mut centroids = seed_centroids(x, k, rng, &pool, policy, &norms, &mut calcs)?;
 
     // Centers per bound group. Real Yinyang clusters the centers; we
     // group by index, which keeps the bookkeeping deterministic and
@@ -454,7 +556,7 @@ fn kmeans_bounded(
     let shared_calcs = AtomicU64::new(0);
     for it in 0..max_iter.max(1) {
         iterations = it + 1;
-        let cnorms = row_sq_norms_policy(&centroids, policy);
+        let cnorms = super::pairwise::row_sq_norms_policy(&centroids, policy);
         if elkan {
             let mut cc2 = vec![0.0f64; k * k];
             sq_dist_tile_policy(
@@ -480,146 +582,166 @@ fn kmeans_bounded(
         let sep_ref = &sep;
         let gdrift_ref = &gdrift;
         let calcs_ref = &shared_calcs;
-        pool.for_slices_mut(&mut state, s, |_, p0, piece| {
-            let mut row = vec![0.0f64; k];
-            let mut t = [0.0f64; 1];
-            let mut gmin = vec![f64::INFINITY; groups];
-            let mut gmin2 = vec![f64::INFINITY; groups];
-            let mut gdone = vec![false; groups];
-            let mut local: u64 = 0;
-            for (off, st) in piece.chunks_exact_mut(s).enumerate() {
-                let i = p0 + off;
-                if first {
-                    // Full Lloyd pass: initializes the labels and bounds.
-                    sq_dist_tile_policy(
-                        x, i, i + 1, &norms, centroids_ref, 0, k, &cnorms, &mut row, policy,
-                    );
-                    local += k as u64;
-                    let (mut best_c, mut best_d) = (0usize, f64::INFINITY);
-                    for (c, &dv) in row.iter().enumerate() {
-                        if dv < best_d {
-                            best_d = dv;
-                            best_c = c;
-                        }
-                    }
-                    st[0] = best_c as f64;
-                    st[1] = best_d;
-                    for g in 0..groups {
-                        let (c0, c1) = (g * span, ((g + 1) * span).min(k));
-                        let mut m = f64::INFINITY;
-                        for (c, &dv) in row[c0..c1].iter().enumerate().map(|(o, v)| (c0 + o, v)) {
-                            if c != best_c {
-                                m = m.min(dv);
+        let mut sums = Matrix::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        x.for_blocks(&pool, &mut |r0, block| {
+            let bnorms = &norms[r0..r0 + block.rows];
+            let bstate = &mut state[r0 * s..(r0 + block.rows) * s];
+            pool.for_slices_mut(bstate, s, |_, p0, piece| {
+                let mut row = vec![0.0f64; k];
+                let mut t = [0.0f64; 1];
+                let mut gmin = vec![f64::INFINITY; groups];
+                let mut gmin2 = vec![f64::INFINITY; groups];
+                let mut gdone = vec![false; groups];
+                let mut local: u64 = 0;
+                for (off, st) in piece.chunks_exact_mut(s).enumerate() {
+                    let li = p0 + off;
+                    if first {
+                        // Full Lloyd pass: initializes the labels and bounds.
+                        sq_dist_tile_policy(
+                            block, li, li + 1, bnorms, centroids_ref, 0, k, &cnorms, &mut row,
+                            policy,
+                        );
+                        local += k as u64;
+                        let (mut best_c, mut best_d) = (0usize, f64::INFINITY);
+                        for (c, &dv) in row.iter().enumerate() {
+                            if dv < best_d {
+                                best_d = dv;
+                                best_c = c;
                             }
                         }
-                        // min over {c ∈ g, c ≠ best}; INF for best's
-                        // singleton group = "no competitor in here".
-                        st[2 + g] = m.sqrt() * (1.0 - BOUND_SLACK);
-                    }
-                    continue;
-                }
-                let a0 = st[0] as usize;
-                // Exact distance to the current center: the inertia
-                // term and the tightened upper bound.
-                sq_dist_tile_policy(
-                    x, i, i + 1, &norms, centroids_ref, a0, a0 + 1, &cnorms, &mut t, policy,
-                );
-                local += 1;
-                let d2a = t[0];
-                let ua = d2a.sqrt();
-                let ua_hi = ua * (1.0 + BOUND_SLACK);
-                // Age the stored group bounds by this iteration's group
-                // drifts (cumulative: the aged value is written back).
-                let mut lmin = f64::INFINITY;
-                for (g, gd) in gdrift_ref.iter().enumerate() {
-                    let l = st[2 + g] - gd;
-                    st[2 + g] = l;
-                    lmin = lmin.min(l);
-                }
-                if ua_hi <= lmin || (elkan && ua_hi <= sep_ref[a0]) {
-                    // Every other center is provably no closer: the
-                    // assignment cannot change.
-                    st[1] = d2a;
-                    continue;
-                }
-                // Group filter + exact distances for survivors.
-                for g in 0..groups {
-                    gdone[g] = false;
-                    gmin[g] = f64::INFINITY;
-                    gmin2[g] = f64::INFINITY;
-                }
-                let (mut best_c, mut best_d2) = (a0, d2a);
-                for g in 0..groups {
-                    if ua_hi <= st[2 + g] {
-                        continue; // whole group pruned; aged bound stays
-                    }
-                    let c0 = g * span;
-                    let c1 = ((g + 1) * span).min(k);
-                    // Elkan (singleton groups): the center–center
-                    // filter — 2·d(i,a) ≤ d(a,c) already rules c out.
-                    if elkan && c0 != a0 && ua_hi <= 0.5 * cc_ref[a0 * k + c0] {
+                        st[0] = best_c as f64;
+                        st[1] = best_d;
+                        for g in 0..groups {
+                            let (c0, c1) = (g * span, ((g + 1) * span).min(k));
+                            let mut m = f64::INFINITY;
+                            for (c, &dv) in row[c0..c1].iter().enumerate().map(|(o, v)| (c0 + o, v)) {
+                                if c != best_c {
+                                    m = m.min(dv);
+                                }
+                            }
+                            // min over {c ∈ g, c ≠ best}; INF for best's
+                            // singleton group = "no competitor in here".
+                            st[2 + g] = m.sqrt() * (1.0 - BOUND_SLACK);
+                        }
                         continue;
                     }
-                    // Exact distances for the group; the assigned
-                    // center's column is reused, not recomputed.
-                    if a0 >= c0 && a0 < c1 {
-                        if a0 > c0 {
-                            sq_dist_tile_policy(
-                                x, i, i + 1, &norms, centroids_ref, c0, a0, &cnorms,
-                                &mut row[c0..a0], policy,
-                            );
-                        }
-                        if a0 + 1 < c1 {
-                            sq_dist_tile_policy(
-                                x, i, i + 1, &norms, centroids_ref, a0 + 1, c1, &cnorms,
-                                &mut row[a0 + 1..c1], policy,
-                            );
-                        }
-                        row[a0] = d2a;
-                        local += (c1 - c0 - 1) as u64;
-                    } else {
-                        sq_dist_tile_policy(
-                            x, i, i + 1, &norms, centroids_ref, c0, c1, &cnorms,
-                            &mut row[c0..c1], policy,
-                        );
-                        local += (c1 - c0) as u64;
+                    let a0 = st[0] as usize;
+                    // Exact distance to the current center: the inertia
+                    // term and the tightened upper bound.
+                    sq_dist_tile_policy(
+                        block, li, li + 1, bnorms, centroids_ref, a0, a0 + 1, &cnorms, &mut t,
+                        policy,
+                    );
+                    local += 1;
+                    let d2a = t[0];
+                    let ua = d2a.sqrt();
+                    let ua_hi = ua * (1.0 + BOUND_SLACK);
+                    // Age the stored group bounds by this iteration's group
+                    // drifts (cumulative: the aged value is written back).
+                    let mut lmin = f64::INFINITY;
+                    for (g, gd) in gdrift_ref.iter().enumerate() {
+                        let l = st[2 + g] - gd;
+                        st[2 + g] = l;
+                        lmin = lmin.min(l);
                     }
-                    gdone[g] = true;
-                    for (c, &dv) in row[c0..c1].iter().enumerate().map(|(o, v)| (c0 + o, v)) {
-                        if dv < gmin[g] {
-                            gmin2[g] = gmin[g];
-                            gmin[g] = dv;
-                        } else if dv < gmin2[g] {
-                            gmin2[g] = dv;
+                    if ua_hi <= lmin || (elkan && ua_hi <= sep_ref[a0]) {
+                        // Every other center is provably no closer: the
+                        // assignment cannot change.
+                        st[1] = d2a;
+                        continue;
+                    }
+                    // Group filter + exact distances for survivors.
+                    for g in 0..groups {
+                        gdone[g] = false;
+                        gmin[g] = f64::INFINITY;
+                        gmin2[g] = f64::INFINITY;
+                    }
+                    let (mut best_c, mut best_d2) = (a0, d2a);
+                    for g in 0..groups {
+                        if ua_hi <= st[2 + g] {
+                            continue; // whole group pruned; aged bound stays
                         }
-                        if dv < best_d2 {
-                            best_d2 = dv;
-                            best_c = c;
+                        let c0 = g * span;
+                        let c1 = ((g + 1) * span).min(k);
+                        // Elkan (singleton groups): the center–center
+                        // filter — 2·d(i,a) ≤ d(a,c) already rules c out.
+                        if elkan && c0 != a0 && ua_hi <= 0.5 * cc_ref[a0 * k + c0] {
+                            continue;
+                        }
+                        // Exact distances for the group; the assigned
+                        // center's column is reused, not recomputed.
+                        if a0 >= c0 && a0 < c1 {
+                            if a0 > c0 {
+                                sq_dist_tile_policy(
+                                    block, li, li + 1, bnorms, centroids_ref, c0, a0, &cnorms,
+                                    &mut row[c0..a0], policy,
+                                );
+                            }
+                            if a0 + 1 < c1 {
+                                sq_dist_tile_policy(
+                                    block, li, li + 1, bnorms, centroids_ref, a0 + 1, c1, &cnorms,
+                                    &mut row[a0 + 1..c1], policy,
+                                );
+                            }
+                            row[a0] = d2a;
+                            local += (c1 - c0 - 1) as u64;
+                        } else {
+                            sq_dist_tile_policy(
+                                block, li, li + 1, bnorms, centroids_ref, c0, c1, &cnorms,
+                                &mut row[c0..c1], policy,
+                            );
+                            local += (c1 - c0) as u64;
+                        }
+                        gdone[g] = true;
+                        for (c, &dv) in row[c0..c1].iter().enumerate().map(|(o, v)| (c0 + o, v)) {
+                            if dv < gmin[g] {
+                                gmin2[g] = gmin[g];
+                                gmin[g] = dv;
+                            } else if dv < gmin2[g] {
+                                gmin2[g] = dv;
+                            }
+                            if dv < best_d2 {
+                                best_d2 = dv;
+                                best_c = c;
+                            }
+                        }
+                    }
+                    let moved = best_c != a0;
+                    st[0] = best_c as f64;
+                    st[1] = best_d2;
+                    for g in 0..groups {
+                        if gdone[g] {
+                            // Exact refresh: min over the group's computed
+                            // centers excluding the final assignment.
+                            let in_g = best_c >= g * span && best_c < ((g + 1) * span).min(k);
+                            let m = if in_g { gmin2[g] } else { gmin[g] };
+                            st[2 + g] = m.sqrt() * (1.0 - BOUND_SLACK);
+                        } else if moved && a0 >= g * span && a0 < ((g + 1) * span).min(k) {
+                            // The bound excluded the *old* center, which the
+                            // group's competitor set just regained; its
+                            // exact distance is known, so tighten with it.
+                            st[2 + g] = st[2 + g].min(ua * (1.0 - BOUND_SLACK));
                         }
                     }
                 }
-                let moved = best_c != a0;
-                st[0] = best_c as f64;
-                st[1] = best_d2;
-                for g in 0..groups {
-                    if gdone[g] {
-                        // Exact refresh: min over the group's computed
-                        // centers excluding the final assignment.
-                        let in_g = best_c >= g * span && best_c < ((g + 1) * span).min(k);
-                        let m = if in_g { gmin2[g] } else { gmin[g] };
-                        st[2 + g] = m.sqrt() * (1.0 - BOUND_SLACK);
-                    } else if moved && a0 >= g * span && a0 < ((g + 1) * span).min(k) {
-                        // The bound excluded the *old* center, which the
-                        // group's competitor set just regained; its
-                        // exact distance is known, so tighten with it.
-                        st[2 + g] = st[2 + g].min(ua * (1.0 - BOUND_SLACK));
-                    }
+                // ORDER: Relaxed — commutative u64 fold of per-chunk distance
+                // counts; the pool's join provides the happens-before edge.
+                calcs_ref.fetch_add(local, Ordering::Relaxed);
+            });
+            // Fused mean accumulation from the freshly-written labels —
+            // ascending blocks give the exact ascending-row f32 fold of
+            // the original separate update pass.
+            let bstate = &state[r0 * s..(r0 + block.rows) * s];
+            for (li, st) in bstate.chunks_exact(s).enumerate() {
+                let c = st[0] as usize;
+                counts[c] += 1;
+                for (sv, &v) in sums.data[c * d..(c + 1) * d].iter_mut().zip(block.row(li)) {
+                    *sv += v;
                 }
             }
-            // ORDER: Relaxed — commutative u64 fold of per-chunk distance
-            // counts; the pool's join provides the happens-before edge.
-            calcs_ref.fetch_add(local, Ordering::Relaxed);
-        });
+            Ok(())
+        })?;
         // ORDER: Relaxed — read-and-reset after the join above; all worker
         // increments are already visible through the pool's barrier.
         calcs += shared_calcs.swap(0, Ordering::Relaxed);
@@ -628,7 +750,7 @@ fn kmeans_bounded(
             labels[i] = st[0] as usize;
             new_inertia += st[1];
         }
-        let new_centroids = update_centroids(x, &labels, &centroids, k);
+        let new_centroids = finalize_centroids(sums, &counts, &centroids);
         // Center drifts age the bounds next iteration; inflated by the
         // slack so a downward-rounded drift can never over-prune.
         for c in 0..k {
@@ -651,14 +773,14 @@ fn kmeans_bounded(
             break;
         }
     }
-    KMeansFit {
+    Ok(KMeansFit {
         centroids,
         labels,
         inertia,
         iterations,
         distance_calcs: calcs,
         algo,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -814,6 +936,40 @@ mod tests {
                 lloyd.distance_calcs
             );
         }
+    }
+
+    #[test]
+    fn streamed_fit_is_bitwise_identical_to_in_memory() {
+        let mut rng = Pcg32::new(29);
+        let ds = gaussian_blobs(&mut rng, 20, 4, 5, 8.0, 0.6);
+        let p = std::env::temp_dir()
+            .join(format!("bb_kmeans_src_{}.bbm", std::process::id()));
+        super::super::bbm::write_bbm(&p, &ds.x, 17).unwrap();
+        let pool = ThreadPool::new(4);
+        for algo in ALL_ALGOS {
+            for depth in [0usize, 2] {
+                let src = MatrixSource::open(&p, depth).unwrap();
+                let mut rng_mem = Pcg32::with_stream(5, 3);
+                let mut rng_dsk = Pcg32::with_stream(5, 3);
+                let mem = kmeans_with_algo(
+                    &ds.x, 4, 25, &mut rng_mem, &pool, SimdPolicy::Auto, algo,
+                );
+                let dsk = kmeans_with_algo_src(
+                    &src, 4, 25, &mut rng_dsk, &pool, SimdPolicy::Auto, algo,
+                )
+                .unwrap();
+                assert_eq!(mem.labels, dsk.labels, "{algo:?} depth={depth}");
+                assert_eq!(
+                    mem.inertia.to_bits(),
+                    dsk.inertia.to_bits(),
+                    "{algo:?} depth={depth}"
+                );
+                assert_eq!(mem.centroids.data, dsk.centroids.data, "{algo:?} depth={depth}");
+                assert_eq!(mem.distance_calcs, dsk.distance_calcs, "{algo:?} depth={depth}");
+                assert_eq!(mem.iterations, dsk.iterations, "{algo:?} depth={depth}");
+            }
+        }
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

@@ -296,9 +296,26 @@ impl Matrix {
             .sum()
     }
 
-    /// Extract column c as a Vec.
+    /// Extract column c as a Vec. Allocates — in per-iteration loops
+    /// prefer the borrowed [`Self::col_iter`] / [`Self::copy_col_into`].
     pub fn col(&self, c: usize) -> Vec<f32> {
-        (0..self.rows).map(|r| self.at(r, c)).collect()
+        self.col_iter(c).collect()
+    }
+
+    /// Strided iterator over column c — no allocation, walks the
+    /// row-major buffer with stride `cols`.
+    pub fn col_iter(&self, c: usize) -> impl Iterator<Item = f32> + '_ {
+        debug_assert!(c < self.cols);
+        self.data[c..].iter().step_by(self.cols).copied()
+    }
+
+    /// Copy column c into a caller-owned slice of length `rows` —
+    /// the reusable-buffer form of [`Self::col`].
+    pub fn copy_col_into(&self, c: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows);
+        for (o, v) in out.iter_mut().zip(self.col_iter(c)) {
+            *o = v;
+        }
     }
 
     /// FNV-1a hash over the shape and the element bit patterns —
@@ -329,8 +346,18 @@ impl Matrix {
 /// Cosine similarity between two equal-length vectors.
 pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
+    cosine_similarity_iter(a.iter().copied(), b.iter().copied())
+}
+
+/// [`cosine_similarity`] over element streams — same sequential f64
+/// fold, so e.g. two [`Matrix::col_iter`] streams give the bitwise-same
+/// similarity as the materialized columns, without the Vec copies.
+pub fn cosine_similarity_iter(
+    a: impl Iterator<Item = f32>,
+    b: impl Iterator<Item = f32>,
+) -> f64 {
     let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
-    for (&x, &y) in a.iter().zip(b) {
+    for (x, y) in a.zip(b) {
         dot += x as f64 * y as f64;
         na += x as f64 * x as f64;
         nb += y as f64 * y as f64;
@@ -341,6 +368,20 @@ pub fn cosine_similarity(a: &[f32], b: &[f32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn col_accessors_agree() {
+        let m = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 4., 6.]);
+        assert_eq!(m.col_iter(1).collect::<Vec<f32>>(), m.col(1));
+        let mut buf = vec![0.0f32; 3];
+        m.copy_col_into(0, &mut buf);
+        assert_eq!(buf, vec![1., 3., 5.]);
+        assert_eq!(
+            cosine_similarity_iter(m.col_iter(0), m.col_iter(1)).to_bits(),
+            cosine_similarity(&m.col(0), &m.col(1)).to_bits()
+        );
+    }
 
     #[test]
     fn matmul_identity() {

@@ -16,6 +16,7 @@
 //! tolerance-bounded, and across which axes — is written down in
 //! NUMERICS.md.
 
+pub mod bbm;
 pub mod cluster_stability;
 pub mod kmeans_ref;
 pub mod matrix;
@@ -23,22 +24,36 @@ pub mod nmf_ref;
 pub mod pairwise;
 pub mod rescal_ref;
 pub mod scores;
+pub mod source;
+
+pub use bbm::{write_bbm, BbmHeader, BbmReader};
 
 pub use cluster_stability::{
     match_columns, perturbation_silhouette, perturbation_silhouette_with,
     perturbation_silhouette_with_policy,
 };
 pub use kmeans_ref::{
-    kmeans, kmeans_with, kmeans_with_algo, kmeans_with_policy, KMeansAlgo, KMeansFit,
+    kmeans, kmeans_with, kmeans_with_algo, kmeans_with_algo_src, kmeans_with_policy, KMeansAlgo,
+    KMeansFit,
 };
-pub use matrix::{cosine_similarity, Matrix};
-pub use nmf_ref::{nmf, nmf_from, nmf_from_with, nmf_from_with_policy, NmfFit};
+pub use matrix::{cosine_similarity, cosine_similarity_iter, Matrix};
+pub use nmf_ref::{
+    nmf, nmf_from, nmf_from_with, nmf_from_with_policy, nmf_from_with_policy_src, nmf_src, NmfFit,
+};
 pub use pairwise::{
     row_sq_norms, row_sq_norms_policy, sq_dist_matrix, sq_dist_matrix_policy, sq_dist_tile,
     sq_dist_tile_policy,
 };
-pub use rescal_ref::{rescal, rescal_relative_error, rescal_with, RescalFit};
+pub use rescal_ref::{
+    rescal, rescal_relative_error, rescal_relative_error_src, rescal_with, rescal_with_src,
+    RescalFit,
+};
 pub use scores::{
-    davies_bouldin, davies_bouldin_oracle, davies_bouldin_with, davies_bouldin_with_policy,
-    silhouette, silhouette_oracle, silhouette_with, silhouette_with_policy,
+    davies_bouldin, davies_bouldin_oracle, davies_bouldin_src, davies_bouldin_with,
+    davies_bouldin_with_policy, silhouette, silhouette_oracle, silhouette_src, silhouette_with,
+    silhouette_with_policy,
+};
+pub use source::{
+    src_matmul, src_matmul_nt, src_matmul_tn_left, src_matmul_tn_right, src_nmf_relative_error,
+    src_rescal_residual_into, src_row_sq_norms, DiskMatrix, IoStats, MatrixSource, RowSource,
 };

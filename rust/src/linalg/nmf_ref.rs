@@ -15,6 +15,10 @@
 //! still bitwise identical across thread budgets within the policy.
 
 use super::matrix::Matrix;
+use super::source::{
+    src_matmul_nt, src_matmul_tn_right, src_nmf_relative_error, MatrixSource, RowSource,
+};
+use crate::util::error::Result;
 use crate::util::pool::ThreadPool;
 use crate::util::simd::{self, SimdPolicy};
 use crate::util::Pcg32;
@@ -90,6 +94,66 @@ pub fn nmf_from_with_policy(
     }
 }
 
+/// [`nmf`] over a [`MatrixSource`]: fresh random factors, then
+/// [`nmf_from_with_policy_src`]. Draws from `rng` in the same order as
+/// [`nmf`], so seeds are backing-invariant.
+pub fn nmf_src(
+    x: &MatrixSource,
+    k: usize,
+    iters: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<NmfFit> {
+    let w0 = Matrix::rand_uniform(x.rows(), k, rng).map(|v| v + 0.01);
+    let h0 = Matrix::rand_uniform(k, x.cols(), rng).map(|v| v + 0.01);
+    nmf_from_with_policy_src(x, w0, h0, iters, pool, policy)
+}
+
+/// [`nmf_from_with_policy`] over a [`MatrixSource`].
+///
+/// Only the three products that touch `X` stream tiles from the source
+/// ([`src_matmul_nt`] for `X·Hᵀ`, [`src_matmul_tn_right`] for `Wᵀ·X`,
+/// [`src_nmf_relative_error`] for the final residual); every factor-only
+/// product is the in-memory kernel unchanged. Each streamed helper
+/// reproduces the in-memory kernel's per-element arithmetic exactly
+/// (position-free element values, ascending-row accumulation), so the
+/// fit is **bitwise identical** to [`nmf_from_with_policy`] on the same
+/// data regardless of backing, tile size, prefetch depth, or thread
+/// budget. Errors only on I/O failure from an out-of-core source.
+pub fn nmf_from_with_policy_src(
+    x: &MatrixSource,
+    mut w: Matrix,
+    mut h: Matrix,
+    iters: usize,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<NmfFit> {
+    assert_eq!(w.rows, x.rows());
+    assert_eq!(h.cols, x.cols());
+    assert_eq!(w.cols, h.rows);
+    for _ in 0..iters {
+        let hht = h.matmul_nt_with_policy(&h, pool, policy);
+        let num = src_matmul_nt(x, &h, pool, policy)?;
+        let den = w.matmul_with_policy(&hht, pool, policy);
+        w = w
+            .zip(&num, |wv, nv| wv * nv)
+            .zip(&den, |wn, dv| wn / (dv + EPS));
+        let wtw = w.matmul_tn_with_policy(&w, pool, policy);
+        let num = src_matmul_tn_right(&w, x, pool, policy)?;
+        let den = wtw.matmul_with_policy(&h, pool, policy);
+        h = h
+            .zip(&num, |hv, nv| hv * nv)
+            .zip(&den, |hn, dv| hn / (dv + EPS));
+    }
+    let relative_error = src_nmf_relative_error(x, &w, &h, pool, policy)?;
+    Ok(NmfFit {
+        w,
+        h,
+        relative_error,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +193,57 @@ mod tests {
         let fit = nmf(&ds.x, 3, 50, &mut rng);
         assert!(fit.w.data.iter().all(|&v| v >= 0.0));
         assert!(fit.h.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn streamed_fit_is_bitwise_identical_to_in_memory() {
+        let mut rng = Pcg32::new(36);
+        let ds = planted_nmf(&mut rng, 37, 23, 3, 0.01);
+        let w0 = Matrix::rand_uniform(37, 3, &mut rng).map(|v| v + 0.01);
+        let h0 = Matrix::rand_uniform(3, 23, &mut rng).map(|v| v + 0.01);
+        let path = std::env::temp_dir().join(format!(
+            "bb_nmf_src_{}_stream.bbm",
+            std::process::id()
+        ));
+        // Tile of 11 does not divide 37 rows: exercises the ragged tail.
+        super::super::bbm::write_bbm(&path, &ds.x, 11).unwrap();
+        let pool = ThreadPool::new(4);
+        let reference = nmf_from_with_policy(
+            &ds.x,
+            w0.clone(),
+            h0.clone(),
+            25,
+            &pool,
+            SimdPolicy::Auto,
+        );
+        for depth in [0usize, 2] {
+            let src = MatrixSource::open(&path, depth).unwrap();
+            let fit = nmf_from_with_policy_src(
+                &src,
+                w0.clone(),
+                h0.clone(),
+                25,
+                &pool,
+                SimdPolicy::Auto,
+            )
+            .unwrap();
+            assert_eq!(fit.w.data, reference.w.data, "W, depth {depth}");
+            assert_eq!(fit.h.data, reference.h.data, "H, depth {depth}");
+            assert_eq!(
+                fit.relative_error.to_bits(),
+                reference.relative_error.to_bits(),
+                "error bits, depth {depth}"
+            );
+        }
+        let mem = MatrixSource::in_memory(ds.x.clone());
+        let fit = nmf_from_with_policy_src(&mem, w0.clone(), h0, 25, &pool, SimdPolicy::Auto)
+            .unwrap();
+        assert_eq!(fit.w.data, reference.w.data, "in-memory source W");
+        assert_eq!(
+            fit.relative_error.to_bits(),
+            reference.relative_error.to_bits()
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

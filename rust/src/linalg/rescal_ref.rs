@@ -17,7 +17,13 @@
 //! identical under every thread budget.
 
 use super::matrix::Matrix;
+use super::source::{
+    src_matmul, src_matmul_tn_left, src_matmul_tn_right, src_rescal_residual_into, MatrixSource,
+    RowSource,
+};
+use crate::util::error::Result;
 use crate::util::pool::ThreadPool;
+use crate::util::simd;
 use crate::util::Pcg32;
 
 const EPS: f32 = 1e-9;
@@ -67,6 +73,46 @@ pub fn rescal_with(
     }
 }
 
+/// [`rescal_with`] over a stack of [`MatrixSource`] slices.
+///
+/// Per slice, only the two products that read `T_s` stream tiles from
+/// the source ([`src_matmul`] for `T_s·(A R_sᵀ)`, [`src_matmul_tn_left`]
+/// for `T_sᵀ·(A R_s)` in the A-update; [`src_matmul_tn_right`] for
+/// `Aᵀ·T_s` in the R-update) and the final residual streams through
+/// [`src_rescal_residual_into`]; all factor-only products are the
+/// in-memory kernels unchanged. Draws from `rng` in the same order as
+/// [`rescal_with`] and folds contributions in the same slice order, so
+/// the fit is **bitwise identical** to the in-memory path on the same
+/// data for any tile size, prefetch depth, or thread budget. Errors
+/// only on I/O failure from an out-of-core slice.
+pub fn rescal_with_src(
+    t: &[MatrixSource],
+    k: usize,
+    iters: usize,
+    rng: &mut Pcg32,
+    pool: &ThreadPool,
+) -> Result<RescalFit> {
+    let n = t[0].rows();
+    let mut a = Matrix::rand_uniform(n, k, rng).map(|v| v + 0.01);
+    let mut r: Vec<Matrix> =
+        (0..t.len()).map(|_| Matrix::rand_uniform(k, k, rng).map(|v| v + 0.01)).collect();
+    for _ in 0..iters {
+        a = a_update_src(t, &a, &r, pool)?;
+        let g = a.matmul_tn_with(&a, pool);
+        let (a_ref, g_ref, r_ref) = (&a, &g, &r);
+        let new_r = pool.map_tasks(0, t.len(), |s, inner| {
+            r_update_src(&t[s], a_ref, g_ref, &r_ref[s], inner)
+        });
+        r = new_r.into_iter().collect::<Result<Vec<Matrix>>>()?;
+    }
+    let relative_error = rescal_relative_error_src(t, &a, &r, pool)?;
+    Ok(RescalFit {
+        a,
+        r,
+        relative_error,
+    })
+}
+
 fn a_update(t: &[Matrix], a: &Matrix, r: &[Matrix], pool: &ThreadPool) -> Matrix {
     let g = a.matmul_tn_with(a, pool); // AᵀA (k,k)
     // Per-slice contributions are independent: compute them as pool
@@ -103,12 +149,89 @@ fn a_update(t: &[Matrix], a: &Matrix, r: &[Matrix], pool: &ThreadPool) -> Matrix
         .zip(&den, |an, dv| an / (dv + EPS))
 }
 
+/// [`a_update`] over sourced slices: same group scheduling and serial
+/// slice-order fold; only the two `T_s`-touching products stream. The
+/// global [`SimdPolicy`](crate::util::simd::SimdPolicy) is captured
+/// once — the plain `*_with` kernels in [`a_update`] read it per call,
+/// and it is stable within a fit, so the arithmetic is identical.
+fn a_update_src(
+    t: &[MatrixSource],
+    a: &Matrix,
+    r: &[Matrix],
+    pool: &ThreadPool,
+) -> Result<Matrix> {
+    let g = a.matmul_tn_with(a, pool);
+    let policy = simd::simd_policy();
+    let mut num = Matrix::zeros(a.rows, a.cols);
+    let mut den_inner = Matrix::zeros(a.cols, a.cols);
+    let group = pool.threads().max(1);
+    for start in (0..r.len()).step_by(group) {
+        let end = (start + group).min(r.len());
+        let contribs = pool.map_tasks(0, end - start, |gi, inner| -> Result<_> {
+            let s = start + gi;
+            let rs = &r[s];
+            let ar = a.matmul_with(rs, inner); // A R_s
+            let art = a.matmul_nt_with(rs, inner); // A R_sᵀ
+            let c1 = src_matmul(&t[s], &art, inner, policy)?; // T_s (A R_sᵀ)
+            let c2 = src_matmul_tn_left(&t[s], &ar, inner, policy)?; // T_sᵀ (A R_s)
+            let rgr = rs.matmul_with(&g, inner).matmul_nt_with(rs, inner); // R_s G R_sᵀ
+            let rtgr = rs.matmul_tn_with(&g, inner).matmul_with(rs, inner); // R_sᵀ G R_s
+            Ok((c1, c2, rgr, rtgr))
+        });
+        for contrib in contribs {
+            let (c1, c2, rgr, rtgr) = contrib?;
+            num = num.zip(&c1, |x, y| x + y).zip(&c2, |x, y| x + y);
+            den_inner = den_inner.zip(&rgr, |x, y| x + y).zip(&rtgr, |x, y| x + y);
+        }
+    }
+    let den = a.matmul_with(&den_inner, pool);
+    Ok(a
+        .zip(&num, |av, nv| av * nv)
+        .zip(&den, |an, dv| an / (dv + EPS)))
+}
+
 /// One multiplicative R_s update; `g` is the precomputed AᵀA Gram.
 fn r_update(ts: &Matrix, a: &Matrix, g: &Matrix, rs: &Matrix, pool: &ThreadPool) -> Matrix {
     let num = a.matmul_tn_with(ts, pool).matmul_with(a, pool); // Aᵀ T_s A
     let den = g.matmul_with(rs, pool).matmul_with(g, pool);
     rs.zip(&num, |rv, nv| rv * nv)
         .zip(&den, |rn, dv| rn / (dv + EPS))
+}
+
+/// [`r_update`] over a sourced slice: `Aᵀ·T_s` streams, the rest is
+/// unchanged.
+fn r_update_src(
+    ts: &MatrixSource,
+    a: &Matrix,
+    g: &Matrix,
+    rs: &Matrix,
+    pool: &ThreadPool,
+) -> Result<Matrix> {
+    let num = src_matmul_tn_right(a, ts, pool, simd::simd_policy())?.matmul_with(a, pool);
+    let den = g.matmul_with(rs, pool).matmul_with(g, pool);
+    Ok(rs
+        .zip(&num, |rv, nv| rv * nv)
+        .zip(&den, |rn, dv| rn / (dv + EPS)))
+}
+
+/// [`rescal_relative_error`] over sourced slices. The per-slice first
+/// product `A·R_s` is the same serial [`Matrix::matmul`]; the
+/// `(A R_s)·Aᵀ` reconstruction and the diff/norm folds stream per row
+/// block through [`src_rescal_residual_into`], continuing the same
+/// ascending sequential f64 accumulators — bitwise identical to the
+/// in-memory fold.
+pub fn rescal_relative_error_src(
+    t: &[MatrixSource],
+    a: &Matrix,
+    r: &[Matrix],
+    pool: &ThreadPool,
+) -> Result<f64> {
+    let (mut diff, mut norm) = (0.0f64, 0.0f64);
+    for (s, rs) in r.iter().enumerate() {
+        let ar = a.matmul(rs); // A R_s
+        src_rescal_residual_into(&t[s], &ar, a, pool, &mut diff, &mut norm)?;
+    }
+    Ok(diff.sqrt() / (norm.sqrt() + 1e-12))
 }
 
 /// ||T - A R Aᵀ||_F / ||T||_F over the slice stack.
@@ -152,6 +275,58 @@ mod tests {
         let fit = rescal(&t.slices, 2, 50, &mut rng);
         assert!(fit.a.data.iter().all(|&v| v >= 0.0));
         assert!(fit.r.iter().all(|m| m.data.iter().all(|&v| v >= 0.0)));
+    }
+
+    #[test]
+    fn streamed_fit_is_bitwise_identical_to_in_memory() {
+        let mut rng = Pcg32::new(45);
+        let t = planted_rescal(&mut rng, 3, 19, 3, 0.01);
+        let pool = ThreadPool::new(4);
+        let mut ref_rng = Pcg32::with_stream(9, 5);
+        let reference = rescal_with(&t.slices, 3, 20, &mut ref_rng, &pool);
+        // Each slice in its own .bbm; tile 7 does not divide 19 rows.
+        let paths: Vec<_> = (0..t.slices.len())
+            .map(|s| {
+                let p = std::env::temp_dir().join(format!(
+                    "bb_rescal_src_{}_{s}.bbm",
+                    std::process::id()
+                ));
+                super::super::bbm::write_bbm(&p, &t.slices[s], 7).unwrap();
+                p
+            })
+            .collect();
+        for depth in [0usize, 2] {
+            let srcs: Vec<MatrixSource> = paths
+                .iter()
+                .map(|p| MatrixSource::open(p, depth).unwrap())
+                .collect();
+            let mut fit_rng = Pcg32::with_stream(9, 5);
+            let fit = rescal_with_src(&srcs, 3, 20, &mut fit_rng, &pool).unwrap();
+            assert_eq!(fit.a.data, reference.a.data, "A, depth {depth}");
+            for (s, rs) in fit.r.iter().enumerate() {
+                assert_eq!(rs.data, reference.r[s].data, "R[{s}], depth {depth}");
+            }
+            assert_eq!(
+                fit.relative_error.to_bits(),
+                reference.relative_error.to_bits(),
+                "error bits, depth {depth}"
+            );
+        }
+        let mem: Vec<MatrixSource> = t
+            .slices
+            .iter()
+            .map(|m| MatrixSource::in_memory(m.clone()))
+            .collect();
+        let mut fit_rng = Pcg32::with_stream(9, 5);
+        let fit = rescal_with_src(&mem, 3, 20, &mut fit_rng, &pool).unwrap();
+        assert_eq!(fit.a.data, reference.a.data, "in-memory source A");
+        assert_eq!(
+            fit.relative_error.to_bits(),
+            reference.relative_error.to_bits()
+        );
+        for p in paths {
+            let _ = std::fs::remove_file(p);
+        }
     }
 
     #[test]

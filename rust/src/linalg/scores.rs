@@ -28,6 +28,8 @@
 
 use super::matrix::Matrix;
 use super::pairwise::{row_sq_norms_policy, sq_dist_tile_policy, TILE};
+use super::source::{src_row_sq_norms, MatrixSource, RowSource};
+use crate::util::error::Result;
 use crate::util::pool::ThreadPool;
 use crate::util::simd::{self, SimdPolicy};
 
@@ -214,6 +216,194 @@ pub fn davies_bouldin_with_policy(
         db += worst;
     }
     db / active.len() as f64
+}
+
+/// [`silhouette_with_policy`] over a [`MatrixSource`] — the out-of-core
+/// entry point. In-memory sources take exactly the in-memory path.
+/// Streamed sources pull i-rows through the prefetch pipe and j-rows
+/// through synchronous positioned reads at the file's tile granularity;
+/// per (i, cluster) the scatter-add still folds in ascending j order
+/// (tiles ascend, rows within a tile ascend) over position-free tile
+/// distances, so the score is bitwise identical to in-memory for every
+/// tile size, prefetch depth, and thread budget.
+pub fn silhouette_src(
+    x: &MatrixSource,
+    labels: &[usize],
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<f64> {
+    let dm = match x {
+        MatrixSource::InMemory(m) => return Ok(silhouette_with_policy(m, labels, pool, policy)),
+        MatrixSource::OutOfCore(d) => d,
+    };
+    let n = x.rows();
+    assert_eq!(labels.len(), n);
+    if n == 0 {
+        return Ok(0.0);
+    }
+    let clusters: Vec<usize> = {
+        let mut c = labels.to_vec();
+        c.sort_unstable();
+        c.dedup();
+        c
+    };
+    let c = clusters.len();
+    if c < 2 {
+        return Ok(0.0);
+    }
+    let lab: Vec<usize> = labels
+        .iter()
+        .map(|l| clusters.binary_search(l).expect("label in cluster set"))
+        .collect();
+    let mut counts = vec![0usize; c];
+    for &l in &lab {
+        counts[l] += 1;
+    }
+
+    let norms = src_row_sq_norms(x, pool, policy)?;
+    let mut sums = vec![0.0f64; n * c];
+    let pool = pool.capped(n / 64);
+    let hdr = dm.header();
+    x.for_blocks(&pool, &mut |r0, iblock| {
+        let bnorms = &norms[r0..r0 + iblock.rows];
+        let bsums = &mut sums[r0 * c..(r0 + iblock.rows) * c];
+        let mut jbuf = Matrix::zeros(0, 0);
+        for jt in 0..hdr.n_tiles() {
+            let (jb, je) = hdr.tile_bounds(jt);
+            jbuf.rows = je - jb;
+            jbuf.cols = hdr.cols;
+            jbuf.data.resize((je - jb) * hdr.cols, 0.0);
+            dm.read_rows_into(jb, je, &mut jbuf.data)?;
+            let jnorms = &norms[jb..je];
+            let jlab = &lab[jb..je];
+            let jbuf_ref = &jbuf;
+            pool.for_slices_mut(bsums, c, |_, row0, piece| {
+                let rows = piece.len() / c;
+                let mut tile = vec![0.0f64; je - jb];
+                for r in 0..rows {
+                    let li = row0 + r;
+                    sq_dist_tile_policy(
+                        iblock, li, li + 1, bnorms, jbuf_ref, 0, je - jb, jnorms, &mut tile,
+                        policy,
+                    );
+                    simd::sqrt_in_place(&mut tile, policy);
+                    let srow = &mut piece[r * c..(r + 1) * c];
+                    for (&t, &l) in tile.iter().zip(jlab) {
+                        srow[l] += t;
+                    }
+                }
+            });
+        }
+        Ok(())
+    })?;
+
+    let mut total = 0.0;
+    for i in 0..n {
+        let own = lab[i];
+        if counts[own] <= 1 {
+            continue; // silhouette of a singleton is 0
+        }
+        let srow = &sums[i * c..(i + 1) * c];
+        let a = srow[own] / (counts[own] - 1) as f64;
+        let mut b = f64::INFINITY;
+        for (cl, &s) in srow.iter().enumerate() {
+            if cl != own {
+                b = b.min(s / counts[cl] as f64);
+            }
+        }
+        total += (b - a) / a.max(b).max(1e-12);
+    }
+    Ok(total / n as f64)
+}
+
+/// [`davies_bouldin_with_policy`] over a [`MatrixSource`] — the
+/// out-of-core entry point. The streamed pass computes each point's
+/// centroid distance (position-free) into an n-length array, then
+/// replays the *identical* fixed-`CHUNK` partial-sum fold the in-memory
+/// path uses, so the blocked f64 accumulation — and with it the score —
+/// is bitwise identical to in-memory.
+pub fn davies_bouldin_src(
+    x: &MatrixSource,
+    centroids: &Matrix,
+    labels: &[usize],
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<f64> {
+    if let Some(m) = x.as_in_memory() {
+        return Ok(davies_bouldin_with_policy(m, centroids, labels, pool, policy));
+    }
+    let n = x.rows();
+    let k = centroids.rows;
+    assert_eq!(labels.len(), n);
+    if k == 0 {
+        return Ok(0.0);
+    }
+    let nx = src_row_sq_norms(x, pool, policy)?;
+    let nc = row_sq_norms_policy(centroids, policy);
+
+    // Pass 1 (streamed): every point's distance to its own centroid.
+    let pool = pool.capped(n / 64);
+    let mut dvals = vec![0.0f64; n];
+    x.for_blocks(&pool, &mut |r0, block| {
+        let bnorms = &nx[r0..r0 + block.rows];
+        let blabels = &labels[r0..r0 + block.rows];
+        pool.for_slices_mut(&mut dvals[r0..r0 + block.rows], 1, |_, i0, piece| {
+            let mut d = [0.0f64; 1];
+            for (off, slot) in piece.iter_mut().enumerate() {
+                let li = i0 + off;
+                let l = blabels[li];
+                sq_dist_tile_policy(
+                    block, li, li + 1, bnorms, centroids, l, l + 1, &nc, &mut d, policy,
+                );
+                *slot = d[0].sqrt();
+            }
+        });
+        Ok(())
+    })?;
+
+    // Pass 2 (in RAM): the in-memory path's fixed-size chunk fold,
+    // replayed verbatim over the precomputed distances.
+    const CHUNK: usize = 256;
+    let partials = pool.map_chunks(n, CHUNK, |s, e| {
+        let mut sums = vec![0.0f64; k];
+        let mut cnts = vec![0usize; k];
+        for i in s..e {
+            let l = labels[i];
+            sums[l] += dvals[i];
+            cnts[l] += 1;
+        }
+        (sums, cnts)
+    });
+    let mut s = vec![0.0f64; k];
+    let mut counts = vec![0usize; k];
+    for (ps, pc) in partials {
+        for c in 0..k {
+            s[c] += ps[c];
+            counts[c] += pc[c];
+        }
+    }
+
+    let active: Vec<usize> = (0..k).filter(|&c| counts[c] > 0).collect();
+    if active.len() < 2 {
+        return Ok(0.0);
+    }
+    for &c in &active {
+        s[c] /= counts[c] as f64;
+    }
+    let mut m = vec![0.0f64; k * k];
+    sq_dist_tile_policy(centroids, 0, k, &nc, centroids, 0, k, &nc, &mut m, policy);
+    let mut db = 0.0;
+    for &i in &active {
+        let mut worst: f64 = 0.0;
+        for &j in &active {
+            if i == j {
+                continue;
+            }
+            worst = worst.max((s[i] + s[j]) / m[i * k + j].sqrt().max(1e-12));
+        }
+        db += worst;
+    }
+    Ok(db / active.len() as f64)
 }
 
 /// Textbook O(n²) silhouette — the seed implementation, retained as the
@@ -404,6 +594,37 @@ mod tests {
                 "threads={threads}: oracle {want} vs tiled {got}"
             );
         }
+    }
+
+    #[test]
+    fn streamed_scores_are_bitwise_identical_to_in_memory() {
+        let (x, labels, c) = two_blobs();
+        let p = std::env::temp_dir()
+            .join(format!("bb_scores_src_{}.bbm", std::process::id()));
+        for (tile_rows, depth) in [(7usize, 0usize), (16, 1), (40, 4)] {
+            super::super::bbm::write_bbm(&p, &x, tile_rows).unwrap();
+            let src = MatrixSource::open(&p, depth).unwrap();
+            for threads in [1usize, 4] {
+                let pool = ThreadPool::new(threads);
+                for policy in [SimdPolicy::ForceScalar, SimdPolicy::Auto] {
+                    let want_s = silhouette_with_policy(&x, &labels, &pool, policy);
+                    let got_s = silhouette_src(&src, &labels, &pool, policy).unwrap();
+                    assert_eq!(
+                        want_s.to_bits(),
+                        got_s.to_bits(),
+                        "silhouette tiles={tile_rows} depth={depth} threads={threads} {policy:?}"
+                    );
+                    let want_d = davies_bouldin_with_policy(&x, &c, &labels, &pool, policy);
+                    let got_d = davies_bouldin_src(&src, &c, &labels, &pool, policy).unwrap();
+                    assert_eq!(
+                        want_d.to_bits(),
+                        got_d.to_bits(),
+                        "db tiles={tile_rows} depth={depth} threads={threads} {policy:?}"
+                    );
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

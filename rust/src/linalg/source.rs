@@ -1,0 +1,1007 @@
+//! `MatrixSource` — one dataset handle over two backings: the existing
+//! in-memory [`Matrix`] and an out-of-core `.bbm` file streamed in row
+//! tiles ([`super::bbm`], DESIGN.md §3.8).
+//!
+//! The contract that makes this module a *perf* change rather than a
+//! numerics change: every consumer sees the dataset as a sequence of
+//! ascending row blocks, and every kernel routed through here folds in
+//! an order that is a function of absolute row index only. The
+//! in-memory backing yields the whole matrix as one zero-copy block, so
+//! the generic code paths are structurally the old single-pass loops;
+//! the out-of-core backing yields `.bbm` tiles in the same ascending
+//! order — therefore streamed results are **bitwise identical** to
+//! in-memory (NUMERICS.md "Determinism from disk").
+//!
+//! I/O–compute overlap: [`DiskMatrix::for_blocks`] runs a double-
+//! buffered prefetch pipe. A producer runs as a *sidecar* on the
+//! persistent [`ThreadPool`] ([`ThreadPool::scope_sidecar`]) reading up
+//! to `prefetch_tiles` tiles ahead of the consumer, which computes on
+//! the current tile while the next one is in flight. The pipe degrades
+//! gracefully: with `prefetch_tiles == 0`, one worker, or a single
+//! tile it falls back to a plain synchronous read loop, and a starved
+//! sidecar never deadlocks the consumer (the consumer self-claims any
+//! tile the producer has not picked up yet). Buffers are recycled
+//! through a free list, so peak memory is `O(prefetch_tiles + 2)`
+//! tiles regardless of dataset size.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use super::bbm::{BbmHeader, BbmReader};
+use super::matrix::Matrix;
+use crate::util::error::{Error, Result};
+use crate::util::pool::ThreadPool;
+use crate::util::simd::{self, DotKernel, SimdPolicy};
+
+/// Snapshot of a source's cumulative I/O activity.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoStats {
+    /// Payload bytes read from disk (0 for the in-memory backing).
+    pub bytes_read: u64,
+    /// Times a consumer had to wait for a tile that was not ready.
+    pub prefetch_stalls: u64,
+}
+
+impl IoStats {
+    /// Activity since an earlier snapshot of the same source.
+    pub fn delta_since(&self, earlier: &IoStats) -> IoStats {
+        IoStats {
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            prefetch_stalls: self.prefetch_stalls.saturating_sub(earlier.prefetch_stalls),
+        }
+    }
+}
+
+/// Shared mutable counters behind [`IoStats`]. Monotone, advisory-only:
+/// nothing branches on them, so `Relaxed` suffices throughout.
+#[derive(Debug, Default)]
+struct IoCounters {
+    bytes_read: AtomicU64,
+    prefetch_stalls: AtomicU64,
+}
+
+impl IoCounters {
+    fn add_bytes(&self, b: u64) {
+        // ORDER: Relaxed — monotone introspection counter, no reader
+        // synchronizes-with it.
+        self.bytes_read.fetch_add(b, Ordering::Relaxed);
+    }
+
+    fn add_stall(&self) {
+        // ORDER: Relaxed — monotone introspection counter, no reader
+        // synchronizes-with it.
+        self.prefetch_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> IoStats {
+        IoStats {
+            // ORDER: Relaxed — advisory snapshot; each counter is
+            // independently monotone so no pairing is required.
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            prefetch_stalls: self.prefetch_stalls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Read-only row access over either backing. Kernels that stay generic
+/// over this trait get the bitwise-identity contract for free as long
+/// as their per-element folds depend only on absolute row index.
+pub trait RowSource: Sync {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+
+    /// Copy row `i` into `out` (`out.len() == cols`).
+    fn copy_row(&self, i: usize, out: &mut [f32]) -> Result<()>;
+
+    /// Visit the dataset as ascending row blocks: `f(r0, block)` where
+    /// `block.rows` rows starting at absolute row `r0`. The in-memory
+    /// backing yields one zero-copy block; the out-of-core backing
+    /// yields `.bbm` tiles through the prefetch pipe.
+    fn for_blocks(
+        &self,
+        pool: &ThreadPool,
+        f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+    ) -> Result<()>;
+
+    /// Cumulative I/O counters (zero for in-memory).
+    fn io_stats(&self) -> IoStats {
+        IoStats::default()
+    }
+}
+
+impl RowSource for Matrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn copy_row(&self, i: usize, out: &mut [f32]) -> Result<()> {
+        out.copy_from_slice(self.row(i));
+        Ok(())
+    }
+
+    fn for_blocks(
+        &self,
+        _pool: &ThreadPool,
+        f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+    ) -> Result<()> {
+        // One zero-copy block: generic consumers reduce to the original
+        // single-pass in-memory loops, structurally and bitwise.
+        f(0, self)
+    }
+}
+
+/// Out-of-core backing: a validated `.bbm` reader plus prefetch depth
+/// and I/O counters. Cloning shares the underlying file handle and
+/// counters (positioned reads — no cursor state to race on).
+#[derive(Debug, Clone)]
+pub struct DiskMatrix {
+    reader: Arc<BbmReader>,
+    prefetch: usize,
+    counters: Arc<IoCounters>,
+    fingerprint: u64,
+}
+
+impl DiskMatrix {
+    /// Open `path`, validate it, and eagerly stream the FNV-1a
+    /// fingerprint (one full pass — also proves the payload readable
+    /// up front, so later tile reads only fail on real I/O faults).
+    pub fn open(path: impl AsRef<Path>, prefetch_tiles: usize) -> Result<Self> {
+        let reader = BbmReader::open(path)?;
+        let counters = Arc::new(IoCounters::default());
+        let fingerprint = streamed_fingerprint(&reader, &counters)?;
+        Ok(DiskMatrix { reader: Arc::new(reader), prefetch: prefetch_tiles, counters, fingerprint })
+    }
+
+    pub fn header(&self) -> BbmHeader {
+        self.reader.header()
+    }
+
+    /// Prefetch depth in tiles (0 = synchronous reads).
+    pub fn prefetch_tiles(&self) -> usize {
+        self.prefetch
+    }
+
+    /// Same handle with a different prefetch depth.
+    pub fn with_prefetch(mut self, prefetch_tiles: usize) -> Self {
+        self.prefetch = prefetch_tiles;
+        self
+    }
+
+    /// Counted positioned read of rows `[r0, r1)` (see
+    /// [`BbmReader::read_rows_into`]).
+    pub fn read_rows_into(&self, r0: usize, r1: usize, out: &mut [f32]) -> Result<()> {
+        self.reader.read_rows_into(r0, r1, out)?;
+        self.counters.add_bytes(((r1 - r0) * self.header().cols * 4) as u64);
+        Ok(())
+    }
+}
+
+impl RowSource for DiskMatrix {
+    fn rows(&self) -> usize {
+        self.header().rows
+    }
+
+    fn cols(&self) -> usize {
+        self.header().cols
+    }
+
+    fn copy_row(&self, i: usize, out: &mut [f32]) -> Result<()> {
+        self.read_rows_into(i, i + 1, out)
+    }
+
+    fn for_blocks(
+        &self,
+        pool: &ThreadPool,
+        f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+    ) -> Result<()> {
+        stream_blocks(self, pool, f)
+    }
+
+    fn io_stats(&self) -> IoStats {
+        self.counters.snapshot()
+    }
+}
+
+/// The dataset handle the rest of the system holds: either backing
+/// behind one enum, with backing-invariant fingerprints so cache and
+/// checkpoint keys do not depend on where the bytes live.
+#[derive(Debug, Clone)]
+pub enum MatrixSource {
+    InMemory(Matrix),
+    OutOfCore(DiskMatrix),
+}
+
+impl MatrixSource {
+    pub fn in_memory(m: Matrix) -> Self {
+        MatrixSource::InMemory(m)
+    }
+
+    /// Open an out-of-core source over a `.bbm` file.
+    pub fn open(path: impl AsRef<Path>, prefetch_tiles: usize) -> Result<Self> {
+        Ok(MatrixSource::OutOfCore(DiskMatrix::open(path, prefetch_tiles)?))
+    }
+
+    /// The in-memory matrix, when this source has one (kernels with no
+    /// streaming path yet, and the fast path for streamed helpers).
+    pub fn as_in_memory(&self) -> Option<&Matrix> {
+        match self {
+            MatrixSource::InMemory(m) => Some(m),
+            MatrixSource::OutOfCore(_) => None,
+        }
+    }
+
+    /// Backing-invariant FNV-1a fingerprint: the out-of-core value is
+    /// streamed per tile over the identical byte sequence, so it equals
+    /// [`Matrix::fingerprint64`] of the same payload bit for bit.
+    pub fn fingerprint64(&self) -> u64 {
+        match self {
+            MatrixSource::InMemory(m) => m.fingerprint64(),
+            MatrixSource::OutOfCore(d) => d.fingerprint,
+        }
+    }
+
+    /// Short label for diagnostics/records ("ram" or "bbm").
+    pub fn backing_label(&self) -> &'static str {
+        match self {
+            MatrixSource::InMemory(_) => "ram",
+            MatrixSource::OutOfCore(_) => "bbm",
+        }
+    }
+}
+
+impl RowSource for MatrixSource {
+    fn rows(&self) -> usize {
+        match self {
+            MatrixSource::InMemory(m) => m.rows,
+            MatrixSource::OutOfCore(d) => d.rows(),
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            MatrixSource::InMemory(m) => m.cols,
+            MatrixSource::OutOfCore(d) => d.cols(),
+        }
+    }
+
+    fn copy_row(&self, i: usize, out: &mut [f32]) -> Result<()> {
+        match self {
+            MatrixSource::InMemory(m) => RowSource::copy_row(m, i, out),
+            MatrixSource::OutOfCore(d) => d.copy_row(i, out),
+        }
+    }
+
+    fn for_blocks(
+        &self,
+        pool: &ThreadPool,
+        f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+    ) -> Result<()> {
+        match self {
+            MatrixSource::InMemory(m) => RowSource::for_blocks(m, pool, f),
+            MatrixSource::OutOfCore(d) => d.for_blocks(pool, f),
+        }
+    }
+
+    fn io_stats(&self) -> IoStats {
+        match self {
+            MatrixSource::InMemory(_) => IoStats::default(),
+            MatrixSource::OutOfCore(d) => d.io_stats(),
+        }
+    }
+}
+
+impl From<Matrix> for MatrixSource {
+    fn from(m: Matrix) -> Self {
+        MatrixSource::InMemory(m)
+    }
+}
+
+/// FNV-1a over the same byte stream as [`Matrix::fingerprint64`]:
+/// shape words, then every f32 bit pattern in row-major order —
+/// replayed tile by tile, which is byte-identical because the stream
+/// concatenates in ascending row order.
+fn streamed_fingerprint(reader: &BbmReader, counters: &IoCounters) -> Result<u64> {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let hdr = reader.header();
+    let mut h = OFFSET;
+    for b in (hdr.rows as u64)
+        .to_le_bytes()
+        .into_iter()
+        .chain((hdr.cols as u64).to_le_bytes())
+    {
+        h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+    }
+    let mut buf: Vec<f32> = Vec::new();
+    for t in 0..hdr.n_tiles() {
+        let (r0, r1) = hdr.tile_bounds(t);
+        buf.resize((r1 - r0) * hdr.cols, 0.0);
+        reader.read_rows_into(r0, r1, &mut buf)?;
+        counters.add_bytes(((r1 - r0) * hdr.cols * 4) as u64);
+        for &v in &buf {
+            for b in v.to_bits().to_le_bytes() {
+                h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+            }
+        }
+    }
+    Ok(h)
+}
+
+// ---------------------------------------------------------------------------
+// Prefetch pipe
+// ---------------------------------------------------------------------------
+
+/// Shared producer/consumer state. All transitions happen under the
+/// one mutex; the condvar signals *any* change (tile ready, buffer
+/// freed, window advanced, failure, shutdown).
+struct PipeState {
+    /// Tiles read but not yet consumed, keyed by tile index.
+    ready: BTreeMap<usize, Matrix>,
+    /// Next tile index the producer will claim.
+    next_claim: usize,
+    /// Next tile index the consumer will take. Advanced at *take* time
+    /// (not after compute), so the producer's window admits the next
+    /// tile while the consumer is still computing on this one.
+    next_consume: usize,
+    /// Recycled tile buffers — bounds peak memory to O(depth) tiles.
+    free: Vec<Matrix>,
+    /// First read error; consumption stops and surfaces it.
+    failed: Option<Error>,
+    /// Consumer is gone (finished, errored, or panicked): producer
+    /// must exit promptly.
+    done: bool,
+}
+
+struct Pipe {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+}
+
+fn lock(pipe: &Pipe) -> MutexGuard<'_, PipeState> {
+    pipe.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Marks the pipe done on drop — covers consumer panic and early
+/// error return, so the producer sidecar always terminates and
+/// [`ThreadPool::scope_sidecar`] can unwind cleanly.
+struct DoneGuard<'a>(&'a Pipe);
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        lock(self.0).done = true;
+        self.0.cv.notify_all();
+    }
+}
+
+/// (Re)shape `buf` to `(r1-r0) × cols` and fill it with those rows.
+fn read_tile(
+    dm: &DiskMatrix,
+    r0: usize,
+    r1: usize,
+    cols: usize,
+    buf: &mut Matrix,
+) -> Result<()> {
+    buf.rows = r1 - r0;
+    buf.cols = cols;
+    buf.data.resize((r1 - r0) * cols, 0.0);
+    dm.read_rows_into(r0, r1, &mut buf.data)
+}
+
+/// Stream `.bbm` tiles through `f(r0, block)` in ascending order,
+/// overlapping the next tile's read with the current tile's compute
+/// when a prefetch depth and a worker are available.
+fn stream_blocks(
+    dm: &DiskMatrix,
+    pool: &ThreadPool,
+    f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+) -> Result<()> {
+    let hdr = dm.header();
+    let n_tiles = hdr.n_tiles();
+    let depth = dm.prefetch_tiles();
+    if depth == 0 || pool.threads() <= 1 || n_tiles <= 1 {
+        // Synchronous path: read, compute, repeat. Same tiles, same
+        // order — bitwise identical, just no overlap.
+        let mut buf = Matrix::zeros(0, 0);
+        for t in 0..n_tiles {
+            let (r0, r1) = hdr.tile_bounds(t);
+            read_tile(dm, r0, r1, hdr.cols, &mut buf)?;
+            f(r0, &buf)?;
+        }
+        return Ok(());
+    }
+
+    let pipe = Pipe {
+        state: Mutex::new(PipeState {
+            ready: BTreeMap::new(),
+            next_claim: 0,
+            next_consume: 0,
+            free: Vec::new(),
+            failed: None,
+            done: false,
+        }),
+        cv: Condvar::new(),
+    };
+
+    pool.scope_sidecar(
+        || produce_tiles(dm, &pipe, n_tiles, depth),
+        || {
+            let _guard = DoneGuard(&pipe);
+            consume_tiles(dm, &pipe, n_tiles, f)
+        },
+    )
+}
+
+/// Sidecar body: claim tiles in order while the window
+/// `next_claim < next_consume + depth` is open, read each outside the
+/// lock, and publish into `ready`.
+fn produce_tiles(dm: &DiskMatrix, pipe: &Pipe, n_tiles: usize, depth: usize) {
+    let hdr = dm.header();
+    loop {
+        let mut st = lock(pipe);
+        loop {
+            if st.done || st.failed.is_some() || st.next_claim >= n_tiles {
+                return;
+            }
+            if st.next_claim < st.next_consume + depth {
+                break;
+            }
+            st = pipe
+                .cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        let t = st.next_claim;
+        st.next_claim = t + 1;
+        let mut buf = st.free.pop().unwrap_or_else(|| Matrix::zeros(0, 0));
+        drop(st);
+        let (r0, r1) = hdr.tile_bounds(t);
+        let res = read_tile(dm, r0, r1, hdr.cols, &mut buf);
+        let mut st = lock(pipe);
+        match res {
+            Ok(()) => {
+                st.ready.insert(t, buf);
+                pipe.cv.notify_all();
+            }
+            Err(e) => {
+                if st.failed.is_none() {
+                    st.failed = Some(e);
+                }
+                pipe.cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// Consumer body: take tile `t` (waiting — and counting a stall — if
+/// it is not ready), run `f` on it outside the lock, recycle the
+/// buffer. If the producer has not even claimed `t` yet (starved
+/// sidecar), the consumer claims and reads it synchronously itself,
+/// so progress never depends on a worker being free.
+fn consume_tiles(
+    dm: &DiskMatrix,
+    pipe: &Pipe,
+    n_tiles: usize,
+    f: &mut dyn FnMut(usize, &Matrix) -> Result<()>,
+) -> Result<()> {
+    let hdr = dm.header();
+    for t in 0..n_tiles {
+        let mut stalled = false;
+        let block = loop {
+            let mut st = lock(pipe);
+            if let Some(e) = st.failed.take() {
+                return Err(e);
+            }
+            if let Some(block) = st.ready.remove(&t) {
+                st.next_consume = t + 1;
+                pipe.cv.notify_all();
+                break block;
+            }
+            if !stalled {
+                stalled = true;
+                dm.counters.add_stall();
+            }
+            if st.next_claim == t {
+                // Starved sidecar: self-claim so the stream cannot
+                // deadlock even if the producer never runs.
+                st.next_claim = t + 1;
+                st.next_consume = t + 1;
+                let mut buf = st.free.pop().unwrap_or_else(|| Matrix::zeros(0, 0));
+                pipe.cv.notify_all();
+                drop(st);
+                let (r0, r1) = hdr.tile_bounds(t);
+                read_tile(dm, r0, r1, hdr.cols, &mut buf)?;
+                break buf;
+            }
+            drop(
+                pipe.cv
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner),
+            );
+        };
+        let (r0, _r1) = hdr.tile_bounds(t);
+        f(r0, &block)?;
+        let mut st = lock(pipe);
+        st.free.push(block);
+        pipe.cv.notify_all();
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Streamed kernels
+// ---------------------------------------------------------------------------
+//
+// Each helper delegates to the existing `Matrix` kernel when the source
+// is in-memory (exactly the old code path), and otherwise replays the
+// identical per-element arithmetic over ascending tiles. The bitwise
+// arguments are spelled out per function and in NUMERICS.md.
+
+/// Streamed [`row_sq_norms_policy`](super::pairwise::row_sq_norms_policy):
+/// per-row `dot(row, row)` with the backend resolved once. Each norm is
+/// a pure function of its own row bytes, so tiling cannot change bits.
+pub fn src_row_sq_norms(
+    x: &MatrixSource,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<Vec<f64>> {
+    if let Some(m) = x.as_in_memory() {
+        return Ok(super::pairwise::row_sq_norms_policy(m, policy));
+    }
+    let kernel = DotKernel::resolve(policy, x.cols());
+    let mut norms = vec![0.0f64; x.rows()];
+    x.for_blocks(pool, &mut |r0, block| {
+        for li in 0..block.rows {
+            let row = block.row(li);
+            norms[r0 + li] = kernel.dot_widened(row, row);
+        }
+        Ok(())
+    })?;
+    Ok(norms)
+}
+
+/// Streamed `X · Bᵀ` ([`Matrix::matmul_nt_with_policy`]). Every output
+/// element is an independent dot of one X row with one B row, so
+/// computing X's rows block by block is bitwise identical.
+pub fn src_matmul_nt(
+    x: &MatrixSource,
+    b: &Matrix,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<Matrix> {
+    if let Some(m) = x.as_in_memory() {
+        return Ok(m.matmul_nt_with_policy(b, pool, policy));
+    }
+    assert_eq!(x.cols(), b.cols, "matmul_nt shape mismatch");
+    let (m, d, n) = (x.rows(), x.cols(), b.rows);
+    let mut out = Matrix::zeros(m, n);
+    let capped = pool.capped(m * d * n / 32_768);
+    let vector = simd::use_vector(policy);
+    x.for_blocks(pool, &mut |r0, block| {
+        let orows = &mut out.data[r0 * n..(r0 + block.rows) * n];
+        capped.for_slices_mut(orows, n, |_, row0, piece| {
+            for (r, orow) in piece.chunks_mut(n).enumerate() {
+                let arow = block.row(row0 + r);
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let brow = b.row(j);
+                    *o = if vector {
+                        simd::dot_f32_vector(arow, brow)
+                    } else {
+                        let mut acc = 0.0f32;
+                        for (&a, &bv) in arow.iter().zip(brow) {
+                            if a == 0.0 {
+                                continue;
+                            }
+                            acc += a * bv;
+                        }
+                        acc
+                    };
+                }
+            }
+        });
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Streamed `X · B` ([`Matrix::matmul_with_policy`]). Each output row
+/// accumulates ascending-p zero-skip SAXPY from its own X row only —
+/// per-row independent, so block boundaries cannot change bits.
+pub fn src_matmul(
+    x: &MatrixSource,
+    b: &Matrix,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<Matrix> {
+    if let Some(m) = x.as_in_memory() {
+        return Ok(m.matmul_with_policy(b, pool, policy));
+    }
+    assert_eq!(x.cols(), b.rows, "matmul shape mismatch");
+    let (m, kdim, n) = (x.rows(), x.cols(), b.cols);
+    let mut out = Matrix::zeros(m, n);
+    let capped = pool.capped(m * kdim * n / 32_768);
+    x.for_blocks(pool, &mut |r0, block| {
+        let orows = &mut out.data[r0 * n..(r0 + block.rows) * n];
+        capped.for_slices_mut(orows, n, |_, row0, piece| {
+            for (r, orow) in piece.chunks_mut(n).enumerate() {
+                let li = row0 + r;
+                for p in 0..kdim {
+                    let a = block.data[li * kdim + p];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[p * n..(p + 1) * n];
+                    simd::saxpy(orow, a, brow, policy);
+                }
+            }
+        });
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Streamed `Xᵀ · B` with X out-of-core
+/// ([`Matrix::matmul_tn_with_policy`] with streamed *self*). Each
+/// output element folds SAXPY contributions in ascending absolute row
+/// order `i = 0..m`; ascending blocks preserve that order exactly.
+pub fn src_matmul_tn_left(
+    x: &MatrixSource,
+    b: &Matrix,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<Matrix> {
+    if let Some(m) = x.as_in_memory() {
+        return Ok(m.matmul_tn_with_policy(b, pool, policy));
+    }
+    assert_eq!(x.rows(), b.rows, "matmul_tn shape mismatch");
+    let (m, kdim, n) = (x.rows(), x.cols(), b.cols);
+    let mut out = Matrix::zeros(kdim, n);
+    let capped = pool.capped(m * kdim * n / 32_768);
+    x.for_blocks(pool, &mut |r0, block| {
+        capped.for_slices_mut(&mut out.data, n, |_, c0, piece| {
+            for li in 0..block.rows {
+                let xrow = b.row(r0 + li);
+                for (cr, orow) in piece.chunks_mut(n).enumerate() {
+                    let a = block.data[li * kdim + c0 + cr];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    simd::saxpy(orow, a, xrow, policy);
+                }
+            }
+        });
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Streamed `Aᵀ · X` with X out-of-core
+/// ([`Matrix::matmul_tn_with_policy`] with streamed *other*). Same
+/// ascending-`i` fold argument as [`src_matmul_tn_left`].
+pub fn src_matmul_tn_right(
+    a: &Matrix,
+    x: &MatrixSource,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<Matrix> {
+    if let Some(m) = x.as_in_memory() {
+        return Ok(a.matmul_tn_with_policy(m, pool, policy));
+    }
+    assert_eq!(a.rows, x.rows(), "matmul_tn shape mismatch");
+    let (m, kdim, n) = (a.rows, a.cols, x.cols());
+    let mut out = Matrix::zeros(kdim, n);
+    let capped = pool.capped(m * kdim * n / 32_768);
+    x.for_blocks(pool, &mut |r0, block| {
+        capped.for_slices_mut(&mut out.data, n, |_, c0, piece| {
+            for li in 0..block.rows {
+                let xrow = block.row(li);
+                for (cr, orow) in piece.chunks_mut(n).enumerate() {
+                    let coeff = a.data[(r0 + li) * kdim + c0 + cr];
+                    if coeff == 0.0 {
+                        continue;
+                    }
+                    simd::saxpy(orow, coeff, xrow, policy);
+                }
+            }
+        });
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Streamed `‖X − W·H‖_F / ‖X‖_F` without materializing the n×d
+/// reconstruction: per block, rebuild the matching reconstruction rows
+/// (per-row ascending-p SAXPY — identical values to the full
+/// [`Matrix::matmul_with_policy`]) and continue two running f64
+/// accumulators in ascending element order, exactly the fold sequence
+/// of [`Matrix::relative_error_to`] + [`Matrix::frobenius_norm`].
+pub fn src_nmf_relative_error(
+    x: &MatrixSource,
+    w: &Matrix,
+    h: &Matrix,
+    pool: &ThreadPool,
+    policy: SimdPolicy,
+) -> Result<f64> {
+    if let Some(m) = x.as_in_memory() {
+        return Ok(m.relative_error_to(&w.matmul_with_policy(h, pool, policy)));
+    }
+    assert_eq!(x.rows(), w.rows, "nmf error shape mismatch");
+    assert_eq!(x.cols(), h.cols, "nmf error shape mismatch");
+    let kdim = w.cols;
+    let mut diff = 0.0f64;
+    let mut normsq = 0.0f64;
+    x.for_blocks(pool, &mut |r0, block| {
+        let w_block = Matrix::from_vec(
+            block.rows,
+            kdim,
+            w.data[r0 * kdim..(r0 + block.rows) * kdim].to_vec(),
+        );
+        let recon = w_block.matmul_with_policy(h, pool, policy);
+        for (&a, &b) in block.data.iter().zip(&recon.data) {
+            diff += ((a - b) as f64).powi(2);
+            normsq += (a as f64) * (a as f64);
+        }
+        Ok(())
+    })?;
+    Ok(diff.sqrt() / (normsq.sqrt() + 1e-12))
+}
+
+/// Streamed RESCAL residual for one slice, continuing the caller's
+/// running `diff`/`norm` accumulators (which span slices, matching
+/// `rescal_relative_error`'s fold order exactly). `ar_s = A·Rₛ`; the
+/// reconstruction rows `[r0, r1)` are `ar_s[r0..r1] · Aᵀ`, computed
+/// with the same serial [`Matrix::matmul_nt`] (global-policy) element
+/// kernel as the in-memory path.
+pub fn src_rescal_residual_into(
+    ts: &MatrixSource,
+    ar_s: &Matrix,
+    a: &Matrix,
+    pool: &ThreadPool,
+    diff: &mut f64,
+    norm: &mut f64,
+) -> Result<()> {
+    assert_eq!(ts.rows(), ar_s.rows, "rescal residual shape mismatch");
+    assert_eq!(ts.cols(), a.rows, "rescal residual shape mismatch");
+    let kdim = ar_s.cols;
+    ts.for_blocks(pool, &mut |r0, block| {
+        let recon = if r0 == 0 && block.rows == ar_s.rows {
+            ar_s.matmul_nt(a)
+        } else {
+            let ar_block = Matrix::from_vec(
+                block.rows,
+                kdim,
+                ar_s.data[r0 * kdim..(r0 + block.rows) * kdim].to_vec(),
+            );
+            ar_block.matmul_nt(a)
+        };
+        for (&xv, &yv) in block.data.iter().zip(&recon.data) {
+            *diff += ((xv - yv) as f64).powi(2);
+            *norm += (xv as f64) * (xv as f64);
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bb_src_{}_{name}.bbm", std::process::id()))
+    }
+
+    fn sample(rows: usize, cols: usize) -> Matrix {
+        let mut rng = Pcg32::new(42);
+        let mut m = Matrix::rand_normal(rows, cols, &mut rng);
+        m.data[0] = -0.0;
+        m.data[1] = 0.0;
+        m
+    }
+
+    fn disk(m: &Matrix, name: &str, tile_rows: usize, depth: usize) -> (MatrixSource, std::path::PathBuf) {
+        let p = tmp(name);
+        super::super::bbm::write_bbm(&p, m, tile_rows).unwrap();
+        (MatrixSource::open(&p, depth).unwrap(), p)
+    }
+
+    fn bits(m: &Matrix) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn blocks_replay_the_matrix_in_order() {
+        let m = sample(23, 5);
+        for tile_rows in [1, 4, 7, 23] {
+            for depth in [0, 1, 4] {
+                for threads in [1, 4] {
+                    let (src, p) = disk(&m, "blocks", tile_rows, depth);
+                    let pool = ThreadPool::new(threads);
+                    let mut seen: Vec<f32> = Vec::new();
+                    let mut next_r0 = 0usize;
+                    src.for_blocks(&pool, &mut |r0, block| {
+                        assert_eq!(r0, next_r0, "blocks must ascend contiguously");
+                        next_r0 += block.rows;
+                        assert_eq!(block.cols, 5);
+                        seen.extend_from_slice(&block.data);
+                        Ok(())
+                    })
+                    .unwrap();
+                    assert_eq!(next_r0, 23);
+                    assert_eq!(
+                        seen.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "tile_rows={tile_rows} depth={depth} threads={threads}"
+                    );
+                    let _ = std::fs::remove_file(&p);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_memory_source_yields_one_zero_copy_block() {
+        let m = sample(9, 3);
+        let src = MatrixSource::in_memory(m.clone());
+        let pool = ThreadPool::serial();
+        let mut calls = 0;
+        src.for_blocks(&pool, &mut |r0, block| {
+            calls += 1;
+            assert_eq!(r0, 0);
+            assert_eq!(bits(block), bits(&m));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn fingerprint_is_backing_invariant() {
+        let m = sample(17, 6);
+        for tile_rows in [3, 17] {
+            let (src, p) = disk(&m, "fp", tile_rows, 2);
+            assert_eq!(src.fingerprint64(), m.fingerprint64());
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+
+    #[test]
+    fn io_counters_track_reads_and_stalls() {
+        let m = sample(32, 4);
+        let (src, p) = disk(&m, "counters", 8, 2);
+        // The eager fingerprint already read the payload once.
+        let after_open = src.io_stats();
+        assert_eq!(after_open.bytes_read, 32 * 4 * 4);
+        let pool = ThreadPool::new(4);
+        src.for_blocks(&pool, &mut |_r0, _b| Ok(())).unwrap();
+        let after_pass = src.io_stats();
+        assert_eq!(after_pass.delta_since(&after_open).bytes_read, 32 * 4 * 4);
+        assert_eq!(MatrixSource::in_memory(m).io_stats(), IoStats::default());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn consumer_error_stops_the_stream() {
+        let m = sample(20, 3);
+        for depth in [0, 2] {
+            let (src, p) = disk(&m, "consumer_err", 4, depth);
+            let pool = ThreadPool::new(4);
+            let mut calls = 0;
+            let err = src
+                .for_blocks(&pool, &mut |_r0, _b| {
+                    calls += 1;
+                    if calls == 2 {
+                        return Err(crate::anyhow!("synthetic consumer failure"));
+                    }
+                    Ok(())
+                })
+                .unwrap_err();
+            assert!(format!("{err}").contains("synthetic consumer failure"));
+            assert_eq!(calls, 2);
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+
+    #[test]
+    fn copy_row_matches_both_backings() {
+        let m = sample(12, 7);
+        let (src, p) = disk(&m, "copy_row", 5, 1);
+        let mem = MatrixSource::in_memory(m.clone());
+        let mut a = vec![0.0f32; 7];
+        let mut b = vec![0.0f32; 7];
+        for i in [0, 4, 11] {
+            src.copy_row(i, &mut a).unwrap();
+            mem.copy_row(i, &mut b).unwrap();
+            assert_eq!(
+                a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn streamed_gram_kernels_are_bitwise_identical() {
+        let x = sample(29, 6);
+        let other = Matrix::rand_normal(4, 6, &mut Pcg32::new(7)); // B for X·Bᵀ
+        let right = Matrix::rand_normal(6, 4, &mut Pcg32::new(8)); // B for X·B
+        let tall = Matrix::rand_normal(29, 4, &mut Pcg32::new(9)); // B for Xᵀ·B
+        let a_fac = Matrix::rand_normal(29, 3, &mut Pcg32::new(10)); // A for Aᵀ·X
+        for policy in [SimdPolicy::ForceScalar, SimdPolicy::Auto] {
+            for (tile_rows, depth, threads) in [(5, 0, 1), (8, 1, 4), (29, 4, 2), (3, 4, 8)] {
+                let (src, p) = disk(&x, "gram", tile_rows, depth);
+                let pool = ThreadPool::new(threads);
+                let mem = MatrixSource::in_memory(x.clone());
+                let tag = format!("policy={} tiles={tile_rows} depth={depth} threads={threads}", policy.label());
+
+                let want = src_row_sq_norms(&mem, &pool, policy).unwrap();
+                let got = src_row_sq_norms(&src, &pool, policy).unwrap();
+                assert_eq!(
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "norms {tag}"
+                );
+
+                let want = x.matmul_nt_with_policy(&other, &pool, policy);
+                let got = src_matmul_nt(&src, &other, &pool, policy).unwrap();
+                assert_eq!(bits(&want), bits(&got), "matmul_nt {tag}");
+
+                let want = x.matmul_with_policy(&right, &pool, policy);
+                let got = src_matmul(&src, &right, &pool, policy).unwrap();
+                assert_eq!(bits(&want), bits(&got), "matmul {tag}");
+
+                let want = x.matmul_tn_with_policy(&tall, &pool, policy);
+                let got = src_matmul_tn_left(&src, &tall, &pool, policy).unwrap();
+                assert_eq!(bits(&want), bits(&got), "matmul_tn_left {tag}");
+
+                let want = a_fac.matmul_tn_with_policy(&x, &pool, policy);
+                let got = src_matmul_tn_right(&a_fac, &src, &pool, policy).unwrap();
+                assert_eq!(bits(&want), bits(&got), "matmul_tn_right {tag}");
+
+                let _ = std::fs::remove_file(&p);
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_reconstruction_errors_are_bitwise_identical() {
+        let x = sample(21, 5).map(f32::abs);
+        let w = Matrix::rand_uniform(21, 3, &mut Pcg32::new(3));
+        let h = Matrix::rand_uniform(3, 5, &mut Pcg32::new(4));
+        let pool = ThreadPool::new(4);
+        let policy = SimdPolicy::Auto;
+        let want = x.relative_error_to(&w.matmul_with_policy(&h, &pool, policy));
+        for (tile_rows, depth) in [(4, 0), (6, 1), (21, 4)] {
+            let (src, p) = disk(&x, "nmf_err", tile_rows, depth);
+            let got = src_nmf_relative_error(&src, &w, &h, &pool, policy).unwrap();
+            assert_eq!(want.to_bits(), got.to_bits(), "tiles={tile_rows} depth={depth}");
+            let _ = std::fs::remove_file(&p);
+        }
+
+        // RESCAL residual: one "slice" streamed vs the in-memory fold.
+        let t0 = sample(13, 13);
+        let a = Matrix::rand_uniform(13, 3, &mut Pcg32::new(5));
+        let r = Matrix::rand_uniform(3, 3, &mut Pcg32::new(6));
+        let ar = a.matmul(&r);
+        let recon = ar.matmul_nt(&a);
+        let (mut want_diff, mut want_norm) = (0.0f64, 0.0f64);
+        for (&xv, &yv) in t0.data.iter().zip(&recon.data) {
+            want_diff += ((xv - yv) as f64).powi(2);
+            want_norm += (xv as f64) * (xv as f64);
+        }
+        for (tile_rows, depth) in [(5, 0), (4, 2), (13, 1)] {
+            let (src, p) = disk(&t0, "rescal_err", tile_rows, depth);
+            let (mut diff, mut norm) = (0.0f64, 0.0f64);
+            src_rescal_residual_into(&src, &ar, &a, &pool, &mut diff, &mut norm).unwrap();
+            assert_eq!(want_diff.to_bits(), diff.to_bits(), "tiles={tile_rows}");
+            assert_eq!(want_norm.to_bits(), norm.to_bits(), "tiles={tile_rows}");
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+}

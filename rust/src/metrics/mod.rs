@@ -125,6 +125,15 @@ pub fn records_markdown(records: &[Evaluation]) -> String {
     headers.extend([
         "fit_error", "iters", "spread", "algo", "dist_calcs", "cost_ms",
     ]);
+    // Out-of-core I/O accounting (DESIGN.md §3.8) — columns appear only
+    // when some record actually streamed from disk, so in-memory
+    // sessions keep the seed's table shape.
+    let has_io = records
+        .iter()
+        .any(|r| r.diagnostics.bytes_read.is_some() || r.diagnostics.prefetch_stalls.is_some());
+    if has_io {
+        headers.extend(["io_bytes", "stalls"]);
+    }
     let fmt = |v: Option<f64>| match v {
         Some(x) => format!("{x:.4}"),
         None => "-".to_string(),
@@ -151,6 +160,16 @@ pub fn records_markdown(records: &[Evaluation]) -> String {
                 None => "-".to_string(),
             });
             row.push(format!("{:.2}", r.cost.as_secs_f64() * 1e3));
+            if has_io {
+                row.push(match r.diagnostics.bytes_read {
+                    Some(v) => v.to_string(),
+                    None => "-".to_string(),
+                });
+                row.push(match r.diagnostics.prefetch_stalls {
+                    Some(v) => v.to_string(),
+                    None => "-".to_string(),
+                });
+            }
             row
         })
         .collect();
@@ -286,6 +305,21 @@ mod tests {
         assert!(last.starts_with("| 9 |"), "{md}");
         assert!(last.contains(" - "), "{md}");
         assert_eq!(md.lines().count(), 4);
+    }
+
+    #[test]
+    fn records_table_adds_io_columns_when_streamed() {
+        let mut a = Evaluation::scalar(4, 0.81);
+        a.diagnostics.bytes_read = Some(1_048_576);
+        a.diagnostics.prefetch_stalls = Some(0);
+        let b = Evaluation::scalar(9, 0.12); // in-memory record
+        let md = records_markdown(&[a, b.clone()]);
+        assert!(md.contains("io_bytes"), "{md}");
+        assert!(md.contains("stalls"), "{md}");
+        assert!(md.contains("| 1048576 | 0 |"), "{md}");
+        // A fully in-memory session keeps the seed's table shape.
+        let md = records_markdown(&[b]);
+        assert!(!md.contains("io_bytes"), "{md}");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::coordinator::{EvalDiagnostics, Evaluation, Fingerprint, KEvaluator, KScorer};
-use crate::linalg::{self, KMeansAlgo, Matrix};
+use crate::linalg::{self, KMeansAlgo, Matrix, MatrixSource, RowSource};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{
     literal_f32, literal_from_matrix, literal_to_matrix, literal_to_scalar, rank_mask,
@@ -34,9 +34,12 @@ pub enum KMeansScoring {
     DaviesBouldin,
 }
 
-/// K-means over a fixed dataset.
+/// K-means over a fixed dataset — in RAM or streamed out-of-core from
+/// a `.bbm` file ([`MatrixSource`], DESIGN.md §3.8). The fit and both
+/// scores are bitwise backing-invariant, so records, fingerprints, and
+/// warm-start caches never depend on where the bytes live.
 pub struct KMeansEvaluator {
-    x: Matrix,
+    x: MatrixSource,
     k_max: usize,
     /// Independent restarts per k; the best (lowest-inertia) fit is scored.
     n_init: usize,
@@ -87,7 +90,7 @@ impl KMeansEvaluator {
             x.cols
         );
         Ok(Self {
-            x,
+            x: MatrixSource::in_memory(x),
             k_max,
             n_init: 3,
             bursts: 2,
@@ -104,6 +107,19 @@ impl KMeansEvaluator {
 
     /// Pure-Rust evaluator (any dataset shape).
     pub fn native(x: Matrix, k_max: usize, scoring: KMeansScoring, seed: u64) -> Self {
+        Self::native_src(MatrixSource::in_memory(x), k_max, scoring, seed)
+    }
+
+    /// Pure-Rust evaluator over any [`MatrixSource`] backing — pass an
+    /// out-of-core source ([`MatrixSource::open`]) to search datasets
+    /// that do not fit in RAM. Scores are bitwise identical to the
+    /// in-memory evaluator on the same data.
+    pub fn native_src(
+        x: MatrixSource,
+        k_max: usize,
+        scoring: KMeansScoring,
+        seed: u64,
+    ) -> Self {
         Self {
             x,
             k_max,
@@ -176,13 +192,26 @@ impl KMeansEvaluator {
         self.backend
     }
 
+    /// The in-memory dataset — only the HLO backend requires one (its
+    /// literals are materialized whole), and its constructor only
+    /// accepts one, so this cannot fail on that path.
+    #[cfg(feature = "pjrt")]
+    fn x_mem(&self) -> &Matrix {
+        self.x
+            .as_in_memory()
+            .expect("HLO backend requires an in-memory dataset")
+    }
+
     /// One restart: fit only (scoring happens once, on the best
     /// restart). `pool` is this restart's §3.2 inner kernel budget.
     fn fit_once(&self, k: usize, init: usize, pool: &ThreadPool) -> RestartFit {
         let mut rng = Pcg32::with_stream(self.seed, (k as u64) << 8 | init as u64);
         match self.backend {
             Backend::Native => {
-                let fit = linalg::kmeans_with_algo(
+                // I/O failure mid-fit (e.g. the .bbm vanished after
+                // open-time validation) is unrecoverable for this
+                // evaluation — surface it like the HLO path does.
+                let fit = linalg::kmeans_with_algo_src(
                     &self.x,
                     k,
                     self.bursts * 15,
@@ -190,7 +219,8 @@ impl KMeansEvaluator {
                     pool,
                     crate::util::simd::simd_policy(),
                     self.algo,
-                );
+                )
+                .expect("out-of-core k-means read failed");
                 RestartFit {
                     inertia: fit.inertia,
                     iterations: fit.iterations,
@@ -210,16 +240,17 @@ impl KMeansEvaluator {
     #[cfg(feature = "pjrt")]
     fn fit_once_hlo(&self, k: usize, rng: &mut Pcg32) -> Result<RestartFit> {
         let store = self.store.as_ref().expect("HLO backend without store");
-        let d = self.x.cols;
+        let x = self.x_mem();
+        let d = x.cols;
         // k-means++ seeding on the host (cheap), padded to K_MAX.
-        let seeded = linalg::kmeans_with(&self.x, k, 1, rng, &self.pool);
+        let seeded = linalg::kmeans_with(x, k, 1, rng, &self.pool);
         let mut c = Matrix::zeros(self.k_max, d);
         c.data[..k * d].copy_from_slice(&seeded.centroids.data);
 
         let mask = rank_mask(k, self.k_max);
-        let x_lit = literal_from_matrix(&self.x)?;
+        let x_lit = literal_from_matrix(x)?;
         let mask_lit = literal_f32(&[self.k_max], &mask)?;
-        let mut labels = vec![0.0f32; self.x.rows];
+        let mut labels = vec![0.0f32; x.rows];
         let mut inertia = f64::INFINITY;
         for _ in 0..self.bursts {
             let outs = store.execute(
@@ -248,10 +279,21 @@ impl KMeansEvaluator {
     /// the same labels/centroids.
     fn score_both(&self, fit: &RestartFit) -> (f64, f64) {
         match self.backend {
-            Backend::Native => (
-                linalg::silhouette_with(&self.x, &fit.labels, &self.pool),
-                linalg::davies_bouldin_with(&self.x, &fit.centroids, &fit.labels, &self.pool),
-            ),
+            Backend::Native => {
+                let policy = crate::util::simd::simd_policy();
+                (
+                    linalg::silhouette_src(&self.x, &fit.labels, &self.pool, policy)
+                        .expect("out-of-core silhouette read failed"),
+                    linalg::davies_bouldin_src(
+                        &self.x,
+                        &fit.centroids,
+                        &fit.labels,
+                        &self.pool,
+                        policy,
+                    )
+                    .expect("out-of-core davies-bouldin read failed"),
+                )
+            }
             #[cfg(feature = "pjrt")]
             Backend::Hlo => self.score_both_hlo(fit).expect("HLO scoring failed"),
             #[cfg(not(feature = "pjrt"))]
@@ -262,14 +304,15 @@ impl KMeansEvaluator {
     #[cfg(feature = "pjrt")]
     fn score_both_hlo(&self, fit: &RestartFit) -> Result<(f64, f64)> {
         let store = self.store.as_ref().expect("HLO backend without store");
+        let x = self.x_mem();
         let k = fit.centroids.rows;
-        let d = self.x.cols;
+        let d = x.cols;
         let labels: Vec<f32> = fit.labels.iter().map(|&l| l as f32).collect();
         let mut padded = Matrix::zeros(self.k_max, d);
         padded.data[..k * d].copy_from_slice(&fit.centroids.data);
-        let x_lit = literal_from_matrix(&self.x)?;
+        let x_lit = literal_from_matrix(x)?;
         let mask_lit = literal_f32(&[self.k_max], &rank_mask(k, self.k_max))?;
-        let labels_lit = literal_f32(&[self.x.rows], &labels)?;
+        let labels_lit = literal_f32(&[x.rows], &labels)?;
         let sil = literal_to_scalar(
             &store.execute(
                 "silhouette",
@@ -292,15 +335,21 @@ impl KMeansEvaluator {
     fn score_primary(&self, fit: &RestartFit) -> f64 {
         match self.backend {
             Backend::Native => match self.scoring {
-                KMeansScoring::Silhouette => {
-                    linalg::silhouette_with(&self.x, &fit.labels, &self.pool)
-                }
-                KMeansScoring::DaviesBouldin => linalg::davies_bouldin_with(
+                KMeansScoring::Silhouette => linalg::silhouette_src(
+                    &self.x,
+                    &fit.labels,
+                    &self.pool,
+                    crate::util::simd::simd_policy(),
+                )
+                .expect("out-of-core silhouette read failed"),
+                KMeansScoring::DaviesBouldin => linalg::davies_bouldin_src(
                     &self.x,
                     &fit.centroids,
                     &fit.labels,
                     &self.pool,
-                ),
+                    crate::util::simd::simd_policy(),
+                )
+                .expect("out-of-core davies-bouldin read failed"),
             },
             #[cfg(feature = "pjrt")]
             Backend::Hlo => {
@@ -321,6 +370,7 @@ impl KMeansEvaluator {
     /// diagnostics.
     pub fn evaluate_record(&self, k: u32) -> Evaluation {
         let sw = Stopwatch::new();
+        let io_before = self.x.io_stats();
         let ku = k as usize;
         assert!(
             ku >= 2 && ku <= self.k_max,
@@ -363,6 +413,14 @@ impl KMeansEvaluator {
         if let Some(a) = best.algo {
             diagnostics.algo = Some(a.to_string());
             diagnostics.distance_calcs = Some(dist_total);
+        }
+        if let MatrixSource::OutOfCore(_) = &self.x {
+            // I/O this evaluation performed (shared counters: deltas,
+            // not totals — concurrent evaluations over one source
+            // attribute approximately, totals exactly).
+            let io = self.x.io_stats().delta_since(&io_before);
+            diagnostics.bytes_read = Some(io.bytes_read);
+            diagnostics.prefetch_stalls = Some(io.prefetch_stalls);
         }
         Evaluation {
             k,
@@ -526,6 +584,36 @@ mod tests {
         let rec = single.evaluate_record(3);
         assert!(rec.secondary.is_empty(), "opted out of secondary metrics");
         assert_eq!(rec.score.to_bits(), dual.evaluate(3).to_bits());
+    }
+
+    #[test]
+    fn out_of_core_evaluator_matches_in_memory_bitwise() {
+        let mut rng = Pcg32::new(217);
+        let ds = gaussian_blobs(&mut rng, 30, 4, 5, 10.0, 0.4);
+        let path = std::env::temp_dir().join(format!(
+            "bb_model_km_{}_eval.bbm",
+            std::process::id()
+        ));
+        crate::linalg::write_bbm(&path, &ds.x, 13).unwrap();
+        let mem = KMeansEvaluator::native(ds.x, 10, KMeansScoring::DaviesBouldin, 7)
+            .with_eval_threads(4);
+        let src = MatrixSource::open(&path, 2).unwrap();
+        let ooc = KMeansEvaluator::native_src(src, 10, KMeansScoring::DaviesBouldin, 7)
+            .with_eval_threads(4);
+        use crate::coordinator::KEvaluator as _;
+        // Identical fingerprints: cached records are backing-invariant.
+        assert_eq!(mem.fingerprint(), ooc.fingerprint());
+        let (rm, ro) = (mem.evaluate_record(4), ooc.evaluate_record(4));
+        assert_eq!(rm.score.to_bits(), ro.score.to_bits());
+        assert_eq!(
+            rm.secondary["silhouette"].to_bits(),
+            ro.secondary["silhouette"].to_bits()
+        );
+        // The streamed record accounts its I/O; the in-memory one is silent.
+        assert_eq!(rm.diagnostics.bytes_read, None);
+        assert!(ro.diagnostics.bytes_read.unwrap() > 0);
+        assert!(ro.diagnostics.prefetch_stalls.is_some());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -43,6 +43,16 @@
 //! shared, not multiplied, so oversubscription is structurally
 //! impossible no matter how the two levels are configured.
 //!
+//! Cross-job stealing: a submitter whose cursor is exhausted but whose
+//! last chunks are still mid-flight on workers does not sleep — it
+//! claims chunks from other queued *kernel* jobs (`Job::stealable`)
+//! until its own job completes. Task-layer and sidecar chunks are never
+//! stolen (they may park on job-external events), and chunk→output
+//! mapping is fixed by chunk index, so stealing can change scheduling
+//! but never results. [`ThreadPool::scope_sidecar`] runs one background
+//! closure (an I/O producer) on a worker while the caller computes with
+//! its full budget — the primitive under the out-of-core prefetcher.
+//!
 //! Panic policy: a panic inside a chunk is caught on the executing
 //! worker, the job still runs to completion (every claimed chunk is
 //! accounted), and the **first** payload is re-thrown on the submitting
@@ -70,6 +80,13 @@ use std::fmt;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// How long a parked submitter sleeps between queue re-scans while its
+/// stragglers finish (cross-job stealing below). Short enough that a
+/// job queued while we sleep is helped promptly, long enough that an
+/// idle wait costs no measurable CPU.
+const STEAL_RESCAN: Duration = Duration::from_micros(500);
 
 /// Total worker OS threads ever spawned by any pool in this process —
 /// introspection for the reuse tests and the spawn-overhead bench. A
@@ -121,6 +138,14 @@ struct Job {
     joined: AtomicUsize,
     /// Max participants — the §3.2 budget for this call.
     limit: usize,
+    /// Whether a parked *submitter of another job* may claim chunks
+    /// from this one (cross-job stealing). True for kernel jobs
+    /// (`for_chunks` / `map_chunks` / `for_slices_mut`), whose chunks
+    /// are leaf computations that never block on another job; false
+    /// for task-layer and sidecar jobs, whose chunks may park on
+    /// job-external events (a prefetch pipe, a nested submit) — a
+    /// submitter wedged inside one could delay its own job unboundedly.
+    stealable: bool,
     /// Completion flag + first panic payload, guarded together so the
     /// submitter observes both atomically.
     done: Mutex<JobDone>,
@@ -248,6 +273,9 @@ struct Registry {
     inner: Arc<RegistryInner>,
     workers: usize,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Chunks executed by parked submitters on *other* jobs — pure
+    /// introspection for tests and the prefetch diagnostics.
+    steals: AtomicUsize,
 }
 
 impl Registry {
@@ -275,12 +303,17 @@ impl Registry {
             inner,
             workers,
             handles: Mutex::new(handles),
+            steals: AtomicUsize::new(0),
         }
     }
 
     /// Post a job, participate in it, wait for completion, re-throw the
-    /// first chunk panic (if any) on this thread.
-    fn run_job(&self, n_chunks: usize, limit: usize, run: &(dyn Fn(usize) + Sync)) {
+    /// first chunk panic (if any) on this thread. While waiting for
+    /// stragglers mid-flight on other threads, the submitter claims
+    /// chunks from other queued `stealable` jobs (rayon-style cross-job
+    /// stealing) instead of sleeping, so deep-nested prefetch+compute
+    /// runs keep every parked thread busy.
+    fn run_job(&self, n_chunks: usize, limit: usize, stealable: bool, run: &(dyn Fn(usize) + Sync)) {
         debug_assert!(n_chunks > 0 && limit >= 1);
         // SAFETY: lifetime erasure — `run` outlives the job because this
         // function does not return until every chunk has executed.
@@ -295,6 +328,7 @@ impl Registry {
             pending: AtomicUsize::new(n_chunks),
             joined: AtomicUsize::new(1), // the submitter
             limit,
+            stealable,
             done: Mutex::new(JobDone {
                 finished: false,
                 panic: None,
@@ -317,11 +351,34 @@ impl Registry {
             self.inner.cond.notify_one();
         }
         job.run_chunks();
-        // The cursor is exhausted; wait for chunks mid-flight on workers.
-        {
-            let mut d = lock(&job.done);
-            while !d.finished {
-                d = job.cv.wait(d).unwrap_or_else(|e| e.into_inner());
+        // The cursor is exhausted; only chunks mid-flight on other
+        // threads remain. Rather than sleeping until they finish, help
+        // other queued jobs: their chunks are leaf computations (the
+        // `stealable` contract above), so each steal is bounded work
+        // and we re-check our own completion between steals. The timed
+        // wait bounds the latency of noticing a job queued while we
+        // were parked (its submitter notifies the registry condvar,
+        // not our job's).
+        loop {
+            {
+                let d = lock(&job.done);
+                if d.finished {
+                    break;
+                }
+            }
+            if self.steal_one(&job) {
+                continue;
+            }
+            let d = lock(&job.done);
+            if d.finished {
+                break;
+            }
+            let (d, _) = job
+                .cv
+                .wait_timeout(d, STEAL_RESCAN)
+                .unwrap_or_else(|e| e.into_inner());
+            if d.finished {
+                break;
             }
         }
         // Drop the job from the queue if no worker scan removed it yet.
@@ -334,6 +391,101 @@ impl Registry {
         let payload = lock(&job.done).panic.take();
         if let Some(p) = payload {
             panic::resume_unwind(p);
+        }
+    }
+
+    /// Claim and run chunks from one other queued stealable job, if any.
+    /// Returns whether anything was stolen. Chunk→output mapping is
+    /// fixed by chunk index, so who executes a stolen chunk can never
+    /// change results (the same invariance the workers rely on).
+    fn steal_one(&self, own: &Arc<Job>) -> bool {
+        let stolen = {
+            let q = lock(&self.inner.queue);
+            q.jobs
+                .iter()
+                .find(|j| {
+                    !Arc::ptr_eq(j, own)
+                        && j.stealable
+                        // ORDER: Relaxed — exhaustion probe, exactly as
+                        // in `worker_loop`: stale low reads cost one
+                        // useless try_join, never correctness.
+                        && j.cursor.load(Ordering::Relaxed) < j.n_chunks
+                        && j.try_join()
+                })
+                .cloned()
+        };
+        match stolen {
+            Some(j) => {
+                // ORDER: Relaxed — monotone introspection counter.
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                j.run_chunks();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Post `side` as a single-chunk background job for the workers and
+    /// run `main` on the calling thread concurrently; returns `main`'s
+    /// value once *both* have finished. Unlike `run_job`, the submitter
+    /// does not count toward the job's participant limit — the chunk is
+    /// meant for a worker — but after `main` returns the submitter
+    /// claims it if no worker ever did, so completion never depends on
+    /// worker availability. `side` must therefore terminate promptly
+    /// once `main` has returned (the prefetch producer's contract: a
+    /// drained pipe means exit).
+    fn run_sidecar<R>(&self, side: &(dyn Fn(usize) + Sync), main: impl FnOnce() -> R) -> R {
+        // SAFETY: lifetime erasure — `side` outlives the job because
+        // this function does not return until its chunk has executed
+        // (the wait loop below), including when `main` unwinds (the
+        // catch_unwind keeps us in this frame until completion).
+        let erased: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(side)
+        };
+        let job = Arc::new(Job {
+            task: TaskRef(erased as *const (dyn Fn(usize) + Sync)),
+            n_chunks: 1,
+            cursor: AtomicUsize::new(0),
+            pending: AtomicUsize::new(1),
+            joined: AtomicUsize::new(0), // submitter is not a participant
+            limit: 1,
+            stealable: false,
+            done: Mutex::new(JobDone {
+                finished: false,
+                panic: None,
+            }),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = lock(&self.inner.queue);
+            q.jobs.push_back(Arc::clone(&job));
+        }
+        self.inner.cond.notify_one();
+        let result = panic::catch_unwind(AssertUnwindSafe(main));
+        // Claim the chunk ourselves if every worker stayed busy.
+        job.run_chunks();
+        {
+            let mut d = lock(&job.done);
+            while !d.finished {
+                d = job.cv.wait(d).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        {
+            let mut q = lock(&self.inner.queue);
+            if let Some(ix) = q.jobs.iter().position(|j| Arc::ptr_eq(j, &job)) {
+                q.jobs.remove(ix);
+            }
+        }
+        let side_panic = lock(&job.done).panic.take();
+        match result {
+            Ok(v) => {
+                if let Some(p) = side_panic {
+                    panic::resume_unwind(p);
+                }
+                v
+            }
+            // `main`'s own panic wins: it is the caller's computation.
+            Err(p) => panic::resume_unwind(p),
         }
     }
 }
@@ -462,7 +614,7 @@ impl ThreadPool {
         };
         let budget = self.threads.min(n_chunks);
         match &self.registry {
-            Some(reg) if budget > 1 => reg.run_job(n_chunks, budget, &run),
+            Some(reg) if budget > 1 => reg.run_job(n_chunks, budget, true, &run),
             _ => (0..n_chunks).for_each(run),
         }
     }
@@ -530,7 +682,7 @@ impl ThreadPool {
             let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
             f(pi, pi * per, piece);
         };
-        reg.run_job(n_pieces, n_pieces, &run);
+        reg.run_job(n_pieces, n_pieces, true, &run);
     }
 
     /// Nested task layer (§3.2 two-level budget): run `tasks` closures
@@ -557,9 +709,49 @@ impl ThreadPool {
         };
         let run = |ti: usize| f(ti, &inner);
         match &self.registry {
-            Some(reg) if outer > 1 => reg.run_job(tasks, outer, &run),
+            // Task chunks may themselves park (nested submits, pipe
+            // waits), so they are not stealable — see `Job::stealable`.
+            Some(reg) if outer > 1 => reg.run_job(tasks, outer, false, &run),
             _ => (0..tasks).for_each(run),
         }
+    }
+
+    /// Run `side` on a worker thread while `main` runs on the calling
+    /// thread; return `main`'s value once **both** have finished. The
+    /// pair this exists for is the out-of-core prefetcher: `side` is
+    /// the tile producer, `main` the compute consumer, and unlike
+    /// `scope_tasks(2, ..)` the consumer keeps this pool's **full**
+    /// thread budget for its inner kernels — the producer is I/O-bound
+    /// and merely borrows one worker.
+    ///
+    /// Contract on `side`: it must terminate promptly once `main` has
+    /// returned (e.g. because the channel it feeds reports "drained"),
+    /// since this call blocks until both finish. On a serial pool (or
+    /// no workers) `main` runs first and `side` after it, inline — with
+    /// that contract, `side` then sees its work already done and exits.
+    ///
+    /// Panics: if `main` panics, its payload is re-thrown here after
+    /// `side` completes (never before — `side` borrows from this
+    /// frame); if only `side` panics, its payload is re-thrown.
+    pub fn scope_sidecar<R>(&self, side: impl Fn() + Sync, main: impl FnOnce() -> R) -> R {
+        match &self.registry {
+            Some(reg) if self.threads > 1 => reg.run_sidecar(&|_ci| side(), main),
+            _ => {
+                let out = main();
+                side();
+                out
+            }
+        }
+    }
+
+    /// Chunks executed by parked submitters on behalf of *other* jobs
+    /// (cross-job stealing), across the lifetime of this pool's worker
+    /// registry. Introspection for tests and diagnostics; 0 when serial.
+    pub fn steal_count(&self) -> usize {
+        self.registry
+            .as_ref()
+            // ORDER: Relaxed — monotone introspection counter.
+            .map_or(0, |r| r.steals.load(Ordering::Relaxed))
     }
 
     /// [`ThreadPool::scope_tasks`] returning one `T` per task **in task
@@ -830,6 +1022,141 @@ mod tests {
         // concurrently. Spawn-per-task nesting would add hundreds.
         let grew = spawned_worker_count() - before;
         assert!(grew < 100, "nesting must not spawn workers: {grew} new");
+    }
+
+    #[test]
+    fn scope_sidecar_runs_both_and_returns_main() {
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let side_ran = AtomicU64::new(0);
+            let got = pool.scope_sidecar(
+                || {
+                    side_ran.fetch_add(1, Ordering::SeqCst);
+                },
+                || 41 + 1,
+            );
+            assert_eq!(got, 42, "threads={threads}");
+            assert_eq!(side_ran.load(Ordering::SeqCst), 1, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scope_sidecar_main_can_use_full_budget() {
+        let pool = ThreadPool::new(4);
+        let got = pool.scope_sidecar(
+            || {},
+            || {
+                // The consumer keeps the whole budget for inner kernels.
+                assert_eq!(pool.threads(), 4);
+                pool.map_chunks(25, 10, |s, e| e - s)
+            },
+        );
+        assert_eq!(got, vec![10, 10, 5]);
+    }
+
+    #[test]
+    fn scope_sidecar_propagates_main_panic_after_side_finishes() {
+        let pool = ThreadPool::new(2);
+        let side_ran = AtomicU64::new(0);
+        let caught = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_sidecar(
+                || {
+                    side_ran.fetch_add(1, Ordering::SeqCst);
+                },
+                || -> usize { panic!("main exploded") },
+            )
+        }));
+        assert!(caught.is_err());
+        // The sidecar always completes before the panic escapes (it
+        // borrows from the submitting frame).
+        assert_eq!(side_ran.load(Ordering::SeqCst), 1);
+        // Pool survives.
+        assert_eq!(pool.map_chunks(5, 5, |s, e| e - s), vec![5]);
+    }
+
+    #[test]
+    fn scope_sidecar_propagates_side_panic() {
+        let pool = ThreadPool::new(2);
+        let caught = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_sidecar(|| panic!("side exploded"), || 7)
+        }));
+        let payload = caught.expect_err("side panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("side exploded"), "wrong payload: {msg}");
+        assert_eq!(pool.map_chunks(5, 5, |s, e| e - s), vec![5]);
+    }
+
+    #[test]
+    fn parked_submitter_steals_chunks_from_other_jobs() {
+        // Shape the race so a steal is likely each attempt, then retry:
+        // job A's gated chunk pins one worker, so A's submitter parks
+        // with a chunk mid-flight while job B (limit 3: its submitter +
+        // 2 workers, one of which is the pinned one) always has a free
+        // participant slot and plenty of unclaimed slow chunks — the
+        // parked submitter's only way to help is to steal them.
+        use std::sync::Barrier;
+        let pool = ThreadPool::for_submitters(3, 1); // threads 3, workers 2
+        let mut saw_steal = false;
+        for _ in 0..50 {
+            let before = pool.steal_count();
+            let gate = Barrier::new(2);
+            std::thread::scope(|scope| {
+                scope.spawn(|| {
+                    // Job A: chunk 0 sleeps on the submitter so the
+                    // notified worker wins the race to chunk 1, which
+                    // waits on the gate; the submitter then parks with
+                    // that chunk mid-flight and starts stealing.
+                    pool.for_chunks(2, 1, |ci, _, _| {
+                        if ci == 0 {
+                            std::thread::sleep(Duration::from_micros(200));
+                        } else {
+                            gate.wait();
+                        }
+                    });
+                });
+                scope.spawn(|| {
+                    // Job B: many slow chunks, the first of which opens
+                    // the gate, so B is in-flight for ~2ms while A's
+                    // submitter waits on its straggler.
+                    pool.for_chunks(64, 1, |ci, _, _| {
+                        if ci == 0 {
+                            gate.wait();
+                        }
+                        std::thread::sleep(Duration::from_micros(50));
+                    });
+                });
+            });
+            if pool.steal_count() > before {
+                saw_steal = true;
+                break;
+            }
+        }
+        assert!(saw_steal, "parked submitter never stole across 50 attempts");
+    }
+
+    #[test]
+    fn stealing_stress_preserves_results() {
+        // Many concurrent submitters issuing kernel jobs: stealing may
+        // reschedule chunks arbitrarily, but chunk→output mapping is
+        // fixed by index, so every sum must be exact.
+        let pool = ThreadPool::for_submitters(3, 4);
+        let total = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                scope.spawn(|| {
+                    for i in 0..100 {
+                        let len = 17 + (t * 13 + i * 7) % 64;
+                        let s: u64 = pool
+                            .map_chunks(len, 4, |s, e| (s..e).map(|v| v as u64 + 1).sum::<u64>())
+                            .iter()
+                            .sum();
+                        assert_eq!(s, (len as u64) * (len as u64 + 1) / 2);
+                        total.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 400);
     }
 
     #[test]

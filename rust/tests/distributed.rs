@@ -100,6 +100,8 @@ impl Scenario {
             1, // engine submitters per process (--threads 1)
             1, // outer_tasks — forwarded as --outer-tasks 1
             KMeansAlgo::Auto,
+            None, // in-memory dataset (no --data)
+            2,
         )
         .expect("in-process evaluator");
         policy.mode = Mode::Standard;

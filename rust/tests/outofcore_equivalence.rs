@@ -1,0 +1,349 @@
+//! ISSUE 10 acceptance (DESIGN.md §3.8): streaming a dataset from a
+//! `.bbm` file must be **bitwise identical** to evaluating it in
+//! memory — labels, inertia bits, factor matrices, score bits and the
+//! dataset fingerprint — across every axis the prefetch pipe can vary:
+//! tile size (divisor and non-divisor of n), prefetch depth (0 =
+//! synchronous fallback, 1 = minimal double-buffer, 4 = deep pipe),
+//! thread budget, and SIMD policy. The in-memory path is the oracle;
+//! disk is an implementation detail that may not change a single bit
+//! (NUMERICS.md "Determinism from disk").
+//!
+//! Robustness half: truncated/corrupt `.bbm` files must surface as
+//! typed errors from [`MatrixSource::open`] — never a panic, never a
+//! short read mid-search.
+
+use std::path::PathBuf;
+
+use binary_bleed::data::{gaussian_blobs, planted_nmf, planted_rescal};
+use binary_bleed::linalg::{
+    davies_bouldin_src, davies_bouldin_with_policy, kmeans_with_algo, kmeans_with_algo_src,
+    nmf_from_with_policy, nmf_src, rescal_with, rescal_with_src, silhouette_src,
+    silhouette_with_policy, src_row_sq_norms, write_bbm, KMeansAlgo, Matrix, MatrixSource,
+    RowSource,
+};
+use binary_bleed::util::{Pcg32, SimdPolicy, ThreadPool};
+
+/// Unique temp path per (test, tile) so parallel tests never collide.
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bb_ooc_{}_{tag}.bbm", std::process::id()))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The sweep axes every equivalence test walks. Tile sizes include a
+/// non-divisor of each dataset's row count (short last tile), prefetch
+/// depth 0 exercises the synchronous fallback, and the thread budgets
+/// cover serial, the minimal pipe (1 compute + 1 sidecar), and
+/// oversubscribed.
+const DEPTHS: [usize; 3] = [0, 1, 4];
+const THREADS: [usize; 3] = [1, 2, 8];
+const POLICIES: [SimdPolicy; 2] = [SimdPolicy::ForceScalar, SimdPolicy::Auto];
+
+#[test]
+fn kmeans_every_algo_is_bitwise_identical_from_disk() {
+    let mut rng = Pcg32::new(91);
+    let ds = gaussian_blobs(&mut rng, 24, 4, 6, 8.0, 0.5); // 96 x 6
+    let n = ds.x.rows;
+    let tiles = [7usize, 32, 96]; // non-divisor, divisor, whole-matrix
+    let paths: Vec<PathBuf> = tiles
+        .iter()
+        .map(|&t| {
+            let p = tmp(&format!("kmeans_t{t}"));
+            write_bbm(&p, &ds.x, t).unwrap();
+            p
+        })
+        .collect();
+    assert_eq!(n, 96);
+
+    let algos = [
+        KMeansAlgo::Lloyd,
+        KMeansAlgo::Hamerly,
+        KMeansAlgo::Elkan,
+        KMeansAlgo::Yinyang,
+        KMeansAlgo::Auto,
+    ];
+    for policy in POLICIES {
+        for algo in algos {
+            for t in THREADS {
+                let pool = ThreadPool::new(t);
+                let mem =
+                    kmeans_with_algo(&ds.x, 5, 40, &mut Pcg32::new(303), &pool, policy, algo);
+                for (&tile, path) in tiles.iter().zip(&paths) {
+                    for depth in DEPTHS {
+                        let src = MatrixSource::open(path, depth).unwrap();
+                        assert_eq!((src.rows(), src.cols()), (n, 6));
+                        let got = kmeans_with_algo_src(
+                            &src,
+                            5,
+                            40,
+                            &mut Pcg32::new(303),
+                            &pool,
+                            policy,
+                            algo,
+                        )
+                        .unwrap();
+                        let ctx =
+                            format!("{algo:?}/{policy:?} threads={t} tile={tile} depth={depth}");
+                        assert_eq!(got.labels, mem.labels, "labels diverged: {ctx}");
+                        assert_eq!(
+                            got.inertia.to_bits(),
+                            mem.inertia.to_bits(),
+                            "inertia bits diverged: {ctx}"
+                        );
+                        assert_eq!(
+                            bits(&got.centroids.data),
+                            bits(&mem.centroids.data),
+                            "centroid bits diverged: {ctx}"
+                        );
+                        assert_eq!(got.iterations, mem.iterations, "iterations diverged: {ctx}");
+                        assert_eq!(
+                            got.distance_calcs, mem.distance_calcs,
+                            "distance_calcs diverged: {ctx}"
+                        );
+                        assert_eq!(got.algo, mem.algo, "resolved algo diverged: {ctx}");
+                    }
+                }
+            }
+        }
+    }
+    for p in &paths {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn scores_are_bitwise_identical_from_disk() {
+    let mut rng = Pcg32::new(17);
+    let ds = gaussian_blobs(&mut rng, 20, 5, 4, 9.0, 0.6); // 100 x 4
+    let pool4 = ThreadPool::new(4);
+    let fit = kmeans_with_algo(
+        &ds.x,
+        5,
+        40,
+        &mut Pcg32::new(11),
+        &pool4,
+        SimdPolicy::Auto,
+        KMeansAlgo::Lloyd,
+    );
+    let tiles = [9usize, 25, 100];
+    let paths: Vec<PathBuf> = tiles
+        .iter()
+        .map(|&t| {
+            let p = tmp(&format!("scores_t{t}"));
+            write_bbm(&p, &ds.x, t).unwrap();
+            p
+        })
+        .collect();
+    for policy in POLICIES {
+        for t in THREADS {
+            let pool = ThreadPool::new(t);
+            let sil = silhouette_with_policy(&ds.x, &fit.labels, &pool, policy);
+            let db = davies_bouldin_with_policy(&ds.x, &fit.centroids, &fit.labels, &pool, policy);
+            for path in &paths {
+                for depth in DEPTHS {
+                    let src = MatrixSource::open(path, depth).unwrap();
+                    let ctx = format!("{policy:?} threads={t} depth={depth}");
+                    let got_sil = silhouette_src(&src, &fit.labels, &pool, policy).unwrap();
+                    assert_eq!(
+                        got_sil.to_bits(),
+                        sil.to_bits(),
+                        "silhouette bits diverged: {ctx}"
+                    );
+                    let got_db =
+                        davies_bouldin_src(&src, &fit.centroids, &fit.labels, &pool, policy)
+                            .unwrap();
+                    assert_eq!(
+                        got_db.to_bits(),
+                        db.to_bits(),
+                        "davies_bouldin bits diverged: {ctx}"
+                    );
+                }
+            }
+        }
+    }
+    for p in &paths {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn nmf_factors_are_bitwise_identical_from_disk() {
+    let mut rng = Pcg32::new(29);
+    let planted = planted_nmf(&mut rng, 29, 17, 3, 0.01);
+    let x = planted.x;
+    let tiles = [5usize, 29]; // 5 does not divide 29 -> short last tile
+    let paths: Vec<PathBuf> = tiles
+        .iter()
+        .map(|&t| {
+            let p = tmp(&format!("nmf_t{t}"));
+            write_bbm(&p, &x, t).unwrap();
+            p
+        })
+        .collect();
+    for policy in POLICIES {
+        for t in [1usize, 8] {
+            let pool = ThreadPool::new(t);
+            // In-memory oracle with the exact init draw nmf_src makes.
+            let mut init_rng = Pcg32::new(512);
+            let w0 = Matrix::rand_uniform(x.rows, 3, &mut init_rng).map(|v| v + 0.01);
+            let h0 = Matrix::rand_uniform(3, x.cols, &mut init_rng).map(|v| v + 0.01);
+            let mem = nmf_from_with_policy(&x, w0, h0, 30, &pool, policy);
+            for path in &paths {
+                for depth in DEPTHS {
+                    let src = MatrixSource::open(path, depth).unwrap();
+                    let got =
+                        nmf_src(&src, 3, 30, &mut Pcg32::new(512), &pool, policy).unwrap();
+                    let ctx = format!("{policy:?} threads={t} depth={depth}");
+                    assert_eq!(bits(&got.w.data), bits(&mem.w.data), "W bits diverged: {ctx}");
+                    assert_eq!(bits(&got.h.data), bits(&mem.h.data), "H bits diverged: {ctx}");
+                    assert_eq!(
+                        got.relative_error.to_bits(),
+                        mem.relative_error.to_bits(),
+                        "relative_error bits diverged: {ctx}"
+                    );
+                }
+            }
+        }
+    }
+    for p in &paths {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn rescal_factors_are_bitwise_identical_from_disk() {
+    let mut rng = Pcg32::new(61);
+    let planted = planted_rescal(&mut rng, 2, 15, 3, 0.01);
+    let pool = ThreadPool::new(4);
+    let mem = rescal_with(&planted.slices, 3, 20, &mut Pcg32::with_stream(8, 3), &pool);
+    for tile in [4usize, 15] {
+        let paths: Vec<PathBuf> = (0..planted.slices.len())
+            .map(|s| {
+                let p = tmp(&format!("rescal_t{tile}_s{s}"));
+                write_bbm(&p, &planted.slices[s], tile).unwrap();
+                p
+            })
+            .collect();
+        for depth in DEPTHS {
+            let srcs: Vec<MatrixSource> = paths
+                .iter()
+                .map(|p| MatrixSource::open(p, depth).unwrap())
+                .collect();
+            let got =
+                rescal_with_src(&srcs, 3, 20, &mut Pcg32::with_stream(8, 3), &pool).unwrap();
+            let ctx = format!("tile={tile} depth={depth}");
+            assert_eq!(bits(&got.a.data), bits(&mem.a.data), "A bits diverged: {ctx}");
+            for (s, (gr, mr)) in got.r.iter().zip(&mem.r).enumerate() {
+                assert_eq!(bits(&gr.data), bits(&mr.data), "R[{s}] bits diverged: {ctx}");
+            }
+            assert_eq!(
+                got.relative_error.to_bits(),
+                mem.relative_error.to_bits(),
+                "relative_error bits diverged: {ctx}"
+            );
+        }
+        for p in &paths {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[test]
+fn fingerprint_is_backing_invariant_including_awkward_payloads() {
+    let mut rng = Pcg32::new(7);
+    let mut m = Matrix::rand_normal(23, 5, &mut rng);
+    // The payloads a lossy path would mangle first.
+    m.data[0] = -0.0;
+    m.data[1] = f32::NAN;
+    m.data[2] = f32::from_bits(0x0000_0001); // subnormal
+    let want = m.fingerprint64();
+    for tile in [1usize, 6, 23] {
+        let p = tmp(&format!("fp_t{tile}"));
+        write_bbm(&p, &m, tile).unwrap();
+        let src = MatrixSource::open(&p, 2).unwrap();
+        assert_eq!(src.fingerprint64(), want, "tile={tile}");
+        assert_eq!(src.backing_label(), "bbm");
+        let _ = std::fs::remove_file(&p);
+    }
+    let mem = MatrixSource::in_memory(m);
+    assert_eq!(mem.fingerprint64(), want);
+    assert_eq!(mem.backing_label(), "ram");
+}
+
+#[test]
+fn streamed_reads_are_accounted_in_io_stats() {
+    let mut rng = Pcg32::new(40);
+    let m = Matrix::rand_normal(64, 8, &mut rng);
+    let p = tmp("iostats");
+    write_bbm(&p, &m, 16).unwrap();
+    let src = MatrixSource::open(&p, 2).unwrap();
+    let pool = ThreadPool::new(4);
+    let after_open = src.io_stats(); // fingerprint pass already read the payload
+    let norms = src_row_sq_norms(&src, &pool, SimdPolicy::Auto).unwrap();
+    assert_eq!(norms.len(), 64);
+    let delta = src.io_stats().delta_since(&after_open);
+    assert_eq!(
+        delta.bytes_read,
+        64 * 8 * 4,
+        "one full streaming pass reads exactly the payload"
+    );
+    let _ = std::fs::remove_file(&p);
+
+    // In-memory sources never report I/O.
+    let mem = MatrixSource::in_memory(m);
+    let s = mem.io_stats();
+    assert_eq!((s.bytes_read, s.prefetch_stalls), (0, 0));
+}
+
+#[test]
+fn corrupt_bbm_files_are_typed_errors_never_panics() {
+    // Missing file.
+    let err = MatrixSource::open("/nonexistent/bb_ooc.bbm", 2).unwrap_err();
+    assert!(format!("{err}").contains("bbm"), "{err}");
+
+    let mut rng = Pcg32::new(3);
+    let m = Matrix::rand_normal(6, 4, &mut rng);
+    let fresh = || {
+        let p = tmp("corrupt");
+        write_bbm(&p, &m, 3).unwrap();
+        p
+    };
+
+    // Bad magic.
+    let p = fresh();
+    let mut raw = std::fs::read(&p).unwrap();
+    raw[0] = b'Z';
+    std::fs::write(&p, &raw).unwrap();
+    let err = MatrixSource::open(&p, 2).unwrap_err();
+    assert!(format!("{err}").contains("bad magic"), "{err}");
+
+    // Future version.
+    let p = fresh();
+    let mut raw = std::fs::read(&p).unwrap();
+    raw[4] = 2;
+    std::fs::write(&p, &raw).unwrap();
+    let err = MatrixSource::open(&p, 2).unwrap_err();
+    assert!(format!("{err}").contains("unsupported version"), "{err}");
+
+    // Truncated payload.
+    let p = fresh();
+    let raw = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &raw[..raw.len() - 5]).unwrap();
+    let err = MatrixSource::open(&p, 2).unwrap_err();
+    assert!(format!("{err}").contains("payload length mismatch"), "{err}");
+
+    // Header shape that overflows the payload computation.
+    let p = fresh();
+    let mut raw = std::fs::read(&p).unwrap();
+    raw[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+    std::fs::write(&p, &raw).unwrap();
+    let err = MatrixSource::open(&p, 2).unwrap_err();
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("overflows") || msg.contains("payload length mismatch"),
+        "{msg}"
+    );
+    let _ = std::fs::remove_file(&p);
+}
